@@ -1,0 +1,103 @@
+//! Topic modeling — the paper's motivating application (§1): factorize a
+//! bag-of-words corpus, interpret W as word-topic loadings and H as
+//! document-topic mixtures, and report topic quality diagnostics.
+//!
+//! Compares PL-NMF against naive FAST-HALS from the same initialization,
+//! demonstrating (a) identical topics (the reorder is exact) and (b) the
+//! per-iteration speedup on a sparse, Zipf-skewed matrix.
+//!
+//! ```sh
+//! cargo run --release --example topic_modeling [-- --dataset 20news-small --k 20]
+//! ```
+
+use plnmf::cli::Args;
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::comparison::run_comparison;
+use plnmf::data::DataMatrix;
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let args = Args::parse(std::env::args().skip(1))?;
+
+    let mut cfg = RunConfig::default();
+    cfg.dataset = args.opt("dataset").unwrap_or("20news-small").to_string();
+    cfg.k = args.opt_usize("k")?.unwrap_or(20);
+    cfg.max_iters = args.opt_usize("iters")?.unwrap_or(40);
+    cfg.record_every = 10;
+
+    let cmp = run_comparison(&cfg, &[EngineKind::PlNmf, EngineKind::FastHals])?;
+    let plnmf = &cmp.reports[0];
+    let hals = &cmp.reports[1];
+
+    println!(
+        "topic modeling on {} — {} topics, {} iterations",
+        cfg.dataset, cfg.k, cfg.max_iters
+    );
+    println!(
+        "PL-NMF    : rel error {:.5}, {:.4} s/iter",
+        plnmf.final_rel_error,
+        plnmf.secs_per_iter()
+    );
+    println!(
+        "FAST-HALS : rel error {:.5}, {:.4} s/iter  (PL-NMF speedup {:.2}x)",
+        hals.final_rel_error,
+        hals.secs_per_iter(),
+        hals.secs_per_iter() / plnmf.secs_per_iter().max(1e-12)
+    );
+    println!(
+        "trajectory agreement: max |Δ rel err| = {:.2e} (associativity reorder only)",
+        plnmf
+            .trace
+            .iter()
+            .zip(&hals.trace)
+            .map(|(a, b)| (a.rel_error - b.rel_error).abs())
+            .fold(0.0f64, f64::max)
+    );
+
+    // --- topic diagnostics from the PL-NMF factors -----------------------
+    // Re-run PL-NMF to get the factors (reports don't carry them).
+    let mut driver =
+        plnmf::coordinator::Driver::with_dataset(&cfg, cmp.ds.clone(), cmp.pool.clone())?;
+    driver.run()?;
+    let f = driver.engine_mut().factors();
+    let w = &f.w; // V x K word-topic loadings
+
+    // Top words per topic (synthetic corpus: word ids; Zipf rank order
+    // makes low ids "common words").
+    println!("\ntop-8 word ids per topic (first 6 topics):");
+    for topic in 0..cfg.k.min(6) {
+        let mut idx: Vec<usize> = (0..w.rows()).collect();
+        idx.sort_by(|&a, &b| w.at(b, topic).total_cmp(&w.at(a, topic)));
+        let tops: Vec<String> = idx[..8].iter().map(|i| format!("w{i}")).collect();
+        println!("  topic {topic:>2}: {}", tops.join(" "));
+    }
+
+    // Topic distinctness: mean pairwise cosine between topic columns
+    // (lower = more distinct topics).
+    let k = cfg.k;
+    let mut mean_cos = 0.0f64;
+    let mut pairs = 0usize;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let mut dot = 0.0f64;
+            for v in 0..w.rows() {
+                dot += w.at(v, i) as f64 * w.at(v, j) as f64;
+            }
+            mean_cos += dot; // columns are unit-norm => dot == cosine
+            pairs += 1;
+        }
+    }
+    println!("\nmean pairwise topic cosine: {:.4} (unit-norm columns)", mean_cos / pairs as f64);
+
+    // Document coverage: every document should load on some topic.
+    let h = &f.h;
+    let uncovered = (0..h.rows())
+        .filter(|&d| (0..k).all(|t| h.at(d, t) <= 1e-8))
+        .count();
+    println!("documents with no topic mass: {uncovered} / {}", h.rows());
+
+    if let DataMatrix::Sparse(a) = &cmp.ds.a {
+        println!("corpus: {} words x {} docs, {} nnz", a.rows(), a.cols(), a.nnz());
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering: JAX/Pallas update graphs -> HLO text + manifest.json.
+
+Run once by `make artifacts`; python never runs on the request path. The
+interchange format is HLO *text*, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact naming: ``{fn}__{dataset}_k{K}_t{T}.hlo.txt`` with a manifest
+entry carrying shapes/dtypes so the rust runtime
+(rust/src/runtime/manifest.rs) can validate inputs before compile.
+
+Tile selection mirrors rust/src/nmf/cost_model.rs::select_tile —
+round(sqrt(K - 2/sqrt(C))) with C = 35 MiB of doubles — so the two layers
+agree on T for a given K without coordination.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, V, D, sparse?) — mirrors rust/src/config/profiles.rs. NNZ and
+# generator params live on the rust side only; artifacts depend on shapes.
+PROFILES = {
+    "tiny": (60, 40, False),
+    "tiny-sparse": (80, 50, True),
+    "20news-small": (3277, 1414, True),
+    "tdt2-small": (4596, 1276, True),
+    "reuters-small": (2366, 1036, True),
+    "att-small": (100, 1288, False),
+    "pie-small": (1444, 512, False),
+    "20news": (26214, 11314, True),
+    "tdt2": (36771, 10212, True),
+    "reuters": (18933, 8293, True),
+    "att": (400, 10304, False),
+    "pie": (11554, 4096, False),
+}
+
+CACHE_WORDS = 35 * 1024 * 1024 / 8  # the paper's 35 MB LLC, in doubles
+
+
+def select_tile(k: int) -> int:
+    """Eq. 11, rounded — must match rust's cost_model::select_tile."""
+    t = round(math.sqrt(max(k - 2.0 / math.sqrt(CACHE_WORDS), 1.0)))
+    return max(1, min(t, k))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_plan(dataset: str, k: int):
+    """The artifacts one (dataset, k) config needs, as
+    (fn_name, callable, example_args, static_kwargs)."""
+    v, d, sparse = PROFILES[dataset]
+    t = select_tile(k)
+    w, h = f32(v, k), f32(d, k)
+    plan = []
+    if sparse:
+        # Half-step artifacts: rust supplies R = A^T W and P = A Ht via
+        # its CSR SpMM (XLA has no sparse kernels; DESIGN.md §5).
+        plan.append(("plnmf_update_h", model.plnmf_update_h_from_r, (w, h, f32(d, k)), {"tile": t}))
+        plan.append(("plnmf_update_w", model.plnmf_update_w_from_p, (w, h, f32(v, k)), {"tile": t}))
+        plan.append(("mu_update_h", model.mu_update_h_from_r, (w, h, f32(d, k)), {}))
+        plan.append(("mu_update_w", model.mu_update_w_from_p, (w, h, f32(v, k)), {}))
+    else:
+        a = f32(v, d)
+        plan.append(("plnmf_step", model.plnmf_step_dense, (a, w, h), {"tile": t}))
+        plan.append(("mu_step", model.mu_step_dense, (a, w, h), {}))
+        plan.append(("rel_error", model.rel_error_dense, (a, w, h), {}))
+    return t, plan
+
+
+# Default build sets. `test` covers everything the test-suite and the
+# quickstart need; `paper` adds the five Table-4 configs at the Fig. 9
+# operating point (K = 240). `all` additionally sweeps K = 80/160.
+SETS = {
+    "test": [("tiny", 8), ("tiny-sparse", 8), ("20news-small", 32), ("tdt2-small", 32),
+             ("reuters-small", 32), ("att-small", 32), ("pie-small", 32)],
+    "paper": [(name, 240) for name in ["20news", "tdt2", "reuters", "att", "pie"]],
+    "sweep": [(name, k) for name in ["20news", "tdt2", "reuters", "att", "pie"]
+              for k in (80, 160)],
+}
+
+
+def build(out_dir: str, configs, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    existing = {a["name"] for a in manifest["artifacts"]}
+
+    for dataset, k in configs:
+        v, d, sparse = PROFILES[dataset]
+        t, plan = artifact_plan(dataset, k)
+        for fn_name, fn, args, kwargs in plan:
+            name = f"{fn_name}__{dataset}_k{k}_t{t}"
+            fname = f"{name}.hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            if name in existing and os.path.exists(fpath):
+                if verbose:
+                    print(f"  cached  {name}")
+                continue
+            t0 = time.time()
+            lowered = jax.jit(fn, static_argnames=tuple(kwargs)).lower(*args, **kwargs)
+            text = to_hlo_text(lowered)
+            with open(fpath, "w") as f:
+                f.write(text)
+            out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+            entry = {
+                "name": name,
+                "file": fname,
+                "fn": fn_name,
+                "dataset": dataset,
+                "v": v,
+                "d": d,
+                "k": k,
+                "tile": t,
+                "sparse": sparse,
+                "inputs": [{"shape": list(a.shape), "dtype": "f32"} for a in args],
+                "outputs": [{"shape": s, "dtype": "f32"} for s in out_shapes],
+            }
+            manifest["artifacts"] = [a for a in manifest["artifacts"] if a["name"] != name]
+            manifest["artifacts"].append(entry)
+            existing.add(name)
+            if verbose:
+                print(f"  lowered {name}  ({len(text) / 1e6:.1f} MB HLO, {time.time() - t0:.1f}s)")
+        # Write the manifest incrementally so partial builds stay usable.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sets", default="test,paper",
+                    help="comma list of build sets: test, paper, sweep")
+    ap.add_argument("--config", action="append", default=[],
+                    help="extra dataset:K pairs, e.g. --config pie:160")
+    args = ap.parse_args()
+
+    configs = []
+    for s in args.sets.split(","):
+        s = s.strip()
+        if s:
+            configs.extend(SETS[s])
+    for c in args.config:
+        name, k = c.split(":")
+        configs.append((name, int(k)))
+
+    print(f"AOT-lowering {len(configs)} configs -> {args.out_dir}")
+    manifest = build(args.out_dir, configs)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

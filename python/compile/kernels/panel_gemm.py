@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: accumulating panel GEMM.
+
+``C <- C + alpha * A @ B`` — the workhorse of PL-NMF phases 1 and 3
+(Alg. 2 lines 12 and 40), where ``A`` is a tall V x T column panel of the
+factor and ``B`` a T x n slice of the Gram matrix.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks (V/bm,
+n/bn) output tiles; each program streams the full T-deep stripe of A and B
+through VMEM and hits the MXU with a single (bm x T) @ (T x bn) dot in
+f32. T <= 16 and n <= K <= 240, so per-program VMEM is
+bm*T + T*bn + bm*bn floats ~= 1 MiB at bm=512, bn=240 — far under the
+16 MiB budget; the paper's cuBLAS panel dgemm plays the same role on GPU.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; lowering through the interpreter emits plain HLO that both
+jax and the rust runtime execute identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_gemm_kernel(a_ref, b_ref, c_ref, o_ref, *, alpha):
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    o_ref[...] = c + alpha * jnp.dot(
+        a, b, preferred_element_type=jnp.float32
+    )
+
+
+def _block(n, b):
+    """Largest divisor-friendly block: use b if it divides n, else n."""
+    return b if n % b == 0 else n
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "bm", "bn"))
+def panel_gemm(a, b, c, alpha=-1.0, bm=512, bn=256):
+    """C + alpha * A @ B via a blocked Pallas kernel.
+
+    a: (m, t) factor panel; b: (t, n) Gram slice; c: (m, n) accumulator.
+    """
+    m, t = a.shape
+    t2, n = b.shape
+    assert t == t2, f"inner dims {t} vs {t2}"
+    assert c.shape == (m, n), f"c shape {c.shape} != {(m, n)}"
+    if m == 0 or n == 0 or t == 0:
+        return c
+    bm = min(_block(m, bm), m)
+    bn = min(_block(n, bn), n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_panel_gemm_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, t), lambda i, j: (i, 0)),
+            pl.BlockSpec((t, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(a, b, c)
+
+
+def panel_gemm_ref(a, b, c, alpha=-1.0):
+    """jnp reference."""
+    return c + alpha * a @ b

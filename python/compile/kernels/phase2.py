@@ -1,0 +1,197 @@
+"""Layer-1 Pallas kernels for PL-NMF phase 2 (the in-tile sequential
+column updates, Alg. 2 lines 15-38 / GPU Algs. 4-5).
+
+Two realizations, both interpret=True (see panel_gemm.py):
+
+* ``phase2_tile_w`` / ``phase2_tile_h`` — one program owns the whole
+  V x T (resp. D x T) tile slab and runs the T-step sequential loop in
+  VMEM. This is the shape the AOT model uses: the slab is the tile's
+  entire working set (V*T*4 B ~ 1.5 MiB at V=26214, T=15 — VMEM-resident,
+  which is exactly the locality the paper engineers via its L2-cache
+  tiling). The H variant is additionally blocked over rows since without
+  the interleaved normalization every row is independent.
+
+* ``phase2_col`` + ``norm_scale`` — the faithful port of the paper's GPU
+  kernels (Alg. 4: one kernel launch per column with hierarchical
+  reduction; Alg. 5: the norm kernel). The V dimension is blocked across
+  the grid; each program emits its partial sum of squares (the TPU
+  analogue of warp-shuffle + atomicAdd is per-block partials + a
+  deterministic jnp.sum at Layer 2 — TPUs have no global atomics). Used
+  by the test suite to pin the two realizations against each other and
+  against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-16
+
+
+# ---------------------------------------------------------------------------
+# Whole-tile kernels (used by the AOT model).
+# ---------------------------------------------------------------------------
+
+
+def _phase2_tile_w_kernel(wt_ref, wo_ref, q_ref, p_ref, o_ref, *, t_width, eps):
+    wt = wt_ref[...]
+    wo = wo_ref[...]
+    q = q_ref[...]
+    p = p_ref[...]
+    for t in range(t_width):  # static unroll: T is a compile-time tile width
+        s_new = wt[:, :t] @ q[:t, t] if t > 0 else 0.0
+        s_old = wo[:, t:] @ q[t:, t]
+        col = jnp.maximum(eps, wt[:, t] + p[:, t] - s_new - s_old)
+        norm2 = jnp.sum(col * col)
+        inv = jnp.where(norm2 > 0.0, jax.lax.rsqrt(norm2), 1.0)
+        wt = wt.at[:, t].set(col * inv)
+    o_ref[...] = wt
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def phase2_tile_w(w_tile, wold_tile, q_tile, p_tile, eps=EPS):
+    """W-flavor phase 2 over one tile: sequential columns + L2 norm.
+
+    w_tile: (V, T) the W_new slab (after init and phase 1);
+    wold_tile: (V, T) pre-update values; q_tile: (T, T); p_tile: (V, T).
+    """
+    v, t_width = w_tile.shape
+    return pl.pallas_call(
+        functools.partial(_phase2_tile_w_kernel, t_width=t_width, eps=eps),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((v, t_width), lambda i: (0, 0)),
+            pl.BlockSpec((v, t_width), lambda i: (0, 0)),
+            pl.BlockSpec((t_width, t_width), lambda i: (0, 0)),
+            pl.BlockSpec((v, t_width), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((v, t_width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, t_width), w_tile.dtype),
+        interpret=True,
+    )(w_tile, wold_tile, q_tile, p_tile)
+
+
+def _phase2_tile_h_kernel(ht_ref, ho_ref, s_ref, r_ref, o_ref, *, t_width, eps):
+    ht = ht_ref[...]
+    ho = ho_ref[...]
+    s = s_ref[...]
+    r = r_ref[...]
+    for t in range(t_width):
+        s_new = ht[:, :t] @ s[:t, t] if t > 0 else 0.0
+        s_old = ho[:, t:] @ s[t:, t]
+        col = jnp.maximum(eps, ht[:, t] + r[:, t] - s_new - s_old)
+        ht = ht.at[:, t].set(col)
+    o_ref[...] = ht
+
+
+def _row_block(n, want):
+    return want if n % want == 0 else n
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bv"))
+def phase2_tile_h(h_tile, hold_tile, s_tile, r_tile, eps=EPS, bv=1024):
+    """H-flavor phase 2 (no normalization): rows are independent, so the
+    grid blocks the row dimension."""
+    d, t_width = h_tile.shape
+    bv = min(_row_block(d, bv), d)
+    grid = (d // bv,)
+    return pl.pallas_call(
+        functools.partial(_phase2_tile_h_kernel, t_width=t_width, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+            pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+            pl.BlockSpec((t_width, t_width), lambda i: (0, 0)),
+            pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, t_width), h_tile.dtype),
+        interpret=True,
+    )(h_tile, hold_tile, s_tile, r_tile)
+
+
+# ---------------------------------------------------------------------------
+# Faithful Alg. 4 / Alg. 5 kernel pair (per-column, V-blocked).
+# ---------------------------------------------------------------------------
+
+
+def _phase2_col_kernel(wt_ref, wo_ref, qc_ref, pc_ref, col_ref, part_ref, *, t_rel, eps):
+    wt = wt_ref[...]
+    wo = wo_ref[...]
+    qc = qc_ref[...]
+    pc = pc_ref[...]
+    s_new = wt[:, :t_rel] @ qc[:t_rel] if t_rel > 0 else 0.0
+    s_old = wo[:, t_rel:] @ qc[t_rel:]
+    col = jnp.maximum(eps, wt[:, t_rel] + pc - s_new - s_old)
+    col_ref[...] = col
+    # Block-level reduction (Alg. 4 lines 16-29): this program's partial.
+    part_ref[...] = jnp.sum(col * col, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("t_rel", "eps", "bv"))
+def phase2_col(w_tile, wold_tile, q_col, p_col, t_rel, eps=EPS, bv=1024):
+    """Update one in-tile column (Alg. 4). Returns (new_col, partials):
+    partials has one entry per grid block; Layer 2 folds them
+    (jnp.sum) — the deterministic stand-in for atomicAdd."""
+    v, t_width = w_tile.shape
+    bv = min(_row_block(v, bv), v)
+    grid = (v // bv,)
+    return pl.pallas_call(
+        functools.partial(_phase2_col_kernel, t_rel=t_rel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+            pl.BlockSpec((bv, t_width), lambda i: (i, 0)),
+            pl.BlockSpec((t_width,), lambda i: (0,)),
+            pl.BlockSpec((bv,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bv,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v,), w_tile.dtype),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=True,
+    )(w_tile, wold_tile, q_col, p_col)
+
+
+def _norm_scale_kernel(col_ref, inv_ref, o_ref):
+    o_ref[...] = col_ref[...] * inv_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bv",))
+def norm_scale(col, inv, bv=1024):
+    """Alg. 5: scale the column by the published inverse norm."""
+    v = col.shape[0]
+    bv = min(_row_block(v, bv), v)
+    grid = (v // bv,)
+    inv = jnp.reshape(inv, (1,))
+    return pl.pallas_call(
+        _norm_scale_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bv,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((v,), col.dtype),
+        interpret=True,
+    )(col, inv)
+
+
+def phase2_tile_w_faithful(w_tile, wold_tile, q_tile, p_tile, eps=EPS, bv=1024):
+    """Whole-tile W phase 2 assembled from the per-column Alg. 4/5 kernel
+    pair (host loop = Alg. 3 lines 13-19). Test/reference path."""
+    t_width = w_tile.shape[1]
+    wt = w_tile
+    for t in range(t_width):
+        col, partials = phase2_col(wt, wold_tile, q_tile[:, t], p_tile[:, t], t, eps=eps, bv=bv)
+        norm2 = jnp.sum(partials)
+        inv = jnp.where(norm2 > 0.0, jax.lax.rsqrt(norm2), 1.0)
+        col = norm_scale(col, inv, bv=bv)
+        wt = wt.at[:, t].set(col)
+    return wt

@@ -1,0 +1,75 @@
+"""Pure-jnp FAST-HALS oracle (Algorithm 1, transliterated).
+
+This is the correctness anchor for the whole stack: the Pallas kernels
+(`panel_gemm.py`, `phase2.py`), the L2 tiled model (`model.py`), and — via
+the shared convergence-trajectory tests — the rust engines are all checked
+against these functions.
+
+Storage convention matches the rust side: ``W`` is (V, K); ``H`` is stored
+transposed as (D, K). ``A`` is (V, D) dense (the oracle is dense-only; the
+sparse path exercises the same update functions with precomputed
+products).
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-16
+
+
+def hals_update_h(h, s, r, eps=EPS):
+    """Alg. 1 lines 4-8: sequential row updates of H.
+
+    h: (D, K) current H (transposed storage), updated feature-by-feature.
+    s: (K, K) Gram S = W^T W.
+    r: (D, K) R = A^T W.
+    """
+    k = h.shape[1]
+    for t in range(k):
+        # sum_j h[:, j] * s[j, t] with the current mixed h (cols < t new).
+        coupled = h @ s[:, t]
+        new_col = jnp.maximum(eps, h[:, t] + r[:, t] - coupled)
+        h = h.at[:, t].set(new_col)
+    return h
+
+
+def hals_update_w(w, q, p, eps=EPS):
+    """Alg. 1 lines 10-16: sequential column updates of W + L2 norm.
+
+    w: (V, K); q: (K, K) Gram Q = H H^T; p: (V, K) P = A H^T.
+    """
+    k = w.shape[1]
+    for t in range(k):
+        coupled = w @ q[:, t]
+        new_col = jnp.maximum(eps, w[:, t] * q[t, t] + p[:, t] - coupled)
+        norm = jnp.sqrt(jnp.sum(new_col * new_col))
+        new_col = new_col / jnp.where(norm > 0.0, norm, 1.0)
+        w = w.at[:, t].set(new_col)
+    return w
+
+
+def fast_hals_step(a, w, h, eps=EPS):
+    """One full FAST-HALS outer iteration on dense A."""
+    r = a.T @ w
+    s = w.T @ w
+    h = hals_update_h(h, s, r, eps)
+    p = a @ h
+    q = h.T @ h
+    w = hals_update_w(w, q, p, eps)
+    return w, h
+
+
+def mu_step(a, w, h, delta=1e-9):
+    """Multiplicative updates (Lee-Seung), matching rust/src/nmf/mu.rs."""
+    r = a.T @ w
+    s = w.T @ w
+    h = h * r / (h @ s + delta)
+    p = a @ h
+    q = h.T @ h
+    w = w * p / (w @ q + delta)
+    return w, h
+
+
+def rel_error(a, w, h):
+    """Kim & Park relative objective; materializes WH (oracle only)."""
+    diff = a - w @ h.T
+    return jnp.sqrt(jnp.sum(diff * diff) / jnp.sum(a * a))

@@ -1,0 +1,164 @@
+"""Layer-2 JAX model: the PL-NMF update graphs (and MU baseline) that get
+AOT-lowered to HLO text and executed by the rust runtime.
+
+Everything here composes the Layer-1 Pallas kernels:
+
+* ``plnmf_update_w`` / ``plnmf_update_h`` — the tiled three-phase updates
+  (Alg. 2) given precomputed products. These are the artifacts the rust
+  coordinator calls for *sparse* datasets, where it computes
+  ``P = A Ht`` / ``R = A^T W`` itself with the CSR SpMM (XLA has no
+  sparse kernels; the paper's GPU code used cusparseDcsrmm for the same
+  step — see DESIGN.md §5).
+* ``plnmf_step_dense`` — a full outer iteration on a device-resident
+  dense A (the att/pie path): products + both tiled updates fused into
+  one executable, so per-iteration host traffic is zero.
+* ``mu_step_dense`` / ``mu_update_*`` — the MU baseline through the same
+  lowering pipeline (the bionmf-MU-gpu stand-in).
+
+The tile width T is a static Python int: tiles are unrolled at trace
+time, so each artifact is specialized to (V, D, K, T) — exactly like the
+paper's implementation is re-tuned per dataset/K.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import panel_gemm as pg
+from .kernels import phase2 as p2
+
+EPS = 1e-16
+
+
+def _tiles(k, t):
+    """[(t0, t1), ...] covering 0..k in panels of width t."""
+    out = []
+    t0 = 0
+    while t0 < k:
+        out.append((t0, min(t0 + t, k)))
+        t0 += t
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tiled updates (Alg. 2).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "eps"))
+def plnmf_update_w(w, q, p, tile, eps=EPS):
+    """Tiled W update: init + phase 1 GEMMs + per-tile (phase 2, phase 3).
+
+    w: (V, K) pre-update W; q: (K, K); p: (V, K). Returns the updated,
+    column-normalized W.
+    """
+    k = w.shape[1]
+    spans = _tiles(k, tile)
+    w_old = w
+    # init: W_new = W_old * diag(Q)  (Alg. 2 lines 3-8)
+    w_new = w_old * jnp.diag(q)[None, :]
+    # phase 1: old panels contribute to all columns on their left.
+    for (t0, t1) in spans[1:]:
+        left = pg.panel_gemm(w_old[:, t0:t1], q[t0:t1, :t0], w_new[:, :t0], alpha=-1.0)
+        w_new = jnp.concatenate([left, w_new[:, t0:]], axis=1)
+    # per tile: phase 2 (sequential in-tile columns + norm), phase 3.
+    for (t0, t1) in spans:
+        tile_new = p2.phase2_tile_w(
+            w_new[:, t0:t1], w_old[:, t0:t1], q[t0:t1, t0:t1], p[:, t0:t1], eps=eps
+        )
+        w_new = jnp.concatenate([w_new[:, :t0], tile_new, w_new[:, t1:]], axis=1)
+        if t1 < k:
+            right = pg.panel_gemm(w_new[:, t0:t1], q[t0:t1, t1:], w_new[:, t1:], alpha=-1.0)
+            w_new = jnp.concatenate([w_new[:, :t1], right], axis=1)
+    return w_new
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "eps"))
+def plnmf_update_h(h, s, r, tile, eps=EPS):
+    """Tiled H update: same three phases, identity diagonal, no norm."""
+    k = h.shape[1]
+    spans = _tiles(k, tile)
+    h_old = h
+    h_new = h  # identity init: the `+H_t` term of Alg. 1 line 7
+    for (t0, t1) in spans[1:]:
+        left = pg.panel_gemm(h_old[:, t0:t1], s[t0:t1, :t0], h_new[:, :t0], alpha=-1.0)
+        h_new = jnp.concatenate([left, h_new[:, t0:]], axis=1)
+    for (t0, t1) in spans:
+        tile_new = p2.phase2_tile_h(
+            h_new[:, t0:t1], h_old[:, t0:t1], s[t0:t1, t0:t1], r[:, t0:t1], eps=eps
+        )
+        h_new = jnp.concatenate([h_new[:, :t0], tile_new, h_new[:, t1:]], axis=1)
+        if t1 < k:
+            right = pg.panel_gemm(h_new[:, t0:t1], s[t0:t1, t1:], h_new[:, t1:], alpha=-1.0)
+            h_new = jnp.concatenate([h_new[:, :t1], right], axis=1)
+    return h_new
+
+
+# ---------------------------------------------------------------------------
+# Full steps (artifact entry points).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "eps"))
+def plnmf_step_dense(a, w, h, tile, eps=EPS):
+    """One full PL-NMF outer iteration on dense A: returns (w', h')."""
+    r = a.T @ w
+    s = w.T @ w
+    h = plnmf_update_h(h, s, r, tile, eps=eps)
+    p = a @ h
+    q = h.T @ h
+    w = plnmf_update_w(w, q, p, tile, eps=eps)
+    return w, h
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "eps"))
+def plnmf_update_h_from_r(w, h, r, tile, eps=EPS):
+    """Sparse-path half step: S computed on device, R supplied by rust."""
+    s = w.T @ w
+    return plnmf_update_h(h, s, r, tile, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "eps"))
+def plnmf_update_w_from_p(w, h, p, tile, eps=EPS):
+    """Sparse-path half step: Q computed on device, P supplied by rust."""
+    q = h.T @ h
+    return plnmf_update_w(w, q, p, tile, eps=eps)
+
+
+@jax.jit
+def mu_step_dense(a, w, h):
+    """MU baseline, dense A (bionmf-MU-gpu stand-in)."""
+    delta = 1e-9
+    r = a.T @ w
+    s = w.T @ w
+    h = h * r / (h @ s + delta)
+    p = a @ h
+    q = h.T @ h
+    w = w * p / (w @ q + delta)
+    return w, h
+
+
+@jax.jit
+def mu_update_h_from_r(w, h, r):
+    delta = 1e-9
+    s = w.T @ w
+    return h * r / (h @ s + delta)
+
+
+@jax.jit
+def mu_update_w_from_p(w, h, p):
+    delta = 1e-9
+    q = h.T @ h
+    return w * p / (w @ q + delta)
+
+
+@jax.jit
+def rel_error_dense(a, w, h):
+    """Relative objective via the Gram trick (no V x D materialization)."""
+    p = a @ h
+    q = h.T @ h
+    s = w.T @ w
+    a2 = jnp.sum(a * a)
+    num = jnp.maximum(a2 - 2.0 * jnp.sum(p * w) + jnp.sum(q * s), 0.0)
+    return jnp.sqrt(num / a2)

@@ -1,0 +1,182 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernels that end up inside
+every AOT artifact.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import panel_gemm as pg
+from compile.kernels import phase2 as p2
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.uniform(0.0, 1.0, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# panel_gemm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,t,n,alpha",
+    [(8, 2, 4, -1.0), (64, 16, 32, -1.0), (33, 5, 7, 1.0), (1, 1, 1, -2.5), (100, 3, 240, -1.0)],
+)
+def test_panel_gemm_matches_ref(m, t, n, alpha):
+    rng = np.random.default_rng(m * 1000 + n)
+    a, b, c = rand(rng, m, t), rand(rng, t, n), rand(rng, m, n)
+    got = pg.panel_gemm(a, b, c, alpha=alpha)
+    want = pg.panel_gemm_ref(a, b, c, alpha=alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 90),
+    t=st.integers(1, 17),
+    n=st.integers(1, 50),
+    bm=st.sampled_from([8, 32, 512]),
+    bn=st.sampled_from([8, 64, 256]),
+)
+def test_panel_gemm_hypothesis_shapes(m, t, n, bm, bn):
+    rng = np.random.default_rng(m * 7919 + t * 31 + n)
+    a, b, c = rand(rng, m, t), rand(rng, t, n), rand(rng, m, n)
+    got = pg.panel_gemm(a, b, c, alpha=-1.0, bm=bm, bn=bn)
+    want = pg.panel_gemm_ref(a, b, c, alpha=-1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_panel_gemm_empty_inner_dim_is_identity():
+    rng = np.random.default_rng(3)
+    c = rand(rng, 5, 4)
+    a = jnp.zeros((5, 0), jnp.float32)
+    b = jnp.zeros((0, 4), jnp.float32)
+    np.testing.assert_array_equal(pg.panel_gemm(a, b, c), c)
+
+
+# ---------------------------------------------------------------------------
+# phase 2 kernels vs a direct oracle of the in-tile update
+# ---------------------------------------------------------------------------
+
+
+def phase2_w_oracle(wt, wo, q, p, eps=1e-16):
+    """In-tile W phase 2 with interleaved norm, numpy loop."""
+    wt = np.array(wt, dtype=np.float64)
+    wo = np.array(wo, dtype=np.float64)
+    q = np.array(q, dtype=np.float64)
+    p = np.array(p, dtype=np.float64)
+    T = wt.shape[1]
+    for t in range(T):
+        s = wt[:, :t] @ q[:t, t] + wo[:, t:] @ q[t:, t]
+        col = np.maximum(eps, wt[:, t] + p[:, t] - s)
+        col = col / max(np.sqrt(np.sum(col * col)), 1e-300)
+        wt[:, t] = col
+    return wt
+
+
+def phase2_h_oracle(ht, ho, s_, r, eps=1e-16):
+    ht = np.array(ht, dtype=np.float64)
+    ho = np.array(ho, dtype=np.float64)
+    s_ = np.array(s_, dtype=np.float64)
+    r = np.array(r, dtype=np.float64)
+    T = ht.shape[1]
+    for t in range(T):
+        s = ht[:, :t] @ s_[:t, t] + ho[:, t:] @ s_[t:, t]
+        ht[:, t] = np.maximum(eps, ht[:, t] + r[:, t] - s)
+    return ht
+
+
+def make_tile_problem(v, T, seed):
+    rng = np.random.default_rng(seed)
+    f = rand(rng, v + 3, T)
+    q = f.T @ f  # SPD-ish tile of a Gram
+    wt = rand(rng, v, T)
+    wo = rand(rng, v, T)
+    p = rand(rng, v, T)
+    return wt, wo, q, p
+
+
+@pytest.mark.parametrize("v,T", [(16, 1), (40, 3), (64, 8), (37, 5), (1024, 4), (1030, 4)])
+def test_phase2_tile_w_matches_oracle(v, T):
+    wt, wo, q, p = make_tile_problem(v, T, v * 10 + T)
+    got = p2.phase2_tile_w(wt, wo, q, p)
+    want = phase2_w_oracle(wt, wo, q, p)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("d,T,bv", [(16, 2, 1024), (2048, 4, 1024), (100, 7, 16)])
+def test_phase2_tile_h_matches_oracle(d, T, bv):
+    ht, ho, s_, r = make_tile_problem(d, T, d + T)
+    got = p2.phase2_tile_h(ht, ho, s_, r, bv=bv)
+    want = phase2_h_oracle(ht, ho, s_, r)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_faithful_alg45_pair_matches_tile_kernel():
+    """The per-column Alg. 4/5 realization == the whole-tile kernel."""
+    wt, wo, q, p = make_tile_problem(96, 6, 42)
+    a = p2.phase2_tile_w(wt, wo, q, p)
+    b = p2.phase2_tile_w_faithful(wt, wo, q, p, bv=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(2, 80), T=st.integers(1, 9), seed=st.integers(0, 10_000))
+def test_phase2_w_hypothesis(v, T, seed):
+    wt, wo, q, p = make_tile_problem(v, T, seed)
+    got = np.array(p2.phase2_tile_w(wt, wo, q, p))
+    want = phase2_w_oracle(wt, wo, q, p)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    # invariants: positive and unit-norm columns
+    assert (got > 0).all()
+    np.testing.assert_allclose((got * got).sum(axis=0), 1.0, rtol=1e-3)
+
+
+def test_norm_scale_kernel():
+    rng = np.random.default_rng(1)
+    col = rand(rng, 48)
+    out = p2.norm_scale(col, jnp.float32(0.5), bv=16)
+    np.testing.assert_allclose(out, col * 0.5, rtol=1e-6)
+
+
+def test_phase2_col_partials_sum_to_norm():
+    wt, wo, q, p = make_tile_problem(64, 4, 7)
+    col, partials = p2.phase2_col(wt, wo, q[:, 2], p[:, 2], 2, bv=16)
+    assert partials.shape == (4,)
+    np.testing.assert_allclose(jnp.sum(partials), jnp.sum(col * col), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-checks
+# ---------------------------------------------------------------------------
+
+
+def test_ref_step_decreases_error():
+    rng = np.random.default_rng(11)
+    a = rand(rng, 30, 20)
+    w = rand(rng, 30, 5)
+    w = w / jnp.linalg.norm(w, axis=0, keepdims=True)
+    h = rand(rng, 20, 5)
+    e0 = float(ref.rel_error(a, w, h))
+    for _ in range(5):
+        w, h = ref.fast_hals_step(a, w, h)
+    e1 = float(ref.rel_error(a, w, h))
+    assert e1 < e0
+    # unit-norm W invariant
+    np.testing.assert_allclose(np.sum(np.array(w) ** 2, axis=0), 1.0, rtol=1e-4)
+
+
+def test_ref_mu_decreases_error():
+    rng = np.random.default_rng(13)
+    a = rand(rng, 25, 18)
+    w, h = rand(rng, 25, 4), rand(rng, 18, 4)
+    e0 = float(ref.rel_error(a, w, h))
+    for _ in range(10):
+        w, h = ref.mu_step(a, w, h)
+    assert float(ref.rel_error(a, w, h)) < e0

@@ -1,0 +1,113 @@
+"""Layer-2 correctness: the tiled model graphs vs the FAST-HALS oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def problem(v, d, k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0, 1, (v, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 1, (v, k)).astype(np.float32))
+    w = w / jnp.linalg.norm(w, axis=0, keepdims=True)
+    h = jnp.asarray(rng.uniform(0, 1, (d, k)).astype(np.float32))
+    return a, w, h
+
+
+@pytest.mark.parametrize("tile", [1, 2, 3, 4, 8])
+def test_step_dense_matches_oracle_all_tiles(tile):
+    a, w, h = problem(37, 23, 8, 5)
+    w1, h1 = model.plnmf_step_dense(a, w, h, tile=tile)
+    w2, h2 = ref.fast_hals_step(a, w, h)
+    np.testing.assert_allclose(w1, w2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h1, h2, rtol=2e-3, atol=2e-3)
+
+
+def test_update_w_matches_oracle():
+    a, w, h = problem(40, 25, 6, 9)
+    q = h.T @ h
+    p = a @ h
+    got = model.plnmf_update_w(w, q, p, tile=3)
+    want = ref.hals_update_w(w, q, p)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_update_h_matches_oracle():
+    a, w, h = problem(40, 25, 6, 10)
+    s = w.T @ w
+    r = a.T @ w
+    got = model.plnmf_update_h(h, s, r, tile=4)
+    want = ref.hals_update_h(h, s, r)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_half_steps_compose_to_full_step():
+    """The sparse-path pair (update_h_from_r, update_w_from_p) must equal
+    the fused dense step when fed the same products."""
+    a, w, h = problem(30, 20, 6, 11)
+    r = a.T @ w
+    h1 = model.plnmf_update_h_from_r(w, h, r, tile=3)
+    p = a @ h1
+    w1 = model.plnmf_update_w_from_p(w, h1, p, tile=3)
+    w2, h2 = model.plnmf_step_dense(a, w, h, tile=3)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(w1, w2, rtol=1e-5, atol=1e-5)
+
+
+def test_mu_step_matches_ref():
+    a, w, h = problem(25, 15, 4, 12)
+    w1, h1 = model.mu_step_dense(a, w, h)
+    w2, h2 = ref.mu_step(a, w, h)
+    np.testing.assert_allclose(w1, w2, rtol=1e-5)
+    np.testing.assert_allclose(h1, h2, rtol=1e-5)
+
+
+def test_rel_error_gram_trick_matches_direct():
+    a, w, h = problem(30, 22, 5, 13)
+    fast = float(model.rel_error_dense(a, w, h))
+    slow = float(ref.rel_error(a, w, h))
+    assert abs(fast - slow) < 1e-4
+
+
+def test_convergence_over_iterations():
+    a, w, h = problem(50, 35, 6, 14)
+    errs = [float(model.rel_error_dense(a, w, h))]
+    for _ in range(8):
+        w, h = model.plnmf_step_dense(a, w, h, tile=3)
+        errs.append(float(model.rel_error_dense(a, w, h)))
+    assert errs[-1] < errs[0] * 0.9
+    # HALS is monotone non-increasing (fp slack)
+    assert all(b <= a + 1e-4 for a, b in zip(errs, errs[1:]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    v=st.integers(5, 50),
+    d=st.integers(5, 40),
+    k=st.integers(2, 10),
+    data=st.data(),
+)
+def test_step_hypothesis_tile_invariance(v, d, k, data):
+    """All tile widths produce the same update (fp tolerance), i.e. the
+    associativity reorder does not change the math."""
+    tile_a = data.draw(st.integers(1, k))
+    tile_b = data.draw(st.integers(1, k))
+    a, w, h = problem(v, d, k, v * 100 + d * 10 + k)
+    wa, ha = model.plnmf_step_dense(a, w, h, tile=tile_a)
+    wb, hb = model.plnmf_step_dense(a, w, h, tile=tile_b)
+    np.testing.assert_allclose(wa, wb, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(ha, hb, rtol=2e-2, atol=2e-3)
+
+
+def test_nonnegativity_and_unit_norm_invariants():
+    a, w, h = problem(45, 30, 7, 15)
+    for _ in range(3):
+        w, h = model.plnmf_step_dense(a, w, h, tile=3)
+    w_np, h_np = np.array(w), np.array(h)
+    assert (w_np > 0).all()
+    assert (h_np > 0).all()
+    np.testing.assert_allclose((w_np * w_np).sum(axis=0), 1.0, rtol=1e-3)

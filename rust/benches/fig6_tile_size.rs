@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig6_tile_size` — regenerates the paper's fig6.
+//! Scale via PLNMF_SCALE=small|paper (default small).
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let scale = if std::env::var("PLNMF_SCALE").map(|s| s == "paper").unwrap_or(false) {
+        plnmf::bench::Scale::Paper
+    } else {
+        plnmf::bench::Scale::Small
+    };
+    plnmf::bench::fig6::run(scale, std::path::Path::new("results"))
+}

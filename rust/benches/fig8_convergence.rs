@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig8_convergence` — regenerates the paper's fig8.
+//! Scale via PLNMF_SCALE=small|paper (default small).
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let scale = if std::env::var("PLNMF_SCALE").map(|s| s == "paper").unwrap_or(false) {
+        plnmf::bench::Scale::Paper
+    } else {
+        plnmf::bench::Scale::Small
+    };
+    plnmf::bench::fig8::run(scale, std::path::Path::new("results"))
+}

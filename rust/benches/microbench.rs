@@ -1,0 +1,110 @@
+//! Microbenchmarks of the substrates on the hot path: blocked GEMM vs
+//! naive, CSR SpMM, the two HALS update kernels, and the fork-join
+//! primitive. These feed the EXPERIMENTS.md §Perf log.
+
+use plnmf::bench::harness::{measure, row, BenchOpts};
+use plnmf::data::load_dataset;
+use plnmf::linalg::{gemm, gemm::gemm_naive, gram, GemmOp, Mat};
+use plnmf::nmf::halsops::{update_naive, update_tiled, UpdateKind};
+use plnmf::parallel::ThreadPool;
+use plnmf::sparse::spmm;
+use plnmf::util::rng::Pcg32;
+use plnmf::util::PhaseTimers;
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let opts = BenchOpts::default();
+    let threads = plnmf::parallel::pool::default_threads();
+    let pool = ThreadPool::new(threads);
+    println!("microbench (threads={threads}, reps={}):\n", opts.reps);
+
+    // --- GEMM: blocked-parallel vs naive (512^3) -------------------------
+    let n = 512;
+    let mut rng = Pcg32::seeded(1);
+    let a = Mat::random(n, n, &mut rng, -1.0, 1.0);
+    let b = Mat::random(n, n, &mut rng, -1.0, 1.0);
+    let mut c = Mat::zeros(n, n);
+    let s = measure(opts, || {
+        gemm(&pool, 1.0, a.view(), b.view(), GemmOp::Assign, &mut c.view_mut())
+    });
+    let flops = 2.0 * (n as f64).powi(3);
+    println!(
+        "{}  [{:.2} GFLOP/s]",
+        row(&format!("gemm blocked {n}^3"), &s),
+        flops / s.median / 1e9
+    );
+    let s_naive = measure(BenchOpts { warmup: 0, reps: 2 }, || {
+        gemm_naive(1.0, a.view(), b.view(), GemmOp::Assign, &mut c.view_mut())
+    });
+    println!(
+        "{}  [{:.2} GFLOP/s, blocked is {:.1}x]",
+        row(&format!("gemm naive   {n}^3"), &s_naive),
+        flops / s_naive.median / 1e9,
+        s_naive.median / s.median
+    );
+
+    // --- Gram (V x K) -----------------------------------------------------
+    let x = Mat::random(20_000, 64, &mut rng, 0.0, 1.0);
+    let s = measure(opts, || {
+        let _ = gram(&pool, &x);
+    });
+    println!("{}", row("gram 20000x64", &s));
+
+    // --- SpMM on a Zipf corpus --------------------------------------------
+    let ds = load_dataset("20news-small", 42)?;
+    let h = Mat::random(ds.d(), 32, &mut rng, 0.0, 1.0);
+    let mut p = Mat::zeros(ds.v(), 32);
+    if let plnmf::data::DataMatrix::Sparse(csr) = &ds.a {
+        let s = measure(opts, || {
+            spmm(&pool, 1.0, csr, &h, GemmOp::Assign, &mut p.view_mut())
+        });
+        println!("{}", row("spmm 20news-small x32", &s));
+    }
+
+    // --- HALS update kernels (the paper's core comparison) ----------------
+    let v = 8192;
+    let k = 64;
+    let f = Mat::random(v, k, &mut rng, 0.0, 1.0);
+    let g = gram(&pool, &f);
+    let bmat = Mat::random(v, k, &mut rng, 0.0, 1.0);
+    let x0 = Mat::random(v, k, &mut rng, 0.0, 1.0);
+    let mut timers = PhaseTimers::new();
+
+    let mut x = x0.clone();
+    let s_naive = measure(opts, || {
+        update_naive(&pool, &mut x, &g, &bmat, UpdateKind::WithDiagAndNorm, &mut timers, "dmv")
+    });
+    println!("{}", row(&format!("update_naive W {v}x{k}"), &s_naive));
+
+    let mut x = x0.clone();
+    let mut scratch = Mat::zeros(v, k);
+    let tile = plnmf::nmf::cost_model::select_tile(k, 35 << 20);
+    let s_tiled = measure(opts, || {
+        update_tiled(
+            &pool,
+            &mut x,
+            &mut scratch,
+            &g,
+            &bmat,
+            tile,
+            UpdateKind::WithDiagAndNorm,
+            &mut timers,
+            ["p1", "p2", "p3"],
+        )
+    });
+    println!(
+        "{}  [tiled is {:.2}x vs naive]",
+        row(&format!("update_tiled W {v}x{k} T={tile}"), &s_tiled),
+        s_naive.median / s_tiled.median
+    );
+
+    // --- fork/join latency -------------------------------------------------
+    let s = measure(BenchOpts { warmup: 10, reps: 20 }, || {
+        for _ in 0..100 {
+            pool.run(&|_| {});
+        }
+    });
+    println!("{}  [{:.1} us/fork-join]", row("pool.run x100", &s), s.median * 1e4);
+
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! E1 / Fig. 6: elapsed time for a fixed iteration count as the tile
+//! size T varies, for each dataset and K. The paper's claim: the curve is
+//! U-shaped with its minimum at/near the model's T* (Eq. 11), because
+//! data movement vol(T) (Eq. 9) is U-shaped.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::data::load_dataset;
+use crate::nmf::plnmf::PlNmfEngine;
+use crate::nmf::{cost_model, NmfEngine};
+use crate::parallel::{pool::default_threads, ThreadPool};
+use crate::Result;
+
+use super::report::write_csv;
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Row {
+    pub dataset: String,
+    pub k: usize,
+    pub tile: usize,
+    pub secs_per_iter: f64,
+    pub model_volume: f64,
+    pub is_model_choice: bool,
+}
+
+/// The T sweep for a given K: powers-of-ish spread around the model
+/// optimum, clamped to [1, K] (the paper sweeps 5..40).
+pub fn tile_sweep(k: usize, cache_bytes: usize) -> Vec<usize> {
+    let t_star = cost_model::select_tile(k, cache_bytes);
+    let mut ts: Vec<usize> = vec![
+        1,
+        2,
+        t_star / 2,
+        t_star.saturating_sub(2),
+        t_star,
+        t_star + 2,
+        t_star * 2,
+        t_star * 4,
+        k / 2,
+        k,
+    ];
+    ts.retain(|&t| (1..=k).contains(&t));
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+pub fn sweep(
+    datasets: &[&str],
+    ks: &[usize],
+    iters: usize,
+    cache_bytes: usize,
+) -> Result<Vec<Fig6Row>> {
+    let pool = Arc::new(ThreadPool::new(default_threads()));
+    let mut rows = Vec::new();
+    for &name in datasets {
+        let ds = Arc::new(load_dataset(name, 42)?);
+        for &k in ks {
+            let t_star = cost_model::select_tile(k, cache_bytes);
+            for t in tile_sweep(k, cache_bytes) {
+                let mut engine = PlNmfEngine::new(ds.clone(), pool.clone(), k, 42, t, cache_bytes);
+                // One untimed iteration to touch all buffers.
+                engine.step()?;
+                let timer = std::time::Instant::now();
+                for _ in 0..iters {
+                    engine.step()?;
+                }
+                let secs = timer.elapsed().as_secs_f64() / iters as f64;
+                rows.push(Fig6Row {
+                    dataset: name.to_string(),
+                    k,
+                    tile: t,
+                    secs_per_iter: secs,
+                    model_volume: cost_model::tiled_w_update_volume(
+                        ds.v(),
+                        k,
+                        t,
+                        cost_model::cache_words(cache_bytes),
+                    ),
+                    is_model_choice: t == t_star,
+                });
+                crate::info!("fig6 {name} K={k} T={t}: {secs:.4}s/iter");
+            }
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[Fig6Row]) -> String {
+    let mut out = String::from("Fig. 6 — time per iteration vs tile size (× = model's T*)\n");
+    out.push_str(&format!(
+        "{:<16} {:>4} {:>5} {:>12} {:>16}\n",
+        "dataset", "K", "T", "s/iter", "model vol(T)"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>4} {:>4}{} {:>12.4} {:>16.0}\n",
+            r.dataset,
+            r.k,
+            r.tile,
+            if r.is_model_choice { "×" } else { " " },
+            r.secs_per_iter,
+            r.model_volume
+        ));
+    }
+    out
+}
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<()> {
+    run_sel(scale, out_dir, &super::Selection::default())
+}
+
+pub fn run_sel(scale: Scale, out_dir: &Path, sel: &super::Selection) -> Result<()> {
+    let iters = sel.iters.unwrap_or(match scale {
+        Scale::Small => 10,
+        Scale::Paper => 6,
+    });
+    let cache = 35 * 1024 * 1024;
+    let rows = sweep(&sel.datasets(scale), &sel.ks(scale), iters, cache)?;
+    print!("{}", render(&rows));
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{:.6},{:.0},{}",
+                r.dataset, r.k, r.tile, r.secs_per_iter, r.model_volume, r.is_model_choice
+            )
+        })
+        .collect();
+    write_csv(
+        &out_dir.join("fig6_tile_size.csv"),
+        "dataset,k,tile,secs_per_iter,model_volume,is_model_choice",
+        &csv,
+    )?;
+    // Shape check: report whether the model's T is within 25% of the
+    // empirical best for each (dataset, K).
+    for (name, k) in rows.iter().map(|r| (r.dataset.clone(), r.k)).collect::<std::collections::BTreeSet<_>>() {
+        let group: Vec<&Fig6Row> =
+            rows.iter().filter(|r| r.dataset == name && r.k == k).collect();
+        let best = group.iter().min_by(|a, b| a.secs_per_iter.total_cmp(&b.secs_per_iter)).unwrap();
+        let model = group.iter().find(|r| r.is_model_choice);
+        if let Some(m) = model {
+            println!(
+                "{name} K={k}: empirical best T={} ({:.4}s), model T={} ({:.4}s, +{:.0}%)",
+                best.tile,
+                best.secs_per_iter,
+                m.tile,
+                m.secs_per_iter,
+                100.0 * (m.secs_per_iter / best.secs_per_iter - 1.0)
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_includes_model_choice_and_extremes() {
+        let ts = tile_sweep(160, 35 << 20);
+        assert!(ts.contains(&1));
+        assert!(ts.contains(&160));
+        assert!(ts.contains(&cost_model::select_tile(160, 35 << 20)));
+        assert!(ts.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn tiny_sweep_runs() {
+        let rows = sweep(&["tiny"], &[6], 2, 35 << 20).unwrap();
+        assert!(rows.len() >= 3);
+        assert!(rows.iter().any(|r| r.is_model_choice));
+        assert!(rows.iter().all(|r| r.secs_per_iter > 0.0));
+        assert!(render(&rows).contains("tiny"));
+    }
+}

@@ -1,0 +1,128 @@
+//! E2 / Fig. 7 (+ E7 §6.3.2): relative error as a function of elapsed
+//! time for every engine, per dataset and K — and the per-iteration
+//! speedup of PL-NMF over naive FAST-HALS that §6.3.2 quotes
+//! (3.07/3.06/5.81/3.02/3.07× at K=240).
+
+use std::path::Path;
+
+use crate::config::EngineKind;
+use crate::coordinator::comparison::run_comparison;
+use crate::coordinator::metrics::{summary_table, write_comparison_csv};
+use crate::coordinator::RunReport;
+use crate::Result;
+
+use super::{bench_config, report::write_csv, Scale};
+
+/// Engines in Fig. 7's legend order. XLA engines are included when their
+/// artifacts exist (the comparison runner skips them gracefully).
+pub fn fig7_engines() -> Vec<EngineKind> {
+    vec![
+        EngineKind::PlNmf,
+        EngineKind::FastHals,
+        EngineKind::Mu,
+        EngineKind::Bpp,
+        EngineKind::PlNmfXla,
+        EngineKind::MuXla,
+    ]
+}
+
+pub struct Fig7Output {
+    pub reports: Vec<RunReport>,
+    /// (dataset, k, plnmf s/iter, hals s/iter, speedup) — E7.
+    pub per_iter_speedups: Vec<(String, usize, f64, f64, f64)>,
+}
+
+pub fn run_datasets(datasets: &[&str], ks: &[usize], scale: Scale) -> Result<Fig7Output> {
+    run_datasets_iters(datasets, ks, scale, None)
+}
+
+pub fn run_datasets_iters(
+    datasets: &[&str],
+    ks: &[usize],
+    scale: Scale,
+    iters: Option<usize>,
+) -> Result<Fig7Output> {
+    run_datasets_engines(datasets, ks, scale, iters, &fig7_engines())
+}
+
+pub fn run_datasets_engines(
+    datasets: &[&str],
+    ks: &[usize],
+    scale: Scale,
+    iters: Option<usize>,
+    engines: &[EngineKind],
+) -> Result<Fig7Output> {
+    let mut all_reports = Vec::new();
+    let mut speedups = Vec::new();
+    for &name in datasets {
+        for &k in ks {
+            let mut cfg = bench_config(name, k, scale);
+            if let Some(it) = iters {
+                cfg.max_iters = it;
+            }
+            let cmp = run_comparison(&cfg, engines)?;
+            let plnmf = cmp.reports.iter().find(|r| r.engine == "plnmf-cpu");
+            let hals = cmp.reports.iter().find(|r| r.engine == "fasthals-cpu");
+            if let (Some(p), Some(h)) = (plnmf, hals) {
+                speedups.push((
+                    name.to_string(),
+                    k,
+                    p.secs_per_iter(),
+                    h.secs_per_iter(),
+                    h.secs_per_iter() / p.secs_per_iter().max(1e-12),
+                ));
+            }
+            all_reports.extend(cmp.reports);
+        }
+    }
+    Ok(Fig7Output { reports: all_reports, per_iter_speedups: speedups })
+}
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<()> {
+    run_sel(scale, out_dir, &super::Selection::default())
+}
+
+pub fn run_sel(scale: Scale, out_dir: &Path, sel: &super::Selection) -> Result<()> {
+    let out = run_datasets_engines(
+        &sel.datasets(scale),
+        &sel.ks(scale),
+        scale,
+        sel.iters,
+        &sel.engines(fig7_engines()),
+    )?;
+    println!("Fig. 7 — relative error vs time (traces in CSV)\n");
+    print!("{}", summary_table(&out.reports));
+    write_comparison_csv(&out_dir.join("fig7_traces.csv"), &out.reports)?;
+
+    println!("\n§6.3.2 — per-iteration speedup of PL-NMF over naive FAST-HALS");
+    println!(
+        "{:<16} {:>4} {:>12} {:>12} {:>9}",
+        "dataset", "K", "plnmf s/it", "hals s/it", "speedup"
+    );
+    let mut csv = Vec::new();
+    for (name, k, sp, sh, ratio) in &out.per_iter_speedups {
+        println!("{name:<16} {k:>4} {sp:>12.4} {sh:>12.4} {ratio:>8.2}x");
+        csv.push(format!("{name},{k},{sp:.6},{sh:.6},{ratio:.3}"));
+    }
+    write_csv(
+        &out_dir.join("e7_per_iter_speedup.csv"),
+        "dataset,k,plnmf_secs_per_iter,hals_secs_per_iter,speedup",
+        &csv,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_comparison_produces_speedups() {
+        let out = run_datasets(&["tiny"], &[8], Scale::Small).unwrap();
+        assert!(!out.reports.is_empty());
+        assert_eq!(out.per_iter_speedups.len(), 1);
+        let (_, _, sp, sh, ratio) = &out.per_iter_speedups[0];
+        assert!(*sp > 0.0 && *sh > 0.0);
+        assert!((*ratio - sh / sp).abs() < 1e-9);
+    }
+}

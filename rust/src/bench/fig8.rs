@@ -1,0 +1,140 @@
+//! E3 / Fig. 8: relative error as a function of *iterations* (K = 240,
+//! T = 15 at paper scale). The claims this reproduces:
+//!
+//! * planc-HALS and PL-NMF follow the same per-iteration trajectory (the
+//!   tiled reorder only reassociates additions);
+//! * MU converges more slowly per iteration;
+//! * BPP matches HALS quality per iteration (at higher per-iter cost).
+
+use std::path::Path;
+
+use crate::config::EngineKind;
+use crate::coordinator::comparison::run_comparison;
+use crate::coordinator::metrics::write_comparison_csv;
+use crate::coordinator::RunReport;
+use crate::Result;
+
+use super::{bench_config, Scale};
+
+pub fn run_datasets(datasets: &[&str], k: usize, scale: Scale) -> Result<Vec<RunReport>> {
+    run_datasets_iters(datasets, k, scale, None)
+}
+
+pub fn run_datasets_iters(
+    datasets: &[&str],
+    k: usize,
+    scale: Scale,
+    iters: Option<usize>,
+) -> Result<Vec<RunReport>> {
+    run_datasets_engines(datasets, k, scale, iters, &default_engines())
+}
+
+pub fn default_engines() -> Vec<EngineKind> {
+    vec![EngineKind::PlNmf, EngineKind::FastHals, EngineKind::Mu, EngineKind::Bpp]
+}
+
+pub fn run_datasets_engines(
+    datasets: &[&str],
+    k: usize,
+    scale: Scale,
+    iters: Option<usize>,
+    engines: &[EngineKind],
+) -> Result<Vec<RunReport>> {
+    let mut reports = Vec::new();
+    for &name in datasets {
+        let mut cfg = bench_config(name, k, scale);
+        if let Some(it) = iters {
+            cfg.max_iters = it;
+        }
+        let cmp = run_comparison(&cfg, engines)?;
+        reports.extend(cmp.reports);
+    }
+    Ok(reports)
+}
+
+/// Max |err_plnmf − err_hals| across aligned iterations (the Fig. 8
+/// "identical trajectories" check).
+pub fn hals_family_divergence(reports: &[RunReport]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let datasets: std::collections::BTreeSet<_> =
+        reports.iter().map(|r| r.dataset.clone()).collect();
+    for ds in datasets {
+        let find = |engine: &str| {
+            reports.iter().find(|r| r.dataset == ds && r.engine == engine)
+        };
+        if let (Some(p), Some(h)) = (find("plnmf-cpu"), find("fasthals-cpu")) {
+            let d = p
+                .trace
+                .iter()
+                .zip(&h.trace)
+                .map(|(a, b)| (a.rel_error - b.rel_error).abs())
+                .fold(0.0f64, f64::max);
+            out.push((ds, d));
+        }
+    }
+    out
+}
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<()> {
+    run_sel(scale, out_dir, &super::Selection::default())
+}
+
+pub fn run_sel(scale: Scale, out_dir: &Path, sel: &super::Selection) -> Result<()> {
+    let k = sel.ks.as_ref().and_then(|v| v.first().copied()).unwrap_or(scale.k_single());
+    let reports = run_datasets_engines(
+        &sel.datasets(scale),
+        k,
+        scale,
+        sel.iters,
+        &sel.engines(default_engines()),
+    )?;
+    println!("Fig. 8 — relative error vs iterations (K={k})\n");
+    // Render a compact per-iteration table per dataset.
+    let datasets: std::collections::BTreeSet<_> =
+        reports.iter().map(|r| r.dataset.clone()).collect();
+    for ds in &datasets {
+        println!("{ds}:");
+        let group: Vec<&RunReport> = reports.iter().filter(|r| &r.dataset == ds).collect();
+        print!("{:>6}", "iter");
+        for g in &group {
+            print!(" {:>14}", g.engine);
+        }
+        println!();
+        let n = group.iter().map(|g| g.trace.len()).min().unwrap_or(0);
+        let show = [0, n / 4, n / 2, 3 * n / 4, n.saturating_sub(1)];
+        for &i in show.iter().filter(|&&i| i < n) {
+            print!("{:>6}", group[0].trace[i].iter);
+            for g in &group {
+                print!(" {:>14.6}", g.trace[i].rel_error);
+            }
+            println!();
+        }
+    }
+    for (ds, d) in hals_family_divergence(&reports) {
+        println!("HALS-family max per-iteration divergence on {ds}: {d:.2e}");
+    }
+    write_comparison_csv(&out_dir.join("fig8_convergence.csv"), &reports)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trajectories_align_on_tiny() {
+        let reports = run_datasets(&["tiny"], 6, Scale::Small).unwrap();
+        let div = hals_family_divergence(&reports);
+        assert_eq!(div.len(), 1);
+        assert!(div[0].1 < 5e-3, "divergence {}", div[0].1);
+        // MU is never better than HALS at the shared final iteration.
+        let hals = reports.iter().find(|r| r.engine == "fasthals-cpu").unwrap();
+        let mu = reports.iter().find(|r| r.engine == "mu-cpu").unwrap();
+        assert!(
+            hals.final_rel_error <= mu.final_rel_error + 1e-6,
+            "hals {} mu {}",
+            hals.final_rel_error,
+            mu.final_rel_error
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Measurement harness (criterion is unavailable offline): warmup +
+//! repeated timed runs + robust summary statistics.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Harness configuration. Honors `PLNMF_BENCH_REPS` / `PLNMF_BENCH_WARMUP`
+/// for CI tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        let get = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        BenchOpts { warmup: get("PLNMF_BENCH_WARMUP", 2), reps: get("PLNMF_BENCH_REPS", 5) }
+    }
+}
+
+/// Time `f` (seconds per call) with warmup; returns the sample summary.
+pub fn measure(opts: BenchOpts, mut f: impl FnMut()) -> Summary {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.reps.max(1));
+    for _ in 0..opts.reps.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Render a bench row: `name  median ± mad  (min … max, n)`.
+pub fn row(name: &str, s: &Summary) -> String {
+    format!(
+        "{:<44} {:>10.4}s ±{:>8.4}  ({:.4} … {:.4}, n={})",
+        name, s.median, s.mad, s.min, s.max, s.n
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let s = measure(BenchOpts { warmup: 0, reps: 3 }, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(s.median >= 0.004, "median {}", s.median);
+        assert!(s.median < 0.2);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn row_formats() {
+        let s = Summary::of(&[0.1, 0.2, 0.3]);
+        let r = row("x", &s);
+        assert!(r.contains("n=3"));
+    }
+}

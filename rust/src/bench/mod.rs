@@ -1,0 +1,267 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§5–§6), plus the CLI that fronts the whole system.
+//!
+//! | experiment | paper artifact | module | bench target |
+//! |------------|----------------|--------|--------------|
+//! | E1 | Fig. 6 tile-size sweep        | [`fig6`]   | `cargo bench --bench fig6_tile_size` |
+//! | E2 | Fig. 7 error vs time          | [`fig7`]   | `cargo bench --bench fig7_time_to_error` |
+//! | E3 | Fig. 8 error vs iterations    | [`fig8`]   | `cargo bench --bench fig8_convergence` |
+//! | E4 | Fig. 9 speedup @ matched err  | [`fig9`]   | `cargo bench --bench fig9_speedup` |
+//! | E5 | Table 5 W-update breakdown    | [`table5`] | `cargo bench --bench table5_breakdown` |
+//! | E6 | §5 cost-model numbers         | [`model_report`] | unit tests + `plnmf model` |
+//! | E7 | §6.3.2 per-iter speedup       | [`fig7`] (`--per-iter`) | same bench |
+//! | E8 | Table 4 dataset statistics    | `plnmf datasets` | — |
+//!
+//! Every run defaults to the scaled-down `-small` profiles so `cargo
+//! bench` completes in minutes; pass `--scale paper` (or env
+//! `PLNMF_SCALE=paper`) for the full Table 4 sizes.
+
+pub mod harness;
+pub mod report;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table5;
+
+use anyhow::bail;
+
+use crate::cli::Args;
+use crate::config::{profiles, EngineKind, RunConfig};
+use crate::coordinator::{metrics, Driver};
+use crate::data::stats::{table_header, DatasetStats};
+use crate::nmf::cost_model;
+use crate::Result;
+
+/// Benchmark scale: which dataset profiles a bench touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// `-small` profiles, reduced K — CI-friendly (default).
+    Small,
+    /// Full Table 4 datasets at the paper's K values.
+    Paper,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args) -> Scale {
+        let v = args
+            .opt("scale")
+            .map(str::to_string)
+            .or_else(|| std::env::var("PLNMF_SCALE").ok())
+            .unwrap_or_default();
+        if v.eq_ignore_ascii_case("paper") {
+            Scale::Paper
+        } else {
+            Scale::Small
+        }
+    }
+
+    pub fn datasets(self) -> [&'static str; 5] {
+        match self {
+            Scale::Small => profiles::small_datasets(),
+            Scale::Paper => profiles::paper_datasets(),
+        }
+    }
+
+    /// The K sweep (Figs. 6/7 use 80/160/240 at paper scale).
+    pub fn ks(self) -> Vec<usize> {
+        match self {
+            Scale::Small => vec![16, 32],
+            Scale::Paper => vec![80, 160, 240],
+        }
+    }
+
+    /// The single operating point of Figs. 8/9 (K = 240, T = 15).
+    pub fn k_single(self) -> usize {
+        match self {
+            Scale::Small => 32,
+            Scale::Paper => 240,
+        }
+    }
+
+    pub fn iters(self) -> usize {
+        match self {
+            Scale::Small => 30,
+            Scale::Paper => 100,
+        }
+    }
+}
+
+/// CLI dispatch (shared by the `plnmf` binary and the examples).
+pub fn cli_main(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("model") => cmd_model(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (see `plnmf help`)"),
+    }
+}
+
+const HELP: &str = "\
+plnmf — Parallel Locality-Optimized NMF (paper reproduction)
+
+USAGE: plnmf <command> [--key value ...]
+
+COMMANDS:
+  run        run one engine: --dataset --k --engine --iters --tile --threads
+             --seed --trace_path out.csv [--config file.json]
+  compare    run several engines from one init: --engines a,b,c (default all
+             native), same options as run; writes results/compare_*.csv
+  datasets   print Table-4 statistics of every dataset profile (E8)
+  model      print the §5 data-movement model report (E6): --k or positional
+             K values, --dataset for V, --cache_bytes
+  bench      regenerate paper artifacts: bench <fig6|fig7|fig8|fig9|table5|all>
+             [--scale small|paper] [--out-dir results]
+  help       this text
+
+Engines: plnmf | fasthals | mu | bpp | mu-kl | plnmf-xla | mu-xla
+Dataset profiles: 20news tdt2 reuters att pie (+-small variants, tiny)
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let mut driver = Driver::from_config(&cfg)?;
+    let report = driver.run()?;
+    print!("{}", metrics::summary_table(std::slice::from_ref(&report)));
+    println!("\nphase breakdown:\n{}", report.timers.table());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let engines: Vec<EngineKind> = match args.opt("engines") {
+        Some(list) => list
+            .split(',')
+            .map(|s| EngineKind::from_str(s.trim()))
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![EngineKind::PlNmf, EngineKind::FastHals, EngineKind::Mu, EngineKind::Bpp],
+    };
+    let cmp = crate::coordinator::comparison::run_comparison(&cfg, &engines)?;
+    print!("{}", metrics::summary_table(&cmp.reports));
+    for (kind, why) in &cmp.skipped {
+        println!("skipped {}: {}", kind.name(), why);
+    }
+    let out = report::results_dir(args).join(format!("compare_{}_k{}.csv", cfg.dataset, cfg.k));
+    metrics::write_comparison_csv(&out, &cmp.reports)?;
+    println!("\ntrace CSV: {}", out.display());
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    println!("{}", table_header());
+    for name in scale.datasets() {
+        let ds = crate::data::load_dataset(name, 42)?;
+        println!("{}", DatasetStats::of(&ds).row());
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let ks: Vec<usize> = if args.positional.is_empty() {
+        vec![80, 160, 240]
+    } else {
+        args.positional.iter().map(|s| s.parse().unwrap_or(0)).filter(|&k| k > 0).collect()
+    };
+    // §5 uses V = 11,314 for the 20NG worked example.
+    let v = crate::config::dataset_profile(&cfg.dataset).map(|p| p.d).unwrap_or(11_314);
+    println!("data-movement model (V={v}, C={} bytes):", cfg.cache_bytes);
+    println!(
+        "{:>5} {:>8} {:>6} {:>16} {:>16} {:>7}",
+        "K", "T*", "T", "naive words", "tiled words", "ratio"
+    );
+    for k in ks {
+        let r = cost_model::model_report(v, k, cfg.cache_bytes);
+        println!(
+            "{:>5} {:>8.2} {:>6} {:>16.0} {:>16.0} {:>6.1}x",
+            r.k, r.t_real, r.t_selected, r.naive_volume, r.tiled_volume, r.ratio
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale = Scale::from_args(args);
+    let out = report::results_dir(args);
+    // Optional subset overrides: --datasets a,b --ks 80,160 --iters N
+    let sel = Selection {
+        datasets: args.opt("datasets").map(|v| v.split(',').map(str::to_string).collect()),
+        ks: args
+            .opt("ks")
+            .map(|v| v.split(',').filter_map(|x| x.parse().ok()).collect()),
+        iters: args.opt_usize("iters")?,
+        engines: match args.opt("engines") {
+            Some(list) => Some(
+                list.split(',')
+                    .map(|s| EngineKind::from_str(s.trim()))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        },
+    };
+    match which {
+        "fig6" => fig6::run_sel(scale, &out, &sel)?,
+        "fig7" => fig7::run_sel(scale, &out, &sel)?,
+        "fig8" => fig8::run_sel(scale, &out, &sel)?,
+        "fig9" => fig9::run_sel(scale, &out, &sel)?,
+        "table5" => table5::run(scale, &out)?,
+        "all" => {
+            fig6::run_sel(scale, &out, &sel)?;
+            fig7::run_sel(scale, &out, &sel)?;
+            fig8::run_sel(scale, &out, &sel)?;
+            fig9::run_sel(scale, &out, &sel)?;
+            table5::run(scale, &out)?;
+        }
+        other => bail!("unknown bench '{other}'"),
+    }
+    Ok(())
+}
+
+/// Optional subset overrides for the bench commands.
+#[derive(Debug, Clone, Default)]
+pub struct Selection {
+    pub datasets: Option<Vec<String>>,
+    pub ks: Option<Vec<usize>>,
+    pub iters: Option<usize>,
+    pub engines: Option<Vec<EngineKind>>,
+}
+
+impl Selection {
+    pub fn datasets<'a>(&'a self, scale: Scale) -> Vec<&'a str> {
+        match &self.datasets {
+            Some(v) => v.iter().map(|s| s.as_str()).collect(),
+            None => scale.datasets().to_vec(),
+        }
+    }
+
+    pub fn ks(&self, scale: Scale) -> Vec<usize> {
+        self.ks.clone().unwrap_or_else(|| scale.ks())
+    }
+
+    pub fn engines(&self, default: Vec<EngineKind>) -> Vec<EngineKind> {
+        self.engines.clone().unwrap_or(default)
+    }
+}
+
+/// E6 as a library call (used by the end-to-end example).
+pub fn model_report(v: usize, k: usize, cache_bytes: usize) -> cost_model::ModelReport {
+    cost_model::model_report(v, k, cache_bytes)
+}
+
+/// Build a base RunConfig for a bench at a given scale.
+pub fn bench_config(dataset: &str, k: usize, scale: Scale) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.to_string();
+    cfg.k = k;
+    cfg.max_iters = scale.iters();
+    cfg.seed = 42;
+    cfg
+}

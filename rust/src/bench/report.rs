@@ -1,0 +1,43 @@
+//! Bench output plumbing: the `results/` directory and CSV writers.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::cli::Args;
+use crate::Result;
+
+/// Resolve the output directory (`--out-dir`, default `results/`).
+pub fn results_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt("out-dir").unwrap_or("results"))
+}
+
+/// Write CSV rows with a header; creates parent dirs.
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{header}")?;
+    for r in rows {
+        writeln!(w, "{r}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let p = std::env::temp_dir().join(format!("plnmf-rep-{}.csv", std::process::id()));
+        write_csv(&p, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a,b\n1,2\n3,4\n");
+        std::fs::remove_file(p).ok();
+    }
+}

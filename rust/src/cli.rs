@@ -1,0 +1,150 @@
+//! Command-line parsing (clap is unavailable offline).
+//!
+//! Grammar:  `plnmf <subcommand> [--key value]... [--flag]... [positional]...`
+//! Options may also be written `--key=value`. `--config path.json` loads a
+//! [`crate::config::RunConfig`] file first; later `--key value` pairs
+//! override individual fields.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
+    }
+
+    /// Build a [`RunConfig`]: defaults ← `--config file` ← individual
+    /// `--key value` overrides.
+    pub fn to_run_config(&self) -> Result<RunConfig> {
+        let mut cfg = match self.opt("config") {
+            Some(path) => RunConfig::from_file(path)?,
+            None => RunConfig::default(),
+        };
+        for (k, v) in &self.options {
+            if k == "config" {
+                continue;
+            }
+            // Skip keys that aren't config fields (commands own those).
+            if cfg.set_str(k, v).is_err() && !NON_CONFIG_KEYS.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Options consumed by subcommands rather than RunConfig.
+const NON_CONFIG_KEYS: &[&str] = &[
+    "out", "out-dir", "reps", "warmup", "ks", "tiles", "datasets", "engines", "scale",
+    "target-error", "format", "top",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --dataset 20news --k 160 --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("dataset"), Some("20news"));
+        assert_eq!(a.opt("k"), Some("160"));
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --k=240 --engine=plnmf");
+        assert_eq!(a.opt("k"), Some("240"));
+        assert_eq!(a.opt("engine"), Some("plnmf"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("model 80 160 240");
+        assert_eq!(a.subcommand.as_deref(), Some("model"));
+        assert_eq!(a.positional, vec!["80", "160", "240"]);
+    }
+
+    #[test]
+    fn run_config_overrides() {
+        let a = parse("run --k 240 --engine mu --seed 7");
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.k, 240);
+        assert_eq!(cfg.engine, crate::config::EngineKind::Mu);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("run --bogus 3");
+        assert!(a.to_run_config().is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --verbose");
+        assert!(a.has_flag("verbose"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment configuration: JSON config files + CLI overrides.
+//!
+//! Every run of the `plnmf` binary, every example, and every bench is
+//! driven by a [`RunConfig`], so experiments are fully described by a
+//! `configs/*.json` file (reproducibility) while remaining overridable
+//! from the command line (exploration).
+
+pub mod schema;
+pub mod profiles;
+
+pub use profiles::{dataset_profile, list_profiles, DatasetKind, DatasetProfile};
+pub use schema::{EngineKind, RunConfig};

@@ -1,0 +1,250 @@
+//! Dataset profiles.
+//!
+//! The paper evaluates on five datasets (Table 4). The original files live
+//! behind university URLs we cannot fetch offline, so each profile drives
+//! a *synthetic generator* (`crate::data`) matched to the published
+//! statistics: exact V, D and NNZ for the sparse text corpora, exact dense
+//! dimensions for the image sets. The `-small` profiles are scaled-down
+//! versions for tests/CI; `tiny` is for unit tests.
+//!
+//! `plnmf datasets` prints the realized statistics next to Table 4's
+//! numbers (experiment E8).
+
+use anyhow::{bail, Result};
+
+/// Sparse (CSR bag-of-words) vs dense generator family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Zipf-distributed synthetic bag-of-words (20news / tdt2 / reuters).
+    SparseText,
+    /// Smooth low-rank-plus-noise dense matrix (att / pie face images).
+    DenseImage,
+}
+
+/// Generator parameters for one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub kind: DatasetKind,
+    /// Rows of A (vocabulary size for text; pixels or images per Table 4).
+    pub v: usize,
+    /// Columns of A (documents for text).
+    pub d: usize,
+    /// Target number of non-zeros (sparse kinds only; dense uses v*d).
+    pub nnz: usize,
+    /// Zipf exponent for the word marginal (text kinds).
+    pub zipf_s: f64,
+    /// Planted rank for the dense image generator (error curves then have
+    /// meaningful decay, like real face datasets).
+    pub planted_rank: usize,
+    /// Table 4 row this profile reproduces, if any (paper V, D, NNZ).
+    pub paper_stats: Option<(usize, usize, usize)>,
+}
+
+impl DatasetProfile {
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.v as f64 * self.d as f64)
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.kind == DatasetKind::SparseText
+    }
+}
+
+/// Look up a dataset profile by name.
+pub fn dataset_profile(name: &str) -> Result<DatasetProfile> {
+    let p = match name {
+        // ---- paper-scale profiles (Table 4) --------------------------------
+        "20news" => DatasetProfile {
+            name: "20news",
+            kind: DatasetKind::SparseText,
+            v: 26_214,
+            d: 11_314,
+            nnz: 1_018_191,
+            zipf_s: 1.07,
+            planted_rank: 0,
+            paper_stats: Some((26_214, 11_314, 1_018_191)),
+        },
+        "tdt2" => DatasetProfile {
+            name: "tdt2",
+            kind: DatasetKind::SparseText,
+            v: 36_771,
+            d: 10_212,
+            nnz: 1_323_869,
+            zipf_s: 1.07,
+            planted_rank: 0,
+            paper_stats: Some((36_771, 10_212, 1_323_869)),
+        },
+        "reuters" => DatasetProfile {
+            name: "reuters",
+            kind: DatasetKind::SparseText,
+            v: 18_933,
+            d: 8_293,
+            nnz: 389_455,
+            zipf_s: 1.12,
+            planted_rank: 0,
+            paper_stats: Some((18_933, 8_293, 389_455)),
+        },
+        "att" => DatasetProfile {
+            name: "att",
+            kind: DatasetKind::DenseImage,
+            v: 400,
+            d: 10_304, // 92 x 112 pixels
+            nnz: 400 * 10_304,
+            zipf_s: 0.0,
+            planted_rank: 40,
+            paper_stats: Some((400, 10_304, 4_121_478)),
+        },
+        "pie" => DatasetProfile {
+            name: "pie",
+            kind: DatasetKind::DenseImage,
+            v: 11_554,
+            d: 4_096, // 64 x 64 pixels
+            nnz: 11_554 * 4_096,
+            zipf_s: 0.0,
+            planted_rank: 60,
+            paper_stats: Some((11_554, 4_096, 47_321_408)),
+        },
+        // ---- scaled-down profiles for tests / CI ---------------------------
+        "20news-small" => DatasetProfile {
+            name: "20news-small",
+            kind: DatasetKind::SparseText,
+            v: 3_277,
+            d: 1_414,
+            nnz: 15_900,
+            zipf_s: 1.07,
+            planted_rank: 0,
+            paper_stats: None,
+        },
+        "tdt2-small" => DatasetProfile {
+            name: "tdt2-small",
+            kind: DatasetKind::SparseText,
+            v: 4_596,
+            d: 1_276,
+            nnz: 20_600,
+            zipf_s: 1.07,
+            planted_rank: 0,
+            paper_stats: None,
+        },
+        "reuters-small" => DatasetProfile {
+            name: "reuters-small",
+            kind: DatasetKind::SparseText,
+            v: 2_366,
+            d: 1_036,
+            nnz: 6_100,
+            zipf_s: 1.12,
+            planted_rank: 0,
+            paper_stats: None,
+        },
+        "att-small" => DatasetProfile {
+            name: "att-small",
+            kind: DatasetKind::DenseImage,
+            v: 100,
+            d: 1_288,
+            nnz: 100 * 1_288,
+            zipf_s: 0.0,
+            planted_rank: 12,
+            paper_stats: None,
+        },
+        "pie-small" => DatasetProfile {
+            name: "pie-small",
+            kind: DatasetKind::DenseImage,
+            v: 1_444,
+            d: 512,
+            nnz: 1_444 * 512,
+            zipf_s: 0.0,
+            planted_rank: 16,
+            paper_stats: None,
+        },
+        // ---- unit-test profile ---------------------------------------------
+        "tiny" => DatasetProfile {
+            name: "tiny",
+            kind: DatasetKind::DenseImage,
+            v: 60,
+            d: 40,
+            nnz: 60 * 40,
+            zipf_s: 0.0,
+            planted_rank: 6,
+            paper_stats: None,
+        },
+        "tiny-sparse" => DatasetProfile {
+            name: "tiny-sparse",
+            kind: DatasetKind::SparseText,
+            v: 80,
+            d: 50,
+            nnz: 400,
+            zipf_s: 1.1,
+            planted_rank: 0,
+            paper_stats: None,
+        },
+        other => bail!(
+            "unknown dataset '{other}' (known: {})",
+            list_profiles().join(", ")
+        ),
+    };
+    Ok(p)
+}
+
+/// Names of all registered profiles.
+pub fn list_profiles() -> Vec<&'static str> {
+    vec![
+        "20news", "tdt2", "reuters", "att", "pie", "20news-small", "tdt2-small",
+        "reuters-small", "att-small", "pie-small", "tiny", "tiny-sparse",
+    ]
+}
+
+/// The five paper datasets, in the order the figures list them.
+pub fn paper_datasets() -> [&'static str; 5] {
+    ["20news", "tdt2", "reuters", "att", "pie"]
+}
+
+/// The scaled-down counterparts, same order.
+pub fn small_datasets() -> [&'static str; 5] {
+    ["20news-small", "tdt2-small", "reuters-small", "att-small", "pie-small"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_resolve() {
+        for name in list_profiles() {
+            let p = dataset_profile(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(p.v > 0 && p.d > 0 && p.nnz > 0);
+            assert!(p.nnz <= p.v * p.d);
+        }
+    }
+
+    #[test]
+    fn paper_stats_match_table4() {
+        // Table 4 exact values.
+        let cases = [
+            ("20news", 26_214, 11_314, 1_018_191),
+            ("tdt2", 36_771, 10_212, 1_323_869),
+            ("reuters", 18_933, 8_293, 389_455),
+            ("att", 400, 10_304, 4_121_478),
+            ("pie", 11_554, 4_096, 47_321_408),
+        ];
+        for (name, v, d, nnz) in cases {
+            let p = dataset_profile(name).unwrap();
+            assert_eq!(p.paper_stats, Some((v, d, nnz)));
+            assert_eq!(p.v, v);
+            assert_eq!(p.d, d);
+        }
+    }
+
+    #[test]
+    fn sparse_text_density_matches_paper_sparsity() {
+        // 20news sparsity 99.6567% occupied-complement => density ~0.34%.
+        let p = dataset_profile("20news").unwrap();
+        let sparsity = 100.0 * (1.0 - p.density());
+        assert!((sparsity - 99.6567).abs() < 0.01, "sparsity {sparsity}");
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(dataset_profile("nope").is_err());
+    }
+}

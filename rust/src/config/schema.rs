@@ -1,0 +1,266 @@
+//! The run configuration schema.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Which NMF engine to run.
+///
+/// The `*Xla` variants execute the AOT-compiled JAX/Pallas update graphs
+/// through the PJRT runtime (`rust/src/runtime`) — the stand-in for the
+/// paper's GPU implementations (see DESIGN.md §5). The native variants
+/// are the CPU implementations compared in Figs. 7–9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// PL-NMF: the paper's tiled three-phase FAST-HALS (Alg. 2).
+    PlNmf,
+    /// Naive FAST-HALS (Alg. 1) — the `planc-HALS-cpu` baseline.
+    FastHals,
+    /// Multiplicative updates — the `planc-MU-cpu` baseline.
+    Mu,
+    /// ANLS with block principal pivoting — the `planc-BPP-cpu` baseline.
+    Bpp,
+    /// MU under the Kullback–Leibler objective (extension; §2.1's other
+    /// objective family).
+    MuKl,
+    /// PL-NMF lowered via JAX/Pallas → HLO → PJRT (`PL-NMF-accel`,
+    /// standing in for PL-NMF-gpu).
+    PlNmfXla,
+    /// MU through the same PJRT path (standing in for bionmf-MU-gpu).
+    MuXla,
+}
+
+impl EngineKind {
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "plnmf" | "pl-nmf" | "plnmf-cpu" => EngineKind::PlNmf,
+            "fasthals" | "fast-hals" | "hals" | "planc-hals" | "fasthals-cpu" => {
+                EngineKind::FastHals
+            }
+            "mu" | "planc-mu" | "mu-cpu" => EngineKind::Mu,
+            "mu-kl" | "mukl" | "mu-kl-cpu" => EngineKind::MuKl,
+            "bpp" | "anls-bpp" | "planc-bpp" | "bpp-cpu" => EngineKind::Bpp,
+            "plnmf-xla" | "plnmf-accel" | "plnmf-gpu" => EngineKind::PlNmfXla,
+            "mu-xla" | "mu-accel" | "bionmf-mu" | "mu-gpu" => EngineKind::MuXla,
+            other => bail!("unknown engine '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::PlNmf => "plnmf-cpu",
+            EngineKind::FastHals => "fasthals-cpu",
+            EngineKind::Mu => "mu-cpu",
+            EngineKind::MuKl => "mu-kl-cpu",
+            EngineKind::Bpp => "bpp-cpu",
+            EngineKind::PlNmfXla => "plnmf-accel",
+            EngineKind::MuXla => "mu-accel",
+        }
+    }
+
+    /// All engines, in the order Figs. 7–9 list them (plus extensions).
+    pub fn all() -> [EngineKind; 7] {
+        [
+            EngineKind::PlNmf,
+            EngineKind::FastHals,
+            EngineKind::Mu,
+            EngineKind::Bpp,
+            EngineKind::MuKl,
+            EngineKind::PlNmfXla,
+            EngineKind::MuXla,
+        ]
+    }
+
+    pub fn is_xla(self) -> bool {
+        matches!(self, EngineKind::PlNmfXla | EngineKind::MuXla)
+    }
+}
+
+/// Full description of one NMF run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Dataset profile name (see `config::profiles`).
+    pub dataset: String,
+    /// Low rank K.
+    pub k: usize,
+    /// Tile width T; 0 selects via the data-movement model (Eq. 11).
+    pub tile: usize,
+    pub engine: EngineKind,
+    pub max_iters: usize,
+    /// Stop when relative error improves by less than `tol` over a
+    /// 5-iteration window (0 disables early stopping — paper-style fixed
+    /// iteration counts).
+    pub tol: f64,
+    /// Worker threads; 0 = machine default.
+    pub threads: usize,
+    pub seed: u64,
+    /// Cache size C in bytes for the tile-size model (default 35 MB, the
+    /// paper's Xeon E5-2680 v4 LLC).
+    pub cache_bytes: usize,
+    /// Evaluate the relative objective every `record_every` iterations.
+    pub record_every: usize,
+    /// Directory with AOT artifacts (XLA engines only).
+    pub artifacts_dir: String,
+    /// Optional path to write the per-iteration trace as CSV.
+    pub trace_path: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "20news-small".into(),
+            k: 32,
+            tile: 0,
+            engine: EngineKind::PlNmf,
+            max_iters: 100,
+            tol: 0.0,
+            threads: 0,
+            seed: 42,
+            cache_bytes: 35 * 1024 * 1024,
+            record_every: 1,
+            artifacts_dir: "artifacts".into(),
+            trace_path: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON object; unknown keys are rejected (typo safety).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        let mut cfg = RunConfig::default();
+        for (k, v) in obj {
+            cfg.set(k, v).with_context(|| format!("config key '{k}'"))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&src).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply one `key = value` override (shared by JSON and CLI paths).
+    pub fn set(&mut self, key: &str, v: &Json) -> Result<()> {
+        let need_usize =
+            || v.as_usize().ok_or_else(|| anyhow!("expected non-negative integer, got {v}"));
+        let need_str = || v.as_str().ok_or_else(|| anyhow!("expected string, got {v}"));
+        match key {
+            "dataset" => self.dataset = need_str()?.to_string(),
+            "k" => self.k = need_usize()?,
+            "tile" | "t" => self.tile = need_usize()?,
+            "engine" => self.engine = EngineKind::from_str(need_str()?)?,
+            "max_iters" | "iters" => self.max_iters = need_usize()?,
+            "tol" => self.tol = v.as_f64().ok_or_else(|| anyhow!("expected number"))?,
+            "threads" => self.threads = need_usize()?,
+            "seed" => self.seed = v.as_u64().ok_or_else(|| anyhow!("expected integer"))?,
+            "cache_bytes" => self.cache_bytes = need_usize()?,
+            "record_every" => self.record_every = need_usize()?.max(1),
+            "artifacts_dir" => self.artifacts_dir = need_str()?.to_string(),
+            "trace_path" => {
+                self.trace_path =
+                    if v.is_null() { None } else { Some(need_str()?.to_string()) }
+            }
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Set from a CLI-style string value, inferring the JSON type.
+    pub fn set_str(&mut self, key: &str, value: &str) -> Result<()> {
+        let j = if let Ok(n) = value.parse::<f64>() {
+            Json::Num(n)
+        } else if value == "true" || value == "false" {
+            Json::Bool(value == "true")
+        } else {
+            Json::Str(value.to_string())
+        };
+        self.set(key, &j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(self.dataset.clone())),
+            ("k", Json::num(self.k as f64)),
+            ("tile", Json::num(self.tile as f64)),
+            ("engine", Json::str(self.engine.name())),
+            ("max_iters", Json::num(self.max_iters as f64)),
+            ("tol", Json::num(self.tol)),
+            ("threads", Json::num(self.threads as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("record_every", Json::num(self.record_every as f64)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+        ])
+    }
+
+    /// Sanity-check ranges that would otherwise fail deep inside engines.
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            bail!("k must be >= 1");
+        }
+        if self.tile > self.k {
+            bail!("tile ({}) must be <= k ({})", self.tile, self.k);
+        }
+        if self.max_iters == 0 {
+            bail!("max_iters must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.k = 80;
+        cfg.engine = EngineKind::Mu;
+        cfg.dataset = "pie".into();
+        let j = cfg.to_json();
+        let re = RunConfig::from_json(&j).unwrap();
+        assert_eq!(re.k, 80);
+        assert_eq!(re.engine, EngineKind::Mu);
+        assert_eq!(re.dataset, "pie");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"knob": 3}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn engine_aliases() {
+        assert_eq!(EngineKind::from_str("planc-hals").unwrap(), EngineKind::FastHals);
+        assert_eq!(EngineKind::from_str("PL-NMF").unwrap(), EngineKind::PlNmf);
+        assert_eq!(EngineKind::from_str("bionmf-mu").unwrap(), EngineKind::MuXla);
+        assert!(EngineKind::from_str("nope").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_tile() {
+        let mut cfg = RunConfig::default();
+        cfg.k = 8;
+        cfg.tile = 9;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn set_str_infers_types() {
+        let mut cfg = RunConfig::default();
+        cfg.set_str("k", "160").unwrap();
+        cfg.set_str("dataset", "tdt2").unwrap();
+        cfg.set_str("tol", "1e-4").unwrap();
+        assert_eq!(cfg.k, 160);
+        assert_eq!(cfg.dataset, "tdt2");
+        assert!((cfg.tol - 1e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! Run driver: config → dataset → pool → engine → convergence loop.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::config::{EngineKind, RunConfig};
+use crate::data::{load_dataset, Dataset};
+use crate::nmf::bpp::BppEngine;
+use crate::nmf::fasthals::FastHalsEngine;
+use crate::nmf::mu::MuEngine;
+use crate::nmf::mukl::MuKlEngine;
+use crate::nmf::plnmf::PlNmfEngine;
+use crate::nmf::{IterRecord, NmfEngine};
+use crate::parallel::{pool::default_threads, ThreadPool};
+use crate::runtime::engine::{MuXlaEngine, PlNmfXlaEngine};
+use crate::util::PhaseTimers;
+use crate::Result;
+
+/// Outcome of a full run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub engine: &'static str,
+    pub dataset: String,
+    pub k: usize,
+    pub tile: usize,
+    pub threads: usize,
+    pub trace: Vec<IterRecord>,
+    pub final_rel_error: f64,
+    /// Total step (update) time, excluding error evaluations.
+    pub total_step_secs: f64,
+    pub timers: PhaseTimers,
+}
+
+impl RunReport {
+    pub fn iters_run(&self) -> usize {
+        self.trace.last().map(|r| r.iter).unwrap_or(0)
+    }
+
+    pub fn secs_per_iter(&self) -> f64 {
+        let n = self.iters_run();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_step_secs / n as f64
+        }
+    }
+
+    /// First (time, iter) at which the trace reaches `target` error, if
+    /// it does — the Fig. 9 "time to matched quality" measurement.
+    pub fn time_to_error(&self, target: f64) -> Option<f64> {
+        self.trace.iter().find(|r| r.rel_error <= target).map(|r| r.elapsed_secs)
+    }
+}
+
+/// Instantiate an engine for `kind` on an already-loaded dataset.
+pub fn create_engine(
+    kind: EngineKind,
+    ds: Arc<Dataset>,
+    pool: Arc<ThreadPool>,
+    cfg: &RunConfig,
+) -> Result<Box<dyn NmfEngine>> {
+    Ok(match kind {
+        EngineKind::PlNmf => Box::new(PlNmfEngine::new(
+            ds,
+            pool,
+            cfg.k,
+            cfg.seed,
+            cfg.tile,
+            cfg.cache_bytes,
+        )),
+        EngineKind::FastHals => Box::new(FastHalsEngine::new(ds, pool, cfg.k, cfg.seed)),
+        EngineKind::Mu => Box::new(MuEngine::new(ds, pool, cfg.k, cfg.seed)),
+        EngineKind::MuKl => Box::new(MuKlEngine::new(ds, pool, cfg.k, cfg.seed)),
+        EngineKind::Bpp => Box::new(BppEngine::new(ds, pool, cfg.k, cfg.seed)),
+        EngineKind::PlNmfXla => Box::new(
+            PlNmfXlaEngine::new(ds, pool, cfg.k, cfg.seed, &cfg.artifacts_dir)
+                .context("creating plnmf-accel engine")?,
+        ),
+        EngineKind::MuXla => Box::new(
+            MuXlaEngine::new(ds, pool, cfg.k, cfg.seed, &cfg.artifacts_dir)
+                .context("creating mu-accel engine")?,
+        ),
+    })
+}
+
+/// A configured, ready-to-run NMF job.
+pub struct Driver {
+    cfg: RunConfig,
+    pub ds: Arc<Dataset>,
+    pub pool: Arc<ThreadPool>,
+    engine: Box<dyn NmfEngine>,
+}
+
+impl Driver {
+    pub fn from_config(cfg: &RunConfig) -> Result<Driver> {
+        cfg.validate()?;
+        let ds = Arc::new(load_dataset(&cfg.dataset, cfg.seed)?);
+        let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+        let pool = Arc::new(ThreadPool::new(threads));
+        Self::with_dataset(cfg, ds, pool)
+    }
+
+    /// Reuse an existing dataset/pool (the comparison runner and benches
+    /// share one dataset across engines).
+    pub fn with_dataset(cfg: &RunConfig, ds: Arc<Dataset>, pool: Arc<ThreadPool>) -> Result<Driver> {
+        let engine = create_engine(cfg.engine, ds.clone(), pool.clone(), cfg)?;
+        Ok(Driver { cfg: cfg.clone(), ds, pool, engine })
+    }
+
+    pub fn engine_mut(&mut self) -> &mut dyn NmfEngine {
+        self.engine.as_mut()
+    }
+
+    /// Run to completion per the config; returns the report and writes
+    /// the CSV trace if configured.
+    pub fn run(&mut self) -> Result<RunReport> {
+        crate::info!(
+            "run: engine={} dataset={} k={} iters={} threads={}",
+            self.engine.name(),
+            self.cfg.dataset,
+            self.cfg.k,
+            self.cfg.max_iters,
+            self.pool.n_threads()
+        );
+        let trace = self.engine.run(self.cfg.max_iters, self.cfg.record_every, self.cfg.tol)?;
+        let total_step_secs = trace.last().map(|r| r.elapsed_secs).unwrap_or(0.0);
+        let report = RunReport {
+            engine: self.engine.name(),
+            dataset: self.cfg.dataset.clone(),
+            k: self.cfg.k,
+            tile: self.cfg.tile,
+            threads: self.pool.n_threads(),
+            final_rel_error: trace.last().map(|r| r.rel_error).unwrap_or(f64::NAN),
+            trace,
+            total_step_secs,
+            timers: self.engine.timers().clone(),
+        };
+        if let Some(path) = &self.cfg.trace_path {
+            super::metrics::write_trace_csv(std::path::Path::new(path), &report)?;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(engine: EngineKind) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.dataset = "tiny".into();
+        c.k = 4;
+        c.max_iters = 10;
+        c.threads = 2;
+        c.engine = engine;
+        c
+    }
+
+    #[test]
+    fn driver_runs_all_native_engines() {
+        for kind in [EngineKind::PlNmf, EngineKind::FastHals, EngineKind::Mu, EngineKind::Bpp] {
+            let mut d = Driver::from_config(&cfg(kind)).unwrap();
+            let report = d.run().unwrap();
+            assert_eq!(report.engine, kind.name());
+            assert!(report.final_rel_error.is_finite());
+            assert!(report.final_rel_error < report.trace[0].rel_error);
+            assert_eq!(report.iters_run(), 10);
+            assert!(report.secs_per_iter() > 0.0);
+        }
+    }
+
+    #[test]
+    fn time_to_error_is_monotone_lookup() {
+        let mut d = Driver::from_config(&cfg(EngineKind::PlNmf)).unwrap();
+        let report = d.run().unwrap();
+        let final_err = report.final_rel_error;
+        assert!(report.time_to_error(final_err).is_some());
+        assert!(report.time_to_error(0.0).is_none());
+        assert_eq!(report.time_to_error(1.0), Some(0.0)); // iter-0 record
+    }
+
+    #[test]
+    fn trace_csv_written() {
+        let mut c = cfg(EngineKind::FastHals);
+        let path = std::env::temp_dir().join(format!("plnmf-trace-{}.csv", std::process::id()));
+        c.trace_path = Some(path.to_str().unwrap().to_string());
+        Driver::from_config(&c).unwrap().run().unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("iter,elapsed_secs,rel_error"));
+        assert!(body.lines().count() >= 11);
+        std::fs::remove_file(path).ok();
+    }
+}

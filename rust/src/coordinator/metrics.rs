@@ -1,0 +1,114 @@
+//! Run metrics output: CSV traces (the figures' raw data) and rendered
+//! summary tables.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::Result;
+
+use super::driver::RunReport;
+
+/// Write a convergence trace as CSV (`iter,elapsed_secs,rel_error`).
+pub fn write_trace_csv(path: &Path, report: &RunReport) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "iter,elapsed_secs,rel_error")?;
+    for r in &report.trace {
+        writeln!(w, "{},{:.6},{:.8}", r.iter, r.elapsed_secs, r.rel_error)?;
+    }
+    Ok(())
+}
+
+/// Write several engines' traces into one long-format CSV
+/// (`engine,dataset,k,iter,elapsed_secs,rel_error`) — the raw data for
+/// Figs. 7 and 8.
+pub fn write_comparison_csv(path: &Path, reports: &[RunReport]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "engine,dataset,k,iter,elapsed_secs,rel_error")?;
+    for rep in reports {
+        for r in &rep.trace {
+            writeln!(
+                w,
+                "{},{},{},{},{:.6},{:.8}",
+                rep.engine, rep.dataset, rep.k, r.iter, r.elapsed_secs, r.rel_error
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// A fixed-width summary table of reports (final error, time, per-iter).
+pub fn summary_table(reports: &[RunReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<14} {:>4} {:>9} {:>12} {:>12} {:>12}\n",
+        "engine", "dataset", "k", "iters", "final err", "total s", "s/iter"
+    ));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<14} {:<14} {:>4} {:>9} {:>12.6} {:>12.3} {:>12.4}\n",
+            r.engine,
+            r.dataset,
+            r.k,
+            r.iters_run(),
+            r.final_rel_error,
+            r.total_step_secs,
+            r.secs_per_iter()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::IterRecord;
+    use crate::util::PhaseTimers;
+
+    fn fake_report(engine: &'static str) -> RunReport {
+        RunReport {
+            engine,
+            dataset: "tiny".into(),
+            k: 4,
+            tile: 2,
+            threads: 2,
+            trace: vec![
+                IterRecord { iter: 0, elapsed_secs: 0.0, rel_error: 0.9 },
+                IterRecord { iter: 1, elapsed_secs: 0.5, rel_error: 0.5 },
+            ],
+            final_rel_error: 0.5,
+            total_step_secs: 0.5,
+            timers: PhaseTimers::new(),
+        }
+    }
+
+    #[test]
+    fn comparison_csv_long_format() {
+        let p = std::env::temp_dir().join(format!("plnmf-cmp-{}.csv", std::process::id()));
+        write_comparison_csv(&p, &[fake_report("a"), fake_report("b")]).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body.lines().count(), 5);
+        assert!(body.contains("a,tiny,4,1,0.500000,0.50000000"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn summary_contains_all_engines() {
+        let s = summary_table(&[fake_report("plnmf-cpu"), fake_report("mu-cpu")]);
+        assert!(s.contains("plnmf-cpu"));
+        assert!(s.contains("mu-cpu"));
+    }
+}

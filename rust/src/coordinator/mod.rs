@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the leader process that owns dataset lifecycle,
+//! the worker pool, engine selection (native vs PJRT-backed), the
+//! convergence loop, and metrics.
+//!
+//! The PL-NMF paper's "system" is a shared-memory parallel runtime; the
+//! pieces here correspond to it directly:
+//!
+//! * [`driver`] — builds a run from a [`RunConfig`](crate::config::RunConfig)
+//!   (dataset → pool → engine) and executes the iterate/record loop.
+//! * [`comparison`] — runs several engines from the *same* random init on
+//!   the same dataset (the paper's Figs. 7–9 protocol).
+//! * [`shard`] — nnz-balanced row partitioning for the skewed (Zipf)
+//!   sparse datasets; used by the performance pass to pin static shards.
+//! * [`metrics`] — trace/CSV output and timer tables.
+
+pub mod driver;
+pub mod comparison;
+pub mod shard;
+pub mod metrics;
+
+pub use driver::{create_engine, Driver, RunReport};

@@ -1,0 +1,16 @@
+//! Dataset handling: synthetic generators matched to the paper's Table 4
+//! statistics, plus loading real matrices from MatrixMarket files.
+//!
+//! The paper's corpora (20 Newsgroups, TDT2, Reuters) and face datasets
+//! (AT&T, PIE) sit behind URLs unreachable offline, so each profile drives
+//! a generator that reproduces the characteristics the algorithms are
+//! sensitive to: dimensions, nnz/sparsity, the Zipf rank-frequency decay
+//! of bag-of-words data, and (for the dense sets) approximate low-rank
+//! structure so error curves decay meaningfully. See DESIGN.md §5.
+
+pub mod datasets;
+pub mod text;
+pub mod image;
+pub mod stats;
+
+pub use datasets::{load_dataset, DataMatrix, Dataset};

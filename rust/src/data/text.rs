@@ -1,0 +1,193 @@
+//! Synthetic bag-of-words corpus with Zipf-distributed word marginals.
+//!
+//! Real document-term matrices have (i) a power-law word frequency
+//! distribution, (ii) log-normal document lengths, and (iii) term
+//! frequencies ≥ 1 with a heavy tail. All three shape NMF behaviour: the
+//! Zipf head gives dense rows (load imbalance for SpMM — why our SpMM is
+//! dynamically scheduled) and the tf values give non-trivial convergence
+//! curves. The generator hits the profile's NNZ *exactly* by assigning
+//! per-document distinct-term budgets with largest-remainder rounding.
+
+use crate::sparse::Csr;
+use crate::util::rng::Pcg32;
+use crate::Elem;
+
+/// Generate a `v × d` document-term matrix (rows = vocabulary) with
+/// exactly `nnz` stored entries, Zipf exponent `s`.
+pub fn generate_corpus(v: usize, d: usize, nnz: usize, s: f64, seed: u64) -> Csr {
+    assert!(nnz >= d, "need at least one term per document");
+    assert!(nnz <= v * d, "nnz exceeds capacity");
+    let mut rng = Pcg32::new(seed, 1001);
+
+    // --- per-document distinct-term budgets, summing exactly to nnz -----
+    let lens = doc_lengths(d, nnz, v, &mut rng);
+
+    // --- Zipf inverse-CDF table over the vocabulary ----------------------
+    let cdf = zipf_cdf(v, s);
+
+    // --- sample each document's terms ------------------------------------
+    // Per-document RNG streams keep generation deterministic regardless of
+    // any future parallelization of this loop.
+    let mut triplets: Vec<(usize, usize, Elem)> = Vec::with_capacity(nnz);
+    for (doc, &len) in lens.iter().enumerate() {
+        let mut drng = Pcg32::new(seed ^ 0x9e3779b97f4a7c15, 2_000_000 + doc as u64);
+        // Collect `len` distinct words; duplicates bump term frequency.
+        let mut counts: std::collections::BTreeMap<usize, u32> = std::collections::BTreeMap::new();
+        let mut guard = 0usize;
+        while counts.len() < len {
+            let w = zipf_sample(&cdf, &mut drng);
+            *counts.entry(w).or_insert(0) += 1;
+            guard += 1;
+            if guard > 50 * len + 1000 {
+                // Zipf head saturated (tiny vocabularies): fall back to
+                // uniform tail sampling for the remainder.
+                let mut w = drng.below(v as u32) as usize;
+                while counts.contains_key(&w) {
+                    w = (w + 1) % v;
+                }
+                counts.insert(w, 1);
+            }
+        }
+        // tf-like weighting: log-scaled counts, as in standard tf encodings.
+        for (w, c) in counts {
+            let tf = 1.0 + (c as f32).ln();
+            triplets.push((w, doc, tf));
+        }
+    }
+    debug_assert_eq!(triplets.len(), nnz);
+    Csr::from_triplets(v, d, triplets)
+}
+
+/// Log-normal per-document distinct-term budgets, clamped to `[1, v]`,
+/// rescaled to sum exactly to `nnz` (largest remainder method).
+fn doc_lengths(d: usize, nnz: usize, v: usize, rng: &mut Pcg32) -> Vec<usize> {
+    let raw: Vec<f64> = (0..d).map(|_| rng.next_lognormal(0.0, 0.6)).collect();
+    let sum: f64 = raw.iter().sum();
+    let scale = nnz as f64 / sum;
+    // Floor + remainders.
+    let mut lens: Vec<usize> = Vec::with_capacity(d);
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(d);
+    let mut total = 0usize;
+    for (i, &x) in raw.iter().enumerate() {
+        let t = (x * scale).max(1.0).min(v as f64);
+        let fl = t.floor() as usize;
+        lens.push(fl);
+        total += fl;
+        fracs.push((t - fl as f64, i));
+    }
+    // Distribute the remainder to the largest fractional parts.
+    if total < nnz {
+        let mut need = nnz - total;
+        fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut cursor = 0;
+        while need > 0 {
+            let (_, i) = fracs[cursor % fracs.len()];
+            if lens[i] < v {
+                lens[i] += 1;
+                need -= 1;
+            }
+            cursor += 1;
+            assert!(cursor < 100 * fracs.len() + 100, "cannot place nnz within v*d bounds");
+        }
+    } else if total > nnz {
+        let mut excess = total - nnz;
+        let mut cursor = 0;
+        while excess > 0 {
+            let i = cursor % d;
+            if lens[i] > 1 {
+                lens[i] -= 1;
+                excess -= 1;
+            }
+            cursor += 1;
+        }
+    }
+    debug_assert_eq!(lens.iter().sum::<usize>(), nnz);
+    lens
+}
+
+/// Cumulative Zipf(s) weights over ranks `1..=v`, normalized to 1.
+fn zipf_cdf(v: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(v);
+    let mut acc = 0.0;
+    for r in 1..=v {
+        acc += 1.0 / (r as f64).powf(s);
+        cdf.push(acc);
+    }
+    let z = acc;
+    for x in &mut cdf {
+        *x /= z;
+    }
+    cdf
+}
+
+/// Inverse-CDF sample (binary search).
+#[inline]
+fn zipf_sample(cdf: &[f64], rng: &mut Pcg32) -> usize {
+    let u = rng.next_f64();
+    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) => i,
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_nnz_and_dims() {
+        let a = generate_corpus(500, 80, 2000, 1.07, 7);
+        assert_eq!(a.rows(), 500);
+        assert_eq!(a.cols(), 80);
+        assert_eq!(a.nnz(), 2000);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_corpus(200, 40, 800, 1.1, 3);
+        let b = generate_corpus(200, 40, 800, 1.1, 3);
+        assert_eq!(a, b);
+        let c = generate_corpus(200, 40, 800, 1.1, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn all_values_positive() {
+        let a = generate_corpus(300, 50, 1500, 1.07, 11);
+        let d = a.to_dense();
+        assert!(d.data().iter().all(|&x| x >= 0.0));
+        assert!(d.data().iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn zipf_head_is_heavier() {
+        // Row (word) frequencies should be strongly rank-skewed: the top
+        // 1% of words should hold far more than 1% of the nnz.
+        let v = 1000;
+        let a = generate_corpus(v, 200, 10_000, 1.07, 5);
+        let mut row_nnz: Vec<usize> =
+            (0..v).map(|i| a.row(i).0.len()).collect();
+        row_nnz.sort_unstable_by(|x, y| y.cmp(x));
+        let head: usize = row_nnz[..v / 100].iter().sum();
+        assert!(
+            head as f64 > 0.05 * 10_000.0,
+            "top-1% words hold {head} nnz — not Zipf-like"
+        );
+    }
+
+    #[test]
+    fn every_document_nonempty() {
+        let a = generate_corpus(100, 60, 300, 1.1, 9);
+        let at = a.transposed();
+        for dcol in 0..60 {
+            assert!(!at.row(dcol).0.is_empty(), "document {dcol} empty");
+        }
+    }
+
+    #[test]
+    fn tiny_vocab_fallback_terminates() {
+        // v small enough that the Zipf head saturates: fallback must fill.
+        let a = generate_corpus(10, 5, 40, 1.5, 1);
+        assert_eq!(a.nnz(), 40);
+    }
+}

@@ -1,0 +1,60 @@
+//! # PL-NMF: Parallel Locality-Optimized Non-negative Matrix Factorization
+//!
+//! A full reproduction of Moon et al., *PL-NMF: Parallel Locality-Optimized
+//! Non-negative Matrix Factorization* (2019), built as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the parallel coordinator: dataset handling,
+//!   the leader/worker shared-memory runtime, the native-rust NMF engines
+//!   (FAST-HALS, PL-NMF tiled, MU, ANLS-BPP), the PJRT runtime that executes
+//!   AOT-compiled update graphs, and the benchmark harness that regenerates
+//!   every table and figure of the paper's evaluation.
+//! * **Layer 2** — `python/compile/model.py`: the PL-NMF / baseline update
+//!   steps expressed in JAX, lowered once to HLO text (`make artifacts`).
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for the panel
+//!   GEMMs (phases 1/3) and the in-tile sequential column update (phase 2),
+//!   mirroring Algorithms 2–5 of the paper.
+//!
+//! Python never runs on the request path: the `plnmf` binary is
+//! self-contained once `artifacts/` exist.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use plnmf::config::RunConfig;
+//! use plnmf::coordinator::Driver;
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.dataset = "20news-small".into();
+//! cfg.k = 32;
+//! cfg.max_iters = 50;
+//! let report = Driver::from_config(&cfg).unwrap().run().unwrap();
+//! println!("final relative error: {}", report.final_rel_error);
+//! ```
+
+pub mod util;
+pub mod parallel;
+pub mod config;
+pub mod linalg;
+pub mod sparse;
+pub mod data;
+pub mod nmf;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod testing;
+pub mod cli;
+
+/// Library-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The floating point element type used throughout the library.
+///
+/// The paper's CPU code is double precision (dgemm); we use `f32` so the
+/// native engines are bit-comparable with the XLA/Pallas path (TPUs are
+/// f32/bf16 machines). Reductions that are sensitive to accumulation
+/// order (column norms, objective values) accumulate in `f64`.
+pub type Elem = f32;
+
+/// The ε floor of the non-negativity projection `max(ε, ·)` (Alg. 1).
+pub const EPS: Elem = 1e-16;

@@ -1,0 +1,325 @@
+//! Row-major dense matrix and borrowed views.
+
+use crate::util::rng::Pcg32;
+use crate::Elem;
+
+/// Owned row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<Elem>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> Elem) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Elem>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Uniform random entries in `[lo, hi)` — NMF factor initialization
+    /// (Alg. 1 line 1 “random non-negative numbers”).
+    pub fn random(rows: usize, cols: usize, rng: &mut Pcg32, lo: Elem, hi: Elem) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for x in &mut m.data {
+            *x = rng.range_f32(lo, hi);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> Elem {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut Elem {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[Elem] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [Elem] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[Elem] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [Elem] {
+        &mut self.data
+    }
+
+    pub fn fill(&mut self, x: Elem) {
+        self.data.fill(x);
+    }
+
+    pub fn copy_from(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Full-matrix immutable view.
+    pub fn view(&self) -> View<'_> {
+        View { data: &self.data, rows: self.rows, cols: self.cols, rs: self.cols, off: 0 }
+    }
+
+    /// View of a contiguous column range `[c0, c1)`.
+    pub fn col_view(&self, c0: usize, c1: usize) -> View<'_> {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        View { data: &self.data, rows: self.rows, cols: c1 - c0, rs: self.cols, off: c0 }
+    }
+
+    /// View of a row range × column range.
+    pub fn block_view(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> View<'_> {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        View {
+            data: &self.data,
+            rows: r1 - r0,
+            cols: c1 - c0,
+            rs: self.cols,
+            off: r0 * self.cols + c0,
+        }
+    }
+
+    pub fn view_mut(&mut self) -> ViewMut<'_> {
+        let (rows, cols) = (self.rows, self.cols);
+        ViewMut { data: &mut self.data, rows, cols, rs: cols, off: 0 }
+    }
+
+    pub fn col_view_mut(&mut self, c0: usize, c1: usize) -> ViewMut<'_> {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let (rows, cols) = (self.rows, self.cols);
+        ViewMut { data: &mut self.data, rows, cols: c1 - c0, rs: cols, off: c0 }
+    }
+
+    pub fn block_view_mut(&mut self, r0: usize, r1: usize, c0: usize, c1: usize) -> ViewMut<'_> {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let cols = self.cols;
+        ViewMut {
+            data: &mut self.data,
+            rows: r1 - r0,
+            cols: c1 - c0,
+            rs: cols,
+            off: r0 * cols + c0,
+        }
+    }
+
+    /// Out-of-place transpose (used once at load time: `At = Aᵀ` so both
+    /// `A·H` and `Aᵀ·W` run as row-parallel NN products; planc keeps the
+    /// same pair).
+    pub fn transposed(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked to keep both source rows and destination rows in cache.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Squared Frobenius norm with f64 accumulation.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64 * x as f64).sum()
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Borrowed strided view (row stride `rs`, linear offset `off`).
+#[derive(Clone, Copy, Debug)]
+pub struct View<'a> {
+    pub data: &'a [Elem],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+    pub off: usize,
+}
+
+impl<'a> View<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> Elem {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[self.off + i * self.rs + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [Elem] {
+        let start = self.off + i * self.rs;
+        &self.data[start..start + self.cols]
+    }
+}
+
+/// Mutable strided view.
+#[derive(Debug)]
+pub struct ViewMut<'a> {
+    pub data: &'a mut [Elem],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+    pub off: usize,
+}
+
+impl<'a> ViewMut<'a> {
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut Elem {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[self.off + i * self.rs + j]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [Elem] {
+        let start = self.off + i * self.rs;
+        &mut self.data[start..start + self.cols]
+    }
+
+    /// Raw base pointer + geometry, for disjoint-row parallel writes.
+    pub(crate) fn raw(&mut self) -> RawViewMut {
+        RawViewMut {
+            ptr: self.data.as_mut_ptr(),
+            len: self.data.len(),
+            rows: self.rows,
+            cols: self.cols,
+            rs: self.rs,
+            off: self.off,
+        }
+    }
+}
+
+/// Unsafe escape hatch: workers write disjoint row ranges of the same
+/// view concurrently (GEMM row-parallelism).
+#[derive(Clone, Copy)]
+pub(crate) struct RawViewMut {
+    ptr: *mut Elem,
+    len: usize,
+    pub rows: usize,
+    pub cols: usize,
+    rs: usize,
+    off: usize,
+}
+
+unsafe impl Send for RawViewMut {}
+unsafe impl Sync for RawViewMut {}
+
+impl RawViewMut {
+    /// Mutable row slice. Caller must guarantee row-disjoint access.
+    #[inline]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [Elem] {
+        debug_assert!(i < self.rows);
+        let start = self.off + i * self.rs;
+        debug_assert!(start + self.cols <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = Mat::from_fn(3, 4, |i, j| (10 * i + j) as Elem);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn views_are_windows() {
+        let m = Mat::from_fn(4, 6, |i, j| (i * 6 + j) as Elem);
+        let v = m.col_view(2, 5);
+        assert_eq!(v.rows, 4);
+        assert_eq!(v.cols, 3);
+        assert_eq!(v.at(1, 0), m.at(1, 2));
+        assert_eq!(v.row(2), &[14.0, 15.0, 16.0]);
+        let b = m.block_view(1, 3, 2, 4);
+        assert_eq!(b.at(0, 0), m.at(1, 2));
+        assert_eq!(b.at(1, 1), m.at(2, 3));
+    }
+
+    #[test]
+    fn view_mut_writes_through() {
+        let mut m = Mat::zeros(3, 3);
+        {
+            let mut v = m.col_view_mut(1, 3);
+            *v.at_mut(0, 0) = 5.0;
+            v.row_mut(2).copy_from_slice(&[7.0, 8.0]);
+        }
+        assert_eq!(m.at(0, 1), 5.0);
+        assert_eq!(m.at(2, 1), 7.0);
+        assert_eq!(m.at(2, 2), 8.0);
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::random(37, 53, &mut rng, 0.0, 1.0);
+        let t = m.transposed();
+        assert_eq!(t.rows(), 53);
+        assert_eq!(t.cols(), 37);
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                assert_eq!(m.at(i, j), t.at(j, i));
+            }
+        }
+        assert_eq!(t.transposed(), m);
+    }
+
+    #[test]
+    fn fro2_matches_manual() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((m.fro2() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_within_bounds() {
+        let mut rng = Pcg32::seeded(2);
+        let m = Mat::random(10, 10, &mut rng, 0.5, 1.5);
+        assert!(m.data().iter().all(|&x| (0.5..1.5).contains(&x)));
+    }
+}

@@ -1,0 +1,183 @@
+//! Gram matrices: `G = Xᵀ·X` for a tall-skinny `X` (n×k).
+//!
+//! Alg. 1 computes `S = WᵀW` and `Q = HHᵀ` every iteration; with our
+//! storage convention (H held transposed, D×K) both are Grams of n×k
+//! matrices with k ≤ 240. Parallelized as per-worker partial Grams over
+//! row shards + deterministic combine — the same partial/combine shape the
+//! coordinator uses across shards, and the CPU analogue of the paper's
+//! reduction tree.
+
+use super::dense::Mat;
+use crate::parallel::{reduce, ThreadPool};
+use crate::Elem;
+
+/// Rows per f32 accumulation block. Entries are O(1) (factors live in
+/// [ε, ~255]), so a 128-row f32 partial stays well inside f32's exact
+/// range; block partials are folded in f64. This keeps the hot loop in
+/// 8-wide f32 FMA instead of f64 (measured 2.6→7+ GFLOP/s on the
+/// 20news K=240 Gram — see EXPERIMENTS.md §Perf).
+const F32_BLOCK: usize = 128;
+
+/// `G = Xᵀ·X` (k×k, symmetric). f32 FMA inner loop, f64 block folds.
+pub fn gram(pool: &ThreadPool, x: &Mat) -> Mat {
+    let k = x.cols();
+    let partial = reduce(
+        pool,
+        x.rows(),
+        |r| {
+            let mut acc = vec![0.0f64; k * k];
+            let mut block = vec![0.0f32; k * k];
+            let mut in_block = 0usize;
+            let mut i = r.start;
+            while i < r.end {
+                if i + 1 < r.end {
+                    // Row pair: one accumulator pass serves two rows
+                    // (halves the dominant dst load/store traffic).
+                    gram_accumulate_rows2_f32(&mut block, x.row(i), x.row(i + 1), k);
+                    i += 2;
+                    in_block += 2;
+                } else {
+                    gram_accumulate_row_f32(&mut block, x.row(i), k);
+                    i += 1;
+                    in_block += 1;
+                }
+                if in_block >= F32_BLOCK {
+                    fold_block(&mut acc, &mut block);
+                    in_block = 0;
+                }
+            }
+            if in_block > 0 {
+                fold_block(&mut acc, &mut block);
+            }
+            acc
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += *y;
+            }
+            a
+        },
+    )
+    .unwrap_or_else(|| vec![0.0f64; k * k]);
+
+    let mut g = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            let v = partial[i * k + j] as Elem;
+            *g.at_mut(i, j) = v;
+            *g.at_mut(j, i) = v;
+        }
+    }
+    g
+}
+
+/// Accumulate the upper triangle of `row ⊗ row` into `acc` (k×k, f32).
+#[inline]
+fn gram_accumulate_row_f32(acc: &mut [f32], row: &[Elem], k: usize) {
+    for i in 0..k {
+        let xi = row[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let dst = &mut acc[i * k + i..i * k + k];
+        let src = &row[i..k];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += xi * s;
+        }
+    }
+}
+
+/// Two-row variant: `acc += r0 ⊗ r0 + r1 ⊗ r1` in one pass over the
+/// upper triangle.
+#[inline]
+fn gram_accumulate_rows2_f32(acc: &mut [f32], r0: &[Elem], r1: &[Elem], k: usize) {
+    for i in 0..k {
+        let a0 = r0[i];
+        let a1 = r1[i];
+        if a0 == 0.0 && a1 == 0.0 {
+            continue;
+        }
+        let dst = &mut acc[i * k + i..i * k + k];
+        let s0 = &r0[i..k];
+        let s1 = &r1[i..k];
+        for ((d, &x0), &x1) in dst.iter_mut().zip(s0).zip(s1) {
+            *d += a0 * x0 + a1 * x1;
+        }
+    }
+}
+
+/// Fold a f32 block partial into the f64 accumulator and clear it.
+#[inline]
+fn fold_block(acc: &mut [f64], block: &mut [f32]) {
+    for (a, b) in acc.iter_mut().zip(block.iter_mut()) {
+        *a += *b as f64;
+        *b = 0.0;
+    }
+}
+
+/// Serial reference for testing.
+pub fn gram_naive(x: &Mat) -> Mat {
+    let k = x.cols();
+    let mut g = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in 0..k {
+            let mut s = 0.0f64;
+            for r in 0..x.rows() {
+                s += x.at(r, i) as f64 * x.at(r, j) as f64;
+            }
+            *g.at_mut(i, j) = s as Elem;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matches_naive() {
+        let pool = ThreadPool::new(4);
+        let mut rng = Pcg32::seeded(3);
+        for &(n, k) in &[(1, 1), (10, 3), (257, 16), (1000, 33)] {
+            let x = Mat::random(n, k, &mut rng, -1.0, 1.0);
+            let g = gram(&pool, &x);
+            let gn = gram_naive(&x);
+            assert!(g.max_abs_diff(&gn) < 1e-3, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn symmetric_and_psd_diagonal() {
+        let pool = ThreadPool::new(3);
+        let mut rng = Pcg32::seeded(4);
+        let x = Mat::random(100, 8, &mut rng, -2.0, 2.0);
+        let g = gram(&pool, &x);
+        for i in 0..8 {
+            assert!(g.at(i, i) >= 0.0);
+            for j in 0..8 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let pool = ThreadPool::new(7);
+        let mut rng = Pcg32::seeded(5);
+        let x = Mat::random(503, 24, &mut rng, 0.0, 1.0);
+        let g1 = gram(&pool, &x);
+        let g2 = gram(&pool, &x);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn zero_rows() {
+        let pool = ThreadPool::new(2);
+        let x = Mat::zeros(0, 5);
+        let g = gram(&pool, &x);
+        assert_eq!(g.rows(), 5);
+        assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate (the role MKL's `cblas_dgemm` plays in
+//! the paper's implementation).
+//!
+//! Everything is `f32` row-major. The engines work on three shapes:
+//! tall-skinny factors (`V×K`, `D×K`), small square Grams (`K×K`), and the
+//! data matrix (`V×D`, dense datasets only). The GEMMs that matter are
+//! panel×small (phases 1/3) and tall×tall-skinny (P = A·H), both served by
+//! the blocked, thread-parallel [`gemm`] on strided views.
+
+pub mod dense;
+pub mod gemm;
+pub mod gram;
+pub mod vector;
+
+pub use dense::{Mat, View, ViewMut};
+pub use gemm::{gemm, gemm_serial, GemmOp};
+pub use gram::gram;

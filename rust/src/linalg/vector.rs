@@ -1,0 +1,105 @@
+//! Small vector kernels used by the engines' inner loops.
+
+use crate::Elem;
+
+/// `y += a * x` over contiguous slices (auto-vectorized).
+#[inline]
+pub fn axpy(a: Elem, x: &[Elem], y: &mut [Elem]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product with f32 accumulation (hot loop; callers that need
+/// deterministic high precision use [`dot_f64`]).
+#[inline]
+pub fn dot(x: &[Elem], y: &[Elem]) -> Elem {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
+/// Dot product accumulated in f64.
+#[inline]
+pub fn dot_f64(x: &[Elem], y: &[Elem]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0f64;
+    for (&a, &b) in x.iter().zip(y) {
+        s += a as f64 * b as f64;
+    }
+    s
+}
+
+/// Sum of squares in f64 (column norms, objective pieces).
+#[inline]
+pub fn nrm2_sq(x: &[Elem]) -> f64 {
+    let mut s = 0.0f64;
+    for &a in x {
+        s += a as f64 * a as f64;
+    }
+    s
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(a: Elem, x: &mut [Elem]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// Elementwise `max(eps, ·)` — the non-negativity projection of Alg. 1.
+#[inline]
+pub fn clamp_eps(eps: Elem, x: &mut [Elem]) {
+    for xi in x {
+        if *xi < eps {
+            *xi = eps;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn dots_agree() {
+        let x: Vec<Elem> = (0..100).map(|i| i as Elem * 0.01).collect();
+        let y: Vec<Elem> = (0..100).map(|i| (100 - i) as Elem * 0.02).collect();
+        let a = dot(&x, &y) as f64;
+        let b = dot_f64(&x, &y);
+        assert!((a - b).abs() < 1e-3);
+    }
+
+    #[test]
+    fn nrm2_sq_known() {
+        assert!((nrm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_floors_values() {
+        let mut x = [-1.0, 0.0, 0.5, 2.0];
+        clamp_eps(1e-16, &mut x);
+        assert!(x.iter().all(|&v| v >= 1e-16));
+        assert_eq!(x[3], 2.0);
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let mut x = [1.0, -2.0];
+        scale(-0.5, &mut x);
+        assert_eq!(x, [-0.5, 1.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! `plnmf` — leader entrypoint / CLI for the PL-NMF reproduction.
+//!
+//! Subcommand dispatch lives in `plnmf::bench::cli_main` so the examples
+//! and integration tests can drive the exact same code paths.
+//! See `plnmf help` for the command list.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    plnmf::util::logging::init_from_env();
+    let args = plnmf::cli::Args::from_env()?;
+    plnmf::bench::cli_main(args)
+}

@@ -1,0 +1,148 @@
+//! The evaluation metric: relative objective
+//! `√(‖A − WH‖²_F / ‖A‖²_F)` (Kim & Park, used by the paper's §6.2.2).
+//!
+//! Never materializes the V×D product. Expanding the square:
+//!
+//! ```text
+//! ‖A − WH‖² = ‖A‖² − 2·⟨P, W⟩ + ⟨Q, S⟩
+//!   P = A·Hᵀ (V×K, the same product the W update needs)
+//!   Q = HHᵀ,  S = WᵀW  (K×K Grams)
+//!   ⟨X, Y⟩ = Σᵢⱼ XᵢⱼYᵢⱼ
+//! ```
+//!
+//! Cost: one SpMM/GEMM + two Grams — O(nnz·K + (V+D)K²) instead of
+//! O(V·D·K).
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::parallel::{reduce, ThreadPool};
+
+use super::products;
+
+/// Compute the relative objective for factors `(w, h)` (h in D×K layout).
+pub fn rel_error(pool: &ThreadPool, ds: &Dataset, w: &Mat, h: &Mat) -> f64 {
+    let k = w.cols();
+    assert_eq!(h.cols(), k);
+    let mut p = Mat::zeros(ds.v(), k);
+    products::a_times(pool, ds, h, &mut p);
+    rel_error_with_p(pool, ds, w, h, &p)
+}
+
+/// Variant reusing an already-computed `P = A·H` (the engines have one).
+pub fn rel_error_with_p(pool: &ThreadPool, ds: &Dataset, w: &Mat, h: &Mat, p: &Mat) -> f64 {
+    let q = products::factor_gram(pool, h);
+    let s = products::factor_gram(pool, w);
+
+    let pw = frobenius_inner(pool, p, w);
+    let qs = frobenius_inner(pool, &q, &s);
+
+    let num = (ds.fro2 - 2.0 * pw + qs).max(0.0);
+    (num / ds.fro2).sqrt()
+}
+
+/// `Σᵢⱼ XᵢⱼYᵢⱼ` with f64 accumulation, row-parallel.
+pub fn frobenius_inner(pool: &ThreadPool, x: &Mat, y: &Mat) -> f64 {
+    assert_eq!((x.rows(), x.cols()), (y.rows(), y.cols()));
+    reduce(
+        pool,
+        x.rows(),
+        |rows| {
+            let mut s = 0.0f64;
+            for i in rows {
+                for (&a, &b) in x.row(i).iter().zip(y.row(i)) {
+                    s += a as f64 * b as f64;
+                }
+            }
+            s
+        },
+        |a, b| a + b,
+    )
+    .unwrap_or(0.0)
+}
+
+/// Naive reference: materializes WH (tests / tiny problems only).
+pub fn rel_error_naive(ds: &Dataset, w: &Mat, h: &Mat) -> f64 {
+    let a = match &ds.a {
+        crate::data::DataMatrix::Sparse(m) => m.to_dense(),
+        crate::data::DataMatrix::Dense(m) => m.clone(),
+    };
+    let mut num = 0.0f64;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let mut wh = 0.0f64;
+            for t in 0..w.cols() {
+                wh += w.at(i, t) as f64 * h.at(j, t) as f64;
+            }
+            let d = a.at(i, j) as f64 - wh;
+            num += d * d;
+        }
+    }
+    (num / ds.fro2).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+    use crate::nmf::Factors;
+
+    #[test]
+    fn gram_trick_matches_naive() {
+        let pool = ThreadPool::new(3);
+        for name in ["tiny", "tiny-sparse"] {
+            let ds = load_dataset(name, 3).unwrap();
+            let f = Factors::random(ds.v(), ds.d(), 4, 11);
+            let fast = rel_error(&pool, &ds, &f.w, &f.h);
+            let slow = rel_error_naive(&ds, &f.w, &f.h);
+            assert!(
+                (fast - slow).abs() < 1e-4,
+                "{name}: gram-trick {fast} vs naive {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_factors_give_error_one() {
+        let pool = ThreadPool::new(2);
+        let ds = load_dataset("tiny", 1).unwrap();
+        let w = Mat::zeros(ds.v(), 3);
+        let h = Mat::zeros(ds.d(), 3);
+        let e = rel_error(&pool, &ds, &w, &h);
+        assert!((e - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_factorization_gives_zero() {
+        // Build A = W·Hᵀ exactly, then error must be ~0.
+        let pool = ThreadPool::new(2);
+        let f = Factors::random(20, 15, 3, 5);
+        let mut a = Mat::zeros(20, 15);
+        for i in 0..20 {
+            for j in 0..15 {
+                let mut s = 0.0;
+                for t in 0..3 {
+                    s += f.w.at(i, t) * f.h.at(j, t);
+                }
+                *a.at_mut(i, j) = s;
+            }
+        }
+        let at = a.transposed();
+        let fro2 = a.fro2();
+        let ds = Dataset {
+            profile: crate::config::dataset_profile("tiny").unwrap(),
+            a: crate::data::DataMatrix::Dense(a),
+            at: crate::data::DataMatrix::Dense(at),
+            fro2,
+        };
+        let e = rel_error(&pool, &ds, &f.w, &f.h);
+        assert!(e < 1e-3, "error {e}");
+    }
+
+    #[test]
+    fn frobenius_inner_known() {
+        let pool = ThreadPool::new(2);
+        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert!((frobenius_inner(&pool, &x, &y) - 70.0).abs() < 1e-9);
+    }
+}

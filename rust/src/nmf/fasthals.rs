@@ -1,0 +1,137 @@
+//! Naive FAST-HALS engine (Alg. 1 verbatim) — the `planc-HALS-cpu`
+//! baseline of Figs. 7–9 and the “Sequential FAST-HALS NMF” column of
+//! Table 5.
+//!
+//! Timer keys: `spmm_r`, `gram_s`, `h_dmv` (H update);
+//! `spmm_p`, `gram_q`, `w_dmv` (W update).
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
+use crate::util::PhaseTimers;
+use crate::Result;
+
+use super::halsops::{update_naive, UpdateKind};
+use super::products;
+use super::traits::{EngineCtx, NmfEngine};
+use super::Factors;
+
+pub struct FastHalsEngine {
+    ctx: EngineCtx,
+    r: Mat,
+    p: Mat,
+}
+
+impl FastHalsEngine {
+    pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> Self {
+        let ctx = EngineCtx::new(ds, pool, k, seed);
+        let (r, p) = ctx.buffers();
+        FastHalsEngine { ctx, r, p }
+    }
+
+    /// Replace the factors (used by equivalence tests and the
+    /// coordinator's shared-init comparisons).
+    pub fn set_factors(&mut self, f: Factors) {
+        self.ctx.factors = f;
+    }
+}
+
+impl NmfEngine for FastHalsEngine {
+    fn name(&self) -> &'static str {
+        "fasthals-cpu"
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+
+        // ---- update H (Alg. 1 lines 4–8) --------------------------------
+        timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
+        let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
+        update_naive(pool, &mut factors.h, &s, &self.r, UpdateKind::Plain, timers, "h_dmv");
+
+        // ---- update W (Alg. 1 lines 10–16) ------------------------------
+        timers.time("spmm_p", || products::a_times(pool, ds, &factors.h, &mut self.p));
+        let q = timers.time("gram_q", || products::factor_gram(pool, &factors.h));
+        update_naive(
+            pool,
+            &mut factors.w,
+            &q,
+            &self.p,
+            UpdateKind::WithDiagAndNorm,
+            timers,
+            "w_dmv",
+        );
+        Ok(())
+    }
+
+    fn factors(&self) -> &Factors {
+        &self.ctx.factors
+    }
+
+    fn timers(&self) -> &PhaseTimers {
+        &self.ctx.timers
+    }
+
+    fn reset_timers(&mut self) {
+        self.ctx.timers.reset();
+    }
+
+    fn dataset(&self) -> &Dataset {
+        &self.ctx.ds
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        &self.ctx.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+
+    #[test]
+    fn error_decreases_monotonically_enough() {
+        let ds = Arc::new(load_dataset("tiny", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut e = FastHalsEngine::new(ds, pool, 4, 42);
+        let trace = e.run(20, 1, 0.0).unwrap();
+        let first = trace.first().unwrap().rel_error;
+        let last = trace.last().unwrap().rel_error;
+        assert!(last < first * 0.9, "error {first} -> {last}");
+        // HALS is monotone non-increasing up to fp noise.
+        for w in trace.windows(2) {
+            assert!(w[1].rel_error <= w[0].rel_error + 1e-4);
+        }
+    }
+
+    #[test]
+    fn w_columns_stay_unit_norm() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 1).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut e = FastHalsEngine::new(ds, pool, 3, 7);
+        for _ in 0..5 {
+            e.step().unwrap();
+        }
+        let w = &e.factors().w;
+        for j in 0..3 {
+            let n: f64 = (0..w.rows()).map(|i| (w.at(i, j) as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-4, "col {j} norm² {n}");
+        }
+    }
+
+    #[test]
+    fn timers_populated() {
+        let ds = Arc::new(load_dataset("tiny", 2).unwrap());
+        let pool = Arc::new(ThreadPool::new(1));
+        let mut e = FastHalsEngine::new(ds, pool, 3, 1);
+        e.step().unwrap();
+        for key in ["spmm_r", "gram_s", "h_dmv", "spmm_p", "gram_q", "w_dmv"] {
+            assert_eq!(e.timers().count(key), 1, "{key}");
+        }
+        e.reset_timers();
+        assert_eq!(e.timers().count("w_dmv"), 0);
+    }
+}

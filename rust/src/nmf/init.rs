@@ -1,0 +1,97 @@
+//! Factor initialization (Alg. 1 line 1).
+//!
+//! All engines in a comparison share the same seeded random init — the
+//! paper: “For each dataset, the same randomly initialized non-negative
+//! matrices were used for all CPU and GPU implementations.”
+
+use crate::linalg::{vector, Mat};
+use crate::util::rng::Pcg32;
+
+/// The factor pair. `h` is the transposed layout (D×K); see `nmf` module
+/// docs.
+#[derive(Clone, Debug)]
+pub struct Factors {
+    pub w: Mat,
+    pub h: Mat,
+}
+
+impl Factors {
+    /// Uniform `[0,1)` entries; `W` columns then L2-normalized, which
+    /// FAST-HALS assumes at iteration entry (it maintains the unit-norm
+    /// invariant by re-normalizing after every W update, making
+    /// `S_kk = 1` so the H update's `+H_k` term is exact).
+    pub fn random(v: usize, d: usize, k: usize, seed: u64) -> Factors {
+        let mut rng = Pcg32::new(seed, 77);
+        let mut w = Mat::random(v, k, &mut rng, 0.0, 1.0);
+        let h = Mat::random(d, k, &mut rng, 0.0, 1.0);
+        normalize_w_columns(&mut w);
+        Factors { w, h }
+    }
+
+    pub fn v(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.h.rows()
+    }
+
+    pub fn k(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+/// L2-normalize every column of `w` (serial; init-time only).
+pub fn normalize_w_columns(w: &mut Mat) {
+    let k = w.cols();
+    let mut norms = vec![0.0f64; k];
+    for i in 0..w.rows() {
+        let row = w.row(i);
+        for (j, &x) in row.iter().enumerate() {
+            norms[j] += x as f64 * x as f64;
+        }
+    }
+    let inv: Vec<f32> = norms.iter().map(|&n| 1.0 / n.sqrt().max(1e-30) as f32).collect();
+    for i in 0..w.rows() {
+        let row = w.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x *= inv[j];
+        }
+    }
+    let _ = vector::dot; // module link
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_nonnegativity() {
+        let f = Factors::random(30, 20, 5, 1);
+        assert_eq!(f.w.rows(), 30);
+        assert_eq!(f.w.cols(), 5);
+        assert_eq!(f.h.rows(), 20);
+        assert_eq!(f.h.cols(), 5);
+        assert!(f.w.data().iter().all(|&x| x >= 0.0));
+        assert!(f.h.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn w_columns_unit_norm() {
+        let f = Factors::random(100, 10, 7, 3);
+        for j in 0..7 {
+            let n: f64 = (0..100).map(|i| (f.w.at(i, j) as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-5, "col {j} norm² {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Factors::random(10, 10, 3, 5);
+        let b = Factors::random(10, 10, 3, 5);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.h, b.h);
+        let c = Factors::random(10, 10, 3, 6);
+        assert_ne!(a.w, c.w);
+    }
+}

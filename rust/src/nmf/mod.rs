@@ -1,0 +1,29 @@
+//! NMF engines: the paper's contribution (PL-NMF, Alg. 2) plus every
+//! baseline its evaluation compares against (FAST-HALS Alg. 1, MU,
+//! ANLS-BPP), the relative-objective metric, and the data-movement cost
+//! model of §5.
+//!
+//! ## Storage convention
+//!
+//! `A` is V×D. `W` is V×K row-major. `H` (K×D in the paper) is stored
+//! **transposed** as a D×K row-major matrix, so that *both* factor
+//! updates are column-panel operations on tall-skinny matrices and both
+//! Gram matrices (`Q = HHᵀ`, `S = WᵀW`) are plain Grams of n×K matrices.
+//! All public APIs in this crate that say "H" take/return the D×K layout.
+
+pub mod traits;
+pub mod init;
+pub mod products;
+pub mod halsops;
+pub mod fasthals;
+pub mod plnmf;
+pub mod mu;
+pub mod mukl;
+pub mod nnls;
+pub mod bpp;
+pub mod error;
+pub mod cost_model;
+
+pub use error::rel_error;
+pub use init::Factors;
+pub use traits::{IterRecord, NmfEngine};

@@ -1,0 +1,345 @@
+//! Non-negative least squares via Block Principal Pivoting
+//! (Kim & Park 2011) — the solver inside the ANLS-BPP baseline.
+//!
+//! Solves, for every row `b` of `B` (n×K) independently:
+//!
+//! ```text
+//! min_{x ≥ 0} ‖F·x − a‖²   ⇔   G·x − b = y,  x ≥ 0, y ≥ 0, xᵀy = 0
+//! ```
+//!
+//! with `G = FᵀF` (K×K, SPD up to ridge) and `b = Fᵀa` supplied by the
+//! caller. Each row maintains a passive set `P` (x free, y = 0); each BPP
+//! iteration solves the passive subsystem by Cholesky and exchanges
+//! infeasible variables — full exchange while progress is made, Murty's
+//! single-variable backup rule otherwise (guarantees termination).
+//!
+//! Rows are solved in parallel chunks. The first iteration's all-passive
+//! solve is shared across every row (one factorization of the full `G`),
+//! which is the common case for well-conditioned interior solutions.
+
+use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
+use crate::Elem;
+
+use super::halsops::SharedRows;
+
+/// Ridge added to G's diagonal for numerical safety.
+const RIDGE: f64 = 1e-10;
+/// Maximum BPP exchanges per row before declaring non-convergence (the
+/// row then keeps its best-effort clamped solution).
+const MAX_EXCHANGES: usize = 200;
+
+/// Solve all rows of `X` (n×K): `min ‖·‖, x ≥ 0` with shared Gram `G` and
+/// per-row rhs from `B`. `X` is overwritten with the solutions.
+pub fn nnls_bpp_rows(pool: &ThreadPool, g: &Mat, b: &Mat, x: &mut Mat) {
+    let k = g.rows();
+    assert_eq!(g.cols(), k);
+    assert_eq!(b.cols(), k);
+    assert_eq!((x.rows(), x.cols()), (b.rows(), k));
+
+    // f64 copy of G once (all solves read it).
+    let g64: Vec<f64> = g.data().iter().map(|&v| v as f64).collect();
+
+    let xs = SharedRows::new(x);
+    pool.parallel_for(b.rows(), Some(8), |rows| {
+        let mut solver = RowSolver::new(k);
+        for i in rows {
+            let xrow = unsafe { xs.row_mut(i) };
+            solver.solve(&g64, b.row(i), xrow);
+        }
+    });
+}
+
+/// Workspace for one row's BPP iterations (reused across rows in a
+/// chunk — no allocation in the inner loop).
+struct RowSolver {
+    k: usize,
+    passive: Vec<bool>,
+    idx: Vec<usize>,     // passive indices, packed
+    chol: Vec<f64>,      // packed lower-triangular factor (k*k scratch)
+    rhs: Vec<f64>,
+    x: Vec<f64>,
+    y: Vec<f64>,
+}
+
+impl RowSolver {
+    fn new(k: usize) -> RowSolver {
+        RowSolver {
+            k,
+            passive: vec![true; k],
+            idx: Vec::with_capacity(k),
+            chol: vec![0.0; k * k],
+            rhs: vec![0.0; k],
+            x: vec![0.0; k],
+            y: vec![0.0; k],
+        }
+    }
+
+    /// BPP for a single row; writes the non-negative solution into `out`.
+    fn solve(&mut self, g: &[f64], b: &[Elem], out: &mut [Elem]) {
+        let k = self.k;
+        // Start all-passive (unconstrained LS), the Kim–Park default.
+        self.passive.iter_mut().for_each(|p| *p = true);
+
+        let mut best_infeasible = usize::MAX;
+        let mut backup_budget = 3usize;
+
+        for _ in 0..MAX_EXCHANGES {
+            // -- solve passive subsystem ----------------------------------
+            self.idx.clear();
+            self.idx.extend((0..k).filter(|&j| self.passive[j]));
+            let p = self.idx.len();
+            self.x.iter_mut().for_each(|v| *v = 0.0);
+            if p > 0 {
+                // Build G_PP and b_P.
+                for (pi, &gi) in self.idx.iter().enumerate() {
+                    for (pj, &gj) in self.idx.iter().enumerate() {
+                        self.chol[pi * p + pj] = g[gi * k + gj];
+                    }
+                    self.chol[pi * p + pi] += RIDGE;
+                    self.rhs[pi] = b[gi] as f64;
+                }
+                if !cholesky_solve_in_place(&mut self.chol, &mut self.rhs, p) {
+                    // Singular passive block: clamp what we have and stop.
+                    break;
+                }
+                for (pi, &gi) in self.idx.iter().enumerate() {
+                    self.x[gi] = self.rhs[pi];
+                }
+            }
+            // -- dual for active set: y_A = G_A,P x_P − b_A ----------------
+            for j in 0..k {
+                self.y[j] = if self.passive[j] {
+                    0.0
+                } else {
+                    let mut s = -(b[j] as f64);
+                    for &gi in &self.idx {
+                        s += g[j * k + gi] * self.x[gi];
+                    }
+                    s
+                };
+            }
+            // -- infeasibilities ------------------------------------------
+            let mut v1: Option<usize> = None; // largest-index infeasible
+            let mut count = 0usize;
+            for j in 0..k {
+                let infeasible =
+                    (self.passive[j] && self.x[j] < 0.0) || (!self.passive[j] && self.y[j] < 0.0);
+                if infeasible {
+                    count += 1;
+                    v1 = Some(j);
+                }
+            }
+            if count == 0 {
+                break; // KKT satisfied
+            }
+            // -- exchange rule --------------------------------------------
+            if count < best_infeasible {
+                best_infeasible = count;
+                backup_budget = 3;
+                // full exchange
+                for j in 0..k {
+                    if self.passive[j] && self.x[j] < 0.0 {
+                        self.passive[j] = false;
+                    } else if !self.passive[j] && self.y[j] < 0.0 {
+                        self.passive[j] = true;
+                    }
+                }
+            } else if backup_budget > 0 {
+                backup_budget -= 1;
+                for j in 0..k {
+                    if self.passive[j] && self.x[j] < 0.0 {
+                        self.passive[j] = false;
+                    } else if !self.passive[j] && self.y[j] < 0.0 {
+                        self.passive[j] = true;
+                    }
+                }
+            } else {
+                // Murty's backup: flip only the largest infeasible index.
+                let j = v1.unwrap();
+                self.passive[j] = !self.passive[j];
+            }
+        }
+
+        for j in 0..k {
+            out[j] = self.x[j].max(0.0) as Elem;
+        }
+    }
+}
+
+/// In-place Cholesky factorization + solve of a dense SPD `p×p` system
+/// stored row-major in `a[..p*p]`, rhs in `b[..p]`. Returns false if the
+/// matrix is not positive definite.
+fn cholesky_solve_in_place(a: &mut [f64], b: &mut [f64], p: usize) -> bool {
+    // Factor: a = L·Lᵀ (L in the lower triangle).
+    for i in 0..p {
+        for j in 0..=i {
+            let mut s = a[i * p + j];
+            for t in 0..j {
+                s -= a[i * p + t] * a[j * p + t];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                a[i * p + i] = s.sqrt();
+            } else {
+                a[i * p + j] = s / a[j * p + j];
+            }
+        }
+    }
+    // Forward substitution: L z = b.
+    for i in 0..p {
+        let mut s = b[i];
+        for t in 0..i {
+            s -= a[i * p + t] * b[t];
+        }
+        b[i] = s / a[i * p + i];
+    }
+    // Back substitution: Lᵀ x = z.
+    for i in (0..p).rev() {
+        let mut s = b[i];
+        for t in (i + 1)..p {
+            s -= a[t * p + i] * b[t];
+        }
+        b[i] = s / a[i * p + i];
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram::gram_naive;
+    use crate::testing::PropConfig;
+    use crate::util::rng::Pcg32;
+
+    /// Brute-force reference: try every active set (2^K subsets), pick
+    /// the feasible KKT point (K ≤ 8 only).
+    fn nnls_exhaustive(g: &Mat, b: &[Elem]) -> Vec<f64> {
+        let k = g.rows();
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for mask in 0u32..(1 << k) {
+            let idx: Vec<usize> = (0..k).filter(|&j| mask & (1 << j) != 0).collect();
+            let p = idx.len();
+            let mut a = vec![0.0f64; p * p];
+            let mut rhs = vec![0.0f64; p];
+            for (pi, &gi) in idx.iter().enumerate() {
+                for (pj, &gj) in idx.iter().enumerate() {
+                    a[pi * p + pj] = g.at(gi, gj) as f64;
+                }
+                a[pi * p + pi] += RIDGE;
+                rhs[pi] = b[gi] as f64;
+            }
+            if p > 0 && !cholesky_solve_in_place(&mut a, &mut rhs, p) {
+                continue;
+            }
+            let mut x = vec![0.0f64; k];
+            for (pi, &gi) in idx.iter().enumerate() {
+                x[gi] = rhs[pi];
+            }
+            if x.iter().any(|&v| v < -1e-9) {
+                continue;
+            }
+            // objective ∝ ½xᵀGx − bᵀx
+            let mut obj = 0.0;
+            for i in 0..k {
+                for j in 0..k {
+                    obj += 0.5 * x[i] * g.at(i, j) as f64 * x[j];
+                }
+                obj -= b[i] as f64 * x[i];
+            }
+            if best.as_ref().map(|(o, _)| obj < *o - 1e-12).unwrap_or(true) {
+                best = Some((obj, x));
+            }
+        }
+        best.unwrap().1
+    }
+
+    fn random_spd(k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg32::seeded(seed);
+        let f = Mat::random(k + 5, k, &mut rng, -1.0, 1.0);
+        gram_naive(&f)
+    }
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        // [[4,2],[2,3]] x = [10, 9] -> x = [1.5, 2]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        assert!(cholesky_solve_in_place(&mut a, &mut b, 2));
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        let mut b = vec![1.0, 1.0];
+        assert!(!cholesky_solve_in_place(&mut a, &mut b, 2));
+    }
+
+    #[test]
+    fn matches_exhaustive_small() {
+        PropConfig::trials(40).run("BPP == exhaustive KKT", |gen| {
+            let k = gen.usize_in(1, 6);
+            let seed = gen.usize_in(0, 1_000_000) as u64;
+            let g = random_spd(k, seed);
+            let mut rng = Pcg32::seeded(seed ^ 0xabc);
+            let b: Vec<Elem> = (0..k).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+
+            let bmat = Mat::from_vec(1, k, b.clone());
+            let mut x = Mat::zeros(1, k);
+            let pool = ThreadPool::new(1);
+            nnls_bpp_rows(&pool, &g, &bmat, &mut x);
+
+            let x_ref = nnls_exhaustive(&g, &b);
+            for j in 0..k {
+                assert!(
+                    (x.at(0, j) as f64 - x_ref[j]).abs() < 1e-4,
+                    "k={k} j={j}: bpp {} vs ref {}",
+                    x.at(0, j),
+                    x_ref[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn unconstrained_interior_solution() {
+        // If the LS solution is already non-negative, BPP returns it.
+        let g = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![4.0, 6.0]);
+        let mut x = Mat::zeros(1, 2);
+        let pool = ThreadPool::new(1);
+        nnls_bpp_rows(&pool, &g, &b, &mut x);
+        assert!((x.at(0, 0) - 2.0).abs() < 1e-5);
+        assert!((x.at(0, 1) - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn negative_rhs_gives_zero() {
+        let g = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Mat::from_vec(1, 2, vec![-1.0, -5.0]);
+        let mut x = Mat::zeros(1, 2);
+        let pool = ThreadPool::new(1);
+        nnls_bpp_rows(&pool, &g, &b, &mut x);
+        assert_eq!(x.at(0, 0), 0.0);
+        assert_eq!(x.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn many_rows_parallel() {
+        let k = 7;
+        let g = random_spd(k, 3);
+        let mut rng = Pcg32::seeded(4);
+        let n = 100;
+        let b = Mat::random(n, k, &mut rng, -1.0, 3.0);
+        let mut x1 = Mat::zeros(n, k);
+        let mut x4 = Mat::zeros(n, k);
+        nnls_bpp_rows(&ThreadPool::new(1), &g, &b, &mut x1);
+        nnls_bpp_rows(&ThreadPool::new(4), &g, &b, &mut x4);
+        assert_eq!(x1, x4, "row-independent solves must not depend on threads");
+        assert!(x1.data().iter().all(|&v| v >= 0.0));
+    }
+}

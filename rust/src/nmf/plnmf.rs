@@ -1,0 +1,188 @@
+//! PL-NMF engine — the paper's contribution (Alg. 2): FAST-HALS with the
+//! tiled three-phase locality-optimized factor updates.
+//!
+//! Timer keys: `spmm_r`, `gram_s`, `h_phase1/2/3` (H update);
+//! `spmm_p`, `gram_q`, `w_phase1/2/3` (W update — the Table 5 rows).
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
+use crate::util::PhaseTimers;
+use crate::Result;
+
+use super::cost_model;
+use super::halsops::{update_tiled, UpdateKind};
+use super::products;
+use super::traits::{EngineCtx, NmfEngine};
+use super::Factors;
+
+pub struct PlNmfEngine {
+    ctx: EngineCtx,
+    r: Mat,
+    p: Mat,
+    /// Scratch for the pre-update factor copy (W_old / H_old of Alg. 2),
+    /// sized for the larger factor and reused by both updates.
+    scratch_w: Mat,
+    scratch_h: Mat,
+    tile: usize,
+}
+
+impl PlNmfEngine {
+    /// `tile = 0` selects T from the §5 model (Eq. 11) given
+    /// `cache_bytes`.
+    pub fn new(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        tile: usize,
+        cache_bytes: usize,
+    ) -> Self {
+        let tile = if tile == 0 { cost_model::select_tile(k, cache_bytes) } else { tile };
+        let ctx = EngineCtx::new(ds, pool, k, seed);
+        let (r, p) = ctx.buffers();
+        let scratch_w = Mat::zeros(ctx.ds.v(), k);
+        let scratch_h = Mat::zeros(ctx.ds.d(), k);
+        PlNmfEngine { ctx, r, p, scratch_w, scratch_h, tile }
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    pub fn set_factors(&mut self, f: Factors) {
+        self.ctx.factors = f;
+    }
+}
+
+impl NmfEngine for PlNmfEngine {
+    fn name(&self) -> &'static str {
+        "plnmf-cpu"
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+
+        // ---- update H: tiled, no normalization --------------------------
+        timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
+        let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
+        update_tiled(
+            pool,
+            &mut factors.h,
+            &mut self.scratch_h,
+            &s,
+            &self.r,
+            self.tile,
+            UpdateKind::Plain,
+            timers,
+            ["h_phase1", "h_phase2", "h_phase3"],
+        );
+
+        // ---- update W: tiled + interleaved normalization (Alg. 2) -------
+        timers.time("spmm_p", || products::a_times(pool, ds, &factors.h, &mut self.p));
+        let q = timers.time("gram_q", || products::factor_gram(pool, &factors.h));
+        update_tiled(
+            pool,
+            &mut factors.w,
+            &mut self.scratch_w,
+            &q,
+            &self.p,
+            self.tile,
+            UpdateKind::WithDiagAndNorm,
+            timers,
+            ["w_phase1", "w_phase2", "w_phase3"],
+        );
+        Ok(())
+    }
+
+    fn factors(&self) -> &Factors {
+        &self.ctx.factors
+    }
+
+    fn timers(&self) -> &PhaseTimers {
+        &self.ctx.timers
+    }
+
+    fn reset_timers(&mut self) {
+        self.ctx.timers.reset();
+    }
+
+    fn dataset(&self) -> &Dataset {
+        &self.ctx.ds
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        &self.ctx.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+    use crate::nmf::fasthals::FastHalsEngine;
+
+    #[test]
+    fn matches_fasthals_trajectory() {
+        // The paper's associativity argument: tiled and naive FAST-HALS
+        // follow the same convergence trajectory (Fig. 8 shows identical
+        // curves for planc-HALS and PL-NMF). Same init → same errors up
+        // to fp reassociation.
+        for name in ["tiny", "tiny-sparse"] {
+            let ds = Arc::new(load_dataset(name, 5).unwrap());
+            let pool = Arc::new(ThreadPool::new(3));
+            let mut hals = FastHalsEngine::new(ds.clone(), pool.clone(), 5, 99);
+            let mut pl = PlNmfEngine::new(ds, pool, 5, 99, 2, 35 << 20);
+            let th = hals.run(10, 1, 0.0).unwrap();
+            let tp = pl.run(10, 1, 0.0).unwrap();
+            for (a, b) in th.iter().zip(&tp) {
+                assert!(
+                    (a.rel_error - b.rel_error).abs() < 2e-3,
+                    "{name} iter {}: hals {} vs plnmf {}",
+                    a.iter,
+                    a.rel_error,
+                    b.rel_error
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_tile_uses_model() {
+        let ds = Arc::new(load_dataset("tiny", 1).unwrap());
+        let pool = Arc::new(ThreadPool::new(1));
+        let e = PlNmfEngine::new(ds, pool, 16, 1, 0, 35 << 20);
+        assert_eq!(e.tile(), cost_model::select_tile(16, 35 << 20));
+    }
+
+    #[test]
+    fn error_decreases() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 8).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut e = PlNmfEngine::new(ds, pool, 4, 3, 0, 35 << 20);
+        let trace = e.run(15, 1, 0.0).unwrap();
+        assert!(trace.last().unwrap().rel_error < trace[0].rel_error * 0.98);
+    }
+
+    #[test]
+    fn phase_timers_present() {
+        let ds = Arc::new(load_dataset("tiny", 4).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut e = PlNmfEngine::new(ds, pool, 6, 2, 2, 35 << 20);
+        e.step().unwrap();
+        for key in ["w_phase1", "w_phase2", "w_phase3", "h_phase1", "h_phase2", "h_phase3"] {
+            assert!(e.timers().count(key) > 0, "{key}");
+        }
+    }
+
+    #[test]
+    fn tile_not_dividing_k_still_converges() {
+        let ds = Arc::new(load_dataset("tiny", 6).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut e = PlNmfEngine::new(ds, pool, 7, 3, 3, 35 << 20); // 3 ∤ 7
+        let trace = e.run(8, 1, 0.0).unwrap();
+        assert!(trace.last().unwrap().rel_error <= trace[0].rel_error);
+    }
+}

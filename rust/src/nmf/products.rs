@@ -1,0 +1,84 @@
+//! The matrix products every HALS-family step needs:
+//! `P = A·H` (V×K), `R = Aᵀ·W` (D×K), `Q = HᵀH`, `S = WᵀW`
+//! (with our transposed H storage, `P = A·H_stored` and `Q` is a plain
+//! Gram — see `nmf` module docs).
+//!
+//! Sparse datasets route through the CSR SpMM (the paper's
+//! `mkl_dcsrmm`), dense through the blocked GEMM (`cblas_dgemm`).
+
+use crate::data::{DataMatrix, Dataset};
+use crate::linalg::{gemm, gram, GemmOp, Mat};
+use crate::parallel::ThreadPool;
+use crate::sparse::spmm;
+
+/// `out = A · x` where `x` is D×K and `out` V×K.
+pub fn a_times(pool: &ThreadPool, ds: &Dataset, x: &Mat, out: &mut Mat) {
+    assert_eq!(x.rows(), ds.d());
+    assert_eq!((out.rows(), out.cols()), (ds.v(), x.cols()));
+    match &ds.a {
+        DataMatrix::Sparse(a) => spmm(pool, 1.0, a, x, GemmOp::Assign, &mut out.view_mut()),
+        DataMatrix::Dense(a) => {
+            gemm(pool, 1.0, a.view(), x.view(), GemmOp::Assign, &mut out.view_mut())
+        }
+    }
+}
+
+/// `out = Aᵀ · x` where `x` is V×K and `out` D×K (uses the resident
+/// transpose).
+pub fn at_times(pool: &ThreadPool, ds: &Dataset, x: &Mat, out: &mut Mat) {
+    assert_eq!(x.rows(), ds.v());
+    assert_eq!((out.rows(), out.cols()), (ds.d(), x.cols()));
+    match &ds.at {
+        DataMatrix::Sparse(at) => spmm(pool, 1.0, at, x, GemmOp::Assign, &mut out.view_mut()),
+        DataMatrix::Dense(at) => {
+            gemm(pool, 1.0, at.view(), x.view(), GemmOp::Assign, &mut out.view_mut())
+        }
+    }
+}
+
+/// Gram of a tall-skinny factor: `XᵀX` (K×K).
+pub fn factor_gram(pool: &ThreadPool, x: &Mat) -> Mat {
+    gram(pool, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+    use crate::linalg::gemm::gemm_naive;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn products_match_dense_reference() {
+        let pool = ThreadPool::new(3);
+        for name in ["tiny", "tiny-sparse"] {
+            let ds = load_dataset(name, 9).unwrap();
+            let mut rng = Pcg32::seeded(1);
+            let h = Mat::random(ds.d(), 4, &mut rng, 0.0, 1.0);
+            let w = Mat::random(ds.v(), 4, &mut rng, 0.0, 1.0);
+
+            let a_dense = match &ds.a {
+                DataMatrix::Sparse(a) => a.to_dense(),
+                DataMatrix::Dense(a) => a.clone(),
+            };
+
+            let mut p = Mat::zeros(ds.v(), 4);
+            a_times(&pool, &ds, &h, &mut p);
+            let mut p_ref = Mat::zeros(ds.v(), 4);
+            gemm_naive(1.0, a_dense.view(), h.view(), GemmOp::Assign, &mut p_ref.view_mut());
+            assert!(p.max_abs_diff(&p_ref) < 1e-2, "{name}: P mismatch");
+
+            let mut r = Mat::zeros(ds.d(), 4);
+            at_times(&pool, &ds, &w, &mut r);
+            let mut r_ref = Mat::zeros(ds.d(), 4);
+            gemm_naive(
+                1.0,
+                a_dense.transposed().view(),
+                w.view(),
+                GemmOp::Assign,
+                &mut r_ref.view_mut(),
+            );
+            assert!(r.max_abs_diff(&r_ref) < 1e-2, "{name}: R mismatch");
+        }
+    }
+}

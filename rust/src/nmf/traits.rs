@@ -1,0 +1,103 @@
+//! The engine abstraction shared by native-rust and PJRT-backed NMF
+//! implementations.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
+use crate::util::PhaseTimers;
+use crate::Result;
+
+use super::error;
+use super::init::Factors;
+
+/// One row of a convergence trace (Figs. 7/8 data points).
+#[derive(Debug, Clone, Copy)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Cumulative *update* time (seconds) — excludes the error
+    /// evaluation itself, matching how the paper times convergence.
+    pub elapsed_secs: f64,
+    pub rel_error: f64,
+}
+
+/// An NMF solver that advances one outer iteration at a time.
+///
+/// Not `Send`: the PJRT-backed engines hold an `Rc`-based client and must
+/// stay on their creating thread (native engines are thread-safe but the
+/// driver runs every engine on the leader thread anyway).
+pub trait NmfEngine {
+    /// Engine display name (matches `EngineKind::name`).
+    fn name(&self) -> &'static str;
+
+    /// Perform one outer iteration (full H update + full W update).
+    fn step(&mut self) -> Result<()>;
+
+    /// Current factors (`h` in the D×K transposed layout).
+    fn factors(&self) -> &Factors;
+
+    /// Accumulated phase timers (keys documented per engine).
+    fn timers(&self) -> &PhaseTimers;
+
+    fn reset_timers(&mut self);
+
+    fn dataset(&self) -> &Dataset;
+
+    fn pool(&self) -> &ThreadPool;
+
+    /// Relative objective of the current factors (not included in step
+    /// timing).
+    fn rel_error(&self) -> f64 {
+        let f = self.factors();
+        error::rel_error(self.pool(), self.dataset(), &f.w, &f.h)
+    }
+
+    /// Run `iters` iterations, recording the error every `record_every`
+    /// (and always at iteration 0 and the last). `tol`, if positive,
+    /// stops early when the error improves less than `tol` over a
+    /// 5-record window.
+    fn run(&mut self, iters: usize, record_every: usize, tol: f64) -> Result<Vec<IterRecord>> {
+        let record_every = record_every.max(1);
+        let mut trace = Vec::with_capacity(iters / record_every + 2);
+        trace.push(IterRecord { iter: 0, elapsed_secs: 0.0, rel_error: self.rel_error() });
+        let mut elapsed = 0.0f64;
+        for it in 1..=iters {
+            let t = std::time::Instant::now();
+            self.step()?;
+            elapsed += t.elapsed().as_secs_f64();
+            if it % record_every == 0 || it == iters {
+                trace.push(IterRecord { iter: it, elapsed_secs: elapsed, rel_error: self.rel_error() });
+                if tol > 0.0 && trace.len() > 5 {
+                    let prev = trace[trace.len() - 6].rel_error;
+                    let cur = trace[trace.len() - 1].rel_error;
+                    if prev - cur < tol {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(trace)
+    }
+}
+
+/// Shared state owned by every native engine.
+pub struct EngineCtx {
+    pub ds: Arc<Dataset>,
+    pub pool: Arc<ThreadPool>,
+    pub factors: Factors,
+    pub timers: PhaseTimers,
+}
+
+impl EngineCtx {
+    pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> EngineCtx {
+        let factors = Factors::random(ds.v(), ds.d(), k, seed);
+        EngineCtx { ds, pool, factors, timers: PhaseTimers::new() }
+    }
+
+    /// Pre-sized product buffers: R (D×K) and P (V×K).
+    pub fn buffers(&self) -> (Mat, Mat) {
+        let k = self.factors.k();
+        (Mat::zeros(self.ds.d(), k), Mat::zeros(self.ds.v(), k))
+    }
+}

@@ -1,0 +1,110 @@
+//! Reusable sense-reversing barrier.
+//!
+//! Used *inside* a [`super::ThreadPool::run`] job to synchronize column
+//! steps of the PL-NMF phase-2 loop without paying a full fork/join per
+//! column: workers compute their V-shard of column `t`, hit the barrier,
+//! worker 0 folds the partial sums-of-squares and publishes the norm, all
+//! hit the barrier again, proceed to column `t+1`. This mirrors the
+//! paper's GPU structure (Alg. 3 lines 14–18: kernel launch + device
+//! synchronize per column) in shared memory.
+//!
+//! Spin-then-yield waiting: phase-2 column steps are ~10–100 µs, so a
+//! short spin almost always succeeds; we yield after `SPIN_LIMIT` to stay
+//! polite on oversubscribed CI machines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+const SPIN_LIMIT: u32 = 4096;
+
+/// A reusable barrier for exactly `n` participants.
+pub struct Barrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicUsize,
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        Barrier { n, count: AtomicUsize::new(0), sense: AtomicUsize::new(0) }
+    }
+
+    /// Block until all `n` participants arrive. Returns `true` on exactly
+    /// one participant (the last to arrive), like `std::sync::Barrier`.
+    pub fn wait(&self) -> bool {
+        if self.n == 1 {
+            return true;
+        }
+        let sense = self.sense.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) == self.n - 1 {
+            // Last arrival: reset and flip sense to release the others.
+            self.count.store(0, Ordering::Relaxed);
+            self.sense.store(sense.wrapping_add(1), Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.sense.load(Ordering::Acquire) == sense {
+                spins += 1;
+                if spins < SPIN_LIMIT {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ThreadPool;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn single_participant_trivially_passes() {
+        let b = Barrier::new(1);
+        for _ in 0..10 {
+            assert!(b.wait());
+        }
+    }
+
+    #[test]
+    fn phases_are_ordered() {
+        // Every worker increments in phase 1; after the barrier, all must
+        // observe the full phase-1 total.
+        let n = 4;
+        let pool = ThreadPool::new(n);
+        let b = Barrier::new(n);
+        let counter = AtomicUsize::new(0);
+        let failures = AtomicUsize::new(0);
+        pool.run(&|_wid| {
+            for round in 1..=50usize {
+                counter.fetch_add(1, Ordering::Relaxed);
+                b.wait();
+                if counter.load(Ordering::Relaxed) != round * n {
+                    failures.fetch_add(1, Ordering::Relaxed);
+                }
+                b.wait();
+            }
+        });
+        assert_eq!(failures.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn exactly_one_leader_per_round() {
+        let n = 8;
+        let pool = ThreadPool::new(n);
+        let b = Barrier::new(n);
+        let leaders = AtomicUsize::new(0);
+        pool.run(&|_| {
+            for _ in 0..100 {
+                if b.wait() {
+                    leaders.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 100);
+    }
+}

@@ -1,0 +1,105 @@
+//! Range-chunking helpers shared by the scheduling primitives.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Split `0..n` into `parts` contiguous ranges whose lengths differ by at
+/// most one (the first `n % parts` ranges get the extra element). Empty
+/// ranges are returned when `parts > n` so worker indices stay aligned.
+pub fn split_even(n: usize, parts: usize) -> Vec<Range<usize>> {
+    assert!(parts > 0);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// A dynamic chunk dispenser: workers repeatedly `take` the next chunk of
+/// up to `grain` items until the range is exhausted. This is OpenMP
+/// `schedule(dynamic, grain)`.
+pub struct Chunks {
+    next: AtomicUsize,
+    n: usize,
+    grain: usize,
+}
+
+impl Chunks {
+    pub fn new(n: usize, grain: usize) -> Self {
+        Chunks { next: AtomicUsize::new(0), n, grain: grain.max(1) }
+    }
+
+    #[inline]
+    pub fn take(&self) -> Option<Range<usize>> {
+        let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+        if start >= self.n {
+            return None;
+        }
+        Some(start..(start + self.grain).min(self.n))
+    }
+
+    /// Reset for reuse (only call when no worker is drawing from it).
+    pub fn reset(&self) {
+        self.next.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Pick a grain size that yields ~4 chunks per worker (dynamic-scheduling
+/// sweet spot: enough slack to balance, not enough to thrash the counter).
+pub fn auto_grain(n: usize, workers: usize) -> usize {
+    (n / (workers * 4).max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_covers_exactly() {
+        for &(n, p) in &[(10, 3), (0, 4), (7, 7), (3, 8), (1000, 28)] {
+            let parts = split_even(n, p);
+            assert_eq!(parts.len(), p);
+            let mut covered = 0;
+            let mut expect_start = 0;
+            for r in &parts {
+                assert_eq!(r.start, expect_start);
+                expect_start = r.end;
+                covered += r.len();
+            }
+            assert_eq!(covered, n);
+            let lens: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+            let min = lens.iter().min().unwrap();
+            let max = lens.iter().max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn chunks_cover_without_overlap() {
+        let c = Chunks::new(103, 10);
+        let mut seen = vec![false; 103];
+        while let Some(r) = c.take() {
+            for i in r {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+        assert!(c.take().is_none());
+        c.reset();
+        assert_eq!(c.take(), Some(0..10));
+    }
+
+    #[test]
+    fn auto_grain_reasonable() {
+        assert_eq!(auto_grain(0, 8), 1);
+        assert!(auto_grain(1000, 8) >= 1);
+        assert!(auto_grain(1_000_000, 8) * 8 * 4 <= 1_000_000 + 8 * 4);
+    }
+}

@@ -1,0 +1,29 @@
+//! Shared-memory parallel runtime (the paper's OpenMP substrate, rebuilt).
+//!
+//! The paper parallelizes with `#pragma omp parallel for` + MKL threading.
+//! Offline we have neither OpenMP nor rayon, so this module provides the
+//! equivalent primitives used by every engine and by the coordinator:
+//!
+//! * [`ThreadPool`] — persistent workers with low-latency fork/join
+//!   dispatch (`run`), so per-column phase-2 loops don't pay thread-spawn
+//!   costs (the W update runs K ≤ 240 column steps per iteration).
+//! * [`pool::ThreadPool::parallel_for`] — dynamically chunked parallel
+//!   loop (OpenMP `schedule(dynamic)`).
+//! * [`pool::ThreadPool::parallel_for_static`] — contiguous static split
+//!   (OpenMP `schedule(static)`), used where locality of fixed shards
+//!   matters (the coordinator pins row shards to workers).
+//! * [`Barrier`] — reusable sense-reversing barrier for in-`run` phase
+//!   synchronization (the CPU analogue of `__syncthreads` +
+//!   `cudaDeviceSynchronize` in Algorithms 3–5).
+//! * [`reduce`] — per-worker partials + leader combine (the CPU analogue
+//!   of the paper's warp-shuffle / `atomicAdd` reduction hierarchy).
+
+pub mod pool;
+pub mod chunks;
+pub mod barrier;
+pub mod reduce;
+
+pub use barrier::Barrier;
+pub use chunks::{split_even, Chunks};
+pub use pool::ThreadPool;
+pub use reduce::{reduce, reduce_vec};

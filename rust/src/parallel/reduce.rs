@@ -1,0 +1,137 @@
+//! Parallel map-reduce over index ranges.
+//!
+//! The CPU analogue of the paper's GPU reduction hierarchy (Alg. 4: warp
+//! shuffle → shared memory → atomicAdd): each worker folds its chunk into
+//! a private accumulator (register-resident), partials land in per-worker
+//! slots (one cache line apart), and the leader combines the ≤ n_threads
+//! partials. Deterministic for a fixed thread count when used with static
+//! scheduling — which the engines rely on so convergence trajectories are
+//! reproducible run-to-run.
+
+use std::cell::UnsafeCell;
+use std::ops::Range;
+
+use super::pool::ThreadPool;
+
+/// Cache-line-padded slot to avoid false sharing between partials.
+#[repr(align(64))]
+struct Slot<T>(UnsafeCell<Option<T>>);
+
+// SAFETY: each slot is written by exactly one worker during `run`.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+/// Statically partitioned parallel reduce: `map` folds each contiguous
+/// range to a partial, `combine` merges partials in worker order
+/// (deterministic).
+pub fn reduce<T, M, C>(pool: &ThreadPool, n: usize, map: M, combine: C) -> Option<T>
+where
+    T: Send,
+    M: Fn(Range<usize>) -> T + Sync,
+    C: Fn(T, T) -> T,
+{
+    if n == 0 {
+        return None;
+    }
+    let parts = super::chunks::split_even(n, pool.n_threads());
+    let slots: Vec<Slot<T>> = (0..pool.n_threads()).map(|_| Slot(UnsafeCell::new(None))).collect();
+    pool.run(&|wid| {
+        let r = parts[wid].clone();
+        if !r.is_empty() {
+            // SAFETY: slot `wid` is exclusively ours during this run.
+            unsafe { *slots[wid].0.get() = Some(map(r)) };
+        }
+    });
+    let mut acc: Option<T> = None;
+    for s in slots {
+        if let Some(part) = s.0.into_inner() {
+            acc = Some(match acc {
+                None => part,
+                Some(a) => combine(a, part),
+            });
+        }
+    }
+    acc
+}
+
+/// Elementwise vector reduce: workers produce partial vectors of length
+/// `len` over their range, then the leader sums them. Used for the
+/// per-column sums and Gram-matrix partials.
+pub fn reduce_vec<M>(pool: &ThreadPool, n: usize, len: usize, map: M) -> Vec<f64>
+where
+    M: Fn(Range<usize>, &mut [f64]) + Sync,
+{
+    reduce(
+        pool,
+        n,
+        |r| {
+            let mut part = vec![0.0f64; len];
+            map(r, &mut part);
+            part
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += *y;
+            }
+            a
+        },
+    )
+    .unwrap_or_else(|| vec![0.0; len])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_matches_serial() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = data.iter().sum();
+        let par = reduce(&pool, data.len(), |r| r.map(|i| data[i]).sum::<f64>(), |a, b| a + b)
+            .unwrap();
+        assert!((serial - par).abs() < 1e-9 * serial.abs().max(1.0));
+    }
+
+    #[test]
+    fn deterministic_across_repeats() {
+        let pool = ThreadPool::new(7);
+        let data: Vec<f64> = (0..5000).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let r1 = reduce(&pool, data.len(), |r| r.map(|i| data[i]).sum::<f64>(), |a, b| a + b);
+        let r2 = reduce(&pool, data.len(), |r| r.map(|i| data[i]).sum::<f64>(), |a, b| a + b);
+        assert_eq!(r1, r2, "static reduce must be bitwise deterministic");
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let pool = ThreadPool::new(2);
+        assert!(reduce(&pool, 0, |_| 1.0, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn reduce_vec_sums_columns() {
+        let pool = ThreadPool::new(3);
+        // 100 rows x 4 cols of ones -> column sums all 100.
+        let out = reduce_vec(&pool, 100, 4, |r, part| {
+            for _i in r {
+                for p in part.iter_mut() {
+                    *p += 1.0;
+                }
+            }
+        });
+        assert_eq!(out, vec![100.0; 4]);
+    }
+
+    #[test]
+    fn min_max_reduce() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64).collect();
+        let mx = reduce(
+            &pool,
+            data.len(),
+            |r| r.map(|i| data[i]).fold(f64::MIN, f64::max),
+            f64::max,
+        )
+        .unwrap();
+        assert_eq!(mx, 999.0);
+    }
+}

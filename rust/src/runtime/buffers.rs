@@ -1,0 +1,42 @@
+//! `Mat` ⇄ PJRT transfer helpers.
+
+use crate::linalg::Mat;
+use crate::Result;
+
+use super::xe;
+
+/// Upload a matrix as a device buffer (row-major f32, same layout XLA
+/// expects for a default-layout 2-D parameter).
+pub fn upload(client: &xla::PjRtClient, m: &Mat) -> Result<xla::PjRtBuffer> {
+    xe(client.buffer_from_host_buffer(m.data(), &[m.rows(), m.cols()], None))
+}
+
+/// Download a device buffer into a matrix of known shape.
+pub fn download(buf: &xla::PjRtBuffer, rows: usize, cols: usize) -> Result<Mat> {
+    let lit = xe(buf.to_literal_sync())?;
+    let data = xe(lit.to_vec::<f32>())?;
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "buffer has {} elements, expected {rows}x{cols}",
+        data.len()
+    );
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Decompose a (possibly tuple) execution result into per-output
+/// literals. jax lowers with `return_tuple=True`, so even single outputs
+/// arrive as 1-tuples.
+pub fn untuple(result: xla::Literal) -> Result<Vec<xla::Literal>> {
+    let shape = xe(result.shape())?;
+    match shape {
+        xla::Shape::Tuple(_) => xe(result.to_tuple()),
+        _ => Ok(vec![result]),
+    }
+}
+
+/// Literal → Mat.
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = xe(lit.to_vec::<f32>())?;
+    anyhow::ensure!(data.len() == rows * cols, "literal size mismatch");
+    Ok(Mat::from_vec(rows, cols, data))
+}

@@ -1,0 +1,291 @@
+//! PJRT-backed NMF engines — the stand-ins for the paper's GPU
+//! implementations (PL-NMF-gpu, bionmf-MU-gpu), executing the AOT-lowered
+//! JAX/Pallas update graphs.
+//!
+//! Data flow per outer iteration:
+//!
+//! * **dense datasets** — `A` stays device-resident for the whole run;
+//!   one fused `plnmf_step`/`mu_step` executable computes all products
+//!   and both tiled updates on device; the small factors (V×K + D×K)
+//!   round-trip so the next iteration can feed them back as parameters
+//!   (PJRT tuple outputs cannot be re-passed whole) and so the error
+//!   metric runs natively.
+//! * **sparse datasets** — XLA has no sparse kernels, so the coordinator
+//!   computes `R = AᵀW` / `P = A·H` with its CSR SpMM and ships only the
+//!   dense tall-skinny panels; the `plnmf_update_h`/`plnmf_update_w`
+//!   executables run the tiled updates. This is the same division of
+//!   labor as the paper's GPU code (cusparseDcsrmm for products, custom
+//!   kernels for the update) with the sparse half on the host.
+//!
+//! Timer keys: `spmm_r`/`spmm_p` (host SpMM, sparse only), `h2d`/`d2h`
+//! (transfers), `xla_update_h`/`xla_update_w` or `xla_step` (device
+//! compute).
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::nmf::{products, Factors, NmfEngine};
+use crate::parallel::ThreadPool;
+use crate::util::PhaseTimers;
+use crate::Result;
+
+use super::buffers::{literal_to_mat, untuple, upload};
+use super::manifest::{ArtifactMeta, Manifest};
+use super::xe;
+
+/// A compiled artifact ready to execute.
+pub struct XlaExec {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaExec {
+    /// Load + compile `fn_name` for `(dataset, k)` from the manifest.
+    pub fn load(
+        client: &xla::PjRtClient,
+        manifest: &Manifest,
+        fn_name: &str,
+        dataset: &str,
+        k: usize,
+    ) -> Result<XlaExec> {
+        let meta = manifest.find(fn_name, dataset, k)?.clone();
+        let path = manifest.hlo_path(&meta);
+        let proto = xe(xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        ))
+        .with_context(|| format!("loading {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = xe(client.compile(&comp)).with_context(|| format!("compiling {}", meta.name))?;
+        Ok(XlaExec { meta, exe })
+    }
+
+    /// Execute on device-resident buffers; returns the decomposed output
+    /// literals (jax lowers with `return_tuple=True`).
+    pub fn call_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.meta.inputs.len(),
+            "{} expects {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            args.len()
+        );
+        let out = xe(self.exe.execute_b(args))?;
+        let lit = xe(out[0][0].to_literal_sync())?;
+        untuple(lit)
+    }
+}
+
+/// Which artifact family an engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    PlNmf,
+    Mu,
+}
+
+impl Family {
+    fn step_fn(self) -> &'static str {
+        match self {
+            Family::PlNmf => "plnmf_step",
+            Family::Mu => "mu_step",
+        }
+    }
+
+    fn update_h_fn(self) -> &'static str {
+        match self {
+            Family::PlNmf => "plnmf_update_h",
+            Family::Mu => "mu_update_h",
+        }
+    }
+
+    fn update_w_fn(self) -> &'static str {
+        match self {
+            Family::PlNmf => "plnmf_update_w",
+            Family::Mu => "mu_update_w",
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Family::PlNmf => "plnmf-accel",
+            Family::Mu => "mu-accel",
+        }
+    }
+}
+
+enum Mode {
+    Dense {
+        step: XlaExec,
+        /// A uploaded once; the dominant buffer stays device-resident.
+        a_buf: xla::PjRtBuffer,
+    },
+    Sparse {
+        update_h: XlaExec,
+        update_w: XlaExec,
+        r: Mat,
+        p: Mat,
+    },
+}
+
+/// Generic PJRT engine over a family of artifacts.
+pub struct XlaEngine {
+    ds: Arc<Dataset>,
+    pool: Arc<ThreadPool>,
+    factors: Factors,
+    timers: PhaseTimers,
+    client: xla::PjRtClient,
+    mode: Mode,
+    family: Family,
+    pub tile: usize,
+}
+
+impl XlaEngine {
+    fn create(
+        family: Family,
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        artifacts_dir: &str,
+    ) -> Result<XlaEngine> {
+        let manifest = Manifest::load(std::path::Path::new(artifacts_dir))?;
+        let client = super::cpu_client()?;
+        let dataset = ds.profile.name;
+        let factors = Factors::random(ds.v(), ds.d(), k, seed);
+        let (mode, tile) = if ds.a.is_sparse() {
+            let update_h = XlaExec::load(&client, &manifest, family.update_h_fn(), dataset, k)?;
+            let update_w = XlaExec::load(&client, &manifest, family.update_w_fn(), dataset, k)?;
+            let tile = update_h.meta.tile;
+            let r = Mat::zeros(ds.d(), k);
+            let p = Mat::zeros(ds.v(), k);
+            (Mode::Sparse { update_h, update_w, r, p }, tile)
+        } else {
+            let step = XlaExec::load(&client, &manifest, family.step_fn(), dataset, k)?;
+            let a = match &ds.a {
+                crate::data::DataMatrix::Dense(a) => a,
+                _ => unreachable!(),
+            };
+            let tile = step.meta.tile;
+            let a_buf = upload(&client, a)?;
+            (Mode::Dense { step, a_buf }, tile)
+        };
+        Ok(XlaEngine { ds, pool, factors, timers: PhaseTimers::new(), client, mode, family, tile })
+    }
+
+    pub fn set_factors(&mut self, f: Factors) {
+        self.factors = f;
+    }
+}
+
+impl NmfEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        self.family.name()
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let (v, d, k) = (self.ds.v(), self.ds.d(), self.factors.k());
+        match &mut self.mode {
+            Mode::Dense { step, a_buf } => {
+                let w_buf =
+                    self.timers.time("h2d", || upload(&self.client, &self.factors.w))?;
+                let h_buf = self.timers.time("h2d", || upload(&self.client, &self.factors.h))?;
+                let outs =
+                    self.timers.time("xla_step", || step.call_b(&[a_buf, &w_buf, &h_buf]))?;
+                anyhow::ensure!(outs.len() == 2, "step returned {} outputs", outs.len());
+                self.timers.time("d2h", || -> Result<()> {
+                    self.factors.w = literal_to_mat(&outs[0], v, k)?;
+                    self.factors.h = literal_to_mat(&outs[1], d, k)?;
+                    Ok(())
+                })?;
+            }
+            Mode::Sparse { update_h, update_w, r, p } => {
+                // R = AᵀW on host (CSR SpMM), tiled H update on device.
+                self.timers.time("spmm_r", || {
+                    products::at_times(&self.pool, &self.ds, &self.factors.w, r)
+                });
+                let (w_buf, h_buf, r_buf) = self.timers.time("h2d", || -> Result<_> {
+                    Ok((
+                        upload(&self.client, &self.factors.w)?,
+                        upload(&self.client, &self.factors.h)?,
+                        upload(&self.client, r)?,
+                    ))
+                })?;
+                let outs = self
+                    .timers
+                    .time("xla_update_h", || update_h.call_b(&[&w_buf, &h_buf, &r_buf]))?;
+                self.timers.time("d2h", || -> Result<()> {
+                    self.factors.h = literal_to_mat(&outs[0], d, k)?;
+                    Ok(())
+                })?;
+
+                // P = A·H on host, tiled W update on device.
+                self.timers.time("spmm_p", || {
+                    products::a_times(&self.pool, &self.ds, &self.factors.h, p)
+                });
+                let (h_buf, p_buf) = self.timers.time("h2d", || -> Result<_> {
+                    Ok((upload(&self.client, &self.factors.h)?, upload(&self.client, p)?))
+                })?;
+                let outs = self
+                    .timers
+                    .time("xla_update_w", || update_w.call_b(&[&w_buf, &h_buf, &p_buf]))?;
+                self.timers.time("d2h", || -> Result<()> {
+                    self.factors.w = literal_to_mat(&outs[0], v, k)?;
+                    Ok(())
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn factors(&self) -> &Factors {
+        &self.factors
+    }
+
+    fn timers(&self) -> &PhaseTimers {
+        &self.timers
+    }
+
+    fn reset_timers(&mut self) {
+        self.timers.reset();
+    }
+
+    fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+/// PL-NMF through the XLA/Pallas path (`PL-NMF-accel`).
+pub struct PlNmfXlaEngine;
+
+impl PlNmfXlaEngine {
+    pub fn new(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        artifacts_dir: &str,
+    ) -> Result<XlaEngine> {
+        XlaEngine::create(Family::PlNmf, ds, pool, k, seed, artifacts_dir)
+    }
+}
+
+/// MU through the XLA path (`mu-accel`, the bionmf-MU-gpu stand-in).
+pub struct MuXlaEngine;
+
+impl MuXlaEngine {
+    pub fn new(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        artifacts_dir: &str,
+    ) -> Result<XlaEngine> {
+        XlaEngine::create(Family::Mu, ds, pool, k, seed, artifacts_dir)
+    }
+}

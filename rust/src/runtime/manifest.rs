@@ -1,0 +1,213 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Shape+dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.get("dtype").as_str().unwrap_or("f32").to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    /// Logical function: `plnmf_step`, `plnmf_update_h`, `mu_step`, ...
+    pub fn_name: String,
+    pub dataset: String,
+    pub v: usize,
+    pub d: usize,
+    pub k: usize,
+    pub tile: usize,
+    pub sparse: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<ArtifactMeta> {
+        let get_str = |k: &str| {
+            j.get(k).as_str().map(|s| s.to_string()).ok_or_else(|| anyhow!("missing '{k}'"))
+        };
+        let get_usize =
+            |k: &str| j.get(k).as_usize().ok_or_else(|| anyhow!("missing/invalid '{k}'"));
+        let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+            j.get(k)
+                .as_arr()
+                .ok_or_else(|| anyhow!("missing '{k}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: get_str("name")?,
+            file: get_str("file")?,
+            fn_name: get_str("fn")?,
+            dataset: get_str("dataset")?,
+            v: get_usize("v")?,
+            d: get_usize("d")?,
+            k: get_usize("k")?,
+            tile: get_usize("tile")?,
+            sparse: j.get("sparse").as_bool().unwrap_or(false),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&src).with_context(|| format!("parsing {path:?}"))?;
+        let version = j.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut by_name = BTreeMap::new();
+        for a in j.get("artifacts").as_arr().ok_or_else(|| anyhow!("missing artifacts"))? {
+            let meta = ArtifactMeta::from_json(a)?;
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+
+    /// Find the artifact for a logical function on a (dataset, k) config.
+    pub fn find(&self, fn_name: &str, dataset: &str, k: usize) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|a| a.fn_name == fn_name && a.dataset == dataset && a.k == k)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for fn={fn_name} dataset={dataset} k={k}; \
+                     available: [{}] — extend python/compile/aot.py's build set \
+                     (e.g. `cd python && python -m compile.aot --out-dir ../artifacts \
+                     --config {dataset}:{k}`)",
+                    self.by_name
+                        .values()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("plnmf-manifest-{}-{name}", std::process::id()));
+        p
+    }
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "plnmf_step__tiny_k8_t3", "file": "plnmf_step__tiny_k8_t3.hlo.txt",
+         "fn": "plnmf_step", "dataset": "tiny", "v": 60, "d": 40, "k": 8, "tile": 3,
+         "sparse": false,
+         "inputs": [{"shape": [60,40], "dtype": "f32"}, {"shape": [60,8], "dtype": "f32"},
+                    {"shape": [40,8], "dtype": "f32"}],
+         "outputs": [{"shape": [60,8], "dtype": "f32"}, {"shape": [40,8], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let dir = tmpdir("ok");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.find("plnmf_step", "tiny", 8).unwrap();
+        assert_eq!(a.tile, 3);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![60, 40]);
+        assert_eq!(a.outputs[1].elements(), 320);
+        assert!(m.hlo_path(a).ends_with("plnmf_step__tiny_k8_t3.hlo.txt"));
+        assert!(m.find("plnmf_step", "tiny", 16).is_err());
+        assert!(m.find("mu_step", "tiny", 8).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = tmpdir("badver");
+        write_manifest(&dir, r#"{"version": 99, "artifacts": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_reports_make_artifacts() {
+        let dir = tmpdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

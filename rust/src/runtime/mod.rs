@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `make artifacts`) and executes them on the
+//! PJRT CPU client via the `xla` crate. This is the bridge that makes the
+//! JAX/Pallas layers (L2/L1) callable from the rust coordinator's request
+//! path with zero python involvement.
+//!
+//! * [`manifest`] — artifact metadata (shapes, tile width, dataset).
+//! * [`buffers`] — `Mat` ⇄ `Literal`/`PjRtBuffer` transfer helpers.
+//! * [`engine`] — [`NmfEngine`](crate::nmf::NmfEngine) implementations
+//!   backed by compiled executables: `PlNmfXlaEngine` / `MuXlaEngine`
+//!   (the paper's GPU implementations, re-targeted — DESIGN.md §5).
+//!
+//! Note: `xla::PjRtClient` is `Rc`-backed (not `Send`), so each engine
+//! owns its client and must stay on its creating thread — mirroring the
+//! one-CUDA-context-per-process structure of the paper's GPU code.
+
+pub mod manifest;
+pub mod buffers;
+pub mod engine;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use crate::Result;
+
+/// Map the xla crate's error into anyhow (it is not `Sync`, so `?` can't
+/// cross directly).
+pub(crate) fn xe<T>(r: std::result::Result<T, xla::Error>) -> Result<T> {
+    r.map_err(|e| anyhow::anyhow!("xla: {e}"))
+}
+
+/// Create a PJRT CPU client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xe(xla::PjRtClient::cpu())
+}

@@ -1,0 +1,196 @@
+//! Compressed Sparse Row matrix.
+
+use crate::linalg::Mat;
+use crate::Elem;
+
+/// CSR matrix with `rows+1` row pointers, column indices sorted within
+/// each row, and no explicit zeros (construction de-duplicates by
+/// summing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<Elem>,
+}
+
+impl Csr {
+    /// Build from COO triplets; duplicates are summed, entries with value
+    /// 0 dropped, columns sorted within each row.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, Elem)>,
+    ) -> Csr {
+        let mut by_row: Vec<Vec<(u32, Elem)>> = vec![Vec::new(); rows];
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of {rows}x{cols}");
+            by_row[r].push((c as u32, v));
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for row in &mut by_row {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                let mut v = 0.0;
+                while i < row.len() && row[i].0 == c {
+                    v += row[i].1;
+                    i += 1;
+                }
+                if v != 0.0 {
+                    col_idx.push(c);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows, cols, row_ptr, col_idx, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// (column indices, values) of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[Elem]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Transpose to a new CSR (counting sort by column — O(nnz + cols)).
+    /// Engines keep both `A` and `Aᵀ` resident, as planc does.
+    pub fn transposed(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = counts;
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let dst = next[c as usize];
+                col_idx[dst] = r as u32;
+                values[dst] = v;
+                next[c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, row_ptr, col_idx, values }
+    }
+
+    /// Densify (tests and tiny problems only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                *m.at_mut(r, c as usize) = v;
+            }
+        }
+        m
+    }
+
+    pub fn from_dense(m: &Mat) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                let v = m.at(i, j);
+                if v != 0.0 {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        Csr::from_triplets(m.rows(), m.cols(), trips)
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn fro2(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64 * v as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_triplets_sorts_and_dedups() {
+        let a = Csr::from_triplets(2, 3, vec![(0, 2, 1.0), (0, 0, 2.0), (0, 2, 3.0), (1, 1, 0.0)]);
+        assert_eq!(a.nnz(), 2);
+        let (cols, vals) = a.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[2.0, 4.0]);
+        let (cols1, _) = a.row(1);
+        assert!(cols1.is_empty());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let a = Csr::from_dense(&m);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.to_dense(), m);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut trips = Vec::new();
+        let mut rng = crate::util::rng::Pcg32::seeded(8);
+        for _ in 0..200 {
+            trips.push((rng.below(17) as usize, rng.below(31) as usize, rng.next_f32() + 0.1));
+        }
+        let a = Csr::from_triplets(17, 31, trips);
+        let t = a.transposed();
+        assert_eq!(t.rows(), 31);
+        assert_eq!(t.cols(), 17);
+        assert_eq!(t.nnz(), a.nnz());
+        assert_eq!(t.to_dense(), a.to_dense().transposed());
+        assert_eq!(t.transposed().to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn transpose_has_sorted_columns() {
+        let a = Csr::from_triplets(3, 3, vec![(2, 0, 1.0), (0, 0, 2.0), (1, 0, 3.0)]);
+        let t = a.transposed();
+        let (cols, _) = t.row(0);
+        assert!(cols.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn fro2_matches_dense() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, -2.0]);
+        let a = Csr::from_dense(&m);
+        assert!((a.fro2() - m.fro2()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! Matrix Market I/O (`.mtx`) — coordinate format for sparse, array
+//! format for dense.
+//!
+//! Lets users run the pipeline on *real* datasets (the paper's corpora are
+//! distributed as sparse matrices convertible to MatrixMarket) instead of
+//! the synthetic generators; the examples accept `--matrix file.mtx`.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::Elem;
+
+use super::csr::Csr;
+
+/// Either kind of loaded matrix.
+pub enum Loaded {
+    Sparse(Csr),
+    Dense(Mat),
+}
+
+/// Read a MatrixMarket file (`matrix coordinate real general` or
+/// `matrix array real general`).
+pub fn read_matrix_market(path: &Path) -> Result<Loaded> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut lines = std::io::BufReader::new(file).lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty file"))?
+        .context("reading header")?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 4 || h[0] != "%%MatrixMarket" || h[1] != "matrix" {
+        bail!("not a MatrixMarket matrix file: {header}");
+    }
+    let coordinate = match h[2] {
+        "coordinate" => true,
+        "array" => false,
+        other => bail!("unsupported storage '{other}'"),
+    };
+    if !matches!(h[3], "real" | "integer") {
+        bail!("unsupported field '{}'", h[3]);
+    }
+    let symmetric = h.get(4).map(|s| *s == "symmetric").unwrap_or(false);
+
+    // Skip comments, read the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        if line.starts_with('%') || line.trim().is_empty() {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let dims: Vec<usize> =
+        size_line.split_whitespace().map(|t| t.parse().context("size line")).collect::<Result<_>>()?;
+
+    if coordinate {
+        let (&rows, &cols, &nnz) = match dims.as_slice() {
+            [r, c, n] => (r, c, n),
+            _ => bail!("coordinate size line must be 'rows cols nnz'"),
+        };
+        let mut trips = Vec::with_capacity(nnz);
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let i: usize = it.next().context("row index")?.parse()?;
+            let j: usize = it.next().context("col index")?.parse()?;
+            let v: Elem = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+            if i == 0 || j == 0 || i > rows || j > cols {
+                bail!("index ({i},{j}) out of bounds {rows}x{cols} (1-based)");
+            }
+            trips.push((i - 1, j - 1, v));
+            if symmetric && i != j {
+                trips.push((j - 1, i - 1, v));
+            }
+        }
+        Ok(Loaded::Sparse(Csr::from_triplets(rows, cols, trips)))
+    } else {
+        let (&rows, &cols) = match dims.as_slice() {
+            [r, c] => (r, c),
+            _ => bail!("array size line must be 'rows cols'"),
+        };
+        // Array format is column-major.
+        let mut vals = Vec::with_capacity(rows * cols);
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            for tok in t.split_whitespace() {
+                vals.push(tok.parse::<Elem>()?);
+            }
+        }
+        if vals.len() != rows * cols {
+            bail!("expected {} values, got {}", rows * cols, vals.len());
+        }
+        let mut m = Mat::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                *m.at_mut(i, j) = vals[j * rows + i];
+            }
+        }
+        Ok(Loaded::Dense(m))
+    }
+}
+
+/// Write a CSR matrix in coordinate format.
+pub fn write_sparse(path: &Path, a: &Csr) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
+    for i in 0..a.rows() {
+        let (cols, vals) = a.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(w, "{} {} {}", i + 1, c as usize + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a dense matrix in array format (column-major per the spec).
+pub fn write_dense(path: &Path, m: &Mat) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix array real general")?;
+    writeln!(w, "{} {}", m.rows(), m.cols())?;
+    for j in 0..m.cols() {
+        for i in 0..m.rows() {
+            writeln!(w, "{}", m.at(i, j))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("plnmf-mmio-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let a = Csr::from_triplets(3, 4, vec![(0, 1, 2.5), (2, 3, -1.0), (1, 0, 4.0)]);
+        let p = tmp("sparse.mtx");
+        write_sparse(&p, &a).unwrap();
+        match read_matrix_market(&p).unwrap() {
+            Loaded::Sparse(b) => assert_eq!(a, b),
+            _ => panic!("expected sparse"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 2 + j) as Elem + 0.5);
+        let p = tmp("dense.mtx");
+        write_dense(&p, &m).unwrap();
+        match read_matrix_market(&p).unwrap() {
+            Loaded::Dense(b) => assert_eq!(m, b),
+            _ => panic!("expected dense"),
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "not a matrix\n1 1 1\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n2 1 3.0\n",
+        )
+        .unwrap();
+        match read_matrix_market(&p).unwrap() {
+            Loaded::Sparse(a) => {
+                assert_eq!(a.nnz(), 3);
+                let d = a.to_dense();
+                assert_eq!(d.at(0, 1), 3.0);
+                assert_eq!(d.at(1, 0), 3.0);
+            }
+            _ => panic!(),
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

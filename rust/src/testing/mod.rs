@@ -1,0 +1,5 @@
+//! Mini property-based testing support (proptest is unavailable offline).
+
+pub mod prop;
+
+pub use prop::{Gen, PropConfig};

@@ -1,0 +1,143 @@
+//! A tiny deterministic property-testing harness.
+//!
+//! No shrinking — when a case fails we print the seed and the generated
+//! inputs' description so it can be replayed by constructing the same
+//! [`Gen`]. Determinism guarantees CI reproducibility: each trial `i` of a
+//! property runs on `Pcg32::new(seed, i)`.
+//!
+//! ```
+//! use plnmf::testing::{Gen, PropConfig};
+//! PropConfig::trials(64).run("add is commutative", |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Per-trial input generator.
+pub struct Gen {
+    rng: Pcg32,
+    pub trial: u64,
+    log: Vec<String>,
+}
+
+impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u32) as usize;
+        self.log.push(format!("usize_in({lo},{hi}) -> {v}"));
+        v
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = self.rng.range_f32(lo, hi);
+        self.log.push(format!("f32_in({lo},{hi}) -> {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.below(2) == 1;
+        self.log.push(format!("bool -> {v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        let i = self.rng.below(xs.len() as u32) as usize;
+        self.log.push(format!("choose(#{i} of {})", xs.len()));
+        &xs[i]
+    }
+
+    /// Vector of uniform floats.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let v: Vec<f32> = (0..len).map(|_| self.rng.range_f32(lo, hi)).collect();
+        self.log.push(format!("vec_f32(len={len})"));
+        v
+    }
+
+    /// A fresh RNG derived from this trial (for passing into library code
+    /// that wants its own `Pcg32`).
+    pub fn rng(&mut self) -> Pcg32 {
+        self.rng.split(7777)
+    }
+}
+
+/// Property runner configuration.
+pub struct PropConfig {
+    pub trials: u64,
+    pub seed: u64,
+}
+
+impl PropConfig {
+    pub fn trials(n: u64) -> PropConfig {
+        // PLNMF_PROP_SEED overrides for replay; PLNMF_PROP_TRIALS scales
+        // up for soak runs.
+        let seed = std::env::var("PLNMF_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x9e37);
+        let trials = std::env::var("PLNMF_PROP_TRIALS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(n);
+        PropConfig { trials, seed }
+    }
+
+    /// Run `prop` for each trial; panics (with replay info) on failure.
+    pub fn run(&self, name: &str, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+        for trial in 0..self.trials {
+            let gen_rng = Pcg32::new(self.seed, trial);
+            let mut g = Gen { rng: gen_rng, trial, log: Vec::new() };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            if let Err(payload) = result {
+                eprintln!(
+                    "property '{name}' failed at trial {trial} (seed {}):\n  inputs:\n    {}",
+                    self.seed,
+                    g.log.join("\n    ")
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_simple_property() {
+        PropConfig::trials(32).run("reverse twice is identity", |g| {
+            let n = g.usize_in(0, 50);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    fn reports_failures() {
+        let res = std::panic::catch_unwind(|| {
+            PropConfig { trials: 10, seed: 1 }.run("always fails at trial 3", |g| {
+                assert!(g.trial != 3, "deliberate");
+            });
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn deterministic_inputs_per_trial() {
+        let collect = || {
+            let out = std::sync::Mutex::new(Vec::new());
+            PropConfig { trials: 5, seed: 9 }.run("collect", |g| {
+                out.lock().unwrap().push(g.usize_in(0, 1_000_000));
+            });
+            out.into_inner().unwrap()
+        };
+        assert_eq!(collect(), collect());
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (offline build: no external crates).
+
+pub mod rng;
+pub mod json;
+pub mod timer;
+pub mod stats;
+pub mod logging;
+
+pub use rng::Pcg32;
+pub use timer::{PhaseTimers, Timer};

@@ -1,0 +1,149 @@
+//! Wall-clock timing helpers used by the engines (Table 5 breakdown) and
+//! the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Named accumulating phase timers — this is how the Table 5 breakdown
+/// (SpMM / DMM / DMV vs Phase 1 / Phase 2&3) is collected without
+/// perturbing the hot loop: `accumulate` is two `Instant::now()` calls
+/// around a whole phase, not per-element instrumentation.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    acc: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and accumulate under `name`.
+    #[inline]
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.acc.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += 1;
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k).or_default() += *c;
+        }
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.acc.keys().copied()
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.clear();
+        self.counts.clear();
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Render a two-column breakdown table (seconds).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        let width = self.acc.keys().map(|k| k.len()).max().unwrap_or(8).max(8);
+        for (k, v) in &self.acc {
+            out.push_str(&format!(
+                "{:width$}  {:>10.4} s  (x{})\n",
+                k,
+                v.as_secs_f64(),
+                self.counts[k],
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("phase1", || 42);
+        assert_eq!(v, 42);
+        t.time("phase1", || ());
+        t.time("phase2", || ());
+        assert_eq!(t.count("phase1"), 2);
+        assert_eq!(t.count("phase2"), 1);
+        assert!(t.secs("phase1") >= 0.0);
+        assert_eq!(t.count("missing"), 0);
+        assert_eq!(t.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimers::new();
+        let mut b = PhaseTimers::new();
+        a.add("x", Duration::from_millis(10));
+        b.add("x", Duration::from_millis(5));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert!((a.secs("x") - 0.015).abs() < 1e-9);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = PhaseTimers::new();
+        t.add("spmm", Duration::from_millis(2));
+        t.add("dmm", Duration::from_millis(1));
+        let table = t.table();
+        assert!(table.contains("spmm"));
+        assert!(table.contains("dmm"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Coordinator-level integration: comparison protocol, sharding,
+//! config-file driving, CLI surface.
+
+use plnmf::cli::Args;
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::comparison::{common_error_targets, run_comparison};
+use plnmf::coordinator::shard::{balanced_row_shards, imbalance};
+use plnmf::data::load_dataset;
+use plnmf::data::DataMatrix;
+
+#[test]
+fn comparison_covers_requested_engines_in_order() {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.k = 4;
+    cfg.max_iters = 6;
+    cfg.threads = 2;
+    let engines = [EngineKind::Mu, EngineKind::PlNmf, EngineKind::Bpp];
+    let cmp = run_comparison(&cfg, &engines).unwrap();
+    let names: Vec<&str> = cmp.reports.iter().map(|r| r.engine).collect();
+    assert_eq!(names, vec!["mu-cpu", "plnmf-cpu", "bpp-cpu"]);
+}
+
+#[test]
+fn error_targets_are_reachable_by_all() {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.k = 4;
+    cfg.max_iters = 15;
+    cfg.threads = 2;
+    let cmp = run_comparison(&cfg, &[EngineKind::PlNmf, EngineKind::Mu]).unwrap();
+    let refs: Vec<_> = cmp.reports.iter().collect();
+    let targets = common_error_targets(&refs, 5);
+    assert_eq!(targets.len(), 5);
+    for t in &targets {
+        for r in &cmp.reports {
+            assert!(
+                r.time_to_error(*t).is_some(),
+                "{} cannot reach {t}",
+                r.engine
+            );
+        }
+    }
+}
+
+#[test]
+fn balanced_shards_on_paper_shaped_corpus() {
+    let ds = load_dataset("20news-small", 42).unwrap();
+    let DataMatrix::Sparse(a) = &ds.a else { panic!("expected sparse") };
+    let shards = balanced_row_shards(a, 8);
+    let ib = imbalance(a, &shards);
+    assert!(ib < 1.35, "nnz imbalance {ib}");
+}
+
+#[test]
+fn config_file_roundtrip_drives_run() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("plnmf-it-cfg-{}.json", std::process::id()));
+    std::fs::write(
+        &path,
+        r#"{"dataset": "tiny", "k": 4, "engine": "fasthals", "max_iters": 5, "threads": 2}"#,
+    )
+    .unwrap();
+    let args = Args::parse(
+        ["run", "--config", path.to_str().unwrap(), "--seed", "9"].map(String::from),
+    )
+    .unwrap();
+    let cfg = args.to_run_config().unwrap();
+    assert_eq!(cfg.dataset, "tiny");
+    assert_eq!(cfg.engine, EngineKind::FastHals);
+    assert_eq!(cfg.seed, 9); // CLI override wins
+    let r = plnmf::coordinator::Driver::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(r.iters_run(), 5);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn cli_main_dispatches_datasets_and_model() {
+    // `datasets` and `model` paths (stdout-only commands) must succeed.
+    for argv in [
+        vec!["datasets", "--scale", "small"],
+        vec!["model", "80", "160", "240"],
+        vec!["help"],
+    ] {
+        let args = Args::parse(argv.into_iter().map(String::from)).unwrap();
+        plnmf::bench::cli_main(args).unwrap();
+    }
+}
+
+#[test]
+fn shipped_config_files_parse_and_validate() {
+    for entry in std::fs::read_dir("configs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "json").unwrap_or(false) {
+            let cfg = RunConfig::from_file(path.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+            cfg.validate().unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime integration: the rust coordinator executing the
+//! AOT-compiled JAX/Pallas artifacts, checked against the native
+//! engines. Requires `make artifacts` (the `test` set); tests skip with
+//! a notice when artifacts are absent so `cargo test` stays runnable
+//! standalone.
+
+use std::sync::Arc;
+
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::comparison::run_comparison;
+use plnmf::nmf::NmfEngine;
+use plnmf::parallel::ThreadPool;
+use plnmf::runtime::engine::{MuXlaEngine, PlNmfXlaEngine};
+use plnmf::runtime::Manifest;
+
+fn artifacts_ready(names: &[&str]) -> bool {
+    match Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => {
+            let ok = names.iter().all(|n| m.get(n).is_some());
+            if !ok {
+                eprintln!("SKIP: artifacts missing {names:?} — run `make artifacts`");
+            }
+            ok
+        }
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            false
+        }
+    }
+}
+
+#[test]
+fn manifest_entries_match_files_on_disk() {
+    let Ok(m) = Manifest::load(std::path::Path::new("artifacts")) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    assert!(!m.is_empty());
+    for a in m.iter() {
+        let path = m.hlo_path(a);
+        assert!(path.exists(), "{} missing", path.display());
+        let head = std::fs::read_to_string(&path).unwrap();
+        assert!(head.starts_with("HloModule"), "{}", a.name);
+        // Shape sanity vs profile dims.
+        assert_eq!(a.inputs[0].shape.len(), 2);
+        for spec in a.inputs.iter().chain(a.outputs.iter()) {
+            assert!(spec.elements() > 0);
+        }
+    }
+}
+
+#[test]
+fn xla_plnmf_matches_native_trajectory_dense() {
+    if !artifacts_ready(&["plnmf_step__tiny_k8_t3"]) {
+        return;
+    }
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.k = 8;
+    cfg.max_iters = 10;
+    cfg.threads = 2;
+    let cmp = run_comparison(&cfg, &[EngineKind::PlNmf, EngineKind::PlNmfXla]).unwrap();
+    assert_eq!(cmp.reports.len(), 2, "skipped: {:?}", cmp.skipped);
+    for (a, b) in cmp.reports[0].trace.iter().zip(&cmp.reports[1].trace) {
+        assert!(
+            (a.rel_error - b.rel_error).abs() < 2e-3,
+            "iter {}: native {} vs xla {}",
+            a.iter,
+            a.rel_error,
+            b.rel_error
+        );
+    }
+}
+
+#[test]
+fn xla_plnmf_matches_native_trajectory_sparse() {
+    if !artifacts_ready(&["plnmf_update_h__tiny-sparse_k8_t3", "plnmf_update_w__tiny-sparse_k8_t3"])
+    {
+        return;
+    }
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny-sparse".into();
+    cfg.k = 8;
+    cfg.max_iters = 8;
+    cfg.threads = 2;
+    let cmp = run_comparison(&cfg, &[EngineKind::PlNmf, EngineKind::PlNmfXla]).unwrap();
+    assert_eq!(cmp.reports.len(), 2, "skipped: {:?}", cmp.skipped);
+    for (a, b) in cmp.reports[0].trace.iter().zip(&cmp.reports[1].trace) {
+        assert!(
+            (a.rel_error - b.rel_error).abs() < 2e-3,
+            "iter {}: native {} vs xla {}",
+            a.iter,
+            a.rel_error,
+            b.rel_error
+        );
+    }
+}
+
+#[test]
+fn xla_mu_matches_native_mu() {
+    if !artifacts_ready(&["mu_step__tiny_k8_t3"]) {
+        return;
+    }
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.k = 8;
+    cfg.max_iters = 10;
+    cfg.threads = 2;
+    let cmp = run_comparison(&cfg, &[EngineKind::Mu, EngineKind::MuXla]).unwrap();
+    assert_eq!(cmp.reports.len(), 2);
+    for (a, b) in cmp.reports[0].trace.iter().zip(&cmp.reports[1].trace) {
+        assert!(
+            (a.rel_error - b.rel_error).abs() < 2e-3,
+            "iter {}: {} vs {}",
+            a.iter,
+            a.rel_error,
+            b.rel_error
+        );
+    }
+}
+
+#[test]
+fn xla_engine_reports_device_timers() {
+    if !artifacts_ready(&["plnmf_step__tiny_k8_t3"]) {
+        return;
+    }
+    let ds = Arc::new(plnmf::data::load_dataset("tiny", 42).unwrap());
+    let pool = Arc::new(ThreadPool::new(1));
+    let mut e = PlNmfXlaEngine::new(ds, pool, 8, 42, "artifacts").unwrap();
+    e.step().unwrap();
+    assert_eq!(e.timers().count("xla_step"), 1);
+    assert!(e.timers().count("h2d") >= 2);
+    assert_eq!(e.tile, 3);
+}
+
+#[test]
+fn missing_artifact_is_a_clear_error() {
+    let ds = Arc::new(plnmf::data::load_dataset("tiny", 42).unwrap());
+    let pool = Arc::new(ThreadPool::new(1));
+    let err = match MuXlaEngine::new(ds, pool, 999, 42, "artifacts") {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("k=999 must not have an artifact"),
+    };
+    assert!(
+        err.contains("make artifacts") || err.contains("no artifact") || err.contains("aot"),
+        "unhelpful error: {err}"
+    );
+}
