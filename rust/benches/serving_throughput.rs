@@ -1,0 +1,13 @@
+//! `cargo bench --bench serving_throughput` — docs/sec of batched factor
+//! projection at micro-batch sizes 1/32/512 (the serving-layer
+//! acceptance measurement). Scale via PLNMF_SCALE=small|paper.
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let scale = if std::env::var("PLNMF_SCALE").map(|s| s == "paper").unwrap_or(false) {
+        plnmf::bench::Scale::Paper
+    } else {
+        plnmf::bench::Scale::Small
+    };
+    plnmf::bench::serving::run(scale, std::path::Path::new("results"))
+}

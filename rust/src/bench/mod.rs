@@ -11,6 +11,7 @@
 //! | E6 | §5 cost-model numbers         | [`model_report`] | unit tests + `plnmf model` |
 //! | E7 | §6.3.2 per-iter speedup       | [`fig7`] (`--per-iter`) | same bench |
 //! | E8 | Table 4 dataset statistics    | `plnmf datasets` | — |
+//! | S1 | serving docs/sec @ batch size | [`serving`] | `cargo bench --bench serving_throughput` |
 //!
 //! Every run defaults to the scaled-down `-small` profiles so `cargo
 //! bench` completes in minutes; pass `--scale paper` (or env
@@ -23,6 +24,10 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod table5;
+pub mod serving;
+
+use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::bail;
 
@@ -30,7 +35,11 @@ use crate::cli::Args;
 use crate::config::{profiles, EngineKind, RunConfig};
 use crate::coordinator::{metrics, Driver};
 use crate::data::stats::{table_header, DatasetStats};
+use crate::data::{load_dataset, load_matrix_market, DataMatrix, Dataset};
 use crate::nmf::cost_model;
+use crate::parallel::{pool::default_threads, ThreadPool};
+use crate::serve::{load_model, save_model, ModelMeta, Projector, ProjectorOpts, Queries};
+use crate::util::Timer;
 use crate::Result;
 
 /// Benchmark scale: which dataset profiles a bench touches.
@@ -92,6 +101,8 @@ pub fn cli_main(args: Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("compare") => cmd_compare(&args),
+        Some("transform") => cmd_transform(&args),
+        Some("recommend") => cmd_recommend(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("model") => cmd_model(&args),
         Some("bench") => cmd_bench(&args),
@@ -111,12 +122,19 @@ USAGE: plnmf <command> [--key value ...]
 COMMANDS:
   run        run one engine: --dataset --k --engine --iters --tile --threads
              --seed --trace_path out.csv [--config file.json]
+             [--model m.json — save the trained factors for serving]
   compare    run several engines from one init: --engines a,b,c (default all
              native), same options as run; writes results/compare_*.csv
+  transform  project query columns onto a saved model's topics:
+             --model m.json [--input file.mtx | --dataset name]
+             [--sweeps N --batch B --out h.csv]
+  recommend  top-N items from reconstructions of a saved model:
+             same inputs as transform, plus --top N [--exclude-seen]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
-  bench      regenerate paper artifacts: bench <fig6|fig7|fig8|fig9|table5|all>
+  bench      regenerate paper artifacts: bench
+             <fig6|fig7|fig8|fig9|table5|serving|all>
              [--scale small|paper] [--out-dir results]
   help       this text
 
@@ -130,6 +148,156 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = driver.run()?;
     print!("{}", metrics::summary_table(std::slice::from_ref(&report)));
     println!("\nphase breakdown:\n{}", report.timers.table());
+    if let Some(model_path) = &cfg.model_path {
+        let meta = ModelMeta {
+            engine: report.engine.to_string(),
+            dataset: cfg.dataset.clone(),
+            seed: cfg.seed,
+            iters: report.iters_run(),
+            rel_error: report.final_rel_error,
+        };
+        save_model(Path::new(model_path), driver.engine_mut().factors(), &meta)?;
+        println!("\nmodel saved: {model_path}");
+    }
+    Ok(())
+}
+
+/// Resolve the query batch for `transform` / `recommend`: an explicit
+/// MatrixMarket file (`--input`), an explicit `--dataset`, or the
+/// model's own training dataset profile.
+fn load_queries(args: &Args, cfg: &RunConfig, meta: &ModelMeta, model_v: usize) -> Result<Dataset> {
+    let ds = if let Some(input) = args.opt("input") {
+        load_matrix_market(Path::new(input))?
+    } else if args.opt("dataset").is_some() || meta.dataset.is_empty() {
+        load_dataset(&cfg.dataset, cfg.seed)?
+    } else {
+        // Defaulting to the model's training dataset: use the training
+        // seed too — the synthetic generators are seed-dependent, and
+        // mixing the trained profile with a different seed would
+        // silently project a *different* random corpus.
+        load_dataset(&meta.dataset, meta.seed)?
+    };
+    if ds.v() != model_v {
+        bail!(
+            "query matrix has V={} rows but the model was trained with V={model_v}",
+            ds.v()
+        );
+    }
+    Ok(ds)
+}
+
+fn queries_of(ds: &Dataset) -> Queries<'_> {
+    // Queries are the *columns* of A, i.e. the rows of the resident Aᵀ.
+    match &ds.at {
+        DataMatrix::Sparse(c) => Queries::Sparse(c),
+        DataMatrix::Dense(m) => Queries::Dense(m),
+    }
+}
+
+fn serve_projector(cfg: &RunConfig) -> Result<(Projector, ModelMeta, Arc<ThreadPool>)> {
+    let model_path = cfg.model_path.clone().ok_or_else(|| {
+        anyhow::anyhow!("--model <file> is required (save one with `plnmf run --model m.json`)")
+    })?;
+    let (factors, meta) = load_model(Path::new(&model_path))?;
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let pool = Arc::new(ThreadPool::new(threads));
+    let opts = ProjectorOpts {
+        sweeps: cfg.sweeps,
+        micro_batch: cfg.batch,
+        tile: cfg.tile,
+        cache_bytes: cfg.cache_bytes,
+        tol: cfg.serve_tol,
+    };
+    Ok((Projector::new(factors.w, pool.clone(), opts), meta, pool))
+}
+
+fn cmd_transform(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let (projector, meta, _pool) = serve_projector(&cfg)?;
+    let ds = load_queries(args, &cfg, &meta, projector.v())?;
+    let q = queries_of(&ds);
+    let (m, k) = (q.rows(), projector.k());
+
+    let t = Timer::start();
+    let (h, res) = projector.project_with_residuals(q)?;
+    let secs = t.elapsed_secs();
+    let mean_res = res.iter().sum::<f64>() / res.len().max(1) as f64;
+    let max_res = res.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "transform: {m} docs onto {} (k={k}, tile={}, sweeps={}, batch={})",
+        meta.engine,
+        projector.tile(),
+        cfg.sweeps,
+        cfg.batch
+    );
+    println!(
+        "  {:.4} s  [{:.1} docs/s]   rel residual mean {:.4}, max {:.4}",
+        secs,
+        m as f64 / secs.max(1e-12),
+        mean_res,
+        max_res
+    );
+
+    if let Some(out) = args.opt("out") {
+        let header = std::iter::once("doc".to_string())
+            .chain((0..k).map(|t| format!("h{t}")))
+            .collect::<Vec<_>>()
+            .join(",");
+        let rows: Vec<String> = (0..m)
+            .map(|i| {
+                let mut row = i.to_string();
+                for &x in h.row(i) {
+                    row.push_str(&format!(",{x}"));
+                }
+                row
+            })
+            .collect();
+        report::write_csv(Path::new(out), &header, &rows)?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_recommend(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let (projector, meta, _pool) = serve_projector(&cfg)?;
+    let ds = load_queries(args, &cfg, &meta, projector.v())?;
+    let q = queries_of(&ds);
+    let top = args.opt_usize("top")?.unwrap_or(10);
+    let exclude_seen = args.has_flag("exclude-seen");
+
+    let t = Timer::start();
+    let recs = projector.recommend(q, top, exclude_seen)?;
+    let secs = t.elapsed_secs();
+    println!(
+        "recommend: top-{top} for {} queries in {:.4} s  [{:.1} queries/s]{}",
+        recs.len(),
+        secs,
+        recs.len() as f64 / secs.max(1e-12),
+        if exclude_seen { "  (seen items excluded)" } else { "" }
+    );
+    for (i, rec) in recs.iter().take(5).enumerate() {
+        let line: Vec<String> =
+            rec.iter().map(|(item, score)| format!("{item}:{score:.4}")).collect();
+        println!("  query {i}: {}", line.join("  "));
+    }
+    if recs.len() > 5 {
+        println!("  … ({} more)", recs.len() - 5);
+    }
+
+    if let Some(out) = args.opt("out") {
+        let rows: Vec<String> = recs
+            .iter()
+            .enumerate()
+            .flat_map(|(i, rec)| {
+                rec.iter()
+                    .enumerate()
+                    .map(move |(rank, (item, score))| format!("{i},{rank},{item},{score}"))
+            })
+            .collect();
+        report::write_csv(Path::new(out), "query,rank,item,score", &rows)?;
+        println!("  wrote {out}");
+    }
     Ok(())
 }
 
@@ -213,12 +381,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig8" => fig8::run_sel(scale, &out, &sel)?,
         "fig9" => fig9::run_sel(scale, &out, &sel)?,
         "table5" => table5::run(scale, &out)?,
+        "serving" => serving::run(scale, &out)?,
         "all" => {
             fig6::run_sel(scale, &out, &sel)?;
             fig7::run_sel(scale, &out, &sel)?;
             fig8::run_sel(scale, &out, &sel)?;
             fig9::run_sel(scale, &out, &sel)?;
             table5::run(scale, &out)?;
+            serving::run(scale, &out)?;
         }
         other => bail!("unknown bench '{other}'"),
     }

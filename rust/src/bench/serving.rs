@@ -1,0 +1,108 @@
+//! Serving-layer throughput: docs/sec of batched factor projection at
+//! micro-batch sizes 1 / 32 / 512.
+//!
+//! The measurement behind the serving layer's design claim: batching
+//! amortizes kernel dispatch and turns per-query dot products into panel
+//! GEMMs against the cached Gram, so per-doc cost falls as the
+//! micro-batch grows (until the working set leaves cache). Run via
+//! `cargo bench --bench serving_throughput` or `plnmf bench serving`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::bench::harness::{measure, row, BenchOpts};
+use crate::bench::Scale;
+use crate::data::{load_dataset, DataMatrix};
+use crate::linalg::Mat;
+use crate::nmf::Factors;
+use crate::parallel::{pool::default_threads, ThreadPool};
+use crate::serve::{Projector, ProjectorOpts, Queries};
+use crate::Result;
+
+use super::report::write_csv;
+
+/// Micro-batch sizes the CSV and the acceptance criterion reference.
+pub const BATCH_SIZES: [usize; 3] = [1, 32, 512];
+
+pub fn run(scale: Scale, out: &Path) -> Result<()> {
+    run_with(scale, out, BenchOpts::default())
+}
+
+/// [`run`] with explicit measurement options (tests pass fast settings
+/// directly instead of tunneling them through env vars).
+pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
+    let dataset = match scale {
+        Scale::Small => "20news-small",
+        Scale::Paper => "20news",
+    };
+    let k = scale.k_single();
+    let ds = load_dataset(dataset, 42)?;
+    let threads = default_threads();
+    let pool = Arc::new(ThreadPool::new(threads));
+
+    // Throughput does not depend on factor quality, so skip training and
+    // serve a seeded random model of the right shape.
+    let factors = Factors::random(ds.v(), ds.d(), k, 42);
+
+    // Query set: the first ≤512 documents (columns of A, rows of Aᵀ),
+    // so every batch size projects the same work list.
+    let n_docs = ds.d().min(512);
+    enum Owned {
+        Dense(Mat),
+        Sparse(crate::sparse::Csr),
+    }
+    let owned = match &ds.at {
+        DataMatrix::Sparse(c) => Owned::Sparse(c.slice_rows(0, n_docs)),
+        DataMatrix::Dense(m) => {
+            Owned::Dense(Mat::from_fn(n_docs, m.cols(), |i, j| m.at(i, j)))
+        }
+    };
+    let queries = match &owned {
+        Owned::Dense(m) => Queries::Dense(m),
+        Owned::Sparse(c) => Queries::Sparse(c),
+    };
+
+    println!(
+        "serving throughput on {dataset} (V={}, K={k}, {n_docs} docs, {threads} threads):\n",
+        ds.v()
+    );
+    let mut rows = Vec::new();
+    for &mb in &BATCH_SIZES {
+        let opts = ProjectorOpts { sweeps: 8, micro_batch: mb, ..Default::default() };
+        let projector = Projector::new(factors.w.clone(), pool.clone(), opts);
+        let s = measure(bench_opts, || {
+            projector.project(queries).expect("projection failed");
+        });
+        let docs_per_sec = n_docs as f64 / s.median;
+        println!(
+            "{}  [{:.1} docs/s]",
+            row(&format!("project micro-batch={mb:>3}"), &s),
+            docs_per_sec
+        );
+        rows.push(format!(
+            "{dataset},{k},{mb},{n_docs},{:.6},{:.1}",
+            s.median, docs_per_sec
+        ));
+    }
+    let csv = out.join("serving_throughput.csv");
+    write_csv(&csv, "dataset,k,batch,docs,secs_median,docs_per_sec", &rows)?;
+    println!("\nCSV: {}", csv.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_throughput_csv() {
+        // Tiny smoke run of the full bench path: no training happens —
+        // only projection runs, with single-rep measurement.
+        let dir = std::env::temp_dir().join(format!("plnmf-servebench-{}", std::process::id()));
+        run_with(Scale::Small, &dir, BenchOpts { warmup: 0, reps: 1 }).unwrap();
+        let body = std::fs::read_to_string(dir.join("serving_throughput.csv")).unwrap();
+        assert!(body.starts_with("dataset,k,batch,docs"));
+        assert_eq!(body.lines().count(), 1 + BATCH_SIZES.len());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -93,7 +93,7 @@ impl Args {
 /// Options consumed by subcommands rather than RunConfig.
 const NON_CONFIG_KEYS: &[&str] = &[
     "out", "out-dir", "reps", "warmup", "ks", "tiles", "datasets", "engines", "scale",
-    "target-error", "format", "top",
+    "target-error", "format", "top", "input",
 ];
 
 #[cfg(test)]
@@ -146,5 +146,68 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = parse("run --verbose");
         assert!(a.has_flag("verbose"));
+    }
+
+    fn write_tmp_config(name: &str, body: &str) -> std::path::PathBuf {
+        let path =
+            std::env::temp_dir().join(format!("plnmf-cli-{}-{name}.json", std::process::id()));
+        std::fs::write(&path, body).unwrap();
+        path
+    }
+
+    #[test]
+    fn config_file_loads_fields() {
+        let path = write_tmp_config(
+            "load",
+            r#"{"dataset": "tiny", "k": 8, "engine": "mu", "sweeps": 5}"#,
+        );
+        let a = parse(&format!("run --config {}", path.display()));
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.dataset, "tiny");
+        assert_eq!(cfg.k, 8);
+        assert_eq!(cfg.engine, crate::config::EngineKind::Mu);
+        assert_eq!(cfg.sweeps, 5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_overrides_beat_config_file() {
+        // Precedence: defaults ← --config file ← individual --key value.
+        let path = write_tmp_config(
+            "precedence",
+            r#"{"dataset": "tiny", "k": 8, "seed": 3, "batch": 16}"#,
+        );
+        let a = parse(&format!("run --config {} --k 12 --batch=128", path.display()));
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.k, 12, "CLI --k overrides the file");
+        assert_eq!(cfg.batch, 128, "CLI --batch=v overrides the file");
+        assert_eq!(cfg.dataset, "tiny", "file beats the default");
+        assert_eq!(cfg.seed, 3, "file beats the default");
+        assert_eq!(cfg.max_iters, RunConfig::default().max_iters, "defaults fill the rest");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn transform_subcommand_args() {
+        let a = parse("transform --model m.json --dataset tiny-sparse --sweeps 40 --out h.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("transform"));
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.model_path.as_deref(), Some("m.json"));
+        assert_eq!(cfg.sweeps, 40);
+        assert_eq!(cfg.dataset, "tiny-sparse");
+        // `out` is a subcommand option, not a config field.
+        assert_eq!(a.opt("out"), Some("h.csv"));
+    }
+
+    #[test]
+    fn recommend_subcommand_args() {
+        let a = parse("recommend --model m.json --input q.mtx --top 5 --exclude-seen --batch 32");
+        assert_eq!(a.subcommand.as_deref(), Some("recommend"));
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.model_path.as_deref(), Some("m.json"));
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(a.opt("input"), Some("q.mtx"));
+        assert_eq!(a.opt_usize("top").unwrap(), Some(5));
+        assert!(a.has_flag("exclude-seen"));
     }
 }

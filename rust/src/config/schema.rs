@@ -102,6 +102,17 @@ pub struct RunConfig {
     pub artifacts_dir: String,
     /// Optional path to write the per-iteration trace as CSV.
     pub trace_path: Option<String>,
+    /// Model file: `run` saves trained factors here; `transform` /
+    /// `recommend` load from it (CLI alias: `--model`).
+    pub model_path: Option<String>,
+    /// Serving: HALS sweeps per projection micro-batch.
+    pub sweeps: usize,
+    /// Serving: queries per micro-batch.
+    pub batch: usize,
+    /// Serving: early-stop a micro-batch when a sweep's max entry
+    /// change falls below this (0 = always run all sweeps). Distinct
+    /// from `tol`, whose units are training rel-error improvement.
+    pub serve_tol: f64,
 }
 
 impl Default for RunConfig {
@@ -119,6 +130,10 @@ impl Default for RunConfig {
             record_every: 1,
             artifacts_dir: "artifacts".into(),
             trace_path: None,
+            model_path: None,
+            sweeps: 30,
+            batch: 64,
+            serve_tol: 0.0,
         }
     }
 }
@@ -161,6 +176,15 @@ impl RunConfig {
                 self.trace_path =
                     if v.is_null() { None } else { Some(need_str()?.to_string()) }
             }
+            "model_path" | "model" => {
+                self.model_path =
+                    if v.is_null() { None } else { Some(need_str()?.to_string()) }
+            }
+            "sweeps" => self.sweeps = need_usize()?.max(1),
+            "batch" => self.batch = need_usize()?.max(1),
+            "serve_tol" => {
+                self.serve_tol = v.as_f64().ok_or_else(|| anyhow!("expected number"))?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -179,7 +203,7 @@ impl RunConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("dataset", Json::str(self.dataset.clone())),
             ("k", Json::num(self.k as f64)),
             ("tile", Json::num(self.tile as f64)),
@@ -191,7 +215,14 @@ impl RunConfig {
             ("cache_bytes", Json::num(self.cache_bytes as f64)),
             ("record_every", Json::num(self.record_every as f64)),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
-        ])
+            ("sweeps", Json::num(self.sweeps as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("serve_tol", Json::num(self.serve_tol)),
+        ];
+        if let Some(m) = &self.model_path {
+            pairs.push(("model_path", Json::str(m.clone())));
+        }
+        Json::obj(pairs)
     }
 
     /// Sanity-check ranges that would otherwise fail deep inside engines.
@@ -204,6 +235,12 @@ impl RunConfig {
         }
         if self.max_iters == 0 {
             bail!("max_iters must be >= 1");
+        }
+        if self.sweeps == 0 {
+            bail!("sweeps must be >= 1");
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
         }
         Ok(())
     }
@@ -262,5 +299,25 @@ mod tests {
         assert_eq!(cfg.k, 160);
         assert_eq!(cfg.dataset, "tdt2");
         assert!((cfg.tol - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_keys_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.set_str("sweeps", "12").unwrap();
+        cfg.set_str("batch", "256").unwrap();
+        cfg.set_str("model", "models/a.json").unwrap();
+        cfg.set_str("serve_tol", "1e-6").unwrap();
+        assert_eq!(cfg.sweeps, 12);
+        assert_eq!(cfg.batch, 256);
+        assert_eq!(cfg.model_path.as_deref(), Some("models/a.json"));
+        assert!((cfg.serve_tol - 1e-6).abs() < 1e-15);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.sweeps, 12);
+        assert_eq!(re.batch, 256);
+        assert_eq!(re.model_path.as_deref(), Some("models/a.json"));
+        // Zero-clamping keeps the serving loop well-defined.
+        cfg.set_str("sweeps", "0").unwrap();
+        assert_eq!(cfg.sweeps, 1);
     }
 }

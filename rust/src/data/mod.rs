@@ -13,4 +13,4 @@ pub mod text;
 pub mod image;
 pub mod stats;
 
-pub use datasets::{load_dataset, DataMatrix, Dataset};
+pub use datasets::{load_dataset, load_matrix_market, DataMatrix, Dataset};

@@ -41,6 +41,7 @@ pub mod data;
 pub mod nmf;
 pub mod coordinator;
 pub mod runtime;
+pub mod serve;
 pub mod bench;
 pub mod testing;
 pub mod cli;

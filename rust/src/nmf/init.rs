@@ -28,6 +28,20 @@ impl Factors {
         Factors { w, h }
     }
 
+    /// Build from pre-existing matrices (model loading), validating the
+    /// shared low rank.
+    pub fn from_parts(w: Mat, h: Mat) -> crate::Result<Factors> {
+        anyhow::ensure!(
+            w.cols() == h.cols(),
+            "factor rank mismatch: W is {}x{}, H is {}x{}",
+            w.rows(),
+            w.cols(),
+            h.rows(),
+            h.cols()
+        );
+        Ok(Factors { w, h })
+    }
+
     pub fn v(&self) -> usize {
         self.w.rows()
     }
@@ -83,6 +97,14 @@ mod tests {
             let n: f64 = (0..100).map(|i| (f.w.at(i, j) as f64).powi(2)).sum();
             assert!((n - 1.0).abs() < 1e-5, "col {j} norm² {n}");
         }
+    }
+
+    #[test]
+    fn from_parts_validates_rank() {
+        let w = Mat::zeros(5, 3);
+        let h = Mat::zeros(4, 3);
+        assert!(Factors::from_parts(w, h).is_ok());
+        assert!(Factors::from_parts(Mat::zeros(5, 3), Mat::zeros(4, 2)).is_err());
     }
 
     #[test]

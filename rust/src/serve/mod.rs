@@ -1,0 +1,39 @@
+//! Inference / serving layer: answer projection queries against trained
+//! factors.
+//!
+//! Training (Alg. 2) produces `W` (V×K word/item loadings) and `H` (D×K
+//! document mixtures). Deployments — topic modeling and recommenders, the
+//! paper's motivating applications — then need the *other* direction: given
+//! a stream of previously unseen columns `a ∈ R^V`, recover their mixtures
+//!
+//! ```text
+//! h* = argmin_{h ≥ 0} ‖a − W·h‖₂
+//! ```
+//!
+//! and, for recommender queries, rank the reconstruction `W·h*`.
+//!
+//! The key structural fact (also exploited by MPI-FAUN and the
+//! limited-internal-memory NMF of Nguyen & Ho) is that the whole workload
+//! reuses one small cached Gram `S = WᵀW` (K×K) against tall-skinny
+//! panels: a batch of m queries is an m×K HALS update — *exactly* the
+//! shape `halsops::update_tiled` is engineered for. The serving layer is
+//! therefore a thin orchestration over the training kernels rather than a
+//! second math stack:
+//!
+//! * [`model_io`] — factor save/load (`Factors` ⇄ versioned JSON).
+//! * [`projector`] — [`Projector`]: caches the Gram once per model,
+//!   micro-batches request batches with nnz-balanced shards
+//!   ([`crate::coordinator::shard`]), solves each micro-batch with a few
+//!   tiled HALS sweeps on the thread pool, and serves top-N
+//!   recommendations from `W·h*`.
+//!
+//! CLI front-ends: `plnmf run --model m.json` saves a model after
+//! training; `plnmf transform` / `plnmf recommend` serve it. Throughput:
+//! `cargo bench --bench serving_throughput` (docs/sec at micro-batch
+//! sizes 1/32/512).
+
+pub mod model_io;
+pub mod projector;
+
+pub use model_io::{load_model, save_model, ModelMeta};
+pub use projector::{Projector, ProjectorOpts, Queries};

@@ -1,0 +1,177 @@
+//! Trained-model persistence: `Factors` ⇄ a versioned JSON file.
+//!
+//! The format is deliberately simple — a flat object with shapes, training
+//! provenance, and the two factor matrices as row-major number arrays —
+//! so the Python layer (or a human) can read it without extra tooling.
+//! `f32` entries survive the round trip exactly: they widen to `f64`,
+//! print via Rust's shortest-round-trip formatting, and narrow back.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::linalg::Mat;
+use crate::nmf::Factors;
+use crate::util::json::Json;
+use crate::{Elem, Result};
+
+/// Format marker stored in every model file.
+pub const MODEL_FORMAT: &str = "plnmf-model";
+const MODEL_VERSION: usize = 1;
+
+/// Training provenance carried alongside the factors.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelMeta {
+    /// Engine that produced the factors (e.g. `plnmf-cpu`).
+    pub engine: String,
+    /// Dataset profile the model was trained on.
+    pub dataset: String,
+    pub seed: u64,
+    /// Outer iterations run.
+    pub iters: usize,
+    /// Final relative objective at save time.
+    pub rel_error: f64,
+}
+
+/// Serialize factors + metadata to `path` (parent dirs are created).
+pub fn save_model(path: &Path, factors: &Factors, meta: &ModelMeta) -> Result<()> {
+    let j = Json::obj(vec![
+        ("format", Json::str(MODEL_FORMAT)),
+        ("version", Json::num(MODEL_VERSION as f64)),
+        ("v", Json::num(factors.v() as f64)),
+        ("d", Json::num(factors.d() as f64)),
+        ("k", Json::num(factors.k() as f64)),
+        ("engine", Json::str(meta.engine.clone())),
+        ("dataset", Json::str(meta.dataset.clone())),
+        // As a string: JSON numbers are f64 and would round seeds ≥ 2⁵³.
+        ("seed", Json::str(meta.seed.to_string())),
+        ("iters", Json::num(meta.iters as f64)),
+        ("rel_error", Json::num(meta.rel_error)),
+        ("w", mat_to_json(&factors.w)),
+        ("h", mat_to_json(&factors.h)),
+    ]);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    std::fs::write(path, j.to_string()).with_context(|| format!("writing model {path:?}"))
+}
+
+/// Load a model saved by [`save_model`], validating shapes and
+/// non-negativity.
+pub fn load_model(path: &Path) -> Result<(Factors, ModelMeta)> {
+    let src =
+        std::fs::read_to_string(path).with_context(|| format!("reading model {path:?}"))?;
+    let j = Json::parse(&src).with_context(|| format!("parsing model {path:?}"))?;
+
+    let format = j.get("format").as_str().unwrap_or("");
+    if format != MODEL_FORMAT {
+        bail!("{path:?} is not a plnmf model (format '{format}')");
+    }
+    let version = j.get("version").as_usize().unwrap_or(0);
+    if version != MODEL_VERSION {
+        bail!("unsupported model version {version} (expected {MODEL_VERSION})");
+    }
+    let dim = |key: &str| j.get(key).as_usize().ok_or_else(|| anyhow!("missing '{key}'"));
+    let (v, d, k) = (dim("v")?, dim("d")?, dim("k")?);
+    if k == 0 {
+        bail!("model has k = 0");
+    }
+    let w = json_to_mat(&j, "w", v, k)?;
+    let h = json_to_mat(&j, "h", d, k)?;
+    let meta = ModelMeta {
+        engine: j.get("engine").as_str().unwrap_or("").to_string(),
+        dataset: j.get("dataset").as_str().unwrap_or("").to_string(),
+        seed: match j.get("seed") {
+            Json::Str(s) => s.parse().unwrap_or(0),
+            other => other.as_u64().unwrap_or(0),
+        },
+        iters: j.get("iters").as_usize().unwrap_or(0),
+        rel_error: j.get("rel_error").as_f64().unwrap_or(f64::NAN),
+    };
+    Ok((Factors::from_parts(w, h)?, meta))
+}
+
+fn mat_to_json(m: &Mat) -> Json {
+    Json::Arr(m.data().iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn json_to_mat(j: &Json, key: &str, rows: usize, cols: usize) -> Result<Mat> {
+    let arr = j.get(key).as_arr().ok_or_else(|| anyhow!("model missing '{key}' array"))?;
+    if arr.len() != rows * cols {
+        bail!("'{key}' has {} entries, expected {rows}x{cols}", arr.len());
+    }
+    let mut data = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        let v = x.as_f64().ok_or_else(|| anyhow!("'{key}'[{i}] is not a number"))?;
+        if !v.is_finite() || v < 0.0 {
+            bail!("'{key}'[{i}] = {v} is not a finite non-negative factor entry");
+        }
+        data.push(v as Elem);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("plnmf-model-{}-{name}.json", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let f = Factors::random(17, 9, 5, 3);
+        let meta = ModelMeta {
+            engine: "plnmf-cpu".into(),
+            dataset: "tiny".into(),
+            seed: (1u64 << 53) + 3, // not representable as f64 — string path
+            iters: 20,
+            rel_error: 0.123456,
+        };
+        let path = tmp("roundtrip");
+        save_model(&path, &f, &meta).unwrap();
+        let (re, remeta) = load_model(&path).unwrap();
+        assert_eq!(re.w, f.w);
+        assert_eq!(re.h, f.h);
+        assert_eq!(remeta, meta);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format_and_shape() {
+        let path = tmp("bad");
+        std::fs::write(&path, r#"{"format": "other", "version": 1}"#).unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::write(
+            &path,
+            r#"{"format": "plnmf-model", "version": 1, "v": 2, "d": 1, "k": 2,
+                "w": [1, 2, 3], "h": [1, 2]}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", load_model(&path).unwrap_err());
+        assert!(err.contains("expected 2x2"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_negative_entries() {
+        let path = tmp("neg");
+        std::fs::write(
+            &path,
+            r#"{"format": "plnmf-model", "version": 1, "v": 1, "d": 1, "k": 1,
+                "w": [-1], "h": [1]}"#,
+        )
+        .unwrap();
+        assert!(load_model(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let err = format!("{:#}", load_model(Path::new("/no/such/model.json")).unwrap_err());
+        assert!(err.contains("model"), "{err}");
+    }
+}

@@ -1,0 +1,666 @@
+//! Batched factor projection with a cached Gram.
+//!
+//! A [`Projector`] owns a trained `W` and answers `h* = argmin_{h≥0}
+//! ‖a − W·h‖` for batches of query columns. Construction does the
+//! per-model work once:
+//!
+//! * columns of `W` are L2-normalized into `Ŵ` (inverse norms kept), so
+//!   the cached Gram `Ĝ = ŴᵀŴ` has a **unit diagonal** — which makes the
+//!   `UpdateKind::Plain` HALS kernel an *exact* coordinate step
+//!   (`h_t ← max(ε, h_t + b_t − Σ_j h_j·Ĝ_jt)` needs no `/Ĝ_tt`);
+//! * the tile width is picked from the §5 data-movement model.
+//!
+//! Serving a batch is then:
+//!
+//! 1. shard the m queries into micro-batches — nnz-balanced contiguous
+//!    ranges ([`crate::coordinator::shard::balanced_row_shards`]) for
+//!    sparse batches (bag-of-words queries are Zipf-skewed like the
+//!    training data), even row splits for dense;
+//! 2. per micro-batch, one panel product `B = Q·Ŵ` (CSR SpMM or blocked
+//!    GEMM — the same hot kernels training uses);
+//! 3. a few sweeps of `halsops::update_tiled` (Plain kind) on the m̂×K
+//!    panel against the cached Ĝ — each sweep is the paper's
+//!    three-phase tiled update, thread-parallel over the micro-batch rows;
+//! 4. rescale `h = D⁻¹·ĥ` back to original-`W` coordinates.
+//!
+//! Micro-batches run sequentially because every stage already saturates
+//! the pool internally; the batch-size win comes from amortizing kernel
+//! dispatch and turning per-query dot products into panel GEMMs (the
+//! `serving_throughput` bench measures docs/sec at sizes 1/32/512).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::coordinator::shard::balanced_row_shards;
+use crate::linalg::{gemm, GemmOp, Mat};
+use crate::nmf::cost_model;
+use crate::nmf::halsops::{update_tiled, UpdateKind};
+use crate::nmf::products;
+use crate::parallel::{split_even, ThreadPool};
+use crate::sparse::{spmm::spmm_range, Csr};
+use crate::util::PhaseTimers;
+use crate::{Elem, Result, EPS};
+
+/// A batch of query columns, one query per **row** (m×V — the same
+/// orientation as the resident `Aᵀ`, so a dataset's documents can be
+/// re-projected directly).
+#[derive(Clone, Copy)]
+pub enum Queries<'a> {
+    Dense(&'a Mat),
+    Sparse(&'a Csr),
+}
+
+impl<'a> Queries<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            Queries::Dense(m) => m.rows(),
+            Queries::Sparse(a) => a.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Queries::Dense(m) => m.cols(),
+            Queries::Sparse(a) => a.cols(),
+        }
+    }
+
+    /// ‖a_i‖² of query row `i` (f64 accumulation).
+    fn row_norm2(&self, i: usize) -> f64 {
+        match self {
+            Queries::Dense(m) => m.row(i).iter().map(|&x| x as f64 * x as f64).sum(),
+            Queries::Sparse(a) => {
+                let (_, vals) = a.row(i);
+                vals.iter().map(|&x| x as f64 * x as f64).sum()
+            }
+        }
+    }
+
+    /// Whether item `v` appears in query row `i` (recommender "seen"
+    /// filtering).
+    fn seen(&self, i: usize, v: usize) -> bool {
+        match self {
+            Queries::Dense(m) => m.at(i, v) != 0.0,
+            Queries::Sparse(a) => {
+                let (cols, _) = a.row(i);
+                cols.binary_search(&(v as u32)).is_ok()
+            }
+        }
+    }
+}
+
+/// Serving knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProjectorOpts {
+    /// HALS sweeps per micro-batch (each sweep is one full tiled pass).
+    pub sweeps: usize,
+    /// Queries per micro-batch (the throughput/latency trade-off).
+    pub micro_batch: usize,
+    /// Tile width T; 0 selects via the §5 model.
+    pub tile: usize,
+    /// Cache size for the tile model (see [`crate::config::RunConfig`]).
+    pub cache_bytes: usize,
+    /// Early-stop a micro-batch when the max entry change of a sweep
+    /// falls below `tol` (0 = always run all `sweeps`, deterministic).
+    pub tol: f64,
+}
+
+impl Default for ProjectorOpts {
+    fn default() -> Self {
+        ProjectorOpts {
+            sweeps: 30,
+            micro_batch: 64,
+            tile: 0,
+            cache_bytes: 35 * 1024 * 1024,
+            tol: 0.0,
+        }
+    }
+}
+
+/// A loaded model ready to answer projection queries.
+pub struct Projector {
+    /// Column-normalized factor Ŵ (V×K).
+    w_unit: Mat,
+    /// Original column norms ‖w_t‖ (0 for dead topics).
+    col_norm: Vec<Elem>,
+    /// 1/‖w_t‖ (0 for dead topics): maps unit-space solutions back.
+    col_scale: Vec<Elem>,
+    /// Cached Gram Ĝ = ŴᵀŴ (K×K, unit diagonal up to fp).
+    gram: Mat,
+    pool: Arc<ThreadPool>,
+    opts: ProjectorOpts,
+    tile: usize,
+}
+
+impl Projector {
+    /// Build from a trained `W` (consumed; `H` is not needed for
+    /// serving). Computes the cached Gram once.
+    pub fn new(w: Mat, pool: Arc<ThreadPool>, opts: ProjectorOpts) -> Projector {
+        let (v, k) = (w.rows(), w.cols());
+        assert!(k > 0, "Projector needs k >= 1");
+        let mut w_unit = w;
+
+        // Column norms in f64 (one row-major pass), then scale in place.
+        let mut norm2 = vec![0.0f64; k];
+        for i in 0..v {
+            for (t, &x) in w_unit.row(i).iter().enumerate() {
+                norm2[t] += x as f64 * x as f64;
+            }
+        }
+        let col_norm: Vec<Elem> = norm2.iter().map(|&n| n.sqrt() as Elem).collect();
+        let col_scale: Vec<Elem> =
+            col_norm.iter().map(|&n| if n > 1e-12 { 1.0 / n } else { 0.0 }).collect();
+        for i in 0..v {
+            for (x, &s) in w_unit.row_mut(i).iter_mut().zip(&col_scale) {
+                *x *= s;
+            }
+        }
+
+        let gram = products::factor_gram(&pool, &w_unit);
+        let tile = if opts.tile > 0 {
+            opts.tile.clamp(1, k)
+        } else {
+            cost_model::select_tile(k, opts.cache_bytes).clamp(1, k)
+        };
+        Projector { w_unit, col_norm, col_scale, gram, pool, opts, tile }
+    }
+
+    pub fn v(&self) -> usize {
+        self.w_unit.rows()
+    }
+
+    pub fn k(&self) -> usize {
+        self.w_unit.cols()
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// The cached Gram (K×K) — exposed for diagnostics/tests.
+    pub fn gram(&self) -> &Mat {
+        &self.gram
+    }
+
+    /// Micro-batch row ranges for an m-row batch: nnz-balanced for
+    /// sparse queries, even splits for dense.
+    fn shards(&self, q: Queries<'_>) -> Vec<Range<usize>> {
+        let m = q.rows();
+        let parts = m.div_ceil(self.opts.micro_batch.max(1)).max(1);
+        match q {
+            Queries::Sparse(a) => balanced_row_shards(a, parts),
+            Queries::Dense(_) => split_even(m, parts),
+        }
+    }
+
+    /// Project a batch of queries: returns `H*` (m×K, original-`W`
+    /// coordinates, entries ≥ 0 with exact zeros where the solve hit the
+    /// non-negativity boundary).
+    pub fn project(&self, q: Queries<'_>) -> Result<Mat> {
+        self.project_impl(q, None)
+    }
+
+    /// [`Self::project`] plus per-query relative residuals
+    /// `‖a_i − W·h_i‖ / ‖a_i‖`, computed from the micro-batch's live
+    /// `B` panel — no second pass over the query matrix (the standalone
+    /// [`Self::residuals`] redoes that product).
+    pub fn project_with_residuals(&self, q: Queries<'_>) -> Result<(Mat, Vec<f64>)> {
+        let mut res = vec![0.0f64; q.rows()];
+        let h = self.project_impl(q, Some(&mut res))?;
+        Ok((h, res))
+    }
+
+    fn project_impl(&self, q: Queries<'_>, mut res: Option<&mut [f64]>) -> Result<Mat> {
+        let (m, k) = (q.rows(), self.k());
+        if q.cols() != self.v() {
+            bail!("queries have {} features, model expects V={}", q.cols(), self.v());
+        }
+        let mut h = Mat::zeros(m, k);
+        if m == 0 {
+            return Ok(h);
+        }
+        let mut timers = PhaseTimers::new();
+        for r in self.shards(q) {
+            if !r.is_empty() {
+                self.solve_micro_batch(q, r, &mut h, res.as_deref_mut(), &mut timers);
+            }
+        }
+        Ok(h)
+    }
+
+    /// One micro-batch: panel product, HALS sweeps, rescale into `h`
+    /// (and, when requested, the Gram-expansion residuals while `B` is
+    /// still live).
+    fn solve_micro_batch(
+        &self,
+        q: Queries<'_>,
+        r: Range<usize>,
+        h: &mut Mat,
+        res: Option<&mut [f64]>,
+        timers: &mut PhaseTimers,
+    ) {
+        let (mb, k) = (r.len(), self.k());
+        let mut b = Mat::zeros(mb, k);
+        match q {
+            Queries::Sparse(a) => timers.time("serve_product", || {
+                spmm_range(&self.pool, 1.0, a, r.clone(), &self.w_unit, &mut b.view_mut())
+            }),
+            Queries::Dense(qm) => timers.time("serve_product", || {
+                gemm(
+                    &self.pool,
+                    1.0,
+                    qm.block_view(r.start, r.end, 0, qm.cols()),
+                    self.w_unit.view(),
+                    GemmOp::Assign,
+                    &mut b.view_mut(),
+                )
+            }),
+        }
+
+        let mut g = Mat::zeros(mb, k);
+        let mut scratch = Mat::zeros(mb, k);
+        for _ in 0..self.opts.sweeps.max(1) {
+            update_tiled(
+                &self.pool,
+                &mut g,
+                &mut scratch,
+                &self.gram,
+                &b,
+                self.tile,
+                UpdateKind::Plain,
+                timers,
+                ["serve_phase1", "serve_phase2", "serve_phase3"],
+            );
+            // `scratch` holds the pre-sweep values — a free convergence
+            // probe for the optional early stop.
+            if self.opts.tol > 0.0 && g.max_abs_diff(&scratch) < self.opts.tol {
+                break;
+            }
+        }
+
+        // ĥ → h = D⁻¹ĥ; entries clamped to ε by the kernel are snapped
+        // to exact 0 (they are the active non-negativity constraints).
+        for (local, i) in r.clone().enumerate() {
+            let grow = g.row(local);
+            let hrow = h.row_mut(i);
+            for t in 0..k {
+                let gv = grow[t];
+                hrow[t] = if gv <= EPS { 0.0 } else { gv * self.col_scale[t] };
+            }
+        }
+
+        // Residuals from the live panel: ‖a − Ŵĝ‖² = ‖a‖² − 2ĝᵀb + ĝᵀĜĝ.
+        if let Some(res) = res {
+            for (local, i) in r.enumerate() {
+                let ghat = g.row(local);
+                let a2 = q.row_norm2(i);
+                let mut cross = 0.0f64;
+                let mut quad = 0.0f64;
+                for t in 0..k {
+                    let gt = ghat[t] as f64;
+                    cross += gt * b.at(local, t) as f64;
+                    let gram_row = self.gram.row(t);
+                    let mut s = 0.0f64;
+                    for j in 0..k {
+                        s += gram_row[j] as f64 * ghat[j] as f64;
+                    }
+                    quad += gt * s;
+                }
+                let r2 = (a2 - 2.0 * cross + quad).max(0.0);
+                res[i] = if a2 > 0.0 { (r2 / a2).sqrt() } else { 0.0 };
+            }
+        }
+    }
+
+    /// Relative residuals `‖a_i − W·h_i‖ / ‖a_i‖` for a projected batch,
+    /// computed in O(mK²) via the Gram expansion
+    /// `‖a − Ŵĝ‖² = ‖a‖² − 2·ĝᵀb + ĝᵀĜĝ` (never materializes W·h).
+    pub fn residuals(&self, q: Queries<'_>, h: &Mat) -> Result<Vec<f64>> {
+        let (m, k) = (q.rows(), self.k());
+        if h.rows() != m || h.cols() != k {
+            bail!("h is {}x{}, expected {m}x{k}", h.rows(), h.cols());
+        }
+        if q.cols() != self.v() {
+            bail!("queries have {} features, model expects V={}", q.cols(), self.v());
+        }
+        let mut b = Mat::zeros(m, k);
+        match q {
+            Queries::Sparse(a) => {
+                spmm_range(&self.pool, 1.0, a, 0..m, &self.w_unit, &mut b.view_mut())
+            }
+            Queries::Dense(qm) => gemm(
+                &self.pool,
+                1.0,
+                qm.view(),
+                self.w_unit.view(),
+                GemmOp::Assign,
+                &mut b.view_mut(),
+            ),
+        }
+        let mut out = Vec::with_capacity(m);
+        let mut ghat = vec![0.0f64; k];
+        for i in 0..m {
+            let hrow = h.row(i);
+            for t in 0..k {
+                ghat[t] = hrow[t] as f64 * self.col_norm[t] as f64;
+            }
+            let a2 = q.row_norm2(i);
+            let mut cross = 0.0f64;
+            let mut quad = 0.0f64;
+            for t in 0..k {
+                cross += ghat[t] * b.at(i, t) as f64;
+                let grow = self.gram.row(t);
+                let mut s = 0.0f64;
+                for j in 0..k {
+                    s += grow[j] as f64 * ghat[j];
+                }
+                quad += ghat[t] * s;
+            }
+            let r2 = (a2 - 2.0 * cross + quad).max(0.0);
+            out.push(if a2 > 0.0 { (r2 / a2).sqrt() } else { 0.0 });
+        }
+        Ok(out)
+    }
+
+    /// Project a batch and return, per query, the top-N items by
+    /// reconstruction score `(W·h*)_v`, descending. With `exclude_seen`,
+    /// items already present in the query (non-zero entries) are skipped
+    /// — the standard recommender protocol.
+    pub fn recommend(
+        &self,
+        q: Queries<'_>,
+        top_n: usize,
+        exclude_seen: bool,
+    ) -> Result<Vec<Vec<(u32, Elem)>>> {
+        let h = self.project(q)?;
+        self.recommend_for(q, &h, top_n, exclude_seen)
+    }
+
+    /// Rank items for already-projected mixtures (`h` in original-`W`
+    /// coordinates, as returned by [`Self::project`]).
+    pub fn recommend_for(
+        &self,
+        q: Queries<'_>,
+        h: &Mat,
+        top_n: usize,
+        exclude_seen: bool,
+    ) -> Result<Vec<Vec<(u32, Elem)>>> {
+        let (m, k, v) = (h.rows(), self.k(), self.v());
+        if q.rows() != m {
+            bail!("queries ({}) and h ({m}) row counts differ", q.rows());
+        }
+        if q.cols() != v {
+            bail!("queries have {} features, model expects V={v}", q.cols());
+        }
+        if h.cols() != k {
+            bail!("h has {} columns, model expects K={k}", h.cols());
+        }
+        let top_n = top_n.min(v).max(1);
+        let mb = self.opts.micro_batch.max(1);
+        let mut out = Vec::with_capacity(m);
+        let mut scores_buf = Vec::with_capacity(v);
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + mb).min(m);
+            let width = r1 - r0;
+            // ĝᵀ panel (K×m̂): scores = Ŵ·ĝ = W·h, one blocked GEMM.
+            let mut gt = Mat::zeros(k, width);
+            for j in 0..width {
+                let hrow = h.row(r0 + j);
+                for t in 0..k {
+                    *gt.at_mut(t, j) = hrow[t] * self.col_norm[t];
+                }
+            }
+            let mut scores = Mat::zeros(v, width);
+            gemm(&self.pool, 1.0, self.w_unit.view(), gt.view(), GemmOp::Assign, &mut scores.view_mut());
+            for j in 0..width {
+                let i = r0 + j;
+                scores_buf.clear();
+                for item in 0..v {
+                    if exclude_seen && q.seen(i, item) {
+                        continue;
+                    }
+                    scores_buf.push((item as u32, scores.at(item, j)));
+                }
+                out.push(top_n_desc(&mut scores_buf, top_n));
+            }
+            r0 = r1;
+        }
+        Ok(out)
+    }
+}
+
+/// Partial selection: the `n` largest-score entries, sorted descending.
+fn top_n_desc(scores: &mut Vec<(u32, Elem)>, n: usize) -> Vec<(u32, Elem)> {
+    let n = n.min(scores.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    let desc = |a: &(u32, Elem), b: &(u32, Elem)| {
+        b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    };
+    if n < scores.len() {
+        scores.select_nth_unstable_by(n - 1, desc);
+        scores.truncate(n);
+    }
+    scores.sort_unstable_by(desc);
+    scores.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram::gram_naive;
+    use crate::nmf::nnls::nnls_bpp_rows;
+    use crate::util::rng::Pcg32;
+
+    fn pool(n: usize) -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(n))
+    }
+
+    /// Dense residual by direct evaluation (reference for the Gram form).
+    fn residual_direct(q: &Mat, w: &Mat, h: &Mat, i: usize) -> f64 {
+        let mut r2 = 0.0f64;
+        for vrow in 0..w.rows() {
+            let mut wh = 0.0f64;
+            for t in 0..w.cols() {
+                wh += w.at(vrow, t) as f64 * h.at(i, t) as f64;
+            }
+            let d = q.at(i, vrow) as f64 - wh;
+            r2 += d * d;
+        }
+        r2.sqrt()
+    }
+
+    fn random_problem(v: usize, k: usize, m: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        // Unnormalized W — exercises the unit-column rescaling path.
+        let w = Mat::random(v, k, &mut rng, 0.0, 2.0);
+        let q = Mat::random(m, v, &mut rng, 0.0, 1.0);
+        (w, q)
+    }
+
+    #[test]
+    fn gram_has_unit_diagonal() {
+        let (w, _) = random_problem(40, 7, 1, 1);
+        let p = Projector::new(w, pool(2), ProjectorOpts::default());
+        for t in 0..7 {
+            assert!((p.gram().at(t, t) - 1.0).abs() < 1e-5, "G[{t},{t}]");
+        }
+    }
+
+    #[test]
+    fn projection_matches_bpp_nnls() {
+        // The acceptance bar: a from-scratch NNLS solve of the same
+        // columns (BPP finds the exact KKT point) within 1e-3 rel error.
+        let (w, q) = random_problem(40, 6, 23, 5);
+        let p = Projector::new(
+            w.clone(),
+            pool(3),
+            ProjectorOpts { sweeps: 300, micro_batch: 7, ..Default::default() },
+        );
+        let h = p.project(Queries::Dense(&q)).unwrap();
+
+        // Reference: G = WᵀW, B = Q·W, exact per-row NNLS.
+        let g = gram_naive(&w);
+        let mut b = Mat::zeros(23, 6);
+        gemm(&pool(1), 1.0, q.view(), w.view(), GemmOp::Assign, &mut b.view_mut());
+        let mut h_ref = Mat::zeros(23, 6);
+        nnls_bpp_rows(&ThreadPool::new(1), &g, &b, &mut h_ref);
+
+        for i in 0..23 {
+            let r_hals = residual_direct(&q, &w, &h, i);
+            let r_bpp = residual_direct(&q, &w, &h_ref, i);
+            assert!(
+                r_hals <= r_bpp * 1.001 + 1e-5,
+                "query {i}: hals residual {r_hals} vs bpp {r_bpp}"
+            );
+        }
+    }
+
+    #[test]
+    fn residuals_match_direct_evaluation() {
+        let (w, q) = random_problem(30, 5, 11, 9);
+        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default());
+        let h = p.project(Queries::Dense(&q)).unwrap();
+        let rel = p.residuals(Queries::Dense(&q), &h).unwrap();
+        for i in 0..11 {
+            let direct = residual_direct(&q, &w, &h, i) / q.row(i).iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((rel[i] - direct).abs() < 1e-4, "query {i}: {} vs {}", rel[i], direct);
+        }
+    }
+
+    #[test]
+    fn fused_residuals_match_standalone() {
+        let (w, q) = random_problem(28, 5, 13, 17);
+        let p = Projector::new(
+            w,
+            pool(2),
+            ProjectorOpts { sweeps: 30, micro_batch: 6, ..Default::default() },
+        );
+        let (h, fused) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
+        let standalone = p.residuals(Queries::Dense(&q), &h).unwrap();
+        for (i, (a, b)) in fused.iter().zip(&standalone).enumerate() {
+            assert!((a - b).abs() < 1e-4, "query {i}: fused {a} vs standalone {b}");
+        }
+    }
+
+    #[test]
+    fn micro_batch_size_does_not_change_results() {
+        // The Plain update is row-local, so batching is exact.
+        let (w, q) = random_problem(35, 6, 40, 11);
+        let mut outs = Vec::new();
+        for mb in [1usize, 8, 64] {
+            let p = Projector::new(
+                w.clone(),
+                pool(2),
+                ProjectorOpts { sweeps: 20, micro_batch: mb, ..Default::default() },
+            );
+            outs.push(p.project(Queries::Dense(&q)).unwrap());
+        }
+        assert!(outs[0].max_abs_diff(&outs[1]) < 1e-6);
+        assert!(outs[0].max_abs_diff(&outs[2]) < 1e-6);
+    }
+
+    #[test]
+    fn sparse_and_dense_queries_agree() {
+        let (w, qd) = random_problem(30, 5, 19, 13);
+        // Sparsify: zero out ~70% of entries, then compare both paths.
+        let mut rng = Pcg32::seeded(99);
+        let mut qs = qd.clone();
+        for i in 0..qs.rows() {
+            for x in qs.row_mut(i).iter_mut() {
+                if rng.below(10) < 7 {
+                    *x = 0.0;
+                }
+            }
+        }
+        let csr = Csr::from_dense(&qs);
+        let p = Projector::new(w, pool(3), ProjectorOpts { sweeps: 40, micro_batch: 5, ..Default::default() });
+        let h_dense = p.project(Queries::Dense(&qs)).unwrap();
+        let h_sparse = p.project(Queries::Sparse(&csr)).unwrap();
+        assert!(h_dense.max_abs_diff(&h_sparse) < 1e-4);
+    }
+
+    #[test]
+    fn dead_topic_columns_yield_zero_weights() {
+        let mut rng = Pcg32::seeded(21);
+        let mut w = Mat::random(20, 4, &mut rng, 0.0, 1.0);
+        for i in 0..20 {
+            *w.at_mut(i, 2) = 0.0; // dead topic
+        }
+        let q = Mat::random(6, 20, &mut rng, 0.0, 1.0);
+        let p = Projector::new(w, pool(1), ProjectorOpts::default());
+        let h = p.project(Queries::Dense(&q)).unwrap();
+        for i in 0..6 {
+            assert_eq!(h.at(i, 2), 0.0, "dead topic must get zero weight");
+        }
+    }
+
+    #[test]
+    fn early_stop_matches_full_sweeps() {
+        let (w, q) = random_problem(25, 5, 9, 31);
+        let full = Projector::new(
+            w.clone(),
+            pool(2),
+            ProjectorOpts { sweeps: 200, ..Default::default() },
+        );
+        let early = Projector::new(
+            w,
+            pool(2),
+            ProjectorOpts { sweeps: 200, tol: 1e-7, ..Default::default() },
+        );
+        let hf = full.project(Queries::Dense(&q)).unwrap();
+        let he = early.project(Queries::Dense(&q)).unwrap();
+        assert!(hf.max_abs_diff(&he) < 1e-3);
+    }
+
+    #[test]
+    fn recommend_ranks_reconstruction_and_excludes_seen() {
+        let (w, q) = random_problem(30, 5, 8, 41);
+        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default());
+        let recs = p.recommend(Queries::Dense(&q), 5, false).unwrap();
+        assert_eq!(recs.len(), 8);
+        let h = p.project(Queries::Dense(&q)).unwrap();
+        for (i, rec) in recs.iter().enumerate() {
+            assert_eq!(rec.len(), 5);
+            // Scores descend and match W·h directly.
+            for pair in rec.windows(2) {
+                assert!(pair[0].1 >= pair[1].1);
+            }
+            for &(item, score) in rec {
+                let mut wh = 0.0f64;
+                for t in 0..5 {
+                    wh += w.at(item as usize, t) as f64 * h.at(i, t) as f64;
+                }
+                assert!((score as f64 - wh).abs() < 1e-4);
+            }
+        }
+        // exclude_seen: a sparse query's non-zeros never appear.
+        let csr = Csr::from_dense(&q);
+        let recs = p.recommend(Queries::Sparse(&csr), 3, true).unwrap();
+        for (i, rec) in recs.iter().enumerate() {
+            for &(item, _) in rec {
+                assert!(!Queries::Sparse(&csr).seen(i, item as usize), "query {i} item {item}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_shape_errors() {
+        let (w, _) = random_problem(10, 3, 1, 1);
+        let p = Projector::new(w, pool(1), ProjectorOpts::default());
+        let empty = Mat::zeros(0, 10);
+        assert_eq!(p.project(Queries::Dense(&empty)).unwrap().rows(), 0);
+        let wrong = Mat::zeros(2, 9);
+        assert!(p.project(Queries::Dense(&wrong)).is_err());
+        // recommend_for validates shapes too (h can come from anywhere).
+        let h = Mat::zeros(2, 3);
+        assert!(p.recommend_for(Queries::Dense(&wrong), &h, 2, true).is_err());
+        let h_bad = Mat::zeros(2, 4);
+        let ok_q = Mat::zeros(2, 10);
+        assert!(p.recommend_for(Queries::Dense(&ok_q), &h_bad, 2, false).is_err());
+    }
+}

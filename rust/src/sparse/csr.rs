@@ -109,6 +109,20 @@ impl Csr {
         Csr { rows: self.cols, cols: self.rows, row_ptr, col_idx, values }
     }
 
+    /// Copy the contiguous row window `[r0, r1)` into its own CSR (same
+    /// column space) — used to carve query batches for serving benches.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows, "slice_rows({r0},{r1}) of {} rows", self.rows);
+        let (s, e) = (self.row_ptr[r0], self.row_ptr[r1]);
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            row_ptr: self.row_ptr[r0..=r1].iter().map(|&p| p - s).collect(),
+            col_idx: self.col_idx[s..e].to_vec(),
+            values: self.values[s..e].to_vec(),
+        }
+    }
+
     /// Densify (tests and tiny problems only).
     pub fn to_dense(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
@@ -185,6 +199,26 @@ mod tests {
         let t = a.transposed();
         let (cols, _) = t.row(0);
         assert!(cols.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn slice_rows_windows_match_dense() {
+        let mut trips = Vec::new();
+        let mut rng = crate::util::rng::Pcg32::seeded(9);
+        for _ in 0..150 {
+            trips.push((rng.below(20) as usize, rng.below(9) as usize, rng.next_f32() + 0.1));
+        }
+        let a = Csr::from_triplets(20, 9, trips);
+        let dense = a.to_dense();
+        for (r0, r1) in [(0usize, 20usize), (3, 11), (19, 20), (5, 5)] {
+            let s = a.slice_rows(r0, r1);
+            assert_eq!(s.rows(), r1 - r0);
+            assert_eq!(s.cols(), 9);
+            let sd = s.to_dense();
+            for i in 0..(r1 - r0) {
+                assert_eq!(sd.row(i), dense.row(r0 + i));
+            }
+        }
     }
 
     #[test]

@@ -7,4 +7,4 @@ pub mod spmm;
 pub mod mmio;
 
 pub use csr::Csr;
-pub use spmm::spmm;
+pub use spmm::{spmm, spmm_range};

@@ -62,6 +62,44 @@ pub fn spmm_serial(alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mut ViewMut<'_
     }
 }
 
+/// `c = alpha * a[rows, :] · b` — the row-window variant the serving
+/// layer's micro-batcher uses: the output panel has `rows.len()` rows and
+/// no copy of the CSR window is made. Always assigns (serving panels are
+/// computed fresh per micro-batch).
+pub fn spmm_range(
+    pool: &ThreadPool,
+    alpha: Elem,
+    a: &Csr,
+    rows: std::ops::Range<usize>,
+    b: &Mat,
+    c: &mut ViewMut<'_>,
+) {
+    assert!(rows.end <= a.rows(), "spmm_range window out of bounds");
+    assert_eq!(a.cols(), b.rows(), "spmm_range inner dims");
+    assert_eq!(c.rows, rows.len(), "spmm_range c rows");
+    assert_eq!(c.cols, b.cols(), "spmm_range c cols");
+    let craw = c.raw();
+    let r0 = rows.start;
+    let n = rows.len();
+    let avg_row = (a.nnz() / a.rows().max(1)).max(1);
+    let grain = (1024 / avg_row).clamp(1, 512);
+    pool.parallel_for(n, Some(grain), |rr| {
+        for i in rr {
+            // SAFETY: output row i is exclusive to this task.
+            let crow = unsafe { craw.row_mut(i) };
+            crow.fill(0.0);
+            let (cols, vals) = a.row(r0 + i);
+            for (&d, &v) in cols.iter().zip(vals) {
+                let av = alpha * v;
+                let brow = b.row(d as usize);
+                for j in 0..crow.len() {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +155,23 @@ mod tests {
         spmm(&pool, 1.0, &a, &b, GemmOp::Assign, &mut c1.view_mut());
         spmm_serial(1.0, &a, &b, GemmOp::Assign, &mut c2.view_mut());
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn range_variant_matches_full_product() {
+        let pool = ThreadPool::new(3);
+        let a = random_csr(60, 30, 400, 18);
+        let mut rng = Pcg32::seeded(19);
+        let b = Mat::random(30, 5, &mut rng, 0.0, 1.0);
+        let mut full = Mat::zeros(60, 5);
+        spmm(&pool, 1.0, &a, &b, GemmOp::Assign, &mut full.view_mut());
+        for (r0, r1) in [(0usize, 60usize), (10, 25), (59, 60), (7, 7)] {
+            let mut win = Mat::from_fn(r1 - r0, 5, |_, _| 777.0);
+            spmm_range(&pool, 1.0, &a, r0..r1, &b, &mut win.view_mut());
+            for i in 0..(r1 - r0) {
+                assert_eq!(win.row(i), full.row(r0 + i), "window ({r0},{r1}) row {i}");
+            }
+        }
     }
 
     #[test]

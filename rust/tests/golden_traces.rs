@@ -1,0 +1,117 @@
+//! Golden-trace convergence regression for every native CPU engine.
+//!
+//! Runs a fixed-seed, fixed-thread 10-iteration job per (engine, dataset)
+//! pair and compares the `rel_error` trajectory against a snapshot at
+//! `tests/golden/traces.json`, so convergence behavior cannot silently
+//! drift when kernels are refactored.
+//!
+//! The snapshot is **self-bootstrapping**: on a checkout without the
+//! file (or with `PLNMF_UPDATE_GOLDEN=1`) the test writes the current
+//! trajectories and passes; subsequent runs assert against it. Commit
+//! the generated file to pin behavior in CI. Pinned threads + the
+//! deterministic Pcg32 init make the traces machine-stable; the
+//! tolerance only absorbs floating-point reassociation (e.g. a changed
+//! autovectorization width), not algorithmic drift.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::Driver;
+use plnmf::util::json::Json;
+
+const GOLDEN_PATH: &str = "tests/golden/traces.json";
+const ENGINES: &[&str] = &["plnmf", "fasthals", "mu", "mukl", "bpp"];
+const DATASETS: &[&str] = &["tiny", "tiny-sparse"];
+const ITERS: usize = 10;
+/// |got − want| ≤ TOL · max(1, |want|) per trace point.
+const TOL: f64 = 2e-3;
+
+fn trajectories() -> BTreeMap<String, Vec<f64>> {
+    let mut out = BTreeMap::new();
+    for dataset in DATASETS {
+        for engine in ENGINES {
+            let mut cfg = RunConfig::default();
+            cfg.dataset = dataset.to_string();
+            cfg.engine = EngineKind::from_str(engine).unwrap();
+            cfg.k = 4;
+            cfg.max_iters = ITERS;
+            cfg.record_every = 1;
+            cfg.threads = 2;
+            cfg.seed = 7;
+            let report = Driver::from_config(&cfg)
+                .unwrap_or_else(|e| panic!("{engine}/{dataset}: {e:#}"))
+                .run()
+                .unwrap_or_else(|e| panic!("{engine}/{dataset}: {e:#}"));
+            let trace: Vec<f64> = report.trace.iter().map(|r| r.rel_error).collect();
+            assert_eq!(trace.len(), ITERS + 1, "{engine}/{dataset}: iter 0..=10 recorded");
+            assert!(
+                trace.iter().all(|e| e.is_finite()),
+                "{engine}/{dataset}: non-finite error in {trace:?}"
+            );
+            assert!(
+                trace[ITERS] <= trace[0],
+                "{engine}/{dataset}: error rose {} -> {}",
+                trace[0],
+                trace[ITERS]
+            );
+            out.insert(format!("{engine}/{dataset}"), trace);
+        }
+    }
+    out
+}
+
+fn write_golden(path: &Path, traces: &BTreeMap<String, Vec<f64>>) {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).unwrap();
+    }
+    let obj = Json::Obj(
+        traces
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), Json::Arr(v.iter().map(|&x| Json::Num(x)).collect()))
+            })
+            .collect(),
+    );
+    std::fs::write(path, obj.pretty()).unwrap();
+}
+
+#[test]
+fn convergence_trajectories_match_golden_snapshot() {
+    let got = trajectories();
+    let path = Path::new(GOLDEN_PATH);
+    let update = std::env::var("PLNMF_UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        write_golden(path, &got);
+        eprintln!(
+            "golden snapshot written to {GOLDEN_PATH} ({} traces) — commit it; \
+             subsequent runs assert against it",
+            got.len()
+        );
+        return;
+    }
+
+    let body = std::fs::read_to_string(path).unwrap();
+    let golden = Json::parse(&body).unwrap_or_else(|e| panic!("corrupt {GOLDEN_PATH}: {e}"));
+    for (key, trace) in &got {
+        let want = golden.get(key).as_arr().unwrap_or_else(|| {
+            panic!("{GOLDEN_PATH} has no entry for '{key}' — set PLNMF_UPDATE_GOLDEN=1 to refresh")
+        });
+        assert_eq!(want.len(), trace.len(), "{key}: trace length changed");
+        for (i, (&got_e, want_j)) in trace.iter().zip(want).enumerate() {
+            let want_e = want_j.as_f64().unwrap();
+            assert!(
+                (got_e - want_e).abs() <= TOL * want_e.abs().max(1.0),
+                "{key} iter {i}: rel_error {got_e} drifted from golden {want_e} \
+                 (tol {TOL}; set PLNMF_UPDATE_GOLDEN=1 to accept intentional changes)"
+            );
+        }
+    }
+    // Drift guard in the other direction: a stale snapshot with extra
+    // engines would silently shrink coverage.
+    if let Some(obj) = golden.as_obj() {
+        for key in obj.keys() {
+            assert!(got.contains_key(key), "golden has '{key}' but the test no longer runs it");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! End-to-end serving: train → save → load → project → recommend, both
+//! through the library API and through the exact CLI code path
+//! (`plnmf run --model … && plnmf transform --model …`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use plnmf::bench::cli_main;
+use plnmf::cli::Args;
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::Driver;
+use plnmf::data::{load_dataset, DataMatrix};
+use plnmf::linalg::Mat;
+use plnmf::parallel::ThreadPool;
+use plnmf::serve::{load_model, save_model, ModelMeta, Projector, ProjectorOpts, Queries};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("plnmf-serve-it-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn cli(line: &str) -> anyhow::Result<()> {
+    cli_main(Args::parse(line.split_whitespace().map(|s| s.to_string())).unwrap())
+}
+
+#[test]
+fn trained_model_projects_training_docs_accurately() {
+    // Train on tiny-sparse, then project the training columns: the
+    // recovered mixtures must reconstruct about as well as the trained H
+    // does (the projection solves the same per-column subproblem the H
+    // update solves at convergence).
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny-sparse".into();
+    cfg.engine = EngineKind::PlNmf;
+    cfg.k = 6;
+    cfg.max_iters = 30;
+    cfg.threads = 2;
+    let mut driver = Driver::from_config(&cfg).unwrap();
+    let report = driver.run().unwrap();
+    let factors = driver.engine_mut().factors().clone();
+
+    let pool = Arc::new(ThreadPool::new(2));
+    let opts = ProjectorOpts { sweeps: 100, micro_batch: 16, ..Default::default() };
+    let projector = Projector::new(factors.w.clone(), pool, opts);
+    let queries = match &driver.ds.at {
+        DataMatrix::Sparse(c) => Queries::Sparse(c),
+        DataMatrix::Dense(m) => Queries::Dense(m),
+    };
+    let h = projector.project(queries).unwrap();
+    let res = projector.residuals(queries, &h).unwrap();
+    let mean = res.iter().sum::<f64>() / res.len() as f64;
+    // The global relative error bounds the average per-column fit the
+    // training reached; fresh per-column solves can only do better
+    // column-wise, so the mean per-doc residual must be in the same
+    // regime (allow slack for the EPS floor and the A columns' spread).
+    assert!(
+        mean < report.final_rel_error.max(0.05) * 3.0,
+        "mean projection residual {mean} vs training error {}",
+        report.final_rel_error
+    );
+}
+
+#[test]
+fn model_file_roundtrips_factors_exactly() {
+    let dir = tmpdir("roundtrip");
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.k = 4;
+    cfg.max_iters = 3;
+    cfg.threads = 1;
+    let mut driver = Driver::from_config(&cfg).unwrap();
+    driver.run().unwrap();
+    let factors = driver.engine_mut().factors().clone();
+    let path = dir.join("model.json");
+    let meta = ModelMeta { engine: "plnmf-cpu".into(), ..Default::default() };
+    save_model(&path, &factors, &meta).unwrap();
+    let (re, _) = load_model(&path).unwrap();
+    assert_eq!(re.w, factors.w, "W must round-trip bit-exactly");
+    assert_eq!(re.h, factors.h, "H must round-trip bit-exactly");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_train_save_transform_recommend_roundtrip() {
+    let dir = tmpdir("cli");
+    let model = dir.join("model.json");
+    let hcsv = dir.join("h.csv");
+    let rcsv = dir.join("recs.csv");
+
+    cli(&format!(
+        "run --dataset tiny-sparse --k 4 --iters 4 --threads 2 --model {}",
+        model.display()
+    ))
+    .unwrap();
+    assert!(model.exists(), "run --model must save the factors");
+
+    cli(&format!(
+        "transform --model {} --dataset tiny-sparse --sweeps 40 --batch 8 --out {}",
+        model.display(),
+        hcsv.display()
+    ))
+    .unwrap();
+    let ds = load_dataset("tiny-sparse", 42).unwrap();
+    let body = std::fs::read_to_string(&hcsv).unwrap();
+    let mut lines = body.lines();
+    assert_eq!(lines.next().unwrap(), "doc,h0,h1,h2,h3");
+    assert_eq!(body.lines().count(), 1 + ds.d(), "one row per projected doc");
+    for line in body.lines().skip(1) {
+        assert_eq!(line.split(',').count(), 5);
+        for field in line.split(',').skip(1) {
+            let x: f64 = field.parse().unwrap();
+            assert!(x.is_finite() && x >= 0.0, "mixture weights are non-negative");
+        }
+    }
+
+    cli(&format!(
+        "recommend --model {} --dataset tiny-sparse --top 3 --exclude-seen --out {}",
+        model.display(),
+        rcsv.display()
+    ))
+    .unwrap();
+    let body = std::fs::read_to_string(&rcsv).unwrap();
+    assert_eq!(body.lines().next().unwrap(), "query,rank,item,score");
+    assert_eq!(body.lines().count(), 1 + ds.d() * 3, "top-3 per query");
+
+    // The excluded-seen contract, checked against the actual corpus.
+    let at = match &ds.at {
+        DataMatrix::Sparse(c) => c.clone(),
+        _ => unreachable!("tiny-sparse is sparse"),
+    };
+    for line in body.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let (q, item): (usize, u32) = (f[0].parse().unwrap(), f[2].parse().unwrap());
+        let (cols, _) = at.row(q);
+        assert!(
+            cols.binary_search(&item).is_err(),
+            "query {q} was recommended already-seen item {item}"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn transform_rejects_mismatched_model_and_queries() {
+    let dir = tmpdir("mismatch");
+    let model = dir.join("model.json");
+    cli(&format!("run --dataset tiny --k 3 --iters 2 --threads 1 --model {}", model.display()))
+        .unwrap();
+    // tiny has V=60; tiny-sparse has V=80 — projection must refuse.
+    let err = cli(&format!(
+        "transform --model {} --dataset tiny-sparse",
+        model.display()
+    ))
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("V="), "unhelpful error: {err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn transform_requires_model_option() {
+    let err = cli("transform --dataset tiny").unwrap_err();
+    assert!(format!("{err:#}").contains("--model"), "{err:#}");
+}
+
+#[test]
+fn projector_handles_dense_datasets_too() {
+    let ds = load_dataset("tiny", 5).unwrap();
+    let pool = Arc::new(ThreadPool::new(2));
+    let w = match &ds.a {
+        DataMatrix::Dense(_) => {
+            let mut rng = plnmf::util::rng::Pcg32::seeded(4);
+            Mat::random(ds.v(), 5, &mut rng, 0.0, 1.0)
+        }
+        _ => unreachable!(),
+    };
+    let projector = Projector::new(w, pool, ProjectorOpts::default());
+    let queries = match &ds.at {
+        DataMatrix::Dense(m) => Queries::Dense(m),
+        _ => unreachable!(),
+    };
+    let h = projector.project(queries).unwrap();
+    assert_eq!((h.rows(), h.cols()), (ds.d(), 5));
+    assert!(h.data().iter().all(|&x| x >= 0.0));
+}

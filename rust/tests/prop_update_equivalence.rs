@@ -1,0 +1,174 @@
+//! Property tests (via `testing::PropConfig`) pinning the paper's core
+//! equivalence claim at the public-API level: the tiled three-phase
+//! factor update (Alg. 2) computes the same result as the naive
+//! FAST-HALS update (Alg. 1) up to floating-point reassociation — across
+//! random shapes, tile widths (including `tile ∤ k` and `tile > k`,
+//! which must clamp), thread counts, and both update flavors.
+
+use plnmf::linalg::gram::gram_naive;
+use plnmf::linalg::Mat;
+use plnmf::nmf::halsops::{update_naive, update_tiled, UpdateKind};
+use plnmf::parallel::ThreadPool;
+use plnmf::testing::PropConfig;
+use plnmf::util::rng::Pcg32;
+use plnmf::util::PhaseTimers;
+
+fn random_problem(n: usize, k: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Pcg32::seeded(seed);
+    let x = Mat::random(n, k, &mut rng, 0.0, 1.0);
+    // G: Gram of a random factor — symmetric PSD, the shape the engines
+    // feed the kernels.
+    let f = Mat::random(n.max(k) + 3, k, &mut rng, 0.0, 1.0);
+    let g = gram_naive(&f);
+    let b = Mat::random(n, k, &mut rng, 0.0, 2.0);
+    (x, g, b)
+}
+
+fn max_rel_diff(a: &Mat, b: &Mat) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let (x, y) = (a.at(i, j) as f64, b.at(i, j) as f64);
+            worst = worst.max((x - y).abs() / x.abs().max(y.abs()).max(1e-6));
+        }
+    }
+    worst
+}
+
+#[test]
+fn tiled_equals_naive_across_shapes_tiles_and_threads() {
+    PropConfig::trials(40).run("update_tiled == update_naive", |gen| {
+        let n = gen.usize_in(1, 90);
+        let k = gen.usize_in(1, 17);
+        // Deliberately cover tile ∤ k, tile == k, and tile > k (clamped).
+        let tile = gen.usize_in(1, k + 3);
+        let threads = *gen.choose(&[1usize, 2, 3, 5, 8]);
+        let kind = *gen.choose(&[UpdateKind::Plain, UpdateKind::WithDiagAndNorm]);
+        let seed = gen.usize_in(0, 1_000_000) as u64;
+
+        let (x0, g, b) = random_problem(n, k, seed);
+        let pool = ThreadPool::new(threads);
+        let mut x_naive = x0.clone();
+        let mut x_tiled = x0.clone();
+        let mut scratch = Mat::zeros(n, k);
+        let mut timers = PhaseTimers::new();
+        update_naive(&pool, &mut x_naive, &g, &b, kind, &mut timers, "dmv");
+        update_tiled(
+            &pool,
+            &mut x_tiled,
+            &mut scratch,
+            &g,
+            &b,
+            tile,
+            kind,
+            &mut timers,
+            ["p1", "p2", "p3"],
+        );
+        let d = max_rel_diff(&x_naive, &x_tiled);
+        assert!(
+            d < 1e-3,
+            "n={n} k={k} tile={tile} threads={threads} {kind:?}: rel diff {d}"
+        );
+    });
+}
+
+#[test]
+fn tiled_is_thread_count_invariant() {
+    // Same inputs, different pool widths: the row-sharded kernels must
+    // agree across thread counts within fp tolerance (the normalized
+    // flavor folds per-worker f64 partials, so tiny reassociation slack
+    // is expected — and bounded).
+    PropConfig::trials(16).run("update_tiled invariant in threads", |gen| {
+        let n = gen.usize_in(2, 80);
+        let k = gen.usize_in(2, 12);
+        let tile = gen.usize_in(1, k);
+        let kind = *gen.choose(&[UpdateKind::Plain, UpdateKind::WithDiagAndNorm]);
+        let seed = gen.usize_in(0, 1_000_000) as u64;
+        let (x0, g, b) = random_problem(n, k, seed);
+
+        let mut outs = Vec::new();
+        for threads in [1usize, 3, 7] {
+            let pool = ThreadPool::new(threads);
+            let mut x = x0.clone();
+            let mut scratch = Mat::zeros(n, k);
+            let mut timers = PhaseTimers::new();
+            update_tiled(
+                &pool,
+                &mut x,
+                &mut scratch,
+                &g,
+                &b,
+                tile,
+                kind,
+                &mut timers,
+                ["p1", "p2", "p3"],
+            );
+            outs.push(x);
+        }
+        assert!(max_rel_diff(&outs[0], &outs[1]) < 1e-4, "1 vs 3 threads");
+        assert!(max_rel_diff(&outs[0], &outs[2]) < 1e-4, "1 vs 7 threads");
+    });
+}
+
+#[test]
+fn repeated_sweeps_decrease_the_nnls_objective() {
+    // The serving layer runs the Plain kernel as an iterative NNLS
+    // solver against a *unit-diagonal* Gram (column-normalized factor —
+    // the precondition FAST-HALS maintains and the Projector restores).
+    // Under that precondition each column step is the exact coordinate
+    // minimizer, so every sweep must not increase ½hᵀGh − bᵀh (fp gets a
+    // hair of slack). With G_tt ≠ 1 the Plain step is not a minimizer —
+    // which is exactly why serving normalizes W first.
+    PropConfig::trials(16).run("sweeps are monotone", |gen| {
+        let n = gen.usize_in(1, 40);
+        let k = gen.usize_in(1, 10);
+        let tile = gen.usize_in(1, k);
+        let seed = gen.usize_in(0, 1_000_000) as u64;
+        let mut rng = Pcg32::seeded(seed);
+        let mut f = Mat::random(n.max(k) + 3, k, &mut rng, 0.0, 1.0);
+        plnmf::nmf::init::normalize_w_columns(&mut f);
+        let g = gram_naive(&f);
+        let b = Mat::random(n, k, &mut rng, 0.0, 2.0);
+        let pool = ThreadPool::new(2);
+        let mut x = Mat::zeros(n, k);
+        let mut scratch = Mat::zeros(n, k);
+        let mut timers = PhaseTimers::new();
+
+        let objective = |x: &Mat| -> f64 {
+            let mut total = 0.0f64;
+            for i in 0..n {
+                let row = x.row(i);
+                let brow = b.row(i);
+                for t in 0..k {
+                    let mut gx = 0.0f64;
+                    for j in 0..k {
+                        gx += g.at(t, j) as f64 * row[j] as f64;
+                    }
+                    total += 0.5 * row[t] as f64 * gx - brow[t] as f64 * row[t] as f64;
+                }
+            }
+            total
+        };
+
+        let mut prev = objective(&x);
+        for sweep in 0..6 {
+            update_tiled(
+                &pool,
+                &mut x,
+                &mut scratch,
+                &g,
+                &b,
+                tile,
+                UpdateKind::Plain,
+                &mut timers,
+                ["p1", "p2", "p3"],
+            );
+            let cur = objective(&x);
+            assert!(
+                cur <= prev + 1e-3 * prev.abs().max(1.0),
+                "sweep {sweep}: objective rose {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+    });
+}
