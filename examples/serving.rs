@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     // ---- serve ----------------------------------------------------------
     let pool = Arc::new(plnmf::parallel::ThreadPool::new(2));
     let opts = ProjectorOpts { sweeps: 50, micro_batch: 16, ..Default::default() };
-    let projector = Projector::new(factors.w, pool, opts);
+    let projector = Projector::new(factors.w, pool, opts)?;
 
     let queries = match &driver.ds.at {
         DataMatrix::Sparse(c) => Queries::Sparse(c),

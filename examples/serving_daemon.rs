@@ -1,0 +1,133 @@
+//! Serving-daemon demo: train two models → write a manifest → run the
+//! `plnmf serve` daemon in-process → drive it over TCP/JSON.
+//!
+//! Shows the full multi-model flow: a fleet manifest with nnz-aware
+//! admission, two models serving from their own pools, warm-start cache
+//! hits cutting sweeps-to-tol on a repeated batch, the `stats` op, and a
+//! clean shutdown.
+//!
+//! ```sh
+//! cargo run --release --example serving_daemon
+//! ```
+
+use std::sync::Arc;
+
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::Driver;
+use plnmf::data::DataMatrix;
+use plnmf::serve::registry::manifest_json;
+use plnmf::serve::{
+    queries_to_json, save_model, Client, ModelMeta, ModelRegistry, ProjectorOpts, Queries,
+    RegistryOpts, Server,
+};
+use plnmf::util::json::Json;
+
+fn train(dataset: &str, k: usize, path: &std::path::Path) -> anyhow::Result<Driver> {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.engine = EngineKind::PlNmf;
+    cfg.k = k;
+    cfg.max_iters = 15;
+    cfg.threads = 2;
+    let mut driver = Driver::from_config(&cfg)?;
+    let report = driver.run()?;
+    let meta = ModelMeta {
+        engine: report.engine.to_string(),
+        dataset: dataset.into(),
+        seed: cfg.seed,
+        iters: report.iters_run(),
+        rel_error: report.final_rel_error,
+    };
+    save_model(path, driver.engine_mut().factors(), &meta)?;
+    println!("trained {dataset} (k={k}): rel error {:.4}, saved {path:?}", report.final_rel_error);
+    Ok(driver)
+}
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let dir = std::env::temp_dir().join(format!("plnmf-daemon-demo-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- two models + a fleet manifest ----------------------------------
+    let driver = train("tiny-sparse", 8, &dir.join("news.json"))?;
+    train("tiny", 6, &dir.join("faces.json"))?;
+    let manifest = dir.join("manifest.json");
+    std::fs::write(
+        &manifest,
+        manifest_json(1, 0, &[("news", "news.json"), ("faces", "faces.json")]).pretty(),
+    )?;
+
+    // ---- daemon (exactly what `plnmf serve --models_manifest` builds) ---
+    let registry = ModelRegistry::from_manifest(
+        &manifest,
+        RegistryOpts {
+            threads: 4,
+            per_model_threads: 0, // threads/2 each: both models serve concurrently
+            projector: ProjectorOpts {
+                sweeps: 60,
+                micro_batch: 16,
+                tol: 1e-6,
+                ..Default::default()
+            },
+            warm_cache: 256,
+            max_total_nnz: 0,
+        },
+    )?;
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    println!("daemon listening on {addr} (models: news, faces)");
+    let handle = std::thread::spawn(move || server.run());
+
+    // ---- client: project the training docs, twice -----------------------
+    let mut client = Client::connect(addr)?;
+    let queries = match &driver.ds.at {
+        DataMatrix::Sparse(c) => Queries::Sparse(c),
+        DataMatrix::Dense(m) => Queries::Dense(m),
+    };
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("news")),
+        ("queries", queries_to_json(queries)),
+    ]);
+    for pass in ["cold", "warm (repeat)"] {
+        let resp = client.request_ok(&req)?;
+        let warm = resp.get("warm");
+        println!(
+            "transform [{pass}]: {} docs in {:.4}s — {} sweeps / {} micro-batches, {} cache hits",
+            resp.get("h").as_arr().map(|a| a.len()).unwrap_or(0),
+            resp.get("secs").as_f64().unwrap_or(0.0),
+            warm.get("sweeps").as_usize().unwrap_or(0),
+            warm.get("micro_batches").as_usize().unwrap_or(0),
+            warm.get("hits").as_usize().unwrap_or(0),
+        );
+    }
+
+    // ---- the second model answers on the same socket ---------------------
+    let resp = client.request_ok(&Json::obj(vec![
+        ("op", Json::str("recommend")),
+        ("model", Json::str("faces")),
+        (
+            "queries",
+            Json::arr(vec![Json::Arr(
+                (0..60).map(|i| Json::num(if i % 7 == 0 { 1.0 } else { 0.0 })).collect(),
+            )]),
+        ),
+        ("top", Json::num(3.0)),
+    ]))?;
+    println!("recommend on 'faces': {}", resp.get("recs"));
+
+    // ---- stats + shutdown ------------------------------------------------
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    let news = stats.get("models").get("news");
+    println!(
+        "stats: news cold avg sweeps {:.1} vs warm {:.1} ({} requests total)",
+        news.get("cold").get("avg_sweeps").as_f64().unwrap_or(0.0),
+        news.get("warm").get("avg_sweeps").as_f64().unwrap_or(0.0),
+        stats.get("requests").as_usize().unwrap_or(0),
+    );
+    client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    handle.join().expect("server thread")?;
+    println!("daemon shut down cleanly");
+    std::fs::remove_dir_all(dir).ok();
+    Ok(())
+}

@@ -103,6 +103,7 @@ pub fn cli_main(args: Args) -> Result<()> {
         Some("compare") => cmd_compare(&args),
         Some("transform") => cmd_transform(&args),
         Some("recommend") => cmd_recommend(&args),
+        Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("model") => cmd_model(&args),
         Some("bench") => cmd_bench(&args),
@@ -130,6 +131,10 @@ COMMANDS:
              [--sweeps N --batch B --out h.csv]
   recommend  top-N items from reconstructions of a saved model:
              same inputs as transform, plus --top N [--exclude-seen]
+  serve      long-lived daemon: newline-delimited JSON over TCP, models
+             stay resident (cached Grams, warm-start cache, per-model
+             pools): --models_manifest fleet.json | --model m.json
+             [--serve_port P --warm_cache N --serve_tol T --threads N]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
@@ -208,7 +213,77 @@ fn serve_projector(cfg: &RunConfig) -> Result<(Projector, ModelMeta, Arc<ThreadP
         cache_bytes: cfg.cache_bytes,
         tol: cfg.serve_tol,
     };
-    Ok((Projector::new(factors.w, pool.clone(), opts), meta, pool))
+    Ok((Projector::new(factors.w, pool.clone(), opts)?, meta, pool))
+}
+
+/// Default sweep tolerance `plnmf serve` applies when warm caching is on
+/// but no `serve_tol` was configured: warm starts only pay off through
+/// the convergence early-stop, so a daemon with a warm cache and
+/// `tol = 0` would cache solutions it never benefits from.
+const SERVE_DEFAULT_WARM_TOL: f64 = 1e-5;
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::serve::{ModelRegistry, RegistryOpts, Server};
+
+    let cfg = args.to_run_config()?;
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let serve_tol = if cfg.warm_cache > 0 && cfg.serve_tol == 0.0 {
+        println!(
+            "serve: warm_cache={} with serve_tol=0 — defaulting serve_tol to {SERVE_DEFAULT_WARM_TOL} \
+             (warm starts cut sweeps only via the convergence early-stop)",
+            cfg.warm_cache
+        );
+        SERVE_DEFAULT_WARM_TOL
+    } else {
+        cfg.serve_tol
+    };
+    // Read the manifest once: it sizes the per-model pools AND seeds the
+    // registry (re-reading for each would race a concurrent edit).
+    let manifest = match &cfg.models_manifest {
+        Some(path) => Some(crate::serve::Manifest::load(Path::new(path))?),
+        None => None,
+    };
+    // Per-model pool width: the machine divided across the fleet, so all
+    // models can solve concurrently without oversubscribing cores (a
+    // single `--model` daemon gets the full width).
+    let fleet_size = manifest.as_ref().map(|m| m.models.len()).unwrap_or(1);
+    let ropts = RegistryOpts {
+        threads,
+        per_model_threads: (threads / fleet_size.max(1)).max(1),
+        projector: ProjectorOpts {
+            sweeps: cfg.sweeps,
+            micro_batch: cfg.batch,
+            tile: cfg.tile,
+            cache_bytes: cfg.cache_bytes,
+            tol: serve_tol,
+        },
+        warm_cache: cfg.warm_cache,
+        max_total_nnz: 0,
+    };
+    let registry = if let (Some(manifest), Some(path)) = (&manifest, &cfg.models_manifest) {
+        ModelRegistry::from_loaded(manifest, Path::new(path), ropts)?
+    } else if let Some(model) = &cfg.model_path {
+        let registry = ModelRegistry::new(ropts);
+        registry.load("default", Path::new(model))?;
+        registry
+    } else {
+        bail!(
+            "serve needs --models_manifest fleet.json (multi-model) or --model m.json \
+             (single model, registered as 'default')"
+        );
+    };
+    let names = registry.names();
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", cfg.serve_port as u16)?;
+    println!(
+        "plnmf serve: listening on {} — {} model(s): {} (warm_cache={}, serve_tol={}, {} threads)",
+        server.local_addr(),
+        names.len(),
+        names.join(", "),
+        cfg.warm_cache,
+        serve_tol,
+        threads
+    );
+    server.run()
 }
 
 fn cmd_transform(args: &Args) -> Result<()> {

@@ -1,11 +1,20 @@
 //! Serving-layer throughput: docs/sec of batched factor projection at
-//! micro-batch sizes 1 / 32 / 512.
+//! micro-batch sizes 1 / 32 / 512, plus the daemon round trip.
 //!
-//! The measurement behind the serving layer's design claim: batching
-//! amortizes kernel dispatch and turns per-query dot products into panel
-//! GEMMs against the cached Gram, so per-doc cost falls as the
-//! micro-batch grows (until the working set leaves cache). Run via
-//! `cargo bench --bench serving_throughput` or `plnmf bench serving`.
+//! Two measurements back the serving layer's design claims:
+//!
+//! 1. **Batching** (in-process): batching amortizes kernel dispatch and
+//!    turns per-query dot products into panel GEMMs against the cached
+//!    Gram, so per-doc cost falls as the micro-batch grows (until the
+//!    working set leaves cache).
+//! 2. **Residency + warm starts** (daemon): a `plnmf serve` round trip
+//!    pays TCP + JSON once but *keeps the model resident* — no per-call
+//!    model load or Gram build — and a repeated batch hits the warm
+//!    cache, cutting sweeps-to-tol. The bench reports cold vs warm
+//!    round-trip docs/sec and the per-micro-batch sweep counts.
+//!
+//! Run via `cargo bench --bench serving_throughput` or `plnmf bench
+//! serving`.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,7 +25,12 @@ use crate::data::{load_dataset, DataMatrix};
 use crate::linalg::Mat;
 use crate::nmf::Factors;
 use crate::parallel::{pool::default_threads, ThreadPool};
-use crate::serve::{Projector, ProjectorOpts, Queries};
+use crate::serve::{
+    queries_to_json, save_model, Client, ModelMeta, ModelRegistry, OwnedQueries, Projector,
+    ProjectorOpts, RegistryOpts, Server,
+};
+use crate::util::json::Json;
+use crate::util::Timer;
 use crate::Result;
 
 use super::report::write_csv;
@@ -24,8 +38,23 @@ use super::report::write_csv;
 /// Micro-batch sizes the CSV and the acceptance criterion reference.
 pub const BATCH_SIZES: [usize; 3] = [1, 32, 512];
 
+/// Docs per daemon round trip (kept modest: the payload is JSON text).
+const DAEMON_DOCS: usize = 128;
+
 pub fn run(scale: Scale, out: &Path) -> Result<()> {
     run_with(scale, out, BenchOpts::default())
+}
+
+/// First `n` rows of an owned batch (the daemon round trip uses a
+/// smaller slice of the same work list).
+fn head(q: &OwnedQueries, n: usize) -> OwnedQueries {
+    match q {
+        OwnedQueries::Dense(m) => {
+            let n = n.min(m.rows());
+            OwnedQueries::Dense(Mat::from_fn(n, m.cols(), |i, j| m.at(i, j)))
+        }
+        OwnedQueries::Sparse(c) => OwnedQueries::Sparse(c.slice_rows(0, n.min(c.rows()))),
+    }
 }
 
 /// [`run`] with explicit measurement options (tests pass fast settings
@@ -47,20 +76,13 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     // Query set: the first ≤512 documents (columns of A, rows of Aᵀ),
     // so every batch size projects the same work list.
     let n_docs = ds.d().min(512);
-    enum Owned {
-        Dense(Mat),
-        Sparse(crate::sparse::Csr),
-    }
     let owned = match &ds.at {
-        DataMatrix::Sparse(c) => Owned::Sparse(c.slice_rows(0, n_docs)),
+        DataMatrix::Sparse(c) => OwnedQueries::Sparse(c.slice_rows(0, n_docs)),
         DataMatrix::Dense(m) => {
-            Owned::Dense(Mat::from_fn(n_docs, m.cols(), |i, j| m.at(i, j)))
+            OwnedQueries::Dense(Mat::from_fn(n_docs, m.cols(), |i, j| m.at(i, j)))
         }
     };
-    let queries = match &owned {
-        Owned::Dense(m) => Queries::Dense(m),
-        Owned::Sparse(c) => Queries::Sparse(c),
-    };
+    let queries = owned.as_queries();
 
     println!(
         "serving throughput on {dataset} (V={}, K={k}, {n_docs} docs, {threads} threads):\n",
@@ -69,7 +91,7 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     let mut rows = Vec::new();
     for &mb in &BATCH_SIZES {
         let opts = ProjectorOpts { sweeps: 8, micro_batch: mb, ..Default::default() };
-        let projector = Projector::new(factors.w.clone(), pool.clone(), opts);
+        let projector = Projector::new(factors.w.clone(), pool.clone(), opts)?;
         let s = measure(bench_opts, || {
             projector.project(queries).expect("projection failed");
         });
@@ -87,6 +109,84 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     let csv = out.join("serving_throughput.csv");
     write_csv(&csv, "dataset,k,batch,docs,secs_median,docs_per_sec", &rows)?;
     println!("\nCSV: {}", csv.display());
+
+    daemon_roundtrip(dataset, k, &factors, &owned, threads, out)?;
+    Ok(())
+}
+
+/// S1b: daemon round-trip docs/sec, cold vs warm-cache-hit, against the
+/// in-process numbers above.
+fn daemon_roundtrip(
+    dataset: &str,
+    k: usize,
+    factors: &Factors,
+    owned: &OwnedQueries,
+    threads: usize,
+    out: &Path,
+) -> Result<()> {
+    let dir = std::env::temp_dir().join(format!("plnmf-daemonbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    save_model(&model_path, factors, &ModelMeta::default())?;
+
+    // Single model: give it the whole pool; warm starts need a sweep tol.
+    let registry = ModelRegistry::new(RegistryOpts {
+        threads,
+        per_model_threads: threads,
+        projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
+        warm_cache: 2 * DAEMON_DOCS,
+        max_total_nnz: 0,
+    });
+    registry.load("bench", &model_path)?;
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run());
+
+    let sub = head(owned, DAEMON_DOCS);
+    let docs = sub.as_queries().rows();
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("bench")),
+        ("queries", queries_to_json(sub.as_queries())),
+    ]);
+    let mut client = Client::connect(addr)?;
+
+    println!("\ndaemon round trip ({docs} docs over TCP/JSON, model resident):\n");
+    let mut rows = Vec::new();
+    for mode in ["cold", "warm"] {
+        let t = Timer::start();
+        let resp = client.request_ok(&req)?;
+        let secs = t.elapsed_secs();
+        let sweeps = resp.get("warm").get("sweeps").as_usize().unwrap_or(0);
+        let batches = resp.get("warm").get("micro_batches").as_usize().unwrap_or(0);
+        let hits = resp.get("warm").get("hits").as_usize().unwrap_or(0);
+        let docs_per_sec = docs as f64 / secs.max(1e-12);
+        println!(
+            "daemon transform ({mode})   {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
+             sweeps {sweeps} over {batches} micro-batches, {hits} warm hits"
+        );
+        rows.push(format!(
+            "{dataset},{k},{docs},{mode},{secs:.6},{docs_per_sec:.1},{sweeps},{batches},{hits}"
+        ));
+    }
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    let model = stats.get("models").get("bench");
+    println!(
+        "stats: cold avg sweeps/micro-batch {:.1} vs warm {:.1}",
+        model.get("cold").get("avg_sweeps").as_f64().unwrap_or(0.0),
+        model.get("warm").get("avg_sweeps").as_f64().unwrap_or(0.0),
+    );
+    client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+
+    let csv = out.join("serving_daemon.csv");
+    write_csv(
+        &csv,
+        "dataset,k,docs,mode,secs,docs_per_sec,sweeps,micro_batches,warm_hits",
+        &rows,
+    )?;
+    println!("CSV: {}", csv.display());
+    std::fs::remove_dir_all(dir).ok();
     Ok(())
 }
 
@@ -95,14 +195,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn writes_throughput_csv() {
+    fn writes_throughput_and_daemon_csvs() {
         // Tiny smoke run of the full bench path: no training happens —
-        // only projection runs, with single-rep measurement.
+        // only projection runs, with single-rep measurement, plus one
+        // cold + one warm daemon round trip.
         let dir = std::env::temp_dir().join(format!("plnmf-servebench-{}", std::process::id()));
         run_with(Scale::Small, &dir, BenchOpts { warmup: 0, reps: 1 }).unwrap();
         let body = std::fs::read_to_string(dir.join("serving_throughput.csv")).unwrap();
         assert!(body.starts_with("dataset,k,batch,docs"));
         assert_eq!(body.lines().count(), 1 + BATCH_SIZES.len());
+
+        let daemon = std::fs::read_to_string(dir.join("serving_daemon.csv")).unwrap();
+        assert!(daemon.starts_with("dataset,k,docs,mode"));
+        let lines: Vec<&str> = daemon.lines().collect();
+        assert_eq!(lines.len(), 3, "header + cold + warm: {daemon}");
+        assert!(lines[1].contains(",cold,"));
+        assert!(lines[2].contains(",warm,"));
+        // The warm pass must not sweep more than the cold pass.
+        let sweeps = |line: &str| -> usize {
+            line.split(',').nth(6).unwrap().parse().unwrap()
+        };
+        assert!(sweeps(lines[2]) <= sweeps(lines[1]), "{daemon}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 
@@ -77,13 +77,16 @@ impl Args {
             None => RunConfig::default(),
         };
         for (k, v) in &self.options {
-            if k == "config" {
+            // Skip keys that aren't config fields (commands own those).
+            if k == "config" || NON_CONFIG_KEYS.contains(&k.as_str()) {
                 continue;
             }
-            // Skip keys that aren't config fields (commands own those).
-            if cfg.set_str(k, v).is_err() && !NON_CONFIG_KEYS.contains(&k.as_str()) {
+            if !RunConfig::is_config_key(k) {
                 bail!("unknown option --{k}");
             }
+            // A real option with a bad value surfaces its own message
+            // (e.g. "sweeps must be >= 1"), not "unknown option".
+            cfg.set_str(k, v).with_context(|| format!("--{k}"))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -139,7 +142,18 @@ mod tests {
     #[test]
     fn unknown_option_rejected() {
         let a = parse("run --bogus 3");
-        assert!(a.to_run_config().is_err());
+        let err = format!("{:#}", a.to_run_config().unwrap_err());
+        assert!(err.contains("unknown option --bogus"), "{err}");
+    }
+
+    #[test]
+    fn bad_value_for_real_option_shows_its_own_error() {
+        // Regression: a validation failure on a known flag must surface
+        // the validation message, not masquerade as an unknown option.
+        let a = parse("run --sweeps 0");
+        let err = format!("{:#}", a.to_run_config().unwrap_err());
+        assert!(err.contains("sweeps must be >= 1"), "{err}");
+        assert!(!err.contains("unknown option"), "{err}");
     }
 
     #[test]

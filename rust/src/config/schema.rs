@@ -75,6 +75,13 @@ impl EngineKind {
     }
 }
 
+/// Every key (and alias) accepted by [`RunConfig::set`].
+const KNOWN_KEYS: &[&str] = &[
+    "dataset", "k", "tile", "t", "engine", "max_iters", "iters", "tol", "threads", "seed",
+    "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
+    "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
+];
+
 /// Full description of one NMF run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -113,6 +120,13 @@ pub struct RunConfig {
     /// change falls below this (0 = always run all sweeps). Distinct
     /// from `tol`, whose units are training rel-error improvement.
     pub serve_tol: f64,
+    /// Daemon: TCP port for `plnmf serve` (0 = OS-assigned ephemeral).
+    pub serve_port: usize,
+    /// Daemon: path to a `plnmf-manifest` JSON naming the model fleet.
+    pub models_manifest: Option<String>,
+    /// Daemon: warm-start cache capacity per model, in cached query
+    /// solutions (0 disables warm starts).
+    pub warm_cache: usize,
 }
 
 impl Default for RunConfig {
@@ -134,6 +148,9 @@ impl Default for RunConfig {
             sweeps: 30,
             batch: 64,
             serve_tol: 0.0,
+            serve_port: 7878,
+            models_manifest: None,
+            warm_cache: 256,
         }
     }
 }
@@ -153,6 +170,14 @@ impl RunConfig {
         let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let j = Json::parse(&src).with_context(|| format!("parsing {path}"))?;
         Self::from_json(&j)
+    }
+
+    /// Whether `key` names a [`RunConfig`] field (including aliases).
+    /// Kept in sync with [`Self::set`]'s match arms (asserted by the
+    /// `known_keys_match_set` test) so the CLI can distinguish "no such
+    /// option" from "bad value for a real option".
+    pub fn is_config_key(key: &str) -> bool {
+        KNOWN_KEYS.contains(&key)
     }
 
     /// Apply one `key = value` override (shared by JSON and CLI paths).
@@ -180,11 +205,30 @@ impl RunConfig {
                 self.model_path =
                     if v.is_null() { None } else { Some(need_str()?.to_string()) }
             }
-            "sweeps" => self.sweeps = need_usize()?.max(1),
-            "batch" => self.batch = need_usize()?.max(1),
+            // No silent `.max(1)` clamps: a zero here is a config bug
+            // the user should hear about, not a value to paper over.
+            "sweeps" => match need_usize()? {
+                0 => bail!("sweeps must be >= 1"),
+                n => self.sweeps = n,
+            },
+            "batch" => match need_usize()? {
+                0 => bail!("batch must be >= 1"),
+                n => self.batch = n,
+            },
             "serve_tol" => {
                 self.serve_tol = v.as_f64().ok_or_else(|| anyhow!("expected number"))?
             }
+            "serve_port" => match need_usize()? {
+                p if p > u16::MAX as usize => {
+                    bail!("serve_port must fit a TCP port (0..=65535), got {p}")
+                }
+                p => self.serve_port = p,
+            },
+            "models_manifest" | "manifest" => {
+                self.models_manifest =
+                    if v.is_null() { None } else { Some(need_str()?.to_string()) }
+            }
+            "warm_cache" => self.warm_cache = need_usize()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -218,9 +262,14 @@ impl RunConfig {
             ("sweeps", Json::num(self.sweeps as f64)),
             ("batch", Json::num(self.batch as f64)),
             ("serve_tol", Json::num(self.serve_tol)),
+            ("serve_port", Json::num(self.serve_port as f64)),
+            ("warm_cache", Json::num(self.warm_cache as f64)),
         ];
         if let Some(m) = &self.model_path {
             pairs.push(("model_path", Json::str(m.clone())));
+        }
+        if let Some(m) = &self.models_manifest {
+            pairs.push(("models_manifest", Json::str(m.clone())));
         }
         Json::obj(pairs)
     }
@@ -241,6 +290,9 @@ impl RunConfig {
         }
         if self.batch == 0 {
             bail!("batch must be >= 1");
+        }
+        if self.serve_port > u16::MAX as usize {
+            bail!("serve_port must fit a TCP port (0..=65535)");
         }
         Ok(())
     }
@@ -316,8 +368,52 @@ mod tests {
         assert_eq!(re.sweeps, 12);
         assert_eq!(re.batch, 256);
         assert_eq!(re.model_path.as_deref(), Some("models/a.json"));
-        // Zero-clamping keeps the serving loop well-defined.
-        cfg.set_str("sweeps", "0").unwrap();
-        assert_eq!(cfg.sweeps, 1);
+        // Degenerate serving knobs are rejected loudly, not clamped.
+        assert!(cfg.set_str("sweeps", "0").is_err());
+        assert!(cfg.set_str("batch", "0").is_err());
+        assert_eq!(cfg.sweeps, 12, "failed set must not alter the config");
+    }
+
+    #[test]
+    fn known_keys_match_set() {
+        // Every KNOWN_KEYS entry must reach a real `set` arm (its error,
+        // if any, is about the value — never "unknown config key"), and
+        // keys outside the list must be rejected as unknown.
+        let mut cfg = RunConfig::default();
+        for key in KNOWN_KEYS {
+            assert!(RunConfig::is_config_key(key));
+            if let Err(e) = cfg.set(key, &Json::Null) {
+                let msg = format!("{e:#}");
+                assert!(
+                    !msg.contains("unknown config key"),
+                    "'{key}' is listed in KNOWN_KEYS but set() does not know it"
+                );
+            }
+        }
+        assert!(!RunConfig::is_config_key("bogus"));
+        let err = format!("{:#}", cfg.set("bogus", &Json::Null).unwrap_err());
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn daemon_keys_roundtrip_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.set_str("serve_port", "9090").unwrap();
+        cfg.set_str("models_manifest", "models/manifest.json").unwrap();
+        cfg.set_str("warm_cache", "512").unwrap();
+        assert_eq!(cfg.serve_port, 9090);
+        assert_eq!(cfg.models_manifest.as_deref(), Some("models/manifest.json"));
+        assert_eq!(cfg.warm_cache, 512);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.serve_port, 9090);
+        assert_eq!(re.models_manifest.as_deref(), Some("models/manifest.json"));
+        assert_eq!(re.warm_cache, 512);
+        // `manifest` is an accepted alias; ports must fit u16.
+        cfg.set_str("manifest", "other.json").unwrap();
+        assert_eq!(cfg.models_manifest.as_deref(), Some("other.json"));
+        assert!(cfg.set_str("serve_port", "70000").is_err());
+        // warm_cache 0 (disabled) is a valid setting.
+        cfg.set_str("warm_cache", "0").unwrap();
+        assert_eq!(cfg.warm_cache, 0);
     }
 }

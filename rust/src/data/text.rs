@@ -78,7 +78,7 @@ fn doc_lengths(d: usize, nnz: usize, v: usize, rng: &mut Pcg32) -> Vec<usize> {
     // Distribute the remainder to the largest fractional parts.
     if total < nnz {
         let mut need = nnz - total;
-        fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        fracs.sort_by(|a, b| b.0.total_cmp(&a.0));
         let mut cursor = 0;
         while need > 0 {
             let (_, i) = fracs[cursor % fracs.len()];
@@ -124,7 +124,7 @@ fn zipf_cdf(v: usize, s: f64) -> Vec<f64> {
 #[inline]
 fn zipf_sample(cdf: &[f64], rng: &mut Pcg32) -> usize {
     let u = rng.next_f64();
-    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+    match cdf.binary_search_by(|p| p.total_cmp(&u)) {
         Ok(i) => i,
         Err(i) => i.min(cdf.len() - 1),
     }

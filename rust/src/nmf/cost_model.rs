@@ -163,7 +163,7 @@ mod tests {
             let vol_sel = tiled_w_update_volume(10_000, k, sel, c);
             let best = (1..=k)
                 .map(|t| (t, tiled_w_update_volume(10_000, k, t, c)))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             // Selection must be within 2% of the integer argmin (rounding
             // the continuous optimum can be off by one).

@@ -1,5 +1,5 @@
 //! Inference / serving layer: answer projection queries against trained
-//! factors.
+//! factors — in-process or through a long-lived daemon.
 //!
 //! Training (Alg. 2) produces `W` (V×K word/item loadings) and `H` (D×K
 //! document mixtures). Deployments — topic modeling and recommenders, the
@@ -24,16 +24,29 @@
 //! * [`projector`] — [`Projector`]: caches the Gram once per model,
 //!   micro-batches request batches with nnz-balanced shards
 //!   ([`crate::coordinator::shard`]), solves each micro-batch with a few
-//!   tiled HALS sweeps on the thread pool, and serves top-N
-//!   recommendations from `W·h*`.
+//!   tiled HALS sweeps on the thread pool, serves top-N recommendations
+//!   from `W·h*`, and warm-starts repeat queries from a fingerprint-keyed
+//!   LRU ([`WarmCache`]).
+//! * [`registry`] — [`ModelRegistry`]: named models as independent
+//!   serving shards (own pool, own queue, own warm cache), loaded from a
+//!   versioned manifest with nnz-aware admission and hot reload.
+//! * [`server`] — [`Server`]: the `plnmf serve` daemon speaking
+//!   newline-delimited JSON over TCP, keeping every model's factors and
+//!   Gram resident across requests (the whole point of the cached-Gram
+//!   design), plus the protocol [`Client`].
 //!
 //! CLI front-ends: `plnmf run --model m.json` saves a model after
-//! training; `plnmf transform` / `plnmf recommend` serve it. Throughput:
-//! `cargo bench --bench serving_throughput` (docs/sec at micro-batch
-//! sizes 1/32/512).
+//! training; `plnmf transform` / `plnmf recommend` serve it one-shot;
+//! `plnmf serve` keeps it resident. Throughput: `cargo bench --bench
+//! serving_throughput` (docs/sec at micro-batch sizes 1/32/512, plus the
+//! daemon round-trip and warm-start deltas).
 
 pub mod model_io;
 pub mod projector;
+pub mod registry;
+pub mod server;
 
 pub use model_io::{load_model, save_model, ModelMeta};
-pub use projector::{Projector, ProjectorOpts, Queries};
+pub use projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
+pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts};
+pub use server::{queries_to_json, Client, OwnedQueries, Server};

@@ -1,4 +1,4 @@
-//! Batched factor projection with a cached Gram.
+//! Batched factor projection with a cached Gram and a warm-start cache.
 //!
 //! A [`Projector`] owns a trained `W` and answers `h* = argmin_{h≥0}
 //! ‖a − W·h‖` for batches of query columns. Construction does the
@@ -27,7 +27,23 @@
 //! the pool internally; the batch-size win comes from amortizing kernel
 //! dispatch and turning per-query dot products into panel GEMMs (the
 //! `serving_throughput` bench measures docs/sec at sizes 1/32/512).
+//!
+//! ## Warm starts
+//!
+//! Long-lived deployments (the `plnmf serve` daemon) see repeat and
+//! near-repeat queries: the same user profile re-projected after one new
+//! click, the same document re-ranked under a different `top_n`. A
+//! [`WarmCache`] exploits this: each solved query row is fingerprinted
+//! (support + magnitude-quantized values) and its unit-space solution ĥ
+//! cached in an LRU. On a hit, the HALS sweeps start from the cached ĥ
+//! instead of zero; with a convergence tolerance (`ProjectorOpts::tol`
+//! > 0) a repeat query stops after a single verification sweep instead of
+//! re-running the whole schedule. Warm starts change only the *starting
+//! point* of a convergent fixed-point iteration, so results agree with
+//! cold starts to within the sweep tolerance; run with the cache disabled
+//! when bit-exact reproducibility matters.
 
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::Arc;
 
@@ -78,6 +94,15 @@ impl<'a> Queries<'a> {
         }
     }
 
+    /// Whether query row `i` holds no information (all-zero). `Csr`
+    /// construction drops explicit zeros, so an empty row is exact.
+    fn row_is_zero(&self, i: usize) -> bool {
+        match self {
+            Queries::Dense(m) => m.row(i).iter().all(|&x| x == 0.0),
+            Queries::Sparse(a) => a.row(i).1.is_empty(),
+        }
+    }
+
     /// Whether item `v` appears in query row `i` (recommender "seen"
     /// filtering).
     fn seen(&self, i: usize, v: usize) -> bool {
@@ -119,6 +144,151 @@ impl Default for ProjectorOpts {
     }
 }
 
+impl ProjectorOpts {
+    /// Reject degenerate configurations up front instead of patching them
+    /// with scattered `.max(1)` clamps deep in the solve loop.
+    pub fn validate(&self) -> Result<()> {
+        if self.sweeps == 0 {
+            bail!("ProjectorOpts.sweeps must be >= 1 (0 would run no solve at all)");
+        }
+        if self.micro_batch == 0 {
+            bail!("ProjectorOpts.micro_batch must be >= 1");
+        }
+        if !(self.tol >= 0.0) {
+            bail!("ProjectorOpts.tol must be a non-negative number, got {}", self.tol);
+        }
+        Ok(())
+    }
+}
+
+/// Per-call solve statistics: how much work a projection actually did.
+///
+/// `sweeps` accumulates over micro-batches, so `sweeps / micro_batches`
+/// is the average sweeps-to-`tol` — the number warm starts drive down.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProjectStats {
+    /// Total HALS sweeps run, summed over micro-batches.
+    pub sweeps: usize,
+    /// Micro-batches solved.
+    pub micro_batches: usize,
+    /// Query rows seeded from the warm cache.
+    pub warm_hits: usize,
+    /// Query rows that missed the warm cache (cold-started).
+    pub warm_misses: usize,
+}
+
+/// LRU cache of unit-space solutions ĥ keyed by query fingerprint.
+///
+/// Owned by the caller (the daemon keeps one per model) because the
+/// `Projector` itself stays immutable and shareable. Capacity 0 disables
+/// caching. Eviction scans for the least-recently-used entry — O(len) per
+/// insert, which is fine at the few-thousand-entry capacities the daemon
+/// runs; a heap becomes worthwhile only far beyond that.
+#[derive(Debug, Default)]
+pub struct WarmCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<u64, WarmEntry>,
+}
+
+#[derive(Debug)]
+struct WarmEntry {
+    ghat: Vec<Elem>,
+    last_used: u64,
+}
+
+impl WarmCache {
+    pub fn new(cap: usize) -> WarmCache {
+        WarmCache { cap, tick: 0, map: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    fn get(&mut self, key: u64) -> Option<&[Elem]> {
+        self.tick += 1;
+        let t = self.tick;
+        self.map.get_mut(&key).map(|e| {
+            e.last_used = t;
+            e.ghat.as_slice()
+        })
+    }
+
+    fn put(&mut self, key: u64, ghat: Vec<Elem>) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        let t = self.tick;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.ghat = ghat;
+            e.last_used = t;
+            return;
+        }
+        if self.map.len() >= self.cap {
+            // Bind first: an if-let scrutinee's temporaries (here the
+            // iterator borrow) live to the end of the statement.
+            let victim = self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(victim) = victim {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, WarmEntry { ghat, last_used: t });
+    }
+}
+
+/// FNV-1a fingerprint of a query row over (index, quantized value) pairs.
+///
+/// Values are quantized by dropping the low 12 mantissa bits of the f32
+/// pattern (~2⁻¹¹ relative precision), so *near*-repeat queries — the
+/// same support with values perturbed below ~0.05% — share a fingerprint
+/// and reuse each other's warm start. Zero entries are skipped, so the
+/// dense and sparse encodings of the same row fingerprint identically.
+fn fingerprint_row(q: Queries<'_>, i: usize) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    #[inline]
+    fn mix(h: u64, x: u64) -> u64 {
+        (h ^ x).wrapping_mul(PRIME)
+    }
+    #[inline]
+    fn quantize(x: Elem) -> u64 {
+        (x.to_bits() >> 12) as u64
+    }
+    let mut h = OFFSET;
+    match q {
+        Queries::Sparse(a) => {
+            let (cols, vals) = a.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                h = mix(h, c as u64);
+                h = mix(h, quantize(v));
+            }
+        }
+        Queries::Dense(m) => {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    h = mix(h, j as u64);
+                    h = mix(h, quantize(v));
+                }
+            }
+        }
+    }
+    h
+}
+
 /// A loaded model ready to answer projection queries.
 pub struct Projector {
     /// Column-normalized factor Ŵ (V×K).
@@ -136,10 +306,14 @@ pub struct Projector {
 
 impl Projector {
     /// Build from a trained `W` (consumed; `H` is not needed for
-    /// serving). Computes the cached Gram once.
-    pub fn new(w: Mat, pool: Arc<ThreadPool>, opts: ProjectorOpts) -> Projector {
+    /// serving). Computes the cached Gram once. Fails on a degenerate
+    /// `W` (no topics) or invalid [`ProjectorOpts`].
+    pub fn new(w: Mat, pool: Arc<ThreadPool>, opts: ProjectorOpts) -> Result<Projector> {
+        opts.validate()?;
         let (v, k) = (w.rows(), w.cols());
-        assert!(k > 0, "Projector needs k >= 1");
+        if k == 0 {
+            bail!("Projector needs k >= 1 (got a {v}x0 factor)");
+        }
         let mut w_unit = w;
 
         // Column norms in f64 (one row-major pass), then scale in place.
@@ -164,7 +338,7 @@ impl Projector {
         } else {
             cost_model::select_tile(k, opts.cache_bytes).clamp(1, k)
         };
-        Projector { w_unit, col_norm, col_scale, gram, pool, opts, tile }
+        Ok(Projector { w_unit, col_norm, col_scale, gram, pool, opts, tile })
     }
 
     pub fn v(&self) -> usize {
@@ -179,6 +353,16 @@ impl Projector {
         self.tile
     }
 
+    /// The options this projector was built with.
+    pub fn opts(&self) -> ProjectorOpts {
+        self.opts
+    }
+
+    /// Worker threads of the pool this projector solves on.
+    pub fn threads(&self) -> usize {
+        self.pool.n_threads()
+    }
+
     /// The cached Gram (K×K) — exposed for diagnostics/tests.
     pub fn gram(&self) -> &Mat {
         &self.gram
@@ -188,7 +372,7 @@ impl Projector {
     /// sparse queries, even splits for dense.
     fn shards(&self, q: Queries<'_>) -> Vec<Range<usize>> {
         let m = q.rows();
-        let parts = m.div_ceil(self.opts.micro_batch.max(1)).max(1);
+        let parts = m.div_ceil(self.opts.micro_batch).max(1);
         match q {
             Queries::Sparse(a) => balanced_row_shards(a, parts),
             Queries::Dense(_) => split_even(m, parts),
@@ -199,7 +383,7 @@ impl Projector {
     /// coordinates, entries ≥ 0 with exact zeros where the solve hit the
     /// non-negativity boundary).
     pub fn project(&self, q: Queries<'_>) -> Result<Mat> {
-        self.project_impl(q, None)
+        Ok(self.project_with(q, None, None)?.0)
     }
 
     /// [`Self::project`] plus per-query relative residuals
@@ -208,40 +392,90 @@ impl Projector {
     /// [`Self::residuals`] redoes that product).
     pub fn project_with_residuals(&self, q: Queries<'_>) -> Result<(Mat, Vec<f64>)> {
         let mut res = vec![0.0f64; q.rows()];
-        let h = self.project_impl(q, Some(&mut res))?;
+        let (h, _) = self.project_with(q, Some(&mut res), None)?;
         Ok((h, res))
     }
 
-    fn project_impl(&self, q: Queries<'_>, mut res: Option<&mut [f64]>) -> Result<Mat> {
+    /// [`Self::project`] with warm starts: query rows whose fingerprint
+    /// hits `cache` start the sweeps from the cached solution. Returns
+    /// the solve statistics alongside `H*`.
+    pub fn project_warm(
+        &self,
+        q: Queries<'_>,
+        cache: &mut WarmCache,
+    ) -> Result<(Mat, ProjectStats)> {
+        self.project_with(q, None, Some(cache))
+    }
+
+    /// The general projection entry point: optional fused residuals
+    /// (slice of length m) and optional warm-start cache.
+    pub fn project_with(
+        &self,
+        q: Queries<'_>,
+        mut res: Option<&mut [f64]>,
+        mut warm: Option<&mut WarmCache>,
+    ) -> Result<(Mat, ProjectStats)> {
         let (m, k) = (q.rows(), self.k());
         if q.cols() != self.v() {
             bail!("queries have {} features, model expects V={}", q.cols(), self.v());
         }
+        if let Some(buf) = &res {
+            if buf.len() != m {
+                bail!("residual buffer has {} slots for {m} queries", buf.len());
+            }
+        }
         let mut h = Mat::zeros(m, k);
+        let mut stats = ProjectStats::default();
         if m == 0 {
-            return Ok(h);
+            return Ok((h, stats));
         }
         let mut timers = PhaseTimers::new();
         for r in self.shards(q) {
             if !r.is_empty() {
-                self.solve_micro_batch(q, r, &mut h, res.as_deref_mut(), &mut timers);
+                self.solve_micro_batch(
+                    q,
+                    r,
+                    &mut h,
+                    res.as_deref_mut(),
+                    warm.as_deref_mut(),
+                    &mut stats,
+                    &mut timers,
+                );
             }
         }
-        Ok(h)
+        Ok((h, stats))
     }
 
     /// One micro-batch: panel product, HALS sweeps, rescale into `h`
     /// (and, when requested, the Gram-expansion residuals while `B` is
     /// still live).
+    #[allow(clippy::too_many_arguments)]
     fn solve_micro_batch(
         &self,
         q: Queries<'_>,
         r: Range<usize>,
         h: &mut Mat,
         res: Option<&mut [f64]>,
+        mut warm: Option<&mut WarmCache>,
+        stats: &mut ProjectStats,
         timers: &mut PhaseTimers,
     ) {
         let (mb, k) = (r.len(), self.k());
+
+        // Degenerate rows: an all-zero query has the unique solution
+        // h = 0. The ε-floored kernel would instead park every coordinate
+        // at ε, so zero rows are masked out of the solve (and of the warm
+        // cache) and written back as exact zeros.
+        let zero_row: Vec<bool> = r.clone().map(|i| q.row_is_zero(i)).collect();
+        if zero_row.iter().all(|&z| z) {
+            if let Some(res) = res {
+                for i in r {
+                    res[i] = 0.0;
+                }
+            }
+            return;
+        }
+
         let mut b = Mat::zeros(mb, k);
         match q {
             Queries::Sparse(a) => timers.time("serve_product", || {
@@ -260,8 +494,29 @@ impl Projector {
         }
 
         let mut g = Mat::zeros(mb, k);
+
+        // Warm-start seeding: fingerprint each live row; hits copy the
+        // cached unit-space solution into the panel before the sweeps.
+        let mut fps: Vec<u64> = Vec::new();
+        if let Some(cache) = warm.as_deref_mut() {
+            fps = r.clone().map(|i| fingerprint_row(q, i)).collect();
+            for (local, &zero) in zero_row.iter().enumerate() {
+                if zero {
+                    continue;
+                }
+                match cache.get(fps[local]) {
+                    Some(ghat) if ghat.len() == k => {
+                        g.row_mut(local).copy_from_slice(ghat);
+                        stats.warm_hits += 1;
+                    }
+                    _ => stats.warm_misses += 1,
+                }
+            }
+        }
+
         let mut scratch = Mat::zeros(mb, k);
-        for _ in 0..self.opts.sweeps.max(1) {
+        let mut sweeps_run = 0;
+        for _ in 0..self.opts.sweeps {
             update_tiled(
                 &self.pool,
                 &mut g,
@@ -273,16 +528,30 @@ impl Projector {
                 timers,
                 ["serve_phase1", "serve_phase2", "serve_phase3"],
             );
+            sweeps_run += 1;
             // `scratch` holds the pre-sweep values — a free convergence
             // probe for the optional early stop.
             if self.opts.tol > 0.0 && g.max_abs_diff(&scratch) < self.opts.tol {
                 break;
             }
         }
+        stats.sweeps += sweeps_run;
+        stats.micro_batches += 1;
+
+        if let Some(cache) = warm {
+            for (local, &zero) in zero_row.iter().enumerate() {
+                if !zero {
+                    cache.put(fps[local], g.row(local).to_vec());
+                }
+            }
+        }
 
         // ĥ → h = D⁻¹ĥ; entries clamped to ε by the kernel are snapped
         // to exact 0 (they are the active non-negativity constraints).
         for (local, i) in r.clone().enumerate() {
+            if zero_row[local] {
+                continue; // h row stays exactly zero
+            }
             let grow = g.row(local);
             let hrow = h.row_mut(i);
             for t in 0..k {
@@ -294,6 +563,10 @@ impl Projector {
         // Residuals from the live panel: ‖a − Ŵĝ‖² = ‖a‖² − 2ĝᵀb + ĝᵀĜĝ.
         if let Some(res) = res {
             for (local, i) in r.enumerate() {
+                if zero_row[local] {
+                    res[i] = 0.0;
+                    continue;
+                }
                 let ghat = g.row(local);
                 let a2 = q.row_norm2(i);
                 let mut cross = 0.0f64;
@@ -398,7 +671,7 @@ impl Projector {
             bail!("h has {} columns, model expects K={k}", h.cols());
         }
         let top_n = top_n.min(v).max(1);
-        let mb = self.opts.micro_batch.max(1);
+        let mb = self.opts.micro_batch;
         let mut out = Vec::with_capacity(m);
         let mut scores_buf = Vec::with_capacity(v);
         let mut r0 = 0;
@@ -438,9 +711,7 @@ fn top_n_desc(scores: &mut Vec<(u32, Elem)>, n: usize) -> Vec<(u32, Elem)> {
     if n == 0 {
         return Vec::new();
     }
-    let desc = |a: &(u32, Elem), b: &(u32, Elem)| {
-        b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
-    };
+    let desc = |a: &(u32, Elem), b: &(u32, Elem)| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0));
     if n < scores.len() {
         scores.select_nth_unstable_by(n - 1, desc);
         scores.truncate(n);
@@ -485,10 +756,26 @@ mod tests {
     #[test]
     fn gram_has_unit_diagonal() {
         let (w, _) = random_problem(40, 7, 1, 1);
-        let p = Projector::new(w, pool(2), ProjectorOpts::default());
+        let p = Projector::new(w, pool(2), ProjectorOpts::default()).unwrap();
         for t in 0..7 {
             assert!((p.gram().at(t, t) - 1.0).abs() < 1e-5, "G[{t},{t}]");
         }
+    }
+
+    #[test]
+    fn degenerate_opts_and_factors_are_rejected() {
+        let (w, _) = random_problem(10, 3, 1, 1);
+        for opts in [
+            ProjectorOpts { sweeps: 0, ..Default::default() },
+            ProjectorOpts { micro_batch: 0, ..Default::default() },
+            ProjectorOpts { tol: f64::NAN, ..Default::default() },
+            ProjectorOpts { tol: -1.0, ..Default::default() },
+        ] {
+            assert!(opts.validate().is_err(), "{opts:?} must not validate");
+            assert!(Projector::new(w.clone(), pool(1), opts).is_err());
+        }
+        let empty = Mat::zeros(10, 0);
+        assert!(Projector::new(empty, pool(1), ProjectorOpts::default()).is_err());
     }
 
     #[test]
@@ -500,7 +787,8 @@ mod tests {
             w.clone(),
             pool(3),
             ProjectorOpts { sweeps: 300, micro_batch: 7, ..Default::default() },
-        );
+        )
+        .unwrap();
         let h = p.project(Queries::Dense(&q)).unwrap();
 
         // Reference: G = WᵀW, B = Q·W, exact per-row NNLS.
@@ -523,7 +811,7 @@ mod tests {
     #[test]
     fn residuals_match_direct_evaluation() {
         let (w, q) = random_problem(30, 5, 11, 9);
-        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default());
+        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default()).unwrap();
         let h = p.project(Queries::Dense(&q)).unwrap();
         let rel = p.residuals(Queries::Dense(&q), &h).unwrap();
         for i in 0..11 {
@@ -539,7 +827,8 @@ mod tests {
             w,
             pool(2),
             ProjectorOpts { sweeps: 30, micro_batch: 6, ..Default::default() },
-        );
+        )
+        .unwrap();
         let (h, fused) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
         let standalone = p.residuals(Queries::Dense(&q), &h).unwrap();
         for (i, (a, b)) in fused.iter().zip(&standalone).enumerate() {
@@ -557,7 +846,8 @@ mod tests {
                 w.clone(),
                 pool(2),
                 ProjectorOpts { sweeps: 20, micro_batch: mb, ..Default::default() },
-            );
+            )
+            .unwrap();
             outs.push(p.project(Queries::Dense(&q)).unwrap());
         }
         assert!(outs[0].max_abs_diff(&outs[1]) < 1e-6);
@@ -578,7 +868,12 @@ mod tests {
             }
         }
         let csr = Csr::from_dense(&qs);
-        let p = Projector::new(w, pool(3), ProjectorOpts { sweeps: 40, micro_batch: 5, ..Default::default() });
+        let p = Projector::new(
+            w,
+            pool(3),
+            ProjectorOpts { sweeps: 40, micro_batch: 5, ..Default::default() },
+        )
+        .unwrap();
         let h_dense = p.project(Queries::Dense(&qs)).unwrap();
         let h_sparse = p.project(Queries::Sparse(&csr)).unwrap();
         assert!(h_dense.max_abs_diff(&h_sparse) < 1e-4);
@@ -592,11 +887,40 @@ mod tests {
             *w.at_mut(i, 2) = 0.0; // dead topic
         }
         let q = Mat::random(6, 20, &mut rng, 0.0, 1.0);
-        let p = Projector::new(w, pool(1), ProjectorOpts::default());
+        let p = Projector::new(w, pool(1), ProjectorOpts::default()).unwrap();
         let h = p.project(Queries::Dense(&q)).unwrap();
         for i in 0..6 {
             assert_eq!(h.at(i, 2), 0.0, "dead topic must get zero weight");
         }
+    }
+
+    #[test]
+    fn all_zero_query_rows_return_exact_zero() {
+        // Regression: zero rows must not pick up ε-floor garbage scaled
+        // by D⁻¹ — the unique solution of min ‖0 − W·h‖, h ≥ 0 is h = 0.
+        let (w, mut q) = random_problem(25, 4, 7, 3);
+        q.row_mut(2).fill(0.0);
+        q.row_mut(5).fill(0.0);
+        let p = Projector::new(
+            w,
+            pool(2),
+            ProjectorOpts { sweeps: 10, micro_batch: 3, ..Default::default() },
+        )
+        .unwrap();
+        let (h, res) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
+        for i in [2usize, 5] {
+            assert!(h.row(i).iter().all(|&x| x == 0.0), "row {i}: {:?}", h.row(i));
+            assert_eq!(res[i], 0.0);
+        }
+        // Non-zero rows still solve normally.
+        assert!(h.row(0).iter().any(|&x| x > 0.0));
+
+        // Sparse path: an entirely-zero batch short-circuits.
+        let zeros = Mat::zeros(4, 25);
+        let csr = Csr::from_dense(&zeros);
+        let (hz, stats) = p.project_with(Queries::Sparse(&csr), None, None).unwrap();
+        assert!(hz.data().iter().all(|&x| x == 0.0));
+        assert_eq!(stats.sweeps, 0, "all-zero batch must not run sweeps");
     }
 
     #[test]
@@ -606,21 +930,119 @@ mod tests {
             w.clone(),
             pool(2),
             ProjectorOpts { sweeps: 200, ..Default::default() },
-        );
+        )
+        .unwrap();
         let early = Projector::new(
             w,
             pool(2),
             ProjectorOpts { sweeps: 200, tol: 1e-7, ..Default::default() },
-        );
+        )
+        .unwrap();
         let hf = full.project(Queries::Dense(&q)).unwrap();
         let he = early.project(Queries::Dense(&q)).unwrap();
         assert!(hf.max_abs_diff(&he) < 1e-3);
     }
 
     #[test]
+    fn warm_start_reduces_sweeps_and_stays_within_tol() {
+        let (w, q) = random_problem(30, 6, 12, 47);
+        let tol = 1e-6;
+        let p = Projector::new(
+            w,
+            pool(2),
+            ProjectorOpts { sweeps: 200, micro_batch: 4, tol, ..Default::default() },
+        )
+        .unwrap();
+        let mut cache = WarmCache::new(64);
+
+        let (h_cold, cold) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        assert_eq!(cold.warm_hits, 0);
+        assert_eq!(cold.warm_misses, 12);
+        assert!(cold.sweeps >= cold.micro_batches, "at least one sweep per batch");
+
+        // Exact repeat: every row hits, the seeded batches stop no later
+        // than the cold ones, and the result stays within the sweep tol.
+        let (h_warm, warm) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        assert_eq!(warm.warm_hits, 12);
+        assert_eq!(warm.warm_misses, 0);
+        assert!(
+            warm.sweeps <= cold.sweeps,
+            "warm start ran more sweeps ({}) than cold ({})",
+            warm.sweeps,
+            cold.sweeps
+        );
+        assert!(h_cold.max_abs_diff(&h_warm) < 1e-3);
+    }
+
+    #[test]
+    fn warm_cache_disabled_matches_cold_exactly() {
+        // capacity 0: nothing is cached, results are bit-identical to
+        // the plain path.
+        let (w, q) = random_problem(20, 4, 6, 53);
+        let p = Projector::new(w, pool(2), ProjectorOpts::default()).unwrap();
+        let mut cache = WarmCache::new(0);
+        let (h_warm, stats) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        let h_plain = p.project(Queries::Dense(&q)).unwrap();
+        assert_eq!(h_warm, h_plain);
+        assert!(cache.is_empty());
+        assert_eq!(stats.warm_hits, 0);
+    }
+
+    #[test]
+    fn warm_cache_lru_evicts_oldest() {
+        let mut cache = WarmCache::new(2);
+        cache.put(1, vec![1.0]);
+        cache.put(2, vec![2.0]);
+        assert!(cache.get(1).is_some()); // touch 1 → 2 is now LRU
+        cache.put(3, vec![3.0]);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(2).is_none(), "LRU entry must be evicted");
+        assert!(cache.get(1).is_some());
+        assert!(cache.get(3).is_some());
+    }
+
+    #[test]
+    fn fingerprints_agree_across_encodings_and_tolerate_jitter() {
+        let (_, mut q) = random_problem(20, 3, 4, 61);
+        for i in 0..q.rows() {
+            for x in q.row_mut(i).iter_mut() {
+                if *x < 0.5 {
+                    *x = 0.0;
+                }
+            }
+        }
+        let csr = Csr::from_dense(&q);
+        for i in 0..q.rows() {
+            assert_eq!(
+                fingerprint_row(Queries::Dense(&q), i),
+                fingerprint_row(Queries::Sparse(&csr), i),
+                "row {i}: dense and sparse fingerprints differ"
+            );
+        }
+        // Near-repeat: a sub-quantum perturbation (low mantissa bit, far
+        // below the >>12 quantization) keeps the fingerprint; a large
+        // one changes it.
+        let fp0 = fingerprint_row(Queries::Dense(&q), 0);
+        let mut jittered = q.clone();
+        for x in jittered.row_mut(0).iter_mut() {
+            if *x > 0.0 {
+                *x = f32::from_bits(x.to_bits() ^ 1);
+            }
+        }
+        assert_eq!(fp0, fingerprint_row(Queries::Dense(&jittered), 0));
+        let mut moved = q.clone();
+        for x in moved.row_mut(0).iter_mut() {
+            if *x > 0.0 {
+                *x *= 2.0;
+            }
+        }
+        assert_ne!(fp0, fingerprint_row(Queries::Dense(&moved), 0));
+    }
+
+    #[test]
     fn recommend_ranks_reconstruction_and_excludes_seen() {
         let (w, q) = random_problem(30, 5, 8, 41);
-        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default());
+        let p = Projector::new(w.clone(), pool(2), ProjectorOpts::default()).unwrap();
         let recs = p.recommend(Queries::Dense(&q), 5, false).unwrap();
         assert_eq!(recs.len(), 8);
         let h = p.project(Queries::Dense(&q)).unwrap();
@@ -651,7 +1073,7 @@ mod tests {
     #[test]
     fn empty_batch_and_shape_errors() {
         let (w, _) = random_problem(10, 3, 1, 1);
-        let p = Projector::new(w, pool(1), ProjectorOpts::default());
+        let p = Projector::new(w, pool(1), ProjectorOpts::default()).unwrap();
         let empty = Mat::zeros(0, 10);
         assert_eq!(p.project(Queries::Dense(&empty)).unwrap().rows(), 0);
         let wrong = Mat::zeros(2, 9);
@@ -662,5 +1084,8 @@ mod tests {
         let h_bad = Mat::zeros(2, 4);
         let ok_q = Mat::zeros(2, 10);
         assert!(p.recommend_for(Queries::Dense(&ok_q), &h_bad, 2, false).is_err());
+        // Residual buffer length is validated.
+        let mut short = vec![0.0f64; 1];
+        assert!(p.project_with(Queries::Dense(&ok_q), Some(&mut short), None).is_err());
     }
 }

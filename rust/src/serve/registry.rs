@@ -1,0 +1,720 @@
+//! Sharded multi-model registry for the serving daemon.
+//!
+//! A [`ModelRegistry`] owns a set of named, independently-loaded
+//! [`Projector`]s. Each model is a self-contained serving shard:
+//!
+//! * its **own thread pool** — the fork/join [`ThreadPool`] is
+//!   deliberately non-reentrant, so per-model pools (each sized to a
+//!   share of the machine) are what lets two models solve concurrently
+//!   without oversubscribing cores;
+//! * its **own request queue** — a per-model mutex serializes solves on
+//!   that model (the pool saturates internally; queueing a second batch
+//!   behind it is strictly better than interleaving), while requests for
+//!   *different* models proceed in parallel;
+//! * its **own warm cache and stats** — the [`WarmCache`] keys are
+//!   fingerprints of query content, meaningless across models.
+//!
+//! Models come from an explicit [`ModelRegistry::load`] or from a
+//! **manifest** — a small JSON file naming the fleet:
+//!
+//! ```json
+//! {
+//!   "format": "plnmf-manifest",
+//!   "version": 3,
+//!   "max_total_nnz": 50000000,
+//!   "models": [
+//!     {"name": "news", "path": "models/news.json"},
+//!     {"name": "faces", "path": "models/faces.json"}
+//!   ]
+//! }
+//! ```
+//!
+//! Relative model paths resolve against the manifest's directory.
+//! [`ModelRegistry::reload_manifest`] re-reads the file and applies it
+//! **only when `version` increased** (hot reload: bump the version after
+//! editing); models whose file changed on disk are rebuilt, models
+//! dropped from the list are unloaded, and in-flight requests on
+//! surviving models are never interrupted (entries are `Arc`-shared with
+//! their callers).
+//!
+//! Admission is **nnz-aware**: every model is weighed by the non-zero
+//! count of its `W` factor, and a budget (`max_total_nnz`, 0 = unlimited)
+//! rejects loads that would blow the resident-factor footprint — the
+//! §5 data-movement story only holds while the factors actually stay
+//! cache/memory resident.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::SystemTime;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::linalg::Mat;
+use crate::parallel::ThreadPool;
+use crate::serve::model_io::{load_model, ModelMeta};
+use crate::serve::projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
+use crate::util::json::Json;
+use crate::{Elem, Result};
+
+/// Format marker of a manifest file.
+pub const MANIFEST_FORMAT: &str = "plnmf-manifest";
+
+/// One `models[]` entry of a manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestModel {
+    pub name: String,
+    /// Absolute, or relative to the manifest file's directory.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest: the model fleet plus the admission budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub version: u64,
+    /// Total admitted `W` non-zeros across models (0 = unlimited).
+    pub max_total_nnz: usize,
+    pub models: Vec<ManifestModel>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str, base_dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = j.get("format").as_str().unwrap_or("");
+        if format != MANIFEST_FORMAT {
+            bail!("not a plnmf manifest (format '{format}', expected '{MANIFEST_FORMAT}')");
+        }
+        let version = j
+            .get("version")
+            .as_u64()
+            .ok_or_else(|| anyhow!("manifest needs an integer \"version\""))?;
+        let max_total_nnz = j.get("max_total_nnz").as_usize().unwrap_or(0);
+        let entries = j
+            .get("models")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest needs a \"models\" array"))?;
+        let mut models = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let name = e
+                .get("name")
+                .as_str()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| anyhow!("models[{i}] needs a non-empty \"name\""))?;
+            let path = e
+                .get("path")
+                .as_str()
+                .ok_or_else(|| anyhow!("models[{i}] ('{name}') needs a \"path\""))?;
+            if models.iter().any(|m: &ManifestModel| m.name == name) {
+                bail!("manifest lists model '{name}' twice");
+            }
+            let path = Path::new(path);
+            let path =
+                if path.is_absolute() { path.to_path_buf() } else { base_dir.join(path) };
+            models.push(ManifestModel { name: name.to_string(), path });
+        }
+        Ok(Manifest { version, max_total_nnz, models })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        let base = path.parent().unwrap_or(Path::new("."));
+        Self::parse(&src, base).with_context(|| format!("parsing manifest {path:?}"))
+    }
+}
+
+/// Registry configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RegistryOpts {
+    /// Total worker threads the daemon may use across models.
+    pub threads: usize,
+    /// Threads per model pool. 0 = `max(1, threads / 2)`, a safe default
+    /// for the common one-or-two-model case; `plnmf serve` sets it
+    /// explicitly to `threads / fleet_size` so any fleet solves
+    /// concurrently without oversubscribing cores.
+    pub per_model_threads: usize,
+    /// Solver knobs shared by every model's projector.
+    pub projector: ProjectorOpts,
+    /// Warm cache capacity per model (entries; 0 disables warm starts).
+    pub warm_cache: usize,
+    /// Admission budget in `W` non-zeros (0 = unlimited). A manifest's
+    /// `max_total_nnz` overrides this when set.
+    pub max_total_nnz: usize,
+}
+
+impl Default for RegistryOpts {
+    fn default() -> Self {
+        RegistryOpts {
+            threads: 2,
+            per_model_threads: 0,
+            projector: ProjectorOpts::default(),
+            warm_cache: 256,
+            max_total_nnz: 0,
+        }
+    }
+}
+
+/// Sweep/doc counters for one serving bucket (see [`ModelStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BucketStats {
+    pub requests: u64,
+    pub docs: u64,
+    pub micro_batches: u64,
+    pub sweeps: u64,
+}
+
+impl BucketStats {
+    fn record(&mut self, docs: usize, ps: &ProjectStats) {
+        self.requests += 1;
+        self.docs += docs as u64;
+        self.micro_batches += ps.micro_batches as u64;
+        self.sweeps += ps.sweeps as u64;
+    }
+
+    /// Average sweeps-to-`tol` per micro-batch — the warm-start headline.
+    pub fn avg_sweeps(&self) -> f64 {
+        if self.micro_batches == 0 {
+            0.0
+        } else {
+            self.sweeps as f64 / self.micro_batches as f64
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("docs", Json::num(self.docs as f64)),
+            ("micro_batches", Json::num(self.micro_batches as f64)),
+            ("sweeps", Json::num(self.sweeps as f64)),
+            ("avg_sweeps", Json::num(self.avg_sweeps())),
+        ])
+    }
+}
+
+/// Per-model serving statistics, bucketed by warm-cache outcome so the
+/// `stats` op can show sweeps-to-`tol` with and without warm starts side
+/// by side: `cold` = no row hit, `warm` = every row hit, `mixed` = some.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModelStats {
+    pub requests: u64,
+    pub warm_hits: u64,
+    pub warm_misses: u64,
+    pub cold: BucketStats,
+    pub warm: BucketStats,
+    pub mixed: BucketStats,
+}
+
+impl ModelStats {
+    fn record(&mut self, docs: usize, ps: &ProjectStats) {
+        self.requests += 1;
+        self.warm_hits += ps.warm_hits as u64;
+        self.warm_misses += ps.warm_misses as u64;
+        let bucket = if ps.warm_hits > 0 && ps.warm_misses == 0 {
+            &mut self.warm
+        } else if ps.warm_hits == 0 {
+            &mut self.cold
+        } else {
+            &mut self.mixed
+        };
+        bucket.record(docs, ps);
+    }
+}
+
+struct ModelState {
+    warm: WarmCache,
+    stats: ModelStats,
+}
+
+/// A loaded, servable model: projector + pool + queue + warm cache.
+pub struct ModelEntry {
+    name: String,
+    path: PathBuf,
+    meta: ModelMeta,
+    /// Non-zero entries of `W` — the admission weight.
+    nnz: usize,
+    loaded_mtime: Option<SystemTime>,
+    projector: Projector,
+    /// Serializes solves on this model: the projector's pool is
+    /// fork/join (non-reentrant), so concurrent requests queue here and
+    /// run back to back at full pool width.
+    state: Mutex<ModelState>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn projector(&self) -> &Projector {
+        &self.projector
+    }
+
+    pub fn stats(&self) -> ModelStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Project a batch through this model's queue. `use_warm` is the
+    /// caller's wish; it only takes effect when the registry enabled a
+    /// warm cache for this model.
+    pub fn transform(
+        &self,
+        q: Queries<'_>,
+        use_warm: bool,
+    ) -> Result<(Mat, Vec<f64>, ProjectStats)> {
+        let docs = q.rows();
+        let mut res = vec![0.0f64; docs];
+        let mut st = self.state.lock().unwrap();
+        let state = &mut *st;
+        let warm = if use_warm && state.warm.capacity() > 0 { Some(&mut state.warm) } else { None };
+        let (h, ps) = self.projector.project_with(q, Some(&mut res), warm)?;
+        state.stats.record(docs, &ps);
+        Ok((h, res, ps))
+    }
+
+    /// Top-N recommendation through this model's queue.
+    pub fn recommend(
+        &self,
+        q: Queries<'_>,
+        top_n: usize,
+        exclude_seen: bool,
+        use_warm: bool,
+    ) -> Result<(Vec<Vec<(u32, Elem)>>, ProjectStats)> {
+        let docs = q.rows();
+        let mut st = self.state.lock().unwrap();
+        let state = &mut *st;
+        let warm = if use_warm && state.warm.capacity() > 0 { Some(&mut state.warm) } else { None };
+        let (h, ps) = self.projector.project_with(q, None, warm)?;
+        let recs = self.projector.recommend_for(q, &h, top_n, exclude_seen)?;
+        state.stats.record(docs, &ps);
+        Ok((recs, ps))
+    }
+
+    pub fn stats_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let s = st.stats;
+        Json::obj(vec![
+            ("v", Json::num(self.projector.v() as f64)),
+            ("k", Json::num(self.projector.k() as f64)),
+            ("tile", Json::num(self.projector.tile() as f64)),
+            ("threads", Json::num(self.projector.threads() as f64)),
+            ("nnz", Json::num(self.nnz as f64)),
+            ("warm_cache_entries", Json::num(st.warm.len() as f64)),
+            ("requests", Json::num(s.requests as f64)),
+            ("warm_hits", Json::num(s.warm_hits as f64)),
+            ("warm_misses", Json::num(s.warm_misses as f64)),
+            ("cold", s.cold.to_json()),
+            ("warm", s.warm.to_json()),
+            ("mixed", s.mixed.to_json()),
+        ])
+    }
+}
+
+/// The registry proper. Cheap reads (request dispatch) take the `models`
+/// read lock only long enough to clone an `Arc`; loads build the new
+/// projector outside any lock.
+pub struct ModelRegistry {
+    opts: RegistryOpts,
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    manifest_path: Option<PathBuf>,
+    /// (applied manifest version, effective admission budget).
+    control: Mutex<(u64, usize)>,
+}
+
+impl ModelRegistry {
+    /// An empty registry; models arrive via [`Self::load`].
+    pub fn new(opts: RegistryOpts) -> ModelRegistry {
+        ModelRegistry {
+            control: Mutex::new((0, opts.max_total_nnz)),
+            opts,
+            models: RwLock::new(HashMap::new()),
+            manifest_path: None,
+        }
+    }
+
+    /// Load every model of a manifest; fails if any model fails.
+    pub fn from_manifest(path: &Path, opts: RegistryOpts) -> Result<ModelRegistry> {
+        let manifest = Manifest::load(path)?;
+        Self::from_loaded(&manifest, path, opts)
+    }
+
+    /// [`Self::from_manifest`] for an already-parsed manifest — callers
+    /// that pre-read it (e.g. to size thread pools from the fleet) avoid
+    /// a second read racing a concurrent manifest edit. `path` is kept
+    /// for hot reloads.
+    pub fn from_loaded(
+        manifest: &Manifest,
+        path: &Path,
+        opts: RegistryOpts,
+    ) -> Result<ModelRegistry> {
+        let mut reg = ModelRegistry::new(opts);
+        reg.manifest_path = Some(path.to_path_buf());
+        if manifest.max_total_nnz > 0 {
+            reg.control.lock().unwrap().1 = manifest.max_total_nnz;
+        }
+        for m in &manifest.models {
+            reg.load(&m.name, &m.path)
+                .with_context(|| format!("manifest model '{}'", m.name))?;
+        }
+        reg.control.lock().unwrap().0 = manifest.version;
+        Ok(reg)
+    }
+
+    fn per_model_threads(&self) -> usize {
+        if self.opts.per_model_threads > 0 {
+            self.opts.per_model_threads
+        } else {
+            (self.opts.threads / 2).max(1)
+        }
+    }
+
+    /// The applied manifest version (0 when no manifest is attached).
+    pub fn manifest_version(&self) -> u64 {
+        self.control.lock().unwrap().0
+    }
+
+    /// Effective admission budget (0 = unlimited).
+    pub fn admission_budget(&self) -> usize {
+        self.control.lock().unwrap().1
+    }
+
+    /// Total admitted `W` non-zeros across loaded models.
+    pub fn total_nnz(&self) -> usize {
+        self.models.read().unwrap().values().map(|e| e.nnz).sum()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<ModelEntry>> {
+        // Bind before ok_or_else: the closure re-locks via names(), and
+        // std read locks are not guaranteed reentrant.
+        let entry = self.models.read().unwrap().get(name).cloned();
+        entry.ok_or_else(|| {
+            anyhow!("no model '{name}' loaded (have: {})", self.names().join(", "))
+        })
+    }
+
+    /// Load (or replace) a named model from a `plnmf-model` file.
+    /// Admission: rejected if the model's `W` non-zeros would push the
+    /// registry past its budget.
+    pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        let (factors, meta) =
+            load_model(path).with_context(|| format!("loading model '{name}'"))?;
+        let nnz = factors.w.data().iter().filter(|&&x| x != 0.0).count();
+
+        // Build the projector before taking any lock (the Gram build is
+        // the expensive part); admission is then checked under the same
+        // write lock that inserts, so two concurrent loads cannot both
+        // read the old resident total and jointly blow the budget.
+        let loaded_mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        let pool = Arc::new(ThreadPool::new(self.per_model_threads()));
+        let projector = Projector::new(factors.w, pool, self.opts.projector)
+            .with_context(|| format!("building projector for '{name}'"))?;
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            meta,
+            nnz,
+            loaded_mtime,
+            projector,
+            state: Mutex::new(ModelState {
+                warm: WarmCache::new(self.opts.warm_cache),
+                stats: ModelStats::default(),
+            }),
+        });
+        {
+            let mut models = self.models.write().unwrap();
+            let budget = self.admission_budget();
+            if budget > 0 {
+                let resident: usize = models
+                    .iter()
+                    .filter(|(n, _)| n.as_str() != name)
+                    .map(|(_, e)| e.nnz)
+                    .sum();
+                if resident + nnz > budget {
+                    bail!(
+                        "admission: loading '{name}' ({nnz} W non-zeros) would exceed the \
+                         registry budget ({resident} resident of {budget}); unload a model \
+                         or raise max_total_nnz"
+                    );
+                }
+            }
+            models.insert(name.to_string(), Arc::clone(&entry));
+        }
+        crate::info!(
+            "registry: loaded '{name}' from {path:?} (V={}, K={}, nnz={nnz})",
+            entry.projector.v(),
+            entry.projector.k()
+        );
+        Ok(entry)
+    }
+
+    pub fn unload(&self, name: &str) -> Result<()> {
+        match self.models.write().unwrap().remove(name) {
+            Some(_) => {
+                crate::info!("registry: unloaded '{name}'");
+                Ok(())
+            }
+            None => bail!("no model '{name}' loaded"),
+        }
+    }
+
+    /// Re-read the attached manifest and apply it if its `version`
+    /// increased: load new names, rebuild entries whose path or file
+    /// mtime changed, unload names no longer listed. Returns whether a
+    /// reload happened. Without an attached manifest this is a no-op.
+    ///
+    /// A version is **attempted at most once**: it is recorded before
+    /// the fleet changes, so a manifest with a broken entry does not
+    /// re-run its (expensive, partially-destructive) apply on every
+    /// poll. A failed apply can leave the fleet partial — de-listed
+    /// models already unloaded, later models not yet loaded; the error
+    /// is surfaced to the caller (daemon log / `load` op response), and
+    /// the operator republishes a fixed manifest under a *new* version.
+    pub fn reload_manifest(&self) -> Result<bool> {
+        let path = match &self.manifest_path {
+            Some(p) => p.clone(),
+            None => return Ok(false),
+        };
+        let manifest = Manifest::load(&path)?;
+        {
+            let mut control = self.control.lock().unwrap();
+            if manifest.version <= control.0 {
+                return Ok(false);
+            }
+            control.0 = manifest.version;
+            if manifest.max_total_nnz > 0 {
+                control.1 = manifest.max_total_nnz;
+            }
+        }
+        // Unload de-listed models FIRST: a budget-constrained swap (drop
+        // model X, add similar-weight model Y) must free X's admission
+        // weight before Y is weighed. In-flight requests on X finish
+        // fine — entries are Arc-shared with their callers.
+        let listed: Vec<&str> = manifest.models.iter().map(|m| m.name.as_str()).collect();
+        let stale: Vec<String> = {
+            let models = self.models.read().unwrap();
+            models.keys().filter(|n| !listed.contains(&n.as_str())).cloned().collect()
+        };
+        for name in stale {
+            // Tolerate a concurrent wire `unload` of the same name: the
+            // goal is "not loaded", not "was loaded a moment ago".
+            if self.models.write().unwrap().remove(&name).is_some() {
+                crate::info!("registry: unloaded '{name}' (de-listed by manifest)");
+            }
+        }
+        for m in &manifest.models {
+            let needs_load = match self.models.read().unwrap().get(&m.name) {
+                None => true,
+                Some(e) => {
+                    let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
+                    e.path != m.path || (mtime.is_some() && mtime != e.loaded_mtime)
+                }
+            };
+            if needs_load {
+                self.load(&m.name, &m.path)
+                    .with_context(|| format!("manifest reload: model '{}'", m.name))?;
+            }
+        }
+        crate::info!("registry: applied manifest version {}", manifest.version);
+        Ok(true)
+    }
+
+    /// Per-model stats as a JSON object keyed by model name.
+    ///
+    /// Snapshots the entry list first and drops the registry lock before
+    /// touching any per-model state mutex — those are held for whole
+    /// solves, and blocking on one while holding the read lock would
+    /// stall every load/unload/reload behind a long transform.
+    pub fn stats_json(&self) -> Json {
+        let entries: Vec<(String, Arc<ModelEntry>)> = {
+            let models = self.models.read().unwrap();
+            models.iter().map(|(n, e)| (n.clone(), Arc::clone(e))).collect()
+        };
+        Json::Obj(entries.into_iter().map(|(n, e)| (n, e.stats_json())).collect())
+    }
+}
+
+/// Serialize a manifest (helper for tools/tests writing fleets).
+pub fn manifest_json(version: u64, max_total_nnz: usize, models: &[(&str, &str)]) -> Json {
+    Json::obj(vec![
+        ("format", Json::str(MANIFEST_FORMAT)),
+        ("version", Json::num(version as f64)),
+        ("max_total_nnz", Json::num(max_total_nnz as f64)),
+        (
+            "models",
+            Json::Arr(
+                models
+                    .iter()
+                    .map(|(name, path)| {
+                        Json::obj(vec![("name", Json::str(*name)), ("path", Json::str(*path))])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::Factors;
+    use crate::serve::model_io::save_model;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("plnmf-registry-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn write_model(dir: &Path, file: &str, v: usize, k: usize, seed: u64) -> PathBuf {
+        let f = Factors::random(v, 6, k, seed);
+        let path = dir.join(file);
+        save_model(&path, &f, &ModelMeta::default()).unwrap();
+        path
+    }
+
+    fn small_opts() -> RegistryOpts {
+        RegistryOpts { threads: 2, per_model_threads: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn load_get_unload_roundtrip() {
+        let dir = tmpdir("lgu");
+        let p = write_model(&dir, "a.json", 20, 4, 1);
+        let reg = ModelRegistry::new(small_opts());
+        assert!(reg.is_empty());
+        reg.load("a", &p).unwrap();
+        assert_eq!(reg.names(), vec!["a"]);
+        let e = reg.get("a").unwrap();
+        assert_eq!((e.projector().v(), e.projector().k()), (20, 4));
+        assert!(e.nnz() > 0);
+        assert!(reg.get("b").is_err());
+        reg.unload("a").unwrap();
+        assert!(reg.unload("a").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn transform_records_stats() {
+        let dir = tmpdir("stats");
+        let p = write_model(&dir, "a.json", 15, 3, 2);
+        let reg = ModelRegistry::new(RegistryOpts {
+            projector: ProjectorOpts { sweeps: 50, tol: 1e-6, ..Default::default() },
+            ..small_opts()
+        });
+        let e = reg.load("a", &p).unwrap();
+        let q = Mat::from_fn(4, 15, |i, j| ((i * 7 + j) % 5) as Elem);
+        let (h, res, ps) = e.transform(Queries::Dense(&q), true).unwrap();
+        assert_eq!((h.rows(), h.cols()), (4, 3));
+        assert_eq!(res.len(), 4);
+        assert_eq!(ps.warm_misses, 4);
+        // Repeat: all rows hit, no more sweeps than the cold pass.
+        let (_, _, ps2) = e.transform(Queries::Dense(&q), true).unwrap();
+        assert_eq!(ps2.warm_hits, 4);
+        assert!(ps2.sweeps <= ps.sweeps);
+        let s = e.stats();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.cold.requests, 1);
+        assert_eq!(s.warm.requests, 1);
+        assert!(s.warm.avg_sweeps() <= s.cold.avg_sweeps());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn admission_budget_rejects_oversize_loads() {
+        let dir = tmpdir("admission");
+        let a = write_model(&dir, "a.json", 30, 4, 3);
+        let b = write_model(&dir, "b.json", 30, 4, 4);
+        let reg = ModelRegistry::new(RegistryOpts {
+            max_total_nnz: 150, // one 30x4 dense-random W (~120 nnz) fits
+            ..small_opts()
+        });
+        reg.load("a", &a).unwrap();
+        let err = format!("{:#}", reg.load("b", &b).unwrap_err());
+        assert!(err.contains("admission"), "{err}");
+        // Replacing the resident model under the same name is fine.
+        reg.load("a", &b).unwrap();
+        assert_eq!(reg.len(), 1);
+        // And after unloading there is room again.
+        reg.unload("a").unwrap();
+        reg.load("b", &b).unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_parse_validates() {
+        let base = Path::new("/models");
+        let good = r#"{"format": "plnmf-manifest", "version": 2,
+            "models": [{"name": "a", "path": "a.json"},
+                       {"name": "b", "path": "/abs/b.json"}]}"#;
+        let m = Manifest::parse(good, base).unwrap();
+        assert_eq!(m.version, 2);
+        assert_eq!(m.models[0].path, Path::new("/models/a.json"));
+        assert_eq!(m.models[1].path, Path::new("/abs/b.json"));
+        for bad in [
+            r#"{"format": "other", "version": 1, "models": []}"#,
+            r#"{"format": "plnmf-manifest", "models": []}"#,
+            r#"{"format": "plnmf-manifest", "version": 1}"#,
+            r#"{"format": "plnmf-manifest", "version": 1,
+                "models": [{"name": "a", "path": "x"}, {"name": "a", "path": "y"}]}"#,
+            r#"{"format": "plnmf-manifest", "version": 1, "models": [{"path": "x"}]}"#,
+        ] {
+            assert!(Manifest::parse(bad, base).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn manifest_reload_applies_only_on_version_bump() {
+        let dir = tmpdir("reload");
+        let a = write_model(&dir, "a.json", 20, 3, 5);
+        let b = write_model(&dir, "b.json", 18, 3, 6);
+        let man = dir.join("manifest.json");
+        std::fs::write(&man, manifest_json(1, 0, &[("a", "a.json")]).pretty()).unwrap();
+
+        let reg = ModelRegistry::from_manifest(&man, small_opts()).unwrap();
+        assert_eq!(reg.manifest_version(), 1);
+        assert_eq!(reg.names(), vec!["a"]);
+
+        // Same version → no-op even though the file now lists b.
+        std::fs::write(&man, manifest_json(1, 0, &[("b", "b.json")]).pretty()).unwrap();
+        assert!(!reg.reload_manifest().unwrap());
+        assert_eq!(reg.names(), vec!["a"]);
+
+        // Version bump → b loads, a unloads.
+        std::fs::write(&man, manifest_json(2, 0, &[("b", "b.json")]).pretty()).unwrap();
+        assert!(reg.reload_manifest().unwrap());
+        assert_eq!(reg.manifest_version(), 2);
+        assert_eq!(reg.names(), vec!["b"]);
+        assert_eq!(reg.get("b").unwrap().path(), b.as_path());
+        drop(a);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,590 @@
+//! `plnmf serve` — a long-lived TCP daemon over the [`ModelRegistry`].
+//!
+//! PR 1's `transform` / `recommend` CLI pays model load + Gram build on
+//! every invocation, which defeats the cached-Gram design: the §5
+//! data-movement savings only compound when the factors stay resident
+//! across requests. This daemon keeps every registered model's Ŵ, Gram,
+//! thread pool, and warm cache alive and answers requests over a
+//! deliberately boring protocol: **newline-delimited JSON over TCP**,
+//! std-only, parsed with [`crate::util::json`] — one request object per
+//! line in, one response object per line out.
+//!
+//! ## Protocol
+//!
+//! Every request is `{"op": ..., ...}`; every response carries
+//! `"ok": true|false` (plus `"error"` on failure). Ops:
+//!
+//! | op | request | response |
+//! |----|---------|----------|
+//! | `transform` | `model`, `queries`, [`warm`=true] | `h` (m×K), `residuals`, `warm` counters |
+//! | `recommend` | `model`, `queries`, [`top`=10], [`exclude_seen`=false], [`warm`=true] | `recs`: per query `[item, score]` pairs |
+//! | `stats` | — | uptime, request count, per-model sweep/warm counters |
+//! | `load` | `name` + `path`, or neither (manifest reload) | `loaded` / `reloaded` |
+//! | `unload` | `name` | — |
+//! | `ping` | — | `pong` |
+//! | `shutdown` | — | `bye`, then the daemon drains and exits |
+//!
+//! `queries` is either dense rows (`[[...V numbers...], ...]`) or sparse
+//! rows (`[{"cols": [...], "vals": [...]}, ...]`); both deserialize into
+//! the same [`Queries`] the in-process API takes, so a daemon round-trip
+//! is **bit-identical** to calling [`crate::serve::Projector`] directly
+//! (JSON numbers are f64, which carries f32 exactly; asserted in
+//! `tests/integration_daemon.rs`). Batches flow through the projector's
+//! nnz-balanced micro-batching unchanged.
+//!
+//! ## Concurrency
+//!
+//! One OS thread per connection parses and serializes; actual solves run
+//! on each model's own [`crate::parallel::ThreadPool`] behind that
+//! model's queue (see [`crate::serve::registry`]), so two models serve
+//! concurrently without oversubscribing the machine while requests for
+//! one model queue fairly behind each other.
+//!
+//! The accept loop also polls the attached manifest (every ~2 s) and
+//! hot-reloads the fleet when its `version` increases.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::linalg::Mat;
+use crate::serve::projector::Queries;
+use crate::serve::registry::ModelRegistry;
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use crate::util::Timer;
+use crate::{Elem, Result};
+
+/// How often the accept loop checks the manifest for a version bump.
+const MANIFEST_POLL: Duration = Duration::from_secs(2);
+/// How long `run` waits for in-flight connections after `shutdown`.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
+
+struct Shared {
+    stop: AtomicBool,
+    requests: AtomicU64,
+    active: AtomicUsize,
+    started: Instant,
+    addr: SocketAddr,
+}
+
+/// A bound (not yet running) daemon.
+pub struct Server {
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind `host:port` (port 0 = OS-assigned; read it back via
+    /// [`Self::local_addr`]).
+    pub fn bind(registry: Arc<ModelRegistry>, host: &str, port: u16) -> Result<Server> {
+        let listener = TcpListener::bind((host, port))
+            .with_context(|| format!("binding {host}:{port}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        Ok(Server {
+            listener,
+            registry,
+            shared: Arc::new(Shared {
+                stop: AtomicBool::new(false),
+                requests: AtomicU64::new(0),
+                active: AtomicUsize::new(0),
+                started: Instant::now(),
+                addr,
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Accept loop: blocks until a client sends `shutdown`, then drains
+    /// in-flight connections (bounded) and returns. A background thread
+    /// polls the manifest every [`MANIFEST_POLL`] — off the accept path,
+    /// so an idle daemon still hot-reloads and a slow model rebuild
+    /// never stalls incoming connections.
+    pub fn run(self) -> Result<()> {
+        let poller = {
+            let registry = Arc::clone(&self.registry);
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || {
+                let tick = Duration::from_millis(100);
+                let mut since_poll = Duration::ZERO;
+                while !shared.stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    since_poll += tick;
+                    if since_poll >= MANIFEST_POLL {
+                        since_poll = Duration::ZERO;
+                        if let Err(e) = registry.reload_manifest() {
+                            crate::warn_!("serve: manifest reload failed: {e:#}");
+                        }
+                    }
+                }
+            })
+        };
+        let accepted: Result<()> = loop {
+            let (stream, peer) = match self.listener.accept() {
+                Ok(x) => x,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e).context("accepting connection"),
+            };
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break Ok(());
+            }
+            crate::debug!("serve: connection from {peer}");
+            let registry = Arc::clone(&self.registry);
+            let shared = Arc::clone(&self.shared);
+            shared.active.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                handle_connection(stream, &registry, &shared);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        };
+        // Every exit path — clean shutdown or accept failure — stops the
+        // poller (it would otherwise re-read the manifest forever in
+        // embedded users like the bench) and drains handlers, bounded.
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let _ = poller.join();
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while self.shared.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        accepted?;
+        crate::info!(
+            "serve: shut down after {} requests",
+            self.shared.requests.load(Ordering::SeqCst)
+        );
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Shared) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {}
+            Err(_) => break,
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        shared.requests.fetch_add(1, Ordering::SeqCst);
+        let (resp, is_shutdown) = match parse_request(trimmed) {
+            Ok(req) => {
+                let is_shutdown = req.get("op").as_str() == Some("shutdown");
+                (dispatch(&req, registry, shared), is_shutdown)
+            }
+            Err(e) => (err_json(format!("bad request: {e}")), false),
+        };
+        let mut out = resp.to_string();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+        if is_shutdown {
+            // Wake the accept loop so it observes the stop flag.
+            let _ = TcpStream::connect(shared.addr);
+            break;
+        }
+    }
+}
+
+/// Parse one request line: exactly one JSON value, trailing whitespace
+/// allowed (the streaming `parse_prefix` leaves the rest to us).
+fn parse_request(line: &str) -> Result<Json> {
+    let (v, consumed) = Json::parse_prefix(line).map_err(|e| anyhow!("{e}"))?;
+    if !line[consumed..].trim().is_empty() {
+        bail!("trailing characters after the JSON request");
+    }
+    Ok(v)
+}
+
+fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
+    let op = req.get("op").as_str().unwrap_or("");
+    let result = match op {
+        "ping" => Ok(ok_obj(vec![("pong", Json::Bool(true))])),
+        "transform" => op_transform(req, registry),
+        "recommend" => op_recommend(req, registry),
+        "stats" => Ok(op_stats(registry, shared)),
+        "load" => op_load(req, registry),
+        "unload" => op_unload(req, registry),
+        "shutdown" => {
+            shared.stop.store(true, Ordering::SeqCst);
+            Ok(ok_obj(vec![("bye", Json::Bool(true))]))
+        }
+        "" => Err(anyhow!("request needs an \"op\" string")),
+        other => Err(anyhow!(
+            "unknown op '{other}' (try transform|recommend|stats|load|unload|ping|shutdown)"
+        )),
+    };
+    result.unwrap_or_else(|e| err_json(format!("{e:#}")))
+}
+
+fn ok_obj(mut pairs: Vec<(&str, Json)>) -> Json {
+    pairs.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(pairs)
+}
+
+fn err_json(msg: String) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+}
+
+// ---------------------------------------------------------------------------
+// Query (de)serialization.
+// ---------------------------------------------------------------------------
+
+/// Owned deserialized query batch (requests outlive no borrow).
+pub enum OwnedQueries {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl OwnedQueries {
+    pub fn as_queries(&self) -> Queries<'_> {
+        match self {
+            OwnedQueries::Dense(m) => Queries::Dense(m),
+            OwnedQueries::Sparse(c) => Queries::Sparse(c),
+        }
+    }
+}
+
+/// Deserialize a request's `queries` against a model with `v` features.
+fn parse_queries(req: &Json, v: usize) -> Result<OwnedQueries> {
+    let rows = req
+        .get("queries")
+        .as_arr()
+        .ok_or_else(|| anyhow!("request needs \"queries\": an array of rows"))?;
+    if rows.is_empty() {
+        bail!("empty query batch");
+    }
+    match &rows[0] {
+        Json::Arr(_) => {
+            let mut data: Vec<Elem> = Vec::with_capacity(rows.len() * v);
+            for (i, row) in rows.iter().enumerate() {
+                let vals = row
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("queries[{i}]: expected a dense row array"))?;
+                if vals.len() != v {
+                    bail!("queries[{i}] has {} entries, model expects V={v}", vals.len());
+                }
+                for (j, x) in vals.iter().enumerate() {
+                    let x = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("queries[{i}][{j}] is not a number"))?;
+                    if !x.is_finite() {
+                        bail!("queries[{i}][{j}] = {x} is not finite");
+                    }
+                    data.push(x as Elem);
+                }
+            }
+            Ok(OwnedQueries::Dense(Mat::from_vec(rows.len(), v, data)))
+        }
+        Json::Obj(_) => {
+            let mut triplets: Vec<(usize, usize, Elem)> = Vec::new();
+            for (i, row) in rows.iter().enumerate() {
+                let cols = row
+                    .get("cols")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("queries[{i}] needs \"cols\""))?;
+                let vals = row
+                    .get("vals")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("queries[{i}] needs \"vals\""))?;
+                if cols.len() != vals.len() {
+                    bail!(
+                        "queries[{i}]: {} cols but {} vals",
+                        cols.len(),
+                        vals.len()
+                    );
+                }
+                for (c, x) in cols.iter().zip(vals) {
+                    let c = c
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("queries[{i}]: bad column index {c}"))?;
+                    if c >= v {
+                        bail!("queries[{i}]: column {c} out of range (V={v})");
+                    }
+                    let x = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("queries[{i}]: non-numeric value"))?;
+                    if !x.is_finite() {
+                        bail!("queries[{i}]: value {x} is not finite");
+                    }
+                    triplets.push((i, c, x as Elem));
+                }
+            }
+            Ok(OwnedQueries::Sparse(Csr::from_triplets(rows.len(), v, triplets)))
+        }
+        _ => bail!(
+            "queries rows must be dense arrays ([[...]]) or sparse objects \
+             ([{{\"cols\": [...], \"vals\": [...]}}])"
+        ),
+    }
+}
+
+/// Serialize a query batch into the protocol's `queries` value — the
+/// client-side counterpart of the daemon's parser (used by the bench,
+/// the example, and the integration tests).
+pub fn queries_to_json(q: Queries<'_>) -> Json {
+    match q {
+        Queries::Dense(m) => Json::Arr(
+            (0..m.rows())
+                .map(|i| Json::Arr(m.row(i).iter().map(|&x| Json::Num(x as f64)).collect()))
+                .collect(),
+        ),
+        Queries::Sparse(a) => Json::Arr(
+            (0..a.rows())
+                .map(|i| {
+                    let (cols, vals) = a.row(i);
+                    Json::obj(vec![
+                        (
+                            "cols",
+                            Json::Arr(cols.iter().map(|&c| Json::num(c as f64)).collect()),
+                        ),
+                        (
+                            "vals",
+                            Json::Arr(vals.iter().map(|&v| Json::num(v as f64)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    }
+}
+
+fn mat_rows_json(m: &Mat) -> Json {
+    Json::Arr(
+        (0..m.rows())
+            .map(|i| Json::Arr(m.row(i).iter().map(|&x| Json::Num(x as f64)).collect()))
+            .collect(),
+    )
+}
+
+fn warm_json(ps: &crate::serve::projector::ProjectStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(ps.warm_hits as f64)),
+        ("misses", Json::num(ps.warm_misses as f64)),
+        ("sweeps", Json::num(ps.sweeps as f64)),
+        ("micro_batches", Json::num(ps.micro_batches as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Ops.
+// ---------------------------------------------------------------------------
+
+fn op_transform(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    let name = req
+        .get("model")
+        .as_str()
+        .ok_or_else(|| anyhow!("transform needs \"model\""))?;
+    let entry = registry.get(name)?;
+    let q = parse_queries(req, entry.projector().v())?;
+    let warm = req.get("warm").as_bool().unwrap_or(true);
+    let t = Timer::start();
+    let (h, res, ps) = entry.transform(q.as_queries(), warm)?;
+    Ok(ok_obj(vec![
+        ("model", Json::str(name)),
+        ("h", mat_rows_json(&h)),
+        ("residuals", Json::Arr(res.iter().map(|&x| Json::Num(x)).collect())),
+        ("warm", warm_json(&ps)),
+        ("secs", Json::num(t.elapsed_secs())),
+    ]))
+}
+
+fn op_recommend(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    let name = req
+        .get("model")
+        .as_str()
+        .ok_or_else(|| anyhow!("recommend needs \"model\""))?;
+    let entry = registry.get(name)?;
+    let q = parse_queries(req, entry.projector().v())?;
+    let top = req.get("top").as_usize().unwrap_or(10);
+    let exclude_seen = req.get("exclude_seen").as_bool().unwrap_or(false);
+    let warm = req.get("warm").as_bool().unwrap_or(true);
+    let t = Timer::start();
+    let (recs, ps) = entry.recommend(q.as_queries(), top, exclude_seen, warm)?;
+    let recs_json = Json::Arr(
+        recs.iter()
+            .map(|rec| {
+                Json::Arr(
+                    rec.iter()
+                        .map(|&(item, score)| {
+                            Json::Arr(vec![Json::num(item as f64), Json::Num(score as f64)])
+                        })
+                        .collect(),
+                )
+            })
+            .collect(),
+    );
+    Ok(ok_obj(vec![
+        ("model", Json::str(name)),
+        ("recs", recs_json),
+        ("warm", warm_json(&ps)),
+        ("secs", Json::num(t.elapsed_secs())),
+    ]))
+}
+
+fn op_stats(registry: &ModelRegistry, shared: &Shared) -> Json {
+    ok_obj(vec![
+        ("uptime_secs", Json::num(shared.started.elapsed().as_secs_f64())),
+        ("requests", Json::num(shared.requests.load(Ordering::SeqCst) as f64)),
+        ("manifest_version", Json::num(registry.manifest_version() as f64)),
+        ("admission_budget", Json::num(registry.admission_budget() as f64)),
+        ("total_nnz", Json::num(registry.total_nnz() as f64)),
+        ("models", registry.stats_json()),
+    ])
+}
+
+fn op_load(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    match (req.get("name").as_str(), req.get("path").as_str()) {
+        (Some(name), Some(path)) => {
+            let entry = registry.load(name, std::path::Path::new(path))?;
+            Ok(ok_obj(vec![
+                ("loaded", Json::str(name)),
+                ("nnz", Json::num(entry.nnz() as f64)),
+            ]))
+        }
+        (None, None) => {
+            let reloaded = registry.reload_manifest()?;
+            Ok(ok_obj(vec![
+                ("reloaded", Json::Bool(reloaded)),
+                ("manifest_version", Json::num(registry.manifest_version() as f64)),
+            ]))
+        }
+        _ => bail!("load needs both \"name\" and \"path\" (or neither, to re-read the manifest)"),
+    }
+}
+
+fn op_unload(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    let name = req
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("unload needs \"name\""))?;
+    registry.unload(name)?;
+    Ok(ok_obj(vec![("unloaded", Json::str(name))]))
+}
+
+// ---------------------------------------------------------------------------
+// Client.
+// ---------------------------------------------------------------------------
+
+/// A blocking protocol client: one request line out, one response line
+/// in. Used by the daemon bench, the example, the integration tests, and
+/// anyone driving the daemon from Rust.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to plnmf daemon")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Send one request, read one response (whatever its `ok`).
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("writing request")?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).context("reading response")?;
+        if n == 0 {
+            bail!("daemon closed the connection");
+        }
+        Json::parse(resp.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))
+    }
+
+    /// [`Self::request`], failing on `"ok": false` responses.
+    pub fn request_ok(&mut self, req: &Json) -> Result<Json> {
+        let resp = self.request(req)?;
+        if resp.get("ok").as_bool() != Some(true) {
+            bail!(
+                "daemon error: {}",
+                resp.get("error").as_str().unwrap_or("(no error message)")
+            );
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_queries_dense_and_sparse() {
+        let dense = Json::parse(r#"{"queries": [[1, 0, 2], [0, 0, 0]]}"#).unwrap();
+        match parse_queries(&dense, 3).unwrap() {
+            OwnedQueries::Dense(m) => {
+                assert_eq!((m.rows(), m.cols()), (2, 3));
+                assert_eq!(m.at(0, 2), 2.0);
+            }
+            _ => panic!("expected dense"),
+        }
+        let sparse =
+            Json::parse(r#"{"queries": [{"cols": [0, 2], "vals": [1.5, 2.5]}]}"#).unwrap();
+        match parse_queries(&sparse, 3).unwrap() {
+            OwnedQueries::Sparse(c) => {
+                assert_eq!((c.rows(), c.cols()), (1, 3));
+                assert_eq!(c.row(0).0, &[0, 2]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn parse_queries_rejects_malformed_batches() {
+        for (src, v) in [
+            (r#"{"queries": []}"#, 3),
+            (r#"{"queries": [[1, 2]]}"#, 3),            // wrong width
+            (r#"{"queries": [[1, "x", 2]]}"#, 3),       // non-numeric
+            (r#"{"queries": [{"cols": [5], "vals": [1]}]}"#, 3), // col out of range
+            (r#"{"queries": [{"cols": [0, 1], "vals": [1]}]}"#, 3), // length mismatch
+            (r#"{"queries": [3]}"#, 3),                 // bad row type
+            (r#"{"nope": 1}"#, 3),                      // missing key
+        ] {
+            let req = Json::parse(src).unwrap();
+            assert!(parse_queries(&req, v).is_err(), "should reject {src}");
+        }
+    }
+
+    #[test]
+    fn queries_roundtrip_through_protocol_encoding() {
+        let m = Mat::from_fn(3, 4, |i, j| if (i + j) % 2 == 0 { (i * 4 + j) as Elem } else { 0.0 });
+        let req = Json::obj(vec![("queries", queries_to_json(Queries::Dense(&m)))]);
+        match parse_queries(&req, 4).unwrap() {
+            OwnedQueries::Dense(re) => assert_eq!(re, m),
+            _ => panic!("dense in, dense out"),
+        }
+        let c = Csr::from_dense(&m);
+        let req = Json::obj(vec![("queries", queries_to_json(Queries::Sparse(&c)))]);
+        match parse_queries(&req, 4).unwrap() {
+            OwnedQueries::Sparse(re) => assert_eq!(re, c),
+            _ => panic!("sparse in, sparse out"),
+        }
+    }
+
+    #[test]
+    fn request_line_parsing_rejects_trailing_junk() {
+        assert!(parse_request(r#"{"op": "ping"}"#).is_ok());
+        assert!(parse_request("{\"op\": \"ping\"}  ").is_ok());
+        assert!(parse_request(r#"{"op": "ping"} {"op": "ping"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+}

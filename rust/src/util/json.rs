@@ -23,14 +23,24 @@ pub enum Json {
 
 impl Json {
     pub fn parse(src: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { src: src.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
+        let (v, consumed) = Self::parse_prefix(src)?;
+        let mut p = Parser { src: src.as_bytes(), pos: consumed };
         p.skip_ws();
         if p.pos != p.src.len() {
             return Err(p.err("trailing characters after JSON value"));
         }
         Ok(v)
+    }
+
+    /// Streaming parse: the **first** JSON value in `src`, plus the
+    /// number of bytes consumed. Trailing content is left to the caller
+    /// — this is what lets the serving daemon parse one value out of a
+    /// protocol line without first splitting or copying it.
+    pub fn parse_prefix(src: &str) -> Result<(Json, usize), JsonError> {
+        let mut p = Parser { src: src.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        Ok((v, p.pos))
     }
 
     // -- typed accessors ----------------------------------------------------
@@ -453,6 +463,22 @@ mod tests {
     fn utf8_passthrough() {
         let v = Json::parse("\"héllo — ≤\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo — ≤"));
+    }
+
+    #[test]
+    fn parse_prefix_streams_one_value() {
+        let src = r#"  {"op": "ping"} {"op": "next"}"#;
+        let (v, consumed) = Json::parse_prefix(src).unwrap();
+        assert_eq!(v.get("op").as_str(), Some("ping"));
+        assert_eq!(&src[consumed..], r#" {"op": "next"}"#);
+        // The second value parses from the remainder.
+        let (v2, _) = Json::parse_prefix(&src[consumed..]).unwrap();
+        assert_eq!(v2.get("op").as_str(), Some("next"));
+        // Scalars and arrays stream too.
+        let (n, c) = Json::parse_prefix("42, tail").unwrap();
+        assert_eq!(n.as_f64(), Some(42.0));
+        assert_eq!(c, 2);
+        assert!(Json::parse_prefix("   ").is_err());
     }
 
     #[test]

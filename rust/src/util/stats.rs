@@ -22,7 +22,11 @@ impl Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample");
         let n = samples.len();
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): one NaN measurement (a
+        // failed timer read, a 0/0 rate) must not panic the whole bench
+        // harness mid-run. NaNs sort to the end and show up loudly in
+        // `max`/`mean` instead.
+        sorted.sort_by(f64::total_cmp);
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
             sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
@@ -31,7 +35,7 @@ impl Summary {
         };
         let median = percentile_sorted(&sorted, 50.0);
         let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -109,5 +113,22 @@ mod tests {
         let s = Summary::of(&[1.0, 1.0, 1.0, 1.0, 100.0]);
         assert_eq!(s.median, 1.0);
         assert!(s.mean > 10.0);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic() {
+        // Regression: partial_cmp().unwrap() used to abort the whole
+        // bench harness on a single NaN measurement. total_cmp sorts
+        // NaNs after every real number, so the robust estimators stay
+        // meaningful and the contamination is visible in max/mean.
+        let s = Summary::of(&[1.0, 2.0, f64::NAN, 3.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN sorts last and surfaces as max");
+        assert_eq!(s.median, 3.0);
+        assert!(s.mean.is_nan());
+        // All-NaN input is degenerate but must still not panic.
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert!(s.median.is_nan());
     }
 }

@@ -5,13 +5,17 @@
 //! `tests/golden/traces.json`, so convergence behavior cannot silently
 //! drift when kernels are refactored.
 //!
-//! The snapshot is **self-bootstrapping**: on a checkout without the
-//! file (or with `PLNMF_UPDATE_GOLDEN=1`) the test writes the current
-//! trajectories and passes; subsequent runs assert against it. Commit
-//! the generated file to pin behavior in CI. Pinned threads + the
-//! deterministic Pcg32 init make the traces machine-stable; the
-//! tolerance only absorbs floating-point reassociation (e.g. a changed
-//! autovectorization width), not algorithmic drift.
+//! The snapshot is **self-bootstrapping locally**: on a checkout without
+//! the file (or with `PLNMF_UPDATE_GOLDEN=1`) the test writes the current
+//! trajectories; subsequent runs assert against it. On CI (`CI` env var
+//! set, as GitHub Actions does) a missing snapshot is a **hard failure**
+//! — a regression test that silently re-baselines itself on every fresh
+//! checkout asserts nothing. The bootstrap still writes the file first,
+//! so a CI run's artifact can be committed to resolve the failure.
+//! Pinned threads + the deterministic Pcg32 init make the traces
+//! machine-stable; the tolerance only absorbs floating-point
+//! reassociation (e.g. a changed autovectorization width), not
+//! algorithmic drift.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -61,6 +65,15 @@ fn trajectories() -> BTreeMap<String, Vec<f64>> {
     out
 }
 
+/// CI detection: the `CI` env var is set by GitHub Actions (`true`) and
+/// virtually every other CI system; `0`/`false` opt back out.
+fn on_ci() -> bool {
+    match std::env::var("CI") {
+        Ok(v) => !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"),
+        Err(_) => false,
+    }
+}
+
 fn write_golden(path: &Path, traces: &BTreeMap<String, Vec<f64>>) {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent).unwrap();
@@ -83,6 +96,14 @@ fn convergence_trajectories_match_golden_snapshot() {
     let update = std::env::var("PLNMF_UPDATE_GOLDEN").is_ok();
     if update || !path.exists() {
         write_golden(path, &got);
+        if !update && on_ci() {
+            panic!(
+                "{GOLDEN_PATH} is missing: on CI the golden-trace regression must assert, \
+                 not re-baseline itself. Run `cargo test -q` locally once and commit the \
+                 generated snapshot (it was just written, {} traces).",
+                got.len()
+            );
+        }
         eprintln!(
             "golden snapshot written to {GOLDEN_PATH} ({} traces) — commit it; \
              subsequent runs assert against it",

@@ -1,0 +1,381 @@
+//! End-to-end daemon tests: a live `plnmf serve` socket exercised by
+//! concurrent clients over two registered models, protocol error paths,
+//! manifest hot reload, and the warm-start contract.
+//!
+//! The headline assertion is **bit-for-bit parity**: a transform /
+//! recommend answered over TCP + newline-delimited JSON must equal the
+//! in-process `Projector` result exactly (JSON numbers are f64, which
+//! carries every f32 exactly; the daemon runs each model on a pool of
+//! the same width the reference uses).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use plnmf::linalg::Mat;
+use plnmf::nmf::Factors;
+use plnmf::parallel::ThreadPool;
+use plnmf::serve::registry::manifest_json;
+use plnmf::serve::{
+    queries_to_json, save_model, Client, ModelMeta, ModelRegistry, Projector, ProjectorOpts,
+    Queries, RegistryOpts, Server, WarmCache,
+};
+use plnmf::testing::PropConfig;
+use plnmf::util::json::Json;
+use plnmf::util::rng::Pcg32;
+use plnmf::Elem;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("plnmf-daemon-it-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn write_model(dir: &Path, file: &str, v: usize, d: usize, k: usize, seed: u64) -> PathBuf {
+    let f = Factors::random(v, d, k, seed);
+    let path = dir.join(file);
+    save_model(&path, &f, &ModelMeta::default()).unwrap();
+    path
+}
+
+/// Registry options pinned for reproducibility: one thread per model, so
+/// the in-process reference (also one thread) matches bit-for-bit.
+fn pinned_opts(projector: ProjectorOpts, warm_cache: usize) -> RegistryOpts {
+    RegistryOpts { threads: 2, per_model_threads: 1, projector, warm_cache, max_total_nnz: 0 }
+}
+
+type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start_server(registry: ModelRegistry) -> (std::net::SocketAddr, ServerHandle) {
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn shutdown(addr: std::net::SocketAddr) {
+    let mut c = Client::connect(addr).unwrap();
+    let resp = c.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+    assert_eq!(resp.get("bye").as_bool(), Some(true));
+}
+
+/// Parse a response `h` back into a Mat of exact f32s.
+fn h_from_json(resp: &Json, k: usize) -> Mat {
+    let rows = resp.get("h").as_arr().expect("response has h");
+    let mut data: Vec<Elem> = Vec::with_capacity(rows.len() * k);
+    for row in rows {
+        let row = row.as_arr().unwrap();
+        assert_eq!(row.len(), k);
+        for x in row {
+            data.push(x.as_f64().unwrap() as Elem);
+        }
+    }
+    Mat::from_vec(rows.len(), k, data)
+}
+
+#[test]
+fn concurrent_clients_on_two_models_match_in_process_bit_for_bit() {
+    let dir = tmpdir("parity");
+    let model_a = write_model(&dir, "a.json", 40, 9, 5, 1);
+    let model_b = write_model(&dir, "b.json", 30, 9, 4, 2);
+
+    // Deterministic options; warm cache off for exact reproducibility.
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let registry = ModelRegistry::new(pinned_opts(popts, 0));
+    registry.load("a", &model_a).unwrap();
+    registry.load("b", &model_b).unwrap();
+    let (addr, handle) = start_server(registry);
+
+    // In-process references on a pool of the same width (1 thread).
+    // `move` copies `popts` in, keeping the closure 'static + Copy so
+    // both spawned workers can carry it.
+    let reference = move |path: &Path, q: &Mat| -> (Mat, Vec<Vec<(u32, Elem)>>) {
+        let (factors, _) = plnmf::serve::load_model(path).unwrap();
+        let pool = Arc::new(ThreadPool::new(1));
+        let p = Projector::new(factors.w, pool, popts).unwrap();
+        let h = p.project(Queries::Dense(q)).unwrap();
+        let recs = p.recommend_for(Queries::Dense(q), &h, 5, false).unwrap();
+        (h, recs)
+    };
+
+    let worker = |name: &'static str, path: PathBuf, v: usize, k: usize, seed: u64| {
+        let addr = addr;
+        std::thread::spawn(move || {
+            let mut rng = Pcg32::seeded(seed);
+            let mut client = Client::connect(addr).unwrap();
+            for round in 0..4 {
+                let q = Mat::random(6, v, &mut rng, 0.0, 1.0);
+                let (h_ref, recs_ref) = reference(&path, &q);
+
+                let resp = client
+                    .request_ok(&Json::obj(vec![
+                        ("op", Json::str("transform")),
+                        ("model", Json::str(name)),
+                        ("queries", queries_to_json(Queries::Dense(&q))),
+                    ]))
+                    .unwrap();
+                let h = h_from_json(&resp, k);
+                assert_eq!(h, h_ref, "{name} round {round}: daemon h must be bit-identical");
+
+                let resp = client
+                    .request_ok(&Json::obj(vec![
+                        ("op", Json::str("recommend")),
+                        ("model", Json::str(name)),
+                        ("queries", queries_to_json(Queries::Dense(&q))),
+                        ("top", Json::num(5.0)),
+                    ]))
+                    .unwrap();
+                let recs = resp.get("recs").as_arr().unwrap();
+                assert_eq!(recs.len(), recs_ref.len());
+                for (qi, (got, want)) in recs.iter().zip(&recs_ref).enumerate() {
+                    let got = got.as_arr().unwrap();
+                    assert_eq!(got.len(), want.len());
+                    for (pair, &(item, score)) in got.iter().zip(want) {
+                        let pair = pair.as_arr().unwrap();
+                        assert_eq!(pair[0].as_usize().unwrap() as u32, item, "{name} q{qi}");
+                        assert_eq!(pair[1].as_f64().unwrap() as Elem, score, "{name} q{qi}");
+                    }
+                }
+            }
+        })
+    };
+
+    // Two clients hammer two different models concurrently.
+    let ta = worker("a", model_a.clone(), 40, 5, 77);
+    let tb = worker("b", model_b.clone(), 30, 4, 78);
+    ta.join().unwrap();
+    tb.join().unwrap();
+
+    shutdown(addr);
+    handle.join().unwrap().unwrap(); // clean exit
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn warm_start_cuts_sweeps_and_shows_in_stats() {
+    let dir = tmpdir("warm");
+    let model = write_model(&dir, "m.json", 35, 9, 6, 3);
+    let popts = ProjectorOpts { sweeps: 100, micro_batch: 16, tol: 1e-6, ..Default::default() };
+    let registry = ModelRegistry::new(pinned_opts(popts, 128));
+    registry.load("m", &model).unwrap();
+    let (addr, handle) = start_server(registry);
+
+    let mut rng = Pcg32::seeded(9);
+    let q = Mat::random(10, 35, &mut rng, 0.0, 1.0);
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("m")),
+        ("queries", queries_to_json(Queries::Dense(&q))),
+    ]);
+    let mut client = Client::connect(addr).unwrap();
+
+    let cold = client.request_ok(&req).unwrap();
+    let cold_sweeps = cold.get("warm").get("sweeps").as_usize().unwrap();
+    assert_eq!(cold.get("warm").get("hits").as_usize(), Some(0));
+    assert_eq!(cold.get("warm").get("misses").as_usize(), Some(10));
+
+    let warm = client.request_ok(&req).unwrap();
+    let warm_sweeps = warm.get("warm").get("sweeps").as_usize().unwrap();
+    assert_eq!(warm.get("warm").get("hits").as_usize(), Some(10));
+    assert!(
+        warm_sweeps <= cold_sweeps,
+        "warm repeat ran {warm_sweeps} sweeps vs cold {cold_sweeps}"
+    );
+
+    // Warm result stays within the solve tolerance regime of the cold one.
+    let h_cold = h_from_json(&cold, 6);
+    let h_warm = h_from_json(&warm, 6);
+    assert!(h_cold.max_abs_diff(&h_warm) < 1e-3);
+
+    // The stats op shows the two buckets separately.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    let m = stats.get("models").get("m");
+    assert_eq!(m.get("cold").get("requests").as_usize(), Some(1));
+    assert_eq!(m.get("warm").get("requests").as_usize(), Some(1));
+    let cold_avg = m.get("cold").get("avg_sweeps").as_f64().unwrap();
+    let warm_avg = m.get("warm").get("avg_sweeps").as_f64().unwrap();
+    assert!(
+        warm_avg <= cold_avg,
+        "stats: warm avg sweeps {warm_avg} vs cold {cold_avg}"
+    );
+    assert_eq!(m.get("warm_hits").as_usize(), Some(10));
+
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn warm_start_property_cached_start_never_does_worse() {
+    // Pure-projector property (no socket): for random problems, an exact
+    // repeat with a warm cache (a) runs no more sweeps than the cold
+    // solve and (b) lands within the sweep tolerance of the cold result.
+    PropConfig::trials(10).run("warm start dominates cold start", |g| {
+        let v = g.usize_in(10, 40);
+        let k = g.usize_in(2, 7);
+        let m = g.usize_in(1, 12);
+        let tol = 1e-6;
+        let mut rng = Pcg32::seeded(1000 + g.trial);
+        let w = Mat::random(v, k, &mut rng, 0.0, 2.0);
+        let q = Mat::random(m, v, &mut rng, 0.0, 1.0);
+        let p = Projector::new(
+            w,
+            Arc::new(ThreadPool::new(2)),
+            ProjectorOpts { sweeps: 150, micro_batch: 4, tol, ..Default::default() },
+        )
+        .unwrap();
+        let mut cache = WarmCache::new(64);
+        let (h_cold, cold) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        let (h_warm, warm) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        assert_eq!(cold.warm_hits, 0);
+        assert_eq!(warm.warm_hits, m);
+        assert!(
+            warm.sweeps <= cold.sweeps,
+            "v={v} k={k} m={m}: warm {} vs cold {} sweeps",
+            warm.sweeps,
+            cold.sweeps
+        );
+        assert!(h_cold.max_abs_diff(&h_warm) < 1e-3, "v={v} k={k} m={m}");
+    });
+}
+
+#[test]
+fn protocol_errors_leave_the_connection_usable() {
+    let dir = tmpdir("errors");
+    let model = write_model(&dir, "m.json", 20, 5, 3, 4);
+    let registry = ModelRegistry::new(pinned_opts(ProjectorOpts::default(), 0));
+    registry.load("m", &model).unwrap();
+    let (addr, handle) = start_server(registry);
+    let mut client = Client::connect(addr).unwrap();
+
+    let expect_err = |client: &mut Client, req: &Json, needle: &str| {
+        let resp = client.request(req).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "{req}");
+        let msg = resp.get("error").as_str().unwrap_or("");
+        assert!(msg.contains(needle), "error {msg:?} should mention {needle:?}");
+    };
+
+    expect_err(&mut client, &Json::obj(vec![("op", Json::str("explode"))]), "unknown op");
+    expect_err(&mut client, &Json::obj(vec![("no_op", Json::num(1.0))]), "op");
+    expect_err(
+        &mut client,
+        &Json::obj(vec![
+            ("op", Json::str("transform")),
+            ("model", Json::str("ghost")),
+            ("queries", Json::arr(vec![])),
+        ]),
+        "no model 'ghost'",
+    );
+    // Wrong feature width.
+    expect_err(
+        &mut client,
+        &Json::obj(vec![
+            ("op", Json::str("transform")),
+            ("model", Json::str("m")),
+            ("queries", Json::arr(vec![Json::arr(vec![Json::num(1.0)])])),
+        ]),
+        "expects V=20",
+    );
+    // Non-JSON garbage straight on the wire.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(b"this is not json\n").unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+    // The original connection still answers.
+    let pong = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn load_unload_admission_and_manifest_reload_over_the_wire() {
+    let dir = tmpdir("ops");
+    // a.json is referenced by the manifest (relative path); b is loaded
+    // explicitly over the wire.
+    write_model(&dir, "a.json", 25, 6, 4, 5);
+    let model_b = write_model(&dir, "b.json", 25, 6, 4, 6);
+    let manifest = dir.join("manifest.json");
+    std::fs::write(&manifest, manifest_json(1, 150, &[("a", "a.json")]).pretty()).unwrap();
+
+    let registry =
+        ModelRegistry::from_manifest(&manifest, pinned_opts(ProjectorOpts::default(), 0))
+            .unwrap();
+    let (addr, handle) = start_server(registry);
+    let mut client = Client::connect(addr).unwrap();
+
+    // Admission: a 25x4 random W is ~100 nnz; budget 150 rejects a 2nd.
+    let resp = client
+        .request(&Json::obj(vec![
+            ("op", Json::str("load")),
+            ("name", Json::str("b")),
+            ("path", Json::str(model_b.display().to_string())),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert!(resp.get("error").as_str().unwrap().contains("admission"));
+
+    // Unload a, then b fits.
+    client
+        .request_ok(&Json::obj(vec![("op", Json::str("unload")), ("name", Json::str("a"))]))
+        .unwrap();
+    let resp = client
+        .request_ok(&Json::obj(vec![
+            ("op", Json::str("load")),
+            ("name", Json::str("b")),
+            ("path", Json::str(model_b.display().to_string())),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("loaded").as_str(), Some("b"));
+
+    // Manifest hot reload: bump version, list only a again. The wire op
+    // races the server's background poller for who applies version 2
+    // first, so assert on the converged state, not on `reloaded`.
+    std::fs::write(&manifest, manifest_json(2, 150, &[("a", "a.json")]).pretty()).unwrap();
+    let resp = client.request_ok(&Json::obj(vec![("op", Json::str("load"))])).unwrap();
+    assert!(resp.get("reloaded").as_bool().is_some());
+    assert_eq!(resp.get("manifest_version").as_usize(), Some(2));
+
+    // b (not in the manifest) is gone; a serves.
+    let resp = client
+        .request(&Json::obj(vec![
+            ("op", Json::str("transform")),
+            ("model", Json::str("b")),
+            ("queries", Json::arr(vec![])),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    let q = Mat::from_fn(2, 25, |i, j| ((i + j) % 3) as Elem);
+    client
+        .request_ok(&Json::obj(vec![
+            ("op", Json::str("transform")),
+            ("model", Json::str("a")),
+            ("queries", queries_to_json(Queries::Dense(&q))),
+        ]))
+        .unwrap();
+
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_serve_requires_a_model_source() {
+    use plnmf::bench::cli_main;
+    use plnmf::cli::Args;
+    let args =
+        Args::parse(["serve".to_string(), "--serve_port".to_string(), "0".to_string()]).unwrap();
+    let err = format!("{:#}", cli_main(args).unwrap_err());
+    assert!(err.contains("models_manifest") || err.contains("--model"), "{err}");
+}

@@ -42,7 +42,7 @@ fn trained_model_projects_training_docs_accurately() {
 
     let pool = Arc::new(ThreadPool::new(2));
     let opts = ProjectorOpts { sweeps: 100, micro_batch: 16, ..Default::default() };
-    let projector = Projector::new(factors.w.clone(), pool, opts);
+    let projector = Projector::new(factors.w.clone(), pool, opts).unwrap();
     let queries = match &driver.ds.at {
         DataMatrix::Sparse(c) => Queries::Sparse(c),
         DataMatrix::Dense(m) => Queries::Dense(m),
@@ -174,7 +174,7 @@ fn projector_handles_dense_datasets_too() {
         }
         _ => unreachable!(),
     };
-    let projector = Projector::new(w, pool, ProjectorOpts::default());
+    let projector = Projector::new(w, pool, ProjectorOpts::default()).unwrap();
     let queries = match &ds.at {
         DataMatrix::Dense(m) => Queries::Dense(m),
         _ => unreachable!(),
