@@ -1,0 +1,150 @@
+//! Routed-topology demo: two serving workers behind a `plnmf route`
+//! front, driven over one client socket.
+//!
+//! ```text
+//!                         ┌─ worker :p1 — {news}  (own pool, Gram, warm cache)
+//!   client ── route :p0 ──┤
+//!         NDJSON/TCP      └─ worker :p2 — {faces}
+//! ```
+//!
+//! The workers here are in-process `Server` threads addressed by
+//! `host:port` — the router does not care whether a worker lives in a
+//! thread, a child process, or another machine, which is exactly the
+//! point of the seam. The `plnmf route` CLI builds the same topology
+//! with one supervised `plnmf serve` *process* per model (crash
+//! detection, bounded-backoff restart, manifest hot-reload):
+//!
+//! ```sh
+//! plnmf route --models_manifest fleet.json --route_port 7900
+//! ```
+//!
+//! Run this demo with:
+//!
+//! ```sh
+//! cargo run --release --example serving_router
+//! ```
+
+use std::sync::Arc;
+
+use plnmf::config::{EngineKind, RunConfig};
+use plnmf::coordinator::Driver;
+use plnmf::data::DataMatrix;
+use plnmf::serve::{
+    queries_to_json, save_model, Client, ModelMeta, ModelRegistry, ProjectorOpts, Queries,
+    RegistryOpts, Router, RouterOpts, Server,
+};
+use plnmf::util::json::Json;
+
+fn train(dataset: &str, k: usize, path: &std::path::Path) -> anyhow::Result<Driver> {
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.into();
+    cfg.engine = EngineKind::PlNmf;
+    cfg.k = k;
+    cfg.max_iters = 15;
+    cfg.threads = 2;
+    let mut driver = Driver::from_config(&cfg)?;
+    let report = driver.run()?;
+    let meta = ModelMeta {
+        engine: report.engine.to_string(),
+        dataset: dataset.into(),
+        seed: cfg.seed,
+        iters: report.iters_run(),
+        rel_error: report.final_rel_error,
+    };
+    save_model(path, driver.engine_mut().factors(), &meta)?;
+    println!("trained {dataset} (k={k}): rel error {:.4}", report.final_rel_error);
+    Ok(driver)
+}
+
+/// One single-model worker (the per-process shape `plnmf route` spawns,
+/// here as a thread for a self-contained demo).
+fn start_worker(
+    name: &str,
+    model: &std::path::Path,
+) -> anyhow::Result<(std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>)> {
+    let registry = ModelRegistry::new(RegistryOpts {
+        threads: 2,
+        per_model_threads: 2,
+        projector: ProjectorOpts { sweeps: 60, micro_batch: 16, tol: 1e-6, ..Default::default() },
+        warm_cache: 256,
+        max_total_nnz: 0,
+    });
+    registry.load(name, model)?;
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    println!("worker '{name}' on {addr}");
+    Ok((addr, std::thread::spawn(move || server.run())))
+}
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let dir = std::env::temp_dir().join(format!("plnmf-router-demo-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- two models, one worker each ------------------------------------
+    let driver = train("tiny-sparse", 8, &dir.join("news.json"))?;
+    train("tiny", 6, &dir.join("faces.json"))?;
+    let (news_addr, news_handle) = start_worker("news", &dir.join("news.json"))?;
+    let (faces_addr, faces_handle) = start_worker("faces", &dir.join("faces.json"))?;
+
+    // ---- the routing front ----------------------------------------------
+    let router = Router::with_external_workers(
+        &[("news", news_addr), ("faces", faces_addr)],
+        RouterOpts::default(),
+    )?;
+    let addr = router.local_addr();
+    println!("router on {addr} — shards: news -> {news_addr}, faces -> {faces_addr}");
+    let router_handle = std::thread::spawn(move || router.run());
+
+    // ---- one socket reaches every shard ----------------------------------
+    let mut client = Client::connect(addr)?;
+    let queries = match &driver.ds.at {
+        DataMatrix::Sparse(c) => Queries::Sparse(c),
+        DataMatrix::Dense(m) => Queries::Dense(m),
+    };
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("news")),
+        ("queries", queries_to_json(queries)),
+    ]);
+    for pass in ["cold", "warm (repeat, same worker's cache)"] {
+        let resp = client.request_ok(&req)?;
+        let warm = resp.get("warm");
+        println!(
+            "routed transform [{pass}]: {} docs — {} sweeps, {} cache hits",
+            resp.get("h").as_arr().map(|a| a.len()).unwrap_or(0),
+            warm.get("sweeps").as_usize().unwrap_or(0),
+            warm.get("hits").as_usize().unwrap_or(0),
+        );
+    }
+    let resp = client.request_ok(&Json::obj(vec![
+        ("op", Json::str("recommend")),
+        ("model", Json::str("faces")),
+        (
+            "queries",
+            Json::arr(vec![Json::Arr(
+                (0..60).map(|i| Json::num(if i % 7 == 0 { 1.0 } else { 0.0 })).collect(),
+            )]),
+        ),
+        ("top", Json::num(3.0)),
+    ]))?;
+    println!("routed recommend on 'faces': {}", resp.get("recs"));
+
+    // ---- aggregated stats + fleet health ---------------------------------
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    println!(
+        "router stats: {} requests, news worker up = {}, merged models = {}",
+        stats.get("requests").as_usize().unwrap_or(0),
+        stats.get("workers").get("news").get("up").as_bool().unwrap_or(false),
+        stats.get("models").as_obj().map(|o| o.len()).unwrap_or(0),
+    );
+
+    // ---- one shutdown drains the whole topology --------------------------
+    client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    router_handle.join().expect("router thread")?;
+    news_handle.join().expect("news worker thread")?;
+    faces_handle.join().expect("faces worker thread")?;
+    println!("router and both workers shut down cleanly");
+    std::fs::remove_dir_all(dir).ok();
+    Ok(())
+}

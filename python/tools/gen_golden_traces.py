@@ -1,0 +1,522 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/traces.json without a Rust toolchain.
+
+The golden-trace regression (rust/tests/golden_traces.rs) snapshots the
+rel-error trajectory of every native CPU engine on the two `tiny`
+profiles and hard-fails on CI while the snapshot is missing. The
+snapshot is normally bootstrapped by `cargo test`; this script produces
+the same trajectories from a numpy port so the snapshot can be
+generated (and audited) in a container that has Python but no cargo.
+
+Fidelity contract, matching the Rust test's tolerance model
+(|got - want| <= 2e-3 * max(1, |want|) per trace point, which absorbs
+floating-point reassociation but not algorithmic drift):
+
+* The RNG (PCG32), the synthetic dataset generators, and the factor
+  initialization are transliterated exactly — integer-for-integer and
+  (for the f32 casts) rounding-for-rounding — so the *inputs* to every
+  engine are bit-identical to the Rust run.
+* The engine updates run in the same precision regime (f32 storage and
+  elementwise arithmetic, f64 for norm/objective accumulations); the
+  only differences vs. Rust are summation order inside matrix products
+  — exactly the reassociation slack the tolerance exists for.
+
+Self-checks at the bottom assert the structural invariants the Rust
+test asserts (finite, 11 points, error decreases) plus dataset facts
+(exact nnz, unit-norm W columns) so a transliteration slip fails here
+rather than on CI.
+
+Usage:  python3 python/tools/gen_golden_traces.py [out.json]
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+
+F32 = np.float32
+MASK64 = (1 << 64) - 1
+EPS = F32(1e-16)  # crate::EPS
+DELTA = F32(1e-9)  # MU / MU-KL denominator guard
+RIDGE = 1e-10  # BPP Cholesky ridge
+MAX_EXCHANGES = 200
+
+# ---------------------------------------------------------------------------
+# util/rng.rs — PCG-XSH-RR 64/32, exact.
+# ---------------------------------------------------------------------------
+
+
+class Pcg32:
+    MULT = 6364136223846793005
+
+    def __init__(self, seed: int, stream: int) -> None:
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + seed) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * self.MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self) -> int:
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def next_f32(self) -> np.float32:
+        # (u32 >> 8) as f32 * (1 / 2^24): both factors and the product
+        # are exact in f32.
+        return F32(self.next_u32() >> 8) * F32(1.0 / (1 << 24))
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, bound: int) -> int:
+        # Lemire multiply-shift rejection, exact integer semantics.
+        threshold = ((1 << 32) - bound) % bound
+        while True:
+            x = self.next_u32()
+            m = x * bound
+            low = m & 0xFFFFFFFF
+            if low >= bound or low >= threshold:
+                return m >> 32
+
+    def range_f32(self, lo: float, hi: float) -> np.float32:
+        return F32(lo) + (F32(hi) - F32(lo)) * self.next_f32()
+
+    def next_gaussian(self) -> float:
+        while True:
+            u = self.next_f64()
+            if u > 1e-12:
+                v = self.next_f64()
+                return math.sqrt(-2.0 * math.log(u)) * math.cos(2.0 * math.pi * v)
+
+    def next_lognormal(self, mu: float, sigma: float) -> float:
+        return math.exp(mu + sigma * self.next_gaussian())
+
+    def split(self, stream: int) -> "Pcg32":
+        seed = (self.next_u32() << 32) | self.next_u32()
+        return Pcg32(seed, (stream * 2654435761 + 1) & MASK64)
+
+
+def mat_random(rows: int, cols: int, rng: Pcg32, lo: float, hi: float) -> np.ndarray:
+    out = np.empty((rows, cols), F32)
+    flat = out.reshape(-1)
+    for i in range(rows * cols):  # row-major fill order, like Mat::random
+        flat[i] = rng.range_f32(lo, hi)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# data/text.rs — Zipf bag-of-words corpus, exact (returned dense).
+# ---------------------------------------------------------------------------
+
+
+def doc_lengths(d: int, nnz: int, v: int, rng: Pcg32) -> list:
+    raw = [rng.next_lognormal(0.0, 0.6) for _ in range(d)]
+    scale = nnz / sum(raw)  # sequential f64 sum, same order as Rust
+    lens, fracs, total = [], [], 0
+    for i, x in enumerate(raw):
+        t = min(max(x * scale, 1.0), float(v))
+        fl = int(math.floor(t))
+        lens.append(fl)
+        total += fl
+        fracs.append((t - fl, i))
+    if total < nnz:
+        need = nnz - total
+        # Stable descending sort on the fractional part (total_cmp).
+        fracs.sort(key=lambda p: -p[0])
+        cursor = 0
+        while need > 0:
+            _, i = fracs[cursor % len(fracs)]
+            if lens[i] < v:
+                lens[i] += 1
+                need -= 1
+            cursor += 1
+            assert cursor < 100 * len(fracs) + 100
+    elif total > nnz:
+        excess = total - nnz
+        cursor = 0
+        while excess > 0:
+            i = cursor % d
+            if lens[i] > 1:
+                lens[i] -= 1
+                excess -= 1
+            cursor += 1
+    assert sum(lens) == nnz
+    return lens
+
+
+def zipf_cdf(v: int, s: float) -> list:
+    cdf, acc = [], 0.0
+    for r in range(1, v + 1):
+        acc += 1.0 / math.pow(float(r), s)
+        cdf.append(acc)
+    return [x / acc for x in cdf]
+
+
+def zipf_sample(cdf: list, rng: Pcg32) -> int:
+    import bisect
+
+    u = rng.next_f64()
+    i = bisect.bisect_left(cdf, u)  # == binary_search_by insertion point
+    return min(i, len(cdf) - 1)
+
+
+def generate_corpus(v: int, d: int, nnz: int, s: float, seed: int) -> np.ndarray:
+    rng = Pcg32(seed, 1001)
+    lens = doc_lengths(d, nnz, v, rng)
+    cdf = zipf_cdf(v, s)
+    a = np.zeros((v, d), F32)
+    placed = 0
+    for doc, ln in enumerate(lens):
+        drng = Pcg32(seed ^ 0x9E3779B97F4A7C15, 2_000_000 + doc)
+        counts = {}
+        guard = 0
+        while len(counts) < ln:
+            w = zipf_sample(cdf, drng)
+            counts[w] = counts.get(w, 0) + 1
+            guard += 1
+            if guard > 50 * ln + 1000:
+                w = drng.below(v)
+                while w in counts:
+                    w = (w + 1) % v
+                counts[w] = 1
+        for w, c in counts.items():
+            a[w, doc] = F32(1.0) + F32(np.log(F32(c)))  # f32 ln, like Rust
+            placed += 1
+    assert placed == nnz, f"corpus nnz {placed} != {nnz}"
+    return a
+
+
+# ---------------------------------------------------------------------------
+# data/image.rs — planted low-rank dense images, exact.
+# ---------------------------------------------------------------------------
+
+
+def generate_images(v: int, d: int, r: int, seed: int) -> np.ndarray:
+    rng = Pcg32(seed, 3001)
+    basis = np.zeros((r, d), F32)
+    j64 = np.arange(d, dtype=np.float64)
+    for k in range(r):
+        brng = rng.split(10 + k)
+        for _ in range(3):
+            center = brng.next_f64() * d
+            width = (0.02 + 0.08 * brng.next_f64()) * d
+            height = 0.3 + brng.next_f64()
+            z = (j64 - center) / width
+            bump = (height * np.exp(-0.5 * z * z)).astype(F32)  # f64 math, f32 cast
+            basis[k] = basis[k] + bump  # f32 add, element order per j
+    coeff = np.empty((v, r), F32)
+    cflat = coeff.reshape(-1)
+    for i in range(v * r):  # row-major, like the Rust double loop
+        u = rng.next_f32()
+        cflat[i] = u * u
+    a = np.zeros((v, d), F32)
+    for i in range(v):
+        for k in range(r):
+            c = coeff[i, k]
+            if c != 0.0:
+                a[i] = a[i] + c * basis[k]  # f32 FMA-free: mul then add
+    mx = max(F32(np.max(a)) if a.size else F32(0.0), F32(1e-6))
+    inv = F32(240.0) / mx
+    nrng = rng.split(99)
+    noise = np.empty(v * d, F32)
+    for i in range(v * d):  # row-major data order
+        noise[i] = nrng.next_f32()
+    a = (a.reshape(-1) * inv + F32(12.0) * noise).reshape(v, d)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# nmf/init.rs — shared random init, exact.
+# ---------------------------------------------------------------------------
+
+
+def factors_random(v: int, d: int, k: int, seed: int):
+    rng = Pcg32(seed, 77)
+    w = mat_random(v, k, rng, 0.0, 1.0)
+    h = mat_random(d, k, rng, 0.0, 1.0)
+    # normalize_w_columns: f64 norms accumulated row by row, f32 scale.
+    norms = np.zeros(k, np.float64)
+    w64 = w.astype(np.float64)
+    for i in range(v):
+        norms += w64[i] * w64[i]
+    inv = np.empty(k, F32)
+    for j in range(k):
+        inv[j] = F32(1.0) / F32(max(math.sqrt(norms[j]), 1e-30))
+    w *= inv
+    return w, h
+
+
+# ---------------------------------------------------------------------------
+# Engine updates (f32 regime; products f64-accumulated then stored f32,
+# reassociation-level equivalent to the Rust kernels).
+# ---------------------------------------------------------------------------
+
+
+def gram(x: np.ndarray) -> np.ndarray:
+    x64 = x.astype(np.float64)
+    return (x64.T @ x64).astype(F32)
+
+
+def matmul_f32(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return (a.astype(np.float64) @ b.astype(np.float64)).astype(F32)
+
+
+def hals_update(x: np.ndarray, g: np.ndarray, b: np.ndarray, normalize: bool) -> None:
+    """halsops::update_reference semantics: sequential columns over the
+    mixed state, EPS clamp, optional f64-norm / f32-scale."""
+    k = x.shape[1]
+    for t in range(k):
+        s = x @ g[:, t]  # f32 accumulation (reassociation-level only)
+        if normalize:
+            v = x[:, t] * g[t, t] + b[:, t] - s
+        else:
+            v = x[:, t] + b[:, t] - s
+        v = np.where(v < EPS, EPS, v).astype(F32)
+        if normalize:
+            total = float(np.sum(v.astype(np.float64) ** 2))
+            inv = 1.0 / math.sqrt(total) if total > 0.0 else 1.0
+            v = v * F32(inv)
+        x[:, t] = v
+
+
+def step_hals(a, at, w, h):
+    r = matmul_f32(at, w)
+    s = gram(w)
+    hals_update(h, s, r, normalize=False)
+    p = matmul_f32(a, h)
+    q = gram(h)
+    hals_update(w, q, p, normalize=True)
+
+
+def mu_update(x: np.ndarray, g: np.ndarray, num: np.ndarray) -> np.ndarray:
+    denom = (x @ g) + DELTA  # pre-update rows, f32
+    return (x * (num / denom)).astype(F32)
+
+
+def step_mu(a, at, w, h):
+    r = matmul_f32(at, w)
+    s = gram(w)
+    h2 = mu_update(h, s, r)
+    p = matmul_f32(a, h2)
+    q = gram(h2)
+    w2 = mu_update(w, q, p)
+    return w2, h2
+
+
+def kl_half_step(a: np.ndarray, x: np.ndarray, other: np.ndarray) -> np.ndarray:
+    """mukl::kl_half_step: x ← x ⊙ (ratio·other) ⊘ colsum(other), with
+    the ratio a/(x·otherᵀ+δ) taken over A's support only."""
+    denom = np.zeros(other.shape[1], np.float64)
+    for i in range(other.shape[0]):  # row-order f64 column sums
+        denom += other[i].astype(np.float64)
+    wh = (x @ other.T) + DELTA  # f32
+    ratio = np.where(a != 0.0, a / wh, F32(0.0)).astype(F32)
+    num = matmul_f32(ratio, other)
+    return (x * (num / (denom.astype(F32) + DELTA))).astype(F32)
+
+
+def step_mukl(a, at, w, h):
+    h2 = kl_half_step(at, h, w)
+    w2 = kl_half_step(a, w, h2)
+    return w2, h2
+
+
+def cholesky_solve(a: np.ndarray, b: np.ndarray, p: int) -> bool:
+    """In-place lower Cholesky + solve, exact transliteration (the
+    `s <= 0 -> not SPD` decision included)."""
+    for i in range(p):
+        for j in range(i + 1):
+            s = a[i, j]
+            for t in range(j):
+                s -= a[i, t] * a[j, t]
+            if i == j:
+                if s <= 0.0:
+                    return False
+                a[i, i] = math.sqrt(s)
+            else:
+                a[i, j] = s / a[j, j]
+    for i in range(p):
+        s = b[i]
+        for t in range(i):
+            s -= a[i, t] * b[t]
+        b[i] = s / a[i, i]
+    for i in range(p - 1, -1, -1):
+        s = b[i]
+        for t in range(i + 1, p):
+            s -= a[t, i] * b[t]
+        b[i] = s / a[i, i]
+    return True
+
+
+def nnls_bpp_row(g64: np.ndarray, b_row: np.ndarray) -> np.ndarray:
+    k = g64.shape[0]
+    passive = [True] * k
+    x = np.zeros(k, np.float64)
+    best_infeasible = 1 << 62
+    backup_budget = 3
+    for _ in range(MAX_EXCHANGES):
+        idx = [j for j in range(k) if passive[j]]
+        p = len(idx)
+        x[:] = 0.0
+        if p > 0:
+            chol = np.empty((p, p), np.float64)
+            rhs = np.empty(p, np.float64)
+            for pi, gi in enumerate(idx):
+                for pj, gj in enumerate(idx):
+                    chol[pi, pj] = g64[gi, gj]
+                chol[pi, pi] += RIDGE
+                rhs[pi] = float(b_row[gi])
+            if not cholesky_solve(chol, rhs, p):
+                break
+            for pi, gi in enumerate(idx):
+                x[gi] = rhs[pi]
+        y = np.zeros(k, np.float64)
+        for j in range(k):
+            if not passive[j]:
+                s = -float(b_row[j])
+                for gi in idx:
+                    s += g64[j, gi] * x[gi]
+                y[j] = s
+        v1 = None
+        count = 0
+        for j in range(k):
+            infeasible = (passive[j] and x[j] < 0.0) or (not passive[j] and y[j] < 0.0)
+            if infeasible:
+                count += 1
+                v1 = j
+        if count == 0:
+            break
+        if count < best_infeasible:
+            best_infeasible = count
+            backup_budget = 3
+            full = True
+        elif backup_budget > 0:
+            backup_budget -= 1
+            full = True
+        else:
+            full = False
+        if full:
+            for j in range(k):
+                if passive[j] and x[j] < 0.0:
+                    passive[j] = False
+                elif not passive[j] and y[j] < 0.0:
+                    passive[j] = True
+        else:
+            passive[v1] = not passive[v1]
+    return np.maximum(x, 0.0).astype(F32)
+
+
+def nnls_bpp_rows(g: np.ndarray, b: np.ndarray) -> np.ndarray:
+    g64 = g.astype(np.float64)
+    return np.stack([nnls_bpp_row(g64, b[i]) for i in range(b.shape[0])])
+
+
+def step_bpp(a, at, w, h):
+    r = matmul_f32(at, w)
+    s = gram(w)
+    h2 = nnls_bpp_rows(s, r)
+    p = matmul_f32(a, h2)
+    q = gram(h2)
+    w2 = nnls_bpp_rows(q, p)
+    return w2, h2
+
+
+# ---------------------------------------------------------------------------
+# nmf/error.rs — relative objective via the Gram trick.
+# ---------------------------------------------------------------------------
+
+
+def rel_error(a: np.ndarray, fro2: float, w: np.ndarray, h: np.ndarray) -> float:
+    p = matmul_f32(a, h)
+    q = gram(h)
+    s = gram(w)
+    pw = float(np.sum(p.astype(np.float64) * w.astype(np.float64)))
+    qs = float(np.sum(q.astype(np.float64) * s.astype(np.float64)))
+    num = max(fro2 - 2.0 * pw + qs, 0.0)
+    return math.sqrt(num / fro2)
+
+
+# ---------------------------------------------------------------------------
+# The golden_traces.rs job: 5 engines × 2 datasets × 10 iterations.
+# ---------------------------------------------------------------------------
+
+ITERS = 10
+K = 4
+SEED = 7  # both the dataset seed and the factor-init seed
+
+
+def run_engine(engine: str, a: np.ndarray) -> list:
+    v, d = a.shape
+    at = np.ascontiguousarray(a.T)
+    fro2 = float(np.sum(a.astype(np.float64) ** 2))
+    w, h = factors_random(v, d, K, SEED)
+    trace = [rel_error(a, fro2, w, h)]
+    for _ in range(ITERS):
+        if engine in ("plnmf", "fasthals"):
+            step_hals(a, at, w, h)  # in-place
+        elif engine == "mu":
+            w, h = step_mu(a, at, w, h)
+        elif engine == "mukl":
+            w, h = step_mukl(a, at, w, h)
+        elif engine == "bpp":
+            w, h = step_bpp(a, at, w, h)
+        else:
+            raise ValueError(engine)
+        trace.append(rel_error(a, fro2, w, h))
+    return trace
+
+
+def main() -> None:
+    repo = Path(__file__).resolve().parents[2]
+    out = Path(sys.argv[1]) if len(sys.argv) > 1 else repo / "rust/tests/golden/traces.json"
+
+    datasets = {
+        # config/profiles.rs: the two unit-test profiles, at SEED.
+        "tiny": generate_images(60, 40, 6, SEED),
+        "tiny-sparse": generate_corpus(80, 50, 400, 1.1, SEED),
+    }
+    # Dataset self-checks (mirrors rust/src/data tests).
+    assert int(np.count_nonzero(datasets["tiny-sparse"])) == 400
+    assert (datasets["tiny-sparse"].sum(axis=0) > 0).all(), "empty document"
+    assert float(np.max(datasets["tiny"])) <= 256.0
+    w_chk, _ = factors_random(60, 40, K, SEED)
+    col_norms = np.sum(w_chk.astype(np.float64) ** 2, axis=0)
+    assert np.allclose(col_norms, 1.0, atol=1e-5), col_norms
+
+    traces = {}
+    for dataset, a in datasets.items():
+        for engine in ["plnmf", "fasthals", "mu", "mukl", "bpp"]:
+            trace = run_engine(engine, a.copy())
+            key = f"{engine}/{dataset}"
+            # The structural assertions golden_traces.rs makes.
+            assert len(trace) == ITERS + 1, key
+            assert all(math.isfinite(e) for e in trace), (key, trace)
+            assert trace[ITERS] <= trace[0], (key, trace)
+            traces[key] = trace
+            print(f"{key:>20}: {trace[0]:.4f} -> {trace[-1]:.4f}")
+
+    # Cross-engine sanity: exact subproblem solves (BPP) should be at
+    # least as good per-iteration as HALS, and HALS at least as good as
+    # MU (the Fig. 8 qualitative ordering), loosely checked.
+    for dataset in datasets:
+        hals = traces[f"fasthals/{dataset}"][-1]
+        mu = traces[f"mu/{dataset}"][-1]
+        bpp = traces[f"bpp/{dataset}"][-1]
+        assert hals <= mu + 1e-3, (dataset, hals, mu)
+        assert bpp <= hals * 1.1 + 1e-3, (dataset, bpp, hals)
+
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(traces, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out} ({len(traces)} traces)")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,7 @@ pub fn cli_main(args: Args) -> Result<()> {
         Some("transform") => cmd_transform(&args),
         Some("recommend") => cmd_recommend(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("model") => cmd_model(&args),
         Some("bench") => cmd_bench(&args),
@@ -135,6 +136,12 @@ COMMANDS:
              stay resident (cached Grams, warm-start cache, per-model
              pools): --models_manifest fleet.json | --model m.json
              [--serve_port P --warm_cache N --serve_tol T --threads N]
+  route      cross-process shard router: one `plnmf serve` worker
+             process per manifest model, same protocol on the front
+             port; crash detection + bounded-backoff restarts +
+             manifest hot-reload: --models_manifest fleet.json
+             [--route_port P --worker_port_base B --restart_backoff_ms N
+             --threads T + the serve knobs, passed through to workers]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
@@ -284,6 +291,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads
     );
     server.run()
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    use crate::serve::{Router, RouterOpts, WorkerOpts};
+
+    let cfg = args.to_run_config()?;
+    let manifest_path = cfg.models_manifest.clone().ok_or_else(|| {
+        anyhow::anyhow!(
+            "route needs --models_manifest fleet.json (one worker process is spawned per model)"
+        )
+    })?;
+    // Read the manifest once: it sizes the per-worker thread shares AND
+    // seeds the router (re-reading for each would race a concurrent
+    // edit). Split the machine across the fleet like `serve` does
+    // across its per-model pools — here each worker process gets its
+    // own share.
+    let manifest = crate::serve::Manifest::load(Path::new(&manifest_path))?;
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let per_worker_threads = (threads / manifest.models.len().max(1)).max(1);
+    let binary = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving the plnmf binary for workers: {e}"))?;
+    let mut worker_opts = WorkerOpts::new(binary);
+    // Serving knobs pass through to the workers verbatim; `serve`
+    // applies its own warm-tol defaulting on arrival.
+    worker_opts.extra_args = vec![
+        "--threads".into(),
+        per_worker_threads.to_string(),
+        "--sweeps".into(),
+        cfg.sweeps.to_string(),
+        "--batch".into(),
+        cfg.batch.to_string(),
+        "--serve_tol".into(),
+        cfg.serve_tol.to_string(),
+        "--warm_cache".into(),
+        cfg.warm_cache.to_string(),
+    ];
+    let opts = RouterOpts {
+        route_port: cfg.route_port as u16,
+        worker_port_base: cfg.worker_port_base as u16,
+        restart_backoff: std::time::Duration::from_millis(cfg.restart_backoff_ms as u64),
+        ..Default::default()
+    };
+    let router = Router::from_loaded(&manifest, Path::new(&manifest_path), worker_opts, opts)?;
+    let names = router.names();
+    println!(
+        "plnmf route: listening on {} — {} worker process(es): {} \
+         ({per_worker_threads} threads each, restart backoff {}ms)",
+        router.local_addr(),
+        names.len(),
+        names.join(", "),
+        cfg.restart_backoff_ms
+    );
+    router.run()
 }
 
 fn cmd_transform(args: &Args) -> Result<()> {

@@ -1,7 +1,8 @@
 //! Serving-layer throughput: docs/sec of batched factor projection at
-//! micro-batch sizes 1 / 32 / 512, plus the daemon round trip.
+//! micro-batch sizes 1 / 32 / 512, plus the daemon and routed round
+//! trips.
 //!
-//! Two measurements back the serving layer's design claims:
+//! Three measurements back the serving layer's design claims:
 //!
 //! 1. **Batching** (in-process): batching amortizes kernel dispatch and
 //!    turns per-query dot products into panel GEMMs against the cached
@@ -12,6 +13,10 @@
 //!    model load or Gram build — and a repeated batch hits the warm
 //!    cache, cutting sweeps-to-tol. The bench reports cold vs warm
 //!    round-trip docs/sec and the per-micro-batch sweep counts.
+//! 3. **Routing overhead**: the same round trip through a `plnmf route`
+//!    front (one extra TCP hop + request inspection + byte relay) next
+//!    to the direct-daemon rows — what cross-process sharding costs per
+//!    request.
 //!
 //! Run via `cargo bench --bench serving_throughput` or `plnmf bench
 //! serving`.
@@ -27,7 +32,7 @@ use crate::nmf::Factors;
 use crate::parallel::{pool::default_threads, ThreadPool};
 use crate::serve::{
     queries_to_json, save_model, Client, ModelMeta, ModelRegistry, OwnedQueries, Projector,
-    ProjectorOpts, RegistryOpts, Server,
+    ProjectorOpts, RegistryOpts, Router, RouterOpts, Server,
 };
 use crate::util::json::Json;
 use crate::util::Timer;
@@ -110,8 +115,61 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     write_csv(&csv, "dataset,k,batch,docs,secs_median,docs_per_sec", &rows)?;
     println!("\nCSV: {}", csv.display());
 
-    daemon_roundtrip(dataset, k, &factors, &owned, threads, out)?;
+    let mut daemon_rows = daemon_roundtrip(dataset, k, &factors, &owned, threads)?;
+    daemon_rows.extend(router_roundtrip(dataset, k, &factors, &owned, threads)?);
+    let csv = out.join("serving_daemon.csv");
+    write_csv(
+        &csv,
+        "dataset,k,docs,mode,secs,docs_per_sec,sweeps,micro_batches,warm_hits",
+        &daemon_rows,
+    )?;
+    println!("CSV: {}", csv.display());
     Ok(())
+}
+
+/// The pinned daemon fleet options both round-trip benches use (one
+/// model, whole pool, warm cache on — so the direct and routed rows
+/// differ only by the extra hop).
+fn bench_registry_opts(threads: usize) -> RegistryOpts {
+    RegistryOpts {
+        threads,
+        per_model_threads: threads,
+        projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
+        warm_cache: 2 * DAEMON_DOCS,
+        max_total_nnz: 0,
+    }
+}
+
+/// One cold + one warm transform round trip through `client`; returns
+/// the CSV rows (`mode_prefix` distinguishes direct from routed).
+fn roundtrip_rows(
+    client: &mut Client,
+    req: &Json,
+    dataset: &str,
+    k: usize,
+    docs: usize,
+    mode_prefix: &str,
+    label: &str,
+) -> Result<Vec<String>> {
+    let mut rows = Vec::new();
+    for mode in ["cold", "warm"] {
+        let t = Timer::start();
+        let resp = client.request_ok(req)?;
+        let secs = t.elapsed_secs();
+        let sweeps = resp.get("warm").get("sweeps").as_usize().unwrap_or(0);
+        let batches = resp.get("warm").get("micro_batches").as_usize().unwrap_or(0);
+        let hits = resp.get("warm").get("hits").as_usize().unwrap_or(0);
+        let docs_per_sec = docs as f64 / secs.max(1e-12);
+        println!(
+            "{label} transform ({mode})   {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
+             sweeps {sweeps} over {batches} micro-batches, {hits} warm hits"
+        );
+        rows.push(format!(
+            "{dataset},{k},{docs},{mode_prefix}{mode},{secs:.6},{docs_per_sec:.1},\
+             {sweeps},{batches},{hits}"
+        ));
+    }
+    Ok(rows)
 }
 
 /// S1b: daemon round-trip docs/sec, cold vs warm-cache-hit, against the
@@ -122,21 +180,13 @@ fn daemon_roundtrip(
     factors: &Factors,
     owned: &OwnedQueries,
     threads: usize,
-    out: &Path,
-) -> Result<()> {
+) -> Result<Vec<String>> {
     let dir = std::env::temp_dir().join(format!("plnmf-daemonbench-{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
     let model_path = dir.join("bench-model.json");
     save_model(&model_path, factors, &ModelMeta::default())?;
 
-    // Single model: give it the whole pool; warm starts need a sweep tol.
-    let registry = ModelRegistry::new(RegistryOpts {
-        threads,
-        per_model_threads: threads,
-        projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
-        warm_cache: 2 * DAEMON_DOCS,
-        max_total_nnz: 0,
-    });
+    let registry = ModelRegistry::new(bench_registry_opts(threads));
     registry.load("bench", &model_path)?;
     let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
     let addr = server.local_addr();
@@ -152,23 +202,7 @@ fn daemon_roundtrip(
     let mut client = Client::connect(addr)?;
 
     println!("\ndaemon round trip ({docs} docs over TCP/JSON, model resident):\n");
-    let mut rows = Vec::new();
-    for mode in ["cold", "warm"] {
-        let t = Timer::start();
-        let resp = client.request_ok(&req)?;
-        let secs = t.elapsed_secs();
-        let sweeps = resp.get("warm").get("sweeps").as_usize().unwrap_or(0);
-        let batches = resp.get("warm").get("micro_batches").as_usize().unwrap_or(0);
-        let hits = resp.get("warm").get("hits").as_usize().unwrap_or(0);
-        let docs_per_sec = docs as f64 / secs.max(1e-12);
-        println!(
-            "daemon transform ({mode})   {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
-             sweeps {sweeps} over {batches} micro-batches, {hits} warm hits"
-        );
-        rows.push(format!(
-            "{dataset},{k},{docs},{mode},{secs:.6},{docs_per_sec:.1},{sweeps},{batches},{hits}"
-        ));
-    }
+    let rows = roundtrip_rows(&mut client, &req, dataset, k, docs, "", "daemon")?;
     let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))?;
     let model = stats.get("models").get("bench");
     println!(
@@ -178,16 +212,58 @@ fn daemon_roundtrip(
     );
     client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
     handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
-
-    let csv = out.join("serving_daemon.csv");
-    write_csv(
-        &csv,
-        "dataset,k,docs,mode,secs,docs_per_sec,sweeps,micro_batches,warm_hits",
-        &rows,
-    )?;
-    println!("CSV: {}", csv.display());
     std::fs::remove_dir_all(dir).ok();
-    Ok(())
+    Ok(rows)
+}
+
+/// S1c: the same round trip through a `plnmf route` front — the routed
+/// rows' delta against the direct rows is the per-request cost of
+/// cross-process sharding (extra TCP hop + request inspection + relay).
+/// The worker here is an in-process `Server` addressed by `host:port`
+/// (the router does not care where a worker lives), so the bench stays
+/// self-contained in the library.
+fn router_roundtrip(
+    dataset: &str,
+    k: usize,
+    factors: &Factors,
+    owned: &OwnedQueries,
+    threads: usize,
+) -> Result<Vec<String>> {
+    let dir = std::env::temp_dir().join(format!("plnmf-routebench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    save_model(&model_path, factors, &ModelMeta::default())?;
+
+    // Fresh registry so the routed cold row is genuinely cold.
+    let registry = ModelRegistry::new(bench_registry_opts(threads));
+    registry.load("bench", &model_path)?;
+    let worker = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let worker_addr = worker.local_addr();
+    let worker_handle = std::thread::spawn(move || worker.run());
+
+    let router =
+        Router::with_external_workers(&[("bench", worker_addr)], RouterOpts::default())?;
+    let addr = router.local_addr();
+    let router_handle = std::thread::spawn(move || router.run());
+
+    let sub = head(owned, DAEMON_DOCS);
+    let docs = sub.as_queries().rows();
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("bench")),
+        ("queries", queries_to_json(sub.as_queries())),
+    ]);
+    let mut client = Client::connect(addr)?;
+
+    println!("\nrouted round trip (same payload through the `plnmf route` front):\n");
+    let rows = roundtrip_rows(&mut client, &req, dataset, k, docs, "routed_", "routed")?;
+    // Router shutdown drains, then stops its fleet — including the
+    // external worker, whose server thread then joins cleanly.
+    client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    router_handle.join().map_err(|_| anyhow::anyhow!("router thread panicked"))??;
+    worker_handle.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    std::fs::remove_dir_all(dir).ok();
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -208,14 +284,22 @@ mod tests {
         let daemon = std::fs::read_to_string(dir.join("serving_daemon.csv")).unwrap();
         assert!(daemon.starts_with("dataset,k,docs,mode"));
         let lines: Vec<&str> = daemon.lines().collect();
-        assert_eq!(lines.len(), 3, "header + cold + warm: {daemon}");
+        assert_eq!(
+            lines.len(),
+            5,
+            "header + direct cold/warm + routed cold/warm: {daemon}"
+        );
         assert!(lines[1].contains(",cold,"));
         assert!(lines[2].contains(",warm,"));
-        // The warm pass must not sweep more than the cold pass.
+        assert!(lines[3].contains(",routed_cold,"));
+        assert!(lines[4].contains(",routed_warm,"));
+        // The warm pass must not sweep more than the cold pass — on
+        // both the direct and the routed path.
         let sweeps = |line: &str| -> usize {
             line.split(',').nth(6).unwrap().parse().unwrap()
         };
         assert!(sweeps(lines[2]) <= sweeps(lines[1]), "{daemon}");
+        assert!(sweeps(lines[4]) <= sweeps(lines[3]), "{daemon}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

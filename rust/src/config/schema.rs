@@ -80,6 +80,7 @@ const KNOWN_KEYS: &[&str] = &[
     "dataset", "k", "tile", "t", "engine", "max_iters", "iters", "tol", "threads", "seed",
     "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
+    "route_port", "worker_port_base", "restart_backoff_ms",
 ];
 
 /// Full description of one NMF run.
@@ -127,6 +128,15 @@ pub struct RunConfig {
     /// Daemon: warm-start cache capacity per model, in cached query
     /// solutions (0 disables warm starts).
     pub warm_cache: usize,
+    /// Router: front TCP port for `plnmf route` (0 = OS-assigned).
+    pub route_port: usize,
+    /// Router: first worker port; the fleet takes `base`, `base+1`, …
+    /// (0 = OS-assigned ports throughout; restarted workers always get
+    /// a fresh OS-assigned port either way).
+    pub worker_port_base: usize,
+    /// Router: initial delay before restarting a crashed worker, in
+    /// milliseconds (doubles while restarts keep failing, bounded).
+    pub restart_backoff_ms: usize,
 }
 
 impl Default for RunConfig {
@@ -151,6 +161,9 @@ impl Default for RunConfig {
             serve_port: 7878,
             models_manifest: None,
             warm_cache: 256,
+            route_port: 7900,
+            worker_port_base: 0,
+            restart_backoff_ms: 500,
         }
     }
 }
@@ -229,6 +242,24 @@ impl RunConfig {
                     if v.is_null() { None } else { Some(need_str()?.to_string()) }
             }
             "warm_cache" => self.warm_cache = need_usize()?,
+            "route_port" => match need_usize()? {
+                p if p > u16::MAX as usize => {
+                    bail!("route_port must fit a TCP port (0..=65535), got {p}")
+                }
+                p => self.route_port = p,
+            },
+            "worker_port_base" => match need_usize()? {
+                p if p > u16::MAX as usize => {
+                    bail!("worker_port_base must fit a TCP port (0..=65535), got {p}")
+                }
+                p => self.worker_port_base = p,
+            },
+            // Bounded-backoff restarts need a non-zero floor: a zero
+            // here would turn a crash-looping worker into a hot loop.
+            "restart_backoff_ms" => match need_usize()? {
+                0 => bail!("restart_backoff_ms must be >= 1"),
+                n => self.restart_backoff_ms = n,
+            },
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -264,6 +295,9 @@ impl RunConfig {
             ("serve_tol", Json::num(self.serve_tol)),
             ("serve_port", Json::num(self.serve_port as f64)),
             ("warm_cache", Json::num(self.warm_cache as f64)),
+            ("route_port", Json::num(self.route_port as f64)),
+            ("worker_port_base", Json::num(self.worker_port_base as f64)),
+            ("restart_backoff_ms", Json::num(self.restart_backoff_ms as f64)),
         ];
         if let Some(m) = &self.model_path {
             pairs.push(("model_path", Json::str(m.clone())));
@@ -293,6 +327,15 @@ impl RunConfig {
         }
         if self.serve_port > u16::MAX as usize {
             bail!("serve_port must fit a TCP port (0..=65535)");
+        }
+        if self.route_port > u16::MAX as usize {
+            bail!("route_port must fit a TCP port (0..=65535)");
+        }
+        if self.worker_port_base > u16::MAX as usize {
+            bail!("worker_port_base must fit a TCP port (0..=65535)");
+        }
+        if self.restart_backoff_ms == 0 {
+            bail!("restart_backoff_ms must be >= 1");
         }
         Ok(())
     }
@@ -415,5 +458,30 @@ mod tests {
         // warm_cache 0 (disabled) is a valid setting.
         cfg.set_str("warm_cache", "0").unwrap();
         assert_eq!(cfg.warm_cache, 0);
+    }
+
+    #[test]
+    fn router_keys_roundtrip_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.set_str("route_port", "7901").unwrap();
+        cfg.set_str("worker_port_base", "7910").unwrap();
+        cfg.set_str("restart_backoff_ms", "250").unwrap();
+        assert_eq!(cfg.route_port, 7901);
+        assert_eq!(cfg.worker_port_base, 7910);
+        assert_eq!(cfg.restart_backoff_ms, 250);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.route_port, 7901);
+        assert_eq!(re.worker_port_base, 7910);
+        assert_eq!(re.restart_backoff_ms, 250);
+        // Ports must fit u16; the restart backoff must be non-zero
+        // (bounded backoff needs a floor), and 0 for either port field
+        // means OS-assigned, which is valid.
+        assert!(cfg.set_str("route_port", "70000").is_err());
+        assert!(cfg.set_str("worker_port_base", "70000").is_err());
+        assert!(cfg.set_str("restart_backoff_ms", "0").is_err());
+        assert_eq!(cfg.restart_backoff_ms, 250, "failed set must not alter the config");
+        cfg.set_str("route_port", "0").unwrap();
+        cfg.set_str("worker_port_base", "0").unwrap();
+        cfg.validate().unwrap();
     }
 }

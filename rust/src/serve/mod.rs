@@ -34,19 +34,31 @@
 //!   newline-delimited JSON over TCP, keeping every model's factors and
 //!   Gram resident across requests (the whole point of the cached-Gram
 //!   design), plus the protocol [`Client`].
+//! * [`router`] / [`worker`] — [`Router`]: the `plnmf route` front
+//!   daemon fanning the same protocol out to one `plnmf serve` worker
+//!   **process** per model (crash detection, bounded-backoff restarts,
+//!   manifest hot-reload), with workers addressed by `host:port` so the
+//!   topology extends to other machines unchanged.
 //!
 //! CLI front-ends: `plnmf run --model m.json` saves a model after
 //! training; `plnmf transform` / `plnmf recommend` serve it one-shot;
-//! `plnmf serve` keeps it resident. Throughput: `cargo bench --bench
+//! `plnmf serve` keeps it resident; `plnmf route` shards a fleet across
+//! worker processes. Throughput: `cargo bench --bench
 //! serving_throughput` (docs/sec at micro-batch sizes 1/32/512, plus the
-//! daemon round-trip and warm-start deltas).
+//! daemon and routed round-trip and warm-start deltas).
 
 pub mod model_io;
 pub mod projector;
 pub mod registry;
+pub mod router;
 pub mod server;
+pub mod worker;
 
 pub use model_io::{load_model, save_model, ModelMeta};
 pub use projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
 pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts};
-pub use server::{queries_to_json, Client, OwnedQueries, Server};
+pub use router::{Router, RouterOpts};
+pub use server::{
+    queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE, MAX_LINE_BYTES,
+};
+pub use worker::WorkerOpts;

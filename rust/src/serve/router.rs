@@ -1,0 +1,894 @@
+//! `plnmf route` — a cross-process shard router over per-model workers.
+//!
+//! The in-process [`crate::serve::ModelRegistry`] already isolates each
+//! model into its own serving shard (pool, queue, warm cache); this
+//! module moves that seam across a **process boundary**: a front daemon
+//! speaking the exact single-daemon NDJSON protocol fans requests out
+//! to one `plnmf serve` worker *process* per model. Each model's
+//! factors, cached Gram, and warm-start LRU then live in exactly one
+//! process's heap — resident in that process's caches instead of
+//! sharing one daemon's, the serving-scale reading of the paper's §5
+//! data-movement argument and the process-grid direction of MPI-FAUN.
+//!
+//! ## Topology
+//!
+//! ```text
+//!                        ┌─ worker :p1 — plnmf serve {news}
+//!  client ── route :p0 ──┼─ worker :p2 — plnmf serve {faces}
+//!        NDJSON/TCP      └─ worker :p3 — plnmf serve {wiki}
+//! ```
+//!
+//! The routing table maps model name → `host:port` — never a PID — so
+//! a shard served from another host plugs in unchanged
+//! ([`Router::with_external_workers`]); process supervision is a
+//! property of *local* shards only ([`crate::serve::worker`]).
+//!
+//! ## Protocol
+//!
+//! * `transform` / `recommend` — routed by `"model"` to that shard's
+//!   worker. The request line is forwarded and the response line
+//!   relayed **bytes-untouched**, so routed responses are bit-for-bit
+//!   identical to a single daemon's (asserted in
+//!   `tests/integration_router.rs`).
+//! * `stats` — aggregated: the merged per-model stats of every worker
+//!   plus a `workers` health map (addr / up / restarts).
+//! * `ping` — local, with per-worker `up` flags.
+//! * `load` (bare) — manifest re-read, as in the single daemon.
+//!   Targeted `load`/`unload` are rejected: in routed mode the fleet is
+//!   declared by the manifest, so publish a new version instead.
+//! * `shutdown` — graceful drain: stop accepting, finish in-flight
+//!   requests (bounded), then shut every worker down.
+//!
+//! ## Failure semantics
+//!
+//! A worker crash is detected by the supervisor heartbeat (process
+//! exit) or by a failed forward (connection drop). In-flight requests
+//! to that shard fail with `"retryable": true` — the router never
+//! blindly re-sends a request that a worker may already have processed
+//! (see [`crate::serve::server::CLOSED_MID_RESPONSE`]). The worker is
+//! restarted on a fresh port after a bounded backoff (doubling from
+//! `restart_backoff_ms` up to a cap while startup keeps failing), and
+//! the routing table is re-pointed. Manifest hot-reload applies
+//! added/removed/changed models the same way — shards whose entry is
+//! untouched keep serving without interruption.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::serve::registry::Manifest;
+use crate::serve::server::{
+    err_json, ok_obj, parse_request, read_frame, serve_lines, Client, MAX_LINE_BYTES,
+};
+use crate::serve::worker::{
+    probe_free_port, spawn_worker, wait_ready, ManagedWorker, WorkerOpts,
+};
+use crate::util::json::Json;
+use crate::Result;
+
+/// How long `run` waits for in-flight connections after `shutdown`.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
+/// Grace given to each worker between the protocol `shutdown` and kill.
+const WORKER_SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Router configuration (the CLI maps `route_port` /
+/// `worker_port_base` / `restart_backoff_ms` onto this).
+#[derive(Debug, Clone)]
+pub struct RouterOpts {
+    /// Interface the front listener binds.
+    pub host: String,
+    /// Front port (0 = OS-assigned; read back via [`Router::local_addr`]).
+    pub route_port: u16,
+    /// First worker port; workers of the initial fleet take
+    /// `base`, `base+1`, … (0 = every worker gets an OS-assigned port).
+    /// Restarted or hot-added workers always move to a fresh
+    /// OS-assigned port — the old one may sit in `TIME_WAIT`.
+    pub worker_port_base: u16,
+    /// Initial delay before restarting a crashed worker. Doubles (up to
+    /// [`RouterOpts::max_backoff`]) while restarts keep failing to
+    /// become ready; resets once a restart succeeds.
+    pub restart_backoff: Duration,
+    /// Upper bound of the restart backoff.
+    pub max_backoff: Duration,
+    /// Supervisor heartbeat period (crash detection latency).
+    pub health_interval: Duration,
+    /// How long a (re)started worker gets to answer its first ping.
+    pub ready_timeout: Duration,
+    /// How often the supervisor re-checks the fleet manifest.
+    pub manifest_poll: Duration,
+    /// Read timeout on pooled worker connections. Bounds how long one
+    /// forwarded request can hold a shard's queue: a worker that is
+    /// alive but wedged would otherwise pin the shard mutex forever,
+    /// freezing supervision of the whole fleet and router shutdown.
+    pub forward_timeout: Duration,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts {
+            host: "127.0.0.1".to_string(),
+            route_port: 0,
+            worker_port_base: 0,
+            restart_backoff: Duration::from_millis(500),
+            max_backoff: Duration::from_secs(10),
+            health_interval: Duration::from_millis(200),
+            ready_timeout: Duration::from_secs(10),
+            manifest_poll: Duration::from_secs(2),
+            forward_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+struct ShardState {
+    addr: SocketAddr,
+    /// The supervised local process (None while down, and always for
+    /// external shards).
+    worker: Option<ManagedWorker>,
+    /// Pooled protocol connection; dropped on any forward failure and
+    /// re-dialed (against the *current* addr) on the next request.
+    conn: Option<Client>,
+    up: bool,
+    /// Earliest instant the supervisor may attempt the next restart.
+    next_restart_at: Option<Instant>,
+    backoff: Duration,
+    loaded_mtime: Option<SystemTime>,
+}
+
+/// One routed model: a name, a worker address, and (for local shards)
+/// the supervised process behind it.
+pub struct Shard {
+    name: String,
+    /// `Some` ⇒ locally supervised (spawn/restart applies); `None` ⇒
+    /// external worker the router only forwards to.
+    model_path: Option<PathBuf>,
+    /// Read-timeout stamped onto pooled connections (see
+    /// [`RouterOpts::forward_timeout`]).
+    forward_timeout: Duration,
+    state: Mutex<ShardState>,
+    restarts: AtomicU64,
+    /// Set by [`shutdown_shard`] before the worker is taken: a shard
+    /// can be removed (manifest reload on a handler thread) while the
+    /// supervisor holds a stale snapshot, and a retired shard must
+    /// never be restarted — that would leak a worker process.
+    retired: AtomicBool,
+}
+
+impl Shard {
+    fn external(name: &str, addr: SocketAddr, opts: &RouterOpts) -> Shard {
+        let backoff = opts.restart_backoff;
+        Shard {
+            name: name.to_string(),
+            model_path: None,
+            forward_timeout: opts.forward_timeout,
+            state: Mutex::new(ShardState {
+                addr,
+                worker: None,
+                conn: None,
+                up: true,
+                next_restart_at: None,
+                backoff,
+                loaded_mtime: None,
+            }),
+            restarts: AtomicU64::new(0),
+            retired: AtomicBool::new(false),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.state.lock().unwrap().addr
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.state.lock().unwrap().up
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::SeqCst)
+    }
+
+    /// Forward one raw request line to this shard's worker and return
+    /// the raw response line. Any failure here is *retryable from the
+    /// caller's side* (the router reports it as such): the request was
+    /// not answered, though a closed-mid-response one may have been
+    /// processed. Holding the shard lock across the round trip gives
+    /// the same per-model request queue the in-process registry has.
+    fn forward_raw(&self, line: &str) -> Result<String> {
+        let mut st = self.state.lock().unwrap();
+        if !st.up {
+            bail!("worker is down (restart pending)");
+        }
+        if st.conn.is_none() {
+            match Client::connect(st.addr) {
+                Ok(c) => {
+                    // Bounded reads: one wedged worker must not pin
+                    // this shard's queue (and with it, fleet-wide
+                    // supervision) forever.
+                    let _ = c.set_read_timeout(Some(self.forward_timeout));
+                    st.conn = Some(c);
+                }
+                Err(e) => {
+                    // Connect refusal: either the worker just died (the
+                    // supervisor's exit check will flip `up` and
+                    // restart it) or the failure is transient (fd
+                    // pressure, backlog). Don't latch `up = false`
+                    // here — only process-lifecycle events may, or a
+                    // transient dial error against a live worker would
+                    // down the shard with no recovery path.
+                    return Err(e).with_context(|| format!("dialing worker {}", st.addr));
+                }
+            }
+        }
+        match st.conn.as_mut().unwrap().request_raw(line) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                st.conn = None;
+                Err(e).with_context(|| format!("forwarding to worker {}", st.addr))
+            }
+        }
+    }
+}
+
+struct Shared {
+    stop: AtomicBool,
+    requests: AtomicU64,
+    active: AtomicUsize,
+    started: Instant,
+    addr: SocketAddr,
+}
+
+/// Everything the accept handlers and the supervisor thread share.
+struct Control {
+    shards: RwLock<BTreeMap<String, Arc<Shard>>>,
+    shared: Shared,
+    manifest_path: Option<PathBuf>,
+    /// Applied fleet-manifest version (attempt-at-most-once, like the
+    /// in-process registry).
+    manifest_version: Mutex<u64>,
+    /// `Some` ⇒ this router supervises local worker processes.
+    worker_opts: Option<WorkerOpts>,
+    opts: RouterOpts,
+}
+
+/// A bound (not yet running) shard router.
+pub struct Router {
+    listener: TcpListener,
+    ctl: Arc<Control>,
+}
+
+impl Router {
+    /// Spawn one supervised worker per model of the fleet manifest and
+    /// bind the front listener. Fails if any worker cannot become
+    /// ready (startup is all-or-nothing; crash *recovery* is not).
+    pub fn from_manifest(
+        manifest_path: &Path,
+        worker_opts: WorkerOpts,
+        opts: RouterOpts,
+    ) -> Result<Router> {
+        let manifest = Manifest::load(manifest_path)?;
+        Self::from_loaded(&manifest, manifest_path, worker_opts, opts)
+    }
+
+    /// [`Self::from_manifest`] for an already-parsed manifest — callers
+    /// that pre-read it (the CLI sizes per-worker thread shares from
+    /// the fleet) avoid a second read racing a concurrent manifest
+    /// edit. `manifest_path` is kept for hot reloads.
+    pub fn from_loaded(
+        manifest: &Manifest,
+        manifest_path: &Path,
+        worker_opts: WorkerOpts,
+        opts: RouterOpts,
+    ) -> Result<Router> {
+        if manifest.models.is_empty() {
+            bail!("manifest {manifest_path:?} lists no models");
+        }
+        let mut shards = BTreeMap::new();
+        let mut cleanup: Vec<Arc<Shard>> = Vec::new();
+        for (i, m) in manifest.models.iter().enumerate() {
+            let port = if opts.worker_port_base > 0 {
+                opts.worker_port_base
+                    .checked_add(i as u16)
+                    .ok_or_else(|| anyhow!("worker_port_base + {i} overflows a TCP port"))?
+            } else {
+                probe_free_port(&worker_opts.host)?
+            };
+            match start_shard(&worker_opts, &opts, &m.name, &m.path, port) {
+                Ok(shard) => {
+                    let shard = Arc::new(shard);
+                    cleanup.push(Arc::clone(&shard));
+                    shards.insert(m.name.clone(), shard);
+                }
+                Err(e) => {
+                    // Don't leak the already-started part of the fleet.
+                    for s in &cleanup {
+                        shutdown_shard(s);
+                    }
+                    return Err(e).with_context(|| format!("starting shard '{}'", m.name));
+                }
+            }
+        }
+        match Self::bind(shards, Some(manifest_path), Some(worker_opts), opts) {
+            Ok(router) => {
+                *router.ctl.manifest_version.lock().unwrap() = manifest.version;
+                Ok(router)
+            }
+            Err(e) => {
+                for s in &cleanup {
+                    shutdown_shard(s);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Route to already-running workers addressed by `host:port` — the
+    /// multi-host shape (and what the bench/example use: the protocol
+    /// does not care whether a worker lives in a child process, another
+    /// thread, or another machine). No supervision: a dead external
+    /// worker yields retryable errors until it comes back.
+    pub fn with_external_workers(
+        workers: &[(&str, SocketAddr)],
+        opts: RouterOpts,
+    ) -> Result<Router> {
+        if workers.is_empty() {
+            bail!("router needs at least one worker");
+        }
+        let mut shards = BTreeMap::new();
+        for &(name, addr) in workers {
+            if shards
+                .insert(name.to_string(), Arc::new(Shard::external(name, addr, &opts)))
+                .is_some()
+            {
+                bail!("worker '{name}' listed twice");
+            }
+        }
+        Self::bind(shards, None, None, opts)
+    }
+
+    fn bind(
+        shards: BTreeMap<String, Arc<Shard>>,
+        manifest_path: Option<&Path>,
+        worker_opts: Option<WorkerOpts>,
+        opts: RouterOpts,
+    ) -> Result<Router> {
+        let listener = TcpListener::bind((opts.host.as_str(), opts.route_port))
+            .with_context(|| format!("binding router {}:{}", opts.host, opts.route_port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        Ok(Router {
+            listener,
+            ctl: Arc::new(Control {
+                shards: RwLock::new(shards),
+                shared: Shared {
+                    stop: AtomicBool::new(false),
+                    requests: AtomicU64::new(0),
+                    active: AtomicUsize::new(0),
+                    started: Instant::now(),
+                    addr,
+                },
+                manifest_path: manifest_path.map(|p| p.to_path_buf()),
+                manifest_version: Mutex::new(0),
+                worker_opts,
+                opts,
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.ctl.shared.addr
+    }
+
+    /// Routed model names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.ctl.shards.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Accept loop + supervisor: blocks until a client sends
+    /// `shutdown`, then drains in-flight connections (bounded) and
+    /// shuts the worker fleet down.
+    pub fn run(self) -> Result<()> {
+        let supervisor = {
+            let ctl = Arc::clone(&self.ctl);
+            std::thread::spawn(move || supervisor_loop(&ctl))
+        };
+        let accepted: Result<()> = loop {
+            let (stream, peer) = match self.listener.accept() {
+                Ok(x) => x,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e).context("accepting connection"),
+            };
+            if self.ctl.shared.stop.load(Ordering::SeqCst) {
+                break Ok(());
+            }
+            crate::debug!("route: connection from {peer}");
+            let ctl = Arc::clone(&self.ctl);
+            ctl.shared.active.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                handle_connection(stream, &ctl);
+                ctl.shared.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        };
+        // Drain in-flight requests BEFORE stopping workers, so accepted
+        // requests finish against a live fleet.
+        self.ctl.shared.stop.store(true, Ordering::SeqCst);
+        let _ = supervisor.join();
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while self.ctl.shared.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shutdown_fleet(&self.ctl);
+        accepted?;
+        crate::info!(
+            "route: shut down after {} requests",
+            self.ctl.shared.requests.load(Ordering::SeqCst)
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard lifecycle (supervised mode).
+// ---------------------------------------------------------------------------
+
+/// Spawn + readiness-gate one worker; the returned shard is up.
+fn start_shard(
+    worker_opts: &WorkerOpts,
+    opts: &RouterOpts,
+    name: &str,
+    model_path: &Path,
+    port: u16,
+) -> Result<Shard> {
+    let worker = start_worker_checked(worker_opts, opts.ready_timeout, name, model_path, port)?;
+    let addr = worker.addr();
+    let loaded_mtime = std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
+    crate::info!("route: shard '{name}' up on {addr}");
+    Ok(Shard {
+        name: name.to_string(),
+        model_path: Some(model_path.to_path_buf()),
+        forward_timeout: opts.forward_timeout,
+        state: Mutex::new(ShardState {
+            addr,
+            worker: Some(worker),
+            conn: None,
+            up: true,
+            next_restart_at: None,
+            backoff: opts.restart_backoff,
+            loaded_mtime,
+        }),
+        restarts: AtomicU64::new(0),
+        retired: AtomicBool::new(false),
+    })
+}
+
+/// Graceful-then-forced stop of one shard's worker (local or external).
+fn shutdown_shard(shard: &Shard) {
+    // Retire BEFORE taking the worker: the supervisor re-checks this
+    // flag under the state lock before installing a restarted worker,
+    // so the two orders both end with the worker stopped (see
+    // `supervise`).
+    shard.retired.store(true, Ordering::SeqCst);
+    let (worker, addr) = {
+        let mut st = shard.state.lock().unwrap();
+        st.up = false;
+        st.conn = None;
+        (st.worker.take(), st.addr)
+    };
+    match worker {
+        Some(w) => w.shutdown(WORKER_SHUTDOWN_TIMEOUT),
+        None => {
+            // External (or already-dead local) worker: best-effort
+            // protocol shutdown — the router owns fleet lifecycle.
+            if let Ok(stream) = TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+                let mut stream = stream;
+                let _ = stream.write_all(b"{\"op\": \"shutdown\"}\n");
+                let mut r = BufReader::new(stream);
+                let _ = read_frame(&mut r, MAX_LINE_BYTES);
+            }
+        }
+    }
+}
+
+fn shutdown_fleet(ctl: &Control) {
+    let shards: Vec<Arc<Shard>> = ctl.shards.read().unwrap().values().cloned().collect();
+    for shard in shards {
+        shutdown_shard(&shard);
+    }
+}
+
+/// The supervisor: crash detection, bounded-backoff restarts, and
+/// manifest polling, off the accept path.
+fn supervisor_loop(ctl: &Control) {
+    let tick = ctl.opts.health_interval;
+    let mut since_poll = Duration::ZERO;
+    while !ctl.shared.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        since_poll += tick;
+        if ctl.manifest_path.is_some() && since_poll >= ctl.opts.manifest_poll {
+            since_poll = Duration::ZERO;
+            if let Err(e) = reload_manifest(ctl) {
+                crate::warn_!("route: manifest reload failed: {e:#}");
+            }
+        }
+        let shards: Vec<Arc<Shard>> = ctl.shards.read().unwrap().values().cloned().collect();
+        for shard in shards {
+            if ctl.shared.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            supervise(ctl, &shard);
+        }
+    }
+}
+
+/// One heartbeat step for one shard: detect a dead local worker, and
+/// restart it once its backoff window has passed.
+fn supervise(ctl: &Control, shard: &Shard) {
+    let Some(model_path) = shard.model_path.as_ref() else {
+        return; // external: nothing to supervise
+    };
+    if shard.retired.load(Ordering::SeqCst) {
+        return; // removed from the table: never restart
+    }
+    // Phase 1 (under the lock): notice an exited process and schedule
+    // its restart.
+    let restart_due = {
+        let mut st = shard.state.lock().unwrap();
+        if let Some(w) = st.worker.as_mut() {
+            if let Some(status) = w.poll_exit() {
+                crate::warn_!(
+                    "route: worker '{}' on {} died ({status}); restart in {:?}",
+                    shard.name,
+                    st.addr,
+                    st.backoff
+                );
+                st.worker = None;
+                st.conn = None;
+                st.up = false;
+                st.next_restart_at = Some(Instant::now() + st.backoff);
+            }
+        }
+        st.worker.is_none()
+            && st.next_restart_at.map(|t| Instant::now() >= t).unwrap_or(true)
+    };
+    if !restart_due {
+        return;
+    }
+    // Phase 2 (lock released): spawn + readiness-gate the replacement.
+    // Requests meanwhile fail fast with a retryable error instead of
+    // queueing behind a held lock. Only this supervisor thread mutates
+    // worker lifecycle, so dropping the lock is race-free.
+    let port = match probe_free_port(&ctl.opts.host) {
+        Ok(p) => p,
+        Err(e) => {
+            crate::warn_!("route: no port for '{}': {e:#}", shard.name);
+            return;
+        }
+    };
+    let worker_opts = ctl.worker_opts.as_ref().expect("supervised shard without worker opts");
+    match start_worker_checked(worker_opts, ctl.opts.ready_timeout, &shard.name, model_path, port)
+    {
+        Ok(worker) => {
+            let mut st = shard.state.lock().unwrap();
+            if shard.retired.load(Ordering::SeqCst) {
+                // Retired while we were spawning: stop the replacement
+                // instead of installing it.
+                drop(st);
+                worker.shutdown(WORKER_SHUTDOWN_TIMEOUT);
+                return;
+            }
+            st.addr = worker.addr();
+            st.worker = Some(worker);
+            st.conn = None;
+            st.up = true;
+            st.next_restart_at = None;
+            st.backoff = ctl.opts.restart_backoff; // became ready: reset
+            st.loaded_mtime =
+                std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
+            let n = shard.restarts.fetch_add(1, Ordering::SeqCst) + 1;
+            crate::info!(
+                "route: worker '{}' restarted on {} (restart #{n})",
+                shard.name,
+                st.addr
+            );
+        }
+        Err(e) => {
+            let mut st = shard.state.lock().unwrap();
+            st.backoff = (st.backoff * 2).min(ctl.opts.max_backoff);
+            st.next_restart_at = Some(Instant::now() + st.backoff);
+            crate::warn_!(
+                "route: restart of '{}' failed ({e:#}); next attempt in {:?}",
+                shard.name,
+                st.backoff
+            );
+        }
+    }
+}
+
+/// Spawn + wait-ready, cleaning up the child on readiness failure.
+fn start_worker_checked(
+    worker_opts: &WorkerOpts,
+    ready_timeout: Duration,
+    name: &str,
+    model_path: &Path,
+    port: u16,
+) -> Result<ManagedWorker> {
+    let mut worker = spawn_worker(worker_opts, name, model_path, port)?;
+    match wait_ready(&mut worker, ready_timeout) {
+        Ok(()) => Ok(worker),
+        Err(e) => {
+            worker.shutdown(WORKER_SHUTDOWN_TIMEOUT);
+            Err(e)
+        }
+    }
+}
+
+/// Re-read the fleet manifest and apply it if its version increased:
+/// start workers for new models, stop workers for de-listed ones, and
+/// swap (new worker first, then old one drained) models whose file
+/// changed. Untouched shards — and their in-flight requests — are
+/// never interrupted.
+fn reload_manifest(ctl: &Control) -> Result<bool> {
+    let (Some(path), Some(worker_opts)) = (&ctl.manifest_path, &ctl.worker_opts) else {
+        return Ok(false);
+    };
+    let manifest = Manifest::load(path)?;
+    {
+        let mut version = ctl.manifest_version.lock().unwrap();
+        if manifest.version <= *version {
+            return Ok(false);
+        }
+        // Recorded before the fleet changes: a manifest with a broken
+        // entry must not re-run its apply on every poll.
+        *version = manifest.version;
+    }
+    // Removals first.
+    let listed: Vec<&str> = manifest.models.iter().map(|m| m.name.as_str()).collect();
+    let stale: Vec<Arc<Shard>> = {
+        let mut shards = ctl.shards.write().unwrap();
+        let names: Vec<String> =
+            shards.keys().filter(|n| !listed.contains(&n.as_str())).cloned().collect();
+        names.iter().filter_map(|n| shards.remove(n)).collect()
+    };
+    for shard in &stale {
+        crate::info!("route: shard '{}' de-listed by manifest", shard.name);
+        shutdown_shard(shard);
+    }
+    // Additions and changes. One broken entry must not abort the rest
+    // of the apply: the version is already recorded (attempt-at-most-
+    // once), so anything skipped here would stay missing until the
+    // operator publishes a NEW version — apply every entry, then
+    // report the failures together.
+    let mut failures: Vec<String> = Vec::new();
+    for m in &manifest.models {
+        let existing = ctl.shards.read().unwrap().get(&m.name).cloned();
+        let needs_start = match &existing {
+            None => true,
+            Some(s) => {
+                let st = s.state.lock().unwrap();
+                let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
+                s.model_path.as_deref() != Some(m.path.as_path())
+                    || (mtime.is_some() && mtime != st.loaded_mtime)
+            }
+        };
+        if !needs_start {
+            continue;
+        }
+        let started = probe_free_port(&worker_opts.host)
+            .and_then(|port| start_shard(worker_opts, &ctl.opts, &m.name, &m.path, port));
+        match started {
+            Ok(shard) => {
+                let old = ctl.shards.write().unwrap().insert(m.name.clone(), Arc::new(shard));
+                if let Some(old) = old {
+                    // Swapped: the replacement serves before the old
+                    // worker drains, so the shard never goes dark.
+                    shutdown_shard(&old);
+                }
+            }
+            Err(e) => failures.push(format!("'{}': {e:#}", m.name)),
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "manifest version {} partially applied — failed shards: {}",
+            manifest.version,
+            failures.join("; ")
+        );
+    }
+    crate::info!("route: applied manifest version {}", manifest.version);
+    Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// Request handling.
+// ---------------------------------------------------------------------------
+
+fn handle_connection(stream: TcpStream, ctl: &Control) {
+    serve_lines(stream, &ctl.shared.requests, ctl.shared.addr, |trimmed| {
+        dispatch(trimmed, ctl)
+    });
+}
+
+/// Handle one request line, returning the raw response line (routed
+/// responses pass through bytes-untouched) and the shutdown flag.
+fn dispatch(line: &str, ctl: &Control) -> (String, bool) {
+    let req = match parse_request(line) {
+        Ok(req) => req,
+        Err(e) => return (err_json(format!("bad request: {e}")).to_string(), false),
+    };
+    let op = req.get("op").as_str().unwrap_or("");
+    match op {
+        "transform" | "recommend" => (route_to_shard(line, &req, ctl), false),
+        "ping" => (op_ping(ctl).to_string(), false),
+        "stats" => (op_stats(ctl).to_string(), false),
+        "load" => (op_load(&req, ctl).to_string(), false),
+        "unload" => (
+            err_json(
+                "routed daemon: the fleet is declared by the manifest — publish a new \
+                 version instead of unload"
+                    .to_string(),
+            )
+            .to_string(),
+            false,
+        ),
+        "shutdown" => {
+            ctl.shared.stop.store(true, Ordering::SeqCst);
+            (ok_obj(vec![("bye", Json::Bool(true))]).to_string(), true)
+        }
+        "" => (err_json("request needs an \"op\" string".to_string()).to_string(), false),
+        other => (
+            err_json(format!(
+                "unknown op '{other}' (try transform|recommend|stats|load|ping|shutdown)"
+            ))
+            .to_string(),
+            false,
+        ),
+    }
+}
+
+/// Route a data op to its model's worker, relaying raw bytes. Failures
+/// come back as `"retryable": true` errors: the worker may be mid-
+/// restart, and the *caller* decides whether to re-send (the router
+/// does not, because a closed-mid-response request may have been
+/// processed).
+fn route_to_shard(line: &str, req: &Json, ctl: &Control) -> String {
+    let Some(name) = req.get("model").as_str() else {
+        return err_json("request needs \"model\"".to_string()).to_string();
+    };
+    let shard = ctl.shards.read().unwrap().get(name).cloned();
+    let Some(shard) = shard else {
+        let names = ctl.shards.read().unwrap().keys().cloned().collect::<Vec<_>>().join(", ");
+        return err_json(format!("no model '{name}' routed (have: {names})")).to_string();
+    };
+    match shard.forward_raw(line) {
+        Ok(raw) => raw,
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(format!("shard '{name}': {e:#}"))),
+            ("retryable", Json::Bool(true)),
+            ("model", Json::str(name)),
+        ])
+        .to_string(),
+    }
+}
+
+fn op_ping(ctl: &Control) -> Json {
+    let shards = ctl.shards.read().unwrap();
+    let workers = Json::Obj(
+        shards
+            .iter()
+            .map(|(name, s)| {
+                (name.clone(), Json::obj(vec![("up", Json::Bool(s.is_up()))]))
+            })
+            .collect(),
+    );
+    ok_obj(vec![
+        ("pong", Json::Bool(true)),
+        ("router", Json::Bool(true)),
+        ("workers", workers),
+    ])
+}
+
+fn op_load(req: &Json, ctl: &Control) -> Json {
+    match (req.get("name").as_str(), req.get("path").as_str()) {
+        (None, None) => match reload_manifest(ctl) {
+            Ok(reloaded) => ok_obj(vec![
+                ("reloaded", Json::Bool(reloaded)),
+                (
+                    "manifest_version",
+                    Json::num(*ctl.manifest_version.lock().unwrap() as f64),
+                ),
+            ]),
+            Err(e) => err_json(format!("manifest reload: {e:#}")),
+        },
+        _ => err_json(
+            "routed daemon: the fleet is declared by the manifest — publish a new version \
+             instead of a targeted load"
+                .to_string(),
+        ),
+    }
+}
+
+/// Aggregate `stats` across the fleet: merged per-model stats (the
+/// single-daemon shape, so existing consumers keep working) plus a
+/// `workers` health map.
+fn op_stats(ctl: &Control) -> Json {
+    let shards: Vec<Arc<Shard>> = ctl.shards.read().unwrap().values().cloned().collect();
+    let mut models: BTreeMap<String, Json> = BTreeMap::new();
+    let mut workers: BTreeMap<String, Json> = BTreeMap::new();
+    for shard in &shards {
+        let mut info = vec![
+            ("addr", Json::str(shard.addr().to_string())),
+            ("up", Json::Bool(shard.is_up())),
+            ("restarts", Json::num(shard.restarts() as f64)),
+        ];
+        match shard
+            .forward_raw("{\"op\": \"stats\"}")
+            .and_then(|raw| Json::parse(raw.trim()).map_err(|e| anyhow!("bad stats JSON: {e}")))
+        {
+            Ok(stats) => {
+                info.push(("requests", stats.get("requests").clone()));
+                info.push(("uptime_secs", stats.get("uptime_secs").clone()));
+                if let Some(obj) = stats.get("models").as_obj() {
+                    for (model, mstats) in obj {
+                        models.insert(model.clone(), mstats.clone());
+                    }
+                }
+            }
+            Err(e) => info.push(("error", Json::str(format!("{e:#}")))),
+        }
+        workers.insert(shard.name.clone(), Json::obj(info));
+    }
+    ok_obj(vec![
+        ("router", Json::Bool(true)),
+        (
+            "uptime_secs",
+            Json::num(ctl.shared.started.elapsed().as_secs_f64()),
+        ),
+        (
+            "requests",
+            Json::num(ctl.shared.requests.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "manifest_version",
+            Json::num(*ctl.manifest_version.lock().unwrap() as f64),
+        ),
+        ("workers", Json::Obj(workers)),
+        ("models", Json::Obj(models)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn external_shard_down_worker_yields_retryable_path() {
+        // An external shard pointing at a dead port: forward fails with
+        // a dial error (the retryable class), and the shard stays `up`
+        // (externals have no supervised lifecycle to wait out).
+        let port = probe_free_port("127.0.0.1").unwrap();
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let shard = Shard::external("m", addr, &RouterOpts::default());
+        let err = shard.forward_raw("{\"op\": \"ping\"}").unwrap_err();
+        assert!(format!("{err:#}").contains("dialing worker"), "{err:#}");
+        assert!(shard.is_up());
+    }
+
+    #[test]
+    fn router_rejects_empty_fleet() {
+        assert!(Router::with_external_workers(&[], RouterOpts::default()).is_err());
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        assert!(
+            Router::with_external_workers(&[("a", addr), ("a", addr)], RouterOpts::default())
+                .is_err()
+        );
+    }
+}

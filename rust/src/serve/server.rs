@@ -24,6 +24,10 @@
 //! | `ping` | — | `pong` |
 //! | `shutdown` | — | `bye`, then the daemon drains and exits |
 //!
+//! Lines are capped at [`MAX_LINE_BYTES`]; an oversized frame gets a
+//! protocol error and the connection closed (never unbounded buffering
+//! or a hung read loop — fuzzed in `tests/prop_protocol_fuzz.rs`).
+//!
 //! `queries` is either dense rows (`[[...V numbers...], ...]`) or sparse
 //! rows (`[{"cols": [...], "vals": [...]}, ...]`); both deserialize into
 //! the same [`Queries`] the in-process API takes, so a daemon round-trip
@@ -63,6 +67,120 @@ use crate::{Elem, Result};
 const MANIFEST_POLL: Duration = Duration::from_secs(2);
 /// How long `run` waits for in-flight connections after `shutdown`.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Hard cap on one protocol line (request or response). A peer that
+/// streams more than this without a newline gets a protocol error and
+/// the connection closed — never unbounded buffering or a hung read
+/// loop. 64 MiB clears the largest dense batch the bench ships by two
+/// orders of magnitude.
+pub const MAX_LINE_BYTES: usize = 64 * 1024 * 1024;
+
+/// Outcome of one bounded frame read.
+pub(crate) enum FrameRead {
+    /// A complete newline-terminated line (without its newline).
+    Frame(String),
+    /// The stream ended mid-line: whatever arrived before the close.
+    /// NOT a complete frame — the peer died (or sent a final unflushed
+    /// fragment), and treating the bytes as an answer would hand a
+    /// truncated response to a caller as if it were whole.
+    Partial(String),
+    /// The peer exceeded the byte cap before sending a newline; the
+    /// payload carries how many bytes were consumed.
+    TooLong(usize),
+    /// Clean end of stream before any byte of a new frame.
+    Eof,
+}
+
+/// Move the frame bytes into a `String`, copying only in the (never on
+/// our own wire) invalid-UTF-8 case — frames run up to [`MAX_LINE_BYTES`].
+fn into_frame_string(buf: Vec<u8>) -> String {
+    String::from_utf8(buf)
+        .unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+}
+
+/// Read one newline-delimited frame with a byte cap: the codec
+/// underneath the daemon, the router, and the protocol client.
+pub(crate) fn read_frame(r: &mut impl BufRead, max: usize) -> std::io::Result<FrameRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                FrameRead::Eof
+            } else {
+                FrameRead::Partial(into_frame_string(buf))
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                buf.extend_from_slice(&chunk[..i]);
+                r.consume(i + 1);
+                if buf.len() > max {
+                    return Ok(FrameRead::TooLong(buf.len()));
+                }
+                return Ok(FrameRead::Frame(into_frame_string(buf)));
+            }
+            None => {
+                let n = chunk.len();
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+                if buf.len() > max {
+                    return Ok(FrameRead::TooLong(buf.len()));
+                }
+            }
+        }
+    }
+}
+
+/// The shared per-connection serve loop (daemon and router): bounded
+/// frame reads, one response line per request line, oversized-frame
+/// protocol error + close, empty lines skipped. `dispatch` maps one
+/// trimmed request line to `(response line, is_shutdown)`; on shutdown
+/// the loop wakes the accept loop at `wake_addr` so it observes the
+/// stop flag, then closes. A `Partial` read means the peer died
+/// mid-line — nothing to answer.
+pub(crate) fn serve_lines(
+    stream: TcpStream,
+    requests: &AtomicU64,
+    wake_addr: SocketAddr,
+    mut dispatch: impl FnMut(&str) -> (String, bool),
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_frame(&mut reader, MAX_LINE_BYTES) {
+            Ok(FrameRead::Frame(line)) => line,
+            Ok(FrameRead::TooLong(n)) => {
+                requests.fetch_add(1, Ordering::SeqCst);
+                let mut out = err_json(format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes ({n} read); closing connection"
+                ))
+                .to_string();
+                out.push('\n');
+                let _ = writer.write_all(out.as_bytes());
+                break;
+            }
+            Ok(FrameRead::Partial(_)) | Ok(FrameRead::Eof) | Err(_) => break,
+        };
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        requests.fetch_add(1, Ordering::SeqCst);
+        let (mut out, is_shutdown) = dispatch(trimmed);
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+        if is_shutdown {
+            let _ = TcpStream::connect(wake_addr);
+            break;
+        }
+    }
+}
 
 struct Shared {
     stop: AtomicBool,
@@ -164,47 +282,21 @@ impl Server {
 }
 
 fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Shared) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // client closed
-            Ok(_) => {}
-            Err(_) => break,
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        shared.requests.fetch_add(1, Ordering::SeqCst);
-        let (resp, is_shutdown) = match parse_request(trimmed) {
+    serve_lines(stream, &shared.requests, shared.addr, |trimmed| {
+        match parse_request(trimmed) {
             Ok(req) => {
                 let is_shutdown = req.get("op").as_str() == Some("shutdown");
-                (dispatch(&req, registry, shared), is_shutdown)
+                (dispatch(&req, registry, shared).to_string(), is_shutdown)
             }
-            Err(e) => (err_json(format!("bad request: {e}")), false),
-        };
-        let mut out = resp.to_string();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
-            break;
+            Err(e) => (err_json(format!("bad request: {e}")).to_string(), false),
         }
-        if is_shutdown {
-            // Wake the accept loop so it observes the stop flag.
-            let _ = TcpStream::connect(shared.addr);
-            break;
-        }
-    }
+    });
 }
 
 /// Parse one request line: exactly one JSON value, trailing whitespace
-/// allowed (the streaming `parse_prefix` leaves the rest to us).
-fn parse_request(line: &str) -> Result<Json> {
+/// allowed (the streaming `parse_prefix` leaves the rest to us). Shared
+/// with the shard router, which inspects requests before forwarding.
+pub(crate) fn parse_request(line: &str) -> Result<Json> {
     let (v, consumed) = Json::parse_prefix(line).map_err(|e| anyhow!("{e}"))?;
     if !line[consumed..].trim().is_empty() {
         bail!("trailing characters after the JSON request");
@@ -233,12 +325,12 @@ fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
     result.unwrap_or_else(|e| err_json(format!("{e:#}")))
 }
 
-fn ok_obj(mut pairs: Vec<(&str, Json)>) -> Json {
+pub(crate) fn ok_obj(mut pairs: Vec<(&str, Json)>) -> Json {
     pairs.insert(0, ("ok", Json::Bool(true)));
     Json::obj(pairs)
 }
 
-fn err_json(msg: String) -> Json {
+pub(crate) fn err_json(msg: String) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
 }
 
@@ -482,9 +574,20 @@ fn op_unload(req: &Json, registry: &ModelRegistry) -> Result<Json> {
 // Client.
 // ---------------------------------------------------------------------------
 
+/// Marker carried by every [`Client`] error where the peer vanished
+/// after the request was (or may have been) sent but before a complete
+/// response line arrived. The vendored `anyhow` has no downcasting, so
+/// the distinct error class is a message marker; classify with
+/// [`Client::is_connection_closed`]. The distinction matters to callers
+/// like the router's pooled client: a closed-mid-response request may
+/// have been processed by the peer and must NOT be blindly retried —
+/// it is surfaced as a retryable error instead.
+pub const CLOSED_MID_RESPONSE: &str = "connection closed mid-response";
+
 /// A blocking protocol client: one request line out, one response line
-/// in. Used by the daemon bench, the example, the integration tests, and
-/// anyone driving the daemon from Rust.
+/// in. Used by the daemon bench, the router's per-shard pools, the
+/// example, the integration tests, and anyone driving the daemon from
+/// Rust.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -497,16 +600,44 @@ impl Client {
         Ok(Client { reader, writer: stream })
     }
 
+    /// Whether `err` is the distinct "connection closed mid-response"
+    /// failure (EOF or a read error after the request was written), as
+    /// opposed to a connect failure, a write failure, or a response
+    /// that parsed but carried `"ok": false`.
+    pub fn is_connection_closed(err: &anyhow::Error) -> bool {
+        err.chain().any(|m| m.contains(CLOSED_MID_RESPONSE))
+    }
+
+    /// Bound how long reads may block (None = forever). Applies to the
+    /// underlying socket, so it also covers in-flight `request` calls.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout).context("setting read timeout")
+    }
+
+    /// Send one already-serialized request line and return the raw
+    /// response line, bytes untouched — the router's forwarding path
+    /// (relaying the worker's exact bytes is what keeps routed
+    /// responses bit-for-bit identical to a single daemon's).
+    pub fn request_raw(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes()).context("writing request")?;
+        self.writer.write_all(b"\n").context("writing request")?;
+        match read_frame(&mut self.reader, MAX_LINE_BYTES) {
+            Ok(FrameRead::Frame(resp)) => Ok(resp),
+            Ok(FrameRead::Eof) => bail!("{CLOSED_MID_RESPONSE} (EOF before a response line)"),
+            Ok(FrameRead::Partial(got)) => bail!(
+                "{CLOSED_MID_RESPONSE} (EOF after {} bytes of an unterminated response line)",
+                got.len()
+            ),
+            Ok(FrameRead::TooLong(n)) => {
+                bail!("response line exceeds {MAX_LINE_BYTES} bytes ({n} read)")
+            }
+            Err(e) => Err(anyhow!("{CLOSED_MID_RESPONSE} ({e})")),
+        }
+    }
+
     /// Send one request, read one response (whatever its `ok`).
     pub fn request(&mut self, req: &Json) -> Result<Json> {
-        let mut line = req.to_string();
-        line.push('\n');
-        self.writer.write_all(line.as_bytes()).context("writing request")?;
-        let mut resp = String::new();
-        let n = self.reader.read_line(&mut resp).context("reading response")?;
-        if n == 0 {
-            bail!("daemon closed the connection");
-        }
+        let resp = self.request_raw(&req.to_string())?;
         Json::parse(resp.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))
     }
 
@@ -586,5 +717,46 @@ mod tests {
         assert!(parse_request("{\"op\": \"ping\"}  ").is_ok());
         assert!(parse_request(r#"{"op": "ping"} {"op": "ping"}"#).is_err());
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn read_frame_bounds_and_splits_lines() {
+        let feed = |src: &str, max: usize| -> Vec<FrameRead> {
+            let mut r = BufReader::new(std::io::Cursor::new(src.as_bytes().to_vec()));
+            let mut out = Vec::new();
+            loop {
+                match read_frame(&mut r, max).unwrap() {
+                    FrameRead::Eof => break,
+                    f => out.push(f),
+                }
+            }
+            out
+        };
+        // Two lines plus an unterminated tail: the tail is NOT a
+        // complete frame — the stream died mid-line.
+        let frames = feed("abc\ndef\ntail", 100);
+        assert_eq!(frames.len(), 3);
+        match (&frames[0], &frames[1], &frames[2]) {
+            (FrameRead::Frame(a), FrameRead::Frame(b), FrameRead::Partial(c)) => {
+                assert_eq!((a.as_str(), b.as_str(), c.as_str()), ("abc", "def", "tail"));
+            }
+            _ => panic!("expected two frames and a partial"),
+        }
+        // Exactly at the cap is fine; one byte over is TooLong.
+        match &feed("abcde\n", 5)[0] {
+            FrameRead::Frame(f) => assert_eq!(f, "abcde"),
+            _ => panic!("cap is inclusive"),
+        }
+        assert!(matches!(feed("abcdef\n", 5)[0], FrameRead::TooLong(_)));
+        assert!(matches!(feed("abcdefgh", 5)[0], FrameRead::TooLong(_)));
+    }
+
+    #[test]
+    fn closed_mid_response_is_classified_distinctly() {
+        let closed = anyhow!("{CLOSED_MID_RESPONSE} (EOF before a response line)")
+            .context("forwarding to shard 'a'");
+        assert!(Client::is_connection_closed(&closed));
+        let other = anyhow!("bad response JSON: oops").context("forwarding to shard 'a'");
+        assert!(!Client::is_connection_closed(&other));
     }
 }

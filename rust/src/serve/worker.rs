@@ -1,0 +1,232 @@
+//! Worker-process lifecycle for the cross-process shard router.
+//!
+//! A *worker* is one `plnmf serve` daemon owning exactly one model: its
+//! factors, cached Gram, warm cache, and thread pool live in that
+//! process's heap and stay hot in that process's caches — the
+//! serving-scale analogue of the paper's §5 residency argument, and the
+//! same per-model isolation seam `ModelRegistry` draws in-process. This
+//! module owns only *local* process supervision:
+//!
+//! * [`spawn_worker`] — start `plnmf serve` on a single-model manifest
+//!   and an assigned port;
+//! * [`wait_ready`] — bounded readiness probe (connect + `ping`);
+//! * [`ManagedWorker`] — the child handle with crash detection
+//!   ([`ManagedWorker::poll_exit`]) and graceful-then-forced shutdown;
+//! * [`probe_free_port`] — OS-assigned port allocation for respawns
+//!   (a restarted worker always moves to a fresh port: the old one may
+//!   sit in `TIME_WAIT`, and the router's table is re-pointed anyway).
+//!
+//! Everything above this layer addresses workers by `host:port` only
+//! (see [`crate::serve::router`]) — a shard served by a process on
+//! another host plugs into the same routing table untouched.
+
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::serve::registry::manifest_json;
+use crate::serve::server::Client;
+use crate::util::json::Json;
+use crate::Result;
+
+/// How a local worker process is launched.
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// The `plnmf` binary to exec (`std::env::current_exe()` for the
+    /// `plnmf route` CLI; `env!("CARGO_BIN_EXE_plnmf")` in tests).
+    pub binary: PathBuf,
+    /// Interface workers bind (`plnmf serve` listens on 127.0.0.1; the
+    /// router connects to this host).
+    pub host: String,
+    /// Directory for the generated single-model manifests the workers
+    /// serve from (created on demand).
+    pub work_dir: PathBuf,
+    /// Extra `plnmf serve` arguments appended verbatim — serving knobs
+    /// like `--threads`, `--sweeps`, `--batch`, `--serve_tol`,
+    /// `--warm_cache` pass through here.
+    pub extra_args: Vec<String>,
+}
+
+impl WorkerOpts {
+    pub fn new(binary: PathBuf) -> WorkerOpts {
+        WorkerOpts {
+            binary,
+            host: "127.0.0.1".to_string(),
+            work_dir: std::env::temp_dir().join(format!("plnmf-route-{}", std::process::id())),
+            extra_args: Vec::new(),
+        }
+    }
+}
+
+/// A supervised local worker process.
+pub struct ManagedWorker {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl ManagedWorker {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// Non-blocking crash detection: `Some(status)` once the process
+    /// has exited (reaping it), `None` while it is still running.
+    pub fn poll_exit(&mut self) -> Option<String> {
+        match self.child.try_wait() {
+            Ok(Some(status)) => Some(status.to_string()),
+            Ok(None) => None,
+            Err(e) => Some(format!("wait failed: {e}")),
+        }
+    }
+
+    /// Graceful shutdown: send the protocol `shutdown`, give the
+    /// process `deadline` to drain and exit, then SIGKILL as backstop.
+    pub fn shutdown(mut self, deadline: Duration) {
+        let graceful = Client::connect(self.addr).and_then(|c| {
+            c.set_read_timeout(Some(Duration::from_secs(2)))?;
+            let mut c = c;
+            c.request(&Json::obj(vec![("op", Json::str("shutdown"))]))
+        });
+        if graceful.is_err() {
+            // Unreachable worker (already dead or hung): fall through
+            // to the kill below.
+            crate::debug!("worker {}: graceful shutdown failed", self.addr);
+        }
+        let end = Instant::now() + deadline;
+        while Instant::now() < end {
+            if self.child.try_wait().map(|s| s.is_some()).unwrap_or(true) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Ask the OS for a currently-free port on `host` (bind-probe). The
+/// port is released before returning, so a raced bind by another
+/// process is possible — callers treat a worker that dies at startup
+/// like any other crash (fresh port on the next restart attempt).
+pub fn probe_free_port(host: &str) -> Result<u16> {
+    let listener =
+        TcpListener::bind((host, 0)).with_context(|| format!("probing a free port on {host}"))?;
+    Ok(listener.local_addr().context("reading probed port")?.port())
+}
+
+/// Write the single-model manifest a worker serves from and return its
+/// path. Regenerated on every (re)spawn so a changed model path is
+/// picked up without touching the worker CLI.
+pub fn write_worker_manifest(work_dir: &Path, name: &str, model_path: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(work_dir)
+        .with_context(|| format!("creating worker dir {work_dir:?}"))?;
+    // The model path is resolved against the *fleet* manifest already;
+    // make it absolute so the worker manifest's directory is irrelevant.
+    let abs = if model_path.is_absolute() {
+        model_path.to_path_buf()
+    } else {
+        std::env::current_dir().context("resolving model path")?.join(model_path)
+    };
+    let path = work_dir.join(format!("{name}.manifest.json"));
+    let abs_str = abs.display().to_string();
+    let body = manifest_json(1, 0, &[(name, abs_str.as_str())]).pretty();
+    std::fs::write(&path, body).with_context(|| format!("writing worker manifest {path:?}"))?;
+    Ok(path)
+}
+
+/// Spawn one worker on `port` serving `name` from `model_path`.
+pub fn spawn_worker(
+    opts: &WorkerOpts,
+    name: &str,
+    model_path: &Path,
+    port: u16,
+) -> Result<ManagedWorker> {
+    let manifest = write_worker_manifest(&opts.work_dir, name, model_path)?;
+    let child = Command::new(&opts.binary)
+        .arg("serve")
+        .arg("--models_manifest")
+        .arg(&manifest)
+        .arg("--serve_port")
+        .arg(port.to_string())
+        .args(&opts.extra_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning worker '{name}' ({:?})", opts.binary))?;
+    let addr: SocketAddr = format!("{}:{port}", opts.host)
+        .parse()
+        .map_err(|e| anyhow!("worker '{name}': bad address: {e}"))?;
+    crate::info!("worker '{name}': spawned pid {} on {addr}", child.id());
+    Ok(ManagedWorker { child, addr })
+}
+
+/// Block until the worker answers `ping` on `addr` (bounded by
+/// `deadline`). Fails fast if the process exits first — a worker that
+/// cannot bind its port or load its model dies immediately, and waiting
+/// out the full deadline would only slow the restart backoff loop.
+pub fn wait_ready(worker: &mut ManagedWorker, deadline: Duration) -> Result<()> {
+    let end = Instant::now() + deadline;
+    let addr = worker.addr;
+    loop {
+        if let Some(status) = worker.poll_exit() {
+            bail!("worker on {addr} exited during startup ({status})");
+        }
+        if let Ok(client) = Client::connect(addr) {
+            let _ = client.set_read_timeout(Some(Duration::from_secs(2)));
+            let mut client = client;
+            if let Ok(resp) = client.request(&Json::obj(vec![("op", Json::str("ping"))])) {
+                if resp.get("pong").as_bool() == Some(true) {
+                    return Ok(());
+                }
+            }
+        }
+        if Instant::now() >= end {
+            bail!("worker on {addr} not ready within {deadline:?}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_returns_bindable_port() {
+        let p = probe_free_port("127.0.0.1").unwrap();
+        assert!(p > 0);
+        // Immediately bindable (the probe released it).
+        TcpListener::bind(("127.0.0.1", p)).unwrap();
+    }
+
+    #[test]
+    fn worker_manifest_is_single_model_and_absolute() {
+        let dir = std::env::temp_dir().join(format!("plnmf-workerman-{}", std::process::id()));
+        let path = write_worker_manifest(&dir, "news", Path::new("/models/news.json")).unwrap();
+        let m = crate::serve::Manifest::load(&path).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.models[0].name, "news");
+        assert_eq!(m.models[0].path, Path::new("/models/news.json"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn spawn_failure_surfaces_binary_context() {
+        let opts = WorkerOpts::new(PathBuf::from("/definitely/not/a/binary"));
+        let err = format!(
+            "{:#}",
+            spawn_worker(&opts, "m", Path::new("/tmp/m.json"), 1).unwrap_err()
+        );
+        assert!(err.contains("spawning worker 'm'"), "{err}");
+        std::fs::remove_dir_all(&opts.work_dir).ok();
+    }
+}

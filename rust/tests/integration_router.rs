@@ -1,0 +1,378 @@
+//! End-to-end shard-router tests: real `plnmf serve` worker *processes*
+//! behind a `plnmf route` front, plus the process-location-agnostic
+//! external-worker mode.
+//!
+//! The headline assertions:
+//!
+//! * **Parity** — a transform routed through the front to a worker
+//!   process is bit-for-bit identical to the in-process `Projector`
+//!   (the router relays worker bytes untouched, and the single-model
+//!   worker runs the same pinned solver configuration).
+//! * **Fault injection** — killing a worker mid-stream turns in-flight
+//!   requests to that shard into `"retryable": true` errors, the
+//!   supervisor restarts the worker within its backoff budget, and
+//!   subsequent routed responses are again bit-for-bit identical.
+//!   Synchronization is all condition-polling with deadlines — no
+//!   sleeps-as-synchronization.
+
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use plnmf::linalg::Mat;
+use plnmf::nmf::Factors;
+use plnmf::parallel::ThreadPool;
+use plnmf::serve::registry::manifest_json;
+use plnmf::serve::{
+    queries_to_json, save_model, Client, ModelMeta, ModelRegistry, Projector, ProjectorOpts,
+    Queries, RegistryOpts, Router, RouterOpts, Server, WorkerOpts,
+};
+use plnmf::util::json::Json;
+use plnmf::util::rng::Pcg32;
+use plnmf::Elem;
+
+/// The `plnmf` binary workers are spawned from (built by cargo for us).
+const PLNMF_BIN: &str = env!("CARGO_BIN_EXE_plnmf");
+
+fn tmpdir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("plnmf-router-it-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn write_model(dir: &Path, file: &str, v: usize, d: usize, k: usize, seed: u64) -> PathBuf {
+    let f = Factors::random(v, d, k, seed);
+    let path = dir.join(file);
+    save_model(&path, &f, &ModelMeta::default()).unwrap();
+    path
+}
+
+/// Worker knobs pinned for reproducibility: one thread, fixed sweep
+/// schedule, warm cache OFF (bit-exactness needs cold solves), no
+/// early-stop tolerance.
+fn pinned_worker_opts(dir: &Path) -> WorkerOpts {
+    let mut opts = WorkerOpts::new(PathBuf::from(PLNMF_BIN));
+    opts.work_dir = dir.join("workers");
+    opts.extra_args = vec![
+        "--threads".into(),
+        "1".into(),
+        "--sweeps".into(),
+        "20".into(),
+        "--batch".into(),
+        "8".into(),
+        "--warm_cache".into(),
+        "0".into(),
+    ];
+    opts
+}
+
+/// The in-process reference the workers must match bit-for-bit: the
+/// same pinned configuration on a 1-thread pool.
+fn reference_h(model: &Path, q: &Mat) -> Mat {
+    let (factors, _) = plnmf::serve::load_model(model).unwrap();
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let p = Projector::new(factors.w, Arc::new(ThreadPool::new(1)), popts).unwrap();
+    p.project(Queries::Dense(q)).unwrap()
+}
+
+fn h_from_json(resp: &Json, k: usize) -> Mat {
+    let rows = resp.get("h").as_arr().expect("response has h");
+    let mut data: Vec<Elem> = Vec::with_capacity(rows.len() * k);
+    for row in rows {
+        let row = row.as_arr().unwrap();
+        assert_eq!(row.len(), k);
+        for x in row {
+            data.push(x.as_f64().unwrap() as Elem);
+        }
+    }
+    Mat::from_vec(rows.len(), k, data)
+}
+
+fn transform_req(model: &str, q: &Mat) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str(model)),
+        ("queries", queries_to_json(Queries::Dense(q))),
+    ])
+}
+
+/// Poll `cond` until it holds or `deadline` passes (tight loop with a
+/// small pause; the pause bounds CPU, not the synchronization).
+fn wait_until(deadline: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+    let end = Instant::now() + deadline;
+    while !cond() {
+        assert!(Instant::now() < end, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+type RouterHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn start_router(router: Router) -> (SocketAddr, RouterHandle) {
+    let addr = router.local_addr();
+    let handle = std::thread::spawn(move || router.run());
+    (addr, handle)
+}
+
+fn shutdown_router(addr: SocketAddr) {
+    let mut c = Client::connect(addr).unwrap();
+    let resp = c.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+    assert_eq!(resp.get("bye").as_bool(), Some(true));
+}
+
+#[test]
+fn routed_workers_match_in_process_bit_for_bit() {
+    let dir = tmpdir("parity");
+    let model_a = write_model(&dir, "a.json", 40, 9, 5, 1);
+    let model_b = write_model(&dir, "b.json", 30, 9, 4, 2);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(
+        &manifest,
+        manifest_json(1, 0, &[("a", "a.json"), ("b", "b.json")]).pretty(),
+    )
+    .unwrap();
+
+    let router =
+        Router::from_manifest(&manifest, pinned_worker_opts(&dir), RouterOpts::default())
+            .unwrap();
+    assert_eq!(router.names(), vec!["a", "b"]);
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    // Both shards answer on one socket, bit-identical to in-process.
+    let mut rng = Pcg32::seeded(41);
+    for round in 0..3 {
+        for (name, model, v, k) in [("a", &model_a, 40, 5), ("b", &model_b, 30, 4)] {
+            let q = Mat::random(6, v, &mut rng, 0.0, 1.0);
+            let resp = client.request_ok(&transform_req(name, &q)).unwrap();
+            assert_eq!(
+                h_from_json(&resp, k),
+                reference_h(model, &q),
+                "{name} round {round}: routed h must be bit-identical"
+            );
+        }
+    }
+
+    // Aggregated stats: merged per-model map + per-worker health.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("router").as_bool(), Some(true));
+    for name in ["a", "b"] {
+        let w = stats.get("workers").get(name);
+        assert_eq!(w.get("up").as_bool(), Some(true), "{name}: {stats}");
+        assert_eq!(w.get("restarts").as_usize(), Some(0));
+        assert!(w.get("addr").as_str().unwrap().contains(':'));
+        let m = stats.get("models").get(name);
+        assert!(m.get("requests").as_usize().unwrap() >= 3, "{name}: {stats}");
+    }
+
+    // Routed-mode guidance for fleet mutations.
+    let resp = client
+        .request(&Json::obj(vec![
+            ("op", Json::str("unload")),
+            ("name", Json::str("a")),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert!(resp.get("error").as_str().unwrap().contains("manifest"));
+    // Unknown model names the routed fleet.
+    let q = Mat::from_fn(1, 40, |_, j| j as Elem);
+    let resp = client.request(&transform_req("ghost", &q)).unwrap();
+    assert!(resp.get("error").as_str().unwrap().contains("no model 'ghost' routed"));
+
+    drop(client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn worker_crash_is_retryable_then_restarts_with_identical_results() {
+    let dir = tmpdir("fault");
+    let model = write_model(&dir, "m.json", 30, 9, 4, 3);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(&manifest, manifest_json(1, 0, &[("m", "m.json")]).pretty()).unwrap();
+
+    // Backoff wide enough that the crash→retryable-error window cannot
+    // race the supervisor's restart; health interval tight so crash
+    // *detection* is fast.
+    let opts = RouterOpts {
+        restart_backoff: Duration::from_millis(1500),
+        health_interval: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let router = Router::from_manifest(&manifest, pinned_worker_opts(&dir), opts).unwrap();
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    // A successful round trip first: establishes the pooled router →
+    // worker connection and the reference answer.
+    let mut rng = Pcg32::seeded(42);
+    let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+    let h_ref = reference_h(&model, &q);
+    let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+    assert_eq!(h_from_json(&resp, 4), h_ref, "pre-crash routed h");
+
+    // Kill the worker out-of-band (protocol shutdown straight to its
+    // port — the router is not involved), then wait until its listener
+    // is provably gone.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    let worker_addr: SocketAddr =
+        stats.get("workers").get("m").get("addr").as_str().unwrap().parse().unwrap();
+    {
+        let mut direct = Client::connect(worker_addr).unwrap();
+        let bye = direct.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        assert_eq!(bye.get("bye").as_bool(), Some(true));
+    }
+    wait_until(Duration::from_secs(30), "worker listener to close", || {
+        std::net::TcpStream::connect(worker_addr).is_err()
+    });
+
+    // In-flight-style request against the dead shard: the router's
+    // pooled connection is now severed, and the restart backoff keeps
+    // the worker down — so this deterministically surfaces the
+    // retryable error (never a hang, never a silent retry).
+    let resp = client.request(&transform_req("m", &q)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp}");
+    assert_eq!(resp.get("retryable").as_bool(), Some(true), "{resp}");
+    assert_eq!(resp.get("model").as_str(), Some("m"));
+    assert!(resp.get("error").as_str().unwrap().contains("shard 'm'"), "{resp}");
+
+    // The supervisor restarts the worker within its backoff budget…
+    wait_until(Duration::from_secs(60), "worker restart", || {
+        let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        ping.get("workers").get("m").get("up").as_bool() == Some(true)
+    });
+    // …on a fresh port, with the restart counted.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert!(stats.get("workers").get("m").get("restarts").as_usize().unwrap() >= 1);
+
+    // And the routed answer is bit-for-bit what it was before the crash.
+    let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+    assert_eq!(h_from_json(&resp, 4), h_ref, "post-restart routed h");
+
+    drop(client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn manifest_hot_reload_adds_and_removes_workers_without_touching_others() {
+    let dir = tmpdir("reload");
+    write_model(&dir, "a.json", 25, 8, 3, 5);
+    write_model(&dir, "b.json", 20, 8, 3, 6);
+    write_model(&dir, "c.json", 22, 8, 3, 7);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(
+        &manifest,
+        manifest_json(1, 0, &[("a", "a.json"), ("b", "b.json")]).pretty(),
+    )
+    .unwrap();
+
+    let opts = RouterOpts {
+        manifest_poll: Duration::from_millis(200),
+        health_interval: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let router = Router::from_manifest(&manifest, pinned_worker_opts(&dir), opts).unwrap();
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    let mut rng = Pcg32::seeded(43);
+    let q = Mat::random(4, 25, &mut rng, 0.0, 1.0);
+    let h_before = h_from_json(&client.request_ok(&transform_req("a", &q)).unwrap(), 3);
+
+    // Publish version 2: drop b, add c, leave a untouched.
+    std::fs::write(
+        &manifest,
+        manifest_json(2, 0, &[("a", "a.json"), ("c", "c.json")]).pretty(),
+    )
+    .unwrap();
+    wait_until(Duration::from_secs(60), "manifest v2 to apply", || {
+        let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        let workers = ping.get("workers");
+        workers.get("c").get("up").as_bool() == Some(true) && workers.get("b").is_null()
+    });
+
+    // The new shard serves; the removed one is gone.
+    let qc = Mat::random(2, 22, &mut rng, 0.0, 1.0);
+    client.request_ok(&transform_req("c", &qc)).unwrap();
+    let resp = client.request(&transform_req("b", &Mat::from_fn(1, 20, |_, _| 1.0))).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert!(resp.get("error").as_str().unwrap().contains("no model 'b'"));
+
+    // The untouched shard was never interrupted: same worker (no
+    // restarts) and bit-identical answers.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("workers").get("a").get("restarts").as_usize(), Some(0));
+    assert_eq!(stats.get("manifest_version").as_usize(), Some(2));
+    let h_after = h_from_json(&client.request_ok(&transform_req("a", &q)).unwrap(), 3);
+    assert_eq!(h_after, h_before);
+
+    drop(client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn external_workers_route_without_supervision() {
+    // Workers as in-process `Server` threads addressed by host:port —
+    // the multi-host shape, and proof the router is process-location-
+    // agnostic (no spawning involved).
+    let dir = tmpdir("external");
+    let model_a = write_model(&dir, "a.json", 35, 9, 5, 8);
+    let model_b = write_model(&dir, "b.json", 28, 9, 4, 9);
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let start_worker = |name: &str, path: &Path| {
+        let registry = ModelRegistry::new(RegistryOpts {
+            threads: 1,
+            per_model_threads: 1,
+            projector: popts,
+            warm_cache: 0,
+            max_total_nnz: 0,
+        });
+        registry.load(name, path).unwrap();
+        let server = Server::bind(Arc::new(registry), "127.0.0.1", 0).unwrap();
+        let addr = server.local_addr();
+        (addr, std::thread::spawn(move || server.run()))
+    };
+    let (addr_a, h_a) = start_worker("a", &model_a);
+    let (addr_b, h_b) = start_worker("b", &model_b);
+
+    let router =
+        Router::with_external_workers(&[("a", addr_a), ("b", addr_b)], RouterOpts::default())
+            .unwrap();
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    let mut rng = Pcg32::seeded(44);
+    for (name, model, v, k) in [("a", &model_a, 35, 5), ("b", &model_b, 28, 4)] {
+        let q = Mat::random(3, v, &mut rng, 0.0, 1.0);
+        let resp = client.request_ok(&transform_req(name, &q)).unwrap();
+        assert_eq!(h_from_json(&resp, k), reference_h(model, &q), "{name}");
+    }
+    let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(ping.get("router").as_bool(), Some(true));
+    assert_eq!(ping.get("workers").get("a").get("up").as_bool(), Some(true));
+
+    // Router shutdown drains and stops the whole fleet — both worker
+    // server threads join cleanly.
+    drop(client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    h_a.join().unwrap().unwrap();
+    h_b.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_route_requires_a_manifest() {
+    use plnmf::bench::cli_main;
+    use plnmf::cli::Args;
+    let args =
+        Args::parse(["route".to_string(), "--route_port".to_string(), "0".to_string()]).unwrap();
+    let err = format!("{:#}", cli_main(args).unwrap_err());
+    assert!(err.contains("models_manifest"), "{err}");
+}

@@ -1,0 +1,322 @@
+//! Wire-layer property and fuzz tests: the JSON codec under the NDJSON
+//! protocol must round-trip every value it can express, and hostile
+//! input — truncated, garbage, or oversized frames — must yield
+//! protocol *errors*, never panics, hangs, or unbounded buffering.
+//!
+//! Deterministic (seeded `PropConfig`) so failures replay; scale trials
+//! up with `PLNMF_PROP_TRIALS` for soak runs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use plnmf::nmf::Factors;
+use plnmf::serve::{
+    save_model, Client, ModelMeta, ModelRegistry, ProjectorOpts, RegistryOpts, Server,
+    MAX_LINE_BYTES,
+};
+use plnmf::testing::{Gen, PropConfig};
+use plnmf::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Json::parse_prefix ↔ serializer properties.
+// ---------------------------------------------------------------------------
+
+/// A random JSON value: nested arrays/objects with bounded depth and
+/// width, scalars drawn from the value classes the protocol carries
+/// (finite numbers — the serializer's contract — plus strings with
+/// escapes and non-ASCII, bools, nulls).
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let leaf_only = depth == 0;
+    let pick = g.usize_in(0, if leaf_only { 4 } else { 6 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(g.usize_in(0, 1) == 1),
+        2 => {
+            // Integers (printed without fraction), fractions, exponents,
+            // negatives — every number shape the serializer emits.
+            let x = match g.usize_in(0, 3) {
+                0 => g.usize_in(0, 1_000_000) as f64,
+                1 => -(g.usize_in(0, 1_000_000) as f64),
+                2 => g.f32_in(-1e6, 1e6) as f64,
+                _ => g.f32_in(-1.0, 1.0) as f64 * 1e-20,
+            };
+            Json::Num(x)
+        }
+        3 => Json::Str(random_string(g)),
+        4 => Json::Str(String::new()),
+        5 => {
+            let n = g.usize_in(0, 4);
+            Json::Arr((0..n).map(|_| random_json(g, depth - 1)).collect())
+        }
+        _ => {
+            let n = g.usize_in(0, 4);
+            Json::Obj(
+                (0..n)
+                    .map(|i| (format!("{}{i}", random_string(g)), random_json(g, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+fn random_string(g: &mut Gen) -> String {
+    const ALPHABET: &[&str] =
+        &["a", "B", "7", " ", "\"", "\\", "\n", "\t", "\r", "{", "[", ",", "é", "≤", "\u{1}"];
+    let n = g.usize_in(0, 8);
+    (0..n).map(|_| *g.choose(ALPHABET)).collect()
+}
+
+#[test]
+fn prop_parse_prefix_roundtrips_serializer() {
+    PropConfig::trials(200).run("parse_prefix ∘ to_string == id", |g| {
+        let v = random_json(g, 3);
+        let s = v.to_string();
+        let (re, consumed) = Json::parse_prefix(&s).unwrap_or_else(|e| {
+            panic!("serialized value failed to parse: {e}\n  value: {s}")
+        });
+        assert_eq!(consumed, s.len(), "prefix parse must consume the whole serialization");
+        assert_eq!(re, v, "roundtrip changed the value: {s}");
+        // The pretty form parses back to the same value too.
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v, "pretty roundtrip: {s}");
+    });
+}
+
+#[test]
+fn prop_parse_prefix_streams_with_trailing_data() {
+    PropConfig::trials(100).run("prefix parse leaves the tail", |g| {
+        let v = random_json(g, 2);
+        let tail = " {\"op\": \"next\"}";
+        let s = format!("{v}{tail}");
+        let (re, consumed) = Json::parse_prefix(&s).unwrap();
+        assert_eq!(re, v);
+        assert_eq!(&s[consumed..], tail);
+    });
+}
+
+#[test]
+fn prop_truncated_input_errors_never_panics() {
+    PropConfig::trials(200).run("truncation is an error, not a panic", |g| {
+        let v = random_json(g, 3);
+        let s = v.to_string();
+        if s.len() < 2 {
+            return;
+        }
+        // Truncate at a random char boundary strictly inside the text.
+        let mut cut = g.usize_in(1, s.len() - 1);
+        while !s.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let t = &s[..cut];
+        // A truncated *composite* must error; a truncated scalar may
+        // legitimately parse shorter (e.g. "12" from "123"). Neither
+        // may panic, hang, or report consuming more than it got.
+        match Json::parse_prefix(t) {
+            Ok((_, consumed)) => assert!(consumed <= t.len()),
+            Err(e) => assert!(e.pos <= t.len()),
+        }
+        if matches!(v, Json::Arr(_) | Json::Obj(_)) && !t.is_empty() {
+            assert!(Json::parse(t).is_err(), "truncated composite parsed: {t:?} from {s:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_garbage_bytes_error_never_panic() {
+    PropConfig::trials(300).run("garbage in, error out", |g| {
+        const BYTES: &[&str] = &[
+            "{", "}", "[", "]", ",", ":", "\"", "\\", "tru", "nul", "-", "+", "e", "E", ".",
+            "1", "9", "∞", "x", " ", "\t", "{}", "[]", "\"\"", "0x1", "1.2.3", "--1",
+        ];
+        let n = g.usize_in(0, 12);
+        let s: String = (0..n).map(|_| *g.choose(BYTES)).collect();
+        // Must terminate with Ok or Err — no panic, no hang.
+        let _ = Json::parse(&s);
+        let _ = Json::parse_prefix(&s);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// The live server codec under hostile bytes.
+// ---------------------------------------------------------------------------
+
+fn tmp_model() -> PathBuf {
+    // Unique per call: tests run concurrently in one process, and a
+    // shared file would race its own creation.
+    static COUNTER: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let n = COUNTER.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    let dir = std::env::temp_dir().join(format!("plnmf-fuzz-{}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.json");
+    let f = Factors::random(20, 6, 3, 1);
+    save_model(&path, &f, &ModelMeta::default()).unwrap();
+    path
+}
+
+fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let registry = ModelRegistry::new(RegistryOpts {
+        threads: 1,
+        per_model_threads: 1,
+        projector: ProjectorOpts::default(),
+        warm_cache: 0,
+        max_total_nnz: 0,
+    });
+    registry.load("m", &tmp_model()).unwrap();
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0).unwrap();
+    let addr = server.local_addr();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn shutdown_server(addr: std::net::SocketAddr) {
+    let mut c = Client::connect(addr).unwrap();
+    c.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+}
+
+#[test]
+fn server_answers_every_garbage_line_with_an_error() {
+    let (addr, handle) = start_server();
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        // Deterministic garbage: every line must get one JSON error
+        // response, and the connection must stay usable throughout.
+        let cases: &[&str] = &[
+            "garbage",
+            "{\"op\": \"transform\"",          // truncated frame
+            "{\"op\": \"ping\"} {\"op\": 1}",  // two values on one line
+            "[1, 2, 3]",                       // not an object op
+            "\u{0}\u{1}\u{2}",                 // control bytes
+            "{\"op\": \"explode\"}",           // unknown op
+            "123",
+        ];
+        for case in cases {
+            w.write_all(case.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap_or_else(|e| {
+                panic!("non-JSON response to {case:?}: {e} ({line:?})")
+            });
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{case:?} -> {line:?}");
+        }
+        // Still serving real requests on the same connection.
+        w.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().get("pong").as_bool(), Some(true));
+    }
+    shutdown_server(addr);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn oversized_frame_gets_protocol_error_not_a_hang() {
+    let (addr, handle) = start_server();
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        // Exactly one byte past the cap, no newline: the server must
+        // answer (bounded read) instead of buffering forever. Sending
+        // not a byte more keeps the close graceful — the cap trips on
+        // our very last byte, so no unread data can turn the server's
+        // close into a response-discarding reset.
+        let chunk = vec![b'a'; 1 << 20];
+        let mut remaining = MAX_LINE_BYTES + 1;
+        while remaining > 0 {
+            let n = remaining.min(chunk.len());
+            w.write_all(&chunk[..n]).unwrap();
+            remaining -= n;
+        }
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert!(
+            resp.get("error").as_str().unwrap().contains("exceeds"),
+            "unexpected error: {line}"
+        );
+        // The connection is closed after an oversized frame (no
+        // resync possible): the next read sees EOF.
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "connection should be closed");
+    }
+    // A fresh connection still works.
+    let mut c = Client::connect(addr).unwrap();
+    let resp = c.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(resp.get("pong").as_bool(), Some(true));
+    drop(c);
+    shutdown_server(addr);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn client_surfaces_closed_mid_response_distinctly() {
+    // A fake daemon that reads the request and slams the connection
+    // shut without answering: `Client::request` must fail with the
+    // *distinct* closed-mid-response error, not a generic read failure
+    // (the router keys its retryable classification off this).
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        // Dropping both handles closes the socket with no response.
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let err = client.request(&Json::obj(vec![("op", Json::str("ping"))])).unwrap_err();
+    assert!(
+        Client::is_connection_closed(&err),
+        "want the distinct closed-mid-response error, got: {err:#}"
+    );
+    server.join().unwrap();
+
+    // A daemon that dies after writing *half* a response line (no
+    // newline) is the same closed class — truncated bytes must never
+    // be handed back as a complete response.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        w.write_all(b"{\"ok\": tr").unwrap(); // half a response, then close
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let err = client.request(&Json::obj(vec![("op", Json::str("ping"))])).unwrap_err();
+    assert!(
+        Client::is_connection_closed(&err),
+        "a truncated response line is the closed class: {err:#}"
+    );
+    server.join().unwrap();
+
+    // Contrast: a daemon that *answers* garbage is a different error
+    // class (bad response JSON, not a closed connection).
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        w.write_all(b"not json\n").unwrap();
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let err = client.request(&Json::obj(vec![("op", Json::str("ping"))])).unwrap_err();
+    assert!(
+        !Client::is_connection_closed(&err),
+        "bad-JSON responses are not the closed class: {err:#}"
+    );
+    server.join().unwrap();
+}
