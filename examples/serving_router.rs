@@ -1,20 +1,26 @@
-//! Routed-topology demo: two serving workers behind a `plnmf route`
-//! front, driven over one client socket.
+//! Routed-topology demo: a replicated model plus a singleton behind a
+//! `plnmf route` front, driven over one client socket.
 //!
 //! ```text
-//!                         ┌─ worker :p1 — {news}  (own pool, Gram, warm cache)
-//!   client ── route :p0 ──┤
-//!         NDJSON/TCP      └─ worker :p2 — {faces}
+//!                         ┌─ worker :p1 — {news}  ┐ replicas of one model
+//!   client ── route :p0 ──┼─ worker :p2 — {news}  ┘ (least-loaded pick)
+//!         NDJSON/TCP      └─ worker :p3 — {faces}
 //! ```
 //!
 //! The workers here are in-process `Server` threads addressed by
 //! `host:port` — the router does not care whether a worker lives in a
 //! thread, a child process, or another machine, which is exactly the
-//! point of the seam. The `plnmf route` CLI builds the same topology
-//! with one supervised `plnmf serve` *process* per model (crash
-//! detection, bounded-backoff restart, manifest hot-reload):
+//! point of the seam. Repeating a model name in the worker list
+//! declares replicas; the router routes each request to the
+//! least-loaded live replica, retries idempotent ops on a sibling
+//! within its budget, and answers `busy` (with a `retry_after_ms`
+//! hint) when every replica is at the in-flight ceiling. The
+//! `plnmf route` CLI builds the same topology with supervised
+//! `plnmf serve` *processes* (crash detection, bounded-backoff
+//! restart, manifest hot-reload), replicating per the manifest:
 //!
 //! ```sh
+//! # fleet.json: {"models": [{"name": "news", "path": "...", "replicas": 2}, ...]}
 //! plnmf route --models_manifest fleet.json --route_port 7900
 //! ```
 //!
@@ -81,19 +87,22 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join(format!("plnmf-router-demo-{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
 
-    // ---- two models, one worker each ------------------------------------
+    // ---- two models; 'news' gets two replicas ----------------------------
     let driver = train("tiny-sparse", 8, &dir.join("news.json"))?;
     train("tiny", 6, &dir.join("faces.json"))?;
-    let (news_addr, news_handle) = start_worker("news", &dir.join("news.json"))?;
+    let (news_a, news_a_handle) = start_worker("news", &dir.join("news.json"))?;
+    let (news_b, news_b_handle) = start_worker("news", &dir.join("news.json"))?;
     let (faces_addr, faces_handle) = start_worker("faces", &dir.join("faces.json"))?;
 
-    // ---- the routing front ----------------------------------------------
+    // ---- the routing front: repeated names declare replicas --------------
     let router = Router::with_external_workers(
-        &[("news", news_addr), ("faces", faces_addr)],
+        &[("news", news_a), ("news", news_b), ("faces", faces_addr)],
         RouterOpts::default(),
     )?;
     let addr = router.local_addr();
-    println!("router on {addr} — shards: news -> {news_addr}, faces -> {faces_addr}");
+    println!(
+        "router on {addr} — news -> [{news_a}, {news_b}] (2 replicas), faces -> {faces_addr}"
+    );
     let router_handle = std::thread::spawn(move || router.run());
 
     // ---- one socket reaches every shard ----------------------------------
@@ -107,8 +116,21 @@ fn main() -> anyhow::Result<()> {
         ("model", Json::str("news")),
         ("queries", queries_to_json(queries)),
     ]);
-    for pass in ["cold", "warm (repeat, same worker's cache)"] {
-        let resp = client.request_ok(&req)?;
+    for pass in ["first", "second (least-loaded replica again)"] {
+        // `request` (not `request_ok`): the busy backpressure error is a
+        // well-formed `"ok": false` response the client should classify
+        // and honor, not a hard failure.
+        let resp = client.request(&req)?;
+        if let Some(hint) = Client::busy_retry_after_ms(&resp) {
+            // Backpressure path (not expected at this gentle load):
+            // every replica at its in-flight ceiling.
+            println!("routed transform [{pass}]: busy — retry after {hint} ms");
+            continue;
+        }
+        anyhow::ensure!(
+            resp.get("ok").as_bool() == Some(true),
+            "routed transform failed: {resp}"
+        );
         let warm = resp.get("warm");
         println!(
             "routed transform [{pass}]: {} docs — {} sweeps, {} cache hits",
@@ -130,21 +152,25 @@ fn main() -> anyhow::Result<()> {
     ]))?;
     println!("routed recommend on 'faces': {}", resp.get("recs"));
 
-    // ---- aggregated stats + fleet health ---------------------------------
+    // ---- aggregated stats + per-replica fleet health ---------------------
     let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    let news = stats.get("workers").get("news");
     println!(
-        "router stats: {} requests, news worker up = {}, merged models = {}",
+        "router stats: {} requests, news replicas up = {}/{} (in flight {}), merged models = {}",
         stats.get("requests").as_usize().unwrap_or(0),
-        stats.get("workers").get("news").get("up").as_bool().unwrap_or(false),
+        news.get("up_replicas").as_usize().unwrap_or(0),
+        news.get("replicas").as_usize().unwrap_or(0),
+        news.get("in_flight").as_usize().unwrap_or(0),
         stats.get("models").as_obj().map(|o| o.len()).unwrap_or(0),
     );
 
     // ---- one shutdown drains the whole topology --------------------------
     client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
     router_handle.join().expect("router thread")?;
-    news_handle.join().expect("news worker thread")?;
+    news_a_handle.join().expect("news replica 0 thread")?;
+    news_b_handle.join().expect("news replica 1 thread")?;
     faces_handle.join().expect("faces worker thread")?;
-    println!("router and both workers shut down cleanly");
+    println!("router and all three workers shut down cleanly");
     std::fs::remove_dir_all(dir).ok();
     Ok(())
 }

@@ -136,11 +136,14 @@ COMMANDS:
              stay resident (cached Grams, warm-start cache, per-model
              pools): --models_manifest fleet.json | --model m.json
              [--serve_port P --warm_cache N --serve_tol T --threads N]
-  route      cross-process shard router: one `plnmf serve` worker
-             process per manifest model, same protocol on the front
-             port; crash detection + bounded-backoff restarts +
-             manifest hot-reload: --models_manifest fleet.json
+  route      cross-process shard router: `plnmf serve` worker processes
+             per manifest model (\"replicas\": N each, default 1), same
+             protocol on the front port; least-loaded replica routing,
+             idempotent-op retry budget, busy backpressure, crash
+             detection + bounded-backoff restarts + manifest hot-reload:
+             --models_manifest fleet.json
              [--route_port P --worker_port_base B --restart_backoff_ms N
+             --route_retries R --max_inflight C
              --threads T + the serve knobs, passed through to workers]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
@@ -305,11 +308,12 @@ fn cmd_route(args: &Args) -> Result<()> {
     // Read the manifest once: it sizes the per-worker thread shares AND
     // seeds the router (re-reading for each would race a concurrent
     // edit). Split the machine across the fleet like `serve` does
-    // across its per-model pools — here each worker process gets its
-    // own share.
+    // across its per-model pools — here each worker process (every
+    // replica is its own process) gets its own share.
     let manifest = crate::serve::Manifest::load(Path::new(&manifest_path))?;
     let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
-    let per_worker_threads = (threads / manifest.models.len().max(1)).max(1);
+    let fleet_workers: usize = manifest.models.iter().map(|m| m.replicas).sum();
+    let per_worker_threads = (threads / fleet_workers.max(1)).max(1);
     let binary = std::env::current_exe()
         .map_err(|e| anyhow::anyhow!("resolving the plnmf binary for workers: {e}"))?;
     let mut worker_opts = WorkerOpts::new(binary);
@@ -331,17 +335,23 @@ fn cmd_route(args: &Args) -> Result<()> {
         route_port: cfg.route_port as u16,
         worker_port_base: cfg.worker_port_base as u16,
         restart_backoff: std::time::Duration::from_millis(cfg.restart_backoff_ms as u64),
+        route_retries: cfg.route_retries,
+        max_inflight: cfg.max_inflight,
         ..Default::default()
     };
     let router = Router::from_loaded(&manifest, Path::new(&manifest_path), worker_opts, opts)?;
     let names = router.names();
     println!(
-        "plnmf route: listening on {} — {} worker process(es): {} \
-         ({per_worker_threads} threads each, restart backoff {}ms)",
+        "plnmf route: listening on {} — {} model(s) over {} worker process(es): {} \
+         ({per_worker_threads} threads each, restart backoff {}ms, retry budget {}, \
+         in-flight ceiling {})",
         router.local_addr(),
         names.len(),
+        router.worker_count(),
         names.join(", "),
-        cfg.restart_backoff_ms
+        cfg.restart_backoff_ms,
+        cfg.route_retries,
+        cfg.max_inflight
     );
     router.run()
 }

@@ -17,6 +17,12 @@
 //!    front (one extra TCP hop + request inspection + byte relay) next
 //!    to the direct-daemon rows — what cross-process sharding costs per
 //!    request.
+//! 4. **Replication scaling** (`routed_replicated_r{N}` rows): one
+//!    model behind 1 / 2 / 4 replicas, hammered by 2 concurrent clients
+//!    per replica. Each replica is its own worker (own registry + pool)
+//!    and the router's least-loaded pick spreads the load, so wall-
+//!    clock throughput should grow with N until the machine runs out of
+//!    cores — the replica fan-out's headline number.
 //!
 //! Run via `cargo bench --bench serving_throughput` or `plnmf bench
 //! serving`.
@@ -45,6 +51,16 @@ pub const BATCH_SIZES: [usize; 3] = [1, 32, 512];
 
 /// Docs per daemon round trip (kept modest: the payload is JSON text).
 const DAEMON_DOCS: usize = 128;
+
+/// Replica counts of the `routed_replicated` scaling rows.
+pub const REPLICA_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Docs per request in the replicated rows (smaller than
+/// [`DAEMON_DOCS`]: many concurrent requests in flight at once).
+const REPL_DOCS: usize = 32;
+
+/// Transform requests each concurrent client sends per replica count.
+const REPL_REQS_PER_CLIENT: usize = 4;
 
 pub fn run(scale: Scale, out: &Path) -> Result<()> {
     run_with(scale, out, BenchOpts::default())
@@ -117,6 +133,7 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
 
     let mut daemon_rows = daemon_roundtrip(dataset, k, &factors, &owned, threads)?;
     daemon_rows.extend(router_roundtrip(dataset, k, &factors, &owned, threads)?);
+    daemon_rows.extend(replicated_roundtrip(dataset, k, &factors, &owned, threads)?);
     let csv = out.join("serving_daemon.csv");
     write_csv(
         &csv,
@@ -266,6 +283,115 @@ fn router_roundtrip(
     Ok(rows)
 }
 
+/// S1d: replication scaling — the same model behind 1 / 2 / 4 replicas
+/// (each an in-process `Server` with its own registry and pool, the
+/// per-process shape `plnmf route` spawns), driven by 2 concurrent
+/// clients per replica. Warm caching is OFF so every request costs the
+/// same solve and the rows measure routing + parallelism, not cache
+/// luck.
+fn replicated_roundtrip(
+    dataset: &str,
+    k: usize,
+    factors: &Factors,
+    owned: &OwnedQueries,
+    threads: usize,
+) -> Result<Vec<String>> {
+    let dir = std::env::temp_dir().join(format!("plnmf-replbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    save_model(&model_path, factors, &ModelMeta::default())?;
+
+    let sub = head(owned, REPL_DOCS);
+    let docs_per_req = sub.as_queries().rows();
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("bench")),
+        ("queries", queries_to_json(sub.as_queries())),
+    ]);
+
+    println!(
+        "\nreplicated routed throughput ({docs_per_req}-doc transforms, 2 clients per \
+         replica, {REPL_REQS_PER_CLIENT} requests each, warm cache off):\n"
+    );
+    let mut rows = Vec::new();
+    for &n in &REPLICA_COUNTS {
+        // N identical workers: the machine's threads split across them,
+        // like `plnmf route` splits threads across worker processes.
+        let per_replica_threads = (threads / n).max(1);
+        let mut addrs = Vec::with_capacity(n);
+        let mut worker_handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let registry = ModelRegistry::new(RegistryOpts {
+                threads: per_replica_threads,
+                per_model_threads: per_replica_threads,
+                projector: ProjectorOpts { sweeps: 8, micro_batch: 32, ..Default::default() },
+                warm_cache: 0,
+                max_total_nnz: 0,
+            });
+            registry.load("bench", &model_path)?;
+            let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+            addrs.push(server.local_addr());
+            worker_handles.push(std::thread::spawn(move || server.run()));
+        }
+        let externals: Vec<(&str, std::net::SocketAddr)> =
+            addrs.iter().map(|&a| ("bench", a)).collect();
+        let router = Router::with_external_workers(&externals, RouterOpts::default())?;
+        let addr = router.local_addr();
+        let router_handle = std::thread::spawn(move || router.run());
+
+        let clients = 2 * n;
+        let t = Timer::start();
+        let per_client: Vec<(usize, usize, usize)> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..clients)
+                .map(|_| {
+                    let req = &req;
+                    s.spawn(move || -> Result<(usize, usize, usize)> {
+                        let mut client = Client::connect(addr)?;
+                        let (mut sweeps, mut batches, mut hits) = (0, 0, 0);
+                        for _ in 0..REPL_REQS_PER_CLIENT {
+                            let resp = client.request_ok(req)?;
+                            sweeps += resp.get("warm").get("sweeps").as_usize().unwrap_or(0);
+                            batches +=
+                                resp.get("warm").get("micro_batches").as_usize().unwrap_or(0);
+                            hits += resp.get("warm").get("hits").as_usize().unwrap_or(0);
+                        }
+                        Ok((sweeps, batches, hits))
+                    })
+                })
+                .collect();
+            joins
+                .into_iter()
+                .map(|j| j.join().expect("bench client thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let secs = t.elapsed_secs();
+        let total_docs = clients * REPL_REQS_PER_CLIENT * docs_per_req;
+        let docs_per_sec = total_docs as f64 / secs.max(1e-12);
+        let sweeps: usize = per_client.iter().map(|r| r.0).sum();
+        let batches: usize = per_client.iter().map(|r| r.1).sum();
+        let hits: usize = per_client.iter().map(|r| r.2).sum();
+        println!(
+            "routed replicated (r={n})     {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
+             {total_docs} docs over {clients} clients"
+        );
+        rows.push(format!(
+            "{dataset},{k},{total_docs},routed_replicated_r{n},{secs:.6},{docs_per_sec:.1},\
+             {sweeps},{batches},{hits}"
+        ));
+
+        // One shutdown drains the router, which then stops every
+        // replica — all worker server threads join cleanly.
+        let mut shut = Client::connect(addr)?;
+        shut.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        router_handle.join().map_err(|_| anyhow::anyhow!("router thread panicked"))??;
+        for h in worker_handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,13 +412,22 @@ mod tests {
         let lines: Vec<&str> = daemon.lines().collect();
         assert_eq!(
             lines.len(),
-            5,
-            "header + direct cold/warm + routed cold/warm: {daemon}"
+            5 + REPLICA_COUNTS.len(),
+            "header + direct cold/warm + routed cold/warm + replicated r1/r2/r4: {daemon}"
         );
         assert!(lines[1].contains(",cold,"));
         assert!(lines[2].contains(",warm,"));
         assert!(lines[3].contains(",routed_cold,"));
         assert!(lines[4].contains(",routed_warm,"));
+        for (i, n) in REPLICA_COUNTS.iter().enumerate() {
+            let line = lines[5 + i];
+            assert!(
+                line.contains(&format!(",routed_replicated_r{n},")),
+                "replica scaling row r={n} missing: {daemon}"
+            );
+            let docs_per_sec: f64 = line.split(',').nth(5).unwrap().parse().unwrap();
+            assert!(docs_per_sec > 0.0, "throughput must be measured: {line}");
+        }
         // The warm pass must not sweep more than the cold pass — on
         // both the direct and the routed path.
         let sweeps = |line: &str| -> usize {

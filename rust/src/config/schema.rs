@@ -80,7 +80,7 @@ const KNOWN_KEYS: &[&str] = &[
     "dataset", "k", "tile", "t", "engine", "max_iters", "iters", "tol", "threads", "seed",
     "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
-    "route_port", "worker_port_base", "restart_backoff_ms",
+    "route_port", "worker_port_base", "restart_backoff_ms", "route_retries", "max_inflight",
 ];
 
 /// Full description of one NMF run.
@@ -137,6 +137,16 @@ pub struct RunConfig {
     /// Router: initial delay before restarting a crashed worker, in
     /// milliseconds (doubles while restarts keep failing, bounded).
     pub restart_backoff_ms: usize,
+    /// Router: how many times an idempotent data op (`transform` /
+    /// `recommend`) may be re-sent to a *different* replica after a
+    /// failed forward, per request (0 = fail fast like non-idempotent
+    /// ops).
+    pub route_retries: usize,
+    /// Router: per-replica in-flight request ceiling. When every live
+    /// replica of a model is at the ceiling the router answers with the
+    /// `busy` backpressure error (plus a `retry_after_ms` hint) instead
+    /// of queuing unboundedly (0 = unlimited).
+    pub max_inflight: usize,
 }
 
 impl Default for RunConfig {
@@ -164,6 +174,8 @@ impl Default for RunConfig {
             route_port: 7900,
             worker_port_base: 0,
             restart_backoff_ms: 500,
+            route_retries: 1,
+            max_inflight: 32,
         }
     }
 }
@@ -260,6 +272,9 @@ impl RunConfig {
                 0 => bail!("restart_backoff_ms must be >= 1"),
                 n => self.restart_backoff_ms = n,
             },
+            // 0 is meaningful for both: no retries / no ceiling.
+            "route_retries" => self.route_retries = need_usize()?,
+            "max_inflight" => self.max_inflight = need_usize()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -298,6 +313,8 @@ impl RunConfig {
             ("route_port", Json::num(self.route_port as f64)),
             ("worker_port_base", Json::num(self.worker_port_base as f64)),
             ("restart_backoff_ms", Json::num(self.restart_backoff_ms as f64)),
+            ("route_retries", Json::num(self.route_retries as f64)),
+            ("max_inflight", Json::num(self.max_inflight as f64)),
         ];
         if let Some(m) = &self.model_path {
             pairs.push(("model_path", Json::str(m.clone())));
@@ -483,5 +500,26 @@ mod tests {
         cfg.set_str("route_port", "0").unwrap();
         cfg.set_str("worker_port_base", "0").unwrap();
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn replication_keys_roundtrip_and_validate() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.route_retries, 1, "one retry on a different replica by default");
+        assert_eq!(cfg.max_inflight, 32, "bounded in-flight by default, not unbounded queues");
+        let mut cfg = cfg;
+        cfg.set_str("route_retries", "3").unwrap();
+        cfg.set_str("max_inflight", "8").unwrap();
+        assert_eq!(cfg.route_retries, 3);
+        assert_eq!(cfg.max_inflight, 8);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.route_retries, 3);
+        assert_eq!(re.max_inflight, 8);
+        // 0 is meaningful for both (fail fast / unlimited), negative is not.
+        cfg.set_str("route_retries", "0").unwrap();
+        cfg.set_str("max_inflight", "0").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.set_str("route_retries", "-1").is_err());
+        assert!(cfg.set_str("max_inflight", "1.5").is_err());
     }
 }

@@ -35,17 +35,22 @@
 //!   Gram resident across requests (the whole point of the cached-Gram
 //!   design), plus the protocol [`Client`].
 //! * [`router`] / [`worker`] — [`Router`]: the `plnmf route` front
-//!   daemon fanning the same protocol out to one `plnmf serve` worker
-//!   **process** per model (crash detection, bounded-backoff restarts,
-//!   manifest hot-reload), with workers addressed by `host:port` so the
-//!   topology extends to other machines unchanged.
+//!   daemon fanning the same protocol out to `plnmf serve` worker
+//!   **processes** — `replicas: N` per manifest model — with
+//!   least-loaded replica routing, a per-request retry budget for
+//!   idempotent ops, `busy` backpressure when every live replica is at
+//!   its in-flight ceiling, crash detection, bounded-backoff restarts,
+//!   and manifest hot-reload; workers are addressed by `host:port` so
+//!   the topology extends to other machines unchanged.
 //!
 //! CLI front-ends: `plnmf run --model m.json` saves a model after
 //! training; `plnmf transform` / `plnmf recommend` serve it one-shot;
 //! `plnmf serve` keeps it resident; `plnmf route` shards a fleet across
-//! worker processes. Throughput: `cargo bench --bench
-//! serving_throughput` (docs/sec at micro-batch sizes 1/32/512, plus the
-//! daemon and routed round-trip and warm-start deltas).
+//! worker processes (and replicates each model across N of them).
+//! Throughput: `cargo bench --bench serving_throughput` (docs/sec at
+//! micro-batch sizes 1/32/512, the daemon and routed round-trip and
+//! warm-start deltas, plus `routed_replicated` scaling at 1/2/4
+//! replicas).
 
 pub mod model_io;
 pub mod projector;

@@ -23,11 +23,15 @@
 //!   "version": 3,
 //!   "max_total_nnz": 50000000,
 //!   "models": [
-//!     {"name": "news", "path": "models/news.json"},
+//!     {"name": "news", "path": "models/news.json", "replicas": 2},
 //!     {"name": "faces", "path": "models/faces.json"}
 //!   ]
 //! }
 //! ```
+//!
+//! `replicas` (default 1) is consumed by `plnmf route`, which runs that
+//! many worker *processes* for the model; this in-process registry
+//! ignores it (see [`ManifestModel::replicas`]).
 //!
 //! Relative model paths resolve against the manifest's directory.
 //! [`ModelRegistry::reload_manifest`] re-reads the file and applies it
@@ -60,12 +64,22 @@ use crate::{Elem, Result};
 /// Format marker of a manifest file.
 pub const MANIFEST_FORMAT: &str = "plnmf-manifest";
 
+/// Upper bound on `replicas` per manifest entry — a typo like
+/// `"replicas": 2000` must not fork-bomb the host with worker
+/// processes.
+pub const MAX_REPLICAS: usize = 64;
+
 /// One `models[]` entry of a manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ManifestModel {
     pub name: String,
     /// Absolute, or relative to the manifest file's directory.
     pub path: PathBuf,
+    /// How many worker processes `plnmf route` runs for this model
+    /// (default 1). The in-process registry ignores this — N copies of
+    /// one model inside a single heap would share everything anyway;
+    /// replication is a property of the *process* topology.
+    pub replicas: usize,
 }
 
 /// Parsed manifest: the model fleet plus the admission budget.
@@ -107,10 +121,20 @@ impl Manifest {
             if models.iter().any(|m: &ManifestModel| m.name == name) {
                 bail!("manifest lists model '{name}' twice");
             }
+            let replicas = match e.get("replicas") {
+                Json::Null => 1,
+                v => match v.as_usize() {
+                    Some(r) if (1..=MAX_REPLICAS).contains(&r) => r,
+                    _ => bail!(
+                        "models[{i}] ('{name}'): \"replicas\" must be an integer in \
+                         1..={MAX_REPLICAS}, got {v}"
+                    ),
+                },
+            };
             let path = Path::new(path);
             let path =
                 if path.is_absolute() { path.to_path_buf() } else { base_dir.join(path) };
-            models.push(ManifestModel { name: name.to_string(), path });
+            models.push(ManifestModel { name: name.to_string(), path, replicas });
         }
         Ok(Manifest { version, max_total_nnz, models })
     }
@@ -562,7 +586,21 @@ impl ModelRegistry {
 }
 
 /// Serialize a manifest (helper for tools/tests writing fleets).
+/// Every model gets the default single replica; use
+/// [`manifest_json_replicated`] to declare replica counts.
 pub fn manifest_json(version: u64, max_total_nnz: usize, models: &[(&str, &str)]) -> Json {
+    let with_replicas: Vec<(&str, &str, usize)> =
+        models.iter().map(|&(name, path)| (name, path, 1)).collect();
+    manifest_json_replicated(version, max_total_nnz, &with_replicas)
+}
+
+/// [`manifest_json`] with an explicit `(name, path, replicas)` triple
+/// per model — the replicated-fleet shape `plnmf route` consumes.
+pub fn manifest_json_replicated(
+    version: u64,
+    max_total_nnz: usize,
+    models: &[(&str, &str, usize)],
+) -> Json {
     Json::obj(vec![
         ("format", Json::str(MANIFEST_FORMAT)),
         ("version", Json::num(version as f64)),
@@ -572,8 +610,12 @@ pub fn manifest_json(version: u64, max_total_nnz: usize, models: &[(&str, &str)]
             Json::Arr(
                 models
                     .iter()
-                    .map(|(name, path)| {
-                        Json::obj(vec![("name", Json::str(*name)), ("path", Json::str(*path))])
+                    .map(|(name, path, replicas)| {
+                        Json::obj(vec![
+                            ("name", Json::str(*name)),
+                            ("path", Json::str(*path)),
+                            ("replicas", Json::num(*replicas as f64)),
+                        ])
                     })
                     .collect(),
             ),
@@ -679,6 +721,7 @@ mod tests {
         assert_eq!(m.version, 2);
         assert_eq!(m.models[0].path, Path::new("/models/a.json"));
         assert_eq!(m.models[1].path, Path::new("/abs/b.json"));
+        assert_eq!(m.models[0].replicas, 1, "replicas defaults to 1");
         for bad in [
             r#"{"format": "other", "version": 1, "models": []}"#,
             r#"{"format": "plnmf-manifest", "models": []}"#,
@@ -688,6 +731,31 @@ mod tests {
             r#"{"format": "plnmf-manifest", "version": 1, "models": [{"path": "x"}]}"#,
         ] {
             assert!(Manifest::parse(bad, base).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn manifest_replicas_parse_and_validate() {
+        let base = Path::new("/models");
+        let src = r#"{"format": "plnmf-manifest", "version": 1,
+            "models": [{"name": "a", "path": "a.json", "replicas": 3},
+                       {"name": "b", "path": "b.json"}]}"#;
+        let m = Manifest::parse(src, base).unwrap();
+        assert_eq!(m.models[0].replicas, 3);
+        assert_eq!(m.models[1].replicas, 1);
+        // Round-trip through the replicated serializer.
+        let json = manifest_json_replicated(1, 0, &[("a", "a.json", 3), ("b", "b.json", 1)]);
+        let re = Manifest::parse(&json.to_string(), base).unwrap();
+        assert_eq!(re.models[0].replicas, 3);
+        assert_eq!(re.models[1].replicas, 1);
+        // Degenerate counts are rejected loudly, not clamped.
+        for bad_replicas in ["0", "65", "-1", "1.5", "\"two\""] {
+            let bad = format!(
+                r#"{{"format": "plnmf-manifest", "version": 1,
+                    "models": [{{"name": "a", "path": "x", "replicas": {bad_replicas}}}]}}"#
+            );
+            let err = format!("{:#}", Manifest::parse(&bad, base).unwrap_err());
+            assert!(err.contains("replicas"), "replicas={bad_replicas}: {err}");
         }
     }
 

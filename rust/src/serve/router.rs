@@ -4,35 +4,46 @@
 //! model into its own serving shard (pool, queue, warm cache); this
 //! module moves that seam across a **process boundary**: a front daemon
 //! speaking the exact single-daemon NDJSON protocol fans requests out
-//! to one `plnmf serve` worker *process* per model. Each model's
-//! factors, cached Gram, and warm-start LRU then live in exactly one
-//! process's heap — resident in that process's caches instead of
-//! sharing one daemon's, the serving-scale reading of the paper's §5
-//! data-movement argument and the process-grid direction of MPI-FAUN.
+//! to `plnmf serve` worker *processes*. Each model's factors, cached
+//! Gram, and warm-start LRU then live in a worker process's heap —
+//! resident in that process's caches instead of sharing one daemon's,
+//! the serving-scale reading of the paper's §5 data-movement argument
+//! and the process-grid direction of MPI-FAUN.
 //!
 //! ## Topology
 //!
+//! A manifest model may declare `"replicas": N` (default 1): the router
+//! runs N identical worker processes for it and spreads requests across
+//! them — replicating computation across processors the way distributed
+//! NMF replicates factor blocks, so one model's throughput scales past
+//! a single process and a worker crash is absorbed instead of being an
+//! availability gap.
+//!
 //! ```text
-//!                        ┌─ worker :p1 — plnmf serve {news}
-//!  client ── route :p0 ──┼─ worker :p2 — plnmf serve {faces}
-//!        NDJSON/TCP      └─ worker :p3 — plnmf serve {wiki}
+//!                        ┌─ worker :p1 — plnmf serve {news}   ┐ news,
+//!  client ── route :p0 ──┼─ worker :p2 — plnmf serve {news}   ┘ replicas: 2
+//!        NDJSON/TCP      └─ worker :p3 — plnmf serve {faces}
 //! ```
 //!
-//! The routing table maps model name → `host:port` — never a PID — so
-//! a shard served from another host plugs in unchanged
-//! ([`Router::with_external_workers`]); process supervision is a
+//! The routing table maps model name → replicas, each addressed
+//! `host:port` — never a PID — so a shard served from another host
+//! plugs in unchanged ([`Router::with_external_workers`], where
+//! repeating a model name declares replicas); process supervision is a
 //! property of *local* shards only ([`crate::serve::worker`]).
 //!
 //! ## Protocol
 //!
-//! * `transform` / `recommend` — routed by `"model"` to that shard's
-//!   worker. The request line is forwarded and the response line
-//!   relayed **bytes-untouched**, so routed responses are bit-for-bit
-//!   identical to a single daemon's (asserted in
-//!   `tests/integration_router.rs`).
-//! * `stats` — aggregated: the merged per-model stats of every worker
-//!   plus a `workers` health map (addr / up / restarts).
-//! * `ping` — local, with per-worker `up` flags.
+//! * `transform` / `recommend` — routed by `"model"` to the
+//!   **least-loaded live replica** of that shard (fewest in-flight
+//!   requests; ties break to the lowest replica index). The request
+//!   line is forwarded and the response line relayed
+//!   **bytes-untouched**, so routed responses are bit-for-bit identical
+//!   to a single daemon's (asserted in `tests/integration_router.rs`).
+//! * `stats` — aggregated: the per-model stats of every replica merged
+//!   (counters summed, averages recomputed) plus a `workers` health map
+//!   with per-replica liveness and queue depth.
+//! * `ping` — local, with per-replica liveness per shard
+//!   (`up` = any replica live, `up_replicas`/`replicas` = k of N).
 //! * `load` (bare) — manifest re-read, as in the single daemon.
 //!   Targeted `load`/`unload` are rejected: in routed mode the fleet is
 //!   declared by the manifest, so publish a new version instead.
@@ -41,15 +52,34 @@
 //!
 //! ## Failure semantics
 //!
-//! A worker crash is detected by the supervisor heartbeat (process
-//! exit) or by a failed forward (connection drop). In-flight requests
-//! to that shard fail with `"retryable": true` — the router never
-//! blindly re-sends a request that a worker may already have processed
-//! (see [`crate::serve::server::CLOSED_MID_RESPONSE`]). The worker is
-//! restarted on a fresh port after a bounded backoff (doubling from
-//! `restart_backoff_ms` up to a cap while startup keeps failing), and
-//! the routing table is re-pointed. Manifest hot-reload applies
-//! added/removed/changed models the same way — shards whose entry is
+//! A replica crash is detected by the supervisor heartbeat (process
+//! exit) or by a failed forward (connection drop). A failed forward of
+//! an **idempotent** op (`transform`/`recommend` — pure reads of model
+//! state) is retried on a *different* replica of the same shard, at
+//! most [`RouterOpts::route_retries`] times per request; with replicas
+//! a single crash is therefore invisible to clients. When the budget is
+//! exhausted — or for any future non-idempotent op, which is never
+//! re-sent because a closed-mid-response request may already have been
+//! processed (see [`crate::serve::server::CLOSED_MID_RESPONSE`]) — the
+//! request fails with `"retryable": true`, exactly as a single-replica
+//! fleet always has. The crashed replica is restarted on a fresh port
+//! after a bounded backoff (doubling from `restart_backoff_ms` up to a
+//! cap while startup keeps failing), and its routing entry re-pointed.
+//!
+//! ## Backpressure
+//!
+//! Each replica carries an in-flight ceiling
+//! ([`RouterOpts::max_inflight`]). When **every live replica** of a
+//! model is at the ceiling, the router answers with the distinct
+//! `"busy": true` protocol error carrying a `"retry_after_ms"` hint
+//! (the `Retry-After` idiom) instead of queuing unboundedly — the
+//! client sheds or delays load, and the hint scales with the
+//! configured queue depth a retry would face (see
+//! [`retry_after_hint_ms`]). Admission is reserve-style (checked at
+//! the counter increment, not a stale snapshot), so racing requests
+//! cannot jointly overshoot the ceiling. Manifest hot-reload applies
+//! added/removed/changed models as
+//! before — shards whose entry (path, mtime, replica count) is
 //! untouched keep serving without interruption.
 
 use std::collections::BTreeMap;
@@ -76,19 +106,24 @@ use crate::Result;
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
 /// Grace given to each worker between the protocol `shutdown` and kill.
 const WORKER_SHUTDOWN_TIMEOUT: Duration = Duration::from_secs(3);
+/// Read timeout of the dedicated per-replica `stats` probe connection
+/// (see [`Replica::probe_stats`]) — bounds how long one wedged replica
+/// can delay the aggregated stats response.
+const STATS_PROBE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Router configuration (the CLI maps `route_port` /
-/// `worker_port_base` / `restart_backoff_ms` onto this).
+/// `worker_port_base` / `restart_backoff_ms` / `route_retries` /
+/// `max_inflight` onto this).
 #[derive(Debug, Clone)]
 pub struct RouterOpts {
     /// Interface the front listener binds.
     pub host: String,
     /// Front port (0 = OS-assigned; read back via [`Router::local_addr`]).
     pub route_port: u16,
-    /// First worker port; workers of the initial fleet take
-    /// `base`, `base+1`, … (0 = every worker gets an OS-assigned port).
-    /// Restarted or hot-added workers always move to a fresh
-    /// OS-assigned port — the old one may sit in `TIME_WAIT`.
+    /// First worker port; the initial fleet's replicas take
+    /// `base`, `base+1`, … in manifest order (0 = every worker gets an
+    /// OS-assigned port). Restarted or hot-added workers always move to
+    /// a fresh OS-assigned port — the old one may sit in `TIME_WAIT`.
     pub worker_port_base: u16,
     /// Initial delay before restarting a crashed worker. Doubles (up to
     /// [`RouterOpts::max_backoff`]) while restarts keep failing to
@@ -103,10 +138,19 @@ pub struct RouterOpts {
     /// How often the supervisor re-checks the fleet manifest.
     pub manifest_poll: Duration,
     /// Read timeout on pooled worker connections. Bounds how long one
-    /// forwarded request can hold a shard's queue: a worker that is
-    /// alive but wedged would otherwise pin the shard mutex forever,
-    /// freezing supervision of the whole fleet and router shutdown.
+    /// forwarded request can hold a replica's queue: a worker that is
+    /// alive but wedged would otherwise pin the replica mutex forever,
+    /// freezing router shutdown.
     pub forward_timeout: Duration,
+    /// Retry budget for idempotent data ops: after a failed forward the
+    /// request is re-sent to a *different* replica of the same shard,
+    /// at most this many times (0 = fail fast like non-idempotent ops).
+    pub route_retries: usize,
+    /// Per-replica in-flight ceiling. When every live replica of a
+    /// model is at the ceiling the router returns the `busy`
+    /// backpressure error instead of queuing unboundedly (0 = no
+    /// ceiling).
+    pub max_inflight: usize,
 }
 
 impl Default for RouterOpts {
@@ -121,14 +165,108 @@ impl Default for RouterOpts {
             ready_timeout: Duration::from_secs(10),
             manifest_poll: Duration::from_secs(2),
             forward_timeout: Duration::from_secs(60),
+            route_retries: 1,
+            max_inflight: 32,
         }
     }
 }
 
-struct ShardState {
+// ---------------------------------------------------------------------------
+// Routing decisions (pure — unit-tested without sockets).
+// ---------------------------------------------------------------------------
+
+/// A snapshot of one replica's routing-relevant state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ReplicaLoad {
+    up: bool,
+    in_flight: usize,
+}
+
+/// What to do next with a data op on one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RoutePlan {
+    /// Forward to this replica index (least-loaded live replica not yet
+    /// tried this request; ties break to the lowest index).
+    Try(usize),
+    /// Every live replica is at the in-flight ceiling — shed load.
+    Busy { retry_after_ms: u64 },
+    /// Nothing left to try: every replica is down, or every live one
+    /// already failed this request.
+    Exhausted,
+}
+
+/// Pick the next replica for one attempt of one request.
+///
+/// The candidate set is the live replicas not yet tried by this
+/// request. Precedence: no live replica at all ⇒ `Exhausted`; no
+/// candidate left ⇒ `Exhausted`; every candidate at the ceiling ⇒
+/// `Busy` (backpressure beats queuing — and beats deterministically
+/// losing admission to a saturated last candidate); otherwise the
+/// least-loaded candidate, ties to the lowest index. The ceiling is
+/// evaluated over candidates, not single replicas — one saturated
+/// replica is fine as long as a less loaded sibling exists, and the
+/// least-loaded pick already prefers that sibling.
+fn plan_route(loads: &[ReplicaLoad], tried: &[usize], max_inflight: usize) -> RoutePlan {
+    if loads.iter().all(|l| !l.up) {
+        return RoutePlan::Exhausted;
+    }
+    let candidates: Vec<(usize, &ReplicaLoad)> = loads
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| l.up && !tried.contains(i))
+        .collect();
+    if candidates.is_empty() {
+        return RoutePlan::Exhausted;
+    }
+    if max_inflight > 0 && candidates.iter().all(|(_, l)| l.in_flight >= max_inflight) {
+        return RoutePlan::Busy { retry_after_ms: retry_after_hint_ms(max_inflight) };
+    }
+    let (i, _) = candidates
+        .iter()
+        .min_by_key(|(i, l)| (l.in_flight, *i))
+        .expect("candidates is non-empty");
+    RoutePlan::Try(*i)
+}
+
+/// `Retry-After`-style hint for the `busy` error. The reserve-style
+/// [`Shard::admit`] means in-flight counts never exceed the ceiling, so
+/// "queue excess" is not observable; the honest proxy for how long a
+/// shed request would otherwise wait is the configured per-replica
+/// queue depth itself — a deeper ceiling means more work ahead of any
+/// retry. Bounded to [25, 1000] ms so a client backoff loop neither
+/// spins nor stalls.
+fn retry_after_hint_ms(ceiling: usize) -> u64 {
+    (5u64.saturating_mul(ceiling as u64)).clamp(25, 1000)
+}
+
+/// Whether re-sending `op` to another replica after a failed (or
+/// ambiguous, closed-mid-response) forward is safe. `transform` and
+/// `recommend` are pure reads of model state — the warm-cache fill is
+/// an internal optimization, not client-visible state — so a duplicate
+/// execution is harmless. Any future mutating op must be left off this
+/// list: it falls through to the fail-fast path.
+fn op_is_idempotent(op: &str) -> bool {
+    matches!(op, "transform" | "recommend")
+}
+
+/// Why a routed request could not be answered.
+enum RouteFailure {
+    /// Every live replica is at the in-flight ceiling — backpressure,
+    /// not an outage; the client should retry after the hint.
+    Busy { retry_after_ms: u64 },
+    /// The forward(s) failed (replica down, dial error, severed
+    /// connection) — surfaced as `"retryable": true`, as always.
+    Down(anyhow::Error),
+}
+
+// ---------------------------------------------------------------------------
+// Replicas and shards.
+// ---------------------------------------------------------------------------
+
+struct ReplicaState {
     addr: SocketAddr,
     /// The supervised local process (None while down, and always for
-    /// external shards).
+    /// external replicas).
     worker: Option<ManagedWorker>,
     /// Pooled protocol connection; dropped on any forward failure and
     /// re-dialed (against the *current* addr) on the next request.
@@ -140,79 +278,107 @@ struct ShardState {
     loaded_mtime: Option<SystemTime>,
 }
 
-/// One routed model: a name, a worker address, and (for local shards)
-/// the supervised process behind it.
-pub struct Shard {
-    name: String,
-    /// `Some` ⇒ locally supervised (spawn/restart applies); `None` ⇒
-    /// external worker the router only forwards to.
-    model_path: Option<PathBuf>,
+/// One worker process (or external endpoint) serving one copy of a
+/// shard's model.
+struct Replica {
+    /// Position within the shard (0-based): keys worker-manifest files,
+    /// logs, and the least-loaded tie-break.
+    idx: usize,
     /// Read-timeout stamped onto pooled connections (see
     /// [`RouterOpts::forward_timeout`]).
     forward_timeout: Duration,
-    state: Mutex<ShardState>,
+    state: Mutex<ReplicaState>,
+    /// Requests currently assigned to this replica — waiting in its
+    /// queue or being solved. The least-loaded pick and the busy
+    /// ceiling both read this.
+    in_flight: AtomicUsize,
     restarts: AtomicU64,
-    /// Set by [`shutdown_shard`] before the worker is taken: a shard
-    /// can be removed (manifest reload on a handler thread) while the
-    /// supervisor holds a stale snapshot, and a retired shard must
-    /// never be restarted — that would leak a worker process.
-    retired: AtomicBool,
 }
 
-impl Shard {
-    fn external(name: &str, addr: SocketAddr, opts: &RouterOpts) -> Shard {
-        let backoff = opts.restart_backoff;
-        Shard {
-            name: name.to_string(),
-            model_path: None,
+impl Replica {
+    /// `worker` is the supervised child process (None for external
+    /// endpoints); `loaded_mtime` the mtime of the model file it
+    /// loaded. The one constructor keeps supervised and external
+    /// replicas field-for-field identical.
+    fn new(
+        idx: usize,
+        addr: SocketAddr,
+        worker: Option<ManagedWorker>,
+        loaded_mtime: Option<SystemTime>,
+        opts: &RouterOpts,
+    ) -> Replica {
+        Replica {
+            idx,
             forward_timeout: opts.forward_timeout,
-            state: Mutex::new(ShardState {
+            state: Mutex::new(ReplicaState {
                 addr,
-                worker: None,
+                worker,
                 conn: None,
                 up: true,
                 next_restart_at: None,
-                backoff,
-                loaded_mtime: None,
+                backoff: opts.restart_backoff,
+                loaded_mtime,
             }),
+            in_flight: AtomicUsize::new(0),
             restarts: AtomicU64::new(0),
-            retired: AtomicBool::new(false),
         }
     }
 
-    pub fn name(&self) -> &str {
-        &self.name
+    fn external(idx: usize, addr: SocketAddr, opts: &RouterOpts) -> Replica {
+        Replica::new(idx, addr, None, None, opts)
     }
 
-    pub fn addr(&self) -> SocketAddr {
+    fn addr(&self) -> SocketAddr {
         self.state.lock().unwrap().addr
     }
 
-    pub fn is_up(&self) -> bool {
+    fn is_up(&self) -> bool {
         self.state.lock().unwrap().up
     }
 
-    pub fn restarts(&self) -> u64 {
-        self.restarts.load(Ordering::SeqCst)
+    /// Fetch this replica's `stats` over a FRESH fully-bounded
+    /// connection instead of the pooled one: the pooled connection's
+    /// mutex queues behind data solves, and stats is the degradation
+    /// observability surface — stalling it behind a saturated queue
+    /// (each entry bounded only by `forward_timeout`) would blind
+    /// operators exactly when they need to look. Both the dial and the
+    /// read are capped by `timeout` (an unreachable external replica —
+    /// whose `up` flag never flips — must not pin the probe for the OS
+    /// connect timeout). The worker serves each connection on its own
+    /// thread, so the probe waits behind at most the one solve
+    /// executing right now.
+    fn probe_stats(&self, timeout: Duration) -> Result<Json> {
+        let (up, addr) = {
+            let st = self.state.lock().unwrap();
+            (st.up, st.addr)
+        };
+        if !up {
+            bail!("replica {} is down (restart pending)", self.idx);
+        }
+        let client = Client::connect_timeout(&addr, timeout)
+            .with_context(|| format!("dialing worker {addr}"))?;
+        let _ = client.set_read_timeout(Some(timeout));
+        let mut client = client;
+        client.request(&Json::obj(vec![("op", Json::str("stats"))]))
     }
 
-    /// Forward one raw request line to this shard's worker and return
+    /// Forward one raw request line to this replica's worker and return
     /// the raw response line. Any failure here is *retryable from the
-    /// caller's side* (the router reports it as such): the request was
-    /// not answered, though a closed-mid-response one may have been
-    /// processed. Holding the shard lock across the round trip gives
-    /// the same per-model request queue the in-process registry has.
+    /// caller's side*: the request was not answered, though a
+    /// closed-mid-response one may have been processed. Holding the
+    /// replica lock across the round trip gives each replica the same
+    /// per-model request queue the in-process registry has — concurrent
+    /// requests for one shard spread across replicas instead.
     fn forward_raw(&self, line: &str) -> Result<String> {
         let mut st = self.state.lock().unwrap();
         if !st.up {
-            bail!("worker is down (restart pending)");
+            bail!("replica {} is down (restart pending)", self.idx);
         }
         if st.conn.is_none() {
             match Client::connect(st.addr) {
                 Ok(c) => {
                     // Bounded reads: one wedged worker must not pin
-                    // this shard's queue (and with it, fleet-wide
-                    // supervision) forever.
+                    // this replica's queue forever.
                     let _ = c.set_read_timeout(Some(self.forward_timeout));
                     st.conn = Some(c);
                 }
@@ -223,7 +389,7 @@ impl Shard {
                     // pressure, backlog). Don't latch `up = false`
                     // here — only process-lifecycle events may, or a
                     // transient dial error against a live worker would
-                    // down the shard with no recovery path.
+                    // down the replica with no recovery path.
                     return Err(e).with_context(|| format!("dialing worker {}", st.addr));
                 }
             }
@@ -233,6 +399,154 @@ impl Shard {
             Err(e) => {
                 st.conn = None;
                 Err(e).with_context(|| format!("forwarding to worker {}", st.addr))
+            }
+        }
+    }
+}
+
+/// One routed model: a name and N replicas (for local shards, each a
+/// supervised worker process).
+pub struct Shard {
+    name: String,
+    /// `Some` ⇒ locally supervised (spawn/restart applies); `None` ⇒
+    /// external workers the router only forwards to.
+    model_path: Option<PathBuf>,
+    replicas: Vec<Arc<Replica>>,
+    route_retries: usize,
+    max_inflight: usize,
+    /// Set by [`shutdown_shard`] before the workers are taken: a shard
+    /// can be removed (manifest reload on a handler thread) while the
+    /// supervisor holds a stale snapshot, and a retired shard's
+    /// replicas must never be restarted — that would leak worker
+    /// processes.
+    retired: AtomicBool,
+}
+
+impl Shard {
+    fn external(name: &str, addrs: &[SocketAddr], opts: &RouterOpts) -> Shard {
+        Shard {
+            name: name.to_string(),
+            model_path: None,
+            replicas: addrs
+                .iter()
+                .enumerate()
+                .map(|(idx, &addr)| Arc::new(Replica::external(idx, addr, opts)))
+                .collect(),
+            route_retries: opts.route_retries,
+            max_inflight: opts.max_inflight,
+            retired: AtomicBool::new(false),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// (live replicas, total replicas).
+    fn liveness(&self) -> (usize, usize) {
+        (self.replicas.iter().filter(|r| r.is_up()).count(), self.replicas.len())
+    }
+
+    fn restarts_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.restarts.load(Ordering::SeqCst)).sum()
+    }
+
+    fn in_flight_total(&self) -> usize {
+        self.replicas.iter().map(|r| r.in_flight.load(Ordering::SeqCst)).sum()
+    }
+
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaLoad { up: r.is_up(), in_flight: r.in_flight.load(Ordering::SeqCst) })
+            .collect()
+    }
+
+    /// Reserve one in-flight slot on replica `idx`, enforcing the
+    /// ceiling *under concurrent admission*: the plan's load snapshot
+    /// may be stale, so the check happens at the increment (CAS loop),
+    /// never before it — K racing requests cannot jointly overshoot
+    /// the ceiling the way a snapshot-then-add would allow.
+    fn admit(&self, idx: usize) -> bool {
+        let counter = &self.replicas[idx].in_flight;
+        if self.max_inflight == 0 {
+            counter.fetch_add(1, Ordering::SeqCst);
+            return true;
+        }
+        let mut cur = counter.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.max_inflight {
+                return false;
+            }
+            match counter.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Route one raw request line: least-loaded pick, retry budget,
+    /// busy ceiling.
+    fn route(&self, line: &str, idempotent: bool) -> std::result::Result<String, RouteFailure> {
+        self.route_with(idempotent, |idx| self.replicas[idx].forward_raw(line))
+    }
+
+    /// [`Self::route`] with the forward injected — the retry-budget and
+    /// least-loaded accounting, testable without sockets. One request
+    /// makes at most `1 + route_retries` attempts (idempotent ops) or
+    /// exactly 1 (everything else), never re-visiting a replica that
+    /// already failed it. The in-flight slot is reserved via
+    /// [`Self::admit`] before each forward and released after it.
+    fn route_with(
+        &self,
+        idempotent: bool,
+        mut forward: impl FnMut(usize) -> Result<String>,
+    ) -> std::result::Result<String, RouteFailure> {
+        let budget = if idempotent { self.route_retries } else { 0 };
+        let mut tried: Vec<usize> = Vec::new();
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut admission_races = 0usize;
+        loop {
+            match plan_route(&self.loads(), &tried, self.max_inflight) {
+                RoutePlan::Busy { retry_after_ms } => {
+                    return Err(RouteFailure::Busy { retry_after_ms })
+                }
+                RoutePlan::Exhausted => {
+                    let err = last_err.unwrap_or_else(|| {
+                        anyhow!("all {} replica(s) down (restart pending)", self.replicas.len())
+                    });
+                    return Err(RouteFailure::Down(err));
+                }
+                RoutePlan::Try(idx) => {
+                    if !self.admit(idx) {
+                        // Lost an admission race: the snapshot was stale
+                        // and the replica filled to its ceiling first.
+                        // Nothing was forwarded (budget untouched), so
+                        // re-plan off fresh counters — saturation
+                        // everywhere converges to Busy above; the bound
+                        // below keeps a pathological churn of
+                        // completions from spinning here forever.
+                        admission_races += 1;
+                        if admission_races > 2 * self.replicas.len() {
+                            return Err(RouteFailure::Busy {
+                                retry_after_ms: retry_after_hint_ms(self.max_inflight),
+                            });
+                        }
+                        continue;
+                    }
+                    let res = forward(idx);
+                    self.replicas[idx].in_flight.fetch_sub(1, Ordering::SeqCst);
+                    match res {
+                        Ok(resp) => return Ok(resp),
+                        Err(e) => {
+                            if tried.len() >= budget {
+                                return Err(RouteFailure::Down(e));
+                            }
+                            tried.push(idx);
+                            last_err = Some(e);
+                        }
+                    }
+                }
             }
         }
     }
@@ -266,9 +580,10 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn one supervised worker per model of the fleet manifest and
-    /// bind the front listener. Fails if any worker cannot become
-    /// ready (startup is all-or-nothing; crash *recovery* is not).
+    /// Spawn the supervised workers of the fleet manifest (`replicas`
+    /// per model) and bind the front listener. Fails if any worker
+    /// cannot become ready (startup is all-or-nothing; crash *recovery*
+    /// is not).
     pub fn from_manifest(
         manifest_path: &Path,
         worker_opts: WorkerOpts,
@@ -293,15 +608,22 @@ impl Router {
         }
         let mut shards = BTreeMap::new();
         let mut cleanup: Vec<Arc<Shard>> = Vec::new();
-        for (i, m) in manifest.models.iter().enumerate() {
-            let port = if opts.worker_port_base > 0 {
-                opts.worker_port_base
-                    .checked_add(i as u16)
-                    .ok_or_else(|| anyhow!("worker_port_base + {i} overflows a TCP port"))?
-            } else {
-                probe_free_port(&worker_opts.host)?
-            };
-            match start_shard(&worker_opts, &opts, &m.name, &m.path, port) {
+        let mut port_index: u16 = 0;
+        for m in &manifest.models {
+            let mut ports = Vec::with_capacity(m.replicas);
+            for _ in 0..m.replicas {
+                let port = if opts.worker_port_base > 0 {
+                    let p = opts.worker_port_base.checked_add(port_index).ok_or_else(|| {
+                        anyhow!("worker_port_base + {port_index} overflows a TCP port")
+                    })?;
+                    port_index += 1;
+                    p
+                } else {
+                    probe_free_port(&worker_opts.host)?
+                };
+                ports.push(port);
+            }
+            match start_shard(&worker_opts, &opts, &m.name, &m.path, &ports) {
                 Ok(shard) => {
                     let shard = Arc::new(shard);
                     cleanup.push(Arc::clone(&shard));
@@ -333,8 +655,10 @@ impl Router {
     /// Route to already-running workers addressed by `host:port` — the
     /// multi-host shape (and what the bench/example use: the protocol
     /// does not care whether a worker lives in a child process, another
-    /// thread, or another machine). No supervision: a dead external
-    /// worker yields retryable errors until it comes back.
+    /// thread, or another machine). Repeating a model name declares
+    /// replicas of that model, in list order. No supervision: a dead
+    /// external worker yields retryable errors (absorbed by the retry
+    /// budget while a live sibling exists) until it comes back.
     pub fn with_external_workers(
         workers: &[(&str, SocketAddr)],
         opts: RouterOpts,
@@ -342,15 +666,28 @@ impl Router {
         if workers.is_empty() {
             bail!("router needs at least one worker");
         }
-        let mut shards = BTreeMap::new();
+        let mut grouped: BTreeMap<String, Vec<SocketAddr>> = BTreeMap::new();
         for &(name, addr) in workers {
-            if shards
-                .insert(name.to_string(), Arc::new(Shard::external(name, addr, &opts)))
-                .is_some()
-            {
-                bail!("worker '{name}' listed twice");
+            let group = grouped.entry(name.to_string()).or_default();
+            if group.contains(&addr) {
+                // Two "replicas" on one endpoint are one worker: ping
+                // would claim redundancy that does not exist, and the
+                // retry budget would re-send to the very process that
+                // may already hold the request.
+                bail!(
+                    "worker '{name}' lists address {addr} twice — replicas must be \
+                     distinct endpoints"
+                );
             }
+            group.push(addr);
         }
+        let shards = grouped
+            .into_iter()
+            .map(|(name, addrs)| {
+                let shard = Arc::new(Shard::external(&name, &addrs, &opts));
+                (name, shard)
+            })
+            .collect();
         Self::bind(shards, None, None, opts)
     }
 
@@ -389,6 +726,11 @@ impl Router {
     /// Routed model names (sorted).
     pub fn names(&self) -> Vec<String> {
         self.ctl.shards.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Total worker endpoints across the fleet (replicas included).
+    pub fn worker_count(&self) -> usize {
+        self.ctl.shards.read().unwrap().values().map(|s| s.replicas.len()).sum()
     }
 
     /// Accept loop + supervisor: blocks until a client sends
@@ -438,45 +780,56 @@ impl Router {
 // Shard lifecycle (supervised mode).
 // ---------------------------------------------------------------------------
 
-/// Spawn + readiness-gate one worker; the returned shard is up.
+/// Spawn + readiness-gate one worker per port; the returned shard has
+/// every replica up. Partial startup failure stops the replicas already
+/// started before surfacing the error.
 fn start_shard(
     worker_opts: &WorkerOpts,
     opts: &RouterOpts,
     name: &str,
     model_path: &Path,
-    port: u16,
+    ports: &[u16],
 ) -> Result<Shard> {
-    let worker = start_worker_checked(worker_opts, opts.ready_timeout, name, model_path, port)?;
-    let addr = worker.addr();
-    let loaded_mtime = std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
-    crate::info!("route: shard '{name}' up on {addr}");
+    let mut replicas: Vec<Arc<Replica>> = Vec::with_capacity(ports.len());
+    for (idx, &port) in ports.iter().enumerate() {
+        match start_worker_checked(worker_opts, opts.ready_timeout, name, idx, model_path, port) {
+            Ok(worker) => {
+                let addr = worker.addr();
+                let loaded_mtime =
+                    std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
+                crate::info!("route: shard '{name}' replica {idx} up on {addr}");
+                replicas.push(Arc::new(Replica::new(
+                    idx,
+                    addr,
+                    Some(worker),
+                    loaded_mtime,
+                    opts,
+                )));
+            }
+            Err(e) => {
+                for r in &replicas {
+                    shutdown_replica(r);
+                }
+                return Err(e)
+                    .with_context(|| format!("starting replica {idx} of shard '{name}'"));
+            }
+        }
+    }
     Ok(Shard {
         name: name.to_string(),
         model_path: Some(model_path.to_path_buf()),
-        forward_timeout: opts.forward_timeout,
-        state: Mutex::new(ShardState {
-            addr,
-            worker: Some(worker),
-            conn: None,
-            up: true,
-            next_restart_at: None,
-            backoff: opts.restart_backoff,
-            loaded_mtime,
-        }),
-        restarts: AtomicU64::new(0),
+        replicas,
+        route_retries: opts.route_retries,
+        max_inflight: opts.max_inflight,
         retired: AtomicBool::new(false),
     })
 }
 
-/// Graceful-then-forced stop of one shard's worker (local or external).
-fn shutdown_shard(shard: &Shard) {
-    // Retire BEFORE taking the worker: the supervisor re-checks this
-    // flag under the state lock before installing a restarted worker,
-    // so the two orders both end with the worker stopped (see
-    // `supervise`).
-    shard.retired.store(true, Ordering::SeqCst);
+/// Graceful-then-forced stop of one replica's worker (local or
+/// external).
+fn shutdown_replica(replica: &Replica) {
     let (worker, addr) = {
-        let mut st = shard.state.lock().unwrap();
+        let mut st = replica.state.lock().unwrap();
         st.up = false;
         st.conn = None;
         (st.worker.take(), st.addr)
@@ -494,6 +847,17 @@ fn shutdown_shard(shard: &Shard) {
                 let _ = read_frame(&mut r, MAX_LINE_BYTES);
             }
         }
+    }
+}
+
+/// Retire a shard and stop every replica. Retiring BEFORE taking the
+/// workers means the supervisor (which re-checks the flag under each
+/// replica's state lock before installing a restart) and this path both
+/// end with the workers stopped, whichever order they run in.
+fn shutdown_shard(shard: &Shard) {
+    shard.retired.store(true, Ordering::SeqCst);
+    for replica in &shard.replicas {
+        shutdown_replica(replica);
     }
 }
 
@@ -520,17 +884,19 @@ fn supervisor_loop(ctl: &Control) {
         }
         let shards: Vec<Arc<Shard>> = ctl.shards.read().unwrap().values().cloned().collect();
         for shard in shards {
-            if ctl.shared.stop.load(Ordering::SeqCst) {
-                return;
+            for replica in &shard.replicas {
+                if ctl.shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                supervise_replica(ctl, &shard, replica);
             }
-            supervise(ctl, &shard);
         }
     }
 }
 
-/// One heartbeat step for one shard: detect a dead local worker, and
+/// One heartbeat step for one replica: detect a dead local worker, and
 /// restart it once its backoff window has passed.
-fn supervise(ctl: &Control, shard: &Shard) {
+fn supervise_replica(ctl: &Control, shard: &Shard, replica: &Replica) {
     let Some(model_path) = shard.model_path.as_ref() else {
         return; // external: nothing to supervise
     };
@@ -540,12 +906,13 @@ fn supervise(ctl: &Control, shard: &Shard) {
     // Phase 1 (under the lock): notice an exited process and schedule
     // its restart.
     let restart_due = {
-        let mut st = shard.state.lock().unwrap();
+        let mut st = replica.state.lock().unwrap();
         if let Some(w) = st.worker.as_mut() {
             if let Some(status) = w.poll_exit() {
                 crate::warn_!(
-                    "route: worker '{}' on {} died ({status}); restart in {:?}",
+                    "route: worker '{}' replica {} on {} died ({status}); restart in {:?}",
                     shard.name,
+                    replica.idx,
                     st.addr,
                     st.backoff
                 );
@@ -562,9 +929,10 @@ fn supervise(ctl: &Control, shard: &Shard) {
         return;
     }
     // Phase 2 (lock released): spawn + readiness-gate the replacement.
-    // Requests meanwhile fail fast with a retryable error instead of
-    // queueing behind a held lock. Only this supervisor thread mutates
-    // worker lifecycle, so dropping the lock is race-free.
+    // Requests meanwhile fail fast (and fail over to sibling replicas)
+    // instead of queueing behind a held lock. Only this supervisor
+    // thread mutates worker lifecycle, so dropping the lock is
+    // race-free.
     let port = match probe_free_port(&ctl.opts.host) {
         Ok(p) => p,
         Err(e) => {
@@ -573,10 +941,16 @@ fn supervise(ctl: &Control, shard: &Shard) {
         }
     };
     let worker_opts = ctl.worker_opts.as_ref().expect("supervised shard without worker opts");
-    match start_worker_checked(worker_opts, ctl.opts.ready_timeout, &shard.name, model_path, port)
-    {
+    match start_worker_checked(
+        worker_opts,
+        ctl.opts.ready_timeout,
+        &shard.name,
+        replica.idx,
+        model_path,
+        port,
+    ) {
         Ok(worker) => {
-            let mut st = shard.state.lock().unwrap();
+            let mut st = replica.state.lock().unwrap();
             if shard.retired.load(Ordering::SeqCst) {
                 // Retired while we were spawning: stop the replacement
                 // instead of installing it.
@@ -592,20 +966,22 @@ fn supervise(ctl: &Control, shard: &Shard) {
             st.backoff = ctl.opts.restart_backoff; // became ready: reset
             st.loaded_mtime =
                 std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
-            let n = shard.restarts.fetch_add(1, Ordering::SeqCst) + 1;
+            let n = replica.restarts.fetch_add(1, Ordering::SeqCst) + 1;
             crate::info!(
-                "route: worker '{}' restarted on {} (restart #{n})",
+                "route: worker '{}' replica {} restarted on {} (restart #{n})",
                 shard.name,
+                replica.idx,
                 st.addr
             );
         }
         Err(e) => {
-            let mut st = shard.state.lock().unwrap();
+            let mut st = replica.state.lock().unwrap();
             st.backoff = (st.backoff * 2).min(ctl.opts.max_backoff);
             st.next_restart_at = Some(Instant::now() + st.backoff);
             crate::warn_!(
-                "route: restart of '{}' failed ({e:#}); next attempt in {:?}",
+                "route: restart of '{}' replica {} failed ({e:#}); next attempt in {:?}",
                 shard.name,
+                replica.idx,
                 st.backoff
             );
         }
@@ -617,10 +993,11 @@ fn start_worker_checked(
     worker_opts: &WorkerOpts,
     ready_timeout: Duration,
     name: &str,
+    replica: usize,
     model_path: &Path,
     port: u16,
 ) -> Result<ManagedWorker> {
-    let mut worker = spawn_worker(worker_opts, name, model_path, port)?;
+    let mut worker = spawn_worker(worker_opts, name, replica, model_path, port)?;
     match wait_ready(&mut worker, ready_timeout) {
         Ok(()) => Ok(worker),
         Err(e) => {
@@ -632,9 +1009,9 @@ fn start_worker_checked(
 
 /// Re-read the fleet manifest and apply it if its version increased:
 /// start workers for new models, stop workers for de-listed ones, and
-/// swap (new worker first, then old one drained) models whose file
-/// changed. Untouched shards — and their in-flight requests — are
-/// never interrupted.
+/// swap (new workers first, then old ones drained) models whose file,
+/// path, or replica count changed. Untouched shards — and their
+/// in-flight requests — are never interrupted.
 fn reload_manifest(ctl: &Control) -> Result<bool> {
     let (Some(path), Some(worker_opts)) = (&ctl.manifest_path, &ctl.worker_opts) else {
         return Ok(false);
@@ -672,23 +1049,28 @@ fn reload_manifest(ctl: &Control) -> Result<bool> {
         let needs_start = match &existing {
             None => true,
             Some(s) => {
-                let st = s.state.lock().unwrap();
                 let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
                 s.model_path.as_deref() != Some(m.path.as_path())
-                    || (mtime.is_some() && mtime != st.loaded_mtime)
+                    || s.replicas.len() != m.replicas
+                    || (mtime.is_some()
+                        && s.replicas
+                            .iter()
+                            .any(|r| r.state.lock().unwrap().loaded_mtime != mtime))
             }
         };
         if !needs_start {
             continue;
         }
-        let started = probe_free_port(&worker_opts.host)
-            .and_then(|port| start_shard(worker_opts, &ctl.opts, &m.name, &m.path, port));
+        let started = (0..m.replicas)
+            .map(|_| probe_free_port(&worker_opts.host))
+            .collect::<Result<Vec<u16>>>()
+            .and_then(|ports| start_shard(worker_opts, &ctl.opts, &m.name, &m.path, &ports));
         match started {
             Ok(shard) => {
                 let old = ctl.shards.write().unwrap().insert(m.name.clone(), Arc::new(shard));
                 if let Some(old) = old {
                     // Swapped: the replacement serves before the old
-                    // worker drains, so the shard never goes dark.
+                    // workers drain, so the shard never goes dark.
                     shutdown_shard(&old);
                 }
             }
@@ -725,7 +1107,7 @@ fn dispatch(line: &str, ctl: &Control) -> (String, bool) {
     };
     let op = req.get("op").as_str().unwrap_or("");
     match op {
-        "transform" | "recommend" => (route_to_shard(line, &req, ctl), false),
+        "transform" | "recommend" => (route_to_shard(line, &req, op, ctl), false),
         "ping" => (op_ping(ctl).to_string(), false),
         "stats" => (op_stats(ctl).to_string(), false),
         "load" => (op_load(&req, ctl).to_string(), false),
@@ -753,12 +1135,14 @@ fn dispatch(line: &str, ctl: &Control) -> (String, bool) {
     }
 }
 
-/// Route a data op to its model's worker, relaying raw bytes. Failures
-/// come back as `"retryable": true` errors: the worker may be mid-
-/// restart, and the *caller* decides whether to re-send (the router
-/// does not, because a closed-mid-response request may have been
-/// processed).
-fn route_to_shard(line: &str, req: &Json, ctl: &Control) -> String {
+/// Route a data op to the least-loaded live replica of its model's
+/// shard, relaying raw bytes. Failures come back as `"retryable": true`
+/// errors once the retry budget is spent; backpressure comes back as
+/// the distinct `"busy": true` error with a `retry_after_ms` hint. The
+/// *caller* decides whether to re-send after that (the router already
+/// used its budget, and never re-sends a non-idempotent request a
+/// worker may have processed).
+fn route_to_shard(line: &str, req: &Json, op: &str, ctl: &Control) -> String {
     let Some(name) = req.get("model").as_str() else {
         return err_json("request needs \"model\"".to_string()).to_string();
     };
@@ -767,9 +1151,26 @@ fn route_to_shard(line: &str, req: &Json, ctl: &Control) -> String {
         let names = ctl.shards.read().unwrap().keys().cloned().collect::<Vec<_>>().join(", ");
         return err_json(format!("no model '{name}' routed (have: {names})")).to_string();
     };
-    match shard.forward_raw(line) {
+    match shard.route(line, op_is_idempotent(op)) {
         Ok(raw) => raw,
-        Err(e) => Json::obj(vec![
+        Err(RouteFailure::Busy { retry_after_ms }) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::str(format!(
+                    "shard '{name}': busy — all {} live replica(s) at the in-flight \
+                     ceiling ({})",
+                    shard.liveness().0,
+                    shard.max_inflight
+                )),
+            ),
+            ("busy", Json::Bool(true)),
+            ("retryable", Json::Bool(true)),
+            ("retry_after_ms", Json::num(retry_after_ms as f64)),
+            ("model", Json::str(name)),
+        ])
+        .to_string(),
+        Err(RouteFailure::Down(e)) => Json::obj(vec![
             ("ok", Json::Bool(false)),
             ("error", Json::str(format!("shard '{name}': {e:#}"))),
             ("retryable", Json::Bool(true)),
@@ -785,7 +1186,15 @@ fn op_ping(ctl: &Control) -> Json {
         shards
             .iter()
             .map(|(name, s)| {
-                (name.clone(), Json::obj(vec![("up", Json::Bool(s.is_up()))]))
+                let (up, total) = s.liveness();
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("up", Json::Bool(up > 0)),
+                        ("up_replicas", Json::num(up as f64)),
+                        ("replicas", Json::num(total as f64)),
+                    ]),
+                )
             })
             .collect(),
     );
@@ -816,35 +1225,147 @@ fn op_load(req: &Json, ctl: &Control) -> Json {
     }
 }
 
+/// Counter keys summed when merging per-replica (and per-shard) model
+/// stats; every other field keeps the first replica's value, and
+/// `avg_sweeps` is recomputed from the merged sums.
+const SUMMED_STATS: &[&str] = &[
+    "requests",
+    "docs",
+    "micro_batches",
+    "sweeps",
+    "warm_hits",
+    "warm_misses",
+    "warm_cache_entries",
+    "hits",
+    "misses",
+];
+
+/// Merge one replica's model-stats object into the aggregate: counters
+/// in [`SUMMED_STATS`] add, nested objects (the cold/warm/mixed
+/// buckets) merge recursively, and structural fields (v/k/tile/threads/
+/// nnz — identical across replicas of one model) keep their first
+/// value.
+fn merge_model_stats(into: &mut Json, from: &Json) {
+    let Json::Obj(b) = from else { return };
+    let Json::Obj(a) = into else { return };
+    for (k, v) in b {
+        if !a.contains_key(k.as_str()) {
+            a.insert(k.clone(), v.clone());
+            continue;
+        }
+        match (a.get_mut(k).unwrap(), v) {
+            (Json::Num(x), Json::Num(y)) if SUMMED_STATS.contains(&k.as_str()) => {
+                *x += *y;
+            }
+            (cur @ Json::Obj(_), Json::Obj(_)) => merge_model_stats(cur, v),
+            _ => {}
+        }
+    }
+    let sweeps = a.get("sweeps").and_then(|j| j.as_f64());
+    let batches = a.get("micro_batches").and_then(|j| j.as_f64());
+    if let (Some(s), Some(m)) = (sweeps, batches) {
+        if a.contains_key("avg_sweeps") {
+            let avg = if m == 0.0 { 0.0 } else { s / m };
+            a.insert("avg_sweeps".to_string(), Json::Num(avg));
+        }
+    }
+}
+
 /// Aggregate `stats` across the fleet: merged per-model stats (the
-/// single-daemon shape, so existing consumers keep working) plus a
-/// `workers` health map.
+/// single-daemon shape, so existing consumers keep working — counters
+/// summed across replicas) plus a `workers` health map with per-replica
+/// liveness, restarts, and queue depth.
 fn op_stats(ctl: &Control) -> Json {
     let shards: Vec<Arc<Shard>> = ctl.shards.read().unwrap().values().cloned().collect();
+    // Probe every replica of every shard CONCURRENTLY: probes are
+    // independent and each is bounded by [`STATS_PROBE_TIMEOUT`], so
+    // the whole fleet answers within one timeout — serially, a fleet
+    // with several unreachable replicas (blackholed externals never
+    // flip `up`) would stall stats for the SUM of their timeouts.
+    let probes: Vec<Vec<Result<Json>>> = std::thread::scope(|s| {
+        let handles: Vec<Vec<_>> = shards
+            .iter()
+            .map(|shard| {
+                shard
+                    .replicas
+                    .iter()
+                    .map(|replica| {
+                        let replica = Arc::clone(replica);
+                        s.spawn(move || replica.probe_stats(STATS_PROBE_TIMEOUT))
+                    })
+                    .collect()
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|hs| {
+                hs.into_iter()
+                    .map(|h| h.join().expect("stats probe thread panicked"))
+                    .collect()
+            })
+            .collect()
+    });
     let mut models: BTreeMap<String, Json> = BTreeMap::new();
     let mut workers: BTreeMap<String, Json> = BTreeMap::new();
-    for shard in &shards {
-        let mut info = vec![
-            ("addr", Json::str(shard.addr().to_string())),
-            ("up", Json::Bool(shard.is_up())),
-            ("restarts", Json::num(shard.restarts() as f64)),
-        ];
-        match shard
-            .forward_raw("{\"op\": \"stats\"}")
-            .and_then(|raw| Json::parse(raw.trim()).map_err(|e| anyhow!("bad stats JSON: {e}")))
-        {
-            Ok(stats) => {
-                info.push(("requests", stats.get("requests").clone()));
-                info.push(("uptime_secs", stats.get("uptime_secs").clone()));
-                if let Some(obj) = stats.get("models").as_obj() {
-                    for (model, mstats) in obj {
-                        models.insert(model.clone(), mstats.clone());
+    for (shard, shard_probes) in shards.iter().zip(probes) {
+        let mut replica_stats: Vec<Json> = Vec::with_capacity(shard.replicas.len());
+        let mut requests_total = 0.0f64;
+        let mut uptime_max = 0.0f64;
+        let mut any_probe = false;
+        for (replica, probe) in shard.replicas.iter().zip(shard_probes) {
+            let mut info = vec![
+                ("replica", Json::num(replica.idx as f64)),
+                ("addr", Json::str(replica.addr().to_string())),
+                ("up", Json::Bool(replica.is_up())),
+                ("restarts", Json::num(replica.restarts.load(Ordering::SeqCst) as f64)),
+                ("in_flight", Json::num(replica.in_flight.load(Ordering::SeqCst) as f64)),
+            ];
+            match probe {
+                Ok(stats) => {
+                    any_probe = true;
+                    requests_total += stats.get("requests").as_f64().unwrap_or(0.0);
+                    uptime_max = uptime_max.max(stats.get("uptime_secs").as_f64().unwrap_or(0.0));
+                    info.push(("requests", stats.get("requests").clone()));
+                    info.push(("uptime_secs", stats.get("uptime_secs").clone()));
+                    if let Some(obj) = stats.get("models").as_obj() {
+                        for (model, mstats) in obj {
+                            if models.contains_key(model.as_str()) {
+                                merge_model_stats(models.get_mut(model).unwrap(), mstats);
+                            } else {
+                                models.insert(model.clone(), mstats.clone());
+                            }
+                        }
                     }
                 }
+                Err(e) => info.push(("error", Json::str(format!("{e:#}")))),
             }
-            Err(e) => info.push(("error", Json::str(format!("{e:#}")))),
+            replica_stats.push(Json::obj(info));
         }
-        workers.insert(shard.name.clone(), Json::obj(info));
+        let (up, total) = shard.liveness();
+        // `addr` stays the first replica's endpoint, and `requests` /
+        // `uptime_secs` stay present at the shard level (summed / oldest
+        // across replicas — for one replica, exactly the pre-replication
+        // values) so single-replica consumers keep working; the full
+        // per-replica map is in `replica_stats`.
+        let first_addr = shard
+            .replicas
+            .first()
+            .map(|r| r.addr().to_string())
+            .unwrap_or_default();
+        let mut entry = vec![
+            ("addr", Json::str(first_addr)),
+            ("up", Json::Bool(up > 0)),
+            ("up_replicas", Json::num(up as f64)),
+            ("replicas", Json::num(total as f64)),
+            ("restarts", Json::num(shard.restarts_total() as f64)),
+            ("in_flight", Json::num(shard.in_flight_total() as f64)),
+        ];
+        if any_probe {
+            entry.push(("requests", Json::num(requests_total)));
+            entry.push(("uptime_secs", Json::num(uptime_max)));
+        }
+        entry.push(("replica_stats", Json::Arr(replica_stats)));
+        workers.insert(shard.name.clone(), Json::obj(entry));
     }
     ok_obj(vec![
         ("router", Json::Bool(true)),
@@ -868,27 +1389,269 @@ fn op_stats(ctl: &Control) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
-    #[test]
-    fn external_shard_down_worker_yields_retryable_path() {
-        // An external shard pointing at a dead port: forward fails with
-        // a dial error (the retryable class), and the shard stays `up`
-        // (externals have no supervised lifecycle to wait out).
-        let port = probe_free_port("127.0.0.1").unwrap();
-        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
-        let shard = Shard::external("m", addr, &RouterOpts::default());
-        let err = shard.forward_raw("{\"op\": \"ping\"}").unwrap_err();
-        assert!(format!("{err:#}").contains("dialing worker"), "{err:#}");
-        assert!(shard.is_up());
+    fn load(up: bool, in_flight: usize) -> ReplicaLoad {
+        ReplicaLoad { up, in_flight }
+    }
+
+    /// An external shard over fake addresses — routing-decision tests
+    /// never dial them because the forward closure is injected.
+    fn test_shard(replicas: usize, route_retries: usize, max_inflight: usize) -> Shard {
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let opts = RouterOpts { route_retries, max_inflight, ..RouterOpts::default() };
+        Shard::external("m", &vec![addr; replicas], &opts)
     }
 
     #[test]
-    fn router_rejects_empty_fleet() {
-        assert!(Router::with_external_workers(&[], RouterOpts::default()).is_err());
-        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
-        assert!(
-            Router::with_external_workers(&[("a", addr), ("a", addr)], RouterOpts::default())
-                .is_err()
+    fn plan_route_picks_least_loaded_with_index_tie_break() {
+        let loads = [load(true, 2), load(true, 1), load(true, 1)];
+        assert_eq!(plan_route(&loads, &[], 0), RoutePlan::Try(1), "tie breaks to lowest idx");
+        assert_eq!(plan_route(&loads, &[1], 0), RoutePlan::Try(2), "tried replicas excluded");
+        assert_eq!(plan_route(&loads, &[1, 2], 0), RoutePlan::Try(0));
+        assert_eq!(plan_route(&loads, &[0, 1, 2], 0), RoutePlan::Exhausted);
+    }
+
+    #[test]
+    fn plan_route_skips_down_replicas_and_exhausts_on_all_down() {
+        let loads = [load(false, 0), load(true, 9), load(false, 0)];
+        assert_eq!(plan_route(&loads, &[], 0), RoutePlan::Try(1), "only live replica wins");
+        let all_down = [load(false, 0), load(false, 0)];
+        assert_eq!(plan_route(&all_down, &[], 0), RoutePlan::Exhausted);
+        assert_eq!(plan_route(&all_down, &[], 4), RoutePlan::Exhausted, "down beats busy");
+    }
+
+    #[test]
+    fn plan_route_signals_busy_only_when_every_live_replica_is_at_ceiling() {
+        let some_room = [load(true, 4), load(true, 3)];
+        assert_eq!(plan_route(&some_room, &[], 4), RoutePlan::Try(1), "one below ceiling");
+        let full = [load(true, 4), load(true, 5)];
+        match plan_route(&full, &[], 4) {
+            RoutePlan::Busy { retry_after_ms } => {
+                assert_eq!(retry_after_ms, retry_after_hint_ms(4));
+            }
+            other => panic!("expected busy, got {other:?}"),
+        }
+        // A down replica below the ceiling does not avert backpressure.
+        let down_idle = [load(false, 0), load(true, 4)];
+        assert!(matches!(plan_route(&down_idle, &[], 4), RoutePlan::Busy { .. }));
+        // The ceiling is judged over the UNTRIED candidates: after a
+        // failure on the idle replica, a saturated survivor means Busy
+        // immediately — not a doomed admission attempt against it.
+        let failed_idle = [load(true, 0), load(true, 4)];
+        assert!(matches!(plan_route(&failed_idle, &[0], 4), RoutePlan::Busy { .. }));
+        // Ceiling 0 = unlimited.
+        assert_eq!(plan_route(&full, &[], 0), RoutePlan::Try(0));
+    }
+
+    #[test]
+    fn retry_after_hint_is_bounded_and_scales_with_the_ceiling() {
+        assert_eq!(retry_after_hint_ms(4), 25, "shallow ceiling: minimum hint");
+        assert!(retry_after_hint_ms(32) > retry_after_hint_ms(4), "deeper queue, longer hint");
+        assert_eq!(retry_after_hint_ms(32), 160);
+        assert_eq!(retry_after_hint_ms(usize::MAX), 1000, "clamped");
+    }
+
+    #[test]
+    fn route_retries_on_a_different_replica_within_budget() {
+        let shard = test_shard(3, 1, 0);
+        let attempts = Mutex::new(Vec::new());
+        let out = shard.route_with(true, |idx| {
+            attempts.lock().unwrap().push(idx);
+            if attempts.lock().unwrap().len() == 1 {
+                Err(anyhow!("first forward fails"))
+            } else {
+                Ok(format!("ok from {idx}"))
+            }
+        });
+        assert_eq!(out.unwrap(), "ok from 1");
+        let attempts = attempts.into_inner().unwrap();
+        assert_eq!(attempts, vec![0, 1], "retry goes to a different replica");
+    }
+
+    #[test]
+    fn route_budget_exhaustion_is_retryable_with_all_replicas_distinct() {
+        let shard = test_shard(3, 2, 0);
+        let attempts = AtomicUsize::new(0);
+        let out = shard.route_with(true, |_idx| {
+            attempts.fetch_add(1, Ordering::SeqCst);
+            Err(anyhow!("forward fails"))
+        });
+        match out {
+            Err(RouteFailure::Down(e)) => assert!(format!("{e:#}").contains("forward fails")),
+            _ => panic!("expected Down after budget exhaustion"),
+        }
+        assert_eq!(attempts.load(Ordering::SeqCst), 3, "1 attempt + 2 retries");
+
+        // Budget larger than the replica set: attempts stop once every
+        // live replica has been tried, not after the nominal budget.
+        let shard = test_shard(2, 10, 0);
+        let attempts = AtomicUsize::new(0);
+        let out = shard.route_with(true, |_idx| {
+            attempts.fetch_add(1, Ordering::SeqCst);
+            Err(anyhow!("forward fails"))
+        });
+        assert!(matches!(out, Err(RouteFailure::Down(_))));
+        assert_eq!(attempts.load(Ordering::SeqCst), 2, "never re-visits a failed replica");
+    }
+
+    #[test]
+    fn route_never_retries_non_idempotent_ops() {
+        let shard = test_shard(3, 5, 0);
+        let attempts = AtomicUsize::new(0);
+        let out = shard.route_with(false, |_idx| {
+            attempts.fetch_add(1, Ordering::SeqCst);
+            Err(anyhow!("forward fails"))
+        });
+        assert!(matches!(out, Err(RouteFailure::Down(_))));
+        assert_eq!(attempts.load(Ordering::SeqCst), 1, "exactly one attempt");
+        assert!(op_is_idempotent("transform") && op_is_idempotent("recommend"));
+        assert!(!op_is_idempotent("load") && !op_is_idempotent("shutdown"));
+    }
+
+    #[test]
+    fn admission_is_reserve_style_up_to_the_ceiling() {
+        // The ceiling must hold under concurrent admission, so the
+        // check lives at the increment (CAS), not in the planning
+        // snapshot: N successful admits fill the ceiling exactly, the
+        // next one is refused.
+        let shard = test_shard(1, 0, 2);
+        assert!(shard.admit(0));
+        assert!(shard.admit(0));
+        assert!(!shard.admit(0), "third admit must lose: ceiling is 2");
+        assert_eq!(shard.replicas[0].in_flight.load(Ordering::SeqCst), 2);
+        // Ceiling 0 = unlimited: always admitted.
+        let unbounded = test_shard(1, 0, 0);
+        for _ in 0..100 {
+            assert!(unbounded.admit(0));
+        }
+    }
+
+    #[test]
+    fn route_returns_busy_without_forwarding_when_shard_is_saturated() {
+        let shard = test_shard(2, 1, 4);
+        for r in &shard.replicas {
+            r.in_flight.store(4, Ordering::SeqCst);
+        }
+        let out = shard.route_with(true, |_idx| panic!("must not forward while saturated"));
+        match out {
+            Err(RouteFailure::Busy { retry_after_ms }) => assert!(retry_after_ms >= 25),
+            _ => panic!("expected busy"),
+        }
+        // Free one slot: routed again, to the freed replica.
+        shard.replicas[1].in_flight.store(3, Ordering::SeqCst);
+        let out = shard.route_with(true, |idx| Ok(format!("ok from {idx}")));
+        assert_eq!(out.unwrap(), "ok from 1");
+    }
+
+    #[test]
+    fn route_skips_down_replicas() {
+        let shard = test_shard(2, 1, 0);
+        shard.replicas[0].state.lock().unwrap().up = false;
+        let out = shard.route_with(true, |idx| {
+            assert_eq!(idx, 1, "down replica must not be picked");
+            Ok("ok".to_string())
+        });
+        assert_eq!(out.unwrap(), "ok");
+    }
+
+    #[test]
+    fn merge_model_stats_sums_counters_and_recomputes_averages() {
+        let mut a = Json::parse(
+            r#"{"v": 30, "k": 4, "requests": 2, "warm_hits": 1,
+                "cold": {"requests": 2, "sweeps": 10, "micro_batches": 2, "avg_sweeps": 5}}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"v": 30, "k": 4, "requests": 3, "warm_hits": 4,
+                "cold": {"requests": 3, "sweeps": 2, "micro_batches": 2, "avg_sweeps": 1}}"#,
+        )
+        .unwrap();
+        merge_model_stats(&mut a, &b);
+        assert_eq!(a.get("v").as_usize(), Some(30), "structural fields keep first value");
+        assert_eq!(a.get("requests").as_usize(), Some(5));
+        assert_eq!(a.get("warm_hits").as_usize(), Some(5));
+        assert_eq!(a.get("cold").get("requests").as_usize(), Some(5));
+        assert_eq!(a.get("cold").get("sweeps").as_usize(), Some(12));
+        assert_eq!(
+            a.get("cold").get("avg_sweeps").as_f64(),
+            Some(3.0),
+            "avg recomputed from merged sums, not averaged averages"
         );
+    }
+
+    #[test]
+    fn ping_reports_per_replica_liveness() {
+        // Regression for the pre-replication shape: one `up` flag per
+        // model hid partial degradation. Now k-of-N is observable.
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let opts = RouterOpts::default();
+        let shard = Arc::new(Shard::external("m", &[addr, addr], &opts));
+        shard.replicas[1].state.lock().unwrap().up = false;
+        let mut shards = BTreeMap::new();
+        shards.insert("m".to_string(), Arc::clone(&shard));
+        let ctl = Control {
+            shards: RwLock::new(shards),
+            shared: Shared {
+                stop: AtomicBool::new(false),
+                requests: AtomicU64::new(0),
+                active: AtomicUsize::new(0),
+                started: Instant::now(),
+                addr,
+            },
+            manifest_path: None,
+            manifest_version: Mutex::new(0),
+            worker_opts: None,
+            opts,
+        };
+        let ping = op_ping(&ctl);
+        let m = ping.get("workers").get("m");
+        assert_eq!(m.get("up").as_bool(), Some(true), "one live replica keeps the shard up");
+        assert_eq!(m.get("up_replicas").as_usize(), Some(1), "degradation visible: 1 of 2");
+        assert_eq!(m.get("replicas").as_usize(), Some(2));
+        // Both replicas down: the shard reads as down.
+        shard.replicas[0].state.lock().unwrap().up = false;
+        let ping = op_ping(&ctl);
+        assert_eq!(ping.get("workers").get("m").get("up").as_bool(), Some(false));
+        assert_eq!(ping.get("workers").get("m").get("up_replicas").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn external_shard_down_worker_yields_retryable_path() {
+        // An external shard pointing at a dead port: the forward fails
+        // with a dial error on every replica, and once the budget is
+        // spent the shard surfaces the Down (retryable) class — never
+        // Busy, never a silent blind re-send. The replicas stay `up`
+        // (externals have no supervised lifecycle to wait out).
+        let port = probe_free_port("127.0.0.1").unwrap();
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let shard = Shard::external("m", &[addr], &RouterOpts::default());
+        match shard.route("{\"op\": \"ping\"}", true) {
+            Err(RouteFailure::Down(e)) => {
+                assert!(format!("{e:#}").contains("dialing worker"), "{e:#}");
+            }
+            _ => panic!("expected Down"),
+        }
+        assert!(shard.replicas[0].is_up());
+        assert_eq!(shard.in_flight_total(), 0, "in-flight rebalanced after the failure");
+    }
+
+    #[test]
+    fn router_rejects_empty_fleet_and_groups_duplicates_into_replicas() {
+        assert!(Router::with_external_workers(&[], RouterOpts::default()).is_err());
+        // Repeating a name with DISTINCT endpoints declares replicas of
+        // one model, not an error…
+        let a1: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let a2: SocketAddr = "127.0.0.1:2".parse().unwrap();
+        let router =
+            Router::with_external_workers(&[("a", a1), ("a", a2)], RouterOpts::default())
+                .unwrap();
+        assert_eq!(router.names(), vec!["a"]);
+        assert_eq!(router.worker_count(), 2);
+        // …but the same endpoint twice is one worker masquerading as
+        // redundancy: rejected.
+        let err = Router::with_external_workers(&[("a", a1), ("a", a1)], RouterOpts::default())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("twice"), "{err:#}");
     }
 }

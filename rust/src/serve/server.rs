@@ -600,12 +600,35 @@ impl Client {
         Ok(Client { reader, writer: stream })
     }
 
+    /// [`Self::connect`] with a bounded dial: a blackholed peer fails
+    /// after `timeout` instead of the OS connect timeout (minutes).
+    /// Used by latency-sensitive callers like the router's stats probe.
+    pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(addr, timeout)
+            .context("connecting to plnmf daemon")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client { reader, writer: stream })
+    }
+
     /// Whether `err` is the distinct "connection closed mid-response"
     /// failure (EOF or a read error after the request was written), as
     /// opposed to a connect failure, a write failure, or a response
     /// that parsed but carried `"ok": false`.
     pub fn is_connection_closed(err: &anyhow::Error) -> bool {
         err.chain().any(|m| m.contains(CLOSED_MID_RESPONSE))
+    }
+
+    /// Whether a parsed response is the router's backpressure signal
+    /// (`"busy": true` — every live replica of the model is at its
+    /// in-flight ceiling). Returns the server's `Retry-After`-style
+    /// hint in milliseconds; the right client reaction is to delay
+    /// that long (or shed the request), not to hammer the shard.
+    pub fn busy_retry_after_ms(resp: &Json) -> Option<u64> {
+        if resp.get("busy").as_bool() == Some(true) {
+            Some(resp.get("retry_after_ms").as_u64().unwrap_or(0))
+        } else {
+            None
+        }
     }
 
     /// Bound how long reads may block (None = forever). Applies to the
@@ -758,5 +781,18 @@ mod tests {
         assert!(Client::is_connection_closed(&closed));
         let other = anyhow!("bad response JSON: oops").context("forwarding to shard 'a'");
         assert!(!Client::is_connection_closed(&other));
+    }
+
+    #[test]
+    fn busy_responses_are_classified_with_their_hint() {
+        let busy = Json::parse(
+            r#"{"ok": false, "busy": true, "retryable": true, "retry_after_ms": 75}"#,
+        )
+        .unwrap();
+        assert_eq!(Client::busy_retry_after_ms(&busy), Some(75));
+        let retryable = Json::parse(r#"{"ok": false, "retryable": true}"#).unwrap();
+        assert_eq!(Client::busy_retry_after_ms(&retryable), None);
+        let ok = Json::parse(r#"{"ok": true}"#).unwrap();
+        assert_eq!(Client::busy_retry_after_ms(&ok), None);
     }
 }

@@ -123,8 +123,16 @@ pub fn probe_free_port(host: &str) -> Result<u16> {
 
 /// Write the single-model manifest a worker serves from and return its
 /// path. Regenerated on every (re)spawn so a changed model path is
-/// picked up without touching the worker CLI.
-pub fn write_worker_manifest(work_dir: &Path, name: &str, model_path: &Path) -> Result<PathBuf> {
+/// picked up without touching the worker CLI. Each replica gets its own
+/// manifest file (`{name}.r{replica}.manifest.json`): replicas of one
+/// model restart independently, and two concurrent respawns must never
+/// race on one file.
+pub fn write_worker_manifest(
+    work_dir: &Path,
+    name: &str,
+    replica: usize,
+    model_path: &Path,
+) -> Result<PathBuf> {
     std::fs::create_dir_all(work_dir)
         .with_context(|| format!("creating worker dir {work_dir:?}"))?;
     // The model path is resolved against the *fleet* manifest already;
@@ -134,21 +142,25 @@ pub fn write_worker_manifest(work_dir: &Path, name: &str, model_path: &Path) -> 
     } else {
         std::env::current_dir().context("resolving model path")?.join(model_path)
     };
-    let path = work_dir.join(format!("{name}.manifest.json"));
+    let path = work_dir.join(format!("{name}.r{replica}.manifest.json"));
     let abs_str = abs.display().to_string();
     let body = manifest_json(1, 0, &[(name, abs_str.as_str())]).pretty();
     std::fs::write(&path, body).with_context(|| format!("writing worker manifest {path:?}"))?;
     Ok(path)
 }
 
-/// Spawn one worker on `port` serving `name` from `model_path`.
+/// Spawn one worker on `port` serving `name` from `model_path` as the
+/// shard's `replica`-th copy (0-based; every replica serves the model
+/// under the same name — the index only keys the manifest file and
+/// logs).
 pub fn spawn_worker(
     opts: &WorkerOpts,
     name: &str,
+    replica: usize,
     model_path: &Path,
     port: u16,
 ) -> Result<ManagedWorker> {
-    let manifest = write_worker_manifest(&opts.work_dir, name, model_path)?;
+    let manifest = write_worker_manifest(&opts.work_dir, name, replica, model_path)?;
     let child = Command::new(&opts.binary)
         .arg("serve")
         .arg("--models_manifest")
@@ -164,7 +176,7 @@ pub fn spawn_worker(
     let addr: SocketAddr = format!("{}:{port}", opts.host)
         .parse()
         .map_err(|e| anyhow!("worker '{name}': bad address: {e}"))?;
-    crate::info!("worker '{name}': spawned pid {} on {addr}", child.id());
+    crate::info!("worker '{name}' replica {replica}: spawned pid {} on {addr}", child.id());
     Ok(ManagedWorker { child, addr })
 }
 
@@ -210,12 +222,19 @@ mod tests {
     #[test]
     fn worker_manifest_is_single_model_and_absolute() {
         let dir = std::env::temp_dir().join(format!("plnmf-workerman-{}", std::process::id()));
-        let path = write_worker_manifest(&dir, "news", Path::new("/models/news.json")).unwrap();
+        let path = write_worker_manifest(&dir, "news", 0, Path::new("/models/news.json")).unwrap();
         let m = crate::serve::Manifest::load(&path).unwrap();
         assert_eq!(m.version, 1);
         assert_eq!(m.models.len(), 1);
         assert_eq!(m.models[0].name, "news");
         assert_eq!(m.models[0].path, Path::new("/models/news.json"));
+        // Replicas of one model write distinct manifest files (respawns
+        // of different replicas must never race on one path), and each
+        // still serves the model under its undecorated name.
+        let path1 = write_worker_manifest(&dir, "news", 1, Path::new("/models/news.json")).unwrap();
+        assert_ne!(path, path1);
+        let m1 = crate::serve::Manifest::load(&path1).unwrap();
+        assert_eq!(m1.models[0].name, "news");
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -224,7 +243,7 @@ mod tests {
         let opts = WorkerOpts::new(PathBuf::from("/definitely/not/a/binary"));
         let err = format!(
             "{:#}",
-            spawn_worker(&opts, "m", Path::new("/tmp/m.json"), 1).unwrap_err()
+            spawn_worker(&opts, "m", 0, Path::new("/tmp/m.json"), 1).unwrap_err()
         );
         assert!(err.contains("spawning worker 'm'"), "{err}");
         std::fs::remove_dir_all(&opts.work_dir).ok();

@@ -14,16 +14,22 @@
 //!   subsequent routed responses are again bit-for-bit identical.
 //!   Synchronization is all condition-polling with deadlines — no
 //!   sleeps-as-synchronization.
+//! * **Replication** — a `replicas: 2` model absorbs a replica kill
+//!   with ZERO client-visible failures (the retry budget fails the
+//!   request over to the survivor), partial degradation is observable
+//!   (`up_replicas: 1` of 2), and the supervisor restores the full
+//!   replica set.
 
 use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use plnmf::linalg::Mat;
 use plnmf::nmf::Factors;
 use plnmf::parallel::ThreadPool;
-use plnmf::serve::registry::manifest_json;
+use plnmf::serve::registry::{manifest_json, manifest_json_replicated};
 use plnmf::serve::{
     queries_to_json, save_model, Client, ModelMeta, ModelRegistry, Projector, ProjectorOpts,
     Queries, RegistryOpts, Router, RouterOpts, Server, WorkerOpts,
@@ -248,6 +254,133 @@ fn worker_crash_is_retryable_then_restarts_with_identical_results() {
     assert!(stats.get("workers").get("m").get("restarts").as_usize().unwrap() >= 1);
 
     // And the routed answer is bit-for-bit what it was before the crash.
+    let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+    assert_eq!(h_from_json(&resp, 4), h_ref, "post-restart routed h");
+
+    drop(client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn replicated_shard_absorbs_replica_kill_with_zero_failed_requests() {
+    let dir = tmpdir("replicated");
+    let model = write_model(&dir, "m.json", 30, 9, 4, 10);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(&manifest, manifest_json_replicated(1, 0, &[("m", "m.json", 2)]).pretty())
+        .unwrap();
+
+    // Wide backoff: the killed replica stays down through the traffic
+    // window, so the test observes BOTH the degraded (1-of-2) fleet
+    // and the zero-failure absorption. Tight health interval for fast
+    // crash detection. The default route_retries = 1 is the machinery
+    // under test: a failed forward fails over to the survivor.
+    let opts = RouterOpts {
+        restart_backoff: Duration::from_millis(2500),
+        health_interval: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let router = Router::from_manifest(&manifest, pinned_worker_opts(&dir), opts).unwrap();
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    // Reference answer (pinned solver config, warm cache off — every
+    // replica must answer bit-identically).
+    let mut rng = Pcg32::seeded(45);
+    let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+    let h_ref = reference_h(&model, &q);
+    let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+    assert_eq!(h_from_json(&resp, 4), h_ref, "pre-kill routed h");
+
+    // Both replicas visible and live before the kill.
+    let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(ping.get("workers").get("m").get("replicas").as_usize(), Some(2), "{ping}");
+    assert_eq!(ping.get("workers").get("m").get("up_replicas").as_usize(), Some(2), "{ping}");
+
+    // Continuous traffic on its own connection. Every response must be
+    // ok AND bit-identical; failures are collected (not panicked) so
+    // the main thread can assert exactly zero at the end.
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let failures = Arc::new(Mutex::new(Vec::<String>::new()));
+    let traffic = {
+        let stop = Arc::clone(&stop);
+        let done = Arc::clone(&done);
+        let failures = Arc::clone(&failures);
+        let q = q.clone();
+        let h_ref = h_ref.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let req = transform_req("m", &q);
+            while !stop.load(Ordering::SeqCst) {
+                match c.request(&req) {
+                    Ok(resp) if resp.get("ok").as_bool() == Some(true) => {
+                        if h_from_json(&resp, 4) != h_ref {
+                            failures.lock().unwrap().push(format!("h mismatch: {resp}"));
+                        }
+                    }
+                    Ok(resp) => failures.lock().unwrap().push(format!("not ok: {resp}")),
+                    Err(e) => failures.lock().unwrap().push(format!("client error: {e:#}")),
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+    };
+    wait_until(Duration::from_secs(30), "pre-kill traffic", || {
+        done.load(Ordering::SeqCst) > 3
+    });
+
+    // Kill replica 0 out-of-band (protocol shutdown straight to its
+    // port — the router is not involved) and wait until its listener
+    // is provably gone.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    let victim: SocketAddr = {
+        let reps = stats.get("workers").get("m").get("replica_stats").as_arr().unwrap();
+        assert_eq!(reps.len(), 2, "{stats}");
+        reps[0].get("addr").as_str().unwrap().parse().unwrap()
+    };
+    {
+        let mut direct = Client::connect(victim).unwrap();
+        let bye = direct.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))])).unwrap();
+        assert_eq!(bye.get("bye").as_bool(), Some(true));
+    }
+    wait_until(Duration::from_secs(30), "victim listener to close", || {
+        std::net::TcpStream::connect(victim).is_err()
+    });
+
+    // Partial degradation is observable — the pre-replication `up`
+    // flag hid this — while the shard stays up on the survivor…
+    wait_until(Duration::from_secs(30), "degraded liveness (1 of 2)", || {
+        let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        let m = ping.get("workers").get("m");
+        m.get("up").as_bool() == Some(true) && m.get("up_replicas").as_usize() == Some(1)
+    });
+    // …and traffic keeps flowing while the replica is down.
+    let at_kill = done.load(Ordering::SeqCst);
+    wait_until(Duration::from_secs(60), "post-kill traffic", || {
+        done.load(Ordering::SeqCst) > at_kill + 10
+    });
+
+    // The supervisor restores the full replica set within its backoff.
+    wait_until(Duration::from_secs(60), "replica restart (2 of 2)", || {
+        let ping = client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        ping.get("workers").get("m").get("up_replicas").as_usize() == Some(2)
+    });
+
+    stop.store(true, Ordering::SeqCst);
+    traffic.join().unwrap();
+    let failures = failures.lock().unwrap();
+    assert!(
+        failures.is_empty(),
+        "replica kill leaked {} client-visible failure(s): {:?}",
+        failures.len(),
+        *failures
+    );
+
+    // The restart is counted, and answers stay bit-identical.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert!(stats.get("workers").get("m").get("restarts").as_usize().unwrap() >= 1, "{stats}");
     let resp = client.request_ok(&transform_req("m", &q)).unwrap();
     assert_eq!(h_from_json(&resp, 4), h_ref, "post-restart routed h");
 
