@@ -102,6 +102,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- PLNB v2: a dense batch over binary frames -----------------------
+    // One hello upgrades the connection; transform_dense then ships the
+    // batch as raw f32 frames instead of JSON text (the win grows with
+    // batch size — see the binary_* rows in the serving bench). Sparse
+    // queries and control ops stay JSON even after the upgrade.
+    let mut bin_client = Client::connect(addr)?;
+    let proto = bin_client.negotiate()?;
+    let dense = plnmf::linalg::Mat::from_fn(8, 60, |i, j| ((i * 13 + j) % 5) as plnmf::Elem);
+    let (h, _residuals, meta) = bin_client.transform_dense("faces", &dense, true)?;
+    println!(
+        "transform [PLNB v{proto}]: {} docs on 'faces' in {:.4}s over binary frames",
+        h.rows(),
+        meta.get("secs").as_f64().unwrap_or(0.0),
+    );
+
     // ---- the second model answers on the same socket ---------------------
     let resp = client.request_ok(&Json::obj(vec![
         ("op", Json::str("recommend")),

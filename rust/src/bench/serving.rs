@@ -23,6 +23,12 @@
 //!    and the router's least-loaded pick spreads the load, so wall-
 //!    clock throughput should grow with N until the machine runs out of
 //!    cores — the replica fan-out's headline number.
+//! 5. **Binary framing** (`binary_*` vs `dense_json_*` rows): the same
+//!    large dense batch (256×128) shipped as PLNB v2 raw-f32 frames and
+//!    as v1 JSON text, direct to a daemon (cold + warm) and through a
+//!    router. JSON encode/decode dominates round-trip time at this
+//!    batch size — the binary rows are the wire-level data-movement
+//!    saving, measured.
 //!
 //! Run via `cargo bench --bench serving_throughput` or `plnmf bench
 //! serving`.
@@ -41,6 +47,7 @@ use crate::serve::{
     ProjectorOpts, RegistryOpts, Router, RouterOpts, Server,
 };
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 use crate::util::Timer;
 use crate::Result;
 
@@ -61,6 +68,12 @@ const REPL_DOCS: usize = 32;
 
 /// Transform requests each concurrent client sends per replica count.
 const REPL_REQS_PER_CLIENT: usize = 4;
+
+/// Dense-batch shape of the binary-vs-JSON framing rows — at 256×128
+/// the JSON text is ~4× the raw f32 payload and its encode/decode
+/// dominates the round trip (the acceptance floor for the PLNB rows).
+pub const BINARY_DOCS: usize = 256;
+pub const BINARY_V: usize = 128;
 
 pub fn run(scale: Scale, out: &Path) -> Result<()> {
     run_with(scale, out, BenchOpts::default())
@@ -134,6 +147,7 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     let mut daemon_rows = daemon_roundtrip(dataset, k, &factors, &owned, threads)?;
     daemon_rows.extend(router_roundtrip(dataset, k, &factors, &owned, threads)?);
     daemon_rows.extend(replicated_roundtrip(dataset, k, &factors, &owned, threads)?);
+    daemon_rows.extend(binary_roundtrip(dataset, k, threads)?);
     let csv = out.join("serving_daemon.csv");
     write_csv(
         &csv,
@@ -392,6 +406,101 @@ fn replicated_roundtrip(
     Ok(rows)
 }
 
+/// One timed dense transform via [`Client::transform_dense`] (the
+/// framing follows the client's negotiated protocol) → one CSV row.
+fn dense_row(
+    client: &mut Client,
+    q: &Mat,
+    dataset: &str,
+    k: usize,
+    prefix: &str,
+    mode: &str,
+) -> Result<String> {
+    let docs = q.rows();
+    let t = Timer::start();
+    let (h, _res, meta) = client.transform_dense("bench", q, true)?;
+    let secs = t.elapsed_secs();
+    anyhow::ensure!(h.rows() == docs, "short transform response: {} rows", h.rows());
+    let warm = meta.get("warm");
+    let sweeps = warm.get("sweeps").as_usize().unwrap_or(0);
+    let batches = warm.get("micro_batches").as_usize().unwrap_or(0);
+    let hits = warm.get("hits").as_usize().unwrap_or(0);
+    let docs_per_sec = docs as f64 / secs.max(1e-12);
+    println!(
+        "{prefix}{mode} transform   {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
+         sweeps {sweeps} over {batches} micro-batches, {hits} warm hits"
+    );
+    Ok(format!(
+        "{dataset},{k},{docs},{prefix}{mode},{secs:.6},{docs_per_sec:.1},{sweeps},{batches},{hits}"
+    ))
+}
+
+/// S1e: PLNB v2 binary framing vs its JSON twin on the same large
+/// dense batch — direct to a daemon (cold + warm rows) and through a
+/// router front (one trip each). Every pass gets a fresh daemon so its
+/// cold row is genuinely cold; the only variable between twin rows is
+/// the wire framing, so the delta is pure encode/transfer/decode cost.
+fn binary_roundtrip(dataset: &str, k: usize, threads: usize) -> Result<Vec<String>> {
+    let dir = std::env::temp_dir().join(format!("plnmf-binbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    let factors = Factors::random(BINARY_V, 16, k, 4242);
+    save_model(&model_path, &factors, &ModelMeta::default())?;
+    let mut rng = Pcg32::seeded(7);
+    let q = Mat::random(BINARY_DOCS, BINARY_V, &mut rng, 0.0, 1.0);
+
+    let opts = RegistryOpts {
+        threads,
+        per_model_threads: threads,
+        projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
+        warm_cache: 2 * BINARY_DOCS,
+        max_total_nnz: 0,
+    };
+    type DaemonHandle = std::thread::JoinHandle<Result<()>>;
+    let start_daemon = |opts: RegistryOpts| -> Result<(std::net::SocketAddr, DaemonHandle)> {
+        let registry = ModelRegistry::new(opts);
+        registry.load("bench", &model_path)?;
+        let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+        let addr = server.local_addr();
+        Ok((addr, std::thread::spawn(move || server.run())))
+    };
+
+    println!(
+        "\nbinary (PLNB v2) vs JSON framing ({BINARY_DOCS}x{BINARY_V} dense batch, \
+         model resident):\n"
+    );
+    let mut rows = Vec::new();
+    for (prefix, negotiate) in [("dense_json_", false), ("binary_", true)] {
+        let (addr, handle) = start_daemon(opts)?;
+        let mut client = Client::connect(addr)?;
+        if negotiate {
+            anyhow::ensure!(client.negotiate()? == 2, "daemon did not negotiate PLNB v2");
+        }
+        for mode in ["cold", "warm"] {
+            rows.push(dense_row(&mut client, &q, dataset, k, prefix, mode)?);
+        }
+        client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    }
+    for (prefix, negotiate) in [("dense_json_", false), ("binary_", true)] {
+        let (worker_addr, worker_handle) = start_daemon(opts)?;
+        let router =
+            Router::with_external_workers(&[("bench", worker_addr)], RouterOpts::default())?;
+        let addr = router.local_addr();
+        let router_handle = std::thread::spawn(move || router.run());
+        let mut client = Client::connect(addr)?;
+        if negotiate {
+            anyhow::ensure!(client.negotiate()? == 2, "router did not negotiate PLNB v2");
+        }
+        rows.push(dense_row(&mut client, &q, dataset, k, prefix, "routed")?);
+        client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        router_handle.join().map_err(|_| anyhow::anyhow!("router thread panicked"))??;
+        worker_handle.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    std::fs::remove_dir_all(dir).ok();
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,8 +521,9 @@ mod tests {
         let lines: Vec<&str> = daemon.lines().collect();
         assert_eq!(
             lines.len(),
-            5 + REPLICA_COUNTS.len(),
-            "header + direct cold/warm + routed cold/warm + replicated r1/r2/r4: {daemon}"
+            11 + REPLICA_COUNTS.len(),
+            "header + direct cold/warm + routed cold/warm + replicated r1/r2/r4 + \
+             dense-json/binary cold/warm/routed twins: {daemon}"
         );
         assert!(lines[1].contains(",cold,"));
         assert!(lines[2].contains(",warm,"));
@@ -428,13 +538,33 @@ mod tests {
             let docs_per_sec: f64 = line.split(',').nth(5).unwrap().parse().unwrap();
             assert!(docs_per_sec > 0.0, "throughput must be measured: {line}");
         }
-        // The warm pass must not sweep more than the cold pass — on
-        // both the direct and the routed path.
+        // Binary rows and their JSON twins, all on the large dense
+        // batch the acceptance criterion names.
+        for (i, mode) in [
+            "dense_json_cold",
+            "dense_json_warm",
+            "binary_cold",
+            "binary_warm",
+            "dense_json_routed",
+            "binary_routed",
+        ]
+        .iter()
+        .enumerate()
+        {
+            let line = lines[5 + REPLICA_COUNTS.len() + i];
+            assert!(line.contains(&format!(",{mode},")), "row {mode} missing: {daemon}");
+            let docs: usize = line.split(',').nth(2).unwrap().parse().unwrap();
+            assert_eq!(docs, BINARY_DOCS, "{mode} must use the {BINARY_DOCS}-doc batch");
+        }
+        // The warm pass must not sweep more than the cold pass — on the
+        // direct, routed, and binary paths alike.
         let sweeps = |line: &str| -> usize {
             line.split(',').nth(6).unwrap().parse().unwrap()
         };
         assert!(sweeps(lines[2]) <= sweeps(lines[1]), "{daemon}");
         assert!(sweeps(lines[4]) <= sweeps(lines[3]), "{daemon}");
+        let bin_base = 5 + REPLICA_COUNTS.len();
+        assert!(sweeps(lines[bin_base + 3]) <= sweeps(lines[bin_base + 2]), "{daemon}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -403,6 +403,31 @@ mod tests {
     }
 
     #[test]
+    fn integer_keys_reject_silent_coercions() {
+        // Regression for the wire-coercion sweep: values that used to
+        // wrap or truncate through a bare `as usize` must all be loud
+        // errors, across every integer-typed config key.
+        let mut cfg = RunConfig::default();
+        for (key, bad) in [
+            ("k", "-1"),
+            ("k", "2.7"),
+            ("k", "1e300"),
+            ("threads", "-4"),
+            ("seed", "-1"),
+            ("seed", "1e300"),
+            ("max_inflight", "18446744073709551616"), // 2^64
+            ("route_retries", "0.5"),
+        ] {
+            let err = format!("{:#}", cfg.set_str(key, bad).unwrap_err());
+            assert!(err.contains("expected"), "{key}={bad}: {err}");
+        }
+        assert_eq!(cfg.k, RunConfig::default().k, "failed sets must not alter the config");
+        // Large-but-valid integers still parse exactly.
+        cfg.set_str("seed", "1e18").unwrap();
+        assert_eq!(cfg.seed, 1_000_000_000_000_000_000);
+    }
+
+    #[test]
     fn set_str_infers_types() {
         let mut cfg = RunConfig::default();
         cfg.set_str("k", "160").unwrap();

@@ -96,7 +96,12 @@ impl Manifest {
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
         let j = Json::parse(&src).with_context(|| format!("parsing {path:?}"))?;
-        let version = j.get("version").as_usize().unwrap_or(0);
+        // Strict: a negative/fractional version is a parse error, not a
+        // silent 0 masquerading as "unsupported version 0".
+        let version = j
+            .get("version")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest needs a non-negative integer \"version\""))?;
         if version != 1 {
             bail!("unsupported manifest version {version}");
         }
@@ -199,6 +204,13 @@ mod tests {
         let dir = tmpdir("badver");
         write_manifest(&dir, r#"{"version": 99, "artifacts": []}"#);
         assert!(Manifest::load(&dir).is_err());
+        // Silent-coercion regression: a bogus version errors as such
+        // instead of wrapping to 0 and reading as "unsupported 0".
+        for bad in ["-1", "1.5", "1e300", "\"one\""] {
+            write_manifest(&dir, &format!(r#"{{"version": {bad}, "artifacts": []}}"#));
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains("version"), "version={bad}: {err}");
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

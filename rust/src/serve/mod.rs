@@ -30,10 +30,17 @@
 //! * [`registry`] — [`ModelRegistry`]: named models as independent
 //!   serving shards (own pool, own queue, own warm cache), loaded from a
 //!   versioned manifest with nnz-aware admission and hot reload.
+//! * [`wire`] — the shared wire codec: the v1 NDJSON frame reader and
+//!   the **PLNB v2 binary frame format** for dense batches (raw f32
+//!   little-endian behind a 20-byte header, negotiated per connection
+//!   with `hello {"proto": 2}`; JSON encode/decode dominates round-trip
+//!   time for large dense batches — the paper's data-movement argument,
+//!   applied to the wire).
 //! * [`server`] — [`Server`]: the `plnmf serve` daemon speaking
-//!   newline-delimited JSON over TCP, keeping every model's factors and
-//!   Gram resident across requests (the whole point of the cached-Gram
-//!   design), plus the protocol [`Client`].
+//!   newline-delimited JSON over TCP (plus negotiated PLNB v2 binary
+//!   dense batches), keeping every model's factors and Gram resident
+//!   across requests (the whole point of the cached-Gram design), plus
+//!   the protocol [`Client`] with its v2 auto-upgrade.
 //! * [`router`] / [`worker`] — [`Router`]: the `plnmf route` front
 //!   daemon fanning the same protocol out to `plnmf serve` worker
 //!   **processes** — `replicas: N` per manifest model — with
@@ -57,6 +64,7 @@ pub mod projector;
 pub mod registry;
 pub mod router;
 pub mod server;
+pub mod wire;
 pub mod worker;
 
 pub use model_io::{load_model, save_model, ModelMeta};
@@ -64,6 +72,8 @@ pub use projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
 pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts};
 pub use router::{Router, RouterOpts};
 pub use server::{
-    queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE, MAX_LINE_BYTES,
+    mat_from_json_rows, queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE,
+    MAX_LINE_BYTES,
 };
+pub use wire::{BinFrame, BinOp, MAX_FRAME_BYTES, PLNB_MAGIC, PLNB_VERSION};
 pub use worker::WorkerOpts;

@@ -69,7 +69,14 @@ pub fn load_model(path: &Path) -> Result<(Factors, ModelMeta)> {
     if format != MODEL_FORMAT {
         bail!("{path:?} is not a plnmf model (format '{format}')");
     }
-    let version = j.get("version").as_usize().unwrap_or(0);
+    // Strict-when-present numbers throughout (the silent-coercion
+    // sweep): an absent field takes its default, but a bogus value —
+    // negative, fractional, overflowing — errors instead of quietly
+    // becoming 0 and changing meaning.
+    let version = j
+        .get("version")
+        .as_usize()
+        .ok_or_else(|| anyhow!("model needs a non-negative integer \"version\""))?;
     if version != MODEL_VERSION {
         bail!("unsupported model version {version} (expected {MODEL_VERSION})");
     }
@@ -84,10 +91,15 @@ pub fn load_model(path: &Path) -> Result<(Factors, ModelMeta)> {
         engine: j.get("engine").as_str().unwrap_or("").to_string(),
         dataset: j.get("dataset").as_str().unwrap_or("").to_string(),
         seed: match j.get("seed") {
-            Json::Str(s) => s.parse().unwrap_or(0),
-            other => other.as_u64().unwrap_or(0),
+            Json::Null => 0,
+            Json::Str(s) => {
+                s.parse().map_err(|_| anyhow!("model \"seed\" is not a u64: {s:?}"))?
+            }
+            other => other
+                .as_u64()
+                .ok_or_else(|| anyhow!("model \"seed\" must be a non-negative integer"))?,
         },
-        iters: j.get("iters").as_usize().unwrap_or(0),
+        iters: j.get_usize_or("iters", 0).map_err(|e| anyhow!("model {e}"))?,
         rel_error: j.get("rel_error").as_f64().unwrap_or(f64::NAN),
     };
     Ok((Factors::from_parts(w, h)?, meta))
@@ -173,5 +185,41 @@ mod tests {
     fn missing_file_is_contextual_error() {
         let err = format!("{:#}", load_model(Path::new("/no/such/model.json")).unwrap_err());
         assert!(err.contains("model"), "{err}");
+    }
+
+    #[test]
+    fn bogus_numbers_in_metadata_error_instead_of_coercing() {
+        // Silent-coercion regression: a negative/fractional version,
+        // iters, or seed must be a parse error — not quietly 0 (which
+        // would flip "unsupported version" semantics and erase
+        // provenance).
+        let path = tmp("coerce");
+        for (field, value) in
+            [("version", "-1"), ("version", "1.5"), ("iters", "-3"), ("seed", "-7")]
+        {
+            let version = if field == "version" { value } else { "1" };
+            let extra = if field == "version" {
+                String::new()
+            } else {
+                format!(", \"{field}\": {value}")
+            };
+            let body = format!(
+                r#"{{"format": "plnmf-model", "version": {version}, "v": 1, "d": 1,
+                    "k": 1, "w": [1], "h": [1]{extra}}}"#
+            );
+            std::fs::write(&path, &body).unwrap();
+            let err = format!("{:#}", load_model(&path).unwrap_err());
+            assert!(err.contains(field), "{field}={value}: {err}");
+        }
+        // A string seed that is not a u64 is rejected too.
+        std::fs::write(
+            &path,
+            r#"{"format": "plnmf-model", "version": 1, "v": 1, "d": 1, "k": 1,
+                "seed": "not-a-number", "w": [1], "h": [1]}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", load_model(&path).unwrap_err());
+        assert!(err.contains("seed"), "{err}");
+        std::fs::remove_file(path).ok();
     }
 }

@@ -102,7 +102,11 @@ impl Manifest {
             .get("version")
             .as_u64()
             .ok_or_else(|| anyhow!("manifest needs an integer \"version\""))?;
-        let max_total_nnz = j.get("max_total_nnz").as_usize().unwrap_or(0);
+        // Absent means unlimited; present-but-bogus (negative,
+        // fractional, overflowing) is a loud error — a typoed budget
+        // must never silently become "unlimited".
+        let max_total_nnz =
+            j.get_usize_or("max_total_nnz", 0).map_err(|e| anyhow!("manifest {e}"))?;
         let entries = j
             .get("models")
             .as_arr()
@@ -729,8 +733,34 @@ mod tests {
             r#"{"format": "plnmf-manifest", "version": 1,
                 "models": [{"name": "a", "path": "x"}, {"name": "a", "path": "y"}]}"#,
             r#"{"format": "plnmf-manifest", "version": 1, "models": [{"path": "x"}]}"#,
+            // Silent-coercion regression: bogus numbers error loudly.
+            r#"{"format": "plnmf-manifest", "version": -1, "models": []}"#,
+            r#"{"format": "plnmf-manifest", "version": 1.5, "models": []}"#,
+            r#"{"format": "plnmf-manifest", "version": 1e300, "models": []}"#,
         ] {
             assert!(Manifest::parse(bad, base).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn manifest_max_total_nnz_is_strict_when_present() {
+        let base = Path::new("/models");
+        let ok = r#"{"format": "plnmf-manifest", "version": 1, "max_total_nnz": 500,
+            "models": [{"name": "a", "path": "a.json"}]}"#;
+        assert_eq!(Manifest::parse(ok, base).unwrap().max_total_nnz, 500);
+        // Absent = unlimited…
+        let absent = r#"{"format": "plnmf-manifest", "version": 1,
+            "models": [{"name": "a", "path": "a.json"}]}"#;
+        assert_eq!(Manifest::parse(absent, base).unwrap().max_total_nnz, 0);
+        // …but a present bogus budget must never silently become 0
+        // (unlimited) — that would quietly disable admission control.
+        for bad_nnz in ["-1", "2.7", "1e300", "\"big\""] {
+            let bad = format!(
+                r#"{{"format": "plnmf-manifest", "version": 1, "max_total_nnz": {bad_nnz},
+                    "models": [{{"name": "a", "path": "a.json"}}]}}"#
+            );
+            let err = format!("{:#}", Manifest::parse(&bad, base).unwrap_err());
+            assert!(err.contains("max_total_nnz"), "nnz={bad_nnz}: {err}");
         }
     }
 

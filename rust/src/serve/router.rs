@@ -36,9 +36,15 @@
 //! * `transform` / `recommend` — routed by `"model"` to the
 //!   **least-loaded live replica** of that shard (fewest in-flight
 //!   requests; ties break to the lowest replica index). The request
-//!   line is forwarded and the response line relayed
+//!   frame is forwarded and the response frame relayed
 //!   **bytes-untouched**, so routed responses are bit-for-bit identical
 //!   to a single daemon's (asserted in `tests/integration_router.rs`).
+//!   This holds for both framings: after a client negotiates PLNB v2
+//!   (`hello {"proto": 2}`, answered by the router itself), its binary
+//!   dense-batch frames are routed exactly like JSON lines — the router
+//!   peeks op + model out of the fixed header, lazily negotiates v2 on
+//!   the pooled worker connection, and relays bytes untouched — so the
+//!   least-loaded/retry/backpressure logic is framing-agnostic.
 //! * `stats` — aggregated: the per-model stats of every replica merged
 //!   (counters summed, averages recomputed) plus a `workers` health map
 //!   with per-replica liveness and queue depth.
@@ -93,8 +99,10 @@ use std::time::{Duration, Instant, SystemTime};
 use anyhow::{anyhow, bail, Context};
 
 use crate::serve::registry::Manifest;
-use crate::serve::server::{
-    err_json, ok_obj, parse_request, read_frame, serve_lines, Client, MAX_LINE_BYTES,
+use crate::serve::server::{parse_request, Client};
+use crate::serve::wire::{
+    self, err_json, handle_hello, ok_obj, read_wire, serve_wire, ConnState, WirePayload,
+    MAX_FRAME_BYTES,
 };
 use crate::serve::worker::{
     probe_free_port, spawn_worker, wait_ready, ManagedWorker, WorkerOpts,
@@ -362,20 +370,22 @@ impl Replica {
         client.request(&Json::obj(vec![("op", Json::str("stats"))]))
     }
 
-    /// Forward one raw request line to this replica's worker and return
-    /// the raw response line. Any failure here is *retryable from the
-    /// caller's side*: the request was not answered, though a
-    /// closed-mid-response one may have been processed. Holding the
-    /// replica lock across the round trip gives each replica the same
-    /// per-model request queue the in-process registry has — concurrent
-    /// requests for one shard spread across replicas instead.
-    fn forward_raw(&self, line: &str) -> Result<String> {
+    /// Forward one raw request frame (JSON line or PLNB binary) to this
+    /// replica's worker and return the raw response frame. Any failure
+    /// here is *retryable from the caller's side*: the request was not
+    /// answered, though a closed-mid-response one may have been
+    /// processed. Holding the replica lock across the round trip gives
+    /// each replica the same per-model request queue the in-process
+    /// registry has — concurrent requests for one shard spread across
+    /// replicas instead.
+    fn forward_wire(&self, payload: &WirePayload) -> Result<WirePayload> {
         let mut st = self.state.lock().unwrap();
         if !st.up {
             bail!("replica {} is down (restart pending)", self.idx);
         }
+        let addr = st.addr;
         if st.conn.is_none() {
-            match Client::connect(st.addr) {
+            match Client::connect(addr) {
                 Ok(c) => {
                     // Bounded reads: one wedged worker must not pin
                     // this replica's queue forever.
@@ -390,15 +400,35 @@ impl Replica {
                     // here — only process-lifecycle events may, or a
                     // transient dial error against a live worker would
                     // down the replica with no recovery path.
-                    return Err(e).with_context(|| format!("dialing worker {}", st.addr));
+                    return Err(e).with_context(|| format!("dialing worker {addr}"));
                 }
             }
         }
-        match st.conn.as_mut().unwrap().request_raw(line) {
+        // A binary frame needs the pooled connection on PLNB v2; the
+        // upgrade is negotiated lazily, once per connection, the first
+        // time a binary frame must cross it (JSON traffic never pays
+        // for it). A worker that only speaks v1 fails this forward —
+        // the retry budget moves the request to a sibling replica.
+        if matches!(payload, WirePayload::Binary(_))
+            && st.conn.as_ref().expect("pooled connection just ensured").proto() < 2
+        {
+            match st.conn.as_mut().expect("pooled connection just ensured").negotiate() {
+                Ok(2) => {}
+                Ok(_) => {
+                    bail!("worker {addr} speaks protocol v1 only — cannot relay a binary frame")
+                }
+                Err(e) => {
+                    st.conn = None;
+                    return Err(e)
+                        .with_context(|| format!("negotiating PLNB v2 with worker {addr}"));
+                }
+            }
+        }
+        match st.conn.as_mut().expect("pooled connection just ensured").request_wire(payload) {
             Ok(resp) => Ok(resp),
             Err(e) => {
                 st.conn = None;
-                Err(e).with_context(|| format!("forwarding to worker {}", st.addr))
+                Err(e).with_context(|| format!("forwarding to worker {addr}"))
             }
         }
     }
@@ -485,23 +515,28 @@ impl Shard {
         }
     }
 
-    /// Route one raw request line: least-loaded pick, retry budget,
-    /// busy ceiling.
-    fn route(&self, line: &str, idempotent: bool) -> std::result::Result<String, RouteFailure> {
-        self.route_with(idempotent, |idx| self.replicas[idx].forward_raw(line))
+    /// Route one raw request frame (either framing): least-loaded pick,
+    /// retry budget, busy ceiling.
+    fn route(
+        &self,
+        payload: &WirePayload,
+        idempotent: bool,
+    ) -> std::result::Result<WirePayload, RouteFailure> {
+        self.route_with(idempotent, |idx| self.replicas[idx].forward_wire(payload))
     }
 
     /// [`Self::route`] with the forward injected — the retry-budget and
-    /// least-loaded accounting, testable without sockets. One request
-    /// makes at most `1 + route_retries` attempts (idempotent ops) or
-    /// exactly 1 (everything else), never re-visiting a replica that
-    /// already failed it. The in-flight slot is reserved via
+    /// least-loaded accounting, testable without sockets (and generic
+    /// over the response type, so the framing never touches it). One
+    /// request makes at most `1 + route_retries` attempts (idempotent
+    /// ops) or exactly 1 (everything else), never re-visiting a replica
+    /// that already failed it. The in-flight slot is reserved via
     /// [`Self::admit`] before each forward and released after it.
-    fn route_with(
+    fn route_with<R>(
         &self,
         idempotent: bool,
-        mut forward: impl FnMut(usize) -> Result<String>,
-    ) -> std::result::Result<String, RouteFailure> {
+        mut forward: impl FnMut(usize) -> Result<R>,
+    ) -> std::result::Result<R, RouteFailure> {
         let budget = if idempotent { self.route_retries } else { 0 };
         let mut tried: Vec<usize> = Vec::new();
         let mut last_err: Option<anyhow::Error> = None;
@@ -844,7 +879,7 @@ fn shutdown_replica(replica: &Replica) {
                 let mut stream = stream;
                 let _ = stream.write_all(b"{\"op\": \"shutdown\"}\n");
                 let mut r = BufReader::new(stream);
-                let _ = read_frame(&mut r, MAX_LINE_BYTES);
+                let _ = read_wire(&mut r, MAX_FRAME_BYTES, false);
             }
         }
     }
@@ -1093,45 +1128,89 @@ fn reload_manifest(ctl: &Control) -> Result<bool> {
 // ---------------------------------------------------------------------------
 
 fn handle_connection(stream: TcpStream, ctl: &Control) {
-    serve_lines(stream, &ctl.shared.requests, ctl.shared.addr, |trimmed| {
-        dispatch(trimmed, ctl)
+    serve_wire(stream, &ctl.shared.requests, ctl.shared.addr, |payload, conn| {
+        dispatch(payload, conn, ctl)
     });
 }
 
-/// Handle one request line, returning the raw response line (routed
+/// A JSON object as a line frame.
+fn line(j: Json) -> WirePayload {
+    WirePayload::Line(j.to_string())
+}
+
+/// Handle one request frame, returning the raw response frame (routed
 /// responses pass through bytes-untouched) and the shutdown flag.
-fn dispatch(line: &str, ctl: &Control) -> (String, bool) {
-    let req = match parse_request(line) {
+fn dispatch(payload: &WirePayload, conn: &mut ConnState, ctl: &Control) -> (WirePayload, bool) {
+    match payload {
+        WirePayload::Line(l) => dispatch_line(payload, l.trim(), conn, ctl),
+        WirePayload::Binary(bytes) => (dispatch_binary(payload, bytes, ctl), false),
+    }
+}
+
+fn dispatch_line(
+    payload: &WirePayload,
+    trimmed: &str,
+    conn: &mut ConnState,
+    ctl: &Control,
+) -> (WirePayload, bool) {
+    let req = match parse_request(trimmed) {
         Ok(req) => req,
-        Err(e) => return (err_json(format!("bad request: {e}")).to_string(), false),
+        Err(e) => return (line(err_json(format!("bad request: {e}"))), false),
     };
     let op = req.get("op").as_str().unwrap_or("");
     match op {
-        "transform" | "recommend" => (route_to_shard(line, &req, op, ctl), false),
-        "ping" => (op_ping(ctl).to_string(), false),
-        "stats" => (op_stats(ctl).to_string(), false),
-        "load" => (op_load(&req, ctl).to_string(), false),
+        "hello" => (line(handle_hello(&req, conn)), false),
+        "transform" | "recommend" => {
+            let Some(name) = req.get("model").as_str() else {
+                return (line(err_json("request needs \"model\"".to_string())), false);
+            };
+            let name = name.to_string();
+            // The ORIGINAL payload is forwarded, untrimmed and uncopied
+            // (worker-side parsing tolerates surrounding whitespace):
+            // the relay path stays zero-copy for line frames, exactly
+            // like binary frames.
+            (route_payload(payload, &name, op_is_idempotent(op), ctl), false)
+        }
+        "ping" => (line(op_ping(ctl)), false),
+        "stats" => (line(op_stats(ctl)), false),
+        "load" => (line(op_load(&req, ctl)), false),
         "unload" => (
-            err_json(
+            line(err_json(
                 "routed daemon: the fleet is declared by the manifest — publish a new \
                  version instead of unload"
                     .to_string(),
-            )
-            .to_string(),
+            )),
             false,
         ),
         "shutdown" => {
             ctl.shared.stop.store(true, Ordering::SeqCst);
-            (ok_obj(vec![("bye", Json::Bool(true))]).to_string(), true)
+            (line(ok_obj(vec![("bye", Json::Bool(true))])), true)
         }
-        "" => (err_json("request needs an \"op\" string".to_string()).to_string(), false),
+        "" => (line(err_json("request needs an \"op\" string".to_string())), false),
         other => (
-            err_json(format!(
-                "unknown op '{other}' (try transform|recommend|stats|load|ping|shutdown)"
-            ))
-            .to_string(),
+            line(err_json(format!(
+                "unknown op '{other}' (try transform|recommend|stats|load|ping|hello|shutdown)"
+            ))),
             false,
         ),
+    }
+}
+
+/// Route one PLNB binary frame: op + model come straight out of the
+/// fixed header (no payload parse), and the frame is relayed to a
+/// replica bytes-untouched, exactly like a JSON line. Both binary ops
+/// are idempotent dense reads, so the retry budget applies. Errors come
+/// back as JSON lines, as everywhere in the protocol.
+fn dispatch_binary(payload: &WirePayload, bytes: &[u8], ctl: &Control) -> WirePayload {
+    match wire::peek_route(bytes) {
+        Ok((op, model)) if op.is_request() => {
+            let name = model.to_string();
+            route_payload(payload, &name, true, ctl)
+        }
+        Ok((op, _)) => line(err_json(format!(
+            "unexpected PLNB frame op {op:?} — only transform/recommend requests route"
+        ))),
+        Err(e) => line(err_json(format!("bad binary frame: {e:#}"))),
     }
 }
 
@@ -1142,18 +1221,20 @@ fn dispatch(line: &str, ctl: &Control) -> (String, bool) {
 /// *caller* decides whether to re-send after that (the router already
 /// used its budget, and never re-sends a non-idempotent request a
 /// worker may have processed).
-fn route_to_shard(line: &str, req: &Json, op: &str, ctl: &Control) -> String {
-    let Some(name) = req.get("model").as_str() else {
-        return err_json("request needs \"model\"".to_string()).to_string();
-    };
+fn route_payload(
+    payload: &WirePayload,
+    name: &str,
+    idempotent: bool,
+    ctl: &Control,
+) -> WirePayload {
     let shard = ctl.shards.read().unwrap().get(name).cloned();
     let Some(shard) = shard else {
         let names = ctl.shards.read().unwrap().keys().cloned().collect::<Vec<_>>().join(", ");
-        return err_json(format!("no model '{name}' routed (have: {names})")).to_string();
+        return line(err_json(format!("no model '{name}' routed (have: {names})")));
     };
-    match shard.route(line, op_is_idempotent(op)) {
+    match shard.route(payload, idempotent) {
         Ok(raw) => raw,
-        Err(RouteFailure::Busy { retry_after_ms }) => Json::obj(vec![
+        Err(RouteFailure::Busy { retry_after_ms }) => line(Json::obj(vec![
             ("ok", Json::Bool(false)),
             (
                 "error",
@@ -1168,15 +1249,13 @@ fn route_to_shard(line: &str, req: &Json, op: &str, ctl: &Control) -> String {
             ("retryable", Json::Bool(true)),
             ("retry_after_ms", Json::num(retry_after_ms as f64)),
             ("model", Json::str(name)),
-        ])
-        .to_string(),
-        Err(RouteFailure::Down(e)) => Json::obj(vec![
+        ])),
+        Err(RouteFailure::Down(e)) => line(Json::obj(vec![
             ("ok", Json::Bool(false)),
             ("error", Json::str(format!("shard '{name}': {e:#}"))),
             ("retryable", Json::Bool(true)),
             ("model", Json::str(name)),
-        ])
-        .to_string(),
+        ])),
     }
 }
 
@@ -1626,7 +1705,8 @@ mod tests {
         let port = probe_free_port("127.0.0.1").unwrap();
         let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
         let shard = Shard::external("m", &[addr], &RouterOpts::default());
-        match shard.route("{\"op\": \"ping\"}", true) {
+        let req = WirePayload::Line("{\"op\": \"ping\"}".to_string());
+        match shard.route(&req, true) {
             Err(RouteFailure::Down(e)) => {
                 assert!(format!("{e:#}").contains("dialing worker"), "{e:#}");
             }
@@ -1634,6 +1714,70 @@ mod tests {
         }
         assert!(shard.replicas[0].is_up());
         assert_eq!(shard.in_flight_total(), 0, "in-flight rebalanced after the failure");
+    }
+
+    #[test]
+    fn binary_frames_route_by_their_header_model() {
+        // A PLNB frame is routed off the fixed header alone: an unknown
+        // model is the same "no model routed" error JSON lines get, and
+        // a known model with a dead endpoint surfaces the retryable
+        // Down class — the routing logic is framing-agnostic.
+        let port = probe_free_port("127.0.0.1").unwrap();
+        let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+        let opts = RouterOpts::default();
+        let mut shards = BTreeMap::new();
+        shards.insert("m".to_string(), Arc::new(Shard::external("m", &[addr], &opts)));
+        let ctl = Control {
+            shards: RwLock::new(shards),
+            shared: Shared {
+                stop: AtomicBool::new(false),
+                requests: AtomicU64::new(0),
+                active: AtomicUsize::new(0),
+                started: Instant::now(),
+                addr,
+            },
+            manifest_path: None,
+            manifest_version: Mutex::new(0),
+            worker_opts: None,
+            opts,
+        };
+        let resp_of = |payload: &WirePayload| -> Json {
+            let mut conn = ConnState { proto: 2 };
+            match dispatch(payload, &mut conn, &ctl) {
+                (WirePayload::Line(s), false) => Json::parse(s.trim()).unwrap(),
+                _ => panic!("expected a JSON line response"),
+            }
+        };
+        let ghost = wire::encode(wire::BinOp::Transform, "ghost", &Json::Null, 1, 2, &[1.0, 2.0])
+            .unwrap();
+        let resp = resp_of(&WirePayload::Binary(ghost));
+        assert!(resp.get("error").as_str().unwrap().contains("no model 'ghost'"), "{resp}");
+        let known = wire::encode(wire::BinOp::Transform, "m", &Json::Null, 1, 2, &[1.0, 2.0])
+            .unwrap();
+        let resp = resp_of(&WirePayload::Binary(known));
+        assert_eq!(resp.get("retryable").as_bool(), Some(true), "{resp}");
+        assert_eq!(resp.get("model").as_str(), Some("m"), "{resp}");
+        // A response-op frame is rejected without routing.
+        let bogus = wire::encode(wire::BinOp::TransformResp, "", &Json::Null, 0, 0, &[]).unwrap();
+        let resp = resp_of(&WirePayload::Binary(bogus));
+        assert!(resp.get("error").as_str().unwrap().contains("only transform/recommend"));
+    }
+
+    #[test]
+    fn merge_model_stats_all_zero_merge_stays_finite() {
+        // Regression: merging replicas that all report zero requests
+        // must keep avg_sweeps at 0.0 (a 0/0 here would serialize as
+        // the literal `NaN`, which is not JSON — every stats consumer
+        // downstream would fail to parse the response).
+        let zero = r#"{"requests": 0,
+            "cold": {"requests": 0, "sweeps": 0, "micro_batches": 0, "avg_sweeps": 0}}"#;
+        let mut a = Json::parse(zero).unwrap();
+        let b = Json::parse(zero).unwrap();
+        merge_model_stats(&mut a, &b);
+        let avg = a.get("cold").get("avg_sweeps").as_f64().unwrap();
+        assert_eq!(avg, 0.0, "zero merged denominator must not produce NaN");
+        let reparsed = Json::parse(&a.to_string()).expect("merged stats must stay valid JSON");
+        assert_eq!(reparsed.get("cold").get("avg_sweeps").as_f64(), Some(0.0));
     }
 
     #[test]

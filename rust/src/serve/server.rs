@@ -22,19 +22,34 @@
 //! | `load` | `name` + `path`, or neither (manifest reload) | `loaded` / `reloaded` |
 //! | `unload` | `name` | — |
 //! | `ping` | — | `pong` |
+//! | `hello` | [`proto`] | negotiated `proto` (see below) |
 //! | `shutdown` | — | `bye`, then the daemon drains and exits |
 //!
-//! Lines are capped at [`MAX_LINE_BYTES`]; an oversized frame gets a
+//! Frames are capped at [`MAX_LINE_BYTES`]; an oversized frame gets a
 //! protocol error and the connection closed (never unbounded buffering
-//! or a hung read loop — fuzzed in `tests/prop_protocol_fuzz.rs`).
+//! or a hung read loop — fuzzed in `tests/prop_protocol_fuzz.rs`), and
+//! a frame that is not UTF-8 gets the distinct `invalid utf-8 in frame`
+//! error instead of a lossy best-guess parse.
+//!
+//! ## PLNB v2 (binary dense batches)
+//!
+//! `{"op": "hello", "proto": 2}` upgrades the connection to the
+//! [`crate::serve::wire`] binary framing for dense `transform` /
+//! `recommend` batches and the `transform` response matrix — raw f32
+//! little-endian behind a 20-byte header instead of JSON text, because
+//! JSON encode/decode dominates round-trip time for large dense batches
+//! (the paper's data-movement argument, off-chip). Sparse queries and
+//! every control op stay JSON on a v2 connection; without the hello the
+//! protocol is bit-for-bit v1.
 //!
 //! `queries` is either dense rows (`[[...V numbers...], ...]`) or sparse
 //! rows (`[{"cols": [...], "vals": [...]}, ...]`); both deserialize into
 //! the same [`Queries`] the in-process API takes, so a daemon round-trip
 //! is **bit-identical** to calling [`crate::serve::Projector`] directly
-//! (JSON numbers are f64, which carries f32 exactly; asserted in
-//! `tests/integration_daemon.rs`). Batches flow through the projector's
-//! nnz-balanced micro-batching unchanged.
+//! (JSON numbers are f64, which carries f32 exactly, and PLNB carries
+//! the f32 bits themselves; asserted in `tests/integration_daemon.rs`).
+//! Batches flow through the projector's nnz-balanced micro-batching
+//! unchanged.
 //!
 //! ## Concurrency
 //!
@@ -47,7 +62,7 @@
 //! The accept loop also polls the attached manifest (every ~2 s) and
 //! hot-reloads the fleet when its `version` increases.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufReader, ErrorKind};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -56,131 +71,27 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context};
 
 use crate::linalg::Mat;
-use crate::serve::projector::Queries;
+use crate::serve::projector::{ProjectStats, Queries};
 use crate::serve::registry::ModelRegistry;
+use crate::serve::wire::{
+    self, handle_hello, read_wire, serve_wire, BinFrame, BinOp, WirePayload, WireRead,
+    MAX_FRAME_BYTES,
+};
 use crate::sparse::Csr;
 use crate::util::json::Json;
 use crate::util::Timer;
 use crate::{Elem, Result};
+
+pub(crate) use crate::serve::wire::{err_json, ok_obj};
 
 /// How often the accept loop checks the manifest for a version bump.
 const MANIFEST_POLL: Duration = Duration::from_secs(2);
 /// How long `run` waits for in-flight connections after `shutdown`.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
 
-/// Hard cap on one protocol line (request or response). A peer that
-/// streams more than this without a newline gets a protocol error and
-/// the connection closed — never unbounded buffering or a hung read
-/// loop. 64 MiB clears the largest dense batch the bench ships by two
-/// orders of magnitude.
-pub const MAX_LINE_BYTES: usize = 64 * 1024 * 1024;
-
-/// Outcome of one bounded frame read.
-pub(crate) enum FrameRead {
-    /// A complete newline-terminated line (without its newline).
-    Frame(String),
-    /// The stream ended mid-line: whatever arrived before the close.
-    /// NOT a complete frame — the peer died (or sent a final unflushed
-    /// fragment), and treating the bytes as an answer would hand a
-    /// truncated response to a caller as if it were whole.
-    Partial(String),
-    /// The peer exceeded the byte cap before sending a newline; the
-    /// payload carries how many bytes were consumed.
-    TooLong(usize),
-    /// Clean end of stream before any byte of a new frame.
-    Eof,
-}
-
-/// Move the frame bytes into a `String`, copying only in the (never on
-/// our own wire) invalid-UTF-8 case — frames run up to [`MAX_LINE_BYTES`].
-fn into_frame_string(buf: Vec<u8>) -> String {
-    String::from_utf8(buf)
-        .unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
-}
-
-/// Read one newline-delimited frame with a byte cap: the codec
-/// underneath the daemon, the router, and the protocol client.
-pub(crate) fn read_frame(r: &mut impl BufRead, max: usize) -> std::io::Result<FrameRead> {
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        let chunk = r.fill_buf()?;
-        if chunk.is_empty() {
-            return Ok(if buf.is_empty() {
-                FrameRead::Eof
-            } else {
-                FrameRead::Partial(into_frame_string(buf))
-            });
-        }
-        match chunk.iter().position(|&b| b == b'\n') {
-            Some(i) => {
-                buf.extend_from_slice(&chunk[..i]);
-                r.consume(i + 1);
-                if buf.len() > max {
-                    return Ok(FrameRead::TooLong(buf.len()));
-                }
-                return Ok(FrameRead::Frame(into_frame_string(buf)));
-            }
-            None => {
-                let n = chunk.len();
-                buf.extend_from_slice(chunk);
-                r.consume(n);
-                if buf.len() > max {
-                    return Ok(FrameRead::TooLong(buf.len()));
-                }
-            }
-        }
-    }
-}
-
-/// The shared per-connection serve loop (daemon and router): bounded
-/// frame reads, one response line per request line, oversized-frame
-/// protocol error + close, empty lines skipped. `dispatch` maps one
-/// trimmed request line to `(response line, is_shutdown)`; on shutdown
-/// the loop wakes the accept loop at `wake_addr` so it observes the
-/// stop flag, then closes. A `Partial` read means the peer died
-/// mid-line — nothing to answer.
-pub(crate) fn serve_lines(
-    stream: TcpStream,
-    requests: &AtomicU64,
-    wake_addr: SocketAddr,
-    mut dispatch: impl FnMut(&str) -> (String, bool),
-) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    loop {
-        let line = match read_frame(&mut reader, MAX_LINE_BYTES) {
-            Ok(FrameRead::Frame(line)) => line,
-            Ok(FrameRead::TooLong(n)) => {
-                requests.fetch_add(1, Ordering::SeqCst);
-                let mut out = err_json(format!(
-                    "request line exceeds {MAX_LINE_BYTES} bytes ({n} read); closing connection"
-                ))
-                .to_string();
-                out.push('\n');
-                let _ = writer.write_all(out.as_bytes());
-                break;
-            }
-            Ok(FrameRead::Partial(_)) | Ok(FrameRead::Eof) | Err(_) => break,
-        };
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        requests.fetch_add(1, Ordering::SeqCst);
-        let (mut out, is_shutdown) = dispatch(trimmed);
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
-            break;
-        }
-        if is_shutdown {
-            let _ = TcpStream::connect(wake_addr);
-            break;
-        }
-    }
-}
+/// Historical name of the frame cap (one NDJSON line or one binary
+/// frame) — see [`crate::serve::wire::MAX_FRAME_BYTES`].
+pub const MAX_LINE_BYTES: usize = MAX_FRAME_BYTES;
 
 struct Shared {
     stop: AtomicBool,
@@ -282,14 +193,33 @@ impl Server {
 }
 
 fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Shared) {
-    serve_lines(stream, &shared.requests, shared.addr, |trimmed| {
-        match parse_request(trimmed) {
-            Ok(req) => {
-                let is_shutdown = req.get("op").as_str() == Some("shutdown");
-                (dispatch(&req, registry, shared).to_string(), is_shutdown)
+    serve_wire(stream, &shared.requests, shared.addr, |payload, conn| match payload {
+        WirePayload::Line(line) => {
+            let trimmed = line.trim();
+            match parse_request(trimmed) {
+                Ok(req) => {
+                    let op = req.get("op").as_str().unwrap_or("");
+                    if op == "hello" {
+                        // Connection-layer negotiation, not a registry
+                        // op: after this, PLNB frames are recognized.
+                        return (
+                            WirePayload::Line(handle_hello(&req, conn).to_string()),
+                            false,
+                        );
+                    }
+                    let is_shutdown = op == "shutdown";
+                    (
+                        WirePayload::Line(dispatch(&req, registry, shared).to_string()),
+                        is_shutdown,
+                    )
+                }
+                Err(e) => (
+                    WirePayload::Line(err_json(format!("bad request: {e}")).to_string()),
+                    false,
+                ),
             }
-            Err(e) => (err_json(format!("bad request: {e}")).to_string(), false),
         }
+        WirePayload::Binary(bytes) => (dispatch_binary(bytes, registry), false),
     });
 }
 
@@ -319,19 +249,22 @@ fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
         }
         "" => Err(anyhow!("request needs an \"op\" string")),
         other => Err(anyhow!(
-            "unknown op '{other}' (try transform|recommend|stats|load|unload|ping|shutdown)"
+            "unknown op '{other}' (try transform|recommend|stats|load|unload|ping|hello|shutdown)"
         )),
     };
     result.unwrap_or_else(|e| err_json(format!("{e:#}")))
 }
 
-pub(crate) fn ok_obj(mut pairs: Vec<(&str, Json)>) -> Json {
-    pairs.insert(0, ("ok", Json::Bool(true)));
-    Json::obj(pairs)
-}
-
-pub(crate) fn err_json(msg: String) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+/// Decode and answer one PLNB v2 frame. Errors come back as JSON lines
+/// (no JSON value starts with the magic byte, so a client can never
+/// confuse the framings); only the `transform` response rides binary.
+fn dispatch_binary(bytes: &[u8], registry: &ModelRegistry) -> WirePayload {
+    let result = wire::decode(bytes).and_then(|frame| match frame.op {
+        BinOp::Transform => op_transform_binary(frame, registry),
+        BinOp::Recommend => op_recommend_binary(frame, registry),
+        BinOp::TransformResp => Err(anyhow!("unexpected PLNB response frame in a request")),
+    });
+    result.unwrap_or_else(|e| WirePayload::Line(err_json(format!("{e:#}")).to_string()))
 }
 
 // ---------------------------------------------------------------------------
@@ -351,6 +284,14 @@ impl OwnedQueries {
             OwnedQueries::Sparse(c) => Queries::Sparse(c),
         }
     }
+}
+
+/// An optional non-negative integer field of a request: absent →
+/// `default`; present but negative / fractional / overflowing → a loud
+/// error (see [`Json::get_usize_or`]). A client sending `"top": -1`
+/// must hear about it, never silently get the default.
+pub(crate) fn opt_usize(req: &Json, key: &str, default: usize) -> Result<usize> {
+    req.get_usize_or(key, default).map_err(|e| anyhow!(e))
 }
 
 /// Deserialize a request's `queries` against a model with `v` features.
@@ -427,6 +368,25 @@ fn parse_queries(req: &Json, v: usize) -> Result<OwnedQueries> {
     }
 }
 
+/// Validate a binary request's batch against the model and move its
+/// payload into a dense query matrix (no copy — the frame is consumed).
+fn binary_queries(frame: BinFrame, v: usize) -> Result<Mat> {
+    if frame.rows == 0 {
+        bail!("empty query batch");
+    }
+    if frame.cols != v {
+        bail!(
+            "binary batch is {}x{}, model expects V={v}",
+            frame.rows,
+            frame.cols
+        );
+    }
+    if let Some(i) = frame.data.iter().position(|x| !x.is_finite()) {
+        bail!("binary batch value {i} is not finite");
+    }
+    Ok(Mat::from_vec(frame.rows, frame.cols, frame.data))
+}
+
 /// Serialize a query batch into the protocol's `queries` value — the
 /// client-side counterpart of the daemon's parser (used by the bench,
 /// the example, and the integration tests).
@@ -465,7 +425,26 @@ fn mat_rows_json(m: &Mat) -> Json {
     )
 }
 
-fn warm_json(ps: &crate::serve::projector::ProjectStats) -> Json {
+/// Parse a response's row-of-rows matrix (e.g. `"h"`) back into exact
+/// f32s — the inverse of [`mat_rows_json`], shared by the protocol
+/// client and the tests.
+pub fn mat_from_json_rows(rows: &Json) -> Result<Mat> {
+    let rows = rows.as_arr().ok_or_else(|| anyhow!("expected an array of rows"))?;
+    let cols = rows.first().and_then(|r| r.as_arr()).map(|r| r.len()).unwrap_or(0);
+    let mut data: Vec<Elem> = Vec::with_capacity(rows.len() * cols);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().ok_or_else(|| anyhow!("row {i} is not an array"))?;
+        if row.len() != cols {
+            bail!("row {i} has {} entries, row 0 has {cols}", row.len());
+        }
+        for x in row {
+            data.push(x.as_f64().ok_or_else(|| anyhow!("row {i} has a non-number"))? as Elem);
+        }
+    }
+    Ok(Mat::from_vec(rows.len(), cols, data))
+}
+
+fn warm_json(ps: &ProjectStats) -> Json {
     Json::obj(vec![
         ("hits", Json::num(ps.warm_hits as f64)),
         ("misses", Json::num(ps.warm_misses as f64)),
@@ -497,19 +476,27 @@ fn op_transform(req: &Json, registry: &ModelRegistry) -> Result<Json> {
     ]))
 }
 
-fn op_recommend(req: &Json, registry: &ModelRegistry) -> Result<Json> {
-    let name = req
-        .get("model")
-        .as_str()
-        .ok_or_else(|| anyhow!("recommend needs \"model\""))?;
-    let entry = registry.get(name)?;
-    let q = parse_queries(req, entry.projector().v())?;
-    let top = req.get("top").as_usize().unwrap_or(10);
-    let exclude_seen = req.get("exclude_seen").as_bool().unwrap_or(false);
-    let warm = req.get("warm").as_bool().unwrap_or(true);
+/// The binary twin of [`op_transform`]: raw f32 batch in, raw f32 `h`
+/// out, with residuals/counters riding the response meta segment.
+fn op_transform_binary(frame: BinFrame, registry: &ModelRegistry) -> Result<WirePayload> {
+    let entry = registry.get(&frame.model)?;
+    let name = frame.model.clone();
+    let warm = frame.meta.get("warm").as_bool().unwrap_or(true);
+    let q = binary_queries(frame, entry.projector().v())?;
     let t = Timer::start();
-    let (recs, ps) = entry.recommend(q.as_queries(), top, exclude_seen, warm)?;
-    let recs_json = Json::Arr(
+    let (h, res, ps) = entry.transform(Queries::Dense(&q), warm)?;
+    let meta = ok_obj(vec![
+        ("model", Json::str(name)),
+        ("residuals", Json::Arr(res.iter().map(|&x| Json::Num(x)).collect())),
+        ("warm", warm_json(&ps)),
+        ("secs", Json::num(t.elapsed_secs())),
+    ]);
+    let out = wire::encode(BinOp::TransformResp, "", &meta, h.rows(), h.cols(), h.data())?;
+    Ok(WirePayload::Binary(out))
+}
+
+fn recs_json(recs: &[Vec<(u32, Elem)>]) -> Json {
+    Json::Arr(
         recs.iter()
             .map(|rec| {
                 Json::Arr(
@@ -521,13 +508,48 @@ fn op_recommend(req: &Json, registry: &ModelRegistry) -> Result<Json> {
                 )
             })
             .collect(),
-    );
-    Ok(ok_obj(vec![
+    )
+}
+
+/// The shared recommend response shape — identical whether the request
+/// arrived as JSON or as a PLNB frame (top-N pairs are small, so the
+/// response stays JSON on both protocols).
+fn recommend_response(name: &str, recs: &[Vec<(u32, Elem)>], ps: &ProjectStats, secs: f64) -> Json {
+    ok_obj(vec![
         ("model", Json::str(name)),
-        ("recs", recs_json),
-        ("warm", warm_json(&ps)),
-        ("secs", Json::num(t.elapsed_secs())),
-    ]))
+        ("recs", recs_json(recs)),
+        ("warm", warm_json(ps)),
+        ("secs", Json::num(secs)),
+    ])
+}
+
+fn op_recommend(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    let name = req
+        .get("model")
+        .as_str()
+        .ok_or_else(|| anyhow!("recommend needs \"model\""))?;
+    let entry = registry.get(name)?;
+    let q = parse_queries(req, entry.projector().v())?;
+    let top = opt_usize(req, "top", 10)?;
+    let exclude_seen = req.get("exclude_seen").as_bool().unwrap_or(false);
+    let warm = req.get("warm").as_bool().unwrap_or(true);
+    let t = Timer::start();
+    let (recs, ps) = entry.recommend(q.as_queries(), top, exclude_seen, warm)?;
+    Ok(recommend_response(name, &recs, &ps, t.elapsed_secs()))
+}
+
+fn op_recommend_binary(frame: BinFrame, registry: &ModelRegistry) -> Result<WirePayload> {
+    let entry = registry.get(&frame.model)?;
+    let name = frame.model.clone();
+    let top = opt_usize(&frame.meta, "top", 10)?;
+    let exclude_seen = frame.meta.get("exclude_seen").as_bool().unwrap_or(false);
+    let warm = frame.meta.get("warm").as_bool().unwrap_or(true);
+    let q = binary_queries(frame, entry.projector().v())?;
+    let t = Timer::start();
+    let (recs, ps) = entry.recommend(Queries::Dense(&q), top, exclude_seen, warm)?;
+    Ok(WirePayload::Line(
+        recommend_response(&name, &recs, &ps, t.elapsed_secs()).to_string(),
+    ))
 }
 
 fn op_stats(registry: &ModelRegistry, shared: &Shared) -> Json {
@@ -576,7 +598,7 @@ fn op_unload(req: &Json, registry: &ModelRegistry) -> Result<Json> {
 
 /// Marker carried by every [`Client`] error where the peer vanished
 /// after the request was (or may have been) sent but before a complete
-/// response line arrived. The vendored `anyhow` has no downcasting, so
+/// response frame arrived. The vendored `anyhow` has no downcasting, so
 /// the distinct error class is a message marker; classify with
 /// [`Client::is_connection_closed`]. The distinction matters to callers
 /// like the router's pooled client: a closed-mid-response request may
@@ -584,20 +606,23 @@ fn op_unload(req: &Json, registry: &ModelRegistry) -> Result<Json> {
 /// it is surfaced as a retryable error instead.
 pub const CLOSED_MID_RESPONSE: &str = "connection closed mid-response";
 
-/// A blocking protocol client: one request line out, one response line
-/// in. Used by the daemon bench, the router's per-shard pools, the
-/// example, the integration tests, and anyone driving the daemon from
-/// Rust.
+/// A blocking protocol client: one request frame out, one response
+/// frame in. Used by the daemon bench, the router's per-shard pools,
+/// the example, the integration tests, and anyone driving the daemon
+/// from Rust. Starts on the v1 NDJSON protocol; [`Self::negotiate`]
+/// upgrades to PLNB v2 binary framing where the peer supports it, with
+/// a transparent v1 fallback where it does not.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    proto: u8,
 }
 
 impl Client {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to plnmf daemon")?;
         let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        Ok(Client { reader, writer: stream })
+        Ok(Client { reader, writer: stream, proto: 1 })
     }
 
     /// [`Self::connect`] with a bounded dial: a blackholed peer fails
@@ -607,7 +632,33 @@ impl Client {
         let stream = TcpStream::connect_timeout(addr, timeout)
             .context("connecting to plnmf daemon")?;
         let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        Ok(Client { reader, writer: stream })
+        Ok(Client { reader, writer: stream, proto: 1 })
+    }
+
+    /// The protocol this connection is on (1 until a successful
+    /// [`Self::negotiate`] lands on 2).
+    pub fn proto(&self) -> u8 {
+        self.proto
+    }
+
+    /// Offer the daemon a `hello {"proto": 2}` upgrade and adopt
+    /// whatever it answers. A peer that rejects the op entirely (a
+    /// pre-v2 daemon answering `unknown op 'hello'`) leaves the client
+    /// on v1 — the auto-upgrade is always safe to attempt. Transport
+    /// failures are real errors.
+    pub fn negotiate(&mut self) -> Result<u8> {
+        let resp = self.request(&Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("proto", Json::num(wire::PROTO_MAX as f64)),
+        ]))?;
+        self.proto = if resp.get("ok").as_bool() == Some(true)
+            && resp.get("proto").as_u64() == Some(wire::PROTO_MAX)
+        {
+            2
+        } else {
+            1
+        };
+        Ok(self.proto)
     }
 
     /// Whether `err` is the distinct "connection closed mid-response"
@@ -637,25 +688,39 @@ impl Client {
         self.writer.set_read_timeout(timeout).context("setting read timeout")
     }
 
+    /// Read one response frame (line or, on a v2 connection, binary).
+    fn read_response(&mut self) -> Result<WirePayload> {
+        match read_wire(&mut self.reader, MAX_FRAME_BYTES, self.proto >= 2) {
+            Ok(WireRead::Payload(p)) => Ok(p),
+            Ok(WireRead::Eof) => bail!("{CLOSED_MID_RESPONSE} (EOF before a response frame)"),
+            Ok(WireRead::Partial(n)) => bail!(
+                "{CLOSED_MID_RESPONSE} (EOF after {n} bytes of an incomplete response frame)"
+            ),
+            Ok(WireRead::TooLong(n)) => {
+                bail!("response frame exceeds {MAX_FRAME_BYTES} bytes ({n} read or declared)")
+            }
+            Ok(WireRead::Bad { msg, .. }) => bail!("bad response frame: {msg}"),
+            Err(e) => Err(anyhow!("{CLOSED_MID_RESPONSE} ({e})")),
+        }
+    }
+
     /// Send one already-serialized request line and return the raw
     /// response line, bytes untouched — the router's forwarding path
     /// (relaying the worker's exact bytes is what keeps routed
     /// responses bit-for-bit identical to a single daemon's).
     pub fn request_raw(&mut self, line: &str) -> Result<String> {
-        self.writer.write_all(line.as_bytes()).context("writing request")?;
-        self.writer.write_all(b"\n").context("writing request")?;
-        match read_frame(&mut self.reader, MAX_LINE_BYTES) {
-            Ok(FrameRead::Frame(resp)) => Ok(resp),
-            Ok(FrameRead::Eof) => bail!("{CLOSED_MID_RESPONSE} (EOF before a response line)"),
-            Ok(FrameRead::Partial(got)) => bail!(
-                "{CLOSED_MID_RESPONSE} (EOF after {} bytes of an unterminated response line)",
-                got.len()
-            ),
-            Ok(FrameRead::TooLong(n)) => {
-                bail!("response line exceeds {MAX_LINE_BYTES} bytes ({n} read)")
-            }
-            Err(e) => Err(anyhow!("{CLOSED_MID_RESPONSE} ({e})")),
+        wire::write_line(&mut self.writer, line).context("writing request")?;
+        match self.read_response()? {
+            WirePayload::Line(resp) => Ok(resp),
+            WirePayload::Binary(_) => bail!("unexpected binary response frame to a JSON request"),
         }
+    }
+
+    /// Send one request frame of either framing and return the raw
+    /// response frame — the router's relay path for v2 connections.
+    pub(crate) fn request_wire(&mut self, req: &WirePayload) -> Result<WirePayload> {
+        req.write_to(&mut self.writer).context("writing request")?;
+        self.read_response()
     }
 
     /// Send one request, read one response (whatever its `ok`).
@@ -674,6 +739,120 @@ impl Client {
             );
         }
         Ok(resp)
+    }
+
+    /// One dense `transform` round trip on the negotiated framing:
+    /// PLNB v2 binary frames after a successful [`Self::negotiate`],
+    /// the v1 JSON encoding otherwise — same answer either way (parity
+    /// asserted in the integration tests). Returns `(h, residuals,
+    /// response meta)`.
+    pub fn transform_dense(
+        &mut self,
+        model: &str,
+        queries: &Mat,
+        warm: bool,
+    ) -> Result<(Mat, Vec<f64>, Json)> {
+        if self.proto >= 2 {
+            let meta = Json::obj(vec![("warm", Json::Bool(warm))]);
+            let frame = wire::encode(
+                BinOp::Transform,
+                model,
+                &meta,
+                queries.rows(),
+                queries.cols(),
+                queries.data(),
+            )?;
+            match self.request_wire(&WirePayload::Binary(frame))? {
+                WirePayload::Binary(bytes) => {
+                    let f = wire::decode(&bytes)?;
+                    if f.op != BinOp::TransformResp {
+                        bail!("unexpected PLNB op in a transform response");
+                    }
+                    let residuals = f
+                        .meta
+                        .get("residuals")
+                        .as_arr()
+                        .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                        .unwrap_or_default();
+                    Ok((Mat::from_vec(f.rows, f.cols, f.data), residuals, f.meta))
+                }
+                WirePayload::Line(s) => {
+                    let resp =
+                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+                    bail!(
+                        "daemon error: {}",
+                        resp.get("error").as_str().unwrap_or("(no error message)")
+                    )
+                }
+            }
+        } else {
+            let resp = self.request_ok(&Json::obj(vec![
+                ("op", Json::str("transform")),
+                ("model", Json::str(model)),
+                ("queries", queries_to_json(Queries::Dense(queries))),
+                ("warm", Json::Bool(warm)),
+            ]))?;
+            let h = mat_from_json_rows(resp.get("h"))?;
+            let residuals = resp
+                .get("residuals")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default();
+            Ok((h, residuals, resp))
+        }
+    }
+
+    /// One dense `recommend` round trip on the negotiated framing (the
+    /// response — small top-N pairs — is a JSON object on both
+    /// protocols). Returns the parsed response.
+    pub fn recommend_dense(
+        &mut self,
+        model: &str,
+        queries: &Mat,
+        top: usize,
+        exclude_seen: bool,
+        warm: bool,
+    ) -> Result<Json> {
+        if self.proto >= 2 {
+            let meta = Json::obj(vec![
+                ("top", Json::num(top as f64)),
+                ("exclude_seen", Json::Bool(exclude_seen)),
+                ("warm", Json::Bool(warm)),
+            ]);
+            let frame = wire::encode(
+                BinOp::Recommend,
+                model,
+                &meta,
+                queries.rows(),
+                queries.cols(),
+                queries.data(),
+            )?;
+            match self.request_wire(&WirePayload::Binary(frame))? {
+                WirePayload::Line(s) => {
+                    let resp =
+                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+                    if resp.get("ok").as_bool() != Some(true) {
+                        bail!(
+                            "daemon error: {}",
+                            resp.get("error").as_str().unwrap_or("(no error message)")
+                        );
+                    }
+                    Ok(resp)
+                }
+                WirePayload::Binary(_) => {
+                    bail!("unexpected binary response frame to a recommend request")
+                }
+            }
+        } else {
+            self.request_ok(&Json::obj(vec![
+                ("op", Json::str("recommend")),
+                ("model", Json::str(model)),
+                ("queries", queries_to_json(Queries::Dense(queries))),
+                ("top", Json::num(top as f64)),
+                ("exclude_seen", Json::Bool(exclude_seen)),
+                ("warm", Json::Bool(warm)),
+            ]))
+        }
     }
 }
 
@@ -735,6 +914,16 @@ mod tests {
     }
 
     #[test]
+    fn mat_from_json_rows_inverts_mat_rows_json() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as Elem * 0.25);
+        let re = mat_from_json_rows(&mat_rows_json(&m)).unwrap();
+        assert_eq!(re, m);
+        assert!(mat_from_json_rows(&Json::parse("[[1], [1, 2]]").unwrap()).is_err());
+        assert!(mat_from_json_rows(&Json::parse("[[1], \"x\"]").unwrap()).is_err());
+        assert!(mat_from_json_rows(&Json::parse("3").unwrap()).is_err());
+    }
+
+    #[test]
     fn request_line_parsing_rejects_trailing_junk() {
         assert!(parse_request(r#"{"op": "ping"}"#).is_ok());
         assert!(parse_request("{\"op\": \"ping\"}  ").is_ok());
@@ -743,40 +932,23 @@ mod tests {
     }
 
     #[test]
-    fn read_frame_bounds_and_splits_lines() {
-        let feed = |src: &str, max: usize| -> Vec<FrameRead> {
-            let mut r = BufReader::new(std::io::Cursor::new(src.as_bytes().to_vec()));
-            let mut out = Vec::new();
-            loop {
-                match read_frame(&mut r, max).unwrap() {
-                    FrameRead::Eof => break,
-                    f => out.push(f),
-                }
-            }
-            out
-        };
-        // Two lines plus an unterminated tail: the tail is NOT a
-        // complete frame — the stream died mid-line.
-        let frames = feed("abc\ndef\ntail", 100);
-        assert_eq!(frames.len(), 3);
-        match (&frames[0], &frames[1], &frames[2]) {
-            (FrameRead::Frame(a), FrameRead::Frame(b), FrameRead::Partial(c)) => {
-                assert_eq!((a.as_str(), b.as_str(), c.as_str()), ("abc", "def", "tail"));
-            }
-            _ => panic!("expected two frames and a partial"),
+    fn optional_integers_are_strict_when_present() {
+        // Regression for the silent-coercion class: a present-but-bogus
+        // count must error, never quietly become the default.
+        let ok = Json::parse(r#"{"top": 5}"#).unwrap();
+        assert_eq!(opt_usize(&ok, "top", 10).unwrap(), 5);
+        let absent = Json::parse(r#"{"other": 1}"#).unwrap();
+        assert_eq!(opt_usize(&absent, "top", 10).unwrap(), 10);
+        for bad in [r#"{"top": -1}"#, r#"{"top": 2.7}"#, r#"{"top": 1e300}"#, r#"{"top": "5"}"#] {
+            let req = Json::parse(bad).unwrap();
+            let err = format!("{:#}", opt_usize(&req, "top", 10).unwrap_err());
+            assert!(err.contains("top"), "{bad}: {err}");
         }
-        // Exactly at the cap is fine; one byte over is TooLong.
-        match &feed("abcde\n", 5)[0] {
-            FrameRead::Frame(f) => assert_eq!(f, "abcde"),
-            _ => panic!("cap is inclusive"),
-        }
-        assert!(matches!(feed("abcdef\n", 5)[0], FrameRead::TooLong(_)));
-        assert!(matches!(feed("abcdefgh", 5)[0], FrameRead::TooLong(_)));
     }
 
     #[test]
     fn closed_mid_response_is_classified_distinctly() {
-        let closed = anyhow!("{CLOSED_MID_RESPONSE} (EOF before a response line)")
+        let closed = anyhow!("{CLOSED_MID_RESPONSE} (EOF before a response frame)")
             .context("forwarding to shard 'a'");
         assert!(Client::is_connection_closed(&closed));
         let other = anyhow!("bad response JSON: oops").context("forwarding to shard 'a'");

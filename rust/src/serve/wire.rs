@@ -1,0 +1,706 @@
+//! PLNB v2 — the length-prefixed binary frame codec for dense batches,
+//! plus the framed-connection loop shared by the daemon and the router.
+//!
+//! PL-NMF's thesis is that data movement, not arithmetic, sets the
+//! budget — and the serving bench shows the same off-chip: JSON
+//! encode/decode dominates daemon round-trip time for large dense
+//! batches (`serving_daemon.csv`). A 256×128 f32 batch is 128 KiB of
+//! payload but ~0.5 MB of JSON text, every byte of which is formatted,
+//! escaped, and re-parsed. PLNB v2 ships the same matrix as raw
+//! little-endian f32 behind a fixed header, so the wire cost returns to
+//! the data's actual size.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "PLNB"
+//! 4       1     version (2)
+//! 5       1     op      (0x01 transform, 0x02 recommend,
+//!                        0x81 transform response)
+//! 6       2     name_len  u16 — model-name bytes (0 in responses)
+//! 8       4     meta_len  u32 — JSON meta segment bytes (may be 0)
+//! 12      4     rows      u32
+//! 16      4     cols      u32
+//! 20      ...   name bytes, then meta bytes, then rows*cols f32 LE
+//! ```
+//!
+//! The meta segment is a small JSON object carrying what the fixed
+//! header cannot: request options (`warm`, `top`, `exclude_seen`) and
+//! response extras (`model`, `residuals`, `warm` counters, `secs`).
+//! The declared total length is validated against the shared
+//! [`MAX_FRAME_BYTES`] cap **before any payload allocation** — a
+//! hostile header with `rows = cols = u32::MAX` is a one-line protocol
+//! error, never a 64 GiB allocation or a hung read.
+//!
+//! ## Negotiation
+//!
+//! Binary framing is strictly opt-in per connection: a client sends the
+//! JSON line `{"op": "hello", "proto": 2}` and the peer answers
+//! `{"ok": true, "proto": 2}` (or the highest version it speaks).
+//! Without that hello the connection is byte-for-byte the v1 NDJSON
+//! protocol, so every pre-v2 client keeps working unchanged. After the
+//! hello, frames beginning with the magic byte `P` are binary and
+//! everything else is still a newline-delimited JSON line — sparse-row
+//! queries and control ops (`stats`/`ping`/`load`/`shutdown`) never
+//! leave JSON, and error responses to binary requests come back as
+//! JSON lines (no JSON value starts with `P`, so the two framings
+//! cannot be confused).
+//!
+//! What rides binary: `transform`/`recommend` dense query batches, and
+//! the `transform` response matrix (the two payloads that actually
+//! scale with batch size). `recommend` responses are top-N pairs —
+//! small — and stay JSON even on a v2 connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail};
+
+use crate::util::json::Json;
+use crate::{Elem, Result};
+
+/// Hard cap on one protocol frame (request or response), shared by the
+/// NDJSON line reader and the binary frame reader. A peer that declares
+/// or streams more than this gets a protocol error and the connection
+/// closed — never unbounded buffering or a hung read loop. 64 MiB
+/// clears the largest dense batch the bench ships by two orders of
+/// magnitude.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// First bytes of every binary frame.
+pub const PLNB_MAGIC: [u8; 4] = *b"PLNB";
+
+/// Binary frame format version.
+pub const PLNB_VERSION: u8 = 2;
+
+/// Fixed header size of a binary frame.
+pub const HEADER_LEN: usize = 20;
+
+/// Highest protocol version this build negotiates via `hello`.
+pub const PROTO_MAX: u64 = 2;
+
+/// Operation byte of a binary frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    /// Dense transform request (client → daemon).
+    Transform = 0x01,
+    /// Dense recommend request (client → daemon; the response is JSON).
+    Recommend = 0x02,
+    /// Transform response carrying the h matrix (daemon → client).
+    TransformResp = 0x81,
+}
+
+impl BinOp {
+    pub fn from_byte(b: u8) -> Option<BinOp> {
+        match b {
+            0x01 => Some(BinOp::Transform),
+            0x02 => Some(BinOp::Recommend),
+            0x81 => Some(BinOp::TransformResp),
+            _ => None,
+        }
+    }
+
+    /// Whether this op is a request the router may forward (both data
+    /// requests are idempotent — pure reads of model state).
+    pub fn is_request(self) -> bool {
+        matches!(self, BinOp::Transform | BinOp::Recommend)
+    }
+}
+
+/// A fully decoded binary frame.
+pub struct BinFrame {
+    pub op: BinOp,
+    /// Model name (empty in responses).
+    pub model: String,
+    /// The JSON meta segment ([`Json::Null`] when absent).
+    pub meta: Json,
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major rows×cols payload.
+    pub data: Vec<Elem>,
+}
+
+/// Validate a fixed header and return the frame's total declared length
+/// (header included). Computed in u128 so a hostile `rows*cols` can
+/// never overflow before the cap check.
+fn declared_len(header: &[u8; HEADER_LEN]) -> std::result::Result<u128, String> {
+    if header[..4] != PLNB_MAGIC {
+        return Err(format!(
+            "bad binary frame magic {:?} (expected \"PLNB\")",
+            &header[..4]
+        ));
+    }
+    if header[4] != PLNB_VERSION {
+        return Err(format!(
+            "unsupported PLNB version {} (this daemon speaks {PLNB_VERSION})",
+            header[4]
+        ));
+    }
+    if BinOp::from_byte(header[5]).is_none() {
+        return Err(format!("unknown PLNB op 0x{:02x}", header[5]));
+    }
+    let name_len = u16::from_le_bytes([header[6], header[7]]) as u128;
+    let meta_len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as u128;
+    let rows = u32::from_le_bytes([header[12], header[13], header[14], header[15]]) as u128;
+    let cols = u32::from_le_bytes([header[16], header[17], header[18], header[19]]) as u128;
+    Ok(HEADER_LEN as u128 + name_len + meta_len + rows * cols * 4)
+}
+
+/// Encode one binary frame. `data` is the row-major rows×cols payload;
+/// the frame is rejected (not truncated) when any segment overflows its
+/// header field or the total exceeds [`MAX_FRAME_BYTES`].
+pub fn encode(
+    op: BinOp,
+    model: &str,
+    meta: &Json,
+    rows: usize,
+    cols: usize,
+    data: &[Elem],
+) -> Result<Vec<u8>> {
+    if rows.checked_mul(cols) != Some(data.len()) {
+        bail!("PLNB encode: {rows}x{cols} frame with {} data values", data.len());
+    }
+    if rows > u32::MAX as usize || cols > u32::MAX as usize {
+        bail!("PLNB encode: shape {rows}x{cols} does not fit the u32 header fields");
+    }
+    let name = model.as_bytes();
+    if name.len() > u16::MAX as usize {
+        bail!("PLNB encode: model name is {} bytes (max {})", name.len(), u16::MAX);
+    }
+    let meta_s = if meta.is_null() { String::new() } else { meta.to_string() };
+    if meta_s.len() > u32::MAX as usize {
+        bail!("PLNB encode: meta segment is {} bytes (max {})", meta_s.len(), u32::MAX);
+    }
+    let total =
+        HEADER_LEN as u128 + name.len() as u128 + meta_s.len() as u128 + data.len() as u128 * 4;
+    if total > MAX_FRAME_BYTES as u128 {
+        bail!("PLNB encode: frame would be {total} bytes, over the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let mut out = Vec::with_capacity(total as usize);
+    out.extend_from_slice(&PLNB_MAGIC);
+    out.push(PLNB_VERSION);
+    out.push(op as u8);
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(meta_s.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    out.extend_from_slice(name);
+    out.extend_from_slice(meta_s.as_bytes());
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Decode one complete binary frame (as produced by [`encode`] or read
+/// off the wire by the framed reader).
+pub fn decode(bytes: &[u8]) -> Result<BinFrame> {
+    let header = header_of(bytes)?;
+    let total = declared_len(header).map_err(|e| anyhow!("{e}"))?;
+    if total != bytes.len() as u128 {
+        bail!(
+            "PLNB frame length mismatch: header declares {total} bytes, frame is {}",
+            bytes.len()
+        );
+    }
+    let op = BinOp::from_byte(header[5]).expect("declared_len validated the op");
+    let name_len = u16::from_le_bytes([header[6], header[7]]) as usize;
+    let meta_len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    let rows = u32::from_le_bytes([header[12], header[13], header[14], header[15]]) as usize;
+    let cols = u32::from_le_bytes([header[16], header[17], header[18], header[19]]) as usize;
+    let name_end = HEADER_LEN + name_len;
+    let meta_end = name_end + meta_len;
+    let model = std::str::from_utf8(&bytes[HEADER_LEN..name_end])
+        .map_err(|_| anyhow!("invalid utf-8 in PLNB model name"))?
+        .to_string();
+    let meta = if meta_len == 0 {
+        Json::Null
+    } else {
+        let s = std::str::from_utf8(&bytes[name_end..meta_end])
+            .map_err(|_| anyhow!("invalid utf-8 in PLNB meta segment"))?;
+        Json::parse(s.trim()).map_err(|e| anyhow!("bad PLNB meta JSON: {e}"))?
+    };
+    let mut data = Vec::with_capacity(rows * cols);
+    for chunk in bytes[meta_end..].chunks_exact(4) {
+        data.push(Elem::from_le_bytes(chunk.try_into().expect("chunks_exact(4)")));
+    }
+    Ok(BinFrame { op, model, meta, rows, cols, data })
+}
+
+/// Routing peek: op byte and model name of a complete frame, without
+/// touching the meta or data segments — what the router needs to pick a
+/// shard before relaying the bytes untouched.
+pub fn peek_route(bytes: &[u8]) -> Result<(BinOp, &str)> {
+    let header = header_of(bytes)?;
+    declared_len(header).map_err(|e| anyhow!("{e}"))?;
+    let op = BinOp::from_byte(header[5]).expect("declared_len validated the op");
+    let name_len = u16::from_le_bytes([header[6], header[7]]) as usize;
+    if bytes.len() < HEADER_LEN + name_len {
+        bail!("PLNB frame truncated inside the model name");
+    }
+    let model = std::str::from_utf8(&bytes[HEADER_LEN..HEADER_LEN + name_len])
+        .map_err(|_| anyhow!("invalid utf-8 in PLNB model name"))?;
+    Ok((op, model))
+}
+
+fn header_of(bytes: &[u8]) -> Result<&[u8; HEADER_LEN]> {
+    if bytes.len() < HEADER_LEN {
+        bail!("PLNB frame truncated: {} bytes (header is {HEADER_LEN})", bytes.len());
+    }
+    Ok(bytes[..HEADER_LEN].try_into().expect("length checked"))
+}
+
+// ---------------------------------------------------------------------------
+// Framed connection I/O (shared by daemon, router, and client).
+// ---------------------------------------------------------------------------
+
+/// One complete protocol frame, either framing.
+pub(crate) enum WirePayload {
+    /// A newline-delimited JSON line (without its newline).
+    Line(String),
+    /// A complete binary frame, header included — relayed bytes-
+    /// untouched by the router.
+    Binary(Vec<u8>),
+}
+
+impl WirePayload {
+    /// Write the frame in its wire form (lines get their newline back).
+    pub(crate) fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        match self {
+            WirePayload::Line(s) => write_line(w, s),
+            WirePayload::Binary(b) => w.write_all(b),
+        }
+    }
+}
+
+/// Write one newline-terminated line as a SINGLE `write_all` — two
+/// writes (body, then a lone `\n`) would let Nagle hold the newline
+/// back until the body's ACK on a real network, stalling the peer's
+/// frame completion by a delayed-ACK interval.
+pub(crate) fn write_line(w: &mut impl Write, line: &str) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    buf.extend_from_slice(line.as_bytes());
+    buf.push(b'\n');
+    w.write_all(&buf)
+}
+
+/// Outcome of one bounded frame read.
+pub(crate) enum WireRead {
+    /// A complete frame.
+    Payload(WirePayload),
+    /// The stream ended mid-frame after this many bytes. NOT a complete
+    /// frame — the peer died, and treating the bytes as an answer would
+    /// hand a truncated response to a caller as if it were whole.
+    Partial(usize),
+    /// The frame exceeds (or declares more than) the byte cap; the
+    /// payload carries how many bytes were read or declared.
+    TooLong(usize),
+    /// A malformed frame: invalid UTF-8 in a line (the frame boundary
+    /// is still intact — non-fatal), or a broken binary header (no
+    /// resync possible — fatal).
+    Bad { msg: String, fatal: bool },
+    /// Clean end of stream before any byte of a new frame.
+    Eof,
+}
+
+/// Read one protocol frame with a byte cap — the codec underneath the
+/// daemon, the router, and the protocol client. With `binary` set
+/// (a negotiated v2 connection), a frame starting with the magic byte
+/// `P` is read as a length-prefixed binary frame; everything else is a
+/// newline-delimited line, exactly as v1.
+pub(crate) fn read_wire(
+    r: &mut impl BufRead,
+    max: usize,
+    binary: bool,
+) -> std::io::Result<WireRead> {
+    let first = {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(WireRead::Eof);
+        }
+        chunk[0]
+    };
+    if binary && first == PLNB_MAGIC[0] {
+        read_binary_frame(r, max)
+    } else {
+        read_line_frame(r, max)
+    }
+}
+
+fn read_line_frame(r: &mut impl BufRead, max: usize) -> std::io::Result<WireRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(if buf.is_empty() {
+                WireRead::Eof
+            } else {
+                WireRead::Partial(buf.len())
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                buf.extend_from_slice(&chunk[..i]);
+                r.consume(i + 1);
+                if buf.len() > max {
+                    return Ok(WireRead::TooLong(buf.len()));
+                }
+                // A frame that is not UTF-8 is answered with a distinct
+                // protocol error instead of being lossily converted and
+                // parsed as if the peer had sent replacement chars.
+                return Ok(match String::from_utf8(buf) {
+                    Ok(s) => WireRead::Payload(WirePayload::Line(s)),
+                    Err(e) => WireRead::Bad {
+                        msg: format!(
+                            "invalid utf-8 in frame ({} bytes)",
+                            e.as_bytes().len()
+                        ),
+                        fatal: false,
+                    },
+                });
+            }
+            None => {
+                let n = chunk.len();
+                buf.extend_from_slice(chunk);
+                r.consume(n);
+                if buf.len() > max {
+                    return Ok(WireRead::TooLong(buf.len()));
+                }
+            }
+        }
+    }
+}
+
+fn read_binary_frame(r: &mut impl BufRead, max: usize) -> std::io::Result<WireRead> {
+    let mut header = [0u8; HEADER_LEN];
+    if let Some(got) = fill_exact(r, &mut header)? {
+        return Ok(WireRead::Partial(got));
+    }
+    let total = match declared_len(&header) {
+        Ok(n) => n,
+        // A broken header torpedoes the framing: there is no newline to
+        // resync on, so the connection must close.
+        Err(msg) => return Ok(WireRead::Bad { msg, fatal: true }),
+    };
+    if total > max as u128 {
+        // Checked BEFORE any payload allocation: a hostile length never
+        // becomes a giant Vec.
+        return Ok(WireRead::TooLong(total.min(usize::MAX as u128) as usize));
+    }
+    let mut frame = vec![0u8; total as usize];
+    frame[..HEADER_LEN].copy_from_slice(&header);
+    if let Some(got) = fill_exact(r, &mut frame[HEADER_LEN..])? {
+        return Ok(WireRead::Partial(HEADER_LEN + got));
+    }
+    Ok(WireRead::Payload(WirePayload::Binary(frame)))
+}
+
+/// Fill `buf` from `r`: `Ok(None)` when filled, `Ok(Some(n))` when the
+/// stream ended after `n` bytes.
+fn fill_exact(r: &mut impl BufRead, buf: &mut [u8]) -> std::io::Result<Option<usize>> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(Some(filled));
+        }
+        let n = chunk.len().min(buf.len() - filled);
+        buf[filled..filled + n].copy_from_slice(&chunk[..n]);
+        r.consume(n);
+        filled += n;
+    }
+    Ok(None)
+}
+
+// ---------------------------------------------------------------------------
+// The shared per-connection serve loop.
+// ---------------------------------------------------------------------------
+
+/// Per-connection protocol state. Every connection starts at v1; a
+/// `hello` op upgrades it (see [`handle_hello`]).
+pub(crate) struct ConnState {
+    pub proto: u8,
+}
+
+pub(crate) fn ok_obj(mut pairs: Vec<(&str, Json)>) -> Json {
+    pairs.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(pairs)
+}
+
+pub(crate) fn err_json(msg: String) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+}
+
+/// Apply a `hello` negotiation request to the connection: the peer asks
+/// for a protocol version and gets the minimum of that and
+/// [`PROTO_MAX`]. Identical on the daemon and the router, and legal at
+/// any point in a connection's life.
+pub(crate) fn handle_hello(req: &Json, conn: &mut ConnState) -> Json {
+    match req.get("proto") {
+        Json::Null => ok_obj(vec![("proto", Json::num(conn.proto as f64))]),
+        v => match v.as_u64() {
+            Some(p) if p >= 1 => {
+                conn.proto = p.min(PROTO_MAX) as u8;
+                ok_obj(vec![("proto", Json::num(conn.proto as f64))])
+            }
+            _ => err_json(format!("hello needs an integer \"proto\" >= 1, got {v}")),
+        },
+    }
+}
+
+/// The shared per-connection serve loop (daemon and router): bounded
+/// frame reads, one response frame per request frame, oversized-frame
+/// protocol error + close, empty lines skipped. `dispatch` maps one
+/// request frame to `(response frame, is_shutdown)` and may upgrade the
+/// connection via the [`ConnState`] (a `hello` op); binary frames are
+/// only recognized once `proto >= 2`. On shutdown the loop wakes the
+/// accept loop at `wake_addr` so it observes the stop flag, then
+/// closes. A `Partial` read means the peer died mid-frame — nothing to
+/// answer.
+pub(crate) fn serve_wire(
+    stream: TcpStream,
+    requests: &AtomicU64,
+    wake_addr: SocketAddr,
+    mut dispatch: impl FnMut(&WirePayload, &mut ConnState) -> (WirePayload, bool),
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut conn = ConnState { proto: 1 };
+    loop {
+        match read_wire(&mut reader, MAX_FRAME_BYTES, conn.proto >= 2) {
+            Ok(WireRead::Payload(payload)) => {
+                if matches!(&payload, WirePayload::Line(l) if l.trim().is_empty()) {
+                    continue;
+                }
+                requests.fetch_add(1, Ordering::SeqCst);
+                let (resp, is_shutdown) = dispatch(&payload, &mut conn);
+                if resp.write_to(&mut writer).is_err() {
+                    break;
+                }
+                if is_shutdown {
+                    let _ = TcpStream::connect(wake_addr);
+                    break;
+                }
+            }
+            Ok(WireRead::TooLong(n)) => {
+                requests.fetch_add(1, Ordering::SeqCst);
+                let resp = WirePayload::Line(
+                    err_json(format!(
+                        "request frame exceeds {MAX_FRAME_BYTES} bytes ({n} read or \
+                         declared); closing connection"
+                    ))
+                    .to_string(),
+                );
+                let _ = resp.write_to(&mut writer);
+                break;
+            }
+            Ok(WireRead::Bad { msg, fatal }) => {
+                requests.fetch_add(1, Ordering::SeqCst);
+                let resp = WirePayload::Line(err_json(msg).to_string());
+                if resp.write_to(&mut writer).is_err() || fatal {
+                    break;
+                }
+            }
+            Ok(WireRead::Partial(_)) | Ok(WireRead::Eof) | Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn feed(src: &[u8], max: usize, binary: bool) -> Vec<WireRead> {
+        let mut r = BufReader::new(Cursor::new(src.to_vec()));
+        let mut out = Vec::new();
+        loop {
+            match read_wire(&mut r, max, binary).unwrap() {
+                WireRead::Eof => break,
+                f @ (WireRead::TooLong(_) | WireRead::Bad { fatal: true, .. }) => {
+                    out.push(f);
+                    break;
+                }
+                f => out.push(f),
+            }
+        }
+        out
+    }
+
+    fn line_of(read: &WireRead) -> &str {
+        match read {
+            WireRead::Payload(WirePayload::Line(s)) => s,
+            _ => panic!("expected a line frame"),
+        }
+    }
+
+    #[test]
+    fn line_frames_split_and_bound_exactly_as_v1() {
+        let frames = feed(b"abc\ndef\ntail", 100, false);
+        assert_eq!(frames.len(), 3);
+        assert_eq!(line_of(&frames[0]), "abc");
+        assert_eq!(line_of(&frames[1]), "def");
+        assert!(matches!(frames[2], WireRead::Partial(4)), "unterminated tail is partial");
+        // Exactly at the cap is fine; one byte over is TooLong.
+        assert_eq!(line_of(&feed(b"abcde\n", 5, false)[0]), "abcde");
+        assert!(matches!(feed(b"abcdef\n", 5, false)[0], WireRead::TooLong(_)));
+        assert!(matches!(feed(b"abcdefgh", 5, false)[0], WireRead::TooLong(_)));
+    }
+
+    #[test]
+    fn invalid_utf8_line_is_a_distinct_nonfatal_error() {
+        let frames = feed(b"{\"op\": \xff\xfe}\nnext\n", 100, false);
+        match &frames[0] {
+            WireRead::Bad { msg, fatal } => {
+                assert!(msg.contains("invalid utf-8 in frame"), "{msg}");
+                assert!(!fatal, "a line boundary survives bad utf-8");
+            }
+            _ => panic!("expected Bad"),
+        }
+        // The connection resyncs on the newline: the next line parses.
+        assert_eq!(line_of(&frames[1]), "next");
+    }
+
+    #[test]
+    fn binary_roundtrip_preserves_every_field() {
+        let meta = Json::obj(vec![("warm", Json::Bool(false)), ("top", Json::num(7.0))]);
+        let data: Vec<Elem> = (0..12).map(|i| i as Elem * 0.5 - 2.0).collect();
+        let bytes = encode(BinOp::Transform, "news-é", &meta, 3, 4, &data).unwrap();
+        assert_eq!(bytes[..4], PLNB_MAGIC);
+        let f = decode(&bytes).unwrap();
+        assert_eq!(f.op, BinOp::Transform);
+        assert_eq!(f.model, "news-é");
+        assert_eq!(f.meta, meta);
+        assert_eq!((f.rows, f.cols), (3, 4));
+        assert_eq!(f.data, data);
+        // The routing peek agrees without touching meta/data.
+        let (op, model) = peek_route(&bytes).unwrap();
+        assert_eq!((op, model), (BinOp::Transform, "news-é"));
+        // Empty meta decodes as Null.
+        let bytes = encode(BinOp::TransformResp, "", &Json::Null, 0, 0, &[]).unwrap();
+        let f = decode(&bytes).unwrap();
+        assert!(f.meta.is_null());
+        assert_eq!(f.data.len(), 0);
+    }
+
+    #[test]
+    fn encode_rejects_mismatched_and_oversized_frames() {
+        let err = format!(
+            "{:#}",
+            encode(BinOp::Transform, "m", &Json::Null, 2, 3, &[0.0; 5]).unwrap_err()
+        );
+        assert!(err.contains("2x3"), "{err}");
+        // A frame that would blow the cap is rejected at encode time,
+        // before the output buffer is ever allocated.
+        let n = MAX_FRAME_BYTES / 4 + 1;
+        let data = vec![0.0 as Elem; n];
+        let err = format!(
+            "{:#}",
+            encode(BinOp::Transform, "m", &Json::Null, n, 1, &data).unwrap_err()
+        );
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_headers_and_lengths() {
+        let good = encode(BinOp::Transform, "m", &Json::Null, 1, 2, &[1.0, 2.0]).unwrap();
+        // Truncated.
+        assert!(decode(&good[..HEADER_LEN - 1]).is_err());
+        assert!(decode(&good[..good.len() - 1]).is_err());
+        // Bad magic / version / op.
+        let mut bad = good.clone();
+        bad[0] = b'Q';
+        assert!(decode(&bad).is_err());
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(format!("{:#}", decode(&bad).unwrap_err()).contains("version"));
+        let mut bad = good.clone();
+        bad[5] = 0x7f;
+        assert!(format!("{:#}", decode(&bad).unwrap_err()).contains("unknown PLNB op"));
+        // Declared length disagreeing with the actual frame.
+        let mut bad = good.clone();
+        bad[12] = 2; // rows = 2 while only 1 row of data follows
+        assert!(format!("{:#}", decode(&bad).unwrap_err()).contains("length mismatch"));
+    }
+
+    #[test]
+    fn binary_reader_bounds_declared_length_before_allocating() {
+        // rows = cols = u32::MAX declares a ~64 GiB payload; the reader
+        // must answer TooLong from the 20 header bytes alone.
+        let mut header = Vec::new();
+        header.extend_from_slice(&PLNB_MAGIC);
+        header.push(PLNB_VERSION);
+        header.push(BinOp::Transform as u8);
+        header.extend_from_slice(&0u16.to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        let frames = feed(&header, MAX_FRAME_BYTES, true);
+        assert!(matches!(frames[0], WireRead::TooLong(_)));
+    }
+
+    #[test]
+    fn binary_reader_flags_bad_magic_as_fatal() {
+        let frames = feed(b"PXNBxxxxxxxxxxxxxxxxxxxx", 1000, true);
+        match &frames[0] {
+            WireRead::Bad { msg, fatal } => {
+                assert!(msg.contains("magic"), "{msg}");
+                assert!(*fatal, "no resync after a broken binary header");
+            }
+            _ => panic!("expected Bad"),
+        }
+        // Without negotiation the same bytes are read as a plain line.
+        let frames = feed(b"PXNBxxxx\n", 1000, false);
+        assert_eq!(line_of(&frames[0]), "PXNBxxxx");
+    }
+
+    #[test]
+    fn binary_reader_reports_truncation_as_partial() {
+        let good = encode(BinOp::Transform, "m", &Json::Null, 2, 2, &[1.0; 4]).unwrap();
+        let frames = feed(&good[..10], 1000, true);
+        assert!(matches!(frames[0], WireRead::Partial(10)), "mid-header close");
+        let frames = feed(&good[..good.len() - 3], 1000, true);
+        assert!(matches!(frames[0], WireRead::Partial(_)), "mid-payload close");
+        // A complete frame followed by a line still splits correctly.
+        let mut both = good.clone();
+        both.extend_from_slice(b"{\"op\": \"ping\"}\n");
+        let frames = feed(&both, 1000, true);
+        assert!(matches!(&frames[0], WireRead::Payload(WirePayload::Binary(b)) if *b == good));
+        assert_eq!(line_of(&frames[1]), "{\"op\": \"ping\"}");
+    }
+
+    #[test]
+    fn hello_negotiates_up_to_proto_max_and_rejects_garbage() {
+        let hello =
+            |src: &str, conn: &mut ConnState| handle_hello(&Json::parse(src).unwrap(), conn);
+        let mut conn = ConnState { proto: 1 };
+        let resp = hello(r#"{"op": "hello", "proto": 2}"#, &mut conn);
+        assert_eq!(resp.get("proto").as_u64(), Some(2));
+        assert_eq!(conn.proto, 2);
+        // Higher than we speak: negotiated down, never up.
+        let mut conn = ConnState { proto: 1 };
+        let resp = hello(r#"{"op": "hello", "proto": 9}"#, &mut conn);
+        assert_eq!(resp.get("proto").as_u64(), Some(2));
+        // Explicit v1 stays v1; absent proto just reports the current.
+        let mut conn = ConnState { proto: 2 };
+        let resp = hello(r#"{"op": "hello", "proto": 1}"#, &mut conn);
+        assert_eq!(resp.get("proto").as_u64(), Some(1));
+        assert_eq!(conn.proto, 1);
+        let mut conn = ConnState { proto: 1 };
+        let resp = hello(r#"{"op": "hello"}"#, &mut conn);
+        assert_eq!(resp.get("proto").as_u64(), Some(1));
+        // Garbage protos are loud errors, and the connection stays v1.
+        for bad in [r#"{"proto": 0}"#, r#"{"proto": -2}"#, r#"{"proto": 1.5}"#, r#"{"proto": "x"}"#]
+        {
+            let mut conn = ConnState { proto: 1 };
+            let resp = handle_hello(&Json::parse(bad).unwrap(), &mut conn);
+            assert_eq!(resp.get("ok").as_bool(), Some(false), "{bad}");
+            assert_eq!(conn.proto, 1, "{bad}");
+        }
+    }
+}

@@ -52,9 +52,15 @@ impl Json {
         }
     }
 
+    /// Integer coercion with **no silent wrap, truncation, or
+    /// saturation**: `None` for negatives, fractions, non-finite
+    /// values, and anything at or above 2^N (note `usize::MAX as f64`
+    /// rounds UP to 2^64, so the comparison must be strict — `x <=
+    /// MAX` would accept exactly 2^64 and saturate it to `MAX`). Every
+    /// f64 that passes converts exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
-            if x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
+            if x >= 0.0 && x.fract() == 0.0 && x < usize::MAX as f64 {
                 Some(x as usize)
             } else {
                 None
@@ -62,9 +68,14 @@ impl Json {
         })
     }
 
+    /// See [`Self::as_usize`] — same strictness, u64 range.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| {
-            if x >= 0.0 && x.fract() == 0.0 { Some(x as u64) } else { None }
+            if x >= 0.0 && x.fract() == 0.0 && x < u64::MAX as f64 {
+                Some(x as u64)
+            } else {
+                None
+            }
         })
     }
 
@@ -102,6 +113,21 @@ impl Json {
         match self {
             Json::Obj(o) => o.get(key).unwrap_or(&NULL),
             _ => &NULL,
+        }
+    }
+
+    /// `obj[key]` as a strict optional count — the shared
+    /// "strict-when-present" shape of the silent-coercion sweep: a
+    /// missing key (or non-object) yields `default`, while a present
+    /// value that is not a clean non-negative integer (negative,
+    /// fractional, non-finite, overflowing — see [`Self::as_usize`]) is
+    /// an error naming the key, never silently the default.
+    pub fn get_usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            Json::Null => Ok(default),
+            v => v
+                .as_usize()
+                .ok_or_else(|| format!("\"{key}\" must be a non-negative integer, got {v}")),
         }
     }
 
@@ -485,5 +511,41 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::num(3.0).to_string(), "3");
         assert_eq!(Json::num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn integer_coercions_reject_negative_fractional_and_overflowing() {
+        // Regression for the silent-coercion class: -1, 2.7, 1e300, and
+        // 2^64 must all be None — never wrapped, truncated, or
+        // saturated into a "valid" count.
+        for bad in ["-1", "2.7", "1e300", "18446744073709551616", "-0.5"] {
+            let v = Json::parse(bad).unwrap();
+            assert_eq!(v.as_usize(), None, "as_usize({bad})");
+            assert_eq!(v.as_u64(), None, "as_u64({bad})");
+        }
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        // Non-numbers never coerce.
+        assert_eq!(Json::parse("\"5\"").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("true").unwrap().as_u64(), None);
+        // In-range integers convert exactly, including large ones.
+        assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(Json::parse("-0.0").unwrap().as_usize(), Some(0));
+        assert_eq!(Json::parse("1e18").unwrap().as_u64(), Some(1_000_000_000_000_000_000));
+        assert_eq!(
+            Json::parse("9007199254740992").unwrap().as_u64(), // 2^53
+            Some(9_007_199_254_740_992)
+        );
+    }
+
+    #[test]
+    fn get_usize_or_is_strict_when_present() {
+        let v = Json::parse(r#"{"top": 5, "bad": -1}"#).unwrap();
+        assert_eq!(v.get_usize_or("top", 10), Ok(5));
+        assert_eq!(v.get_usize_or("absent", 10), Ok(10), "missing key takes the default");
+        let err = v.get_usize_or("bad", 10).unwrap_err();
+        assert!(err.contains("bad"), "{err}");
+        // Non-objects behave like all-missing (the `get` contract).
+        assert_eq!(Json::parse("[1]").unwrap().get_usize_or("top", 3), Ok(3));
     }
 }

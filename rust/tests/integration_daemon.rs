@@ -371,6 +371,112 @@ fn load_unload_admission_and_manifest_reload_over_the_wire() {
 }
 
 #[test]
+fn binary_protocol_matches_json_bit_for_bit() {
+    // The tentpole parity assertion: the same dense batch answered over
+    // v1 JSON and over negotiated PLNB v2 binary frames must be
+    // bit-identical — and both must equal the in-process reference.
+    let dir = tmpdir("binary");
+    let model = write_model(&dir, "m.json", 40, 9, 5, 21);
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let registry = ModelRegistry::new(pinned_opts(popts, 0));
+    registry.load("m", &model).unwrap();
+    let (addr, handle) = start_server(registry);
+
+    let mut json_client = Client::connect(addr).unwrap();
+    let mut bin_client = Client::connect(addr).unwrap();
+    assert_eq!(bin_client.negotiate().unwrap(), 2);
+    assert_eq!(json_client.proto(), 1, "no hello, no upgrade");
+
+    let mut rng = Pcg32::seeded(88);
+    let mut q = Mat::random(6, 40, &mut rng, 0.0, 1.0);
+    for round in 0..3 {
+        let (h_json, res_json, _) = json_client.transform_dense("m", &q, false).unwrap();
+        let (h_bin, res_bin, meta) = bin_client.transform_dense("m", &q, false).unwrap();
+        assert_eq!(h_bin, h_json, "round {round}: binary h must be bit-identical to JSON");
+        assert_eq!(res_bin, res_json, "round {round}: residuals");
+        assert_eq!(meta.get("model").as_str(), Some("m"));
+        let (factors, _) = plnmf::serve::load_model(&model).unwrap();
+        let p = Projector::new(factors.w, Arc::new(ThreadPool::new(1)), popts).unwrap();
+        assert_eq!(h_json, p.project(Queries::Dense(&q)).unwrap(), "round {round}: reference");
+        // Binary recommend answers the exact recommend response JSON.
+        let rec_json = json_client.recommend_dense("m", &q, 5, false, false).unwrap();
+        let rec_bin = bin_client.recommend_dense("m", &q, 5, false, false).unwrap();
+        assert_eq!(rec_bin.get("recs"), rec_json.get("recs"), "round {round}: recs");
+        q = Mat::random(6, 40, &mut rng, 0.0, 1.0);
+    }
+
+    // Binary-level protocol errors come back as JSON lines and leave
+    // the upgraded connection usable.
+    let bad = Mat::from_fn(2, 7, |_, _| 1.0);
+    let err = format!("{:#}", bin_client.transform_dense("m", &bad, false).unwrap_err());
+    assert!(err.contains("V=40"), "{err}");
+    let err = format!("{:#}", bin_client.transform_dense("ghost", &q, false).unwrap_err());
+    assert!(err.contains("no model 'ghost'"), "{err}");
+    let pong = bin_client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+
+    drop(json_client);
+    drop(bin_client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn hello_negotiation_and_strict_request_integers_over_the_wire() {
+    let dir = tmpdir("hello");
+    let model = write_model(&dir, "m.json", 20, 5, 3, 4);
+    let registry = ModelRegistry::new(pinned_opts(ProjectorOpts::default(), 0));
+    registry.load("m", &model).unwrap();
+    let (addr, handle) = start_server(registry);
+    let mut client = Client::connect(addr).unwrap();
+
+    // Explicit v1 stays v1; bogus protos are loud errors; a v9 client
+    // negotiates DOWN to 2, never up.
+    let hello = |client: &mut Client, proto: f64| {
+        client
+            .request(&Json::obj(vec![("op", Json::str("hello")), ("proto", Json::num(proto))]))
+            .unwrap()
+    };
+    let resp = hello(&mut client, 1.0);
+    assert_eq!(resp.get("proto").as_u64(), Some(1), "{resp}");
+    let resp = hello(&mut client, -3.0);
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp}");
+    let resp = hello(&mut client, 9.0);
+    assert_eq!(resp.get("proto").as_u64(), Some(2), "{resp}");
+
+    // Strict "top": present-but-bogus errors instead of silently
+    // becoming the default 10 (the silent-coercion regression).
+    let q = Mat::from_fn(1, 20, |_, j| j as Elem);
+    for bad_top in [Json::num(-1.0), Json::num(2.7), Json::str("five")] {
+        let resp = client
+            .request(&Json::obj(vec![
+                ("op", Json::str("recommend")),
+                ("model", Json::str("m")),
+                ("queries", queries_to_json(Queries::Dense(&q))),
+                ("top", bad_top.clone()),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "top={bad_top}: {resp}");
+        assert!(resp.get("error").as_str().unwrap().contains("top"), "{resp}");
+    }
+    // Absent top still defaults.
+    let resp = client
+        .request_ok(&Json::obj(vec![
+            ("op", Json::str("recommend")),
+            ("model", Json::str("m")),
+            ("queries", queries_to_json(Queries::Dense(&q))),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("recs").as_arr().unwrap().len(), 1);
+
+    drop(client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_serve_requires_a_model_source() {
     use plnmf::bench::cli_main;
     use plnmf::cli::Args;

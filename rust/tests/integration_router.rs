@@ -391,6 +391,53 @@ fn replicated_shard_absorbs_replica_kill_with_zero_failed_requests() {
 }
 
 #[test]
+fn binary_routed_transforms_match_json_over_replicated_processes() {
+    // The v2 acceptance assertion at the routed layer: binary frames
+    // relayed bytes-untouched through the replicated router (over real
+    // worker processes) answer bit-for-bit what the JSON protocol and
+    // the in-process reference answer.
+    let dir = tmpdir("binary");
+    let model = write_model(&dir, "m.json", 30, 9, 4, 12);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(&manifest, manifest_json_replicated(1, 0, &[("m", "m.json", 2)]).pretty())
+        .unwrap();
+    let router =
+        Router::from_manifest(&manifest, pinned_worker_opts(&dir), RouterOpts::default())
+            .unwrap();
+    let (addr, handle) = start_router(router);
+
+    let mut json_client = Client::connect(addr).unwrap();
+    let mut bin_client = Client::connect(addr).unwrap();
+    assert_eq!(bin_client.negotiate().unwrap(), 2, "the router answers hello itself");
+
+    let mut rng = Pcg32::seeded(46);
+    for round in 0..4 {
+        let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+        let h_ref = reference_h(&model, &q);
+        let (h_json, res_json, _) = json_client.transform_dense("m", &q, false).unwrap();
+        let (h_bin, res_bin, _) = bin_client.transform_dense("m", &q, false).unwrap();
+        assert_eq!(h_json, h_ref, "round {round}: routed JSON h");
+        assert_eq!(h_bin, h_ref, "round {round}: routed binary h (relayed bytes-untouched)");
+        assert_eq!(res_bin, res_json, "round {round}: residuals");
+        let rec_json = json_client.recommend_dense("m", &q, 4, false, false).unwrap();
+        let rec_bin = bin_client.recommend_dense("m", &q, 4, false, false).unwrap();
+        assert_eq!(rec_bin.get("recs"), rec_json.get("recs"), "round {round}: recs");
+    }
+
+    // Unknown model via a binary frame gets the standard routed error
+    // (a JSON line, like every protocol error).
+    let q = Mat::from_fn(1, 30, |_, _| 1.0);
+    let err = format!("{:#}", bin_client.transform_dense("ghost", &q, false).unwrap_err());
+    assert!(err.contains("no model 'ghost' routed"), "{err}");
+
+    drop(json_client);
+    drop(bin_client);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn manifest_hot_reload_adds_and_removes_workers_without_touching_others() {
     let dir = tmpdir("reload");
     write_model(&dir, "a.json", 25, 8, 3, 5);

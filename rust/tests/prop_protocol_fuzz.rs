@@ -12,13 +12,15 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use plnmf::linalg::Mat;
 use plnmf::nmf::Factors;
 use plnmf::serve::{
-    save_model, Client, ModelMeta, ModelRegistry, ProjectorOpts, RegistryOpts, Server,
-    MAX_LINE_BYTES,
+    queries_to_json, save_model, wire, BinOp, Client, ModelMeta, ModelRegistry, ProjectorOpts,
+    Queries, RegistryOpts, Server, MAX_LINE_BYTES,
 };
 use plnmf::testing::{Gen, PropConfig};
 use plnmf::util::json::Json;
+use plnmf::Elem;
 
 // ---------------------------------------------------------------------------
 // Json::parse_prefix ↔ serializer properties.
@@ -318,5 +320,204 @@ fn client_surfaces_closed_mid_response_distinctly() {
         !Client::is_connection_closed(&err),
         "bad-JSON responses are not the closed class: {err:#}"
     );
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// PLNB v2 binary codec properties and live-socket fuzz.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_binary_codec_roundtrips_random_shapes() {
+    PropConfig::trials(200).run("PLNB decode ∘ encode == id", |g| {
+        let rows = g.usize_in(0, 20);
+        let cols = g.usize_in(0, 20);
+        let data: Vec<Elem> = (0..rows * cols).map(|_| g.f32_in(-1e6, 1e6)).collect();
+        let model: String =
+            (0..g.usize_in(0, 12)).map(|_| *g.choose(&["a", "B", "7", "é"])).collect();
+        let meta = if g.bool() { Json::Null } else { random_json(g, 2) };
+        let op = *g.choose(&[BinOp::Transform, BinOp::Recommend, BinOp::TransformResp]);
+        let bytes = wire::encode(op, &model, &meta, rows, cols, &data).unwrap();
+        let f = wire::decode(&bytes).unwrap();
+        assert_eq!(f.op, op);
+        assert_eq!(f.model, model);
+        assert_eq!(f.meta, meta);
+        assert_eq!((f.rows, f.cols), (rows, cols));
+        assert_eq!(f.data, data, "raw f32 payload must survive bit-for-bit");
+        let (pop, pmodel) = wire::peek_route(&bytes).unwrap();
+        assert_eq!((pop, pmodel), (op, model.as_str()));
+        // Any truncation fails to decode — never panics, never succeeds
+        // with a short payload.
+        if bytes.len() > 1 {
+            let cut = g.usize_in(1, bytes.len() - 1);
+            assert!(wire::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    });
+}
+
+#[test]
+fn binary_garbage_headers_error_and_close_without_allocation_or_hang() {
+    let (addr, handle) = start_server();
+    // A header declaring a ~64 GiB payload: refused from the 20 header
+    // bytes alone (no allocation), then the connection closes.
+    let mut oversized = Vec::from(*b"PLNB");
+    oversized.push(2); // version
+    oversized.push(1); // transform
+    oversized.extend_from_slice(&0u16.to_le_bytes());
+    oversized.extend_from_slice(&0u32.to_le_bytes());
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    // Bad magic after the `P`, bad version, unknown op: all fatal
+    // framing errors (no resync possible mid-binary-stream).
+    let mut bad_magic = vec![0u8; 20];
+    bad_magic[..4].copy_from_slice(b"PXNB");
+    let mut bad_version = Vec::from(*b"PLNB");
+    bad_version.push(9);
+    bad_version.extend_from_slice(&[0u8; 15]);
+    let mut bad_op = Vec::from(*b"PLNB");
+    bad_op.push(2);
+    bad_op.push(0x7f);
+    bad_op.extend_from_slice(&[0u8; 14]);
+    for (what, case) in [
+        ("oversized", &oversized),
+        ("bad magic", &bad_magic),
+        ("bad version", &bad_version),
+        ("bad op", &bad_op),
+    ] {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        w.write_all(b"{\"op\": \"hello\", \"proto\": 2}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().get("proto").as_u64(), Some(2));
+        w.write_all(case).unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim())
+            .unwrap_or_else(|e| panic!("{what}: non-JSON response {line:?}: {e}"));
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "{what}: {line:?}");
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0, "{what}: connection should close");
+    }
+    // A truncated frame followed by a client disconnect must not wedge
+    // the daemon: a fresh connection still serves.
+    {
+        let good =
+            wire::encode(BinOp::Transform, "m", &Json::Null, 2, 20, &[1.0; 40]).unwrap();
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        w.write_all(b"{\"op\": \"hello\", \"proto\": 2}\n").unwrap();
+        r.read_line(&mut line).unwrap();
+        w.write_all(&good[..good.len() / 2]).unwrap();
+        drop(w);
+        drop(r);
+        drop(stream);
+    }
+    let mut c = Client::connect(addr).unwrap();
+    let resp = c.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+    assert_eq!(resp.get("pong").as_bool(), Some(true));
+    drop(c);
+    shutdown_server(addr);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn prop_v1_and_v2_frames_interleave_on_one_connection() {
+    // The model behind start_server() is 20 features x 3 topics. After
+    // a hello, JSON control ops, JSON transforms, binary transforms,
+    // and binary recommends interleave freely on one connection — the
+    // reader re-dispatches per frame off its first byte.
+    let (addr, handle) = start_server();
+    PropConfig::trials(15).run("v1/v2 frames interleave", |g| {
+        let mut client = Client::connect(addr).unwrap();
+        assert_eq!(client.negotiate().unwrap(), 2);
+        for _ in 0..g.usize_in(1, 6) {
+            let rows = g.usize_in(1, 4);
+            let q = Mat::from_fn(rows, 20, |i, j| ((i * 7 + j) % 5) as Elem);
+            match g.usize_in(0, 3) {
+                0 => {
+                    let resp =
+                        client.request_ok(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+                    assert_eq!(resp.get("pong").as_bool(), Some(true));
+                }
+                1 => {
+                    // Plain JSON transform on the upgraded connection.
+                    let resp = client
+                        .request_ok(&Json::obj(vec![
+                            ("op", Json::str("transform")),
+                            ("model", Json::str("m")),
+                            ("queries", queries_to_json(Queries::Dense(&q))),
+                        ]))
+                        .unwrap();
+                    assert_eq!(resp.get("h").as_arr().unwrap().len(), rows);
+                }
+                2 => {
+                    let (h, res, _) = client.transform_dense("m", &q, true).unwrap();
+                    assert_eq!((h.rows(), h.cols()), (rows, 3));
+                    assert_eq!(res.len(), rows);
+                }
+                _ => {
+                    let resp = client.recommend_dense("m", &q, 3, false, true).unwrap();
+                    assert_eq!(resp.get("recs").as_arr().unwrap().len(), rows);
+                }
+            }
+        }
+    });
+    shutdown_server(addr);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn invalid_utf8_frame_gets_distinct_error_not_lossy_parse() {
+    // Regression: the daemon used to lossily convert invalid-UTF-8
+    // frames to replacement chars and parse the guess. It must answer
+    // the distinct `invalid utf-8 in frame` error instead — and, since
+    // the line boundary is intact, keep serving the connection.
+    let (addr, handle) = start_server();
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        w.write_all(b"{\"op\": \"\xff\xfe\"}\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+        assert!(
+            resp.get("error").as_str().unwrap().contains("invalid utf-8 in frame"),
+            "{line}"
+        );
+        w.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().get("pong").as_bool(), Some(true));
+    }
+    shutdown_server(addr);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn negotiate_falls_back_to_v1_against_a_pre_v2_daemon() {
+    // A fake v1 daemon that answers hello as an unknown op: the client
+    // auto-upgrade must settle on v1, not error — old daemons keep
+    // working with new clients.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        w.write_all(b"{\"ok\": false, \"error\": \"unknown op 'hello'\"}\n").unwrap();
+    });
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 1, "fallback to v1");
+    assert_eq!(client.proto(), 1);
     server.join().unwrap();
 }
