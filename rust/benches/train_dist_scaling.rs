@@ -1,0 +1,13 @@
+//! `cargo bench --bench train_dist_scaling` — wall-clock of a fixed
+//! distributed FAST-HALS run over 1/2/4 training workers (`dist_w{N}`
+//! rows of results/train_dist.csv). Scale via PLNMF_SCALE=small|paper.
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let scale = if std::env::var("PLNMF_SCALE").map(|s| s == "paper").unwrap_or(false) {
+        plnmf::bench::Scale::Paper
+    } else {
+        plnmf::bench::Scale::Small
+    };
+    plnmf::bench::train_dist::run(scale, std::path::Path::new("results"))
+}

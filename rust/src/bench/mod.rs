@@ -12,6 +12,7 @@
 //! | E7 | §6.3.2 per-iter speedup       | [`fig7`] (`--per-iter`) | same bench |
 //! | E8 | Table 4 dataset statistics    | `plnmf datasets` | — |
 //! | S1 | serving docs/sec @ batch size | [`serving`] | `cargo bench --bench serving_throughput` |
+//! | S2 | train-dist worker scaling     | [`train_dist`] | `cargo bench --bench train_dist_scaling` |
 //!
 //! Every run defaults to the scaled-down `-small` profiles so `cargo
 //! bench` completes in minutes; pass `--scale paper` (or env
@@ -25,6 +26,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod table5;
 pub mod serving;
+pub mod train_dist;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -105,6 +107,7 @@ pub fn cli_main(args: Args) -> Result<()> {
         Some("recommend") => cmd_recommend(&args),
         Some("serve") => cmd_serve(&args),
         Some("route") => cmd_route(&args),
+        Some("train-dist") => cmd_train_dist(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("model") => cmd_model(&args),
         Some("bench") => cmd_bench(&args),
@@ -136,6 +139,7 @@ COMMANDS:
              stay resident (cached Grams, warm-start cache, per-model
              pools): --models_manifest fleet.json | --model m.json
              [--serve_port P --warm_cache N --serve_tol T --threads N]
+             [--train_worker — host no models, just train-dist shards]
   route      cross-process shard router: `plnmf serve` worker processes
              per manifest model (\"replicas\": N each, default 1), same
              protocol on the front port; least-loaded replica routing,
@@ -145,11 +149,17 @@ COMMANDS:
              [--route_port P --worker_port_base B --restart_backoff_ms N
              --route_retries R --max_inflight C
              --threads T + the serve knobs, passed through to workers]
+  train-dist distributed FAST-HALS over `serve --train_worker` daemons:
+             the dataset is row-sharded (nnz-balanced), workers keep their
+             shard + H rows resident, the coordinator all-reduces k×k Grams
+             and V×k partials per epoch over the PLNB v2 binary wire:
+             --dataset --k --iters --train_workers N --sync_every E
+             [--threads --seed --trace_path out.csv + the run knobs]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
   bench      regenerate paper artifacts: bench
-             <fig6|fig7|fig8|fig9|table5|serving|all>
+             <fig6|fig7|fig8|fig9|table5|serving|train-dist|all>
              [--scale small|paper] [--out-dir results]
   help       this text
 
@@ -276,6 +286,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let registry = ModelRegistry::new(ropts);
         registry.load("default", Path::new(model))?;
         registry
+    } else if args.has_flag("train_worker") {
+        // A training worker hosts no serving models: it exists to hold a
+        // dataset shard + H panel for a `plnmf train-dist` coordinator
+        // (every daemon dispatches the binary training ops either way —
+        // this flag just waives the model requirement).
+        ModelRegistry::new(ropts)
     } else {
         bail!(
             "serve needs --models_manifest fleet.json (multi-model) or --model m.json \
@@ -335,6 +351,7 @@ fn cmd_route(args: &Args) -> Result<()> {
         route_port: cfg.route_port as u16,
         worker_port_base: cfg.worker_port_base as u16,
         restart_backoff: std::time::Duration::from_millis(cfg.restart_backoff_ms as u64),
+        max_backoff: std::time::Duration::from_millis(cfg.max_backoff_ms as u64),
         route_retries: cfg.route_retries,
         max_inflight: cfg.max_inflight,
         ..Default::default()
@@ -343,17 +360,37 @@ fn cmd_route(args: &Args) -> Result<()> {
     let names = router.names();
     println!(
         "plnmf route: listening on {} — {} model(s) over {} worker process(es): {} \
-         ({per_worker_threads} threads each, restart backoff {}ms, retry budget {}, \
-         in-flight ceiling {})",
+         ({per_worker_threads} threads each, restart backoff {}ms capped at {}ms, \
+         retry budget {}, in-flight ceiling {})",
         router.local_addr(),
         names.len(),
         router.worker_count(),
         names.join(", "),
         cfg.restart_backoff_ms,
+        cfg.max_backoff_ms,
         cfg.route_retries,
         cfg.max_inflight
     );
     router.run()
+}
+
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    let cfg = args.to_run_config()?;
+    let binary = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving the plnmf binary for train workers: {e}"))?;
+    let opts = crate::dist::DistOpts {
+        binary: Some(binary),
+        workers: cfg.train_workers,
+        sync_every: cfg.sync_every,
+        ..Default::default()
+    };
+    let report = crate::dist::train_dist(&cfg, &opts)?;
+    print!("{}", metrics::summary_table(std::slice::from_ref(&report)));
+    println!("\nphase breakdown:\n{}", report.timers.table());
+    if let Some(path) = &cfg.trace_path {
+        println!("\ntrace CSV: {path}");
+    }
+    Ok(())
 }
 
 fn cmd_transform(args: &Args) -> Result<()> {
@@ -527,6 +564,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "fig9" => fig9::run_sel(scale, &out, &sel)?,
         "table5" => table5::run(scale, &out)?,
         "serving" => serving::run(scale, &out)?,
+        "train-dist" => train_dist::run(scale, &out)?,
         "all" => {
             fig6::run_sel(scale, &out, &sel)?;
             fig7::run_sel(scale, &out, &sel)?;
@@ -534,6 +572,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             fig9::run_sel(scale, &out, &sel)?;
             table5::run(scale, &out)?;
             serving::run(scale, &out)?;
+            train_dist::run(scale, &out)?;
         }
         other => bail!("unknown bench '{other}'"),
     }

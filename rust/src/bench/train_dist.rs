@@ -1,0 +1,129 @@
+//! Distributed-training scaling: wall-clock of a fixed FAST-HALS run
+//! driven by `plnmf train-dist` over 1 / 2 / 4 training workers.
+//!
+//! The coordinator ships nnz-balanced row shards of Aᵀ once, then each
+//! epoch broadcasts W and all-reduces the workers' k×k Grams and V×k
+//! partial products over the PLNB v2 binary wire — so the `dist_w1` row
+//! is (single-process math + one wire hop) and the `dist_w2`/`dist_w4`
+//! deltas are what shard parallelism buys after communication costs.
+//!
+//! Workers here are in-process `Server::bind` daemons addressed through
+//! attach mode — the exact byte protocol of spawned `plnmf serve
+//! --train_worker` processes, without requiring the binary on disk, so
+//! the bench stays self-contained in the library (`plnmf bench
+//! train-dist` / `cargo bench`).
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::bench::harness::{measure, row, BenchOpts};
+use crate::bench::Scale;
+use crate::config::RunConfig;
+use crate::dist::{train_dist, DistOpts};
+use crate::serve::{Client, ModelRegistry, RegistryOpts, Server};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::report::write_csv;
+
+/// Worker counts of the scaling rows (`dist_w{N}` in the CSV).
+pub const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+pub fn run(scale: Scale, out: &Path) -> Result<()> {
+    run_with(scale, out, BenchOpts::default())
+}
+
+/// An empty-registry daemon thread — every daemon hosts training jobs,
+/// so no models are needed (the `--train_worker` process shape).
+fn spawn_inproc_worker() -> Result<SocketAddr> {
+    let registry = Arc::new(ModelRegistry::new(RegistryOpts::default()));
+    let server = Server::bind(registry, "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+    Ok(addr)
+}
+
+fn shutdown_worker(addr: SocketAddr) {
+    if let Ok(mut c) = Client::connect(addr) {
+        let _ = c.set_read_timeout(Some(Duration::from_secs(2)));
+        let _ = c.request(&Json::obj(vec![("op", Json::str("shutdown"))]));
+    }
+}
+
+/// [`run`] with explicit measurement options (tests pass fast settings
+/// directly instead of tunneling them through env vars).
+pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
+    // The rows measure distribution overhead and shard parallelism on a
+    // fixed iteration budget, not convergence — small corpora suffice.
+    let (dataset, k, iters) = match scale {
+        Scale::Small => ("tiny-sparse", 8, 6),
+        Scale::Paper => ("20news-small", 32, 15),
+    };
+    let mut cfg = RunConfig::default();
+    cfg.dataset = dataset.to_string();
+    cfg.engine = crate::config::EngineKind::FastHals;
+    cfg.k = k;
+    cfg.max_iters = iters;
+    cfg.record_every = iters;
+    cfg.threads = 2;
+    cfg.seed = 42;
+
+    println!("distributed training on {dataset} (k={k}, {iters} epochs, sync_every=2):\n");
+    let mut rows = Vec::new();
+    for &n in &WORKER_COUNTS {
+        let workers: Vec<SocketAddr> =
+            (0..n).map(|_| spawn_inproc_worker()).collect::<Result<_>>()?;
+        let mut final_rel_error = f64::NAN;
+        let s = measure(bench_opts, || {
+            let opts =
+                DistOpts { attach: workers.clone(), sync_every: 2, ..DistOpts::default() };
+            let report = train_dist(&cfg, &opts).expect("train-dist bench run failed");
+            final_rel_error = report.final_rel_error;
+        });
+        for &addr in &workers {
+            shutdown_worker(addr);
+        }
+        let name = format!("dist_w{n}");
+        println!("{}  [rel_error {final_rel_error:.4}]", row(&name, &s));
+        rows.push(format!(
+            "{dataset},{k},{iters},{name},{n},{:.6},{:.6},{:.6},{final_rel_error:.6}",
+            s.median, s.min, s.max
+        ));
+    }
+    let csv = out.join("train_dist.csv");
+    write_csv(
+        &csv,
+        "dataset,k,iters,mode,workers,secs_median,secs_min,secs_max,final_rel_error",
+        &rows,
+    )?;
+    println!("\nCSV: {}", csv.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_scaling_rows_for_every_worker_count() {
+        let dir = std::env::temp_dir().join(format!("plnmf-distbench-{}", std::process::id()));
+        run_with(Scale::Small, &dir, BenchOpts { warmup: 0, reps: 1 }).unwrap();
+        let body = std::fs::read_to_string(dir.join("train_dist.csv")).unwrap();
+        assert!(body.starts_with("dataset,k,iters,mode,workers"), "{body}");
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 1 + WORKER_COUNTS.len(), "{body}");
+        for (i, n) in WORKER_COUNTS.iter().enumerate() {
+            let line = lines[1 + i];
+            assert!(line.contains(&format!(",dist_w{n},{n},")), "row w={n} missing: {body}");
+            let secs: f64 = line.split(',').nth(5).unwrap().parse().unwrap();
+            assert!(secs > 0.0, "unmeasured row: {line}");
+            let err: f64 = line.split(',').nth(8).unwrap().parse().unwrap();
+            assert!(err.is_finite() && err > 0.0 && err < 1.0, "bad rel_error: {line}");
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -80,7 +80,8 @@ const KNOWN_KEYS: &[&str] = &[
     "dataset", "k", "tile", "t", "engine", "max_iters", "iters", "tol", "threads", "seed",
     "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
-    "route_port", "worker_port_base", "restart_backoff_ms", "route_retries", "max_inflight",
+    "route_port", "worker_port_base", "restart_backoff_ms", "max_backoff_ms", "route_retries",
+    "max_inflight", "train_workers", "sync_every",
 ];
 
 /// Full description of one NMF run.
@@ -135,8 +136,14 @@ pub struct RunConfig {
     /// a fresh OS-assigned port either way).
     pub worker_port_base: usize,
     /// Router: initial delay before restarting a crashed worker, in
-    /// milliseconds (doubles while restarts keep failing, bounded).
+    /// milliseconds (doubles while restarts keep failing, bounded by
+    /// `max_backoff_ms`).
     pub restart_backoff_ms: usize,
+    /// Router: ceiling on the doubling restart backoff, in milliseconds.
+    /// A crash-looping worker settles at this retry cadence instead of
+    /// backing off unboundedly (minutes between attempts would turn a
+    /// transient crash into a long outage for train-dist epochs).
+    pub max_backoff_ms: usize,
     /// Router: how many times an idempotent data op (`transform` /
     /// `recommend`) may be re-sent to a *different* replica after a
     /// failed forward, per request (0 = fail fast like non-idempotent
@@ -147,6 +154,15 @@ pub struct RunConfig {
     /// `busy` backpressure error (plus a `retry_after_ms` hint) instead
     /// of queuing unboundedly (0 = unlimited).
     pub max_inflight: usize,
+    /// Distributed training: worker-process count for `plnmf
+    /// train-dist` (clamped to the dataset's D — a shard must own at
+    /// least one row).
+    pub train_workers: usize,
+    /// Distributed training: epochs between factor checkpoints (the
+    /// coordinator pulls every worker's H panel and snapshots W). A
+    /// worker death rolls the run back to the last checkpointed epoch,
+    /// so smaller values cost bandwidth but lose less work per crash.
+    pub sync_every: usize,
 }
 
 impl Default for RunConfig {
@@ -174,8 +190,11 @@ impl Default for RunConfig {
             route_port: 7900,
             worker_port_base: 0,
             restart_backoff_ms: 500,
+            max_backoff_ms: 30_000,
             route_retries: 1,
             max_inflight: 32,
+            train_workers: 2,
+            sync_every: 4,
         }
     }
 }
@@ -272,9 +291,23 @@ impl RunConfig {
                 0 => bail!("restart_backoff_ms must be >= 1"),
                 n => self.restart_backoff_ms = n,
             },
+            // The cap shares the floor: a zero ceiling would clamp every
+            // backoff to zero and hot-loop restarts.
+            "max_backoff_ms" => match need_usize()? {
+                0 => bail!("max_backoff_ms must be >= 1"),
+                n => self.max_backoff_ms = n,
+            },
             // 0 is meaningful for both: no retries / no ceiling.
             "route_retries" => self.route_retries = need_usize()?,
             "max_inflight" => self.max_inflight = need_usize()?,
+            "train_workers" => match need_usize()? {
+                0 => bail!("train_workers must be >= 1"),
+                n => self.train_workers = n,
+            },
+            "sync_every" => match need_usize()? {
+                0 => bail!("sync_every must be >= 1"),
+                n => self.sync_every = n,
+            },
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -313,8 +346,11 @@ impl RunConfig {
             ("route_port", Json::num(self.route_port as f64)),
             ("worker_port_base", Json::num(self.worker_port_base as f64)),
             ("restart_backoff_ms", Json::num(self.restart_backoff_ms as f64)),
+            ("max_backoff_ms", Json::num(self.max_backoff_ms as f64)),
             ("route_retries", Json::num(self.route_retries as f64)),
             ("max_inflight", Json::num(self.max_inflight as f64)),
+            ("train_workers", Json::num(self.train_workers as f64)),
+            ("sync_every", Json::num(self.sync_every as f64)),
         ];
         if let Some(m) = &self.model_path {
             pairs.push(("model_path", Json::str(m.clone())));
@@ -353,6 +389,15 @@ impl RunConfig {
         }
         if self.restart_backoff_ms == 0 {
             bail!("restart_backoff_ms must be >= 1");
+        }
+        if self.max_backoff_ms == 0 {
+            bail!("max_backoff_ms must be >= 1");
+        }
+        if self.train_workers == 0 {
+            bail!("train_workers must be >= 1");
+        }
+        if self.sync_every == 0 {
+            bail!("sync_every must be >= 1");
         }
         Ok(())
     }
@@ -524,6 +569,30 @@ mod tests {
         assert_eq!(cfg.restart_backoff_ms, 250, "failed set must not alter the config");
         cfg.set_str("route_port", "0").unwrap();
         cfg.set_str("worker_port_base", "0").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn training_and_backoff_keys_roundtrip_and_validate() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.train_workers, 2);
+        assert_eq!(cfg.sync_every, 4);
+        assert_eq!(cfg.max_backoff_ms, 30_000, "restart backoff capped at ~30s by default");
+        let mut cfg = cfg;
+        cfg.set_str("train_workers", "4").unwrap();
+        cfg.set_str("sync_every", "2").unwrap();
+        cfg.set_str("max_backoff_ms", "5000").unwrap();
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.train_workers, 4);
+        assert_eq!(re.sync_every, 2);
+        assert_eq!(re.max_backoff_ms, 5000);
+        // All three have a >= 1 floor: zero workers is meaningless, a
+        // zero sync interval would checkpoint nowhere, and a zero
+        // backoff cap would clamp every restart delay to a hot loop.
+        assert!(cfg.set_str("train_workers", "0").is_err());
+        assert!(cfg.set_str("sync_every", "0").is_err());
+        assert!(cfg.set_str("max_backoff_ms", "0").is_err());
+        assert_eq!(cfg.train_workers, 4, "failed set must not alter the config");
         cfg.validate().unwrap();
     }
 

@@ -14,32 +14,58 @@ use crate::sparse::Csr;
 
 /// Contiguous row ranges whose nnz loads differ by at most one row's
 /// worth.
+///
+/// Guarantees, for every input (including the degenerate ones that the
+/// distributed trainer hands this function):
+///
+/// * exactly `parts` ranges that cover `0..rows` disjointly, in order;
+/// * an empty shard never precedes a non-empty one — empties appear
+///   only at the tail, and only when `parts > rows` makes them
+///   unavoidable;
+/// * an all-zero matrix (no nnz signal) falls back to an even
+///   row-count split rather than a one-row-per-shard-plus-giant-tail
+///   plan.
 pub fn balanced_row_shards(a: &Csr, parts: usize) -> Vec<Range<usize>> {
     assert!(parts > 0);
     let total = a.nnz();
     let rows = a.rows();
+    if total == 0 {
+        // No nnz signal to balance on: an even row split is the best
+        // plan (and split_even already handles parts > rows by handing
+        // out one-row shards followed by trailing empties).
+        return crate::parallel::split_even(rows, parts);
+    }
     let row_ptr = a.row_ptr();
     let mut shards = Vec::with_capacity(parts);
     let mut start = 0usize;
     for p in 0..parts {
-        // Ideal cumulative boundary after shard p.
+        let remaining_shards = parts - p; // this one included
+        if rows - start <= remaining_shards {
+            // Fewer rows left than shards to emit: one row each until
+            // rows run out, then (unavoidable) trailing empties.
+            let end = (start + 1).min(rows);
+            shards.push(start..end);
+            start = end;
+            continue;
+        }
+        if p == parts - 1 {
+            shards.push(start..rows); // tail, even past the last nnz
+            start = rows;
+            continue;
+        }
+        // Ideal cumulative boundary after shard p: smallest end with
+        // row_ptr[end] >= target, clamped so this shard takes at least
+        // one row and leaves at least one row for each shard after it.
         let target = total * (p + 1) / parts;
-        // Advance to the first row whose cumulative nnz reaches target.
-        let mut end = start;
-        while end < rows && row_ptr[end + 1] < target {
+        let cap = rows - (remaining_shards - 1);
+        let mut end = start + 1;
+        while end < cap && row_ptr[end] < target {
             end += 1;
         }
-        if end < rows {
-            end += 1; // include the boundary row
-        }
-        // Remaining shards must each get at least 0 rows; last shard
-        // takes the tail.
-        if p == parts - 1 {
-            end = rows;
-        }
-        shards.push(start..end.min(rows));
-        start = end.min(rows);
+        shards.push(start..end);
+        start = end;
     }
+    debug_assert_eq!(shards.len(), parts);
     debug_assert_eq!(shards.last().unwrap().end, rows);
     shards
 }
@@ -112,5 +138,83 @@ mod tests {
             assert_eq!(shards.len(), parts);
             assert_eq!(shards.iter().map(|r| r.len()).sum::<usize>(), a.rows());
         });
+    }
+
+    /// Exact disjoint cover of `0..rows`, and empties only at the tail.
+    fn assert_valid_plan(rows: usize, shards: &[std::ops::Range<usize>], parts: usize) {
+        assert_eq!(shards.len(), parts);
+        let mut next = 0;
+        for s in shards {
+            assert_eq!(s.start, next, "gap or overlap at {s:?}");
+            assert!(s.start <= s.end, "inverted range {s:?}");
+            next = s.end;
+        }
+        assert_eq!(next, rows, "plan does not cover 0..{rows}");
+        // No empty shard may precede a non-empty one: once rows run
+        // out they run out, and while rows remain every shard gets one.
+        let first_empty = shards.iter().position(|s| s.is_empty());
+        if let Some(i) = first_empty {
+            assert!(
+                shards[i..].iter().all(|s| s.is_empty()),
+                "empty shard {i} precedes a non-empty one in {shards:?}"
+            );
+            assert!(
+                parts > rows,
+                "empty shard emitted for {rows} rows / {parts} parts (avoidable)"
+            );
+        }
+    }
+
+    #[test]
+    fn property_degenerate_plans() {
+        PropConfig::trials(40).run("degenerate shard plans stay valid", |g| {
+            let rows = g.usize_in(1, 24);
+            let parts = g.usize_in(1, 40); // frequently parts > rows
+            let a = match g.usize_in(0, 2) {
+                // All-zero matrix: no nnz at all.
+                0 => Csr::from_triplets(rows, 8, Vec::new()),
+                // All mass in one hot row.
+                1 => {
+                    let hot = g.usize_in(0, rows - 1);
+                    Csr::from_triplets(rows, 8, (0..8).map(|c| (hot, c, 1.0)))
+                }
+                // Mass only in a head prefix; long all-zero tail.
+                _ => {
+                    let head = g.usize_in(1, rows);
+                    Csr::from_triplets(rows, 8, (0..head).map(|r| (r, r % 8, 1.0)))
+                }
+            };
+            assert_valid_plan(rows, &balanced_row_shards(&a, parts), parts);
+        });
+    }
+
+    #[test]
+    fn parts_beyond_rows_gives_singletons_then_empties() {
+        let a = generate_corpus(3, 10, 12, 1.1, 5);
+        let shards = balanced_row_shards(&a, 7);
+        assert_valid_plan(3, &shards, 7);
+        assert_eq!(&shards[..3], &[0..1, 1..2, 2..3]);
+        assert!(shards[3..].iter().all(|s| s.is_empty()));
+    }
+
+    #[test]
+    fn all_zero_matrix_splits_rows_evenly() {
+        let a = Csr::from_triplets(10, 4, Vec::new());
+        let shards = balanced_row_shards(&a, 4);
+        assert_valid_plan(10, &shards, 4);
+        // Even row split, not 1+1+1+7.
+        let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(lens.iter().max().unwrap() - lens.iter().min().unwrap(), 1);
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn hot_tail_never_starves_later_shards() {
+        // All nnz in the last row: earlier targets are tiny, but every
+        // shard must still receive at least one row.
+        let a = Csr::from_triplets(6, 5, (0..5).map(|c| (5, c, 1.0)));
+        let shards = balanced_row_shards(&a, 3);
+        assert_valid_plan(6, &shards, 3);
+        assert!(shards.iter().all(|s| !s.is_empty()), "{shards:?}");
     }
 }

@@ -1,0 +1,666 @@
+//! The distributed-HALS coordinator behind `plnmf train-dist`.
+//!
+//! Topology: one coordinator process owning W (V×k) and the trace;
+//! N training workers, each a `plnmf serve --train_worker` daemon
+//! holding a row shard of Aᵀ (documents) and the matching rows of H.
+//! Shards come from [`balanced_row_shards`] (nnz-balanced for sparse
+//! data) so every sweep's critical path is the *heaviest* shard, not
+//! the unluckiest.
+//!
+//! One epoch (= one FAST-HALS outer iteration):
+//!
+//! 1. broadcast W to every worker as a `0x04 sweep` frame;
+//! 2. each worker runs its H half-sweep and replies `Q_s ‖ P_s (‖ H_s)`
+//!    (`0x83 gram-response`);
+//! 3. the coordinator all-reduces `Q = Σ Q_s` (k×k) and `P = Σ P_s`
+//!    (V×k) in worker-index order — deterministic summation — then runs
+//!    the W update and scores the epoch with
+//!    [`error::rel_error_from_parts`], never touching the dataset.
+//!
+//! This is the MPI-FAUN communication shape: per epoch each worker
+//! ships one V×k panel and one k×k Gram, independent of nnz.
+//!
+//! Fault tolerance: every `sync_every` epochs (and on the last) the
+//! sweep returns the workers' H panels and the coordinator checkpoints
+//! `(epoch, W, H panels)`. If any sweep fails — worker death, torn
+//! connection, timeout — the coordinator respawns dead processes on
+//! fresh ports, re-ships their shards, rewinds every survivor's H panel
+//! to the checkpoint, truncates the trace, and resumes from
+//! `checkpoint + 1`. A run with a mid-epoch worker kill therefore
+//! completes, repeating at most `sync_every` epochs of work.
+
+use std::net::SocketAddr;
+use std::ops::Range;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::config::RunConfig;
+use crate::coordinator::shard::balanced_row_shards;
+use crate::coordinator::RunReport;
+use crate::data::{load_dataset, DataMatrix, Dataset};
+use crate::linalg::Mat;
+use crate::nmf::halsops::{update_naive, UpdateKind};
+use crate::nmf::{error, Factors, IterRecord};
+use crate::parallel::pool::default_threads;
+use crate::parallel::{split_even, ThreadPool};
+use crate::serve::wire::{self, BinOp, WirePayload};
+use crate::serve::worker::{probe_free_port, spawn_train_worker, wait_ready, ManagedWorker};
+use crate::serve::Client;
+use crate::util::json::Json;
+use crate::util::{PhaseTimers, Timer};
+use crate::{Elem, Result};
+
+use super::protocol::{self, GramMeta, ShardBegin};
+
+/// How the coordinator finds (or makes) its workers.
+#[derive(Debug, Clone)]
+pub struct DistOpts {
+    /// The `plnmf` binary to exec for spawned workers
+    /// (`std::env::current_exe()` from the CLI). Unused in attach mode.
+    pub binary: Option<PathBuf>,
+    /// Interface spawned workers bind / are dialed on.
+    pub host: String,
+    /// Worker count when spawning (capped at the document count).
+    pub workers: usize,
+    /// Checkpoint cadence: pull H panels every this many epochs.
+    pub sync_every: usize,
+    /// Give up after this many recoveries in one run.
+    pub max_restarts: usize,
+    /// Startup budget per spawned worker (bind + ready probe).
+    pub ready_timeout: Duration,
+    /// Attach to already-running daemons instead of spawning — one slot
+    /// per address (in-process `Server::bind` in tests, or external
+    /// fleets). No fault recovery: attached workers are not ours to
+    /// restart, so a failed sweep is fatal.
+    pub attach: Vec<SocketAddr>,
+    /// Fault injection: kill worker `.1` at the start of epoch `.0`
+    /// (spawned workers only) — exercises the recovery path end-to-end.
+    pub chaos_kill: Option<(usize, usize)>,
+}
+
+impl Default for DistOpts {
+    fn default() -> DistOpts {
+        DistOpts {
+            binary: None,
+            host: "127.0.0.1".to_string(),
+            workers: 2,
+            sync_every: 4,
+            max_restarts: 5,
+            ready_timeout: Duration::from_secs(10),
+            attach: Vec::new(),
+            chaos_kill: None,
+        }
+    }
+}
+
+/// One worker slot: a shard assignment plus whatever process/connection
+/// currently backs it. The slot (name, row range) is permanent; the
+/// process and socket behind it change across restarts.
+struct Slot {
+    name: String,
+    range: Range<usize>,
+    addr: SocketAddr,
+    child: Option<ManagedWorker>,
+    client: Option<Client>,
+}
+
+/// One worker's sweep reply, decoded.
+struct SweepReply {
+    q: Mat,
+    p: Mat,
+    h: Option<Mat>,
+}
+
+/// Last consistent state the run can rewind to.
+struct Checkpoint {
+    epoch: usize,
+    w: Mat,
+    /// Per-slot H panels, indexed like `slots`.
+    h: Vec<Mat>,
+}
+
+/// Rows `range` of the D×K matrix `h`, as an owned panel.
+fn h_panel(h: &Mat, range: &Range<usize>) -> Mat {
+    let k = h.cols();
+    Mat::from_vec(range.len(), k, h.data()[range.start * k..range.end * k].to_vec())
+}
+
+fn add_into(acc: &mut Mat, x: &Mat) {
+    assert_eq!((acc.rows(), acc.cols()), (x.rows(), x.cols()));
+    for (a, &b) in acc.data_mut().iter_mut().zip(x.data()) {
+        *a += b;
+    }
+}
+
+/// Dial a worker and negotiate the binary protocol (training frames
+/// need v2; a v1 peer cannot host shards).
+fn connect(addr: SocketAddr) -> Result<Client> {
+    let mut client =
+        Client::connect(addr).with_context(|| format!("dialing train worker {addr}"))?;
+    client.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let proto = client.negotiate()?;
+    if proto < 2 {
+        bail!("train worker {addr} only speaks protocol v{proto}; v2 is required");
+    }
+    Ok(client)
+}
+
+/// Send one `shard-load` frame and insist on an `ok` ack.
+fn send_shard_load(
+    client: &mut Client,
+    name: &str,
+    meta: &Json,
+    rows: usize,
+    cols: usize,
+    data: &[Elem],
+) -> Result<()> {
+    let bytes = wire::encode(BinOp::ShardLoad, name, meta, rows, cols, data)?;
+    let resp = client.request_wire(&WirePayload::Binary(bytes))?;
+    match resp {
+        WirePayload::Line(line) => {
+            let j = Json::parse(line.trim())
+                .map_err(|e| anyhow!("bad shard-load ack from '{name}': {e}"))?;
+            if j.get("ok").as_bool() != Some(true) {
+                bail!(
+                    "worker refused shard-load for '{name}': {}",
+                    j.get("error").as_str().unwrap_or(line.trim())
+                );
+            }
+            Ok(())
+        }
+        WirePayload::Binary(_) => bail!("unexpected binary reply to shard-load for '{name}'"),
+    }
+}
+
+/// Ship one slot's shard: `begin`, data chunks, then the H panel that
+/// finalizes it (or re-syncs a resident shard) at `epoch`.
+fn ship_shard(
+    client: &mut Client,
+    name: &str,
+    range: &Range<usize>,
+    ds: &Dataset,
+    h: &Mat,
+    k: usize,
+    threads: usize,
+    epoch: usize,
+) -> Result<()> {
+    let d_s = range.len();
+    let v = ds.v();
+    match &ds.at {
+        DataMatrix::Sparse(at) => {
+            let nnz = at.row_ptr()[range.end] - at.row_ptr()[range.start];
+            let begin =
+                ShardBegin { rows: d_s, cols: v, k, threads, sparse: true, row0: range.start, nnz };
+            send_shard_load(client, name, &begin.to_meta(), 0, 0, &[])?;
+            let mut seq = 0usize;
+            let mut buf: Vec<(usize, usize, Elem)> = Vec::new();
+            for row in range.clone() {
+                let (cols, vals) = at.row(row);
+                for (&c, &x) in cols.iter().zip(vals) {
+                    buf.push((row - range.start, c as usize, x));
+                }
+                if buf.len() >= protocol::SPARSE_CHUNK_NNZ || (row + 1 == range.end && !buf.is_empty())
+                {
+                    let data = protocol::encode_triplets(&buf)?;
+                    send_shard_load(client, name, &protocol::chunk_meta(seq), buf.len(), 3, &data)?;
+                    seq += 1;
+                    buf.clear();
+                }
+            }
+        }
+        DataMatrix::Dense(at) => {
+            let begin = ShardBegin {
+                rows: d_s,
+                cols: v,
+                k,
+                threads,
+                sparse: false,
+                row0: range.start,
+                nnz: d_s * v,
+            };
+            send_shard_load(client, name, &begin.to_meta(), 0, 0, &[])?;
+            let step = protocol::dense_chunk_rows(v);
+            let (mut seq, mut r0) = (0usize, range.start);
+            while r0 < range.end {
+                let r1 = (r0 + step).min(range.end);
+                let data = &at.data()[r0 * v..r1 * v];
+                send_shard_load(client, name, &protocol::chunk_meta(seq), r1 - r0, v, data)?;
+                seq += 1;
+                r0 = r1;
+            }
+        }
+    }
+    send_shard_load(client, name, &protocol::hpanel_meta(epoch), h.rows(), h.cols(), h.data())
+}
+
+/// One slot's epoch: broadcast W, collect and validate its
+/// gram-response.
+fn sweep_slot(slot: &mut Slot, w: &Mat, epoch: usize, want_h: bool, k: usize) -> Result<SweepReply> {
+    let name = slot.name.as_str();
+    let client =
+        slot.client.as_mut().ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
+    let bytes =
+        wire::encode(BinOp::Sweep, name, &protocol::sweep_meta(epoch, want_h), w.rows(), k, w.data())?;
+    let resp = client
+        .request_wire(&WirePayload::Binary(bytes))
+        .with_context(|| format!("sweep epoch {epoch} on '{name}'"))?;
+    let frame = match resp {
+        WirePayload::Binary(b) => wire::decode(&b)?,
+        WirePayload::Line(line) => {
+            let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad sweep reply: {e}"))?;
+            bail!(
+                "worker '{name}' failed epoch {epoch}: {}",
+                j.get("error").as_str().unwrap_or(line.trim())
+            );
+        }
+    };
+    if frame.op != BinOp::GramResp {
+        bail!("worker '{name}' answered sweep with op {:?}", frame.op);
+    }
+    let gm = GramMeta::from_meta(&frame.meta)?;
+    if gm.epoch != epoch {
+        bail!("worker '{name}' answered epoch {} to a sweep for epoch {epoch}", gm.epoch);
+    }
+    let expect_h = if want_h { slot.range.len() } else { 0 };
+    if frame.cols != k
+        || gm.rows_q != k
+        || gm.rows_p != w.rows()
+        || gm.rows_h != expect_h
+        || frame.rows != gm.rows_q + gm.rows_p + gm.rows_h
+    {
+        bail!(
+            "worker '{name}' gram-response is misshapen: {}x{} with rows_q={} rows_p={} rows_h={}",
+            frame.rows,
+            frame.cols,
+            gm.rows_q,
+            gm.rows_p,
+            gm.rows_h
+        );
+    }
+    let (qk, pk) = (k * k, gm.rows_p * k);
+    let q = Mat::from_vec(k, k, frame.data[..qk].to_vec());
+    let p = Mat::from_vec(gm.rows_p, k, frame.data[qk..qk + pk].to_vec());
+    let h = if want_h { Some(Mat::from_vec(gm.rows_h, k, frame.data[qk + pk..].to_vec())) } else { None };
+    Ok(SweepReply { q, p, h })
+}
+
+/// Respawn dead workers, re-ship their shards, and rewind survivors'
+/// H panels to the checkpoint. Every connection is rebuilt: a socket
+/// that saw a failed epoch may hold a half-written frame.
+fn recover(
+    slots: &mut [Slot],
+    opts: &DistOpts,
+    ds: &Dataset,
+    ckpt: &Checkpoint,
+    k: usize,
+    threads: usize,
+) -> Result<()> {
+    for (i, slot) in slots.iter_mut().enumerate() {
+        slot.client = None;
+        let dead = match slot.child.as_mut() {
+            Some(child) => child.poll_exit().is_some(),
+            None => false,
+        };
+        if dead {
+            let binary = opts
+                .binary
+                .as_ref()
+                .ok_or_else(|| anyhow!("train-dist: no worker binary to respawn with"))?;
+            let port = probe_free_port(&opts.host)?;
+            let mut child = spawn_train_worker(binary, &opts.host, port)?;
+            wait_ready(&mut child, opts.ready_timeout)?;
+            crate::info!(
+                "train-dist: slot {i} respawned on {} (shard rows {}..{})",
+                child.addr(),
+                slot.range.start,
+                slot.range.end
+            );
+            slot.addr = child.addr();
+            slot.child = Some(child);
+            let mut client = connect(slot.addr)?;
+            ship_shard(&mut client, &slot.name, &slot.range, ds, &ckpt.h[i], k, threads, ckpt.epoch)?;
+            slot.client = Some(client);
+        } else {
+            let mut client = connect(slot.addr)?;
+            let h = &ckpt.h[i];
+            send_shard_load(
+                &mut client,
+                &slot.name,
+                &protocol::hpanel_meta(ckpt.epoch),
+                h.rows(),
+                h.cols(),
+                h.data(),
+            )?;
+            slot.client = Some(client);
+        }
+    }
+    Ok(())
+}
+
+/// Run distributed FAST-HALS per `cfg` over `opts`-described workers.
+/// With one worker this reproduces `plnmf run --engine fasthals`
+/// exactly: the same kernels run in the same order on the same pool
+/// sizes, only split across two processes.
+pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
+    cfg.validate()?;
+    let ds = load_dataset(&cfg.dataset, cfg.seed)?;
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let pool = ThreadPool::new(threads);
+    let k = cfg.k;
+    let factors = Factors::random(ds.v(), ds.d(), k, cfg.seed);
+
+    let attach_mode = !opts.attach.is_empty();
+    let want = if attach_mode { opts.attach.len() } else { opts.workers.max(1) };
+    let nworkers = want.min(ds.d()).max(1);
+    let ranges = match &ds.at {
+        DataMatrix::Sparse(at) => balanced_row_shards(at, nworkers),
+        DataMatrix::Dense(_) => split_even(ds.d(), nworkers),
+    };
+    crate::info!(
+        "train-dist: {} worker(s) over '{}' ({} docs, k={}, sync_every={})",
+        nworkers,
+        cfg.dataset,
+        ds.d(),
+        k,
+        opts.sync_every.max(1)
+    );
+
+    let mut slots: Vec<Slot> = Vec::with_capacity(nworkers);
+    if attach_mode {
+        for (i, (addr, range)) in opts.attach.iter().zip(ranges).enumerate() {
+            slots.push(Slot { name: format!("train-{i}"), range, addr: *addr, child: None, client: None });
+        }
+    } else {
+        let binary = opts
+            .binary
+            .as_ref()
+            .ok_or_else(|| anyhow!("train-dist: no worker binary configured"))?;
+        for (i, range) in ranges.into_iter().enumerate() {
+            let port = probe_free_port(&opts.host)?;
+            let mut child = spawn_train_worker(binary, &opts.host, port)?;
+            wait_ready(&mut child, opts.ready_timeout)
+                .with_context(|| format!("train worker {i} startup"))?;
+            slots.push(Slot {
+                name: format!("train-{i}"),
+                range,
+                addr: child.addr(),
+                child: Some(child),
+                client: None,
+            });
+        }
+    }
+
+    for slot in &mut slots {
+        let mut client = connect(slot.addr)?;
+        let h = h_panel(&factors.h, &slot.range);
+        ship_shard(&mut client, &slot.name, &slot.range, &ds, &h, k, threads, 0)?;
+        slot.client = Some(client);
+    }
+
+    let mut w = factors.w.clone();
+    let mut ckpt = Checkpoint {
+        epoch: 0,
+        w: w.clone(),
+        h: slots.iter().map(|s| h_panel(&factors.h, &s.range)).collect(),
+    };
+    let mut timers = PhaseTimers::new();
+    let record_every = cfg.record_every.max(1);
+    let sync_every = opts.sync_every.max(1);
+    let iters = cfg.max_iters;
+    let mut trace = vec![IterRecord {
+        iter: 0,
+        elapsed_secs: 0.0,
+        rel_error: error::rel_error(&pool, &ds, &factors.w, &factors.h),
+    }];
+    let mut elapsed = 0.0f64;
+    let mut restarts = 0usize;
+    let mut chaos = opts.chaos_kill;
+
+    let mut it = 1usize;
+    while it <= iters {
+        if let Some((epoch, idx)) = chaos {
+            if epoch == it {
+                chaos = None;
+                if let Some(child) = slots.get_mut(idx).and_then(|s| s.child.as_mut()) {
+                    crate::info!("train-dist: chaos kill of worker {idx} at epoch {it}");
+                    child.kill();
+                }
+            }
+        }
+        let want_h = it % sync_every == 0 || it == iters;
+        let t = Timer::start();
+        let replies: Vec<Result<SweepReply>> = std::thread::scope(|scope| {
+            let wref = &w;
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .map(|slot| scope.spawn(move || sweep_slot(slot, wref, it, want_h, k)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("sweep thread panicked"))))
+                .collect()
+        });
+        if let Some(err) = replies.iter().find_map(|r| r.as_ref().err()) {
+            restarts += 1;
+            if attach_mode {
+                bail!("train-dist: epoch {it} failed on attached workers: {err:#}");
+            }
+            if restarts > opts.max_restarts {
+                bail!("train-dist: giving up after {} recoveries: {err:#}", restarts - 1);
+            }
+            crate::warn_!(
+                "train-dist: epoch {it} failed ({err:#}); rewinding to epoch {}",
+                ckpt.epoch
+            );
+            recover(&mut slots, opts, &ds, &ckpt, k, threads)?;
+            w = ckpt.w.clone();
+            trace.retain(|r| r.iter <= ckpt.epoch);
+            it = ckpt.epoch + 1;
+            continue;
+        }
+        let mut replies: Vec<SweepReply> =
+            replies.into_iter().map(|r| r.expect("errors handled above")).collect();
+
+        // All-reduce in slot order: Q = Σ Q_s, P = Σ P_s.
+        let mut q = replies[0].q.clone();
+        let mut p = replies[0].p.clone();
+        for r in &replies[1..] {
+            add_into(&mut q, &r.q);
+            add_into(&mut p, &r.p);
+        }
+        update_naive(&pool, &mut w, &q, &p, UpdateKind::WithDiagAndNorm, &mut timers, "w_dmv");
+        elapsed += t.elapsed_secs();
+
+        if want_h {
+            ckpt.epoch = it;
+            ckpt.w = w.clone();
+            for (i, r) in replies.iter_mut().enumerate() {
+                ckpt.h[i] = r
+                    .h
+                    .take()
+                    .ok_or_else(|| anyhow!("worker {i} omitted its H panel at sync epoch {it}"))?;
+            }
+        }
+        if it % record_every == 0 || it == iters {
+            trace.push(IterRecord {
+                iter: it,
+                elapsed_secs: elapsed,
+                rel_error: error::rel_error_from_parts(&pool, ds.fro2, &p, &w, &q),
+            });
+            if cfg.tol > 0.0 && trace.len() > 5 {
+                let prev = trace[trace.len() - 6].rel_error;
+                let cur = trace[trace.len() - 1].rel_error;
+                if prev - cur < cfg.tol {
+                    break;
+                }
+            }
+        }
+        it += 1;
+    }
+
+    for slot in &mut slots {
+        slot.client = None;
+        if let Some(child) = slot.child.take() {
+            child.shutdown(Duration::from_secs(2));
+        }
+    }
+
+    let final_rel_error = trace.last().map(|r| r.rel_error).unwrap_or(f64::NAN);
+    let report = RunReport {
+        engine: "fasthals-dist",
+        dataset: cfg.dataset.clone(),
+        k,
+        tile: cfg.tile,
+        threads,
+        trace,
+        final_rel_error,
+        total_step_secs: elapsed,
+        timers,
+    };
+    if let Some(path) = &cfg.trace_path {
+        crate::coordinator::metrics::write_trace_csv(std::path::Path::new(path), &report)?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::config::EngineKind;
+    use crate::coordinator::Driver;
+    use crate::serve::registry::{ModelRegistry, RegistryOpts};
+    use crate::serve::Server;
+
+    /// A zero-model in-process daemon — exactly what
+    /// `plnmf serve --train_worker` runs, minus the process boundary.
+    fn spawn_inproc_worker() -> SocketAddr {
+        let registry = Arc::new(ModelRegistry::new(RegistryOpts::default()));
+        let server = Server::bind(registry, "127.0.0.1", 0).unwrap();
+        let addr = server.local_addr();
+        std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        addr
+    }
+
+    fn dist_cfg(dataset: &str) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = dataset.into();
+        cfg.engine = EngineKind::FastHals;
+        cfg.k = 4;
+        cfg.max_iters = 10;
+        cfg.record_every = 1;
+        cfg.threads = 2;
+        cfg.seed = 7;
+        cfg
+    }
+
+    fn shutdown_worker(addr: SocketAddr) {
+        if let Ok(mut c) = Client::connect(addr) {
+            let _ = c.set_read_timeout(Some(Duration::from_secs(2)));
+            let _ = c.request(&Json::obj(vec![("op", Json::str("shutdown"))]));
+        }
+    }
+
+    #[test]
+    fn one_attached_worker_matches_single_process_trace() {
+        for dataset in ["tiny", "tiny-sparse"] {
+            let addr = spawn_inproc_worker();
+            let cfg = dist_cfg(dataset);
+            let opts = DistOpts { attach: vec![addr], sync_every: 3, ..DistOpts::default() };
+            let dist = train_dist(&cfg, &opts).unwrap();
+            let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+            shutdown_worker(addr);
+
+            assert_eq!(dist.engine, "fasthals-dist");
+            assert_eq!(
+                dist.trace.len(),
+                single.trace.len(),
+                "{dataset}: trace lengths diverge"
+            );
+            for (d, s) in dist.trace.iter().zip(&single.trace) {
+                assert_eq!(d.iter, s.iter, "{dataset}: iteration sequence diverges");
+                assert!(
+                    (d.rel_error - s.rel_error).abs() <= 2e-3,
+                    "{dataset} iter {}: dist {} vs single {}",
+                    d.iter,
+                    d.rel_error,
+                    s.rel_error
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_attached_workers_converge_like_single_process() {
+        for dataset in ["tiny", "tiny-sparse"] {
+            let (a, b) = (spawn_inproc_worker(), spawn_inproc_worker());
+            let cfg = dist_cfg(dataset);
+            let opts = DistOpts { attach: vec![a, b], sync_every: 2, ..DistOpts::default() };
+            let dist = train_dist(&cfg, &opts).unwrap();
+            let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+            shutdown_worker(a);
+            shutdown_worker(b);
+
+            assert_eq!(dist.trace.len(), single.trace.len());
+            for (d, s) in dist.trace.iter().zip(&single.trace) {
+                assert_eq!(d.iter, s.iter);
+                assert!(
+                    (d.rel_error - s.rel_error).abs() <= 2e-3,
+                    "{dataset} iter {}: dist {} vs single {}",
+                    d.iter,
+                    d.rel_error,
+                    s.rel_error
+                );
+            }
+            assert!(dist.final_rel_error.is_finite());
+        }
+    }
+
+    #[test]
+    fn two_slots_share_one_worker_process() {
+        // Two shards resident in a single daemon's TrainStore, keyed by
+        // job name — degenerate placement, same math.
+        let addr = spawn_inproc_worker();
+        let cfg = dist_cfg("tiny-sparse");
+        let opts = DistOpts { attach: vec![addr, addr], sync_every: 3, ..DistOpts::default() };
+        let dist = train_dist(&cfg, &opts).unwrap();
+        let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+        shutdown_worker(addr);
+        let d = dist.final_rel_error;
+        let s = single.final_rel_error;
+        assert!((d - s).abs() <= 2e-3, "shared-process dist {d} vs single {s}");
+    }
+
+    #[test]
+    fn attach_mode_failure_is_fatal_not_retried() {
+        // Attached worker that immediately goes away: train_dist must
+        // error out (no restart authority over attached daemons).
+        let addr = spawn_inproc_worker();
+        shutdown_worker(addr);
+        std::thread::sleep(Duration::from_millis(50));
+        let cfg = dist_cfg("tiny");
+        let opts = DistOpts { attach: vec![addr], ..DistOpts::default() };
+        assert!(train_dist(&cfg, &opts).is_err());
+    }
+
+    #[test]
+    fn h_panel_slices_rows() {
+        let h = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as Elem);
+        let p = h_panel(&h, &(2..4));
+        assert_eq!((p.rows(), p.cols()), (2, 3));
+        assert_eq!(p.data(), &h.data()[6..12]);
+    }
+
+    #[test]
+    fn add_into_sums_elementwise() {
+        let mut a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        add_into(&mut a, &b);
+        assert_eq!(a.data(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Distributed HALS training over the worker fabric (`plnmf train-dist`).
+//!
+//! Extends the serving fleet's process model to *training*: the dataset
+//! is row-sharded across `plnmf serve --train_worker` daemons (documents
+//! of Aᵀ, nnz-balanced via [`crate::coordinator::shard`]), each worker
+//! keeps its shard and its rows of H resident, and a coordinator drives
+//! FAST-HALS epochs by broadcasting W and all-reducing the workers'
+//! k×k Grams and V×k partial products — the MPI-FAUN communication
+//! pattern carried over the PLNB v2 binary wire protocol
+//! ([`crate::serve::wire`]), raw little-endian f32 end to end.
+//!
+//! * [`protocol`] — frame metas and payload layouts for the three
+//!   training ops (`0x03 shard-load`, `0x04 sweep`,
+//!   `0x83 gram-response`), including the chunked shard transfer.
+//! * [`worker`] — [`TrainStore`]: per-daemon resident shard state and
+//!   the op handlers `serve` dispatches binary training frames to.
+//! * [`coordinator`] — [`train_dist`]: worker spawn/attach, shard
+//!   shipping, the epoch loop with deterministic all-reduce, trace
+//!   recording compatible with `plnmf run`, and checkpoint-based
+//!   recovery from mid-epoch worker death.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{train_dist, DistOpts};
+pub use worker::TrainStore;

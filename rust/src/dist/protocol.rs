@@ -1,0 +1,358 @@
+//! Typed messages over the PLNB v2 training ops.
+//!
+//! The binary frame codec ([`crate::serve::wire`]) gives training three
+//! ops — `0x03 shard-load`, `0x04 sweep`, `0x83 gram-response` — whose
+//! payloads are raw little-endian f32, never JSON-encoded matrices. This
+//! module pins down what rides in each frame's *meta* segment and how
+//! structured payloads (CSR triplets, stacked factor panels) are laid
+//! out in the f32 data segment, so the coordinator and the worker agree
+//! on one schema and both sides validate it.
+//!
+//! ## Shard-load (`0x03`, coordinator → worker; ack is a JSON line)
+//!
+//! A shard ships as a `begin` / `chunk`* / `hpanel` sequence, keyed by
+//! the frame's model-name field (the per-slot job name, e.g. `train-0`):
+//!
+//! * `begin` — meta [`ShardBegin`] (shard dims, rank, worker threads,
+//!   sparse/dense, global row offset, expected nnz), empty payload.
+//! * `chunk` — meta `{kind: "chunk", seq}`; sparse payload is nnz×3
+//!   rows of `(local_row, col, value)` (indices carried as exact f32,
+//!   see [`MAX_EXACT_INDEX`]), dense payload is row slabs of the Aᵀ
+//!   shard. Sequence numbers are strict: a dropped or reordered chunk
+//!   is a protocol error, not a silently corrupt shard.
+//! * `hpanel` — meta `{kind: "hpanel", epoch}`, payload the d_s×k H
+//!   panel. Finalizes a pending shard, or re-syncs the factor panel on
+//!   a worker whose shard is already resident (the recovery path).
+//!
+//! ## Sweep (`0x04`, coordinator → worker)
+//!
+//! Meta `{epoch, want_h}`, payload the V×k `W` broadcast. The worker
+//! answers with a gram-response; errors (most importantly [`NO_SHARD`]
+//! from a restarted worker) come back as JSON lines.
+//!
+//! ## Gram-response (`0x83`, worker → coordinator)
+//!
+//! Meta [`GramMeta`]; payload stacks `Q_s` (k×k), `P_s` (V×k), and —
+//! when the sweep asked `want_h` — the worker's updated H panel
+//! (d_s×k), row-wise in that order.
+
+use anyhow::{anyhow, bail};
+
+use crate::util::json::Json;
+use crate::{Elem, Result};
+
+/// Largest row/column index a sparse triplet may carry. Indices ride
+/// the f32 payload, and f32 represents integers exactly only up to
+/// 2^24 — a larger index would silently round to a *different row or
+/// column*, so both encode and decode refuse it loudly instead.
+pub const MAX_EXACT_INDEX: usize = 1 << 24;
+
+/// Max non-zeros per sparse `chunk` frame (3 f32 each → 12 MiB), well
+/// under the 64 MiB frame cap even after a whole extra row's spill.
+pub const SPARSE_CHUNK_NNZ: usize = 1 << 20;
+
+/// Target payload bytes per dense `chunk` frame.
+pub const DENSE_CHUNK_BYTES: usize = 8 * 1024 * 1024;
+
+/// Error-message marker a worker answers a `sweep` with when it holds
+/// no resident shard for the job — what a freshly restarted worker
+/// says, and what tells the coordinator to re-ship, not retry.
+pub const NO_SHARD: &str = "no resident shard";
+
+/// Rows of the Aᵀ shard per dense `chunk` frame.
+pub fn dense_chunk_rows(cols: usize) -> usize {
+    (DENSE_CHUNK_BYTES / 4 / cols.max(1)).max(1)
+}
+
+fn req_usize(meta: &Json, key: &str) -> Result<usize> {
+    meta.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("training meta needs a non-negative integer \"{key}\", got {}", meta.get(key)))
+}
+
+// ---------------------------------------------------------------------------
+// Shard-load.
+// ---------------------------------------------------------------------------
+
+/// The `begin` announcement of a shard-load sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardBegin {
+    /// Shard rows of Aᵀ = documents owned by this worker (d_s).
+    pub rows: usize,
+    /// Shard columns of Aᵀ = the full vocabulary (V).
+    pub cols: usize,
+    /// Factor rank k.
+    pub k: usize,
+    /// Thread-pool size the worker must solve with — shipped so a
+    /// 1-worker run reproduces the single-process reduction orders
+    /// bit-for-bit.
+    pub threads: usize,
+    /// Sparse (CSR triplets) vs dense (row slabs) chunk payloads.
+    pub sparse: bool,
+    /// Global row offset of this shard in H (for logs/diagnostics).
+    pub row0: usize,
+    /// Expected nnz across all sparse chunks (0 for dense).
+    pub nnz: usize,
+}
+
+impl ShardBegin {
+    pub fn to_meta(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("begin")),
+            ("rows", Json::num(self.rows as f64)),
+            ("cols", Json::num(self.cols as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("sparse", Json::Bool(self.sparse)),
+            ("row0", Json::num(self.row0 as f64)),
+            ("nnz", Json::num(self.nnz as f64)),
+        ])
+    }
+
+    pub fn from_meta(meta: &Json) -> Result<ShardBegin> {
+        let begin = ShardBegin {
+            rows: req_usize(meta, "rows")?,
+            cols: req_usize(meta, "cols")?,
+            k: req_usize(meta, "k")?,
+            threads: req_usize(meta, "threads")?,
+            sparse: meta
+                .get("sparse")
+                .as_bool()
+                .ok_or_else(|| anyhow!("shard begin needs a boolean \"sparse\""))?,
+            row0: req_usize(meta, "row0")?,
+            nnz: req_usize(meta, "nnz")?,
+        };
+        if begin.rows == 0 || begin.cols == 0 || begin.k == 0 || begin.threads == 0 {
+            bail!(
+                "degenerate shard begin: rows={} cols={} k={} threads={}",
+                begin.rows,
+                begin.cols,
+                begin.k,
+                begin.threads
+            );
+        }
+        Ok(begin)
+    }
+}
+
+/// A parsed shard-load frame meta.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardLoadMsg {
+    Begin(ShardBegin),
+    Chunk { seq: usize },
+    HPanel { epoch: usize },
+}
+
+pub fn chunk_meta(seq: usize) -> Json {
+    Json::obj(vec![("kind", Json::str("chunk")), ("seq", Json::num(seq as f64))])
+}
+
+pub fn hpanel_meta(epoch: usize) -> Json {
+    Json::obj(vec![("kind", Json::str("hpanel")), ("epoch", Json::num(epoch as f64))])
+}
+
+pub fn parse_shard_load(meta: &Json) -> Result<ShardLoadMsg> {
+    match meta.get("kind").as_str() {
+        Some("begin") => Ok(ShardLoadMsg::Begin(ShardBegin::from_meta(meta)?)),
+        Some("chunk") => Ok(ShardLoadMsg::Chunk { seq: req_usize(meta, "seq")? }),
+        Some("hpanel") => Ok(ShardLoadMsg::HPanel { epoch: req_usize(meta, "epoch")? }),
+        other => bail!(
+            "shard-load meta needs \"kind\": begin|chunk|hpanel, got {}",
+            other.unwrap_or("(absent)")
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep.
+// ---------------------------------------------------------------------------
+
+/// A parsed sweep request meta.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepReq {
+    pub epoch: usize,
+    /// Whether the reply must append the worker's updated H panel (the
+    /// coordinator's checkpoint epochs).
+    pub want_h: bool,
+}
+
+pub fn sweep_meta(epoch: usize, want_h: bool) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::num(epoch as f64)),
+        ("want_h", Json::Bool(want_h)),
+    ])
+}
+
+pub fn parse_sweep(meta: &Json) -> Result<SweepReq> {
+    Ok(SweepReq {
+        epoch: req_usize(meta, "epoch")?,
+        want_h: meta
+            .get("want_h")
+            .as_bool()
+            .ok_or_else(|| anyhow!("sweep meta needs a boolean \"want_h\""))?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Gram-response.
+// ---------------------------------------------------------------------------
+
+/// Meta of a gram-response frame; the payload stacks `rows_q + rows_p +
+/// rows_h` rows of width k: `Q_s` then `P_s` then (optionally) `H_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GramMeta {
+    pub epoch: usize,
+    pub rows_q: usize,
+    pub rows_p: usize,
+    /// 0 when the sweep did not ask for the H panel.
+    pub rows_h: usize,
+    /// Worker-side wall time of the half-sweep (diagnostics).
+    pub secs: f64,
+}
+
+impl GramMeta {
+    pub fn to_meta(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("rows_q", Json::num(self.rows_q as f64)),
+            ("rows_p", Json::num(self.rows_p as f64)),
+            ("rows_h", Json::num(self.rows_h as f64)),
+            ("secs", Json::num(self.secs)),
+        ])
+    }
+
+    pub fn from_meta(meta: &Json) -> Result<GramMeta> {
+        Ok(GramMeta {
+            epoch: req_usize(meta, "epoch")?,
+            rows_q: req_usize(meta, "rows_q")?,
+            rows_p: req_usize(meta, "rows_p")?,
+            rows_h: req_usize(meta, "rows_h")?,
+            secs: meta.get("secs").as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse triplet payloads.
+// ---------------------------------------------------------------------------
+
+/// Encode `(local_row, col, value)` triplets as nnz×3 payload rows,
+/// refusing any index outside the exact-f32 range.
+pub fn encode_triplets(triplets: &[(usize, usize, Elem)]) -> Result<Vec<Elem>> {
+    let mut out = Vec::with_capacity(triplets.len() * 3);
+    for &(r, c, v) in triplets {
+        if r >= MAX_EXACT_INDEX || c >= MAX_EXACT_INDEX {
+            bail!(
+                "sparse shard index ({r},{c}) exceeds the exact-f32 payload range \
+                 ({MAX_EXACT_INDEX}); it would silently land in a different row/column"
+            );
+        }
+        out.push(r as Elem);
+        out.push(c as Elem);
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Decode an nnz×3 chunk payload back into triplets, validating every
+/// index round-trips exactly and lands inside the `rows`×`cols` shard.
+pub fn decode_triplets(data: &[Elem], rows: usize, cols: usize) -> Result<Vec<(usize, usize, Elem)>> {
+    if data.len() % 3 != 0 {
+        bail!("sparse chunk payload has {} values (not a multiple of 3)", data.len());
+    }
+    let mut out = Vec::with_capacity(data.len() / 3);
+    for (i, t) in data.chunks_exact(3).enumerate() {
+        let (r, c, v) = (t[0], t[1], t[2]);
+        let (ri, ci) = (r as usize, c as usize);
+        if !(r.is_finite() && c.is_finite()) || r.fract() != 0.0 || c.fract() != 0.0 || r < 0.0 || c < 0.0 {
+            bail!("sparse chunk triplet {i} has non-integer indices ({r}, {c})");
+        }
+        if ri >= rows || ci >= cols {
+            bail!("sparse chunk triplet {i} at ({ri},{ci}) outside the {rows}x{cols} shard");
+        }
+        if !v.is_finite() {
+            bail!("sparse chunk triplet {i} value {v} is not finite");
+        }
+        out.push((ri, ci, v));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_begin_roundtrips_and_validates() {
+        let b = ShardBegin { rows: 40, cols: 80, k: 4, threads: 2, sparse: true, row0: 10, nnz: 200 };
+        let parsed = match parse_shard_load(&b.to_meta()).unwrap() {
+            ShardLoadMsg::Begin(p) => p,
+            other => panic!("expected begin, got {other:?}"),
+        };
+        assert_eq!(parsed, b);
+        // Degenerate dims are loud errors, not zero-sized pools/panels.
+        for broken in ["rows", "cols", "k", "threads"] {
+            let mut meta = b.to_meta();
+            if let Json::Obj(pairs) = &mut meta {
+                pairs.insert(broken.to_string(), Json::num(0.0));
+            }
+            assert!(ShardBegin::from_meta(&meta).is_err(), "{broken}=0 accepted");
+        }
+    }
+
+    #[test]
+    fn chunk_and_hpanel_metas_parse() {
+        assert_eq!(parse_shard_load(&chunk_meta(3)).unwrap(), ShardLoadMsg::Chunk { seq: 3 });
+        assert_eq!(
+            parse_shard_load(&hpanel_meta(7)).unwrap(),
+            ShardLoadMsg::HPanel { epoch: 7 }
+        );
+        assert!(parse_shard_load(&Json::obj(vec![("kind", Json::str("nope"))])).is_err());
+        assert!(parse_shard_load(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn sweep_and_gram_metas_roundtrip() {
+        let req = parse_sweep(&sweep_meta(5, true)).unwrap();
+        assert_eq!(req, SweepReq { epoch: 5, want_h: true });
+        assert!(parse_sweep(&Json::obj(vec![("epoch", Json::num(1.0))])).is_err());
+
+        let gm = GramMeta { epoch: 2, rows_q: 4, rows_p: 80, rows_h: 20, secs: 0.25 };
+        let re = GramMeta::from_meta(&gm.to_meta()).unwrap();
+        assert_eq!(re, gm);
+    }
+
+    #[test]
+    fn triplets_roundtrip_exactly() {
+        let triplets = vec![(0usize, 5usize, 1.5 as Elem), (3, 0, -2.25), (7, 79, 0.125)];
+        let data = encode_triplets(&triplets).unwrap();
+        assert_eq!(data.len(), 9);
+        let back = decode_triplets(&data, 8, 80).unwrap();
+        assert_eq!(back, triplets);
+    }
+
+    #[test]
+    fn triplet_guards_reject_inexact_and_out_of_range() {
+        // Encoding an index past 2^24 must fail rather than round.
+        assert!(encode_triplets(&[(MAX_EXACT_INDEX, 0, 1.0)]).is_err());
+        assert!(encode_triplets(&[(0, MAX_EXACT_INDEX, 1.0)]).is_err());
+        // The largest exact index is fine.
+        assert!(encode_triplets(&[(MAX_EXACT_INDEX - 1, 0, 1.0)]).is_ok());
+        // Decode rejects fractional indices, out-of-shard indices,
+        // non-finite values, and ragged payloads.
+        assert!(decode_triplets(&[0.5, 0.0, 1.0], 4, 4).is_err());
+        assert!(decode_triplets(&[0.0, 9.0, 1.0], 4, 4).is_err());
+        assert!(decode_triplets(&[9.0, 0.0, 1.0], 4, 4).is_err());
+        assert!(decode_triplets(&[0.0, 0.0, Elem::NAN], 4, 4).is_err());
+        assert!(decode_triplets(&[0.0, 0.0], 4, 4).is_err());
+        assert!(decode_triplets(&[-1.0, 0.0, 1.0], 4, 4).is_err());
+    }
+
+    #[test]
+    fn dense_chunk_rows_is_positive_and_bounded() {
+        assert_eq!(dense_chunk_rows(0), DENSE_CHUNK_BYTES / 4);
+        assert!(dense_chunk_rows(1_000_000_000) >= 1);
+        let rows = dense_chunk_rows(512);
+        assert!(rows * 512 * 4 <= DENSE_CHUNK_BYTES);
+    }
+}

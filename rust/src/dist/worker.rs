@@ -1,0 +1,493 @@
+//! Worker-resident training state and the `shard-load` / `sweep`
+//! handlers the serve daemon dispatches to.
+//!
+//! A training worker is an ordinary `plnmf serve` process (started with
+//! `--train_worker`, i.e. zero serving models) whose [`TrainStore`]
+//! hosts, per job name, a resident dataset shard plus factor panels —
+//! the training analogue of the registry keeping factors and Grams hot
+//! across serving requests. One `sweep` performs the worker's half of a
+//! FAST-HALS iteration on its shard:
+//!
+//! ```text
+//! R_s = A_sᵀ·W          (d_s×k, the local SpMM/GEMM)
+//! H_s ← hals_update(H_s, WᵀW, R_s)      (the H half-sweep)
+//! P_s = A_s·H_s         (V×k partial product)
+//! Q_s = H_sᵀH_s         (k×k local Gram)
+//! ```
+//!
+//! and replies `Q_s ‖ P_s (‖ H_s)`; the coordinator all-reduces the
+//! partials and runs the W update — the 1D-partitioned alternating
+//! update of MPI-FAUN, with k×k Grams and tall-skinny panels as the
+//! only wire traffic. The kernels are byte-for-byte the single-process
+//! ones ([`crate::nmf::products`], [`crate::nmf::halsops`]), so a
+//! 1-worker run reproduces `plnmf run --engine fasthals` exactly.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail};
+
+use crate::config::{DatasetKind, DatasetProfile};
+use crate::data::{DataMatrix, Dataset};
+use crate::linalg::Mat;
+use crate::nmf::halsops::{update_naive, UpdateKind};
+use crate::nmf::products;
+use crate::parallel::ThreadPool;
+use crate::serve::wire::{self, ok_obj, BinFrame, BinOp, WirePayload};
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use crate::util::{PhaseTimers, Timer};
+use crate::{Elem, Result};
+
+use super::protocol::{self, GramMeta, ShardBegin, ShardLoadMsg};
+
+/// All training jobs resident in this worker process, keyed by the
+/// coordinator-chosen job name (the PLNB frame's model-name field).
+#[derive(Default)]
+pub struct TrainStore {
+    jobs: Mutex<HashMap<String, TrainJob>>,
+}
+
+#[derive(Default)]
+struct TrainJob {
+    /// A shard mid-transfer (`begin` seen, `hpanel` not yet).
+    pending: Option<PendingShard>,
+    /// The finalized shard sweeps run against.
+    shard: Option<LoadedShard>,
+}
+
+struct PendingShard {
+    begin: ShardBegin,
+    next_seq: usize,
+    got_nnz: usize,
+    got_rows: usize,
+    triplets: Vec<(usize, usize, Elem)>,
+    dense: Vec<Elem>,
+}
+
+struct LoadedShard {
+    ds: Dataset,
+    /// This worker's rows of H (d_s×k).
+    h: Mat,
+    /// R_s scratch (d_s×k).
+    r: Mat,
+    /// P_s scratch (V×k).
+    p: Mat,
+    pool: Arc<ThreadPool>,
+    timers: PhaseTimers,
+    k: usize,
+}
+
+impl TrainStore {
+    pub fn new() -> TrainStore {
+        TrainStore::default()
+    }
+
+    /// Resident shard count (stats/diagnostics).
+    pub fn resident(&self) -> usize {
+        self.jobs.lock().expect("train store lock").values().filter(|j| j.shard.is_some()).count()
+    }
+}
+
+impl LoadedShard {
+    fn build(begin: ShardBegin, triplets: Vec<(usize, usize, Elem)>, dense: Vec<Elem>, h: Mat) -> LoadedShard {
+        let (at, kind) = if begin.sparse {
+            (
+                DataMatrix::Sparse(Csr::from_triplets(begin.rows, begin.cols, triplets)),
+                DatasetKind::SparseText,
+            )
+        } else {
+            (DataMatrix::Dense(Mat::from_vec(begin.rows, begin.cols, dense)), DatasetKind::DenseImage)
+        };
+        // The shard's "dataset" is the transpose pair every product
+        // kernel expects: a is V×d_s, at is the shipped d_s×V rows.
+        let a = at.transposed();
+        let fro2 = a.fro2();
+        let nnz = a.nnz();
+        let profile = DatasetProfile {
+            name: "shard",
+            kind,
+            v: a.rows(),
+            d: a.cols(),
+            nnz,
+            zipf_s: 0.0,
+            planted_rank: 0,
+            paper_stats: None,
+        };
+        let ds = Dataset { profile, a, at, fro2 };
+        let pool = Arc::new(ThreadPool::new(begin.threads));
+        let (r, p) = (Mat::zeros(ds.d(), begin.k), Mat::zeros(ds.v(), begin.k));
+        LoadedShard { ds, h, r, p, pool, timers: PhaseTimers::new(), k: begin.k }
+    }
+}
+
+fn ack(kind: &str, extras: Vec<(&str, Json)>) -> WirePayload {
+    let mut pairs = vec![("ack", Json::str(kind))];
+    pairs.extend(extras);
+    WirePayload::Line(ok_obj(pairs).to_string())
+}
+
+/// Handle one `0x03 shard-load` frame; the ack is a JSON line.
+pub fn op_shard_load(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
+    let msg = protocol::parse_shard_load(&frame.meta)?;
+    let mut jobs = store.jobs.lock().expect("train store lock");
+    let job = jobs.entry(frame.model.clone()).or_default();
+    match msg {
+        ShardLoadMsg::Begin(begin) => {
+            if frame.rows * frame.cols != 0 {
+                bail!("shard begin carries a {}x{} payload (must be empty)", frame.rows, frame.cols);
+            }
+            crate::info!(
+                "train '{}': begin {}x{} shard (k={}, {}, nnz={}, row0={})",
+                frame.model,
+                begin.rows,
+                begin.cols,
+                begin.k,
+                if begin.sparse { "sparse" } else { "dense" },
+                begin.nnz,
+                begin.row0,
+            );
+            // A new begin abandons any half-shipped predecessor; the
+            // resident shard (if any) stays live until the new one
+            // finalizes, so a failed re-ship never leaves less state
+            // than before it started.
+            job.pending = Some(PendingShard {
+                begin,
+                next_seq: 0,
+                got_nnz: 0,
+                got_rows: 0,
+                triplets: Vec::new(),
+                dense: Vec::new(),
+            });
+            Ok(ack("begin", vec![]))
+        }
+        ShardLoadMsg::Chunk { seq } => {
+            let pending = job
+                .pending
+                .as_mut()
+                .ok_or_else(|| anyhow!("chunk for '{}' without a shard begin", frame.model))?;
+            if seq != pending.next_seq {
+                bail!("shard chunk out of order: got seq {seq}, expected {}", pending.next_seq);
+            }
+            pending.next_seq += 1;
+            if pending.begin.sparse {
+                if frame.cols != 3 {
+                    bail!("sparse shard chunk must be nnz x 3, got {}x{}", frame.rows, frame.cols);
+                }
+                let triplets =
+                    protocol::decode_triplets(&frame.data, pending.begin.rows, pending.begin.cols)?;
+                pending.got_nnz += triplets.len();
+                if pending.got_nnz > pending.begin.nnz {
+                    bail!(
+                        "shard overflow: {} nnz received, begin declared {}",
+                        pending.got_nnz,
+                        pending.begin.nnz
+                    );
+                }
+                pending.triplets.extend(triplets);
+                Ok(ack("chunk", vec![("nnz", Json::num(pending.got_nnz as f64))]))
+            } else {
+                if frame.cols != pending.begin.cols {
+                    bail!(
+                        "dense shard chunk is {}x{}, shard rows are {} wide",
+                        frame.rows,
+                        frame.cols,
+                        pending.begin.cols
+                    );
+                }
+                pending.got_rows += frame.rows;
+                if pending.got_rows > pending.begin.rows {
+                    bail!(
+                        "shard overflow: {} rows received, begin declared {}",
+                        pending.got_rows,
+                        pending.begin.rows
+                    );
+                }
+                pending.dense.extend_from_slice(&frame.data);
+                Ok(ack("chunk", vec![("rows", Json::num(pending.got_rows as f64))]))
+            }
+        }
+        ShardLoadMsg::HPanel { epoch } => {
+            if let Some(pending) = job.pending.take() {
+                if frame.rows != pending.begin.rows || frame.cols != pending.begin.k {
+                    bail!(
+                        "hpanel is {}x{}, shard expects {}x{}",
+                        frame.rows,
+                        frame.cols,
+                        pending.begin.rows,
+                        pending.begin.k
+                    );
+                }
+                if pending.begin.sparse && pending.got_nnz != pending.begin.nnz {
+                    bail!(
+                        "shard incomplete at hpanel: {}/{} nnz received",
+                        pending.got_nnz,
+                        pending.begin.nnz
+                    );
+                }
+                if !pending.begin.sparse && pending.got_rows != pending.begin.rows {
+                    bail!(
+                        "shard incomplete at hpanel: {}/{} rows received",
+                        pending.got_rows,
+                        pending.begin.rows
+                    );
+                }
+                let h = Mat::from_vec(frame.rows, frame.cols, frame.data);
+                let PendingShard { begin, triplets, dense, .. } = pending;
+                job.shard = Some(LoadedShard::build(begin, triplets, dense, h));
+                crate::info!("train '{}': shard resident at epoch {epoch}", frame.model);
+                Ok(ack("hpanel", vec![("loaded", Json::Bool(true)), ("epoch", Json::num(epoch as f64))]))
+            } else if let Some(shard) = job.shard.as_mut() {
+                // Factor re-sync on a live shard: the coordinator
+                // rewinding every worker to its last checkpoint.
+                if frame.rows != shard.ds.d() || frame.cols != shard.k {
+                    bail!(
+                        "hpanel re-sync is {}x{}, resident shard holds {}x{}",
+                        frame.rows,
+                        frame.cols,
+                        shard.ds.d(),
+                        shard.k
+                    );
+                }
+                shard.h = Mat::from_vec(frame.rows, frame.cols, frame.data);
+                crate::info!("train '{}': H panel re-synced to epoch {epoch}", frame.model);
+                Ok(ack("hpanel", vec![("resync", Json::Bool(true)), ("epoch", Json::num(epoch as f64))]))
+            } else {
+                bail!("hpanel for '{}' with no pending or resident shard", frame.model)
+            }
+        }
+    }
+}
+
+/// Handle one `0x04 sweep` frame: run the local H half-sweep against
+/// the broadcast W and reply `Q_s ‖ P_s (‖ H_s)` as a gram-response.
+pub fn op_sweep(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
+    let req = protocol::parse_sweep(&frame.meta)?;
+    let mut jobs = store.jobs.lock().expect("train store lock");
+    let shard = jobs
+        .get_mut(&frame.model)
+        .and_then(|j| j.shard.as_mut())
+        .ok_or_else(|| anyhow!("{} for train job '{}'", protocol::NO_SHARD, frame.model))?;
+    if frame.rows != shard.ds.v() || frame.cols != shard.k {
+        bail!(
+            "sweep W is {}x{}, shard expects {}x{}",
+            frame.rows,
+            frame.cols,
+            shard.ds.v(),
+            shard.k
+        );
+    }
+    let w = Mat::from_vec(frame.rows, frame.cols, frame.data);
+    let t = Timer::start();
+    let k = shard.k;
+    let pool = Arc::clone(&shard.pool);
+    let LoadedShard { ds, h, r, p, timers, .. } = shard;
+    // The H half-sweep, verbatim from the FAST-HALS engine step.
+    timers.time("spmm_r", || products::at_times(&pool, ds, &w, r));
+    let s = timers.time("gram_s", || products::factor_gram(&pool, &w));
+    update_naive(&pool, h, &s, r, UpdateKind::Plain, timers, "h_dmv");
+    // The W half-sweep's inputs: local partial product + local Gram.
+    timers.time("spmm_p", || products::a_times(&pool, ds, h, p));
+    let q = timers.time("gram_q", || products::factor_gram(&pool, h));
+    let secs = t.elapsed_secs();
+
+    let rows_h = if req.want_h { h.rows() } else { 0 };
+    let mut data = Vec::with_capacity((q.rows() + p.rows() + rows_h) * k);
+    data.extend_from_slice(q.data());
+    data.extend_from_slice(p.data());
+    if req.want_h {
+        data.extend_from_slice(h.data());
+    }
+    let meta = GramMeta { epoch: req.epoch, rows_q: q.rows(), rows_p: p.rows(), rows_h, secs }.to_meta();
+    let bytes = wire::encode(BinOp::GramResp, "", &meta, q.rows() + p.rows() + rows_h, k, &data)?;
+    Ok(WirePayload::Binary(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+
+    const JOB: &str = "train-0";
+    const K: usize = 4;
+    const THREADS: usize = 2;
+
+    fn line_json(payload: WirePayload) -> Json {
+        match payload {
+            WirePayload::Line(s) => Json::parse(s.trim()).unwrap(),
+            WirePayload::Binary(_) => panic!("expected a JSON ack line"),
+        }
+    }
+
+    fn shard_load(store: &TrainStore, meta: &Json, rows: usize, cols: usize, data: &[Elem]) -> Result<Json> {
+        let bytes = wire::encode(BinOp::ShardLoad, JOB, meta, rows, cols, data).unwrap();
+        op_shard_load(wire::decode(&bytes).unwrap(), store).map(line_json)
+    }
+
+    /// Ship the full tiny-sparse dataset as one shard over real frames.
+    fn ship_full(store: &TrainStore, ds: &Dataset, h: &Mat) {
+        let at = match &ds.at {
+            DataMatrix::Sparse(at) => at,
+            _ => panic!("tiny-sparse is sparse"),
+        };
+        let begin = ShardBegin {
+            rows: ds.d(),
+            cols: ds.v(),
+            k: K,
+            threads: THREADS,
+            sparse: true,
+            row0: 0,
+            nnz: at.nnz(),
+        };
+        let resp = shard_load(store, &begin.to_meta(), 0, 0, &[]).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        let mut triplets = Vec::new();
+        for row in 0..at.rows() {
+            let (cols, vals) = at.row(row);
+            for (&c, &x) in cols.iter().zip(vals) {
+                triplets.push((row, c as usize, x));
+            }
+        }
+        // Two chunks, to exercise the sequencing path.
+        let mid = triplets.len() / 2;
+        for (seq, part) in [&triplets[..mid], &triplets[mid..]].iter().enumerate() {
+            let data = protocol::encode_triplets(part).unwrap();
+            let resp = shard_load(store, &protocol::chunk_meta(seq), part.len(), 3, &data).unwrap();
+            assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+        }
+        let resp = shard_load(store, &protocol::hpanel_meta(0), h.rows(), h.cols(), h.data()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+        assert_eq!(resp.get("loaded").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn sweep_reproduces_the_single_process_half_iteration_exactly() {
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+        assert_eq!(store.resident(), 1);
+
+        let sweep_bytes =
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(1, true), f.w.rows(), f.w.cols(), f.w.data())
+                .unwrap();
+        let reply = op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap();
+        let frame = match reply {
+            WirePayload::Binary(b) => wire::decode(&b).unwrap(),
+            WirePayload::Line(l) => panic!("sweep failed: {l}"),
+        };
+        assert_eq!(frame.op, BinOp::GramResp);
+        let gm = GramMeta::from_meta(&frame.meta).unwrap();
+        assert_eq!((gm.epoch, gm.rows_q, gm.rows_p, gm.rows_h), (1, K, ds.v(), ds.d()));
+        assert_eq!(frame.rows, K + ds.v() + ds.d());
+        assert_eq!(frame.cols, K);
+
+        // Expected values: the same kernels run directly on a dataset
+        // rebuilt exactly as the worker rebuilds it (Aᵀ from triplets,
+        // A by transposition) — results must be bitwise identical.
+        let at = match &ds.at {
+            DataMatrix::Sparse(at) => at.clone(),
+            _ => unreachable!(),
+        };
+        let a = at.transposed();
+        let ref_ds = Dataset {
+            profile: ds.profile.clone(),
+            fro2: a.fro2(),
+            a: DataMatrix::Sparse(a),
+            at: DataMatrix::Sparse(at),
+        };
+        let pool = ThreadPool::new(THREADS);
+        let mut h = f.h.clone();
+        let mut r = Mat::zeros(ref_ds.d(), K);
+        let mut p = Mat::zeros(ref_ds.v(), K);
+        let mut timers = PhaseTimers::new();
+        products::at_times(&pool, &ref_ds, &f.w, &mut r);
+        let s = products::factor_gram(&pool, &f.w);
+        update_naive(&pool, &mut h, &s, &r, UpdateKind::Plain, &mut timers, "h_dmv");
+        products::a_times(&pool, &ref_ds, &h, &mut p);
+        let q = products::factor_gram(&pool, &h);
+
+        let qk = K * K;
+        let pk = ds.v() * K;
+        assert_eq!(&frame.data[..qk], q.data(), "Q_s mismatch");
+        assert_eq!(&frame.data[qk..qk + pk], p.data(), "P_s mismatch");
+        assert_eq!(&frame.data[qk + pk..], h.data(), "H_s mismatch");
+
+        // want_h = false omits the H panel.
+        let sweep_bytes =
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(2, false), f.w.rows(), f.w.cols(), f.w.data())
+                .unwrap();
+        let reply = op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap();
+        let frame = match reply {
+            WirePayload::Binary(b) => wire::decode(&b).unwrap(),
+            WirePayload::Line(l) => panic!("sweep failed: {l}"),
+        };
+        assert_eq!(GramMeta::from_meta(&frame.meta).unwrap().rows_h, 0);
+        assert_eq!(frame.rows, K + ds.v());
+    }
+
+    #[test]
+    fn hpanel_resync_replaces_the_resident_panel() {
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+        let h2 = Mat::from_fn(ds.d(), K, |i, j| (i + j) as Elem * 0.01 + 0.1);
+        let resp = shard_load(&store, &protocol::hpanel_meta(5), h2.rows(), h2.cols(), h2.data()).unwrap();
+        assert_eq!(resp.get("resync").as_bool(), Some(true), "{resp}");
+        // The next sweep runs from the re-synced panel: its H reply is
+        // the update of h2, not of the originally shipped panel.
+        let sweep_bytes =
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(6, true), f.w.rows(), f.w.cols(), f.w.data())
+                .unwrap();
+        let frame = match op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap() {
+            WirePayload::Binary(b) => wire::decode(&b).unwrap(),
+            WirePayload::Line(l) => panic!("sweep failed: {l}"),
+        };
+        let pool = ThreadPool::new(THREADS);
+        let at = match &ds.at {
+            DataMatrix::Sparse(at) => at.clone(),
+            _ => unreachable!(),
+        };
+        let a = at.transposed();
+        let ref_ds = Dataset {
+            profile: ds.profile.clone(),
+            fro2: a.fro2(),
+            a: DataMatrix::Sparse(a),
+            at: DataMatrix::Sparse(at),
+        };
+        let mut h = h2.clone();
+        let mut r = Mat::zeros(ref_ds.d(), K);
+        let mut timers = PhaseTimers::new();
+        products::at_times(&pool, &ref_ds, &f.w, &mut r);
+        let s = products::factor_gram(&pool, &f.w);
+        update_naive(&pool, &mut h, &s, &r, UpdateKind::Plain, &mut timers, "h_dmv");
+        let qk = K * K;
+        let pk = ds.v() * K;
+        assert_eq!(&frame.data[qk + pk..], h.data(), "sweep did not start from the re-synced panel");
+    }
+
+    #[test]
+    fn protocol_misuse_is_rejected_loudly() {
+        let store = TrainStore::new();
+        // Sweep with no shard answers the NO_SHARD marker.
+        let bytes = wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(0, false), 2, 2, &[0.0; 4]).unwrap();
+        let err = format!("{:#}", op_sweep(wire::decode(&bytes).unwrap(), &store).unwrap_err());
+        assert!(err.contains(protocol::NO_SHARD), "{err}");
+        // Chunk before begin.
+        assert!(shard_load(&store, &protocol::chunk_meta(0), 1, 3, &[0.0, 0.0, 1.0]).is_err());
+        // hpanel with nothing pending or resident.
+        assert!(shard_load(&store, &protocol::hpanel_meta(0), 1, 1, &[1.0]).is_err());
+        // Out-of-order chunk after a begin.
+        let begin = ShardBegin { rows: 4, cols: 4, k: 2, threads: 1, sparse: true, row0: 0, nnz: 2 };
+        shard_load(&store, &begin.to_meta(), 0, 0, &[]).unwrap();
+        assert!(shard_load(&store, &protocol::chunk_meta(1), 1, 3, &[0.0, 0.0, 1.0]).is_err());
+        // In-order chunk with an overflow past the declared nnz.
+        let data = protocol::encode_triplets(&[(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]).unwrap();
+        assert!(shard_load(&store, &protocol::chunk_meta(0), 3, 3, &data).is_err());
+        // Incomplete shard at hpanel time.
+        let h = Mat::zeros(4, 2);
+        let err = shard_load(&store, &protocol::hpanel_meta(0), 4, 2, h.data());
+        assert!(err.is_err(), "hpanel on an incomplete shard must fail");
+    }
+}

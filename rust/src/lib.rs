@@ -42,6 +42,7 @@ pub mod nmf;
 pub mod coordinator;
 pub mod runtime;
 pub mod serve;
+pub mod dist;
 pub mod bench;
 pub mod testing;
 pub mod cli;

@@ -31,13 +31,23 @@ pub fn rel_error(pool: &ThreadPool, ds: &Dataset, w: &Mat, h: &Mat) -> f64 {
 /// Variant reusing an already-computed `P = A·H` (the engines have one).
 pub fn rel_error_with_p(pool: &ThreadPool, ds: &Dataset, w: &Mat, h: &Mat, p: &Mat) -> f64 {
     let q = products::factor_gram(pool, h);
+    rel_error_from_parts(pool, ds.fro2, p, w, &q)
+}
+
+/// Fully decomposed variant for callers that never hold the dataset or
+/// the full `H` — the distributed coordinator, whose `P = Σ P_s` and
+/// `Q = Σ Q_s` arrive as all-reduced partials from the workers. Bitwise
+/// identical to [`rel_error_with_p`] given the same `p`/`q`, because the
+/// remaining terms (`S = WᵀW`, the two Frobenius inners) depend only on
+/// the arguments passed here.
+pub fn rel_error_from_parts(pool: &ThreadPool, fro2: f64, p: &Mat, w: &Mat, q: &Mat) -> f64 {
     let s = products::factor_gram(pool, w);
 
     let pw = frobenius_inner(pool, p, w);
-    let qs = frobenius_inner(pool, &q, &s);
+    let qs = frobenius_inner(pool, q, &s);
 
-    let num = (ds.fro2 - 2.0 * pw + qs).max(0.0);
-    (num / ds.fro2).sqrt()
+    let num = (fro2 - 2.0 * pw + qs).max(0.0);
+    (num / fro2).sqrt()
 }
 
 /// `Σᵢⱼ XᵢⱼYᵢⱼ` with f64 accumulation, row-parallel.

@@ -168,7 +168,7 @@ impl Default for RouterOpts {
             route_port: 0,
             worker_port_base: 0,
             restart_backoff: Duration::from_millis(500),
-            max_backoff: Duration::from_secs(10),
+            max_backoff: Duration::from_secs(30),
             health_interval: Duration::from_millis(200),
             ready_timeout: Duration::from_secs(10),
             manifest_poll: Duration::from_secs(2),
@@ -415,6 +415,12 @@ impl Replica {
             match st.conn.as_mut().expect("pooled connection just ensured").negotiate() {
                 Ok(2) => {}
                 Ok(_) => {
+                    // The upgrade was *refused*, not torn: the socket is
+                    // healthy but pinned to v1. Drop it anyway — keeping
+                    // it would re-send a doomed hello on every binary
+                    // frame, and a worker restarted as v2-capable behind
+                    // the same address would never be re-probed.
+                    st.conn = None;
                     bail!("worker {addr} speaks protocol v1 only — cannot relay a binary frame")
                 }
                 Err(e) => {
@@ -929,6 +935,15 @@ fn supervisor_loop(ctl: &Control) {
     }
 }
 
+/// Next restart delay after a failed restart attempt: double the
+/// current window, capped at `max`. Pure so the schedule is testable
+/// without spawning (and killing) real worker processes; the reset to
+/// [`RouterOpts::restart_backoff`] on a successful restart lives in
+/// [`supervise_replica`].
+fn next_backoff(cur: Duration, max: Duration) -> Duration {
+    (cur * 2).min(max)
+}
+
 /// One heartbeat step for one replica: detect a dead local worker, and
 /// restart it once its backoff window has passed.
 fn supervise_replica(ctl: &Control, shard: &Shard, replica: &Replica) {
@@ -1011,7 +1026,7 @@ fn supervise_replica(ctl: &Control, shard: &Shard, replica: &Replica) {
         }
         Err(e) => {
             let mut st = replica.state.lock().unwrap();
-            st.backoff = (st.backoff * 2).min(ctl.opts.max_backoff);
+            st.backoff = next_backoff(st.backoff, ctl.opts.max_backoff);
             st.next_restart_at = Some(Instant::now() + st.backoff);
             crate::warn_!(
                 "route: restart of '{}' replica {} failed ({e:#}); next attempt in {:?}",
@@ -1472,6 +1487,41 @@ mod tests {
 
     fn load(up: bool, in_flight: usize) -> ReplicaLoad {
         ReplicaLoad { up, in_flight }
+    }
+
+    /// Regression for the restart schedule: doubling from the
+    /// configured initial delay, hard-capped at `max_backoff` (~30 s by
+    /// default — a flapping worker must never back off into minutes),
+    /// and restarting the doubling from the initial delay again after a
+    /// success (the reset `supervise_replica` applies on ready).
+    #[test]
+    fn restart_backoff_doubles_caps_and_resets() {
+        let opts = RouterOpts::default();
+        assert_eq!(opts.max_backoff, Duration::from_secs(30));
+
+        let mut b = opts.restart_backoff;
+        let mut seen = vec![b];
+        for _ in 0..12 {
+            b = next_backoff(b, opts.max_backoff);
+            seen.push(b);
+        }
+        // 500ms, 1s, 2s, ... exact doubling until the cap.
+        assert_eq!(seen[0], Duration::from_millis(500));
+        assert_eq!(seen[1], Duration::from_secs(1));
+        assert_eq!(seen[4], Duration::from_secs(8));
+        for w in seen.windows(2) {
+            assert!(w[1] >= w[0], "backoff must be monotone: {seen:?}");
+            assert!(w[1] <= opts.max_backoff, "cap violated: {seen:?}");
+            if w[1] < opts.max_backoff {
+                assert_eq!(w[1], w[0] * 2, "pre-cap growth must be exact doubling");
+            }
+        }
+        // Saturates at the cap and stays there.
+        assert_eq!(*seen.last().unwrap(), opts.max_backoff);
+        assert_eq!(next_backoff(opts.max_backoff, opts.max_backoff), opts.max_backoff);
+        // The reset value (applied on a successful restart) restarts
+        // the schedule from the initial delay, not from the cap.
+        assert_eq!(next_backoff(opts.restart_backoff, opts.max_backoff), Duration::from_secs(1));
     }
 
     /// An external shard over fake addresses — routing-decision tests

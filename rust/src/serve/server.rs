@@ -70,6 +70,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
+use crate::dist::TrainStore;
 use crate::linalg::Mat;
 use crate::serve::projector::{ProjectStats, Queries};
 use crate::serve::registry::ModelRegistry;
@@ -106,6 +107,10 @@ pub struct Server {
     listener: TcpListener,
     registry: Arc<ModelRegistry>,
     shared: Arc<Shared>,
+    /// Resident distributed-training state (shards + H panels), empty
+    /// until a coordinator sends `shard-load` frames. Every daemon can
+    /// host training jobs; `--train_worker` daemons host nothing else.
+    train: Arc<TrainStore>,
 }
 
 impl Server {
@@ -125,6 +130,7 @@ impl Server {
                 started: Instant::now(),
                 addr,
             }),
+            train: Arc::new(TrainStore::new()),
         })
     }
 
@@ -168,9 +174,10 @@ impl Server {
             crate::debug!("serve: connection from {peer}");
             let registry = Arc::clone(&self.registry);
             let shared = Arc::clone(&self.shared);
+            let train = Arc::clone(&self.train);
             shared.active.fetch_add(1, Ordering::SeqCst);
             std::thread::spawn(move || {
-                handle_connection(stream, &registry, &shared);
+                handle_connection(stream, &registry, &shared, &train);
                 shared.active.fetch_sub(1, Ordering::SeqCst);
             });
         };
@@ -192,7 +199,7 @@ impl Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Shared) {
+fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Shared, train: &TrainStore) {
     serve_wire(stream, &shared.requests, shared.addr, |payload, conn| match payload {
         WirePayload::Line(line) => {
             let trimmed = line.trim();
@@ -219,7 +226,7 @@ fn handle_connection(stream: TcpStream, registry: &ModelRegistry, shared: &Share
                 ),
             }
         }
-        WirePayload::Binary(bytes) => (dispatch_binary(bytes, registry), false),
+        WirePayload::Binary(bytes) => (dispatch_binary(bytes, registry, train), false),
     });
 }
 
@@ -257,12 +264,17 @@ fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
 
 /// Decode and answer one PLNB v2 frame. Errors come back as JSON lines
 /// (no JSON value starts with the magic byte, so a client can never
-/// confuse the framings); only the `transform` response rides binary.
-fn dispatch_binary(bytes: &[u8], registry: &ModelRegistry) -> WirePayload {
+/// confuse the framings); only the `transform` and `sweep` responses
+/// ride binary.
+fn dispatch_binary(bytes: &[u8], registry: &ModelRegistry, train: &TrainStore) -> WirePayload {
     let result = wire::decode(bytes).and_then(|frame| match frame.op {
         BinOp::Transform => op_transform_binary(frame, registry),
         BinOp::Recommend => op_recommend_binary(frame, registry),
-        BinOp::TransformResp => Err(anyhow!("unexpected PLNB response frame in a request")),
+        BinOp::ShardLoad => crate::dist::worker::op_shard_load(frame, train),
+        BinOp::Sweep => crate::dist::worker::op_sweep(frame, train),
+        BinOp::TransformResp | BinOp::GramResp => {
+            Err(anyhow!("unexpected PLNB response frame in a request"))
+        }
     });
     result.unwrap_or_else(|e| WirePayload::Line(err_json(format!("{e:#}")).to_string()))
 }
@@ -616,13 +628,19 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     proto: u8,
+    /// Set when a failed [`Self::negotiate`] leaves the connection's
+    /// framing state unknowable (hello possibly half-written, or its
+    /// reply half-read). A poisoned client refuses further requests:
+    /// pooled callers must drop and redial instead of reusing a socket
+    /// whose next bytes could be misparsed under either framing.
+    poisoned: bool,
 }
 
 impl Client {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to plnmf daemon")?;
         let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        Ok(Client { reader, writer: stream, proto: 1 })
+        Ok(Client { reader, writer: stream, proto: 1, poisoned: false })
     }
 
     /// [`Self::connect`] with a bounded dial: a blackholed peer fails
@@ -632,7 +650,13 @@ impl Client {
         let stream = TcpStream::connect_timeout(addr, timeout)
             .context("connecting to plnmf daemon")?;
         let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
-        Ok(Client { reader, writer: stream, proto: 1 })
+        Ok(Client { reader, writer: stream, proto: 1, poisoned: false })
+    }
+
+    /// Whether a failed negotiate has poisoned this connection (see the
+    /// field doc; poisoned clients fail every request fast).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
     }
 
     /// The protocol this connection is on (1 until a successful
@@ -647,10 +671,19 @@ impl Client {
     /// on v1 — the auto-upgrade is always safe to attempt. Transport
     /// failures are real errors.
     pub fn negotiate(&mut self) -> Result<u8> {
-        let resp = self.request(&Json::obj(vec![
+        let resp = match self.request(&Json::obj(vec![
             ("op", Json::str("hello")),
             ("proto", Json::num(wire::PROTO_MAX as f64)),
-        ]))?;
+        ])) {
+            Ok(resp) => resp,
+            Err(e) => {
+                // The hello may be half-written or its reply half-read;
+                // nothing about this socket's framing can be trusted
+                // now. Refuse reuse rather than risk desynced frames.
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
         self.proto = if resp.get("ok").as_bool() == Some(true)
             && resp.get("proto").as_u64() == Some(wire::PROTO_MAX)
         {
@@ -709,6 +742,9 @@ impl Client {
     /// (relaying the worker's exact bytes is what keeps routed
     /// responses bit-for-bit identical to a single daemon's).
     pub fn request_raw(&mut self, line: &str) -> Result<String> {
+        if self.poisoned {
+            bail!("connection poisoned by a failed negotiate; drop it and reconnect");
+        }
         wire::write_line(&mut self.writer, line).context("writing request")?;
         match self.read_response()? {
             WirePayload::Line(resp) => Ok(resp),
@@ -719,6 +755,9 @@ impl Client {
     /// Send one request frame of either framing and return the raw
     /// response frame — the router's relay path for v2 connections.
     pub(crate) fn request_wire(&mut self, req: &WirePayload) -> Result<WirePayload> {
+        if self.poisoned {
+            bail!("connection poisoned by a failed negotiate; drop it and reconnect");
+        }
         req.write_to(&mut self.writer).context("writing request")?;
         self.read_response()
     }
@@ -859,6 +898,44 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// A failed negotiate must poison the connection: the hello frame
+    /// is in an unknowable half-sent state, so any later request on the
+    /// same socket could be misparsed under either framing. Regression
+    /// for pooled clients (the router) lazily negotiating on a live
+    /// socket and then reusing it after the upgrade failed.
+    #[test]
+    fn failed_negotiate_poisons_the_connection() {
+        use std::io::Read;
+
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // Accept, read the hello bytes, then hang up without
+            // answering — a daemon dying mid-negotiate.
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 64];
+            let _ = s.read(&mut buf);
+        });
+
+        let mut client = Client::connect(addr).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(!client.is_poisoned());
+        let err = client.negotiate().unwrap_err();
+        assert!(Client::is_connection_closed(&err), "unexpected failure class: {err:#}");
+        assert!(client.is_poisoned());
+
+        // Every later request fails fast with the distinct marker —
+        // no bytes are written to the dead socket.
+        let err = format!("{:#}", client.request_raw("{\"op\":\"ping\"}").unwrap_err());
+        assert!(err.contains("poisoned"), "{err}");
+        let err = format!(
+            "{:#}",
+            client.request_wire(&WirePayload::Line("{\"op\":\"ping\"}".into())).unwrap_err()
+        );
+        assert!(err.contains("poisoned"), "{err}");
+        server.join().unwrap();
+    }
 
     #[test]
     fn parse_queries_dense_and_sparse() {

@@ -17,7 +17,8 @@
 //! 0       4     magic  "PLNB"
 //! 4       1     version (2)
 //! 5       1     op      (0x01 transform, 0x02 recommend,
-//!                        0x81 transform response)
+//!                        0x03 shard-load, 0x04 sweep,
+//!                        0x81 transform response, 0x83 gram response)
 //! 6       2     name_len  u16 — model-name bytes (0 in responses)
 //! 8       4     meta_len  u32 — JSON meta segment bytes (may be 0)
 //! 12      4     rows      u32
@@ -51,6 +52,18 @@
 //! the `transform` response matrix (the two payloads that actually
 //! scale with batch size). `recommend` responses are top-N pairs —
 //! small — and stay JSON even on a v2 connection.
+//!
+//! ## Training ops (distributed HALS)
+//!
+//! `plnmf train-dist` reuses the same framing for its coordinator ↔
+//! worker traffic: `0x03 shard-load` ships a CSR shard (as nnz×3
+//! triplet rows) or a resident H panel, `0x04 sweep` broadcasts the
+//! current W panel and asks for one local HALS half-sweep, and `0x83
+//! gram-response` carries the worker's k×k Gram plus its V×k partial
+//! product (and, at sync epochs, its H panel) stacked row-wise. These
+//! ops are coordinator-private: they are **not** routable requests
+//! ([`BinOp::is_request`] is false), so the serving router refuses to
+//! relay them and a training worker is always driven point-to-point.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -88,8 +101,17 @@ pub enum BinOp {
     Transform = 0x01,
     /// Dense recommend request (client → daemon; the response is JSON).
     Recommend = 0x02,
+    /// Training: load a dataset shard / factor panel onto a worker
+    /// (coordinator → worker; the ack is a JSON line).
+    ShardLoad = 0x03,
+    /// Training: broadcast the W panel and run one local HALS
+    /// half-sweep (coordinator → worker).
+    Sweep = 0x04,
     /// Transform response carrying the h matrix (daemon → client).
     TransformResp = 0x81,
+    /// Training response carrying Gram + partial-product (+ H panel)
+    /// stacked row-wise (worker → coordinator).
+    GramResp = 0x83,
 }
 
 impl BinOp {
@@ -97,13 +119,19 @@ impl BinOp {
         match b {
             0x01 => Some(BinOp::Transform),
             0x02 => Some(BinOp::Recommend),
+            0x03 => Some(BinOp::ShardLoad),
+            0x04 => Some(BinOp::Sweep),
             0x81 => Some(BinOp::TransformResp),
+            0x83 => Some(BinOp::GramResp),
             _ => None,
         }
     }
 
     /// Whether this op is a request the router may forward (both data
-    /// requests are idempotent — pure reads of model state).
+    /// requests are idempotent — pure reads of model state). Training
+    /// ops mutate worker-resident shard state, so the router must
+    /// never relay them: the train-dist coordinator owns its workers
+    /// point-to-point.
     pub fn is_request(self) -> bool {
         matches!(self, BinOp::Transform | BinOp::Recommend)
     }
@@ -672,6 +700,25 @@ mod tests {
         let frames = feed(&both, 1000, true);
         assert!(matches!(&frames[0], WireRead::Payload(WirePayload::Binary(b)) if *b == good));
         assert_eq!(line_of(&frames[1]), "{\"op\": \"ping\"}");
+    }
+
+    #[test]
+    fn training_ops_roundtrip_but_are_not_routable() {
+        for (op, byte) in
+            [(BinOp::ShardLoad, 0x03u8), (BinOp::Sweep, 0x04), (BinOp::GramResp, 0x83)]
+        {
+            assert_eq!(op as u8, byte);
+            assert_eq!(BinOp::from_byte(byte), Some(op));
+            // The serving router must refuse to forward training ops:
+            // they mutate worker-resident state.
+            assert!(!op.is_request(), "op 0x{byte:02x} must not be router-forwardable");
+            let meta = Json::obj(vec![("epoch", Json::num(3.0))]);
+            let bytes = encode(op, "job", &meta, 2, 3, &[1.0; 6]).unwrap();
+            let f = decode(&bytes).unwrap();
+            assert_eq!(f.op, op);
+            assert_eq!(f.meta.get("epoch").as_u64(), Some(3));
+            assert_eq!((f.rows, f.cols), (2, 3));
+        }
     }
 
     #[test]

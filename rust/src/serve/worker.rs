@@ -86,6 +86,14 @@ impl ManagedWorker {
         }
     }
 
+    /// Hard-kill the process (fault-injection / chaos paths). After
+    /// this, [`ManagedWorker::poll_exit`] reports the cached exit
+    /// status, so supervisors observe the death exactly like a crash.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
     /// Graceful shutdown: send the protocol `shutdown`, give the
     /// process `deadline` to drain and exit, then SIGKILL as backstop.
     pub fn shutdown(mut self, deadline: Duration) {
@@ -177,6 +185,29 @@ pub fn spawn_worker(
         .parse()
         .map_err(|e| anyhow!("worker '{name}': bad address: {e}"))?;
     crate::info!("worker '{name}' replica {replica}: spawned pid {} on {addr}", child.id());
+    Ok(ManagedWorker { child, addr })
+}
+
+/// Spawn one *training* worker on `port`: a `plnmf serve` daemon with
+/// zero serving models (`--train_worker`) whose only job is to host
+/// dataset shards and answer `shard-load` / `sweep` frames for the
+/// distributed-training coordinator ([`crate::dist`]). No manifest is
+/// written — training workers receive all state over the wire.
+pub fn spawn_train_worker(binary: &Path, host: &str, port: u16) -> Result<ManagedWorker> {
+    let child = Command::new(binary)
+        .arg("serve")
+        .arg("--train_worker")
+        .arg("--serve_port")
+        .arg(port.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning train worker ({binary:?})"))?;
+    let addr: SocketAddr = format!("{host}:{port}")
+        .parse()
+        .map_err(|e| anyhow!("train worker: bad address: {e}"))?;
+    crate::info!("train worker: spawned pid {} on {addr}", child.id());
     Ok(ManagedWorker { child, addr })
 }
 
