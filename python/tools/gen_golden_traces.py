@@ -311,20 +311,24 @@ def step_mu(a, at, w, h):
     return w2, h2
 
 
-def kl_half_step(a: np.ndarray, x: np.ndarray, other: np.ndarray) -> np.ndarray:
-    """mukl::kl_half_step: x ← x ⊙ (ratio·other) ⊘ colsum(other), with
-    the ratio a/(x·otherᵀ+δ) taken over A's support only."""
+def kl_half_step(
+    a: np.ndarray, x: np.ndarray, other: np.ndarray, l1=F32(0.0), l2=F32(0.0)
+) -> np.ndarray:
+    """mukl::kl_half_step: x ← x ⊙ (ratio·other) ⊘ (colsum(other) + l1 +
+    l2·x), with the ratio a/(x·otherᵀ+δ) taken over A's support only.
+    Zero shrink is the identical free path (adding f32 0.0 is exact)."""
     denom = np.zeros(other.shape[1], np.float64)
     for i in range(other.shape[0]):  # row-order f64 column sums
         denom += other[i].astype(np.float64)
     wh = (x @ other.T) + DELTA  # f32
     ratio = np.where(a != 0.0, a / wh, F32(0.0)).astype(F32)
     num = matmul_f32(ratio, other)
-    return (x * (num / (denom.astype(F32) + DELTA))).astype(F32)
+    d = denom.astype(F32) + DELTA + l1 + l2 * x  # f32, Rust's add order
+    return (x * (num / d)).astype(F32)
 
 
-def step_mukl(a, at, w, h):
-    h2 = kl_half_step(at, h, w)
+def step_mukl(a, at, w, h, l1=F32(0.0), l2=F32(0.0)):
+    h2 = kl_half_step(at, h, w, l1, l2)  # only H carries the penalty
     w2 = kl_half_step(a, w, h2)
     return w2, h2
 
@@ -453,11 +457,14 @@ K = 4
 SEED = 7  # both the dataset seed and the factor-init seed
 
 
-def run_engine(engine: str, a: np.ndarray) -> list:
+def run_engine(engine: str, a: np.ndarray, alpha: float = 0.0, l1_ratio: float = 0.0) -> list:
     v, d = a.shape
     at = np.ascontiguousarray(a.T)
     fro2 = float(np.sum(a.astype(np.float64) ** 2))
     w, h = factors_random(v, d, K, SEED)
+    # EngineSpec::shrink(): l1 = (α·ρ) as f32, l2 = (α·(1−ρ)) as f32.
+    l1 = F32(alpha * l1_ratio)
+    l2 = F32(alpha * (1.0 - l1_ratio))
     trace = [rel_error(a, fro2, w, h)]
     for _ in range(ITERS):
         if engine in ("plnmf", "fasthals"):
@@ -465,7 +472,7 @@ def run_engine(engine: str, a: np.ndarray) -> list:
         elif engine == "mu":
             w, h = step_mu(a, at, w, h)
         elif engine == "mukl":
-            w, h = step_mukl(a, at, w, h)
+            w, h = step_mukl(a, at, w, h, l1, l2)
         elif engine == "bpp":
             w, h = step_bpp(a, at, w, h)
         else:
@@ -502,6 +509,19 @@ def main() -> None:
             assert trace[ITERS] <= trace[0], (key, trace)
             traces[key] = trace
             print(f"{key:>20}: {trace[0]:.4f} -> {trace[-1]:.4f}")
+
+    # The one regularized golden job: elastic-net KL (alpha=0.1,
+    # l1_ratio=0.5 — the EngineSpec surface) on the sparse corpus. Pins
+    # the H-denominator penalty terms so they cannot silently drift.
+    trace = run_engine("mukl", datasets["tiny-sparse"].copy(), alpha=0.1, l1_ratio=0.5)
+    key = "mukl+reg/tiny-sparse"
+    assert len(trace) == ITERS + 1, key
+    assert all(math.isfinite(e) for e in trace), (key, trace)
+    assert trace[ITERS] <= trace[0], (key, trace)
+    # The penalty must actually change the trajectory vs. the free run.
+    assert trace[ITERS] != traces["mukl/tiny-sparse"][ITERS], key
+    traces[key] = trace
+    print(f"{key:>20}: {trace[0]:.4f} -> {trace[-1]:.4f}")
 
     # Cross-engine sanity: exact subproblem solves (BPP) should be at
     # least as good per-iteration as HALS, and HALS at least as good as

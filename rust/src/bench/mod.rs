@@ -128,11 +128,17 @@ COMMANDS:
   run        run one engine: --dataset --k --engine --iters --tile --threads
              --seed --trace_path out.csv [--config file.json]
              [--model m.json — save the trained factors for serving]
+             [--loss frobenius|kl --alpha A --l1_ratio R
+             --init random|nndsvd|nndsvda — the engine spec; `--engine mu
+             --loss kl` runs the KL MU engine, alpha>0 adds an elastic-net
+             penalty on H, and the spec is saved with the model]
   compare    run several engines from one init: --engines a,b,c (default all
              native), same options as run; writes results/compare_*.csv
   transform  project query columns onto a saved model's topics:
              --model m.json [--input file.mtx | --dataset name]
              [--sweeps N --batch B --out h.csv]
+             [--loss --alpha --l1_ratio — override the model's saved
+             serving spec field-wise]
   recommend  top-N items from reconstructions of a saved model:
              same inputs as transform, plus --top N [--exclude-seen]
   serve      long-lived daemon: newline-delimited JSON over TCP, models
@@ -155,6 +161,8 @@ COMMANDS:
              and V×k partials per epoch over the PLNB v2 binary wire:
              --dataset --k --iters --train_workers N --sync_every E
              [--threads --seed --trace_path out.csv + the run knobs]
+             [--attach host:port,... — use already-running
+             `serve --train_worker` daemons instead of spawning]
   datasets   print Table-4 statistics of every dataset profile (E8)
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
@@ -180,6 +188,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             seed: cfg.seed,
             iters: report.iters_run(),
             rel_error: report.final_rel_error,
+            spec: cfg.engine_spec()?,
         };
         save_model(Path::new(model_path), driver.engine_mut().factors(), &meta)?;
         println!("\nmodel saved: {model_path}");
@@ -219,7 +228,7 @@ fn queries_of(ds: &Dataset) -> Queries<'_> {
     }
 }
 
-fn serve_projector(cfg: &RunConfig) -> Result<(Projector, ModelMeta, Arc<ThreadPool>)> {
+fn serve_projector(args: &Args, cfg: &RunConfig) -> Result<(Projector, ModelMeta, Arc<ThreadPool>)> {
     let model_path = cfg.model_path.clone().ok_or_else(|| {
         anyhow::anyhow!("--model <file> is required (save one with `plnmf run --model m.json`)")
     })?;
@@ -233,7 +242,24 @@ fn serve_projector(cfg: &RunConfig) -> Result<(Projector, ModelMeta, Arc<ThreadP
         cache_bytes: cfg.cache_bytes,
         tol: cfg.serve_tol,
     };
-    Ok((Projector::new(factors.w, pool.clone(), opts)?, meta, pool))
+    // The model file's spec drives projection; explicit CLI flags
+    // override it field-wise (e.g. project a KL model without its
+    // training-time sparsity penalty via `--alpha 0`).
+    let mut spec = meta.spec;
+    if let Some(l) = cfg.loss {
+        spec.loss = l;
+        if l == crate::nmf::Loss::Kl {
+            spec.solver = crate::nmf::Solver::Mu;
+        }
+    }
+    if args.opt("alpha").is_some() {
+        spec.alpha = cfg.alpha;
+    }
+    if args.opt("l1_ratio").is_some() {
+        spec.l1_ratio = cfg.l1_ratio;
+    }
+    spec.validate()?;
+    Ok((Projector::with_spec(factors.w, pool.clone(), opts, spec)?, meta, pool))
 }
 
 /// Default sweep tolerance `plnmf serve` applies when warm caching is on
@@ -374,14 +400,32 @@ fn cmd_route(args: &Args) -> Result<()> {
     router.run()
 }
 
+/// Parse a `--attach host:port,host:port,...` list into socket
+/// addresses; every entry must parse (a typoed address silently
+/// dropping to a spawned local worker would mask a fleet misconfig).
+fn parse_attach(list: &str) -> Result<Vec<std::net::SocketAddr>> {
+    list.split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<std::net::SocketAddr>()
+                .map_err(|e| anyhow::anyhow!("bad --attach address '{s}': {e}"))
+        })
+        .collect()
+}
+
 fn cmd_train_dist(args: &Args) -> Result<()> {
     let cfg = args.to_run_config()?;
     let binary = std::env::current_exe()
         .map_err(|e| anyhow::anyhow!("resolving the plnmf binary for train workers: {e}"))?;
+    let attach = match args.opt("attach") {
+        Some(list) => parse_attach(list)?,
+        None => Vec::new(),
+    };
     let opts = crate::dist::DistOpts {
         binary: Some(binary),
         workers: cfg.train_workers,
         sync_every: cfg.sync_every,
+        attach,
         ..Default::default()
     };
     let report = crate::dist::train_dist(&cfg, &opts)?;
@@ -395,7 +439,7 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
 
 fn cmd_transform(args: &Args) -> Result<()> {
     let cfg = args.to_run_config()?;
-    let (projector, meta, _pool) = serve_projector(&cfg)?;
+    let (projector, meta, _pool) = serve_projector(args, &cfg)?;
     let ds = load_queries(args, &cfg, &meta, projector.v())?;
     let q = queries_of(&ds);
     let (m, k) = (q.rows(), projector.k());
@@ -442,7 +486,7 @@ fn cmd_transform(args: &Args) -> Result<()> {
 
 fn cmd_recommend(args: &Args) -> Result<()> {
     let cfg = args.to_run_config()?;
-    let (projector, meta, _pool) = serve_projector(&cfg)?;
+    let (projector, meta, _pool) = serve_projector(args, &cfg)?;
     let ds = load_queries(args, &cfg, &meta, projector.v())?;
     let q = queries_of(&ds);
     let top = args.opt_usize("top")?.unwrap_or(10);
@@ -618,4 +662,38 @@ pub fn bench_config(dataset: &str, k: usize, scale: Scale) -> RunConfig {
     cfg.max_iters = scale.iters();
     cfg.seed = 42;
     cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attach_list_parses_or_rejects_loudly() {
+        let addrs = parse_attach("127.0.0.1:7001, 127.0.0.1:7002").unwrap();
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[0].port(), 7001);
+        assert_eq!(addrs[1].port(), 7002);
+        assert_eq!(parse_attach("127.0.0.1:9000").unwrap().len(), 1);
+        for bad in ["localhost", "127.0.0.1", "127.0.0.1:7001,,", "host:port"] {
+            let err = format!("{:#}", parse_attach(bad).unwrap_err());
+            assert!(err.contains("--attach"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn attach_flag_reaches_dist_opts() {
+        // The CLI wiring end of the satellite: `--attach` must land in
+        // DistOpts.attach exactly as parsed.
+        let args = crate::cli::Args::parse(
+            ["train-dist", "--attach", "127.0.0.1:7001,127.0.0.1:7002"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let attach = parse_attach(args.opt("attach").unwrap()).unwrap();
+        let opts = crate::dist::DistOpts { attach, ..Default::default() };
+        assert_eq!(opts.attach.len(), 2);
+        assert_eq!(opts.attach[1], "127.0.0.1:7002".parse().unwrap());
+    }
 }

@@ -29,6 +29,11 @@
 //!    router. JSON encode/decode dominates round-trip time at this
 //!    batch size — the binary rows are the wire-level data-movement
 //!    saving, measured.
+//! 6. **Mixed-loss serving** (`kl_cold`/`kl_warm` rows): the same
+//!    daemon round trip against the same model file, with the loss
+//!    flipped to KL by a manifest-style spec override — what the
+//!    multiplicative KL projection costs per request next to the
+//!    tiled-HALS rows, and how much its warm cache claws back.
 //!
 //! Run via `cargo bench --bench serving_throughput` or `plnmf bench
 //! serving`.
@@ -40,11 +45,11 @@ use crate::bench::harness::{measure, row, BenchOpts};
 use crate::bench::Scale;
 use crate::data::{load_dataset, DataMatrix};
 use crate::linalg::Mat;
-use crate::nmf::Factors;
+use crate::nmf::{Factors, Loss};
 use crate::parallel::{pool::default_threads, ThreadPool};
 use crate::serve::{
     queries_to_json, save_model, Client, ModelMeta, ModelRegistry, OwnedQueries, Projector,
-    ProjectorOpts, RegistryOpts, Router, RouterOpts, Server,
+    ProjectorOpts, RegistryOpts, Router, RouterOpts, Server, SpecOverride,
 };
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -148,6 +153,7 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     daemon_rows.extend(router_roundtrip(dataset, k, &factors, &owned, threads)?);
     daemon_rows.extend(replicated_roundtrip(dataset, k, &factors, &owned, threads)?);
     daemon_rows.extend(binary_roundtrip(dataset, k, threads)?);
+    daemon_rows.extend(kl_roundtrip(dataset, k, &factors, &owned, threads)?);
     let csv = out.join("serving_daemon.csv");
     write_csv(
         &csv,
@@ -501,6 +507,51 @@ fn binary_roundtrip(dataset: &str, k: usize, threads: usize) -> Result<Vec<Strin
     Ok(rows)
 }
 
+/// S1f: mixed-loss serving — the daemon round trip of S1b repeated with
+/// the model's loss flipped to KL (plus an L1 penalty) via the same
+/// spec-override surface a fleet manifest uses. The `kl_cold`/`kl_warm`
+/// delta against the plain `cold`/`warm` rows is the per-request price
+/// of the multiplicative KL projection vs tiled HALS, and the warm row
+/// shows the KL warm cache paying off on a repeated batch.
+fn kl_roundtrip(
+    dataset: &str,
+    k: usize,
+    factors: &Factors,
+    owned: &OwnedQueries,
+    threads: usize,
+) -> Result<Vec<String>> {
+    let dir = std::env::temp_dir().join(format!("plnmf-klbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    save_model(&model_path, factors, &ModelMeta::default())?;
+
+    let registry = ModelRegistry::new(bench_registry_opts(threads));
+    registry.load_with(
+        "bench",
+        &model_path,
+        SpecOverride { loss: Some(Loss::Kl), alpha: Some(0.1), l1_ratio: Some(1.0) },
+    )?;
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run());
+
+    let sub = head(owned, DAEMON_DOCS);
+    let docs = sub.as_queries().rows();
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("bench")),
+        ("queries", queries_to_json(sub.as_queries())),
+    ]);
+    let mut client = Client::connect(addr)?;
+
+    println!("\nKL round trip (same payload, loss flipped by spec override):\n");
+    let rows = roundtrip_rows(&mut client, &req, dataset, k, docs, "kl_", "kl")?;
+    client.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    std::fs::remove_dir_all(dir).ok();
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -521,9 +572,9 @@ mod tests {
         let lines: Vec<&str> = daemon.lines().collect();
         assert_eq!(
             lines.len(),
-            11 + REPLICA_COUNTS.len(),
+            13 + REPLICA_COUNTS.len(),
             "header + direct cold/warm + routed cold/warm + replicated r1/r2/r4 + \
-             dense-json/binary cold/warm/routed twins: {daemon}"
+             dense-json/binary cold/warm/routed twins + kl cold/warm: {daemon}"
         );
         assert!(lines[1].contains(",cold,"));
         assert!(lines[2].contains(",warm,"));
@@ -565,6 +616,12 @@ mod tests {
         assert!(sweeps(lines[4]) <= sweeps(lines[3]), "{daemon}");
         let bin_base = 5 + REPLICA_COUNTS.len();
         assert!(sweeps(lines[bin_base + 3]) <= sweeps(lines[bin_base + 2]), "{daemon}");
+        // Mixed-loss rows: the KL round trip on the same query batch,
+        // cold then warm, with the warm cache doing no worse.
+        let kl_base = bin_base + 6;
+        assert!(lines[kl_base].contains(",kl_cold,"), "kl_cold row missing: {daemon}");
+        assert!(lines[kl_base + 1].contains(",kl_warm,"), "kl_warm row missing: {daemon}");
+        assert!(sweeps(lines[kl_base + 1]) <= sweeps(lines[kl_base]), "{daemon}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

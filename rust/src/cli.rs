@@ -96,7 +96,7 @@ impl Args {
 /// Options consumed by subcommands rather than RunConfig.
 const NON_CONFIG_KEYS: &[&str] = &[
     "out", "out-dir", "reps", "warmup", "ks", "tiles", "datasets", "engines", "scale",
-    "target-error", "format", "top", "input",
+    "target-error", "format", "top", "input", "attach",
 ];
 
 #[cfg(test)]
@@ -211,6 +211,32 @@ mod tests {
         assert_eq!(cfg.dataset, "tiny-sparse");
         // `out` is a subcommand option, not a config field.
         assert_eq!(a.opt("out"), Some("h.csv"));
+    }
+
+    #[test]
+    fn spec_flags_reach_the_config() {
+        use crate::nmf::spec::{Init, Loss};
+        let a = parse("run --engine mu --loss kl --alpha 0.1 --l1_ratio 0.5 --init nndsvda");
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.loss, Some(Loss::Kl));
+        assert_eq!(cfg.init, Init::Nndsvda);
+        assert!((cfg.alpha - 0.1).abs() < 1e-12);
+        assert!((cfg.l1_ratio - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.effective_engine(), crate::config::EngineKind::MuKl);
+        // An invalid combination fails at to_run_config (validate).
+        let a = parse("run --engine plnmf --loss kl");
+        assert!(a.to_run_config().is_err());
+    }
+
+    #[test]
+    fn train_dist_attach_is_a_subcommand_option() {
+        // `--attach` belongs to the train-dist subcommand, not RunConfig:
+        // it must pass through to_run_config without an "unknown option"
+        // error and stay readable via opt().
+        let a = parse("train-dist --dataset tiny --k 4 --attach 127.0.0.1:7001,127.0.0.1:7002");
+        let cfg = a.to_run_config().unwrap();
+        assert_eq!(cfg.dataset, "tiny");
+        assert_eq!(a.opt("attach"), Some("127.0.0.1:7001,127.0.0.1:7002"));
     }
 
     #[test]

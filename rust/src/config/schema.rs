@@ -1,5 +1,6 @@
 //! The run configuration schema.
 
+use crate::nmf::spec::{EngineSpec, Init, Loss, Solver};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -81,7 +82,7 @@ const KNOWN_KEYS: &[&str] = &[
     "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
     "route_port", "worker_port_base", "restart_backoff_ms", "max_backoff_ms", "route_retries",
-    "max_inflight", "train_workers", "sync_every",
+    "max_inflight", "train_workers", "sync_every", "loss", "alpha", "l1_ratio", "init",
 ];
 
 /// Full description of one NMF run.
@@ -163,6 +164,17 @@ pub struct RunConfig {
     /// worker death rolls the run back to the last checkpointed epoch,
     /// so smaller values cost bandwidth but lose less work per crash.
     pub sync_every: usize,
+    /// Reconstruction loss. `None` infers from the engine (mu-kl ⇒ KL,
+    /// everything else ⇒ Frobenius); `Some(Kl)` with `engine = mu`
+    /// promotes to the KL engine (see [`Self::effective_engine`]).
+    pub loss: Option<Loss>,
+    /// Elastic-net strength on H (0 = unregularized, the historical
+    /// path, bit-for-bit).
+    pub alpha: f64,
+    /// L1 share of the penalty: 0 = ridge, 1 = lasso.
+    pub l1_ratio: f64,
+    /// Factor initialization (`random` | `nndsvd` | `nndsvda`).
+    pub init: Init,
 }
 
 impl Default for RunConfig {
@@ -195,6 +207,10 @@ impl Default for RunConfig {
             max_inflight: 32,
             train_workers: 2,
             sync_every: 4,
+            loss: None,
+            alpha: 0.0,
+            l1_ratio: 0.0,
+            init: Init::Random,
         }
     }
 }
@@ -308,6 +324,14 @@ impl RunConfig {
                 0 => bail!("sync_every must be >= 1"),
                 n => self.sync_every = n,
             },
+            "loss" => {
+                self.loss = if v.is_null() { None } else { Some(Loss::from_str(need_str()?)?) }
+            }
+            "alpha" => self.alpha = v.as_f64().ok_or_else(|| anyhow!("expected number"))?,
+            "l1_ratio" => {
+                self.l1_ratio = v.as_f64().ok_or_else(|| anyhow!("expected number"))?
+            }
+            "init" => self.init = Init::from_str(need_str()?)?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -351,7 +375,13 @@ impl RunConfig {
             ("max_inflight", Json::num(self.max_inflight as f64)),
             ("train_workers", Json::num(self.train_workers as f64)),
             ("sync_every", Json::num(self.sync_every as f64)),
+            ("alpha", Json::num(self.alpha)),
+            ("l1_ratio", Json::num(self.l1_ratio)),
+            ("init", Json::str(self.init.name())),
         ];
+        if let Some(l) = self.loss {
+            pairs.push(("loss", Json::str(l.name())));
+        }
         if let Some(m) = &self.model_path {
             pairs.push(("model_path", Json::str(m.clone())));
         }
@@ -361,11 +391,53 @@ impl RunConfig {
         Json::obj(pairs)
     }
 
+    /// The [`EngineSpec`] this config describes: the solver follows the
+    /// engine, the loss is explicit or inferred (mu-kl ⇒ KL, everything
+    /// else ⇒ Frobenius), and regularization/init carry over verbatim.
+    /// Invalid combinations (e.g. `--loss kl` with a HALS engine) are
+    /// loud errors here rather than asserts deep inside an engine.
+    pub fn engine_spec(&self) -> Result<EngineSpec> {
+        let solver = match self.engine {
+            EngineKind::PlNmf | EngineKind::FastHals | EngineKind::PlNmfXla => Solver::Hals,
+            EngineKind::Mu | EngineKind::MuKl | EngineKind::MuXla => Solver::Mu,
+            EngineKind::Bpp => Solver::Bpp,
+        };
+        let loss = match self.loss {
+            Some(l) => l,
+            None if self.engine == EngineKind::MuKl => Loss::Kl,
+            None => Loss::Frobenius,
+        };
+        let spec = EngineSpec {
+            loss,
+            solver,
+            alpha: self.alpha,
+            l1_ratio: self.l1_ratio,
+            init: self.init,
+        };
+        spec.validate().with_context(|| {
+            format!("engine '{}' with loss/alpha/l1_ratio/init", self.engine.name())
+        })?;
+        Ok(spec)
+    }
+
+    /// The engine that actually runs: `--engine mu --loss kl` promotes
+    /// to the KL MU engine (one solver family, two losses — the sklearn
+    /// `solver="mu", beta_loss=...` surface). All other combinations run
+    /// the named engine as-is.
+    pub fn effective_engine(&self) -> EngineKind {
+        if self.engine == EngineKind::Mu && self.loss == Some(Loss::Kl) {
+            EngineKind::MuKl
+        } else {
+            self.engine
+        }
+    }
+
     /// Sanity-check ranges that would otherwise fail deep inside engines.
     pub fn validate(&self) -> Result<()> {
         if self.k == 0 {
             bail!("k must be >= 1");
         }
+        self.engine_spec()?;
         if self.tile > self.k {
             bail!("tile ({}) must be <= k ({})", self.tile, self.k);
         }
@@ -502,6 +574,60 @@ mod tests {
         assert!(cfg.set_str("sweeps", "0").is_err());
         assert!(cfg.set_str("batch", "0").is_err());
         assert_eq!(cfg.sweeps, 12, "failed set must not alter the config");
+    }
+
+    #[test]
+    fn spec_keys_roundtrip_and_validate() {
+        let cfg = RunConfig::default();
+        // Defaults are the pre-spec pipeline.
+        assert_eq!(cfg.loss, None);
+        assert_eq!(cfg.engine_spec().unwrap(), EngineSpec::default());
+        assert_eq!(cfg.effective_engine(), EngineKind::PlNmf);
+
+        let mut cfg = cfg;
+        cfg.set_str("loss", "kl").unwrap();
+        cfg.set_str("engine", "mu").unwrap();
+        cfg.set_str("alpha", "0.3").unwrap();
+        cfg.set_str("l1_ratio", "0.5").unwrap();
+        cfg.set_str("init", "nndsvda").unwrap();
+        let spec = cfg.engine_spec().unwrap();
+        assert_eq!(spec.loss, Loss::Kl);
+        assert_eq!(spec.solver, Solver::Mu);
+        assert_eq!(spec.init, Init::Nndsvda);
+        assert!((spec.alpha - 0.3).abs() < 1e-12);
+        // mu + kl promotes to the KL engine.
+        assert_eq!(cfg.effective_engine(), EngineKind::MuKl);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.loss, Some(Loss::Kl));
+        assert_eq!(re.init, Init::Nndsvda);
+        assert!((re.alpha - 0.3).abs() < 1e-12);
+        assert!((re.l1_ratio - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_inference_and_rejection() {
+        // mu-kl with no explicit loss infers KL.
+        let mut cfg = RunConfig::default();
+        cfg.set_str("engine", "mu-kl").unwrap();
+        assert_eq!(cfg.engine_spec().unwrap().loss, Loss::Kl);
+        assert_eq!(cfg.effective_engine(), EngineKind::MuKl);
+        // KL under a HALS engine is a loud config error, caught by
+        // validate() before any engine is built.
+        let mut cfg = RunConfig::default();
+        cfg.set_str("loss", "kl").unwrap();
+        assert!(cfg.engine_spec().is_err());
+        assert!(cfg.validate().is_err());
+        // Bad values are rejected at set / validate time.
+        assert!(cfg.set_str("loss", "poisson").is_err());
+        assert!(cfg.set_str("init", "zeros").is_err());
+        cfg.set_str("loss", "frobenius").unwrap();
+        cfg.set_str("alpha", "-1").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set_str("alpha", "0.1").unwrap();
+        cfg.set_str("l1_ratio", "1.5").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set_str("l1_ratio", "1").unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Context;
+use anyhow::{bail, Context};
 
 use crate::config::{EngineKind, RunConfig};
 use crate::data::{load_dataset, Dataset};
@@ -11,6 +11,7 @@ use crate::nmf::fasthals::FastHalsEngine;
 use crate::nmf::mu::MuEngine;
 use crate::nmf::mukl::MuKlEngine;
 use crate::nmf::plnmf::PlNmfEngine;
+use crate::nmf::spec::{Init, Loss};
 use crate::nmf::{IterRecord, NmfEngine};
 use crate::parallel::{pool::default_threads, ThreadPool};
 use crate::runtime::engine::{MuXlaEngine, PlNmfXlaEngine};
@@ -54,25 +55,49 @@ impl RunReport {
 }
 
 /// Instantiate an engine for `kind` on an already-loaded dataset.
+///
+/// The config's loss/alpha/l1_ratio/init surface is resolved into an
+/// [`crate::nmf::EngineSpec`] for the engine actually built (`kind` may
+/// differ from `cfg.engine` in comparison sweeps): `--engine mu --loss
+/// kl` promotes to the KL MU engine, the XLA engines run fixed AOT
+/// graphs and reject any non-default spec, and invalid combinations are
+/// errors here rather than asserts inside an engine.
 pub fn create_engine(
     kind: EngineKind,
     ds: Arc<Dataset>,
     pool: Arc<ThreadPool>,
     cfg: &RunConfig,
 ) -> Result<Box<dyn NmfEngine>> {
+    let mut spec_cfg = cfg.clone();
+    spec_cfg.engine = kind;
+    let kind = spec_cfg.effective_engine();
+    spec_cfg.engine = kind;
+    let spec = spec_cfg.engine_spec()?;
+    if kind == EngineKind::MuKl && spec.loss != Loss::Kl {
+        bail!("engine 'mu-kl-cpu' optimizes the KL objective; drop --loss or use --loss kl");
+    }
+    if kind.is_xla()
+        && !(spec.loss == Loss::Frobenius && spec.alpha == 0.0 && spec.init == Init::Random)
+    {
+        bail!(
+            "engine '{}' runs a fixed AOT graph; loss/alpha/init overrides need a native engine",
+            kind.name()
+        );
+    }
     Ok(match kind {
-        EngineKind::PlNmf => Box::new(PlNmfEngine::new(
+        EngineKind::PlNmf => Box::new(PlNmfEngine::with_spec(
             ds,
             pool,
             cfg.k,
             cfg.seed,
             cfg.tile,
             cfg.cache_bytes,
+            spec,
         )),
-        EngineKind::FastHals => Box::new(FastHalsEngine::new(ds, pool, cfg.k, cfg.seed)),
-        EngineKind::Mu => Box::new(MuEngine::new(ds, pool, cfg.k, cfg.seed)),
-        EngineKind::MuKl => Box::new(MuKlEngine::new(ds, pool, cfg.k, cfg.seed)),
-        EngineKind::Bpp => Box::new(BppEngine::new(ds, pool, cfg.k, cfg.seed)),
+        EngineKind::FastHals => Box::new(FastHalsEngine::with_spec(ds, pool, cfg.k, cfg.seed, spec)),
+        EngineKind::Mu => Box::new(MuEngine::with_spec(ds, pool, cfg.k, cfg.seed, spec)),
+        EngineKind::MuKl => Box::new(MuKlEngine::with_spec(ds, pool, cfg.k, cfg.seed, spec)),
+        EngineKind::Bpp => Box::new(BppEngine::with_spec(ds, pool, cfg.k, cfg.seed, spec)),
         EngineKind::PlNmfXla => Box::new(
             PlNmfXlaEngine::new(ds, pool, cfg.k, cfg.seed, &cfg.artifacts_dir)
                 .context("creating plnmf-accel engine")?,
@@ -168,6 +193,32 @@ mod tests {
             assert_eq!(report.iters_run(), 10);
             assert!(report.secs_per_iter() > 0.0);
         }
+    }
+
+    #[test]
+    fn loss_kl_promotes_mu_and_rejects_hals() {
+        use crate::nmf::spec::Loss;
+        let mut c = cfg(EngineKind::Mu);
+        c.loss = Some(Loss::Kl);
+        let mut d = Driver::from_config(&c).unwrap();
+        let report = d.run().unwrap();
+        assert_eq!(report.engine, "mu-kl-cpu");
+        // The same loss under a HALS engine is a loud config error.
+        let mut c = cfg(EngineKind::PlNmf);
+        c.loss = Some(Loss::Kl);
+        assert!(Driver::from_config(&c).is_err());
+    }
+
+    #[test]
+    fn regularized_spec_runs_through_driver() {
+        let mut c = cfg(EngineKind::PlNmf);
+        c.alpha = 0.2;
+        c.l1_ratio = 0.5;
+        c.init = crate::nmf::spec::Init::Nndsvda;
+        let mut d = Driver::from_config(&c).unwrap();
+        let report = d.run().unwrap();
+        assert!(report.final_rel_error.is_finite());
+        assert!(report.final_rel_error < report.trace[0].rel_error);
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::coordinator::RunReport;
 use crate::data::{load_dataset, DataMatrix, Dataset};
 use crate::linalg::Mat;
 use crate::nmf::halsops::{update_naive, UpdateKind};
-use crate::nmf::{error, Factors, IterRecord};
+use crate::nmf::{error, Factors, IterRecord, Solver};
 use crate::parallel::pool::default_threads;
 use crate::parallel::{split_even, ThreadPool};
 use crate::serve::wire::{self, BinOp, WirePayload};
@@ -235,14 +235,28 @@ fn ship_shard(
     send_shard_load(client, name, &protocol::hpanel_meta(epoch), h.rows(), h.cols(), h.data())
 }
 
-/// One slot's epoch: broadcast W, collect and validate its
-/// gram-response.
-fn sweep_slot(slot: &mut Slot, w: &Mat, epoch: usize, want_h: bool, k: usize) -> Result<SweepReply> {
+/// One slot's epoch: broadcast W (with the run's H penalties riding the
+/// sweep meta), collect and validate its gram-response.
+fn sweep_slot(
+    slot: &mut Slot,
+    w: &Mat,
+    epoch: usize,
+    want_h: bool,
+    k: usize,
+    l1: f64,
+    l2: f64,
+) -> Result<SweepReply> {
     let name = slot.name.as_str();
     let client =
         slot.client.as_mut().ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
-    let bytes =
-        wire::encode(BinOp::Sweep, name, &protocol::sweep_meta(epoch, want_h), w.rows(), k, w.data())?;
+    let bytes = wire::encode(
+        BinOp::Sweep,
+        name,
+        &protocol::sweep_meta(epoch, want_h, l1, l2),
+        w.rows(),
+        k,
+        w.data(),
+    )?;
     let resp = client
         .request_wire(&WirePayload::Binary(bytes))
         .with_context(|| format!("sweep epoch {epoch} on '{name}'"))?;
@@ -345,11 +359,23 @@ fn recover(
 /// sizes, only split across two processes.
 pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
     cfg.validate()?;
+    let spec = cfg.engine_spec()?;
+    if spec.solver != Solver::Hals {
+        bail!(
+            "train-dist runs the distributed FAST-HALS engine; solver '{}' (loss '{}') is not \
+             supported — use `plnmf run` for the mu/bpp families",
+            spec.solver.name(),
+            spec.loss.name()
+        );
+    }
+    // H-side elastic-net penalties travel in every sweep meta; zero stays
+    // off the wire so pre-spec workers see byte-identical frames.
+    let (l1, l2) = (f64::from(spec.l1()), f64::from(spec.l2()));
     let ds = load_dataset(&cfg.dataset, cfg.seed)?;
     let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
     let pool = ThreadPool::new(threads);
     let k = cfg.k;
-    let factors = Factors::random(ds.v(), ds.d(), k, cfg.seed);
+    let factors = Factors::init(&ds, k, cfg.seed, spec.init);
 
     let attach_mode = !opts.attach.is_empty();
     let want = if attach_mode { opts.attach.len() } else { opts.workers.max(1) };
@@ -435,7 +461,7 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
             let wref = &w;
             let handles: Vec<_> = slots
                 .iter_mut()
-                .map(|slot| scope.spawn(move || sweep_slot(slot, wref, it, want_h, k)))
+                .map(|slot| scope.spawn(move || sweep_slot(slot, wref, it, want_h, k, l1, l2)))
                 .collect();
             handles
                 .into_iter()
@@ -619,6 +645,45 @@ mod tests {
             }
             assert!(dist.final_rel_error.is_finite());
         }
+    }
+
+    #[test]
+    fn regularized_nndsvda_run_matches_single_process_trace() {
+        // Spec threading end-to-end: the sweep meta carries the H
+        // penalties, the worker's regularized half-sweep mirrors the
+        // engine's, and both processes start from the same NNDSVDa
+        // factors — so the traces must line up like the free run's do.
+        let addr = spawn_inproc_worker();
+        let mut cfg = dist_cfg("tiny-sparse");
+        cfg.alpha = 0.1;
+        cfg.l1_ratio = 0.5;
+        cfg.init = crate::nmf::Init::Nndsvda;
+        let opts = DistOpts { attach: vec![addr], sync_every: 3, ..DistOpts::default() };
+        let dist = train_dist(&cfg, &opts).unwrap();
+        let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+        shutdown_worker(addr);
+
+        assert_eq!(dist.trace.len(), single.trace.len(), "trace lengths diverge");
+        for (d, s) in dist.trace.iter().zip(&single.trace) {
+            assert_eq!(d.iter, s.iter);
+            assert!(
+                (d.rel_error - s.rel_error).abs() <= 2e-3,
+                "iter {}: dist {} vs single {}",
+                d.iter,
+                d.rel_error,
+                s.rel_error
+            );
+        }
+    }
+
+    #[test]
+    fn non_hals_specs_are_rejected_before_any_worker_io() {
+        // No binary, no attach list: the spec gate must fire before
+        // train_dist ever tries to find a worker.
+        let mut cfg = dist_cfg("tiny");
+        cfg.engine = EngineKind::MuKl;
+        let err = train_dist(&cfg, &DistOpts::default()).unwrap_err().to_string();
+        assert!(err.contains("FAST-HALS"), "unexpected error: {err}");
     }
 
     #[test]

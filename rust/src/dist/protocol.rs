@@ -168,28 +168,53 @@ pub fn parse_shard_load(meta: &Json) -> Result<ShardLoadMsg> {
 // ---------------------------------------------------------------------------
 
 /// A parsed sweep request meta.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepReq {
     pub epoch: usize,
     /// Whether the reply must append the worker's updated H panel (the
     /// coordinator's checkpoint epochs).
     pub want_h: bool,
+    /// Elastic-net penalties on the worker's H half-sweep. Zero values
+    /// stay off the wire, so an unregularized coordinator emits exactly
+    /// the pre-spec meta and an old worker would parse it unchanged.
+    pub l1: f64,
+    pub l2: f64,
 }
 
-pub fn sweep_meta(epoch: usize, want_h: bool) -> Json {
-    Json::obj(vec![
+pub fn sweep_meta(epoch: usize, want_h: bool, l1: f64, l2: f64) -> Json {
+    let mut pairs = vec![
         ("epoch", Json::num(epoch as f64)),
         ("want_h", Json::Bool(want_h)),
-    ])
+    ];
+    if l1 != 0.0 {
+        pairs.push(("l1", Json::num(l1)));
+    }
+    if l2 != 0.0 {
+        pairs.push(("l2", Json::num(l2)));
+    }
+    Json::obj(pairs)
 }
 
 pub fn parse_sweep(meta: &Json) -> Result<SweepReq> {
+    // Absent ⇒ unregularized; present-but-bogus (negative, NaN,
+    // non-number) is a protocol error, never silently 0.
+    let reg = |key: &str| -> Result<f64> {
+        match meta.get(key) {
+            Json::Null => Ok(0.0),
+            v => match v.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 => Ok(x),
+                _ => bail!("sweep meta \"{key}\" must be a finite number >= 0, got {v}"),
+            },
+        }
+    };
     Ok(SweepReq {
         epoch: req_usize(meta, "epoch")?,
         want_h: meta
             .get("want_h")
             .as_bool()
             .ok_or_else(|| anyhow!("sweep meta needs a boolean \"want_h\""))?,
+        l1: reg("l1")?,
+        l2: reg("l2")?,
     })
 }
 
@@ -313,13 +338,29 @@ mod tests {
 
     #[test]
     fn sweep_and_gram_metas_roundtrip() {
-        let req = parse_sweep(&sweep_meta(5, true)).unwrap();
-        assert_eq!(req, SweepReq { epoch: 5, want_h: true });
+        let req = parse_sweep(&sweep_meta(5, true, 0.0, 0.0)).unwrap();
+        assert_eq!(req, SweepReq { epoch: 5, want_h: true, l1: 0.0, l2: 0.0 });
         assert!(parse_sweep(&Json::obj(vec![("epoch", Json::num(1.0))])).is_err());
 
         let gm = GramMeta { epoch: 2, rows_q: 4, rows_p: 80, rows_h: 20, secs: 0.25 };
         let re = GramMeta::from_meta(&gm.to_meta()).unwrap();
         assert_eq!(re, gm);
+    }
+
+    #[test]
+    fn sweep_regularization_is_absent_when_zero_and_strict_when_present() {
+        // Unregularized metas are byte-compatible with the pre-spec wire.
+        let meta = sweep_meta(3, false, 0.0, 0.0).to_string();
+        assert!(!meta.contains("l1") && !meta.contains("l2"), "{meta}");
+        // Non-zero penalties round-trip.
+        let req = parse_sweep(&sweep_meta(3, false, 0.05, 0.025)).unwrap();
+        assert_eq!((req.l1, req.l2), (0.05, 0.025));
+        // Bogus values are protocol errors, not silently 0.
+        for bad in [r#"{"epoch": 1, "want_h": false, "l1": -0.5}"#,
+                    r#"{"epoch": 1, "want_h": false, "l2": "big"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(parse_sweep(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]

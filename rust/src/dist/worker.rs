@@ -30,7 +30,7 @@ use anyhow::{anyhow, bail};
 use crate::config::{DatasetKind, DatasetProfile};
 use crate::data::{DataMatrix, Dataset};
 use crate::linalg::Mat;
-use crate::nmf::halsops::{update_naive, UpdateKind};
+use crate::nmf::halsops::{update_naive_reg, Shrink, UpdateKind};
 use crate::nmf::products;
 use crate::parallel::ThreadPool;
 use crate::serve::wire::{self, ok_obj, BinFrame, BinOp, WirePayload};
@@ -282,10 +282,13 @@ pub fn op_sweep(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
     let k = shard.k;
     let pool = Arc::clone(&shard.pool);
     let LoadedShard { ds, h, r, p, timers, .. } = shard;
-    // The H half-sweep, verbatim from the FAST-HALS engine step.
+    // The H half-sweep, verbatim from the FAST-HALS engine step —
+    // including its elastic-net variant when the sweep meta carries
+    // penalties (zero shrink takes the exact unregularized path).
+    let shrink = Shrink { l1: req.l1 as Elem, l2: req.l2 as Elem };
     timers.time("spmm_r", || products::at_times(&pool, ds, &w, r));
     let s = timers.time("gram_s", || products::factor_gram(&pool, &w));
-    update_naive(&pool, h, &s, r, UpdateKind::Plain, timers, "h_dmv");
+    update_naive_reg(&pool, h, &s, r, UpdateKind::Plain, shrink, timers, "h_dmv");
     // The W half-sweep's inputs: local partial product + local Gram.
     timers.time("spmm_p", || products::a_times(&pool, ds, h, p));
     let q = timers.time("gram_q", || products::factor_gram(&pool, h));
@@ -307,6 +310,7 @@ pub fn op_sweep(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
 mod tests {
     use super::*;
     use crate::data::load_dataset;
+    use crate::nmf::halsops::update_naive;
 
     const JOB: &str = "train-0";
     const K: usize = 4;
@@ -369,7 +373,7 @@ mod tests {
         assert_eq!(store.resident(), 1);
 
         let sweep_bytes =
-            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(1, true), f.w.rows(), f.w.cols(), f.w.data())
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(1, true, 0.0, 0.0), f.w.rows(), f.w.cols(), f.w.data())
                 .unwrap();
         let reply = op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap();
         let frame = match reply {
@@ -415,7 +419,7 @@ mod tests {
 
         // want_h = false omits the H panel.
         let sweep_bytes =
-            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(2, false), f.w.rows(), f.w.cols(), f.w.data())
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(2, false, 0.0, 0.0), f.w.rows(), f.w.cols(), f.w.data())
                 .unwrap();
         let reply = op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap();
         let frame = match reply {
@@ -424,6 +428,59 @@ mod tests {
         };
         assert_eq!(GramMeta::from_meta(&frame.meta).unwrap().rows_h, 0);
         assert_eq!(frame.rows, K + ds.v());
+    }
+
+    #[test]
+    fn regularized_sweep_matches_the_engines_h_update_exactly() {
+        // Penalties in the sweep meta must reach the worker's kernel as
+        // the exact Shrink the single-process engine would use — bitwise,
+        // like the free sweep above.
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+
+        let (l1, l2) = (0.05f64, 0.025f64);
+        let sweep_bytes = wire::encode(
+            BinOp::Sweep,
+            JOB,
+            &protocol::sweep_meta(1, true, l1, l2),
+            f.w.rows(),
+            f.w.cols(),
+            f.w.data(),
+        )
+        .unwrap();
+        let frame = match op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap() {
+            WirePayload::Binary(b) => wire::decode(&b).unwrap(),
+            WirePayload::Line(l) => panic!("sweep failed: {l}"),
+        };
+
+        let at = match &ds.at {
+            DataMatrix::Sparse(at) => at.clone(),
+            _ => unreachable!(),
+        };
+        let a = at.transposed();
+        let ref_ds = Dataset {
+            profile: ds.profile.clone(),
+            fro2: a.fro2(),
+            a: DataMatrix::Sparse(a),
+            at: DataMatrix::Sparse(at),
+        };
+        let pool = ThreadPool::new(THREADS);
+        let mut h = f.h.clone();
+        let mut free = f.h.clone();
+        let mut r = Mat::zeros(ref_ds.d(), K);
+        let mut timers = PhaseTimers::new();
+        products::at_times(&pool, &ref_ds, &f.w, &mut r);
+        let s = products::factor_gram(&pool, &f.w);
+        let shrink = Shrink { l1: l1 as Elem, l2: l2 as Elem };
+        update_naive_reg(&pool, &mut h, &s, &r, UpdateKind::Plain, shrink, &mut timers, "h_dmv");
+        update_naive(&pool, &mut free, &s, &r, UpdateKind::Plain, &mut timers, "h_dmv");
+
+        let qk = K * K;
+        let pk = ds.v() * K;
+        assert_eq!(&frame.data[qk + pk..], h.data(), "regularized H_s mismatch");
+        assert_ne!(h.data(), free.data(), "the penalties did nothing");
     }
 
     #[test]
@@ -438,7 +495,7 @@ mod tests {
         // The next sweep runs from the re-synced panel: its H reply is
         // the update of h2, not of the originally shipped panel.
         let sweep_bytes =
-            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(6, true), f.w.rows(), f.w.cols(), f.w.data())
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(6, true, 0.0, 0.0), f.w.rows(), f.w.cols(), f.w.data())
                 .unwrap();
         let frame = match op_sweep(wire::decode(&sweep_bytes).unwrap(), &store).unwrap() {
             WirePayload::Binary(b) => wire::decode(&b).unwrap(),
@@ -471,7 +528,7 @@ mod tests {
     fn protocol_misuse_is_rejected_loudly() {
         let store = TrainStore::new();
         // Sweep with no shard answers the NO_SHARD marker.
-        let bytes = wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(0, false), 2, 2, &[0.0; 4]).unwrap();
+        let bytes = wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(0, false, 0.0, 0.0), 2, 2, &[0.0; 4]).unwrap();
         let err = format!("{:#}", op_sweep(wire::decode(&bytes).unwrap(), &store).unwrap_err());
         assert!(err.contains(protocol::NO_SHARD), "{err}");
         // Chunk before begin.

@@ -23,8 +23,9 @@ use crate::parallel::ThreadPool;
 use crate::util::PhaseTimers;
 use crate::Result;
 
-use super::nnls::nnls_bpp_rows;
+use super::nnls::{nnls_bpp_rows, nnls_bpp_rows_reg};
 use super::products;
+use super::spec::{EngineSpec, Loss};
 use super::traits::{EngineCtx, NmfEngine};
 use super::Factors;
 
@@ -36,7 +37,24 @@ pub struct BppEngine {
 
 impl BppEngine {
     pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> Self {
-        let ctx = EngineCtx::new(ds, pool, k, seed);
+        BppEngine::with_spec(ds, pool, k, seed, EngineSpec::default())
+    }
+
+    /// Construct with an [`EngineSpec`]: the H half-step solves the
+    /// exact elastic-net NNLS subproblem. The KL loss has no least-
+    /// squares subproblem and is rejected.
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        spec: EngineSpec,
+    ) -> Self {
+        assert!(
+            spec.loss != Loss::Kl,
+            "the BPP solver is Frobenius-only; use the mu solver for kl"
+        );
+        let ctx = EngineCtx::with_spec(ds, pool, k, seed, spec);
         let (r, p) = ctx.buffers();
         BppEngine { ctx, r, p }
     }
@@ -52,11 +70,12 @@ impl NmfEngine for BppEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+        let EngineCtx { ds, pool, factors, timers, spec } = &mut self.ctx;
+        let shrink = spec.shrink();
 
         timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
         let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
-        timers.time("h_bpp", || nnls_bpp_rows(pool, &s, &self.r, &mut factors.h));
+        timers.time("h_bpp", || nnls_bpp_rows_reg(pool, &s, &self.r, &mut factors.h, shrink));
 
         timers.time("spmm_p", || products::a_times(pool, ds, &factors.h, &mut self.p));
         let q = timers.time("gram_q", || products::factor_gram(pool, &factors.h));
@@ -119,6 +138,43 @@ mod tests {
         }
         assert!(e.factors().w.data().iter().all(|&x| x >= 0.0));
         assert!(e.factors().h.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn default_spec_is_bit_identical_to_new() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 2).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut a = BppEngine::new(ds.clone(), pool.clone(), 3, 9);
+        let mut b = BppEngine::with_spec(ds, pool, 3, 9, EngineSpec::default());
+        for _ in 0..4 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.factors().w, b.factors().w);
+        assert_eq!(a.factors().h, b.factors().h);
+    }
+
+    #[test]
+    fn l1_regularization_sparsifies_h() {
+        // Pure L1 in the exact NNLS subproblem zeroes coordinates whose
+        // dual never clears the shift — strictly more exact zeros than
+        // the unregularized solve (BPP zeros are exact, not EPS floors).
+        let ds = Arc::new(load_dataset("tiny", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let spec = EngineSpec { alpha: 0.5, l1_ratio: 1.0, ..Default::default() };
+        let mut free = BppEngine::new(ds.clone(), pool.clone(), 4, 42);
+        let mut reg = BppEngine::with_spec(ds, pool, 4, 42, spec);
+        for _ in 0..5 {
+            free.step().unwrap();
+            reg.step().unwrap();
+        }
+        let zeros = |m: &Mat| m.data().iter().filter(|&&x| x == 0.0).count();
+        assert!(
+            zeros(&reg.factors().h) > zeros(&free.factors().h),
+            "regularized H zeros {} vs free {}",
+            zeros(&reg.factors().h),
+            zeros(&free.factors().h)
+        );
     }
 
     #[test]

@@ -13,8 +13,9 @@ use crate::parallel::ThreadPool;
 use crate::util::PhaseTimers;
 use crate::Result;
 
-use super::halsops::{update_naive, UpdateKind};
+use super::halsops::{update_naive, update_naive_reg, UpdateKind};
 use super::products;
+use super::spec::{EngineSpec, Loss};
 use super::traits::{EngineCtx, NmfEngine};
 use super::Factors;
 
@@ -26,7 +27,25 @@ pub struct FastHalsEngine {
 
 impl FastHalsEngine {
     pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> Self {
-        let ctx = EngineCtx::new(ds, pool, k, seed);
+        FastHalsEngine::with_spec(ds, pool, k, seed, EngineSpec::default())
+    }
+
+    /// Construct with an [`EngineSpec`]: the init strategy seeds the
+    /// factors and the elastic-net shrink applies to the H update. The
+    /// KL loss has no HALS rule — reject it here rather than silently
+    /// optimizing the wrong objective.
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        spec: EngineSpec,
+    ) -> Self {
+        assert!(
+            spec.loss != Loss::Kl,
+            "the HALS solver is Frobenius-only; use the mu solver for kl"
+        );
+        let ctx = EngineCtx::with_spec(ds, pool, k, seed, spec);
         let (r, p) = ctx.buffers();
         FastHalsEngine { ctx, r, p }
     }
@@ -44,12 +63,13 @@ impl NmfEngine for FastHalsEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+        let EngineCtx { ds, pool, factors, timers, spec } = &mut self.ctx;
+        let shrink = spec.shrink();
 
         // ---- update H (Alg. 1 lines 4–8) --------------------------------
         timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
         let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
-        update_naive(pool, &mut factors.h, &s, &self.r, UpdateKind::Plain, timers, "h_dmv");
+        update_naive_reg(pool, &mut factors.h, &s, &self.r, UpdateKind::Plain, shrink, timers, "h_dmv");
 
         // ---- update W (Alg. 1 lines 10–16) ------------------------------
         timers.time("spmm_p", || products::a_times(pool, ds, &factors.h, &mut self.p));
@@ -120,6 +140,58 @@ mod tests {
             let n: f64 = (0..w.rows()).map(|i| (w.at(i, j) as f64).powi(2)).sum();
             assert!((n - 1.0).abs() < 1e-4, "col {j} norm² {n}");
         }
+    }
+
+    #[test]
+    fn default_spec_is_bit_identical_to_new() {
+        let ds = Arc::new(load_dataset("tiny", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut a = FastHalsEngine::new(ds.clone(), pool.clone(), 4, 42);
+        let mut b = FastHalsEngine::with_spec(ds, pool, 4, 42, EngineSpec::default());
+        for _ in 0..5 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.factors().w, b.factors().w);
+        assert_eq!(a.factors().h, b.factors().h);
+    }
+
+    #[test]
+    fn l1_regularization_sparsifies_h() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let spec = EngineSpec { alpha: 0.5, l1_ratio: 1.0, ..Default::default() };
+        let mut free = FastHalsEngine::new(ds.clone(), pool.clone(), 4, 42);
+        let mut reg = FastHalsEngine::with_spec(ds, pool, 4, 42, spec);
+        for _ in 0..10 {
+            free.step().unwrap();
+            reg.step().unwrap();
+        }
+        let floor = |m: &crate::linalg::Mat| {
+            m.data().iter().filter(|&&v| v <= crate::EPS).count()
+        };
+        assert!(
+            floor(&reg.factors().h) > floor(&free.factors().h),
+            "regularized H floored {} entries vs {} unregularized",
+            floor(&reg.factors().h),
+            floor(&free.factors().h)
+        );
+        // W stays unit-norm: regularization targets H only.
+        let w = &reg.factors().w;
+        for j in 0..4 {
+            let n: f64 = (0..w.rows()).map(|i| (w.at(i, j) as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nndsvd_init_runs_and_converges() {
+        let ds = Arc::new(load_dataset("tiny", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let spec = EngineSpec { init: crate::nmf::Init::Nndsvda, ..Default::default() };
+        let mut e = FastHalsEngine::with_spec(ds, pool, 4, 42, spec);
+        let trace = e.run(10, 1, 0.0).unwrap();
+        assert!(trace.last().unwrap().rel_error < trace[0].rel_error);
     }
 
     #[test]

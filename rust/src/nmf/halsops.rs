@@ -46,6 +46,33 @@ pub enum UpdateKind {
     /// `X[:,t] + B[:,t] − Σ…`, no normalization — the H update
     /// (FAST-HALS keeps `S_tt = 1` via W's unit columns).
     Plain,
+    /// The exact coordinate solve against a raw (non-unit-diagonal)
+    /// Gram: `(X[:,t]·G[t,t] + B[:,t] − Σ…) / G[t,t]`, no
+    /// normalization. Row-parallel like `Plain` (no barriers). This is
+    /// the serving kernel for regularized projection, where W is kept
+    /// in raw scale so a uniform L1 shrink means the same thing for
+    /// every component. Naive kernel only.
+    WithDiag,
+}
+
+/// Elastic-net shrinkage applied to a factor update:
+/// `x ← max(ε, (numerator − l1) / (denominator + l2))`. `Shrink::NONE`
+/// takes the exact pre-regularization code path — bit-for-bit, not just
+/// mathematically, identical (the shrink arithmetic is skipped, not
+/// applied with zeros).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shrink {
+    pub l1: Elem,
+    pub l2: Elem,
+}
+
+impl Shrink {
+    pub const NONE: Shrink = Shrink { l1: 0.0, l2: 0.0 };
+
+    #[inline]
+    pub fn is_none(&self) -> bool {
+        self.l1 == 0.0 && self.l2 == 0.0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -64,12 +91,33 @@ pub fn update_naive(
     timers: &mut PhaseTimers,
     label: &'static str,
 ) {
+    update_naive_reg(pool, x, g, b, kind, Shrink::NONE, timers, label);
+}
+
+/// [`update_naive`] with elastic-net shrinkage on the solved factor.
+/// `Shrink::NONE` is the identical (bit-for-bit) unregularized path.
+#[allow(clippy::too_many_arguments)]
+pub fn update_naive_reg(
+    pool: &ThreadPool,
+    x: &mut Mat,
+    g: &Mat,
+    b: &Mat,
+    kind: UpdateKind,
+    shrink: Shrink,
+    timers: &mut PhaseTimers,
+    label: &'static str,
+) {
     let (n, k) = (x.rows(), x.cols());
     assert_eq!((g.rows(), g.cols()), (k, k));
     assert_eq!((b.rows(), b.cols()), (n, k));
+    let plain_shrink = !shrink.is_none();
+    let Shrink { l1, l2 } = shrink;
     timers.time(label, || match kind {
         UpdateKind::Plain => {
             // Row-local: every row independent, one parallel sweep.
+            // Unit diagonal (the FAST-HALS `S_tt = 1` invariant), so the
+            // regularized denominator is the constant `1 + l2`.
+            let inv_denom = 1.0 / (1.0 + l2);
             let xs = SharedRows::new(x);
             pool.parallel_for(n, None, |rows| {
                 for i in rows {
@@ -78,7 +126,30 @@ pub fn update_naive(
                     for t in 0..k {
                         // G symmetric: column t == row t (contiguous).
                         let s = vector::dot(xrow, g.row(t));
-                        let v = xrow[t] + brow[t] - s;
+                        let v = if plain_shrink {
+                            (xrow[t] + brow[t] - s - l1) * inv_denom
+                        } else {
+                            xrow[t] + brow[t] - s
+                        };
+                        xrow[t] = if v < EPS { EPS } else { v };
+                    }
+                }
+            });
+        }
+        UpdateKind::WithDiag => {
+            // Row-local exact coordinate solve against a raw Gram; dead
+            // components (`G_tt + l2 == 0`) pin to EPS instead of
+            // dividing by zero.
+            let xs = SharedRows::new(x);
+            pool.parallel_for(n, None, |rows| {
+                for i in rows {
+                    let xrow = unsafe { xs.row_mut(i) };
+                    let brow = b.row(i);
+                    for t in 0..k {
+                        let s = vector::dot(xrow, g.row(t));
+                        let num = xrow[t] * g.at(t, t) + brow[t] - s - l1;
+                        let denom = g.at(t, t) + l2;
+                        let v = if denom > 0.0 { num / denom } else { 0.0 };
                         xrow[t] = if v < EPS { EPS } else { v };
                     }
                 }
@@ -87,7 +158,17 @@ pub fn update_naive(
         UpdateKind::WithDiagAndNorm => {
             columns_with_norm(pool, x, 0, k, |_i, xrow, brow, t| {
                 let s = vector::dot(xrow, g.row(t));
-                let v = xrow[t] * g.at(t, t) + brow[t] - s;
+                let num = xrow[t] * g.at(t, t) + brow[t] - s;
+                let v = if plain_shrink {
+                    let denom = g.at(t, t) + l2;
+                    if denom > 0.0 {
+                        (num - l1) / denom
+                    } else {
+                        0.0
+                    }
+                } else {
+                    num
+                };
                 if v < EPS {
                     EPS
                 } else {
@@ -119,6 +200,31 @@ pub fn update_tiled(
     timers: &mut PhaseTimers,
     labels: [&'static str; 3],
 ) {
+    update_tiled_reg(pool, x, x_old, g, b, tile, kind, Shrink::NONE, timers, labels);
+}
+
+/// [`update_tiled`] with elastic-net shrinkage on the solved factor.
+/// `Shrink::NONE` is the identical (bit-for-bit) unregularized path.
+/// `WithDiag` is a naive-kernel-only flavor (serving); the tiled
+/// training kernel rejects it.
+#[allow(clippy::too_many_arguments)]
+pub fn update_tiled_reg(
+    pool: &ThreadPool,
+    x: &mut Mat,
+    x_old: &mut Mat,
+    g: &Mat,
+    b: &Mat,
+    tile: usize,
+    kind: UpdateKind,
+    shrink: Shrink,
+    timers: &mut PhaseTimers,
+    labels: [&'static str; 3],
+) {
+    assert!(
+        kind != UpdateKind::WithDiag,
+        "UpdateKind::WithDiag is a naive-kernel (serving) flavor; \
+         the tiled training kernel supports Plain and WithDiagAndNorm"
+    );
     let (n, k) = (x.rows(), x.cols());
     assert_eq!((g.rows(), g.cols()), (k, k));
     assert_eq!((b.rows(), b.cols()), (n, k));
@@ -172,7 +278,7 @@ pub fn update_tiled(
         let t1 = (t0 + t_w).min(k);
 
         timers.time(lbl_p2, || {
-            phase2_sweep(pool, x, x_old, g, b, t0, t1, kind, &mut slab_old, &mut slab_xb);
+            phase2_sweep(pool, x, x_old, g, b, t0, t1, kind, shrink, &mut slab_old, &mut slab_xb);
         });
 
         // ---- phase 3 (Alg. 2 line 40): new panel → columns right --------
@@ -225,6 +331,7 @@ fn phase2_sweep(
     t0: usize,
     t1: usize,
     kind: UpdateKind,
+    shrink: Shrink,
     slab_old: &mut [Elem],
     slab_xb: &mut [Elem],
 ) {
@@ -261,7 +368,7 @@ fn phase2_sweep(
                 let sumsq = if rows.is_empty() {
                     0.0
                 } else {
-                    column_step(g, t, t0, jt, tw, n, &old_ptr, &xb_ptr, rows.clone())
+                    column_step(g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr, rows.clone())
                 };
                 unsafe { partials[wid].set(sumsq) };
                 if barrier.wait() {
@@ -290,7 +397,7 @@ fn phase2_sweep(
                 load_tile_slabs(&xs, x_old, b, t0, tw, n, &old_ptr, &xb_ptr, blk.clone());
                 for t in t0..t1 {
                     let jt = t - t0;
-                    column_step(g, t, t0, jt, tw, n, &old_ptr, &xb_ptr, blk.clone());
+                    column_step(g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr, blk.clone());
                 }
                 flush_tile_slab(&xs, t0, tw, n, &xb_ptr, blk.clone());
                 v0 = v1;
@@ -328,8 +435,8 @@ fn load_tile_slabs(
 }
 
 /// The coupled update of one column over rows `[r0, r1)`:
-/// `xb[jt] -= sum_j G[t0+j, t] * (j < jt ? xb[j] : old[j])`, clamp to EPS,
-/// return the window's sum of squares.
+/// `xb[jt] -= sum_j G[t0+j, t] * (j < jt ? xb[j] : old[j])`, then the
+/// shrink (if any), clamp to EPS, return the window's sum of squares.
 #[allow(clippy::too_many_arguments)]
 fn column_step(
     g: &Mat,
@@ -338,6 +445,8 @@ fn column_step(
     jt: usize,
     tw: usize,
     n: usize,
+    kind: UpdateKind,
+    shrink: Shrink,
     old_ptr: &SharedSlice,
     xb_ptr: &SharedSlice,
     rows: std::ops::Range<usize>,
@@ -364,11 +473,25 @@ fn column_step(
         }
     }
     let mut sumsq = 0.0f64;
-    for d in dst.iter_mut() {
-        if *d < EPS {
-            *d = EPS;
+    if shrink.is_none() {
+        for d in dst.iter_mut() {
+            if *d < EPS {
+                *d = EPS;
+            }
+            sumsq += *d as f64 * *d as f64;
         }
-        sumsq += *d as f64 * *d as f64;
+    } else {
+        // The slab's running value is the update's numerator (diag fold
+        // happened at init for the WithDiagAndNorm flavor, and Plain's
+        // diag is the unit `S_tt`).
+        let diag = if kind == UpdateKind::Plain { 1.0 } else { g.at(t, t) };
+        let denom = diag + shrink.l2;
+        let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+        for d in dst.iter_mut() {
+            let v = (*d - shrink.l1) * inv;
+            *d = if v < EPS { EPS } else { v };
+            sumsq += *d as f64 * *d as f64;
+        }
     }
     sumsq
 }
@@ -549,9 +672,11 @@ mod tests {
     use crate::util::rng::Pcg32;
 
     /// Scalar reference implementation of the column update loop,
-    /// transliterated from Alg. 1 (f64 throughout, serial).
-    fn update_reference(x: &mut Mat, g: &Mat, b: &Mat, kind: UpdateKind) {
+    /// transliterated from Alg. 1 (f64 throughout, serial), with the
+    /// elastic-net shrink spelled out at full precision.
+    fn update_reference_reg(x: &mut Mat, g: &Mat, b: &Mat, kind: UpdateKind, shrink: Shrink) {
         let (n, k) = (x.rows(), x.cols());
+        let (l1, l2) = (shrink.l1 as f64, shrink.l2 as f64);
         for t in 0..k {
             let mut sumsq = 0.0f64;
             for i in 0..n {
@@ -560,10 +685,20 @@ mod tests {
                     s += x.at(i, j) as f64 * g.at(j, t) as f64;
                 }
                 let diag = match kind {
-                    UpdateKind::WithDiagAndNorm => g.at(t, t) as f64,
+                    UpdateKind::WithDiagAndNorm | UpdateKind::WithDiag => g.at(t, t) as f64,
                     UpdateKind::Plain => 1.0,
                 };
-                let v = x.at(i, t) as f64 * diag + b.at(i, t) as f64 - s;
+                let num = x.at(i, t) as f64 * diag + b.at(i, t) as f64 - s;
+                let v = if shrink.is_none() && kind != UpdateKind::WithDiag {
+                    num
+                } else {
+                    let denom = diag + l2;
+                    if denom > 0.0 {
+                        (num - l1) / denom
+                    } else {
+                        0.0
+                    }
+                };
                 let v = if v < EPS as f64 { EPS as f64 } else { v };
                 *x.at_mut(i, t) = v as Elem;
                 sumsq += v * v;
@@ -575,6 +710,10 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn update_reference(x: &mut Mat, g: &Mat, b: &Mat, kind: UpdateKind) {
+        update_reference_reg(x, g, b, kind, Shrink::NONE);
     }
 
     fn random_problem(n: usize, k: usize, seed: u64) -> (Mat, Mat, Mat) {
@@ -716,5 +855,113 @@ mod tests {
             let d = max_rel_diff(&xn, &xt);
             assert!(d < 1e-3, "n={n} k={k} tile={tile} {kind:?}: diff {d}");
         });
+    }
+
+    #[test]
+    fn zero_shrink_is_bit_identical() {
+        // Passing an explicit zero Shrink must take the exact original
+        // path — bitwise, not just within tolerance.
+        let pool = ThreadPool::new(3);
+        for kind in [UpdateKind::Plain, UpdateKind::WithDiagAndNorm] {
+            let (x0, g, b) = random_problem(47, 8, 11);
+            let mut t = PhaseTimers::new();
+            let mut plainv = x0.clone();
+            update_naive(&pool, &mut plainv, &g, &b, kind, &mut t, "dmv");
+            let mut reg = x0.clone();
+            update_naive_reg(&pool, &mut reg, &g, &b, kind, Shrink { l1: 0.0, l2: 0.0 }, &mut t, "dmv");
+            assert_eq!(plainv, reg, "naive {kind:?}");
+
+            let mut tiled = x0.clone();
+            let mut s1 = Mat::zeros(47, 8);
+            update_tiled(&pool, &mut tiled, &mut s1, &g, &b, 3, kind, &mut t, ["phase1", "phase2", "phase3"]);
+            let mut tiled_reg = x0.clone();
+            let mut s2 = Mat::zeros(47, 8);
+            update_tiled_reg(&pool, &mut tiled_reg, &mut s2, &g, &b, 3, kind, Shrink::NONE, &mut t, ["phase1", "phase2", "phase3"]);
+            assert_eq!(tiled, tiled_reg, "tiled {kind:?}");
+        }
+    }
+
+    #[test]
+    fn reg_naive_matches_reference_all_kinds() {
+        let pool = ThreadPool::new(4);
+        let shrink = Shrink { l1: 0.05, l2: 0.2 };
+        for kind in [UpdateKind::Plain, UpdateKind::WithDiag, UpdateKind::WithDiagAndNorm] {
+            let (mut x, g, b) = random_problem(53, 7, 13);
+            let mut x_ref = x.clone();
+            let mut t = PhaseTimers::new();
+            update_naive_reg(&pool, &mut x, &g, &b, kind, shrink, &mut t, "dmv");
+            update_reference_reg(&mut x_ref, &g, &b, kind, shrink);
+            let d = max_rel_diff(&x, &x_ref);
+            assert!(d < 5e-4, "{kind:?}: rel diff {d}");
+        }
+    }
+
+    #[test]
+    fn with_diag_matches_reference_without_shrink() {
+        // The raw-Gram solve (no shrink) is the exact coordinate-descent
+        // fixed point; reference-check it separately since the plain
+        // kinds never exercise the division.
+        let pool = ThreadPool::new(2);
+        let (mut x, g, b) = random_problem(31, 6, 17);
+        let mut x_ref = x.clone();
+        let mut t = PhaseTimers::new();
+        update_naive_reg(&pool, &mut x, &g, &b, UpdateKind::WithDiag, Shrink::NONE, &mut t, "dmv");
+        update_reference_reg(&mut x_ref, &g, &b, UpdateKind::WithDiag, Shrink::NONE);
+        let d = max_rel_diff(&x, &x_ref);
+        assert!(d < 5e-4, "rel diff {d}");
+    }
+
+    #[test]
+    fn property_reg_tiled_equals_reg_naive() {
+        PropConfig::trials(16).run("reg tiled == reg naive (fp tolerance)", |gen| {
+            let n = gen.usize_in(2, 60);
+            let k = gen.usize_in(2, 12);
+            let tile = gen.usize_in(1, k);
+            let seed = gen.usize_in(0, 100_000) as u64;
+            let kind = *gen.choose(&[UpdateKind::Plain, UpdateKind::WithDiagAndNorm]);
+            let shrink = Shrink {
+                l1: *gen.choose(&[0.0, 0.01, 0.1]),
+                l2: *gen.choose(&[0.0, 0.05, 0.5]),
+            };
+            let (x0, g, b) = random_problem(n, k, seed);
+            let pool = ThreadPool::new(*gen.choose(&[1usize, 3, 4]));
+            let mut xn = x0.clone();
+            let mut xt = x0.clone();
+            let mut scratch = Mat::zeros(n, k);
+            let mut t = PhaseTimers::new();
+            update_naive_reg(&pool, &mut xn, &g, &b, kind, shrink, &mut t, "dmv");
+            update_tiled_reg(&pool, &mut xt, &mut scratch, &g, &b, tile, kind, shrink, &mut t, ["phase1", "phase2", "phase3"]);
+            let d = max_rel_diff(&xn, &xt);
+            assert!(d < 1e-3, "n={n} k={k} tile={tile} {kind:?} {shrink:?}: diff {d}");
+        });
+    }
+
+    #[test]
+    fn l1_shrink_sparsifies() {
+        // A strong L1 should pin (many) more entries to the EPS floor
+        // than the unregularized update does.
+        let pool = ThreadPool::new(2);
+        let (x0, g, b) = random_problem(64, 8, 19);
+        let mut t = PhaseTimers::new();
+        let mut free = x0.clone();
+        update_naive(&pool, &mut free, &g, &b, UpdateKind::Plain, &mut t, "dmv");
+        let mut shrunk = x0.clone();
+        update_naive_reg(
+            &pool,
+            &mut shrunk,
+            &g,
+            &b,
+            UpdateKind::Plain,
+            Shrink { l1: 1.0, l2: 0.0 },
+            &mut t,
+            "dmv",
+        );
+        let at_floor = |m: &Mat| m.data().iter().filter(|&&v| v <= EPS).count();
+        assert!(
+            at_floor(&shrunk) > at_floor(&free),
+            "l1=1.0 floored {} entries vs {} unregularized",
+            at_floor(&shrunk),
+            at_floor(&free)
+        );
     }
 }

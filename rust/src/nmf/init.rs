@@ -3,8 +3,21 @@
 //! All engines in a comparison share the same seeded random init — the
 //! paper: “For each dataset, the same randomly initialized non-negative
 //! matrices were used for all CPU and GPU implementations.”
+//!
+//! Beyond the historical seeded-random init, [`Factors::init`] offers
+//! **NNDSVD** and **NNDSVDa** (Boutsidis & Gallopoulos 2008; sklearn's
+//! `init="nndsvd"/"nndsvda"`): a rank-k truncated SVD of `A` whose
+//! positive/negative sections seed the factors, giving a deterministic,
+//! data-aware starting point that typically converges in fewer
+//! iterations. The SVD here is a from-scratch randomized subspace
+//! iteration (seeded Gaussian sketch, two power iterations, small-Gram
+//! Jacobi eigensolve) run **entirely serially in f64** — like
+//! [`normalize_w_columns`], init-time math is deliberately off the
+//! thread pool so the result is bit-identical across thread counts.
 
+use crate::data::{DataMatrix, Dataset};
 use crate::linalg::{vector, Mat};
+use crate::nmf::spec::Init;
 use crate::util::rng::Pcg32;
 
 /// The factor pair. `h` is the transposed layout (D×K); see `nmf` module
@@ -42,6 +55,19 @@ impl Factors {
         Ok(Factors { w, h })
     }
 
+    /// Initialize per `init` against the dataset. `Init::Random` is
+    /// byte-identical to [`Factors::random`]; the NNDSVD variants read
+    /// `A` (deterministically, serially) to compute the seeding SVD.
+    /// All variants leave W columns unit-L2-normalized — the invariant
+    /// the HALS engines' `Plain` update kind relies on.
+    pub fn init(ds: &Dataset, k: usize, seed: u64, init: Init) -> Factors {
+        match init {
+            Init::Random => Factors::random(ds.v(), ds.d(), k, seed),
+            Init::Nndsvd => nndsvd(ds, k, seed, false),
+            Init::Nndsvda => nndsvd(ds, k, seed, true),
+        }
+    }
+
     pub fn v(&self) -> usize {
         self.w.rows()
     }
@@ -73,6 +99,330 @@ pub fn normalize_w_columns(w: &mut Mat) {
         }
     }
     let _ = vector::dot; // module link
+}
+
+// ---------------------------------------------------------------------------
+// NNDSVD: nonnegative double SVD init (serial, deterministic).
+// ---------------------------------------------------------------------------
+
+/// Sketch oversampling of the randomized range finder. k+4 columns make
+/// the leading k singular triplets accurate to working precision after
+/// two power iterations on the low-effective-rank matrices NMF targets.
+const NNDSVD_OVERSAMPLE: usize = 4;
+
+/// `y = M·x` for either storage, serial f64 accumulation.
+fn mat_vec_f64(m: &DataMatrix, x: &[f64]) -> Vec<f64> {
+    match m {
+        DataMatrix::Sparse(a) => {
+            let mut y = vec![0.0f64; a.rows()];
+            for (i, yi) in y.iter_mut().enumerate() {
+                let (cols, vals) = a.row(i);
+                let mut acc = 0.0f64;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    acc += v as f64 * x[c as usize];
+                }
+                *yi = acc;
+            }
+            y
+        }
+        DataMatrix::Dense(a) => {
+            let mut y = vec![0.0f64; a.rows()];
+            for (i, yi) in y.iter_mut().enumerate() {
+                let row = a.row(i);
+                let mut acc = 0.0f64;
+                for (j, &v) in row.iter().enumerate() {
+                    acc += v as f64 * x[j];
+                }
+                *yi = acc;
+            }
+            y
+        }
+    }
+}
+
+/// Modified Gram–Schmidt over `cols` in place. Columns that collapse
+/// below working precision are zeroed (rank deficiency is handled by
+/// the caller's degenerate-component fill).
+fn orthonormalize(cols: &mut [Vec<f64>]) {
+    for j in 0..cols.len() {
+        for i in 0..j {
+            let proj: f64 = cols[i].iter().zip(&cols[j]).map(|(&a, &b)| a * b).sum();
+            let (head, tail) = cols.split_at_mut(j);
+            for (a, b) in tail[0].iter_mut().zip(&head[i]) {
+                *a -= proj * b;
+            }
+        }
+        let norm: f64 = cols[j].iter().map(|&x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            let inv = 1.0 / norm;
+            for x in cols[j].iter_mut() {
+                *x *= inv;
+            }
+        } else {
+            for x in cols[j].iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a small symmetric matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns), unsorted.
+fn jacobi_eigh(mut a: Vec<Vec<f64>>) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = a.len();
+    let mut vecs = vec![vec![0.0f64; n]; n];
+    for (i, row) in vecs.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    let scale: f64 = a
+        .iter()
+        .map(|row| row.iter().map(|&x| x * x).sum::<f64>())
+        .sum::<f64>()
+        .sqrt()
+        .max(1e-300);
+    for _sweep in 0..100 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p][q] * a[p][q];
+            }
+        }
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p][q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..n {
+                    let (aip, aiq) = (a[i][p], a[i][q]);
+                    a[i][p] = c * aip - s * aiq;
+                    a[i][q] = s * aip + c * aiq;
+                }
+                for i in 0..n {
+                    let (api, aqi) = (a[p][i], a[q][i]);
+                    a[p][i] = c * api - s * aqi;
+                    a[q][i] = s * api + c * aqi;
+                }
+                for row in vecs.iter_mut() {
+                    let (vip, viq) = (row[p], row[q]);
+                    row[p] = c * vip - s * viq;
+                    row[q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let vals: Vec<f64> = (0..n).map(|i| a[i][i]).collect();
+    (vals, vecs)
+}
+
+/// Leading-`r` singular triplets of `A` via seeded randomized subspace
+/// iteration: sketch, two power passes (each re-orthonormalized), then
+/// an exact eigensolve of the projected Gram. Returns
+/// `(sigma, u-columns (len V), v-columns (len D))`, descending.
+fn truncated_svd(ds: &Dataset, r: usize, seed: u64) -> (Vec<f64>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let (v, d) = (ds.v(), ds.d());
+    let p = (r + NNDSVD_OVERSAMPLE).min(v.min(d));
+    // Stream 78: distinct from the random-init stream (77), so an
+    // NNDSVD run never correlates with a random run at the same seed.
+    let mut rng = Pcg32::new(seed, 78);
+    let mut omega: Vec<Vec<f64>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        omega.push((0..d).map(|_| rng.next_gaussian()).collect());
+    }
+    let mut y: Vec<Vec<f64>> = omega.iter().map(|w| mat_vec_f64(&ds.a, w)).collect();
+    orthonormalize(&mut y);
+    for _ in 0..2 {
+        let mut z: Vec<Vec<f64>> = y.iter().map(|q| mat_vec_f64(&ds.at, q)).collect();
+        orthonormalize(&mut z);
+        y = z.iter().map(|q| mat_vec_f64(&ds.a, q)).collect();
+        orthonormalize(&mut y);
+    }
+    // C = QᵀA (p×D): row i is Aᵀ·qᵢ. G = C·Cᵀ is the projected Gram
+    // whose eigenpairs give the singular triplets.
+    let c: Vec<Vec<f64>> = y.iter().map(|q| mat_vec_f64(&ds.at, q)).collect();
+    let mut g = vec![vec![0.0f64; p]; p];
+    for i in 0..p {
+        for j in i..p {
+            let dot: f64 = c[i].iter().zip(&c[j]).map(|(&a, &b)| a * b).sum();
+            g[i][j] = dot;
+            g[j][i] = dot;
+        }
+    }
+    let (vals, vecs) = jacobi_eigh(g);
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| vals[b].total_cmp(&vals[a]));
+
+    let r = r.min(p);
+    let mut sigma = Vec::with_capacity(r);
+    let mut us = Vec::with_capacity(r);
+    let mut vs = Vec::with_capacity(r);
+    for &e in order.iter().take(r) {
+        let s = vals[e].max(0.0).sqrt();
+        // u = Q·g_e (length V), v = Cᵀ·g_e / σ (length D).
+        let mut u = vec![0.0f64; v];
+        for (i, q) in y.iter().enumerate() {
+            let w = vecs[i][e];
+            if w != 0.0 {
+                for (ux, &qx) in u.iter_mut().zip(q) {
+                    *ux += w * qx;
+                }
+            }
+        }
+        let mut vv = vec![0.0f64; d];
+        if s > 1e-12 {
+            let inv = 1.0 / s;
+            for (i, ci) in c.iter().enumerate() {
+                let w = vecs[i][e] * inv;
+                if w != 0.0 {
+                    for (vx, &cx) in vv.iter_mut().zip(ci) {
+                        *vx += w * cx;
+                    }
+                }
+            }
+        }
+        sigma.push(s);
+        us.push(u);
+        vs.push(vv);
+    }
+    (sigma, us, vs)
+}
+
+fn norm_f64(x: &[f64]) -> f64 {
+    x.iter().map(|&a| a * a).sum::<f64>().sqrt()
+}
+
+/// Mean entry of `A` — the NNDSVDa fill value (and the degenerate-
+/// component fallback).
+fn data_mean(ds: &Dataset) -> f64 {
+    let total: f64 = match &ds.a {
+        DataMatrix::Sparse(a) => {
+            let mut acc = 0.0f64;
+            for i in 0..a.rows() {
+                let (_, vals) = a.row(i);
+                for &x in vals {
+                    acc += x as f64;
+                }
+            }
+            acc
+        }
+        DataMatrix::Dense(a) => a.data().iter().map(|&x| x as f64).sum(),
+    };
+    let cells = (ds.v() * ds.d()).max(1) as f64;
+    total / cells
+}
+
+/// NNDSVD(a) proper: positive/negative section split of each singular
+/// triplet, the larger section (by its rank-1 mass) seeding the
+/// component. Deterministic, serial, non-negative by construction.
+fn nndsvd(ds: &Dataset, k: usize, seed: u64, average_fill: bool) -> Factors {
+    let (v, d) = (ds.v(), ds.d());
+    assert!(k >= 1, "nndsvd needs k >= 1");
+    let (sigma, us, vs) = truncated_svd(ds, k, seed);
+    let avg = data_mean(ds).max(1e-6);
+    let mut w = Mat::zeros(v, k);
+    let mut h = Mat::zeros(d, k);
+
+    let mut set_component = |t: usize, wcol: &[f64], hcol: &[f64], scale: f64| {
+        let s = scale.sqrt();
+        for (i, &x) in wcol.iter().enumerate() {
+            *w.at_mut(i, t) = (s * x) as f32;
+        }
+        for (i, &x) in hcol.iter().enumerate() {
+            *h.at_mut(i, t) = (s * x) as f32;
+        }
+    };
+
+    for t in 0..k {
+        if t >= sigma.len() || sigma[t] <= 1e-12 {
+            // Rank-deficient tail (or k beyond min(V,D)): a uniform
+            // positive component keeps every engine well-defined.
+            let wfill = vec![1.0; v];
+            let hfill = vec![avg; d];
+            set_component(t, &wfill, &hfill, 1.0);
+            continue;
+        }
+        let (u, vv, s) = (&us[t], &vs[t], sigma[t]);
+        if t == 0 {
+            // The leading pair is non-negative up to a global sign
+            // (Perron–Frobenius for the non-negative A): orient it
+            // positive and clamp rounding noise.
+            let flip = if u.iter().sum::<f64>() < 0.0 { -1.0 } else { 1.0 };
+            let up: Vec<f64> = u.iter().map(|&x| (flip * x).max(0.0)).collect();
+            let vp: Vec<f64> = vv.iter().map(|&x| (flip * x).max(0.0)).collect();
+            set_component(t, &up, &vp, s);
+            continue;
+        }
+        let up: Vec<f64> = u.iter().map(|&x| x.max(0.0)).collect();
+        let un: Vec<f64> = u.iter().map(|&x| (-x).max(0.0)).collect();
+        let vp: Vec<f64> = vv.iter().map(|&x| x.max(0.0)).collect();
+        let vn: Vec<f64> = vv.iter().map(|&x| (-x).max(0.0)).collect();
+        let (nup, nun, nvp, nvn) = (norm_f64(&up), norm_f64(&un), norm_f64(&vp), norm_f64(&vn));
+        let (mp, mn) = (nup * nvp, nun * nvn);
+        let (usec, vsec, unorm, vnorm, m) =
+            if mp >= mn { (&up, &vp, nup, nvp, mp) } else { (&un, &vn, nun, nvn, mn) };
+        if m <= 1e-24 {
+            let wfill = vec![1.0; v];
+            let hfill = vec![avg; d];
+            set_component(t, &wfill, &hfill, 1.0);
+            continue;
+        }
+        let wcol: Vec<f64> = usec.iter().map(|&x| x / unorm).collect();
+        let hcol: Vec<f64> = vsec.iter().map(|&x| x / vnorm).collect();
+        set_component(t, &wcol, &hcol, s * m);
+    }
+
+    if average_fill {
+        // NNDSVDa: zeros become the data mean — multiplicative (MU)
+        // updates cannot revive exact zeros, and dense problems start
+        // better without the hard sparsity of plain NNDSVD.
+        let favg = avg as f32;
+        for x in w.data_mut().iter_mut() {
+            if *x < 1e-12 {
+                *x = favg;
+            }
+        }
+        for x in h.data_mut().iter_mut() {
+            if *x < 1e-12 {
+                *x = favg;
+            }
+        }
+    }
+
+    // Restore the unit-column-W invariant, moving the scale into H so
+    // the product W·Hᵀ is preserved.
+    let mut norms = vec![0.0f64; k];
+    for i in 0..v {
+        for (j, &x) in w.row(i).iter().enumerate() {
+            norms[j] += x as f64 * x as f64;
+        }
+    }
+    let scales: Vec<f64> = norms.iter().map(|&n| n.sqrt()).collect();
+    for i in 0..v {
+        for (j, x) in w.row_mut(i).iter_mut().enumerate() {
+            if scales[j] > 1e-30 {
+                *x = (*x as f64 / scales[j]) as f32;
+            }
+        }
+    }
+    for i in 0..d {
+        for (j, x) in h.row_mut(i).iter_mut().enumerate() {
+            if scales[j] > 1e-30 {
+                *x = (*x as f64 * scales[j]) as f32;
+            }
+        }
+    }
+    Factors { w, h }
 }
 
 #[cfg(test)]
@@ -115,5 +465,73 @@ mod tests {
         assert_eq!(a.h, b.h);
         let c = Factors::random(10, 10, 3, 6);
         assert_ne!(a.w, c.w);
+    }
+
+    #[test]
+    fn init_random_matches_historical_random() {
+        let ds = crate::data::load_dataset("tiny", 3).unwrap();
+        let a = Factors::init(&ds, 4, 7, Init::Random);
+        let b = Factors::random(ds.v(), ds.d(), 4, 7);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.h, b.h);
+    }
+
+    #[test]
+    fn nndsvd_nonnegative_and_reproducible() {
+        for name in ["tiny", "tiny-sparse"] {
+            let ds = crate::data::load_dataset(name, 3).unwrap();
+            for init in [Init::Nndsvd, Init::Nndsvda] {
+                let a = Factors::init(&ds, 4, 7, init);
+                assert!(
+                    a.w.data().iter().all(|&x| x.is_finite() && x >= 0.0),
+                    "{name} {init:?} W has a negative/non-finite entry"
+                );
+                assert!(
+                    a.h.data().iter().all(|&x| x.is_finite() && x >= 0.0),
+                    "{name} {init:?} H has a negative/non-finite entry"
+                );
+                // Serial f64 math ⇒ thread count cannot matter, but the
+                // contract is bitwise reproducibility of repeated calls.
+                let b = Factors::init(&ds, 4, 7, init);
+                assert_eq!(a.w, b.w, "{name} {init:?} W not reproducible");
+                assert_eq!(a.h, b.h, "{name} {init:?} H not reproducible");
+            }
+        }
+    }
+
+    #[test]
+    fn nndsvd_w_columns_unit_norm() {
+        let ds = crate::data::load_dataset("tiny", 3).unwrap();
+        let f = Factors::init(&ds, 4, 7, Init::Nndsvda);
+        for j in 0..4 {
+            let n: f64 = (0..f.v()).map(|i| (f.w.at(i, j) as f64).powi(2)).sum();
+            assert!((n - 1.0).abs() < 1e-4, "col {j} norm² {n}");
+        }
+    }
+
+    #[test]
+    fn nndsvd_starts_closer_than_random() {
+        let pool = crate::parallel::ThreadPool::new(2);
+        let ds = crate::data::load_dataset("tiny", 3).unwrap();
+        let rand = Factors::init(&ds, 4, 7, Init::Random);
+        let svd = Factors::init(&ds, 4, 7, Init::Nndsvd);
+        let e_rand = crate::nmf::error::rel_error(&pool, &ds, &rand.w, &rand.h);
+        let e_svd = crate::nmf::error::rel_error(&pool, &ds, &svd.w, &svd.h);
+        assert!(
+            e_svd < e_rand,
+            "NNDSVD start ({e_svd}) should beat random start ({e_rand})"
+        );
+    }
+
+    #[test]
+    fn nndsvd_handles_k_beyond_rank() {
+        // k > min(V, D): past-the-rank components fall back to the
+        // uniform fill and everything stays finite + non-negative.
+        let ds = crate::data::load_dataset("tiny", 3).unwrap();
+        let k = ds.v().min(ds.d()) + 1;
+        let f = Factors::init(&ds, k, 7, Init::Nndsvd);
+        assert_eq!(f.k(), k);
+        assert!(f.w.data().iter().all(|&x| x.is_finite() && x >= 0.0));
+        assert!(f.h.data().iter().all(|&x| x.is_finite() && x >= 0.0));
     }
 }

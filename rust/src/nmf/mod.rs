@@ -11,6 +11,7 @@
 //! Gram matrices (`Q = HHᵀ`, `S = WᵀW`) are plain Grams of n×K matrices.
 //! All public APIs in this crate that say "H" take/return the D×K layout.
 
+pub mod spec;
 pub mod traits;
 pub mod init;
 pub mod products;
@@ -26,4 +27,5 @@ pub mod cost_model;
 
 pub use error::rel_error;
 pub use init::Factors;
+pub use spec::{EngineSpec, Init, Loss, Solver};
 pub use traits::{IterRecord, NmfEngine};

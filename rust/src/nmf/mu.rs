@@ -16,8 +16,9 @@ use crate::parallel::ThreadPool;
 use crate::util::PhaseTimers;
 use crate::Result;
 
-use super::halsops::SharedRows;
+use super::halsops::{SharedRows, Shrink};
 use super::products;
+use super::spec::{EngineSpec, Loss};
 use super::traits::{EngineCtx, NmfEngine};
 use super::Factors;
 
@@ -32,7 +33,24 @@ pub struct MuEngine {
 
 impl MuEngine {
     pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> Self {
-        let ctx = EngineCtx::new(ds, pool, k, seed);
+        MuEngine::with_spec(ds, pool, k, seed, EngineSpec::default())
+    }
+
+    /// Construct with an [`EngineSpec`]. This engine implements the
+    /// Frobenius MU rules; the KL rules live in `MuKlEngine` (the driver
+    /// picks between them from the spec's loss).
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        spec: EngineSpec,
+    ) -> Self {
+        assert!(
+            spec.loss != Loss::Kl,
+            "MuEngine is the Frobenius MU engine; use MuKlEngine for kl"
+        );
+        let ctx = EngineCtx::with_spec(ds, pool, k, seed, spec);
         let (r, p) = ctx.buffers();
         MuEngine { ctx, r, p }
     }
@@ -46,7 +64,16 @@ impl MuEngine {
 /// parallel (rows are independent in MU — the denominator uses the
 /// *pre-update* row, so each row buffers its denominator first).
 fn mu_update(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat) {
+    mu_update_reg(pool, x, g, num, Shrink::NONE);
+}
+
+/// [`mu_update`] with the elastic-net terms folded into the denominator
+/// (the sklearn MU regularization: `denom += l1 + l2·x`). `Shrink::NONE`
+/// is the identical (bit-for-bit) unregularized path.
+fn mu_update_reg(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat, shrink: Shrink) {
     let k = x.cols();
+    let reg = !shrink.is_none();
+    let Shrink { l1, l2 } = shrink;
     let xs = SharedRows::new(x);
     pool.parallel_for(num.rows(), None, |rows| {
         let mut denom = vec![0.0f32; k];
@@ -55,6 +82,9 @@ fn mu_update(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat) {
             // denom = xrow · G (G symmetric ⇒ rows are columns).
             for t in 0..k {
                 denom[t] = vector::dot(xrow, g.row(t)) + DELTA;
+                if reg {
+                    denom[t] += l1 + l2 * xrow[t];
+                }
             }
             let nrow = num.row(i);
             for t in 0..k {
@@ -70,11 +100,12 @@ impl NmfEngine for MuEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+        let EngineCtx { ds, pool, factors, timers, spec } = &mut self.ctx;
+        let shrink = spec.shrink();
 
         timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
         let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
-        timers.time("h_mu", || mu_update(pool, &mut factors.h, &s, &self.r));
+        timers.time("h_mu", || mu_update_reg(pool, &mut factors.h, &s, &self.r, shrink));
 
         timers.time("spmm_p", || products::a_times(pool, ds, &factors.h, &mut self.p));
         let q = timers.time("gram_q", || products::factor_gram(pool, &factors.h));
@@ -132,6 +163,40 @@ mod tests {
         }
         assert!(e.factors().w.data().iter().all(|&x| x >= 0.0));
         assert!(e.factors().h.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn regularization_shrinks_h_mass() {
+        let ds = Arc::new(load_dataset("tiny", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let spec = EngineSpec { alpha: 0.5, l1_ratio: 0.5, ..Default::default() };
+        let mut free = MuEngine::new(ds.clone(), pool.clone(), 4, 42);
+        let mut reg = MuEngine::with_spec(ds, pool, 4, 42, spec);
+        for _ in 0..10 {
+            free.step().unwrap();
+            reg.step().unwrap();
+        }
+        let mass = |m: &Mat| m.data().iter().map(|&x| x as f64).sum::<f64>();
+        assert!(
+            mass(&reg.factors().h) < mass(&free.factors().h),
+            "regularized H mass {} vs free {}",
+            mass(&reg.factors().h),
+            mass(&free.factors().h)
+        );
+    }
+
+    #[test]
+    fn default_spec_is_bit_identical_to_new() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 5).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut a = MuEngine::new(ds.clone(), pool.clone(), 3, 1);
+        let mut b = MuEngine::with_spec(ds, pool, 3, 1, EngineSpec::default());
+        for _ in 0..4 {
+            a.step().unwrap();
+            b.step().unwrap();
+        }
+        assert_eq!(a.factors().w, b.factors().w);
+        assert_eq!(a.factors().h, b.factors().h);
     }
 
     #[test]

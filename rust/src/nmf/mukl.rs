@@ -26,7 +26,8 @@ use crate::parallel::{reduce, ThreadPool};
 use crate::util::PhaseTimers;
 use crate::Result;
 
-use super::halsops::SharedRows;
+use super::halsops::{SharedRows, Shrink};
+use super::spec::{EngineSpec, Loss, Solver};
 use super::traits::{EngineCtx, NmfEngine};
 use super::Factors;
 
@@ -40,7 +41,25 @@ pub struct MuKlEngine {
 
 impl MuKlEngine {
     pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> Self {
-        let ctx = EngineCtx::new(ds, pool, k, seed);
+        let spec = EngineSpec { loss: Loss::Kl, solver: Solver::Mu, ..Default::default() };
+        MuKlEngine::with_spec(ds, pool, k, seed, spec)
+    }
+
+    /// Construct with an [`EngineSpec`] (must carry the KL loss; the
+    /// Frobenius MU rules live in `MuEngine`). The elastic-net terms
+    /// join the H half-step's denominator.
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        spec: EngineSpec,
+    ) -> Self {
+        assert!(
+            spec.loss == Loss::Kl,
+            "MuKlEngine optimizes the KL objective; use MuEngine for frobenius"
+        );
+        let ctx = EngineCtx::with_spec(ds, pool, k, seed, spec);
         let n = ctx.ds.v().max(ctx.ds.d());
         let num = Mat::zeros(n, k);
         MuKlEngine { ctx, num }
@@ -129,10 +148,18 @@ fn dot_wh(w: &Mat, h: &Mat, v: usize, d: usize) -> f32 {
 }
 
 /// One KL half-step updating `x` (n×K) given the fixed factor `other`
-/// (m×K): `x ← x ⊙ num ⊘ colsum(other)` where
+/// (m×K): `x ← x ⊙ num ⊘ (colsum(other) + l1 + l2·x)` where
 /// `num[i][k] = Σ_j ratio(i,j)·other[j][k]` over A's support (with A in
-/// the orientation that makes `i` the rows).
-fn kl_half_step(pool: &ThreadPool, a: &DataMatrix, x: &mut Mat, other: &Mat, num: &mut Mat) {
+/// the orientation that makes `i` the rows). `Shrink::NONE` is the
+/// identical (bit-for-bit) unregularized path.
+fn kl_half_step(
+    pool: &ThreadPool,
+    a: &DataMatrix,
+    x: &mut Mat,
+    other: &Mat,
+    num: &mut Mat,
+    shrink: Shrink,
+) {
     let k = x.cols();
     let n_rows = x.rows();
     // Column sums of the fixed factor (denominator).
@@ -202,6 +229,8 @@ fn kl_half_step(pool: &ThreadPool, a: &DataMatrix, x: &mut Mat, other: &Mat, num
     }
 
     // x ← x ⊙ num ⊘ denom
+    let reg = !shrink.is_none();
+    let Shrink { l1, l2 } = shrink;
     let xs = SharedRows::new(x);
     let numref = &*num;
     pool.parallel_for(n_rows, None, |rows| {
@@ -209,7 +238,12 @@ fn kl_half_step(pool: &ThreadPool, a: &DataMatrix, x: &mut Mat, other: &Mat, num
             let xrow = unsafe { xs.row_mut(i) };
             let nrow = numref.row(i);
             for j in 0..k {
-                xrow[j] *= nrow[j] / (denom[j] as f32 + DELTA);
+                let d = if reg {
+                    denom[j] as f32 + DELTA + l1 + l2 * xrow[j]
+                } else {
+                    denom[j] as f32 + DELTA
+                };
+                xrow[j] *= nrow[j] / d;
             }
         }
     });
@@ -230,14 +264,15 @@ impl NmfEngine for MuKlEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+        let EngineCtx { ds, pool, factors, timers, spec } = &mut self.ctx;
+        let shrink = spec.shrink();
         // H half-step: A is consumed transposed (rows = documents).
         timers.time("h_mukl", || {
-            kl_half_step(pool, &ds.at, &mut factors.h, &factors.w, &mut self.num)
+            kl_half_step(pool, &ds.at, &mut factors.h, &factors.w, &mut self.num, shrink)
         });
-        // W half-step.
+        // W half-step (never regularized — see the spec module docs).
         timers.time("w_mukl", || {
-            kl_half_step(pool, &ds.a, &mut factors.w, &factors.h, &mut self.num)
+            kl_half_step(pool, &ds.a, &mut factors.w, &factors.h, &mut self.num, Shrink::NONE)
         });
         Ok(())
     }
@@ -291,6 +326,34 @@ mod tests {
         }
         assert!(e.factors().w.data().iter().all(|&x| x >= 0.0));
         assert!(e.factors().h.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn regularization_shrinks_h_mass() {
+        let ds = Arc::new(load_dataset("tiny-sparse", 3).unwrap());
+        let pool = Arc::new(ThreadPool::new(2));
+        let spec = EngineSpec {
+            loss: Loss::Kl,
+            solver: Solver::Mu,
+            alpha: 0.5,
+            l1_ratio: 0.5,
+            ..Default::default()
+        };
+        let mut free = MuKlEngine::new(ds.clone(), pool.clone(), 4, 42);
+        let mut reg = MuKlEngine::with_spec(ds, pool, 4, 42, spec);
+        for _ in 0..10 {
+            free.step().unwrap();
+            reg.step().unwrap();
+        }
+        let mass = |m: &Mat| m.data().iter().map(|&x| x as f64).sum::<f64>();
+        assert!(
+            mass(&reg.factors().h) < mass(&free.factors().h),
+            "regularized H mass {} vs free {}",
+            mass(&reg.factors().h),
+            mass(&free.factors().h)
+        );
+        // The KL objective still improves under the penalty.
+        assert!(reg.kl_divergence().is_finite());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::linalg::Mat;
 use crate::parallel::ThreadPool;
 use crate::Elem;
 
-use super::halsops::SharedRows;
+use super::halsops::{SharedRows, Shrink};
 
 /// Ridge added to G's diagonal for numerical safety.
 const RIDGE: f64 = 1e-10;
@@ -32,20 +32,36 @@ const MAX_EXCHANGES: usize = 200;
 /// Solve all rows of `X` (n×K): `min ‖·‖, x ≥ 0` with shared Gram `G` and
 /// per-row rhs from `B`. `X` is overwritten with the solutions.
 pub fn nnls_bpp_rows(pool: &ThreadPool, g: &Mat, b: &Mat, x: &mut Mat) {
+    nnls_bpp_rows_reg(pool, g, b, x, Shrink::NONE);
+}
+
+/// [`nnls_bpp_rows`] with the elastic-net penalty: the exact KKT system
+/// of `min_{x≥0} ½‖F·x − a‖² + l1·Σx + ½·l2·‖x‖²` is the plain NNLS
+/// system with `G + l2·I` and `b − l1` — L2 joins the (shared) Gram
+/// diagonal once, L1 shifts every rhs read. `Shrink::NONE` is the
+/// identical unregularized path (adding 0.0 is exact in IEEE, and the
+/// shared `g64` build skips the add entirely).
+pub fn nnls_bpp_rows_reg(pool: &ThreadPool, g: &Mat, b: &Mat, x: &mut Mat, shrink: Shrink) {
     let k = g.rows();
     assert_eq!(g.cols(), k);
     assert_eq!(b.cols(), k);
     assert_eq!((x.rows(), x.cols()), (b.rows(), k));
 
-    // f64 copy of G once (all solves read it).
-    let g64: Vec<f64> = g.data().iter().map(|&v| v as f64).collect();
+    // f64 copy of G once (all solves read it), ridge-regularized.
+    let mut g64: Vec<f64> = g.data().iter().map(|&v| v as f64).collect();
+    if shrink.l2 != 0.0 {
+        for j in 0..k {
+            g64[j * k + j] += shrink.l2 as f64;
+        }
+    }
+    let l1 = shrink.l1 as f64;
 
     let xs = SharedRows::new(x);
     pool.parallel_for(b.rows(), Some(8), |rows| {
         let mut solver = RowSolver::new(k);
         for i in rows {
             let xrow = unsafe { xs.row_mut(i) };
-            solver.solve(&g64, b.row(i), xrow);
+            solver.solve(&g64, b.row(i), l1, xrow);
         }
     });
 }
@@ -75,8 +91,10 @@ impl RowSolver {
         }
     }
 
-    /// BPP for a single row; writes the non-negative solution into `out`.
-    fn solve(&mut self, g: &[f64], b: &[Elem], out: &mut [Elem]) {
+    /// BPP for a single row; writes the non-negative solution into
+    /// `out`. `l1` shifts every read of `b` (elastic-net L1 term; 0.0
+    /// for plain NNLS — subtracting 0.0 is bit-exact).
+    fn solve(&mut self, g: &[f64], b: &[Elem], l1: f64, out: &mut [Elem]) {
         let k = self.k;
         // Start all-passive (unconstrained LS), the Kim–Park default.
         self.passive.iter_mut().for_each(|p| *p = true);
@@ -97,7 +115,7 @@ impl RowSolver {
                         self.chol[pi * p + pj] = g[gi * k + gj];
                     }
                     self.chol[pi * p + pi] += RIDGE;
-                    self.rhs[pi] = b[gi] as f64;
+                    self.rhs[pi] = b[gi] as f64 - l1;
                 }
                 if !cholesky_solve_in_place(&mut self.chol, &mut self.rhs, p) {
                     // Singular passive block: clamp what we have and stop.
@@ -112,7 +130,7 @@ impl RowSolver {
                 self.y[j] = if self.passive[j] {
                     0.0
                 } else {
-                    let mut s = -(b[j] as f64);
+                    let mut s = -(b[j] as f64 - l1);
                     for &gi in &self.idx {
                         s += g[j * k + gi] * self.x[gi];
                     }
@@ -326,6 +344,51 @@ mod tests {
         nnls_bpp_rows(&pool, &g, &b, &mut x);
         assert_eq!(x.at(0, 0), 0.0);
         assert_eq!(x.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn elastic_net_equals_shifted_plain_system() {
+        // The reg path must solve exactly the plain system with
+        // `G + l2·I` and `b − l1` — assert bitwise agreement against
+        // explicitly shifted inputs.
+        let k = 5;
+        let g = random_spd(k, 21);
+        let mut rng = Pcg32::seeded(22);
+        let b = Mat::random(12, k, &mut rng, -1.0, 3.0);
+        let shrink = Shrink { l1: 0.3, l2: 0.7 };
+        let pool = ThreadPool::new(2);
+
+        let mut x_reg = Mat::zeros(12, k);
+        nnls_bpp_rows_reg(&pool, &g, &b, &mut x_reg, shrink);
+
+        let mut g_shift = g.clone();
+        for j in 0..k {
+            *g_shift.at_mut(j, j) = (g.at(j, j) as f64 + shrink.l2 as f64) as Elem;
+        }
+        let mut b_shift = b.clone();
+        for v in b_shift.data_mut().iter_mut() {
+            *v = (*v as f64 - shrink.l1 as f64) as Elem;
+        }
+        let mut x_plain = Mat::zeros(12, k);
+        nnls_bpp_rows(&pool, &g_shift, &b_shift, &mut x_plain);
+
+        // Shifts are applied in f64 inside the reg path, so the f32
+        // pre-shift can differ by rounding — allow fp slack only.
+        let d = x_reg.max_abs_diff(&x_plain);
+        assert!(d < 1e-5, "reg vs shifted-plain diff {d}");
+        assert!(x_reg.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn l1_zeroes_weak_coordinates() {
+        let g = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Mat::from_vec(1, 2, vec![0.5, 3.0]);
+        let pool = ThreadPool::new(1);
+        let mut x = Mat::zeros(1, 2);
+        nnls_bpp_rows_reg(&pool, &g, &b, &mut x, Shrink { l1: 1.0, l2: 0.0 });
+        // b0 − l1 < 0 ⇒ coordinate 0 inactive; b1 − l1 = 2.
+        assert_eq!(x.at(0, 0), 0.0);
+        assert!((x.at(0, 1) - 2.0).abs() < 1e-5);
     }
 
     #[test]

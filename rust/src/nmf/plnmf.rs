@@ -13,8 +13,9 @@ use crate::util::PhaseTimers;
 use crate::Result;
 
 use super::cost_model;
-use super::halsops::{update_tiled, UpdateKind};
+use super::halsops::{update_tiled, update_tiled_reg, UpdateKind};
 use super::products;
+use super::spec::{EngineSpec, Loss};
 use super::traits::{EngineCtx, NmfEngine};
 use super::Factors;
 
@@ -40,8 +41,27 @@ impl PlNmfEngine {
         tile: usize,
         cache_bytes: usize,
     ) -> Self {
+        PlNmfEngine::with_spec(ds, pool, k, seed, tile, cache_bytes, EngineSpec::default())
+    }
+
+    /// Construct with an [`EngineSpec`] (init + H-side elastic net; the
+    /// KL loss has no HALS rule and is rejected).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        tile: usize,
+        cache_bytes: usize,
+        spec: EngineSpec,
+    ) -> Self {
+        assert!(
+            spec.loss != Loss::Kl,
+            "the HALS solver is Frobenius-only; use the mu solver for kl"
+        );
         let tile = if tile == 0 { cost_model::select_tile(k, cache_bytes) } else { tile };
-        let ctx = EngineCtx::new(ds, pool, k, seed);
+        let ctx = EngineCtx::with_spec(ds, pool, k, seed, spec);
         let (r, p) = ctx.buffers();
         let scratch_w = Mat::zeros(ctx.ds.v(), k);
         let scratch_h = Mat::zeros(ctx.ds.d(), k);
@@ -63,12 +83,13 @@ impl NmfEngine for PlNmfEngine {
     }
 
     fn step(&mut self) -> Result<()> {
-        let EngineCtx { ds, pool, factors, timers } = &mut self.ctx;
+        let EngineCtx { ds, pool, factors, timers, spec } = &mut self.ctx;
+        let shrink = spec.shrink();
 
         // ---- update H: tiled, no normalization --------------------------
         timers.time("spmm_r", || products::at_times(pool, ds, &factors.w, &mut self.r));
         let s = timers.time("gram_s", || products::factor_gram(pool, &factors.w));
-        update_tiled(
+        update_tiled_reg(
             pool,
             &mut factors.h,
             &mut self.scratch_h,
@@ -76,6 +97,7 @@ impl NmfEngine for PlNmfEngine {
             &self.r,
             self.tile,
             UpdateKind::Plain,
+            shrink,
             timers,
             ["h_phase1", "h_phase2", "h_phase3"],
         );
@@ -146,6 +168,28 @@ mod tests {
                     b.rel_error
                 );
             }
+        }
+    }
+
+    #[test]
+    fn regularized_matches_regularized_fasthals() {
+        // The associativity argument holds with the shrink applied: the
+        // tiled and naive regularized engines share a trajectory.
+        let spec = EngineSpec { alpha: 0.2, l1_ratio: 0.5, ..Default::default() };
+        let ds = Arc::new(load_dataset("tiny", 5).unwrap());
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut hals = FastHalsEngine::with_spec(ds.clone(), pool.clone(), 5, 99, spec);
+        let mut pl = PlNmfEngine::with_spec(ds, pool, 5, 99, 2, 35 << 20, spec);
+        let th = hals.run(8, 1, 0.0).unwrap();
+        let tp = pl.run(8, 1, 0.0).unwrap();
+        for (a, b) in th.iter().zip(&tp) {
+            assert!(
+                (a.rel_error - b.rel_error).abs() < 2e-3,
+                "iter {}: hals {} vs plnmf {}",
+                a.iter,
+                a.rel_error,
+                b.rel_error
+            );
         }
     }
 

@@ -1,0 +1,317 @@
+//! [`EngineSpec`] — loss, solver, regularization, and initialization as
+//! first-class, serializable model configuration.
+//!
+//! Every layer that used to hard-wire "Frobenius HALS, random init, no
+//! regularization" now threads one plain-old-data value instead: engine
+//! constructors take it, `model_io` persists it next to the factors, the
+//! manifest can override it per model, the daemon echoes it in `stats`,
+//! and the CLI/config surface exposes it as `--loss` / `--alpha` /
+//! `--l1_ratio` / `--init` (the sklearn-parity surface: `solver`,
+//! `beta_loss`, `alpha_H`, `l1_ratio`, `init`).
+//!
+//! Compatibility contract: [`EngineSpec::default`] IS today's behavior.
+//! A default spec must leave every numeric path bit-for-bit identical to
+//! the pre-spec code, every JSON writer byte-compatible (the spec object
+//! is only written when non-default), and every reader accepting of
+//! spec-less inputs. Present-but-bogus spec fields are loud errors —
+//! the same strictness discipline as the rest of the wire/model surface
+//! (absent ⇒ default, present ⇒ validated, unknown keys rejected).
+//!
+//! Regularization semantics: `alpha ≥ 0` and `l1_ratio ∈ [0, 1]` define
+//! an elastic-net penalty on the **H factor** (document mixtures):
+//!
+//! ```text
+//! min ½‖A − WH‖² (or KL(A‖WH)) + α·ρ·‖H‖₁ + ½·α·(1−ρ)·‖H‖²_F
+//! ```
+//!
+//! W stays unit-column-normalized in the HALS engines (its Gram keeps
+//! the unit diagonal the `Plain` update kind relies on), so this matches
+//! sklearn's `alpha_W = 0, alpha_H = α` corner — the classic sparse-H
+//! topic-modeling setup. `α = 0` disables both terms exactly.
+
+use anyhow::{anyhow, bail};
+
+use crate::util::json::Json;
+use crate::{Elem, Result};
+
+/// Reconstruction loss the factors minimize (and serving projects
+/// under).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Loss {
+    /// ½‖A − WH‖²_F — squared Euclidean (sklearn `beta_loss="frobenius"`).
+    #[default]
+    Frobenius,
+    /// Generalized Kullback–Leibler divergence D(A‖WH) (sklearn
+    /// `beta_loss="kullback-leibler"`).
+    Kl,
+}
+
+impl Loss {
+    pub fn from_str(s: &str) -> Result<Loss> {
+        match s.to_ascii_lowercase().as_str() {
+            "frobenius" | "fro" | "l2" => Ok(Loss::Frobenius),
+            "kl" | "kullback-leibler" | "kullback_leibler" => Ok(Loss::Kl),
+            other => bail!("unknown loss '{other}' (expected frobenius|kl)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Frobenius => "frobenius",
+            Loss::Kl => "kl",
+        }
+    }
+}
+
+/// Update rule family of the training engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Solver {
+    /// Hierarchical ALS coordinate descent (sklearn `solver="cd"`) —
+    /// the FAST-HALS / tiled PL-NMF engines.
+    #[default]
+    Hals,
+    /// Multiplicative updates (sklearn `solver="mu"`) — the only solver
+    /// defined for the KL loss.
+    Mu,
+    /// ANLS with block principal pivoting (exact NNLS subproblems).
+    Bpp,
+}
+
+impl Solver {
+    pub fn from_str(s: &str) -> Result<Solver> {
+        match s.to_ascii_lowercase().as_str() {
+            "hals" | "cd" => Ok(Solver::Hals),
+            "mu" => Ok(Solver::Mu),
+            "bpp" | "anls" | "anls-bpp" => Ok(Solver::Bpp),
+            other => bail!("unknown solver '{other}' (expected hals|mu|bpp)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Solver::Hals => "hals",
+            Solver::Mu => "mu",
+            Solver::Bpp => "bpp",
+        }
+    }
+}
+
+/// Factor initialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Init {
+    /// Seeded uniform random with unit-normalized W columns — the
+    /// historical [`crate::nmf::Factors::random`] path.
+    #[default]
+    Random,
+    /// Nonnegative double SVD (Boutsidis & Gallopoulos): zeros stay
+    /// zero — good for sparse factors.
+    Nndsvd,
+    /// NNDSVD with zeros filled by the data mean (sklearn `nndsvda`) —
+    /// good for dense factors and mandatory-positive MU updates.
+    Nndsvda,
+}
+
+impl Init {
+    pub fn from_str(s: &str) -> Result<Init> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(Init::Random),
+            "nndsvd" => Ok(Init::Nndsvd),
+            "nndsvda" => Ok(Init::Nndsvda),
+            other => bail!("unknown init '{other}' (expected random|nndsvd|nndsvda)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Init::Random => "random",
+            Init::Nndsvd => "nndsvd",
+            Init::Nndsvda => "nndsvda",
+        }
+    }
+}
+
+/// The engine specification: one POD value describing what a model's
+/// factors optimize and how they were initialized. `Default` is exactly
+/// the pre-spec pipeline (Frobenius HALS, no regularization, random
+/// init).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EngineSpec {
+    pub loss: Loss,
+    pub solver: Solver,
+    /// Regularization strength on H (0 = none).
+    pub alpha: f64,
+    /// L1 share of the penalty: 0 = pure L2 (ridge), 1 = pure L1
+    /// (lasso/sparsity).
+    pub l1_ratio: f64,
+    pub init: Init,
+}
+
+impl EngineSpec {
+    /// The L1 shrinkage coefficient `α·ρ` in element precision.
+    pub fn l1(&self) -> Elem {
+        (self.alpha * self.l1_ratio) as Elem
+    }
+
+    /// The L2 (ridge) coefficient `α·(1−ρ)` in element precision.
+    pub fn l2(&self) -> Elem {
+        (self.alpha * (1.0 - self.l1_ratio)) as Elem
+    }
+
+    /// The kernel-level shrink pair. `Shrink::NONE` (the bit-exact
+    /// unregularized path) if and only if `alpha == 0`.
+    pub fn shrink(&self) -> crate::nmf::halsops::Shrink {
+        crate::nmf::halsops::Shrink { l1: self.l1(), l2: self.l2() }
+    }
+
+    pub fn is_default(&self) -> bool {
+        *self == EngineSpec::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.alpha.is_finite() || self.alpha < 0.0 {
+            bail!("spec: alpha must be finite and >= 0, got {}", self.alpha);
+        }
+        if !self.l1_ratio.is_finite() || !(0.0..=1.0).contains(&self.l1_ratio) {
+            bail!("spec: l1_ratio must be in [0, 1], got {}", self.l1_ratio);
+        }
+        if self.loss == Loss::Kl && self.solver != Solver::Mu {
+            bail!(
+                "spec: the kl loss is only defined for the mu solver (got solver '{}')",
+                self.solver.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize as a JSON object (all five fields, explicit).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("loss", Json::str(self.loss.name())),
+            ("solver", Json::str(self.solver.name())),
+            ("alpha", Json::num(self.alpha)),
+            ("l1_ratio", Json::num(self.l1_ratio)),
+            ("init", Json::str(self.init.name())),
+        ])
+    }
+
+    /// Parse a spec object. `Null` (absent) is the default spec; any
+    /// present field is strictly validated; unknown fields are rejected
+    /// — a typoed `"l1ratio"` must never silently mean "no
+    /// regularization".
+    pub fn from_json(j: &Json) -> Result<EngineSpec> {
+        if j.is_null() {
+            return Ok(EngineSpec::default());
+        }
+        let obj = j.as_obj().ok_or_else(|| anyhow!("spec must be a JSON object, got {j}"))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "loss" | "solver" | "alpha" | "l1_ratio" | "init") {
+                bail!("spec has unknown field \"{key}\"");
+            }
+        }
+        let mut spec = EngineSpec::default();
+        if let Some(v) = obj.get("loss") {
+            let s = v.as_str().ok_or_else(|| anyhow!("spec \"loss\" must be a string"))?;
+            spec.loss = Loss::from_str(s)?;
+        }
+        if let Some(v) = obj.get("solver") {
+            let s = v.as_str().ok_or_else(|| anyhow!("spec \"solver\" must be a string"))?;
+            spec.solver = Solver::from_str(s)?;
+        }
+        if let Some(v) = obj.get("alpha") {
+            spec.alpha =
+                v.as_f64().ok_or_else(|| anyhow!("spec \"alpha\" must be a number"))?;
+        }
+        if let Some(v) = obj.get("l1_ratio") {
+            spec.l1_ratio =
+                v.as_f64().ok_or_else(|| anyhow!("spec \"l1_ratio\" must be a number"))?;
+        }
+        if let Some(v) = obj.get("init") {
+            let s = v.as_str().ok_or_else(|| anyhow!("spec \"init\" must be a string"))?;
+            spec.init = Init::from_str(s)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_pre_spec_pipeline() {
+        let s = EngineSpec::default();
+        assert_eq!(s.loss, Loss::Frobenius);
+        assert_eq!(s.solver, Solver::Hals);
+        assert_eq!(s.alpha, 0.0);
+        assert_eq!(s.l1_ratio, 0.0);
+        assert_eq!(s.init, Init::Random);
+        assert!(s.is_default());
+        assert_eq!(s.l1(), 0.0);
+        assert_eq!(s.l2(), 0.0);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn l1_l2_split_follows_l1_ratio() {
+        let s = EngineSpec { alpha: 0.8, l1_ratio: 0.25, ..Default::default() };
+        assert!((s.l1() - 0.2).abs() < 1e-7);
+        assert!((s.l2() - 0.6).abs() < 1e-7);
+        let lasso = EngineSpec { alpha: 0.5, l1_ratio: 1.0, ..Default::default() };
+        assert_eq!(lasso.l2(), 0.0);
+        let ridge = EngineSpec { alpha: 0.5, l1_ratio: 0.0, ..Default::default() };
+        assert_eq!(ridge.l1(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = EngineSpec {
+            loss: Loss::Kl,
+            solver: Solver::Mu,
+            alpha: 0.1,
+            l1_ratio: 0.5,
+            init: Init::Nndsvda,
+        };
+        let re = EngineSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(re, s);
+        // Absent spec is the default spec.
+        assert_eq!(EngineSpec::from_json(&Json::Null).unwrap(), EngineSpec::default());
+        // Partial objects fill the rest with defaults.
+        let partial = Json::parse(r#"{"alpha": 0.3}"#).unwrap();
+        let p = EngineSpec::from_json(&partial).unwrap();
+        assert_eq!(p.alpha, 0.3);
+        assert_eq!(p.loss, Loss::Frobenius);
+    }
+
+    #[test]
+    fn from_json_rejects_bogus_fields() {
+        for bad in [
+            r#"{"l1ratio": 0.5}"#,                     // typo key
+            r#"{"loss": "poisson"}"#,                  // unknown loss
+            r#"{"solver": "sgd"}"#,                    // unknown solver
+            r#"{"init": "zeros"}"#,                    // unknown init
+            r#"{"alpha": "lots"}"#,                    // wrong type
+            r#"{"alpha": -1.0}"#,                      // negative
+            r#"{"l1_ratio": 1.5}"#,                    // out of range
+            r#"{"loss": "kl", "solver": "hals"}"#,     // kl needs mu
+            r#"{"loss": "kl", "solver": "bpp"}"#,      // kl needs mu
+            r#"[1,2]"#,                                // not an object
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(EngineSpec::from_json(&j).is_err(), "should reject {bad}");
+        }
+        // kl + mu is the valid KL combination.
+        let ok = Json::parse(r#"{"loss": "kl", "solver": "mu"}"#).unwrap();
+        assert_eq!(EngineSpec::from_json(&ok).unwrap().loss, Loss::Kl);
+    }
+
+    #[test]
+    fn enum_aliases_parse() {
+        assert_eq!(Loss::from_str("KULLBACK-LEIBLER").unwrap(), Loss::Kl);
+        assert_eq!(Loss::from_str("fro").unwrap(), Loss::Frobenius);
+        assert_eq!(Solver::from_str("cd").unwrap(), Solver::Hals);
+        assert_eq!(Solver::from_str("anls-bpp").unwrap(), Solver::Bpp);
+        assert_eq!(Init::from_str("NNDSVDA").unwrap(), Init::Nndsvda);
+        assert!(Loss::from_str("itakura-saito").is_err());
+    }
+}

@@ -11,6 +11,7 @@ use crate::Result;
 
 use super::error;
 use super::init::Factors;
+use super::spec::EngineSpec;
 
 /// One row of a convergence trace (Figs. 7/8 data points).
 #[derive(Debug, Clone, Copy)]
@@ -87,12 +88,26 @@ pub struct EngineCtx {
     pub pool: Arc<ThreadPool>,
     pub factors: Factors,
     pub timers: PhaseTimers,
+    /// Loss/regularization/init configuration. The default spec is the
+    /// exact pre-spec pipeline; engines apply its shrink to the **H**
+    /// update only (W keeps its unit-norm invariant).
+    pub spec: EngineSpec,
 }
 
 impl EngineCtx {
     pub fn new(ds: Arc<Dataset>, pool: Arc<ThreadPool>, k: usize, seed: u64) -> EngineCtx {
-        let factors = Factors::random(ds.v(), ds.d(), k, seed);
-        EngineCtx { ds, pool, factors, timers: PhaseTimers::new() }
+        EngineCtx::with_spec(ds, pool, k, seed, EngineSpec::default())
+    }
+
+    pub fn with_spec(
+        ds: Arc<Dataset>,
+        pool: Arc<ThreadPool>,
+        k: usize,
+        seed: u64,
+        spec: EngineSpec,
+    ) -> EngineCtx {
+        let factors = Factors::init(&ds, k, seed, spec.init);
+        EngineCtx { ds, pool, factors, timers: PhaseTimers::new(), spec }
     }
 
     /// Pre-sized product buffers: R (D×K) and P (V×K).

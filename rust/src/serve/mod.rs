@@ -69,7 +69,7 @@ pub mod worker;
 
 pub use model_io::{load_model, save_model, ModelMeta};
 pub use projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
-pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts};
+pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts, SpecOverride};
 pub use router::{Router, RouterOpts};
 pub use server::{
     mat_from_json_rows, queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE,

@@ -11,7 +11,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context};
 
 use crate::linalg::Mat;
-use crate::nmf::Factors;
+use crate::nmf::{EngineSpec, Factors};
 use crate::util::json::Json;
 use crate::{Elem, Result};
 
@@ -31,11 +31,16 @@ pub struct ModelMeta {
     pub iters: usize,
     /// Final relative objective at save time.
     pub rel_error: f64,
+    /// What the factors optimize (loss, solver, regularization, init).
+    /// Serving uses this to pick the projection path; the default spec
+    /// is not written to disk, so pre-spec files round-trip byte-for-
+    /// byte and load as the default.
+    pub spec: EngineSpec,
 }
 
 /// Serialize factors + metadata to `path` (parent dirs are created).
 pub fn save_model(path: &Path, factors: &Factors, meta: &ModelMeta) -> Result<()> {
-    let j = Json::obj(vec![
+    let mut pairs = vec![
         ("format", Json::str(MODEL_FORMAT)),
         ("version", Json::num(MODEL_VERSION as f64)),
         ("v", Json::num(factors.v() as f64)),
@@ -47,9 +52,15 @@ pub fn save_model(path: &Path, factors: &Factors, meta: &ModelMeta) -> Result<()
         ("seed", Json::str(meta.seed.to_string())),
         ("iters", Json::num(meta.iters as f64)),
         ("rel_error", Json::num(meta.rel_error)),
-        ("w", mat_to_json(&factors.w)),
-        ("h", mat_to_json(&factors.h)),
-    ]);
+    ];
+    // Only a non-default spec hits the disk: default-spec saves stay
+    // byte-identical to the pre-spec format.
+    if !meta.spec.is_default() {
+        pairs.push(("spec", meta.spec.to_json()));
+    }
+    pairs.push(("w", mat_to_json(&factors.w)));
+    pairs.push(("h", mat_to_json(&factors.h)));
+    let j = Json::obj(pairs);
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent).ok();
@@ -101,6 +112,9 @@ pub fn load_model(path: &Path) -> Result<(Factors, ModelMeta)> {
         },
         iters: j.get_usize_or("iters", 0).map_err(|e| anyhow!("model {e}"))?,
         rel_error: j.get("rel_error").as_f64().unwrap_or(f64::NAN),
+        // Absent ⇒ default (pre-spec files); present ⇒ strictly
+        // validated, unknown fields rejected.
+        spec: EngineSpec::from_json(j.get("spec")).context("model \"spec\"")?,
     };
     Ok((Factors::from_parts(w, h)?, meta))
 }
@@ -142,6 +156,7 @@ mod tests {
             seed: (1u64 << 53) + 3, // not representable as f64 — string path
             iters: 20,
             rel_error: 0.123456,
+            spec: EngineSpec::default(),
         };
         let path = tmp("roundtrip");
         save_model(&path, &f, &meta).unwrap();
@@ -149,6 +164,54 @@ mod tests {
         assert_eq!(re.w, f.w);
         assert_eq!(re.h, f.h);
         assert_eq!(remeta, meta);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn spec_roundtrips_and_default_is_not_written() {
+        use crate::nmf::spec::{Init, Loss, Solver};
+        let f = Factors::random(6, 4, 2, 1);
+        // Default spec: the file must not mention "spec" at all (byte
+        // compatibility with pre-spec writers).
+        let path = tmp("spec-default");
+        save_model(&path, &f, &ModelMeta::default()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(!body.contains("spec"), "default spec must stay off disk");
+        let (_, meta) = load_model(&path).unwrap();
+        assert!(meta.spec.is_default());
+        std::fs::remove_file(&path).ok();
+        // Non-default spec round-trips exactly.
+        let spec = EngineSpec {
+            loss: Loss::Kl,
+            solver: Solver::Mu,
+            alpha: 0.1,
+            l1_ratio: 0.5,
+            init: Init::Nndsvda,
+        };
+        let path = tmp("spec-kl");
+        save_model(&path, &f, &ModelMeta { spec, ..Default::default() }).unwrap();
+        let (_, meta) = load_model(&path).unwrap();
+        assert_eq!(meta.spec, spec);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bogus_spec_is_rejected() {
+        let path = tmp("spec-bad");
+        for spec in [
+            r#"{"loss": "poisson"}"#,
+            r#"{"l1ratio": 0.5}"#,
+            r#"{"loss": "kl", "solver": "hals"}"#,
+            r#""kl""#,
+        ] {
+            let body = format!(
+                r#"{{"format": "plnmf-model", "version": 1, "v": 1, "d": 1, "k": 1,
+                    "spec": {spec}, "w": [1], "h": [1]}}"#
+            );
+            std::fs::write(&path, &body).unwrap();
+            let err = format!("{:#}", load_model(&path).unwrap_err());
+            assert!(err.contains("spec"), "{spec}: {err}");
+        }
         std::fs::remove_file(path).ok();
     }
 

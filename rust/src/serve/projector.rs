@@ -52,8 +52,9 @@ use anyhow::bail;
 use crate::coordinator::shard::balanced_row_shards;
 use crate::linalg::{gemm, GemmOp, Mat};
 use crate::nmf::cost_model;
-use crate::nmf::halsops::{update_tiled, UpdateKind};
+use crate::nmf::halsops::{update_naive_reg, update_tiled, SharedRows, Shrink, UpdateKind};
 use crate::nmf::products;
+use crate::nmf::{EngineSpec, Loss};
 use crate::parallel::{split_even, ThreadPool};
 use crate::sparse::{spmm::spmm_range, Csr};
 use crate::util::PhaseTimers;
@@ -80,6 +81,14 @@ impl<'a> Queries<'a> {
         match self {
             Queries::Dense(m) => m.cols(),
             Queries::Sparse(a) => a.cols(),
+        }
+    }
+
+    /// Σ_v a_iv of query row `i` (f64 accumulation) — the KL mass.
+    fn row_sum(&self, i: usize) -> f64 {
+        match self {
+            Queries::Dense(m) => m.row(i).iter().map(|&x| x as f64).sum(),
+            Queries::Sparse(a) => a.row(i).1.iter().map(|&x| x as f64).sum(),
         }
     }
 
@@ -289,16 +298,31 @@ fn fingerprint_row(q: Queries<'_>, i: usize) -> u64 {
     h
 }
 
+/// Denominator guard for the multiplicative KL projection (matches the
+/// training-side `MuKlEngine`).
+const KL_DELTA: f64 = 1e-9;
+
 /// A loaded model ready to answer projection queries.
 pub struct Projector {
-    /// Column-normalized factor Ŵ (V×K).
+    /// The factor panel (V×K): column-normalized Ŵ in the default
+    /// (Frobenius, unregularized) mode; the **raw** `W` when the spec
+    /// carries regularization or the KL loss — those solves work in
+    /// original coordinates (a uniform penalty on h is non-uniform in
+    /// unit space, and the KL update has no normalization trick).
     w_unit: Mat,
-    /// Original column norms ‖w_t‖ (0 for dead topics).
+    /// Original column norms ‖w_t‖ (0 for dead topics; all 1 in raw
+    /// modes, where the panel is already in original coordinates).
     col_norm: Vec<Elem>,
-    /// 1/‖w_t‖ (0 for dead topics): maps unit-space solutions back.
+    /// 1/‖w_t‖ (0 for dead topics): maps unit-space solutions back
+    /// (identity in raw modes).
     col_scale: Vec<Elem>,
-    /// Cached Gram Ĝ = ŴᵀŴ (K×K, unit diagonal up to fp).
+    /// Cached Gram of the stored panel (K×K; unit diagonal only in the
+    /// default mode).
     gram: Mat,
+    /// Per-topic column sums Σ_v W_vt — the constant denominator of the
+    /// multiplicative KL update (empty outside KL mode).
+    colsum: Vec<Elem>,
+    spec: EngineSpec,
     pool: Arc<ThreadPool>,
     opts: ProjectorOpts,
     tile: usize,
@@ -309,36 +333,78 @@ impl Projector {
     /// serving). Computes the cached Gram once. Fails on a degenerate
     /// `W` (no topics) or invalid [`ProjectorOpts`].
     pub fn new(w: Mat, pool: Arc<ThreadPool>, opts: ProjectorOpts) -> Result<Projector> {
+        Projector::with_spec(w, pool, opts, EngineSpec::default())
+    }
+
+    /// [`Self::new`] with an [`EngineSpec`] choosing the projection
+    /// path: default spec is the historical tiled-HALS pipeline
+    /// (bit-for-bit); Frobenius with `alpha > 0` solves the elastic-net
+    /// NNLS subproblem against the raw Gram; the KL loss runs
+    /// multiplicative updates per micro-batch. The spec's solver/init
+    /// fields describe training and are ignored here.
+    pub fn with_spec(
+        w: Mat,
+        pool: Arc<ThreadPool>,
+        opts: ProjectorOpts,
+        spec: EngineSpec,
+    ) -> Result<Projector> {
         opts.validate()?;
+        spec.validate()?;
         let (v, k) = (w.rows(), w.cols());
         if k == 0 {
             bail!("Projector needs k >= 1 (got a {v}x0 factor)");
         }
         let mut w_unit = w;
 
-        // Column norms in f64 (one row-major pass), then scale in place.
-        let mut norm2 = vec![0.0f64; k];
-        for i in 0..v {
-            for (t, &x) in w_unit.row(i).iter().enumerate() {
-                norm2[t] += x as f64 * x as f64;
+        let unit_mode = spec.loss == Loss::Frobenius && spec.alpha == 0.0;
+        let (col_norm, col_scale): (Vec<Elem>, Vec<Elem>);
+        if unit_mode {
+            // Column norms in f64 (one row-major pass), then scale in
+            // place.
+            let mut norm2 = vec![0.0f64; k];
+            for i in 0..v {
+                for (t, &x) in w_unit.row(i).iter().enumerate() {
+                    norm2[t] += x as f64 * x as f64;
+                }
             }
-        }
-        let col_norm: Vec<Elem> = norm2.iter().map(|&n| n.sqrt() as Elem).collect();
-        let col_scale: Vec<Elem> =
-            col_norm.iter().map(|&n| if n > 1e-12 { 1.0 / n } else { 0.0 }).collect();
-        for i in 0..v {
-            for (x, &s) in w_unit.row_mut(i).iter_mut().zip(&col_scale) {
-                *x *= s;
+            col_norm = norm2.iter().map(|&n| n.sqrt() as Elem).collect();
+            col_scale =
+                col_norm.iter().map(|&n| if n > 1e-12 { 1.0 / n } else { 0.0 }).collect();
+            for i in 0..v {
+                for (x, &s) in w_unit.row_mut(i).iter_mut().zip(&col_scale) {
+                    *x *= s;
+                }
             }
+        } else {
+            // Raw modes keep W as-is; the rescale maps are identities so
+            // residuals/recommendations read the panel directly.
+            col_norm = vec![1.0; k];
+            col_scale = vec![1.0; k];
         }
 
         let gram = products::factor_gram(&pool, &w_unit);
+        let colsum: Vec<Elem> = if spec.loss == Loss::Kl {
+            let mut c = vec![0.0f64; k];
+            for i in 0..v {
+                for (t, &x) in w_unit.row(i).iter().enumerate() {
+                    c[t] += x as f64;
+                }
+            }
+            c.iter().map(|&x| x as Elem).collect()
+        } else {
+            Vec::new()
+        };
         let tile = if opts.tile > 0 {
             opts.tile.clamp(1, k)
         } else {
             cost_model::select_tile(k, opts.cache_bytes).clamp(1, k)
         };
-        Ok(Projector { w_unit, col_norm, col_scale, gram, pool, opts, tile })
+        Ok(Projector { w_unit, col_norm, col_scale, gram, colsum, spec, pool, opts, tile })
+    }
+
+    /// The engine spec this projector serves under.
+    pub fn spec(&self) -> EngineSpec {
+        self.spec
     }
 
     pub fn v(&self) -> usize {
@@ -460,6 +526,9 @@ impl Projector {
         stats: &mut ProjectStats,
         timers: &mut PhaseTimers,
     ) {
+        if self.spec.loss == Loss::Kl {
+            return self.solve_micro_batch_kl(q, r, h, res, warm, stats, timers);
+        }
         let (mb, k) = (r.len(), self.k());
 
         // Degenerate rows: an all-zero query has the unique solution
@@ -514,20 +583,40 @@ impl Projector {
             }
         }
 
+        let shrink = self.spec.shrink();
         let mut scratch = Mat::zeros(mb, k);
         let mut sweeps_run = 0;
         for _ in 0..self.opts.sweeps {
-            update_tiled(
-                &self.pool,
-                &mut g,
-                &mut scratch,
-                &self.gram,
-                &b,
-                self.tile,
-                UpdateKind::Plain,
-                timers,
-                ["serve_phase1", "serve_phase2", "serve_phase3"],
-            );
+            if shrink.is_none() {
+                update_tiled(
+                    &self.pool,
+                    &mut g,
+                    &mut scratch,
+                    &self.gram,
+                    &b,
+                    self.tile,
+                    UpdateKind::Plain,
+                    timers,
+                    ["serve_phase1", "serve_phase2", "serve_phase3"],
+                );
+            } else {
+                // Elastic-net projection: raw coordinates, so the exact
+                // coordinate step divides by the true Gram diagonal —
+                // the `WithDiag` serving kind (naive kernel only).
+                scratch.copy_from(&g);
+                timers.time("serve_reg_sweep", || {
+                    update_naive_reg(
+                        &self.pool,
+                        &mut g,
+                        &self.gram,
+                        &b,
+                        UpdateKind::WithDiag,
+                        shrink,
+                        timers,
+                        "serve_reg_dmv",
+                    )
+                });
+            }
             sweeps_run += 1;
             // `scratch` holds the pre-sweep values — a free convergence
             // probe for the optional early stop.
@@ -585,6 +674,220 @@ impl Projector {
                 res[i] = if a2 > 0.0 { (r2 / a2).sqrt() } else { 0.0 };
             }
         }
+    }
+
+    /// One micro-batch under the KL loss: multiplicative updates
+    /// `h_j ← h_j · (Σ_v W_vj·a_v/(W·h)_v) / (Σ_v W_vj + δ + l1 + l2·h_j)`
+    /// — the serving analogue of the training-side `MuKlEngine` H step.
+    /// The cached Gram never enters the solve (each sweep is O(nnz(a)·K)
+    /// over the query support); it is still used for the optional
+    /// Euclidean residuals, whose Gram expansion holds unchanged because
+    /// the panel is the raw `W` (identity `col_norm`/`col_scale`).
+    #[allow(clippy::too_many_arguments)]
+    fn solve_micro_batch_kl(
+        &self,
+        q: Queries<'_>,
+        r: Range<usize>,
+        h: &mut Mat,
+        res: Option<&mut [f64]>,
+        mut warm: Option<&mut WarmCache>,
+        stats: &mut ProjectStats,
+        timers: &mut PhaseTimers,
+    ) {
+        let (mb, k) = (r.len(), self.k());
+        let zero_row: Vec<bool> = r.clone().map(|i| q.row_is_zero(i)).collect();
+        if zero_row.iter().all(|&z| z) {
+            if let Some(res) = res {
+                for i in r {
+                    res[i] = 0.0;
+                }
+            }
+            return;
+        }
+
+        // Cold rows start mass-matched: h₀ = Σ_v a_v / Σ_t colsum_t makes
+        // Σ(W·h₀) = Σa, so the first multiplicative ratio is O(1) instead
+        // of blowing up against an arbitrary scale. Warm seeds (and h₀
+        // itself) are floored at ε — a multiplicative update can never
+        // leave an exact zero.
+        let total_colsum: f64 =
+            self.colsum.iter().map(|&c| c as f64).sum::<f64>().max(KL_DELTA);
+        let mut g = Mat::zeros(mb, k);
+        let mut fps: Vec<u64> = Vec::new();
+        if warm.is_some() {
+            fps = r.clone().map(|i| fingerprint_row(q, i)).collect();
+        }
+        for (local, i) in r.clone().enumerate() {
+            if zero_row[local] {
+                continue;
+            }
+            let mut seeded = false;
+            if let Some(cache) = warm.as_deref_mut() {
+                match cache.get(fps[local]) {
+                    Some(ghat) if ghat.len() == k => {
+                        for (dst, &src) in g.row_mut(local).iter_mut().zip(ghat) {
+                            *dst = src.max(EPS);
+                        }
+                        stats.warm_hits += 1;
+                        seeded = true;
+                    }
+                    _ => stats.warm_misses += 1,
+                }
+            }
+            if !seeded {
+                let h0 = ((q.row_sum(i) / total_colsum) as Elem).max(EPS);
+                for x in g.row_mut(local).iter_mut() {
+                    *x = h0;
+                }
+            }
+        }
+
+        let shrink = self.spec.shrink();
+        let mut scratch = Mat::zeros(mb, k);
+        let mut sweeps_run = 0;
+        for _ in 0..self.opts.sweeps {
+            scratch.copy_from(&g);
+            timers.time("serve_kl_sweep", || {
+                self.kl_sweep(q, r.clone(), &zero_row, &mut g, shrink)
+            });
+            sweeps_run += 1;
+            if self.opts.tol > 0.0 && g.max_abs_diff(&scratch) < self.opts.tol {
+                break;
+            }
+        }
+        stats.sweeps += sweeps_run;
+        stats.micro_batches += 1;
+
+        if let Some(cache) = warm {
+            for (local, &zero) in zero_row.iter().enumerate() {
+                if !zero {
+                    cache.put(fps[local], g.row(local).to_vec());
+                }
+            }
+        }
+
+        // Already in raw coordinates; entries parked at the ε floor are
+        // active non-negativity constraints and snap to exact 0.
+        for (local, i) in r.clone().enumerate() {
+            if zero_row[local] {
+                continue;
+            }
+            let grow = g.row(local);
+            let hrow = h.row_mut(i);
+            for t in 0..k {
+                let gv = grow[t];
+                hrow[t] = if gv <= EPS { 0.0 } else { gv };
+            }
+        }
+
+        // Residuals keep the wire's stable meaning — *Euclidean* relative
+        // error — regardless of the training loss. The B panel is lazy:
+        // the KL solve itself never needs it.
+        if let Some(res) = res {
+            let mut b = Mat::zeros(mb, k);
+            match q {
+                Queries::Sparse(a) => timers.time("serve_product", || {
+                    spmm_range(&self.pool, 1.0, a, r.clone(), &self.w_unit, &mut b.view_mut())
+                }),
+                Queries::Dense(qm) => timers.time("serve_product", || {
+                    gemm(
+                        &self.pool,
+                        1.0,
+                        qm.block_view(r.start, r.end, 0, qm.cols()),
+                        self.w_unit.view(),
+                        GemmOp::Assign,
+                        &mut b.view_mut(),
+                    )
+                }),
+            }
+            for (local, i) in r.enumerate() {
+                if zero_row[local] {
+                    res[i] = 0.0;
+                    continue;
+                }
+                let ghat = g.row(local);
+                let a2 = q.row_norm2(i);
+                let mut cross = 0.0f64;
+                let mut quad = 0.0f64;
+                for t in 0..k {
+                    let gt = ghat[t] as f64;
+                    cross += gt * b.at(local, t) as f64;
+                    let gram_row = self.gram.row(t);
+                    let mut s = 0.0f64;
+                    for j in 0..k {
+                        s += gram_row[j] as f64 * ghat[j] as f64;
+                    }
+                    quad += gt * s;
+                }
+                let r2 = (a2 - 2.0 * cross + quad).max(0.0);
+                res[i] = if a2 > 0.0 { (r2 / a2).sqrt() } else { 0.0 };
+            }
+        }
+    }
+
+    /// One multiplicative KL sweep over a micro-batch, thread-parallel
+    /// across rows. The numerator `Σ_v W_vj·a_v/(W·h)_v` runs over the
+    /// query's support only (terms with `a_v = 0` vanish); the
+    /// denominator reuses the precomputed column sums plus the guard and
+    /// the elastic-net terms (sklearn's MU regularization placement).
+    fn kl_sweep(
+        &self,
+        q: Queries<'_>,
+        r: Range<usize>,
+        zero_row: &[bool],
+        g: &mut Mat,
+        shrink: Shrink,
+    ) {
+        let k = self.k();
+        let (l1, l2) = (shrink.l1 as f64, shrink.l2 as f64);
+
+        /// Fold one support element `a_v` into the numerator accumulator.
+        #[inline]
+        fn accum(w: &Mat, v: usize, a: f64, hrow: &[Elem], num: &mut [f64]) {
+            let wrow = w.row(v);
+            let mut wh = 0.0f64;
+            for (&wt, &ht) in wrow.iter().zip(hrow) {
+                wh += wt as f64 * ht as f64;
+            }
+            let ratio = a / (wh + KL_DELTA);
+            for (nt, &wt) in num.iter_mut().zip(wrow) {
+                *nt += wt as f64 * ratio;
+            }
+        }
+
+        let shared = SharedRows::new(g);
+        self.pool.parallel_for(r.len(), None, |rows| {
+            let mut num = vec![0.0f64; k];
+            for local in rows {
+                if zero_row[local] {
+                    continue;
+                }
+                let i = r.start + local;
+                // SAFETY: `local` row indices are disjoint across chunks.
+                let hrow = unsafe { shared.row_mut(local) };
+                num.iter_mut().for_each(|x| *x = 0.0);
+                match q {
+                    Queries::Sparse(a) => {
+                        let (cols, vals) = a.row(i);
+                        for (&c, &av) in cols.iter().zip(vals) {
+                            accum(&self.w_unit, c as usize, av as f64, hrow, &mut num);
+                        }
+                    }
+                    Queries::Dense(m) => {
+                        for (v, &av) in m.row(i).iter().enumerate() {
+                            if av != 0.0 {
+                                accum(&self.w_unit, v, av as f64, hrow, &mut num);
+                            }
+                        }
+                    }
+                }
+                for t in 0..k {
+                    let ht = hrow[t] as f64;
+                    let denom = self.colsum[t] as f64 + KL_DELTA + l1 + l2 * ht;
+                    hrow[t] = ((ht * num[t] / denom) as Elem).max(EPS);
+                }
+            }
+        });
     }
 
     /// Relative residuals `‖a_i − W·h_i‖ / ‖a_i‖` for a projected batch,
@@ -1087,5 +1390,213 @@ mod tests {
         // Residual buffer length is validated.
         let mut short = vec![0.0f64; 1];
         assert!(p.project_with(Queries::Dense(&ok_q), Some(&mut short), None).is_err());
+    }
+
+    fn kl_spec(alpha: f64, l1_ratio: f64) -> EngineSpec {
+        EngineSpec {
+            loss: Loss::Kl,
+            solver: crate::nmf::spec::Solver::Mu,
+            alpha,
+            l1_ratio,
+            ..Default::default()
+        }
+    }
+
+    /// Generalized KL divergence D(a_i ‖ W·h_i), the KL mode's objective.
+    fn kl_div(q: &Mat, w: &Mat, h: &Mat, i: usize) -> f64 {
+        let mut d = 0.0f64;
+        for v in 0..w.rows() {
+            let a = q.at(i, v) as f64;
+            let mut wh = 0.0f64;
+            for t in 0..w.cols() {
+                wh += w.at(v, t) as f64 * h.at(i, t) as f64;
+            }
+            wh = wh.max(1e-12);
+            d += if a > 0.0 { a * (a / wh).ln() - a + wh } else { wh };
+        }
+        d
+    }
+
+    /// Elastic-net objective ½‖a_i − W·h_i‖² + l1·Σh + ½·l2·‖h‖².
+    fn reg_objective(q: &Mat, w: &Mat, h: &Mat, i: usize, l1: f64, l2: f64) -> f64 {
+        let r = residual_direct(q, w, h, i);
+        let mut o = 0.5 * r * r;
+        for t in 0..h.cols() {
+            let x = h.at(i, t) as f64;
+            o += l1 * x + 0.5 * l2 * x * x;
+        }
+        o
+    }
+
+    #[test]
+    fn default_spec_is_bit_identical_to_new() {
+        let (w, q) = random_problem(30, 5, 9, 23);
+        let a = Projector::new(w.clone(), pool(2), ProjectorOpts::default()).unwrap();
+        let b =
+            Projector::with_spec(w, pool(2), ProjectorOpts::default(), EngineSpec::default())
+                .unwrap();
+        assert_eq!(
+            a.project(Queries::Dense(&q)).unwrap(),
+            b.project(Queries::Dense(&q)).unwrap()
+        );
+    }
+
+    #[test]
+    fn regularized_projection_matches_reg_bpp() {
+        use crate::nmf::nnls::nnls_bpp_rows_reg;
+        // Same acceptance bar as the free path: the exact elastic-net
+        // KKT point (reg BPP) within 0.1% on the penalized objective.
+        let (w, q) = random_problem(40, 6, 15, 5);
+        let spec = EngineSpec { alpha: 0.3, l1_ratio: 0.5, ..Default::default() };
+        let p = Projector::with_spec(
+            w.clone(),
+            pool(3),
+            ProjectorOpts { sweeps: 300, micro_batch: 7, ..Default::default() },
+            spec,
+        )
+        .unwrap();
+        // Raw mode: the cached Gram is WᵀW itself, not unit-diagonal.
+        assert!(p.gram().at(0, 0) > 2.0, "expected a raw (unnormalized) Gram");
+        let h = p.project(Queries::Dense(&q)).unwrap();
+
+        let g = gram_naive(&w);
+        let mut b = Mat::zeros(15, 6);
+        gemm(&pool(1), 1.0, q.view(), w.view(), GemmOp::Assign, &mut b.view_mut());
+        let mut h_ref = Mat::zeros(15, 6);
+        nnls_bpp_rows_reg(&ThreadPool::new(1), &g, &b, &mut h_ref, spec.shrink());
+
+        let (l1, l2) = (spec.l1() as f64, spec.l2() as f64);
+        for i in 0..15 {
+            let o_hals = reg_objective(&q, &w, &h, i, l1, l2);
+            let o_bpp = reg_objective(&q, &w, &h_ref, i, l1, l2);
+            assert!(
+                o_hals <= o_bpp * 1.001 + 1e-5,
+                "query {i}: serving objective {o_hals} vs bpp {o_bpp}"
+            );
+        }
+    }
+
+    #[test]
+    fn serving_l1_regularization_sparsifies_h() {
+        let (w, q) = random_problem(30, 6, 10, 19);
+        let opts = ProjectorOpts { sweeps: 100, ..Default::default() };
+        let free = Projector::new(w.clone(), pool(2), opts).unwrap();
+        let spec = EngineSpec { alpha: 5.0, l1_ratio: 1.0, ..Default::default() };
+        let reg = Projector::with_spec(w, pool(2), opts, spec).unwrap();
+        let hf = free.project(Queries::Dense(&q)).unwrap();
+        let hr = reg.project(Queries::Dense(&q)).unwrap();
+        let zeros = |h: &Mat| h.data().iter().filter(|&&x| x == 0.0).count();
+        assert!(
+            zeros(&hr) > zeros(&hf),
+            "l1 must produce more exact zeros ({} vs {})",
+            zeros(&hr),
+            zeros(&hf)
+        );
+        assert!(hr.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn kl_projection_converges_on_planted_mixtures() {
+        let mut rng = Pcg32::seeded(77);
+        let w = Mat::random(40, 4, &mut rng, 0.1, 1.0);
+        let h_true = Mat::random(9, 4, &mut rng, 0.0, 1.0);
+        let mut q = Mat::zeros(9, 40);
+        for i in 0..9 {
+            for v in 0..40 {
+                let mut s = 0.0f64;
+                for t in 0..4 {
+                    s += h_true.at(i, t) as f64 * w.at(v, t) as f64;
+                }
+                *q.at_mut(i, v) = s as Elem;
+            }
+        }
+        let p = Projector::with_spec(
+            w.clone(),
+            pool(2),
+            ProjectorOpts { sweeps: 200, micro_batch: 4, ..Default::default() },
+            kl_spec(0.0, 0.0),
+        )
+        .unwrap();
+        let (h, res) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
+        for i in 0..9 {
+            // An exactly factorable row must reach near-zero divergence
+            // (relative to its mass) and a small Euclidean residual too.
+            let mass: f64 = q.row(i).iter().map(|&x| x as f64).sum();
+            let d = kl_div(&q, &w, &h, i);
+            assert!(d / mass < 1e-3, "row {i}: KL divergence {d} for mass {mass}");
+            assert!(res[i] < 0.05, "row {i}: euclidean residual {}", res[i]);
+        }
+    }
+
+    #[test]
+    fn kl_sparse_and_dense_queries_agree() {
+        let (w, qd) = random_problem(25, 4, 11, 83);
+        let mut rng = Pcg32::seeded(84);
+        let mut qs = qd;
+        for i in 0..qs.rows() {
+            for x in qs.row_mut(i).iter_mut() {
+                if rng.below(10) < 7 {
+                    *x = 0.0;
+                }
+            }
+        }
+        let csr = Csr::from_dense(&qs);
+        let p = Projector::with_spec(
+            w,
+            pool(3),
+            ProjectorOpts { sweeps: 60, micro_batch: 5, ..Default::default() },
+            kl_spec(0.0, 0.0),
+        )
+        .unwrap();
+        let h_dense = p.project(Queries::Dense(&qs)).unwrap();
+        let h_sparse = p.project(Queries::Sparse(&csr)).unwrap();
+        // Both encodings walk the same support in the same order.
+        assert!(h_dense.max_abs_diff(&h_sparse) < 1e-6);
+    }
+
+    #[test]
+    fn kl_regularization_shrinks_mixtures() {
+        let (w, q) = random_problem(30, 5, 8, 67);
+        let opts = ProjectorOpts { sweeps: 100, ..Default::default() };
+        let free = Projector::with_spec(w.clone(), pool(2), opts, kl_spec(0.0, 0.0)).unwrap();
+        let reg = Projector::with_spec(w, pool(2), opts, kl_spec(20.0, 1.0)).unwrap();
+        let hf = free.project(Queries::Dense(&q)).unwrap();
+        let hr = reg.project(Queries::Dense(&q)).unwrap();
+        let sum = |h: &Mat| h.data().iter().map(|&x| x as f64).sum::<f64>();
+        assert!(
+            sum(&hr) < sum(&hf),
+            "an l1 penalty must shrink total mixture mass ({} vs {})",
+            sum(&hr),
+            sum(&hf)
+        );
+        assert!(hr.data().iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn kl_zero_rows_and_warm_cache() {
+        let (w, mut q) = random_problem(25, 4, 7, 91);
+        q.row_mut(1).fill(0.0);
+        let p = Projector::with_spec(
+            w,
+            pool(2),
+            ProjectorOpts { sweeps: 200, micro_batch: 3, tol: 1e-7, ..Default::default() },
+            kl_spec(0.0, 0.0),
+        )
+        .unwrap();
+        let mut cache = WarmCache::new(32);
+        let (h_cold, cold) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        assert!(h_cold.row(1).iter().all(|&x| x == 0.0), "zero row stays exactly zero");
+        assert_eq!(cold.warm_hits, 0);
+        assert_eq!(cold.warm_misses, 6, "zero rows never enter the cache");
+        let (h_warm, warm) = p.project_warm(Queries::Dense(&q), &mut cache).unwrap();
+        assert_eq!(warm.warm_hits, 6);
+        assert_eq!(warm.warm_misses, 0);
+        assert!(warm.sweeps <= cold.sweeps);
+        assert!(h_cold.max_abs_diff(&h_warm) < 1e-3);
+        // Fused residuals in KL mode still report Euclidean error: 0 for
+        // the zero row, finite elsewhere.
+        let (_, res) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
+        assert_eq!(res[1], 0.0);
+        assert!(res.iter().all(|r| r.is_finite()));
     }
 }

@@ -55,6 +55,7 @@ use std::time::SystemTime;
 use anyhow::{anyhow, bail, Context};
 
 use crate::linalg::Mat;
+use crate::nmf::spec::{EngineSpec, Loss, Solver};
 use crate::parallel::ThreadPool;
 use crate::serve::model_io::{load_model, ModelMeta};
 use crate::serve::projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
@@ -69,8 +70,45 @@ pub const MANIFEST_FORMAT: &str = "plnmf-manifest";
 /// processes.
 pub const MAX_REPLICAS: usize = 64;
 
+/// Field-wise serving-spec overrides a manifest entry may lay on top of
+/// the model file's saved [`EngineSpec`] — e.g. serving a Frobenius-
+/// trained model with an extra l1 penalty, or forcing the KL projection
+/// path. Absent fields keep the file's values.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpecOverride {
+    pub loss: Option<Loss>,
+    pub alpha: Option<f64>,
+    pub l1_ratio: Option<f64>,
+}
+
+impl SpecOverride {
+    pub fn is_none(&self) -> bool {
+        *self == SpecOverride::default()
+    }
+
+    /// The effective serving spec: `base` (the model file's spec) with
+    /// this override applied field-wise, re-validated as a whole.
+    pub fn apply(&self, mut spec: EngineSpec) -> Result<EngineSpec> {
+        if let Some(l) = self.loss {
+            spec.loss = l;
+            // KL is only reachable through the multiplicative solver.
+            if l == Loss::Kl {
+                spec.solver = Solver::Mu;
+            }
+        }
+        if let Some(a) = self.alpha {
+            spec.alpha = a;
+        }
+        if let Some(r) = self.l1_ratio {
+            spec.l1_ratio = r;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
 /// One `models[]` entry of a manifest.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ManifestModel {
     pub name: String,
     /// Absolute, or relative to the manifest file's directory.
@@ -80,10 +118,13 @@ pub struct ManifestModel {
     /// one model inside a single heap would share everything anyway;
     /// replication is a property of the *process* topology.
     pub replicas: usize,
+    /// Optional serving-spec overrides (`loss`/`alpha`/`l1_ratio` keys
+    /// on the entry), applied over the model file's saved spec.
+    pub spec: SpecOverride,
 }
 
 /// Parsed manifest: the model fleet plus the admission budget.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
     pub version: u64,
     /// Total admitted `W` non-zeros across models (0 = unlimited).
@@ -135,10 +176,46 @@ impl Manifest {
                     ),
                 },
             };
+            // Spec overrides: absent means "keep the model file's
+            // value"; present-but-bogus errors loudly at parse time.
+            let loss = match e.get("loss") {
+                Json::Null => None,
+                v => match v.as_str() {
+                    Some(s) => Some(Loss::from_str(s).map_err(|err| {
+                        anyhow!("models[{i}] ('{name}'): \"loss\": {err}")
+                    })?),
+                    None => bail!("models[{i}] ('{name}'): \"loss\" must be a string"),
+                },
+            };
+            let alpha = match e.get("alpha") {
+                Json::Null => None,
+                v => match v.as_f64() {
+                    Some(a) if a.is_finite() && a >= 0.0 => Some(a),
+                    _ => bail!(
+                        "models[{i}] ('{name}'): \"alpha\" must be a finite number >= 0, \
+                         got {v}"
+                    ),
+                },
+            };
+            let l1_ratio = match e.get("l1_ratio") {
+                Json::Null => None,
+                v => match v.as_f64() {
+                    Some(r) if (0.0..=1.0).contains(&r) => Some(r),
+                    _ => bail!(
+                        "models[{i}] ('{name}'): \"l1_ratio\" must be a number in [0, 1], \
+                         got {v}"
+                    ),
+                },
+            };
             let path = Path::new(path);
             let path =
                 if path.is_absolute() { path.to_path_buf() } else { base_dir.join(path) };
-            models.push(ManifestModel { name: name.to_string(), path, replicas });
+            models.push(ManifestModel {
+                name: name.to_string(),
+                path,
+                replicas,
+                spec: SpecOverride { loss, alpha, l1_ratio },
+            });
         }
         Ok(Manifest { version, max_total_nnz, models })
     }
@@ -335,6 +412,9 @@ impl ModelEntry {
         Json::obj(vec![
             ("v", Json::num(self.projector.v() as f64)),
             ("k", Json::num(self.projector.k() as f64)),
+            // The *effective* serving spec (file spec + manifest
+            // overrides) — clients can see which objective they query.
+            ("spec", self.projector.spec().to_json()),
             ("tile", Json::num(self.projector.tile() as f64)),
             ("threads", Json::num(self.projector.threads() as f64)),
             ("nnz", Json::num(self.nnz as f64)),
@@ -392,7 +472,7 @@ impl ModelRegistry {
             reg.control.lock().unwrap().1 = manifest.max_total_nnz;
         }
         for m in &manifest.models {
-            reg.load(&m.name, &m.path)
+            reg.load_with(&m.name, &m.path, m.spec)
                 .with_context(|| format!("manifest model '{}'", m.name))?;
         }
         reg.control.lock().unwrap().0 = manifest.version;
@@ -449,11 +529,26 @@ impl ModelRegistry {
     /// Admission: rejected if the model's `W` non-zeros would push the
     /// registry past its budget.
     pub fn load(&self, name: &str, path: &Path) -> Result<Arc<ModelEntry>> {
+        self.load_with(name, path, SpecOverride::default())
+    }
+
+    /// [`Self::load`] with manifest-entry spec overrides applied over
+    /// the model file's saved spec; the resulting spec picks the
+    /// projection path (tiled HALS / regularized NNLS / KL).
+    pub fn load_with(
+        &self,
+        name: &str,
+        path: &Path,
+        ovr: SpecOverride,
+    ) -> Result<Arc<ModelEntry>> {
         if name.is_empty() {
             bail!("model name must be non-empty");
         }
         let (factors, meta) =
             load_model(path).with_context(|| format!("loading model '{name}'"))?;
+        let spec = ovr
+            .apply(meta.spec)
+            .with_context(|| format!("serving spec for model '{name}'"))?;
         let nnz = factors.w.data().iter().filter(|&&x| x != 0.0).count();
 
         // Build the projector before taking any lock (the Gram build is
@@ -462,7 +557,7 @@ impl ModelRegistry {
         // read the old resident total and jointly blow the budget.
         let loaded_mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
         let pool = Arc::new(ThreadPool::new(self.per_model_threads()));
-        let projector = Projector::new(factors.w, pool, self.opts.projector)
+        let projector = Projector::with_spec(factors.w, pool, self.opts.projector, spec)
             .with_context(|| format!("building projector for '{name}'"))?;
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
@@ -562,11 +657,15 @@ impl ModelRegistry {
                 None => true,
                 Some(e) => {
                     let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
-                    e.path != m.path || (mtime.is_some() && mtime != e.loaded_mtime)
+                    e.path != m.path
+                        || (mtime.is_some() && mtime != e.loaded_mtime)
+                        // Rebuild when the entry's spec override now
+                        // resolves to a different serving spec.
+                        || m.spec.apply(e.meta.spec).ok() != Some(e.projector.spec())
                 }
             };
             if needs_load {
-                self.load(&m.name, &m.path)
+                self.load_with(&m.name, &m.path, m.spec)
                     .with_context(|| format!("manifest reload: model '{}'", m.name))?;
             }
         }
@@ -787,6 +886,83 @@ mod tests {
             let err = format!("{:#}", Manifest::parse(&bad, base).unwrap_err());
             assert!(err.contains("replicas"), "replicas={bad_replicas}: {err}");
         }
+    }
+
+    #[test]
+    fn manifest_spec_overrides_parse_and_reject() {
+        let base = Path::new("/models");
+        let src = r#"{"format": "plnmf-manifest", "version": 1,
+            "models": [{"name": "a", "path": "a.json",
+                        "loss": "kl", "alpha": 0.2, "l1_ratio": 0.5},
+                       {"name": "b", "path": "b.json"}]}"#;
+        let m = Manifest::parse(src, base).unwrap();
+        assert_eq!(
+            m.models[0].spec,
+            SpecOverride { loss: Some(Loss::Kl), alpha: Some(0.2), l1_ratio: Some(0.5) }
+        );
+        assert!(m.models[1].spec.is_none(), "absent keys leave the file's spec alone");
+        for (key, bad) in [
+            ("loss", "\"poisson\""),
+            ("loss", "3"),
+            ("alpha", "-1"),
+            ("alpha", "\"big\""),
+            ("l1_ratio", "2"),
+            ("l1_ratio", "-0.5"),
+        ] {
+            let src = format!(
+                r#"{{"format": "plnmf-manifest", "version": 1,
+                    "models": [{{"name": "a", "path": "a.json", "{key}": {bad}}}]}}"#
+            );
+            let err = format!("{:#}", Manifest::parse(&src, base).unwrap_err());
+            assert!(err.contains(key), "{key}={bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn registry_serves_mixed_specs_from_one_manifest() {
+        let dir = tmpdir("mixed");
+        write_model(&dir, "fro.json", 20, 3, 7);
+        write_model(&dir, "kl.json", 20, 3, 8);
+        let man = dir.join("manifest.json");
+        std::fs::write(
+            &man,
+            r#"{"format": "plnmf-manifest", "version": 1,
+                "models": [{"name": "fro", "path": "fro.json"},
+                           {"name": "kl", "path": "kl.json",
+                            "loss": "kl", "alpha": 0.1, "l1_ratio": 1.0}]}"#,
+        )
+        .unwrap();
+        let reg = ModelRegistry::from_manifest(&man, small_opts()).unwrap();
+        let fro = reg.get("fro").unwrap();
+        let kl = reg.get("kl").unwrap();
+        assert_eq!(fro.projector().spec(), EngineSpec::default());
+        assert_eq!(kl.projector().spec().loss, Loss::Kl);
+        assert_eq!(kl.projector().spec().solver, Solver::Mu, "kl forces the mu solver");
+        assert!((kl.projector().spec().alpha - 0.1).abs() < 1e-12);
+        // Both objectives answer transforms side by side.
+        let q = Mat::from_fn(3, 20, |i, j| ((i * 5 + j) % 4) as Elem);
+        let (hf, _, _) = fro.transform(Queries::Dense(&q), false).unwrap();
+        let (hk, _, _) = kl.transform(Queries::Dense(&q), false).unwrap();
+        assert!(hf.data().iter().any(|&x| x > 0.0));
+        assert!(hk.data().iter().any(|&x| x > 0.0));
+        // Stats echo the *effective* spec per model.
+        let stats = kl.stats_json().to_string();
+        assert!(stats.contains("\"spec\""), "{stats}");
+        assert!(stats.contains("\"kl\""), "{stats}");
+        assert!(!fro.stats_json().to_string().contains("\"kl\""));
+        // A version bump that only changes an override rebuilds the
+        // entry (same file, same mtime).
+        std::fs::write(
+            &man,
+            r#"{"format": "plnmf-manifest", "version": 2,
+                "models": [{"name": "fro", "path": "fro.json", "alpha": 0.3},
+                           {"name": "kl", "path": "kl.json",
+                            "loss": "kl", "alpha": 0.1, "l1_ratio": 1.0}]}"#,
+        )
+        .unwrap();
+        assert!(reg.reload_manifest().unwrap());
+        assert!((reg.get("fro").unwrap().projector().spec().alpha - 0.3).abs() < 1e-12);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

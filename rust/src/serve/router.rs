@@ -85,8 +85,8 @@
 //! the counter increment, not a stale snapshot), so racing requests
 //! cannot jointly overshoot the ceiling. Manifest hot-reload applies
 //! added/removed/changed models as
-//! before — shards whose entry (path, mtime, replica count) is
-//! untouched keep serving without interruption.
+//! before — shards whose entry (path, mtime, replica count, spec
+//! overrides) is untouched keep serving without interruption.
 
 use std::collections::BTreeMap;
 use std::io::{BufReader, Write};
@@ -98,7 +98,7 @@ use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{anyhow, bail, Context};
 
-use crate::serve::registry::Manifest;
+use crate::serve::registry::{Manifest, SpecOverride};
 use crate::serve::server::{parse_request, Client};
 use crate::serve::wire::{
     self, err_json, handle_hello, ok_obj, read_wire, serve_wire, ConnState, WirePayload,
@@ -447,6 +447,9 @@ pub struct Shard {
     /// `Some` ⇒ locally supervised (spawn/restart applies); `None` ⇒
     /// external workers the router only forwards to.
     model_path: Option<PathBuf>,
+    /// The fleet manifest entry's serving-spec overrides — shipped into
+    /// every replica's worker manifest on (re)spawn.
+    spec: SpecOverride,
     replicas: Vec<Arc<Replica>>,
     route_retries: usize,
     max_inflight: usize,
@@ -463,6 +466,7 @@ impl Shard {
         Shard {
             name: name.to_string(),
             model_path: None,
+            spec: SpecOverride::default(),
             replicas: addrs
                 .iter()
                 .enumerate()
@@ -664,7 +668,7 @@ impl Router {
                 };
                 ports.push(port);
             }
-            match start_shard(&worker_opts, &opts, &m.name, &m.path, &ports) {
+            match start_shard(&worker_opts, &opts, &m.name, &m.path, m.spec, &ports) {
                 Ok(shard) => {
                     let shard = Arc::new(shard);
                     cleanup.push(Arc::clone(&shard));
@@ -829,11 +833,13 @@ fn start_shard(
     opts: &RouterOpts,
     name: &str,
     model_path: &Path,
+    spec: SpecOverride,
     ports: &[u16],
 ) -> Result<Shard> {
     let mut replicas: Vec<Arc<Replica>> = Vec::with_capacity(ports.len());
     for (idx, &port) in ports.iter().enumerate() {
-        match start_worker_checked(worker_opts, opts.ready_timeout, name, idx, model_path, port) {
+        match start_worker_checked(worker_opts, opts.ready_timeout, name, idx, model_path, spec, port)
+        {
             Ok(worker) => {
                 let addr = worker.addr();
                 let loaded_mtime =
@@ -859,6 +865,7 @@ fn start_shard(
     Ok(Shard {
         name: name.to_string(),
         model_path: Some(model_path.to_path_buf()),
+        spec,
         replicas,
         route_retries: opts.route_retries,
         max_inflight: opts.max_inflight,
@@ -997,6 +1004,7 @@ fn supervise_replica(ctl: &Control, shard: &Shard, replica: &Replica) {
         &shard.name,
         replica.idx,
         model_path,
+        shard.spec,
         port,
     ) {
         Ok(worker) => {
@@ -1045,9 +1053,10 @@ fn start_worker_checked(
     name: &str,
     replica: usize,
     model_path: &Path,
+    spec: SpecOverride,
     port: u16,
 ) -> Result<ManagedWorker> {
-    let mut worker = spawn_worker(worker_opts, name, replica, model_path, port)?;
+    let mut worker = spawn_worker(worker_opts, name, replica, model_path, spec, port)?;
     match wait_ready(&mut worker, ready_timeout) {
         Ok(()) => Ok(worker),
         Err(e) => {
@@ -1101,6 +1110,7 @@ fn reload_manifest(ctl: &Control) -> Result<bool> {
             Some(s) => {
                 let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
                 s.model_path.as_deref() != Some(m.path.as_path())
+                    || s.spec != m.spec
                     || s.replicas.len() != m.replicas
                     || (mtime.is_some()
                         && s.replicas
@@ -1114,7 +1124,9 @@ fn reload_manifest(ctl: &Control) -> Result<bool> {
         let started = (0..m.replicas)
             .map(|_| probe_free_port(&worker_opts.host))
             .collect::<Result<Vec<u16>>>()
-            .and_then(|ports| start_shard(worker_opts, &ctl.opts, &m.name, &m.path, &ports));
+            .and_then(|ports| {
+                start_shard(worker_opts, &ctl.opts, &m.name, &m.path, m.spec, &ports)
+            });
         match started {
             Ok(shard) => {
                 let old = ctl.shards.write().unwrap().insert(m.name.clone(), Arc::new(shard));

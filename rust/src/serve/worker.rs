@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
-use crate::serve::registry::manifest_json;
+use crate::serve::registry::{SpecOverride, MANIFEST_FORMAT};
 use crate::serve::server::Client;
 use crate::util::json::Json;
 use crate::Result;
@@ -140,6 +140,7 @@ pub fn write_worker_manifest(
     name: &str,
     replica: usize,
     model_path: &Path,
+    spec: SpecOverride,
 ) -> Result<PathBuf> {
     std::fs::create_dir_all(work_dir)
         .with_context(|| format!("creating worker dir {work_dir:?}"))?;
@@ -151,24 +152,46 @@ pub fn write_worker_manifest(
         std::env::current_dir().context("resolving model path")?.join(model_path)
     };
     let path = work_dir.join(format!("{name}.r{replica}.manifest.json"));
-    let abs_str = abs.display().to_string();
-    let body = manifest_json(1, 0, &[(name, abs_str.as_str())]).pretty();
+    // The fleet manifest's spec overrides ride along into the worker's
+    // single-model manifest — a KL-override entry must spawn a worker
+    // that actually projects under KL.
+    let mut entry = vec![
+        ("name", Json::str(name)),
+        ("path", Json::str(abs.display().to_string().as_str())),
+    ];
+    if let Some(l) = spec.loss {
+        entry.push(("loss", Json::str(l.name())));
+    }
+    if let Some(a) = spec.alpha {
+        entry.push(("alpha", Json::num(a)));
+    }
+    if let Some(r) = spec.l1_ratio {
+        entry.push(("l1_ratio", Json::num(r)));
+    }
+    let body = Json::obj(vec![
+        ("format", Json::str(MANIFEST_FORMAT)),
+        ("version", Json::num(1.0)),
+        ("max_total_nnz", Json::num(0.0)),
+        ("models", Json::Arr(vec![Json::obj(entry)])),
+    ])
+    .pretty();
     std::fs::write(&path, body).with_context(|| format!("writing worker manifest {path:?}"))?;
     Ok(path)
 }
 
-/// Spawn one worker on `port` serving `name` from `model_path` as the
-/// shard's `replica`-th copy (0-based; every replica serves the model
-/// under the same name — the index only keys the manifest file and
-/// logs).
+/// Spawn one worker on `port` serving `name` from `model_path` (under
+/// the entry's serving-spec overrides, if any) as the shard's
+/// `replica`-th copy (0-based; every replica serves the model under the
+/// same name — the index only keys the manifest file and logs).
 pub fn spawn_worker(
     opts: &WorkerOpts,
     name: &str,
     replica: usize,
     model_path: &Path,
+    spec: SpecOverride,
     port: u16,
 ) -> Result<ManagedWorker> {
-    let manifest = write_worker_manifest(&opts.work_dir, name, replica, model_path)?;
+    let manifest = write_worker_manifest(&opts.work_dir, name, replica, model_path, spec)?;
     let child = Command::new(&opts.binary)
         .arg("serve")
         .arg("--models_manifest")
@@ -253,19 +276,35 @@ mod tests {
     #[test]
     fn worker_manifest_is_single_model_and_absolute() {
         let dir = std::env::temp_dir().join(format!("plnmf-workerman-{}", std::process::id()));
-        let path = write_worker_manifest(&dir, "news", 0, Path::new("/models/news.json")).unwrap();
+        let none = SpecOverride::default();
+        let path =
+            write_worker_manifest(&dir, "news", 0, Path::new("/models/news.json"), none).unwrap();
         let m = crate::serve::Manifest::load(&path).unwrap();
         assert_eq!(m.version, 1);
         assert_eq!(m.models.len(), 1);
         assert_eq!(m.models[0].name, "news");
         assert_eq!(m.models[0].path, Path::new("/models/news.json"));
+        assert!(m.models[0].spec.is_none(), "no override keys for a default spec");
         // Replicas of one model write distinct manifest files (respawns
         // of different replicas must never race on one path), and each
         // still serves the model under its undecorated name.
-        let path1 = write_worker_manifest(&dir, "news", 1, Path::new("/models/news.json")).unwrap();
+        let path1 =
+            write_worker_manifest(&dir, "news", 1, Path::new("/models/news.json"), none).unwrap();
         assert_ne!(path, path1);
         let m1 = crate::serve::Manifest::load(&path1).unwrap();
         assert_eq!(m1.models[0].name, "news");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn worker_manifest_carries_spec_overrides() {
+        use crate::nmf::Loss;
+        let dir = std::env::temp_dir().join(format!("plnmf-workerspec-{}", std::process::id()));
+        let ovr = SpecOverride { loss: Some(Loss::Kl), alpha: Some(0.1), l1_ratio: Some(1.0) };
+        let path =
+            write_worker_manifest(&dir, "topics", 0, Path::new("/models/t.json"), ovr).unwrap();
+        let m = crate::serve::Manifest::load(&path).unwrap();
+        assert_eq!(m.models[0].spec, ovr, "overrides round-trip through the worker manifest");
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -274,7 +313,8 @@ mod tests {
         let opts = WorkerOpts::new(PathBuf::from("/definitely/not/a/binary"));
         let err = format!(
             "{:#}",
-            spawn_worker(&opts, "m", 0, Path::new("/tmp/m.json"), 1).unwrap_err()
+            spawn_worker(&opts, "m", 0, Path::new("/tmp/m.json"), SpecOverride::default(), 1)
+                .unwrap_err()
         );
         assert!(err.contains("spawning worker 'm'"), "{err}");
         std::fs::remove_dir_all(&opts.work_dir).ok();

@@ -31,6 +31,18 @@ const ITERS: usize = 10;
 /// |got − want| ≤ TOL · max(1, |want|) per trace point.
 const TOL: f64 = 2e-3;
 
+fn run_job(key: &str, cfg: &RunConfig) -> Vec<f64> {
+    let report = Driver::from_config(cfg)
+        .unwrap_or_else(|e| panic!("{key}: {e:#}"))
+        .run()
+        .unwrap_or_else(|e| panic!("{key}: {e:#}"));
+    let trace: Vec<f64> = report.trace.iter().map(|r| r.rel_error).collect();
+    assert_eq!(trace.len(), ITERS + 1, "{key}: iter 0..=10 recorded");
+    assert!(trace.iter().all(|e| e.is_finite()), "{key}: non-finite error in {trace:?}");
+    assert!(trace[ITERS] <= trace[0], "{key}: error rose {} -> {}", trace[0], trace[ITERS]);
+    trace
+}
+
 fn trajectories() -> BTreeMap<String, Vec<f64>> {
     let mut out = BTreeMap::new();
     for dataset in DATASETS {
@@ -43,25 +55,31 @@ fn trajectories() -> BTreeMap<String, Vec<f64>> {
             cfg.record_every = 1;
             cfg.threads = 2;
             cfg.seed = 7;
-            let report = Driver::from_config(&cfg)
-                .unwrap_or_else(|e| panic!("{engine}/{dataset}: {e:#}"))
-                .run()
-                .unwrap_or_else(|e| panic!("{engine}/{dataset}: {e:#}"));
-            let trace: Vec<f64> = report.trace.iter().map(|r| r.rel_error).collect();
-            assert_eq!(trace.len(), ITERS + 1, "{engine}/{dataset}: iter 0..=10 recorded");
-            assert!(
-                trace.iter().all(|e| e.is_finite()),
-                "{engine}/{dataset}: non-finite error in {trace:?}"
-            );
-            assert!(
-                trace[ITERS] <= trace[0],
-                "{engine}/{dataset}: error rose {} -> {}",
-                trace[0],
-                trace[ITERS]
-            );
-            out.insert(format!("{engine}/{dataset}"), trace);
+            let key = format!("{engine}/{dataset}");
+            let trace = run_job(&key, &cfg);
+            out.insert(key, trace);
         }
     }
+    // The one regularized golden job: elastic-net KL (alpha=0.1,
+    // l1_ratio=0.5 — the EngineSpec surface) on the sparse corpus, so
+    // the H-denominator penalty terms cannot silently drift.
+    let mut cfg = RunConfig::default();
+    cfg.dataset = "tiny-sparse".to_string();
+    cfg.engine = EngineKind::MuKl;
+    cfg.k = 4;
+    cfg.max_iters = ITERS;
+    cfg.record_every = 1;
+    cfg.threads = 2;
+    cfg.seed = 7;
+    cfg.alpha = 0.1;
+    cfg.l1_ratio = 0.5;
+    let key = "mukl+reg/tiny-sparse";
+    let trace = run_job(key, &cfg);
+    assert_ne!(
+        trace[ITERS], out["mukl/tiny-sparse"][ITERS],
+        "{key}: the penalty changed nothing vs. the free run"
+    );
+    out.insert(key.to_string(), trace);
     out
 }
 

@@ -477,6 +477,85 @@ fn hello_negotiation_and_strict_request_integers_over_the_wire() {
 }
 
 #[test]
+fn mixed_loss_manifest_serves_kl_and_frobenius_side_by_side() {
+    // The EngineSpec headline: ONE manifest, one daemon, a Frobenius
+    // recommender and a sparse KL topic model served concurrently —
+    // each answered identically over v1 NDJSON and v2 binary frames,
+    // and each bit-identical to its in-process reference projector.
+    use plnmf::nmf::{EngineSpec, Loss, Solver};
+
+    let dir = tmpdir("mixed");
+    let model_fro = write_model(&dir, "fro.json", 30, 9, 4, 31);
+    let model_kl = write_model(&dir, "kl.json", 30, 9, 4, 32);
+    let manifest = dir.join("manifest.json");
+    std::fs::write(
+        &manifest,
+        r#"{"format": "plnmf-manifest", "version": 1,
+            "models": [{"name": "fro", "path": "fro.json"},
+                       {"name": "kl", "path": "kl.json",
+                        "loss": "kl", "alpha": 0.1, "l1_ratio": 1.0}]}"#,
+    )
+    .unwrap();
+
+    let popts = ProjectorOpts { sweeps: 30, micro_batch: 8, ..Default::default() };
+    let registry = ModelRegistry::from_manifest(&manifest, pinned_opts(popts, 0)).unwrap();
+    let (addr, handle) = start_server(registry);
+
+    let mut v1 = Client::connect(addr).unwrap();
+    let mut v2 = Client::connect(addr).unwrap();
+    assert_eq!(v2.negotiate().unwrap(), 2);
+
+    let spec_kl = EngineSpec {
+        loss: Loss::Kl,
+        solver: Solver::Mu,
+        alpha: 0.1,
+        l1_ratio: 1.0,
+        ..Default::default()
+    };
+    let reference = |path: &Path, spec: EngineSpec, q: &Mat| -> Mat {
+        let (factors, _) = plnmf::serve::load_model(path).unwrap();
+        let pool = Arc::new(ThreadPool::new(1));
+        let p = Projector::with_spec(factors.w, pool, popts, spec).unwrap();
+        p.project(Queries::Dense(q)).unwrap()
+    };
+
+    let mut rng = Pcg32::seeded(123);
+    for round in 0..3 {
+        let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+        let fro_ref = reference(&model_fro, EngineSpec::default(), &q);
+        let kl_ref = reference(&model_kl, spec_kl, &q);
+
+        for (name, want) in [("fro", &fro_ref), ("kl", &kl_ref)] {
+            let (h_v1, res_v1, _) = v1.transform_dense(name, &q, true).unwrap();
+            let (h_v2, res_v2, _) = v2.transform_dense(name, &q, true).unwrap();
+            assert_eq!(h_v1, *want, "{name} round {round}: v1 h vs in-process reference");
+            assert_eq!(h_v2, *want, "{name} round {round}: v2 h vs in-process reference");
+            assert_eq!(res_v1, res_v2, "{name} round {round}: residuals across protocols");
+            assert!(h_v1.data().iter().all(|&x| x >= 0.0 && x.is_finite()), "{name}");
+        }
+        // Different objectives genuinely produce different answers.
+        assert_ne!(fro_ref, kl_ref, "round {round}");
+    }
+
+    // The stats op echoes each model's *effective* serving spec.
+    let stats = v1.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    let fro = stats.get("models").get("fro").get("spec");
+    assert_eq!(fro.get("loss").as_str(), Some("frobenius"), "{stats}");
+    assert_eq!(fro.get("alpha").as_f64(), Some(0.0));
+    let kl = stats.get("models").get("kl").get("spec");
+    assert_eq!(kl.get("loss").as_str(), Some("kl"), "{stats}");
+    assert_eq!(kl.get("solver").as_str(), Some("mu"));
+    assert_eq!(kl.get("alpha").as_f64(), Some(0.1));
+    assert_eq!(kl.get("l1_ratio").as_f64(), Some(1.0));
+
+    drop(v1);
+    drop(v2);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn cli_serve_requires_a_model_source() {
     use plnmf::bench::cli_main;
     use plnmf::cli::Args;

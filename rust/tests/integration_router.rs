@@ -438,6 +438,82 @@ fn binary_routed_transforms_match_json_over_replicated_processes() {
 }
 
 #[test]
+fn mixed_loss_fleet_routes_kl_and_frobenius_worker_processes() {
+    // The EngineSpec headline at the routed layer: one fleet manifest, a
+    // Frobenius shard and a KL-override shard, each spawned as a real
+    // `plnmf serve` process. The override must ride into the worker's
+    // generated manifest, and routed answers (v1 and v2 alike — the
+    // router relays bytes untouched) must be bit-identical to the
+    // in-process reference projector running the same spec.
+    use plnmf::nmf::{EngineSpec, Loss, Solver};
+
+    let dir = tmpdir("mixed");
+    let model_fro = write_model(&dir, "fro.json", 30, 9, 4, 13);
+    let model_kl = write_model(&dir, "kl.json", 30, 9, 4, 14);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(
+        &manifest,
+        r#"{"format": "plnmf-manifest", "version": 1,
+            "models": [{"name": "fro", "path": "fro.json"},
+                       {"name": "kl", "path": "kl.json",
+                        "loss": "kl", "alpha": 0.1, "l1_ratio": 1.0}]}"#,
+    )
+    .unwrap();
+    let router =
+        Router::from_manifest(&manifest, pinned_worker_opts(&dir), RouterOpts::default())
+            .unwrap();
+    assert_eq!(router.names(), vec!["fro", "kl"]);
+    let (addr, handle) = start_router(router);
+
+    let mut v1 = Client::connect(addr).unwrap();
+    let mut v2 = Client::connect(addr).unwrap();
+    assert_eq!(v2.negotiate().unwrap(), 2);
+
+    let spec_kl = EngineSpec {
+        loss: Loss::Kl,
+        solver: Solver::Mu,
+        alpha: 0.1,
+        l1_ratio: 1.0,
+        ..Default::default()
+    };
+    let reference = |path: &Path, spec: EngineSpec, q: &Mat| -> Mat {
+        let (factors, _) = plnmf::serve::load_model(path).unwrap();
+        let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+        let p = Projector::with_spec(factors.w, Arc::new(ThreadPool::new(1)), popts, spec)
+            .unwrap();
+        p.project(Queries::Dense(q)).unwrap()
+    };
+
+    let mut rng = Pcg32::seeded(47);
+    for round in 0..3 {
+        let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+        let fro_ref = reference(&model_fro, EngineSpec::default(), &q);
+        let kl_ref = reference(&model_kl, spec_kl, &q);
+        for (name, want) in [("fro", &fro_ref), ("kl", &kl_ref)] {
+            let resp = v1.request_ok(&transform_req(name, &q)).unwrap();
+            assert_eq!(h_from_json(&resp, 4), *want, "{name} round {round}: routed v1 h");
+            let (h_bin, _, _) = v2.transform_dense(name, &q, false).unwrap();
+            assert_eq!(h_bin, *want, "{name} round {round}: routed v2 h");
+        }
+        assert_ne!(fro_ref, kl_ref, "round {round}: the objectives must differ");
+    }
+
+    // Routed stats aggregate each worker's spec echo.
+    let stats = v1.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("models").get("fro").get("spec").get("loss").as_str(),
+        Some("frobenius"), "{stats}");
+    let kl = stats.get("models").get("kl").get("spec");
+    assert_eq!(kl.get("loss").as_str(), Some("kl"), "{stats}");
+    assert_eq!(kl.get("alpha").as_f64(), Some(0.1));
+
+    drop(v1);
+    drop(v2);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn manifest_hot_reload_adds_and_removes_workers_without_touching_others() {
     let dir = tmpdir("reload");
     write_model(&dir, "a.json", 25, 8, 3, 5);
