@@ -143,14 +143,18 @@ COMMANDS:
              same inputs as transform, plus --top N [--exclude-seen]
   serve      long-lived daemon: newline-delimited JSON over TCP, models
              stay resident (cached Grams, warm-start cache, per-model
-             pools): --models_manifest fleet.json | --model m.json
-             [--serve_port P --warm_cache N --serve_tol T --threads N]
+             pools); the `update` op folds new data rows into a model's
+             factors and hot-swaps them in as epoch N+1 without dropping
+             a request: --models_manifest fleet.json | --model m.json
+             [--serve_port P --warm_cache N --serve_tol T --threads N
+             --update_sweeps S]
              [--train_worker — host no models, just train-dist shards]
   route      cross-process shard router: `plnmf serve` worker processes
              per manifest model (\"replicas\": N each, default 1), same
              protocol on the front port; least-loaded replica routing,
              idempotent-op retry budget, busy backpressure, crash
-             detection + bounded-backoff restarts + manifest hot-reload:
+             detection + bounded-backoff restarts + manifest hot-reload;
+             `update` fans out to every replica of its model:
              --models_manifest fleet.json
              [--route_port P --worker_port_base B --restart_backoff_ms N
              --route_retries R --max_inflight C
@@ -304,6 +308,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tol: serve_tol,
         },
         warm_cache: cfg.warm_cache,
+        update_sweeps: cfg.update_sweeps,
         max_total_nnz: 0,
     };
     let registry = if let (Some(manifest), Some(path)) = (&manifest, &cfg.models_manifest) {
@@ -372,6 +377,8 @@ fn cmd_route(args: &Args) -> Result<()> {
         cfg.serve_tol.to_string(),
         "--warm_cache".into(),
         cfg.warm_cache.to_string(),
+        "--update_sweeps".into(),
+        cfg.update_sweeps.to_string(),
     ];
     let opts = RouterOpts {
         route_port: cfg.route_port as u16,

@@ -34,11 +34,18 @@
 //!    flipped to KL by a manifest-style spec override — what the
 //!    multiplicative KL projection costs per request next to the
 //!    tiled-HALS rows, and how much its warm cache claws back.
+//! 7. **Hot swap under load** (`swap_under_load`/`swap_update` rows):
+//!    sustained transform traffic against one daemon while `update`
+//!    batches publish new factor epochs in the background. The
+//!    transform row shows serving never pauses for a swap (the
+//!    registry's epoch publish is a single map insert); the update row
+//!    is the fold-in + republish cost per batch.
 //!
 //! Run via `cargo bench --bench serving_throughput` or `plnmf bench
 //! serving`.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::bench::harness::{measure, row, BenchOpts};
@@ -79,6 +86,12 @@ const REPL_REQS_PER_CLIENT: usize = 4;
 /// dominates the round trip (the acceptance floor for the PLNB rows).
 pub const BINARY_DOCS: usize = 256;
 pub const BINARY_V: usize = 128;
+
+/// Factor epochs the swap-under-load pass publishes via `update`.
+const SWAP_EPOCHS: usize = 3;
+
+/// New user rows folded in per `update` batch.
+const SWAP_UPDATE_ROWS: usize = 16;
 
 pub fn run(scale: Scale, out: &Path) -> Result<()> {
     run_with(scale, out, BenchOpts::default())
@@ -154,6 +167,7 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
     daemon_rows.extend(replicated_roundtrip(dataset, k, &factors, &owned, threads)?);
     daemon_rows.extend(binary_roundtrip(dataset, k, threads)?);
     daemon_rows.extend(kl_roundtrip(dataset, k, &factors, &owned, threads)?);
+    daemon_rows.extend(swap_under_load(dataset, k, &factors, &owned, threads)?);
     let csv = out.join("serving_daemon.csv");
     write_csv(
         &csv,
@@ -174,6 +188,7 @@ fn bench_registry_opts(threads: usize) -> RegistryOpts {
         projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
         warm_cache: 2 * DAEMON_DOCS,
         max_total_nnz: 0,
+        update_sweeps: 20,
     }
 }
 
@@ -347,6 +362,7 @@ fn replicated_roundtrip(
                 projector: ProjectorOpts { sweeps: 8, micro_batch: 32, ..Default::default() },
                 warm_cache: 0,
                 max_total_nnz: 0,
+                update_sweeps: 20,
             });
             registry.load("bench", &model_path)?;
             let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
@@ -461,6 +477,7 @@ fn binary_roundtrip(dataset: &str, k: usize, threads: usize) -> Result<Vec<Strin
         projector: ProjectorOpts { sweeps: 30, micro_batch: 32, tol: 1e-5, ..Default::default() },
         warm_cache: 2 * BINARY_DOCS,
         max_total_nnz: 0,
+        update_sweeps: 20,
     };
     type DaemonHandle = std::thread::JoinHandle<Result<()>>;
     let start_daemon = |opts: RegistryOpts| -> Result<(std::net::SocketAddr, DaemonHandle)> {
@@ -552,6 +569,122 @@ fn kl_roundtrip(
     Ok(rows)
 }
 
+/// S1g: hot swap under load — one client hammers `transform` while the
+/// main thread publishes [`SWAP_EPOCHS`] factor epochs via `update`.
+/// Every transform must succeed (a failed request fails the bench):
+/// the registry's epoch publish is a lock-free-to-readers map insert,
+/// so swaps never pause serving. The `swap_under_load` row is the
+/// transform throughput *measured across the swaps*; the `swap_update`
+/// row is the fold-in + republish cost per batch.
+fn swap_under_load(
+    dataset: &str,
+    k: usize,
+    factors: &Factors,
+    owned: &OwnedQueries,
+    threads: usize,
+) -> Result<Vec<String>> {
+    let dir = std::env::temp_dir().join(format!("plnmf-swapbench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let model_path = dir.join("bench-model.json");
+    save_model(&model_path, factors, &ModelMeta::default())?;
+
+    let registry = ModelRegistry::new(bench_registry_opts(threads));
+    registry.load("bench", &model_path)?;
+    let server = Server::bind(Arc::new(registry), "127.0.0.1", 0)?;
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run());
+
+    let sub = head(owned, REPL_DOCS);
+    let docs_per_req = sub.as_queries().rows();
+    let req = Json::obj(vec![
+        ("op", Json::str("transform")),
+        ("model", Json::str("bench")),
+        ("queries", queries_to_json(sub.as_queries())),
+    ]);
+    let mut rng = Pcg32::seeded(99);
+    let batch = Mat::random(SWAP_UPDATE_ROWS, factors.w.rows(), &mut rng, 0.0, 1.0);
+
+    println!(
+        "\nhot swap under load ({SWAP_EPOCHS} `update` epochs of {SWAP_UPDATE_ROWS} rows \
+         vs sustained {docs_per_req}-doc transforms):\n"
+    );
+    let stop = AtomicBool::new(false);
+    let t = Timer::start();
+    let (traffic, upd) = std::thread::scope(|s| {
+        let req = &req;
+        let stop = &stop;
+        let jt = s.spawn(move || -> Result<(usize, usize, usize, usize)> {
+            let mut client = Client::connect(addr)?;
+            let (mut reqs, mut sweeps, mut batches, mut hits) = (0usize, 0usize, 0usize, 0usize);
+            loop {
+                let resp = client.request_ok(req)?;
+                let warm = resp.get("warm");
+                sweeps += warm.get("sweeps").as_usize().unwrap_or(0);
+                batches += warm.get("micro_batches").as_usize().unwrap_or(0);
+                hits += warm.get("hits").as_usize().unwrap_or(0);
+                reqs += 1;
+                if stop.load(Ordering::SeqCst) {
+                    return Ok((reqs, sweeps, batches, hits));
+                }
+            }
+        });
+        let upd = (|| -> Result<(f64, usize, usize, usize, usize)> {
+            let mut client = Client::connect(addr)?;
+            let tu = Timer::start();
+            let (mut epoch, mut sweeps, mut batches, mut hits) = (0usize, 0usize, 0usize, 0usize);
+            for _ in 0..SWAP_EPOCHS {
+                let resp = client.update_dense("bench", &batch, None)?;
+                epoch = resp.get("epoch").as_usize().unwrap_or(0);
+                let warm = resp.get("warm");
+                sweeps += warm.get("sweeps").as_usize().unwrap_or(0);
+                batches += warm.get("micro_batches").as_usize().unwrap_or(0);
+                hits += warm.get("hits").as_usize().unwrap_or(0);
+            }
+            Ok((tu.elapsed_secs(), epoch, sweeps, batches, hits))
+        })();
+        // Raise the stop flag even when an update failed, so the scope
+        // never hangs waiting on the traffic loop.
+        stop.store(true, Ordering::SeqCst);
+        (jt.join().expect("traffic thread panicked"), upd)
+    });
+    let secs = t.elapsed_secs();
+    let (reqs, sweeps, batches, hits) = traffic?;
+    let (upd_secs, epoch, upd_sweeps, upd_batches, upd_hits) = upd?;
+    anyhow::ensure!(
+        epoch >= SWAP_EPOCHS,
+        "expected >= {SWAP_EPOCHS} published epochs, daemon reports {epoch}"
+    );
+
+    let total_docs = reqs * docs_per_req;
+    let docs_per_sec = total_docs as f64 / secs.max(1e-12);
+    let upd_rows = SWAP_EPOCHS * SWAP_UPDATE_ROWS;
+    let rows_per_sec = upd_rows as f64 / upd_secs.max(1e-12);
+    println!(
+        "swap under load     {secs:>10.4} s  [{docs_per_sec:.1} docs/s]  \
+         {reqs} transforms, 0 failed, across {SWAP_EPOCHS} epoch swaps (now at epoch {epoch})"
+    );
+    println!(
+        "swap update         {upd_secs:>10.4} s  [{rows_per_sec:.1} rows/s]  \
+         {upd_rows} rows folded over {SWAP_EPOCHS} batches"
+    );
+    let rows = vec![
+        format!(
+            "{dataset},{k},{total_docs},swap_under_load,{secs:.6},{docs_per_sec:.1},\
+             {sweeps},{batches},{hits}"
+        ),
+        format!(
+            "{dataset},{k},{upd_rows},swap_update,{upd_secs:.6},{rows_per_sec:.1},\
+             {upd_sweeps},{upd_batches},{upd_hits}"
+        ),
+    ];
+
+    let mut shut = Client::connect(addr)?;
+    shut.request_ok(&Json::obj(vec![("op", Json::str("shutdown"))]))?;
+    handle.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    std::fs::remove_dir_all(dir).ok();
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -572,9 +705,10 @@ mod tests {
         let lines: Vec<&str> = daemon.lines().collect();
         assert_eq!(
             lines.len(),
-            13 + REPLICA_COUNTS.len(),
+            15 + REPLICA_COUNTS.len(),
             "header + direct cold/warm + routed cold/warm + replicated r1/r2/r4 + \
-             dense-json/binary cold/warm/routed twins + kl cold/warm: {daemon}"
+             dense-json/binary cold/warm/routed twins + kl cold/warm + \
+             swap_under_load/swap_update: {daemon}"
         );
         assert!(lines[1].contains(",cold,"));
         assert!(lines[2].contains(",warm,"));
@@ -622,6 +756,22 @@ mod tests {
         assert!(lines[kl_base].contains(",kl_cold,"), "kl_cold row missing: {daemon}");
         assert!(lines[kl_base + 1].contains(",kl_warm,"), "kl_warm row missing: {daemon}");
         assert!(sweeps(lines[kl_base + 1]) <= sweeps(lines[kl_base]), "{daemon}");
+        // Hot-swap rows: transform throughput measured across epoch
+        // swaps (with zero failures, or the bench would have bailed),
+        // and the fold-in cost of the SWAP_EPOCHS update batches.
+        let swap_base = kl_base + 2;
+        assert!(
+            lines[swap_base].contains(",swap_under_load,"),
+            "swap_under_load row missing: {daemon}"
+        );
+        assert!(
+            lines[swap_base + 1].contains(",swap_update,"),
+            "swap_update row missing: {daemon}"
+        );
+        let swap_docs: usize = lines[swap_base].split(',').nth(2).unwrap().parse().unwrap();
+        assert!(swap_docs > 0, "swaps must not starve the transform traffic: {daemon}");
+        let folded: usize = lines[swap_base + 1].split(',').nth(2).unwrap().parse().unwrap();
+        assert_eq!(folded, SWAP_EPOCHS * SWAP_UPDATE_ROWS, "{daemon}");
         std::fs::remove_dir_all(dir).ok();
     }
 }

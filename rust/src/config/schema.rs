@@ -81,6 +81,7 @@ const KNOWN_KEYS: &[&str] = &[
     "dataset", "k", "tile", "t", "engine", "max_iters", "iters", "tol", "threads", "seed",
     "cache_bytes", "record_every", "artifacts_dir", "trace_path", "model_path", "model",
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
+    "update_sweeps",
     "route_port", "worker_port_base", "restart_backoff_ms", "max_backoff_ms", "route_retries",
     "max_inflight", "train_workers", "sync_every", "loss", "alpha", "l1_ratio", "init",
 ];
@@ -130,6 +131,9 @@ pub struct RunConfig {
     /// Daemon: warm-start cache capacity per model, in cached query
     /// solutions (0 disables warm starts).
     pub warm_cache: usize,
+    /// Daemon: default W-column HALS sweeps per online `update` batch
+    /// (a request-level `"sweeps"` overrides it per call).
+    pub update_sweeps: usize,
     /// Router: front TCP port for `plnmf route` (0 = OS-assigned).
     pub route_port: usize,
     /// Router: first worker port; the fleet takes `base`, `base+1`, …
@@ -199,6 +203,7 @@ impl Default for RunConfig {
             serve_port: 7878,
             models_manifest: None,
             warm_cache: 256,
+            update_sweeps: 20,
             route_port: 7900,
             worker_port_base: 0,
             restart_backoff_ms: 500,
@@ -289,6 +294,11 @@ impl RunConfig {
                     if v.is_null() { None } else { Some(need_str()?.to_string()) }
             }
             "warm_cache" => self.warm_cache = need_usize()?,
+            // Zero sweeps would make `update` a silent no-op publish.
+            "update_sweeps" => match need_usize()? {
+                0 => bail!("update_sweeps must be >= 1"),
+                n => self.update_sweeps = n,
+            },
             "route_port" => match need_usize()? {
                 p if p > u16::MAX as usize => {
                     bail!("route_port must fit a TCP port (0..=65535), got {p}")
@@ -367,6 +377,7 @@ impl RunConfig {
             ("serve_tol", Json::num(self.serve_tol)),
             ("serve_port", Json::num(self.serve_port as f64)),
             ("warm_cache", Json::num(self.warm_cache as f64)),
+            ("update_sweeps", Json::num(self.update_sweeps as f64)),
             ("route_port", Json::num(self.route_port as f64)),
             ("worker_port_base", Json::num(self.worker_port_base as f64)),
             ("restart_backoff_ms", Json::num(self.restart_backoff_ms as f64)),
@@ -449,6 +460,9 @@ impl RunConfig {
         }
         if self.batch == 0 {
             bail!("batch must be >= 1");
+        }
+        if self.update_sweeps == 0 {
+            bail!("update_sweeps must be >= 1");
         }
         if self.serve_port > u16::MAX as usize {
             bail!("serve_port must fit a TCP port (0..=65535)");
@@ -657,13 +671,19 @@ mod tests {
         cfg.set_str("serve_port", "9090").unwrap();
         cfg.set_str("models_manifest", "models/manifest.json").unwrap();
         cfg.set_str("warm_cache", "512").unwrap();
+        cfg.set_str("update_sweeps", "40").unwrap();
         assert_eq!(cfg.serve_port, 9090);
         assert_eq!(cfg.models_manifest.as_deref(), Some("models/manifest.json"));
         assert_eq!(cfg.warm_cache, 512);
+        assert_eq!(cfg.update_sweeps, 40);
         let re = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(re.serve_port, 9090);
         assert_eq!(re.models_manifest.as_deref(), Some("models/manifest.json"));
         assert_eq!(re.warm_cache, 512);
+        assert_eq!(re.update_sweeps, 40);
+        // Zero update sweeps would be a silent no-op publish: rejected.
+        assert!(cfg.set_str("update_sweeps", "0").is_err());
+        assert_eq!(cfg.update_sweeps, 40, "failed set must not alter the config");
         // `manifest` is an accepted alias; ports must fit u16.
         cfg.set_str("manifest", "other.json").unwrap();
         assert_eq!(cfg.models_manifest.as_deref(), Some("other.json"));

@@ -29,7 +29,11 @@
 //!   LRU ([`WarmCache`]).
 //! * [`registry`] — [`ModelRegistry`]: named models as independent
 //!   serving shards (own pool, own queue, own warm cache), loaded from a
-//!   versioned manifest with nnz-aware admission and hot reload.
+//!   versioned manifest with nnz-aware admission and hot reload, and
+//!   updatable in place: the `update` op folds new data rows into a
+//!   model's factors and atomically publishes the result as factor
+//!   epoch N+1 with zero dropped requests (see
+//!   [`ModelRegistry::update`]).
 //! * [`wire`] — the shared wire codec: the v1 NDJSON frame reader and
 //!   the **PLNB v2 binary frame format** for dense batches (raw f32
 //!   little-endian behind a 20-byte header, negotiated per connection
@@ -68,8 +72,11 @@ pub mod wire;
 pub mod worker;
 
 pub use model_io::{load_model, save_model, ModelMeta};
-pub use projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
-pub use registry::{Manifest, ModelEntry, ModelRegistry, RegistryOpts, SpecOverride};
+pub use projector::{FoldState, ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
+pub use registry::{
+    file_fingerprint, Manifest, ModelEntry, ModelRegistry, RegistryOpts, SpecOverride,
+    UpdateOutcome,
+};
 pub use router::{Router, RouterOpts};
 pub use server::{
     mat_from_json_rows, queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE,

@@ -36,6 +36,11 @@ pub struct ModelMeta {
     /// is not written to disk, so pre-spec files round-trip byte-for-
     /// byte and load as the default.
     pub spec: EngineSpec,
+    /// Factor epoch: how many online `update` batches have been folded
+    /// into these factors since the last full (re)train. Freshly trained
+    /// models are epoch 0, which — like the default spec — stays off
+    /// disk so pre-epoch files round-trip byte-for-byte.
+    pub epoch: u64,
 }
 
 /// Serialize factors + metadata to `path` (parent dirs are created).
@@ -57,6 +62,10 @@ pub fn save_model(path: &Path, factors: &Factors, meta: &ModelMeta) -> Result<()
     // byte-identical to the pre-spec format.
     if !meta.spec.is_default() {
         pairs.push(("spec", meta.spec.to_json()));
+    }
+    // Same story for the factor epoch: 0 (a fresh train) stays off disk.
+    if meta.epoch != 0 {
+        pairs.push(("epoch", Json::num(meta.epoch as f64)));
     }
     pairs.push(("w", mat_to_json(&factors.w)));
     pairs.push(("h", mat_to_json(&factors.h)));
@@ -115,6 +124,7 @@ pub fn load_model(path: &Path) -> Result<(Factors, ModelMeta)> {
         // Absent ⇒ default (pre-spec files); present ⇒ strictly
         // validated, unknown fields rejected.
         spec: EngineSpec::from_json(j.get("spec")).context("model \"spec\"")?,
+        epoch: j.get_usize_or("epoch", 0).map_err(|e| anyhow!("model {e}"))? as u64,
     };
     Ok((Factors::from_parts(w, h)?, meta))
 }
@@ -157,6 +167,7 @@ mod tests {
             iters: 20,
             rel_error: 0.123456,
             spec: EngineSpec::default(),
+            epoch: 0,
         };
         let path = tmp("roundtrip");
         save_model(&path, &f, &meta).unwrap();
@@ -192,6 +203,32 @@ mod tests {
         save_model(&path, &f, &ModelMeta { spec, ..Default::default() }).unwrap();
         let (_, meta) = load_model(&path).unwrap();
         assert_eq!(meta.spec, spec);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn epoch_roundtrips_and_zero_is_not_written() {
+        let f = Factors::random(6, 4, 2, 1);
+        // Epoch 0 (a fresh train): the file must not mention "epoch" at
+        // all, so pre-epoch writers and readers stay byte-compatible.
+        let path = tmp("epoch-zero");
+        save_model(&path, &f, &ModelMeta::default()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(!body.contains("epoch"), "epoch 0 must stay off disk");
+        let (_, meta) = load_model(&path).unwrap();
+        assert_eq!(meta.epoch, 0);
+        std::fs::remove_file(&path).ok();
+        // A non-zero epoch round-trips.
+        let path = tmp("epoch-seven");
+        save_model(&path, &f, &ModelMeta { epoch: 7, ..Default::default() }).unwrap();
+        let (_, meta) = load_model(&path).unwrap();
+        assert_eq!(meta.epoch, 7);
+        // A bogus epoch errors instead of coercing (strict-when-present).
+        let body = r#"{"format": "plnmf-model", "version": 1, "v": 1, "d": 1, "k": 1,
+            "epoch": -2, "w": [1], "h": [1]}"#;
+        std::fs::write(&path, body).unwrap();
+        let err = format!("{:#}", load_model(&path).unwrap_err());
+        assert!(err.contains("epoch"), "{err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -186,6 +186,30 @@ pub struct ProjectStats {
     pub warm_misses: usize,
 }
 
+/// Sufficient statistics for online factor updates — the
+/// limited-internal-memory NMF frame (arXiv 1506.08938): the W
+/// subproblem `min ‖A − H·Wᵀ‖²` depends on the data only through
+/// `S = HᵀH` (K×K) and `P = AᵀH` (V×K), both O(1) in the number of
+/// data rows. Folding a batch in is `S += H₁ᵀH₁`, `P += QᵀH₁`; the
+/// data itself is dropped. Seeded by [`Projector::fold_seed`], advanced
+/// by [`Projector::fold_in`].
+#[derive(Debug, Clone)]
+pub struct FoldState {
+    /// Accumulated mixture Gram `ΣHᵢᵀHᵢ` (K×K).
+    s: Mat,
+    /// Accumulated data-mixture product `ΣAᵢᵀHᵢ` (V×K).
+    p: Mat,
+    /// Data rows folded in so far (seed rows included).
+    rows: usize,
+}
+
+impl FoldState {
+    /// Data rows the statistics summarize (seed rows included).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
 /// LRU cache of unit-space solutions ĥ keyed by query fingerprint.
 ///
 /// Owned by the caller (the daemon keeps one per model) because the
@@ -197,6 +221,9 @@ pub struct ProjectStats {
 pub struct WarmCache {
     cap: usize,
     tick: u64,
+    /// Mixed into every key (see [`WarmCache::set_salt`]): entries
+    /// written under one salt can never be found under another.
+    salt: u64,
     map: HashMap<u64, WarmEntry>,
 }
 
@@ -208,11 +235,28 @@ struct WarmEntry {
 
 impl WarmCache {
     pub fn new(cap: usize) -> WarmCache {
-        WarmCache { cap, tick: 0, map: HashMap::new() }
+        WarmCache { cap, tick: 0, salt: 0, map: HashMap::new() }
     }
 
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Set the key salt — the owning model's **factor epoch**. A cached
+    /// ĥ is only a valid warm start against the factors it was solved
+    /// with; after an in-place factor swap, a stale epoch-N seed leaking
+    /// into an epoch-N+1 sweep would start the solve from the wrong
+    /// basin. Salting the key (rather than trusting callers to flush)
+    /// makes the isolation structural: lookups under the new salt can
+    /// never see entries written under the old one.
+    pub fn set_salt(&mut self, salt: u64) {
+        self.salt = salt;
+    }
+
+    /// The query fingerprint mixed with the epoch salt (an FNV-1a-style
+    /// odd-prime multiply, a bijection — no extra collisions).
+    fn keyed(&self, fp: u64) -> u64 {
+        (fp ^ self.salt).wrapping_mul(0x0000_0100_0000_01b3)
     }
 
     pub fn len(&self) -> usize {
@@ -228,6 +272,7 @@ impl WarmCache {
     }
 
     fn get(&mut self, key: u64) -> Option<&[Elem]> {
+        let key = self.keyed(key);
         self.tick += 1;
         let t = self.tick;
         self.map.get_mut(&key).map(|e| {
@@ -240,6 +285,7 @@ impl WarmCache {
         if self.cap == 0 {
             return;
         }
+        let key = self.keyed(key);
         self.tick += 1;
         let t = self.tick;
         if let Some(e) = self.map.get_mut(&key) {
@@ -432,6 +478,29 @@ impl Projector {
     /// The cached Gram (K×K) — exposed for diagnostics/tests.
     pub fn gram(&self) -> &Mat {
         &self.gram
+    }
+
+    /// The thread pool this projector solves on — shared with a
+    /// successor projector when an online update rebuilds the factors
+    /// (one pool per model, across epochs).
+    pub fn pool(&self) -> Arc<ThreadPool> {
+        Arc::clone(&self.pool)
+    }
+
+    /// The factor panel in **original coordinates** (V×K): undoes the
+    /// unit-column normalization (`w_t = ŵ_t·‖w_t‖`; dead topics stay
+    /// zero). In raw modes the panel is stored unnormalized, so this is
+    /// a plain copy.
+    pub fn raw_w(&self) -> Mat {
+        let (v, k) = (self.v(), self.k());
+        let mut w = self.w_unit.clone();
+        for i in 0..v {
+            let row = w.row_mut(i);
+            for t in 0..k {
+                row[t] *= self.col_norm[t];
+            }
+        }
+        w
     }
 
     /// Micro-batch row ranges for an m-row batch: nnz-balanced for
@@ -938,6 +1007,149 @@ impl Projector {
             out.push(if a2 > 0.0 { (r2 / a2).sqrt() } else { 0.0 });
         }
         Ok(out)
+    }
+
+    /// Seed the online-update sufficient statistics from a trained
+    /// model's own mixtures `H` (D×K): `S = HᵀH` exactly, and
+    /// `P = A₀ᵀH ≈ W·S` — exact when the training residual is zero,
+    /// since `A₀ ≈ H·Wᵀ ⇒ A₀ᵀH ≈ W·(HᵀH)`. The training data itself is
+    /// never needed again (the limited-internal-memory frame).
+    pub fn fold_seed(&self, h: &Mat) -> Result<FoldState> {
+        let k = self.k();
+        if h.cols() != k {
+            bail!("fold seed H has {} columns, model expects K={k}", h.cols());
+        }
+        self.fold_resume(products::factor_gram(&self.pool, h), h.rows())
+    }
+
+    /// [`Projector::fold_seed`] from a pre-computed mixture Gram
+    /// `S = HᵀH` (K×K) and its row count — what the registry retains per
+    /// model (K² floats) so the full V×K `P` panel is only materialized
+    /// when a model actually receives its first update.
+    pub fn fold_resume(&self, s: Mat, rows: usize) -> Result<FoldState> {
+        let (v, k) = (self.v(), self.k());
+        if s.rows() != k || s.cols() != k {
+            bail!("fold seed S is {}x{}, model expects K={k}", s.rows(), s.cols());
+        }
+        let w = self.raw_w();
+        let mut p = Mat::zeros(v, k);
+        gemm(&self.pool, 1.0, w.view(), s.view(), GemmOp::Assign, &mut p.view_mut());
+        Ok(FoldState { s, p, rows })
+    }
+
+    /// Fold a batch of new data rows into the factors: project the rows
+    /// via warm-started NNLS (the serving hot path, unchanged), add
+    /// their **exact** sufficient statistics to `fold`, then refine `W`
+    /// with `w_sweeps` Gauss–Seidel HALS column updates against the
+    /// accumulated `(S, P)` — the FAST-HALS W half-sweep over *all* data
+    /// seen so far, without that data being resident. Returns the
+    /// updated raw `W` (build the successor [`Projector`] from it) and
+    /// the projection statistics.
+    ///
+    /// Spec-gated like `train-dist`: Frobenius-HALS, unregularized only
+    /// — the KL and elastic-net W subproblems need different kernels.
+    pub fn fold_in(
+        &self,
+        q: Queries<'_>,
+        fold: &mut FoldState,
+        warm: Option<&mut WarmCache>,
+        w_sweeps: usize,
+    ) -> Result<(Mat, ProjectStats)> {
+        if self.spec.loss != Loss::Frobenius || self.spec.alpha != 0.0 {
+            bail!(
+                "online update is spec-gated (like train-dist): Frobenius-HALS \
+                 unregularized only, got loss '{}' with alpha {}",
+                self.spec.loss.name(),
+                self.spec.alpha
+            );
+        }
+        if w_sweeps == 0 {
+            bail!("update needs w_sweeps >= 1 (0 would leave W untouched)");
+        }
+        let (v, k, m) = (self.v(), self.k(), q.rows());
+        if m == 0 {
+            bail!("update needs at least one data row");
+        }
+        if fold.s.rows() != k || fold.s.cols() != k || fold.p.rows() != v || fold.p.cols() != k
+        {
+            bail!(
+                "fold state is S {}x{} / P {}x{}, model expects S {k}x{k} / P {v}x{k}",
+                fold.s.rows(),
+                fold.s.cols(),
+                fold.p.rows(),
+                fold.p.cols()
+            );
+        }
+        // 1. Mixtures for the new rows — the existing projection path,
+        //    warm starts included (shape errors surface here too).
+        let (h1, stats) = self.project_with(q, None, warm)?;
+
+        // 2. Exact statistics of the new batch: S += H₁ᵀH₁, P += QᵀH₁.
+        let s1 = products::factor_gram(&self.pool, &h1);
+        for t in 0..k {
+            let srow = fold.s.row_mut(t);
+            for (x, &y) in srow.iter_mut().zip(s1.row(t)) {
+                *x += y;
+            }
+        }
+        match q {
+            Queries::Sparse(a) => {
+                for i in 0..m {
+                    let (cols, vals) = a.row(i);
+                    let hrow = h1.row(i);
+                    for (&c, &av) in cols.iter().zip(vals) {
+                        let prow = fold.p.row_mut(c as usize);
+                        for t in 0..k {
+                            prow[t] += av * hrow[t];
+                        }
+                    }
+                }
+            }
+            Queries::Dense(qm) => {
+                for i in 0..m {
+                    let hrow = h1.row(i);
+                    for (vi, &av) in qm.row(i).iter().enumerate() {
+                        if av != 0.0 {
+                            let prow = fold.p.row_mut(vi);
+                            for t in 0..k {
+                                prow[t] += av * hrow[t];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        fold.rows += m;
+
+        // 3. W half-sweeps: Gauss–Seidel per column against the cached
+        //    product WS (rank-1-refreshed after each column update), the
+        //    exact coordinate step `w_t ← max(0, w_t + (P_t − (WS)_t)/S_tt)`.
+        let mut w = self.raw_w();
+        let mut ws = Mat::zeros(v, k);
+        gemm(&self.pool, 1.0, w.view(), fold.s.view(), GemmOp::Assign, &mut ws.view_mut());
+        for _ in 0..w_sweeps {
+            for t in 0..k {
+                let stt = fold.s.at(t, t);
+                if stt <= 1e-12 {
+                    continue; // dead topic: no data mass to update against
+                }
+                let srow: Vec<Elem> = fold.s.row(t).to_vec();
+                for vi in 0..v {
+                    let cur = w.at(vi, t);
+                    let new =
+                        (cur + (fold.p.at(vi, t) - ws.at(vi, t)) / stt).max(0.0);
+                    let d = new - cur;
+                    if d != 0.0 {
+                        *w.at_mut(vi, t) = new;
+                        let wsrow = ws.row_mut(vi);
+                        for (x, &sv) in wsrow.iter_mut().zip(&srow) {
+                            *x += d * sv;
+                        }
+                    }
+                }
+            }
+        }
+        Ok((w, stats))
     }
 
     /// Project a batch and return, per query, the top-N items by
@@ -1598,5 +1810,178 @@ mod tests {
         let (_, res) = p.project_with_residuals(Queries::Dense(&q)).unwrap();
         assert_eq!(res[1], 0.0);
         assert!(res.iter().all(|r| r.is_finite()));
+    }
+
+    #[test]
+    fn warm_cache_salt_isolates_epochs() {
+        // Regression (stale warm starts across factor swaps): an entry
+        // written under epoch N must be invisible under epoch N+1, and
+        // reappear if the salt rolls back — proving the isolation is in
+        // the key, not in a flush the caller might forget.
+        let mut cache = WarmCache::new(8);
+        cache.put(42, vec![1.0, 2.0]);
+        assert!(cache.get(42).is_some(), "own-epoch lookup must hit");
+        cache.set_salt(1);
+        assert!(cache.get(42).is_none(), "epoch-0 entry leaked into epoch 1");
+        cache.put(42, vec![9.0]);
+        assert_eq!(cache.get(42).unwrap(), &[9.0][..]);
+        cache.set_salt(0);
+        assert_eq!(
+            cache.get(42).unwrap(),
+            &[1.0, 2.0][..],
+            "epoch-0 entry must survive under its own salt"
+        );
+    }
+
+    /// `XᵀY` in f64, cast down — the exact reference for fold statistics.
+    fn xty(x: &Mat, y: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.cols(), y.cols());
+        for r in 0..x.cols() {
+            for c in 0..y.cols() {
+                let mut s = 0.0f64;
+                for i in 0..x.rows() {
+                    s += x.at(i, r) as f64 * y.at(i, c) as f64;
+                }
+                *out.at_mut(r, c) = s as Elem;
+            }
+        }
+        out
+    }
+
+    /// `X·Yᵀ` in f64, cast down — synthesizes exact-rank data batches.
+    fn xyt(x: &Mat, y: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows(), y.rows());
+        for r in 0..x.rows() {
+            for c in 0..y.rows() {
+                let mut s = 0.0f64;
+                for t in 0..x.cols() {
+                    s += x.at(r, t) as f64 * y.at(c, t) as f64;
+                }
+                *out.at_mut(r, c) = s as Elem;
+            }
+        }
+        out
+    }
+
+    /// The fold-in W half-sweep, re-stated locally: Gauss–Seidel column
+    /// updates against (S, P) with a rank-1-refreshed WS product.
+    fn hals_w_sweeps(w: &mut Mat, s: &Mat, p: &Mat, sweeps: usize) {
+        let (v, k) = (w.rows(), w.cols());
+        let mut ws = Mat::zeros(v, k);
+        for vi in 0..v {
+            for c in 0..k {
+                let mut acc = 0.0f64;
+                for t in 0..k {
+                    acc += w.at(vi, t) as f64 * s.at(t, c) as f64;
+                }
+                *ws.at_mut(vi, c) = acc as Elem;
+            }
+        }
+        for _ in 0..sweeps {
+            for t in 0..k {
+                let stt = s.at(t, t);
+                if stt <= 1e-12 {
+                    continue;
+                }
+                for vi in 0..v {
+                    let cur = w.at(vi, t);
+                    let new = (cur + (p.at(vi, t) - ws.at(vi, t)) / stt).max(0.0);
+                    let d = new - cur;
+                    if d != 0.0 {
+                        *w.at_mut(vi, t) = new;
+                        for c in 0..k {
+                            *ws.at_mut(vi, c) += d * s.at(t, c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_in_matches_offline_refit_on_concatenated_data() {
+        // Exact-rank setup: A₀ = H₀·W₀ᵀ trains the model, Q₁ = H₁·W₀ᵀ
+        // arrives online. The incremental path (seeded statistics +
+        // fold_in) must land within 2e-3 of an offline refit from the
+        // *exact* concatenated statistics S = [H₀;Ĥ₁]ᵀ[H₀;Ĥ₁],
+        // P = [A₀;Q₁]ᵀ[H₀;Ĥ₁] — the seed's P₀ = W·S₀ shortcut is exact
+        // here because the training residual is zero.
+        let mut rng = Pcg32::seeded(131);
+        let (v, k, d0, m1) = (30usize, 4usize, 40usize, 12usize);
+        let w0 = Mat::random(v, k, &mut rng, 0.1, 1.0);
+        let h0 = Mat::random(d0, k, &mut rng, 0.0, 1.0);
+        let h1_true = Mat::random(m1, k, &mut rng, 0.0, 1.0);
+        let a0 = xyt(&h0, &w0);
+        let q1 = xyt(&h1_true, &w0);
+
+        let p = Projector::new(
+            w0.clone(),
+            pool(2),
+            ProjectorOpts { sweeps: 100, micro_batch: 4, ..Default::default() },
+        )
+        .unwrap();
+        // Round-trip sanity: raw_w undoes the unit normalization.
+        assert!(p.raw_w().max_abs_diff(&w0) < 1e-4);
+
+        let mut fold = p.fold_seed(&h0).unwrap();
+        assert_eq!(fold.rows(), d0);
+        let sweeps = 50;
+        let (w_inc, _) = p.fold_in(Queries::Dense(&q1), &mut fold, None, sweeps).unwrap();
+        assert_eq!(fold.rows(), d0 + m1);
+
+        // Offline reference: identical projection of the batch, exact
+        // statistics straight from the concatenated data.
+        let (h1, _) = p.project_with(Queries::Dense(&q1), None, None).unwrap();
+        let mut s_all = xty(&h0, &h0);
+        let s1 = xty(&h1, &h1);
+        let mut p_all = xty(&a0, &h0);
+        let p1 = xty(&q1, &h1);
+        for r in 0..k {
+            for c in 0..k {
+                *s_all.at_mut(r, c) += s1.at(r, c);
+            }
+        }
+        for r in 0..v {
+            for c in 0..k {
+                *p_all.at_mut(r, c) += p1.at(r, c);
+            }
+        }
+        let mut w_ref = w0.clone();
+        hals_w_sweeps(&mut w_ref, &s_all, &p_all, sweeps);
+
+        assert!(
+            w_inc.max_abs_diff(&w_ref) < 2e-3,
+            "incremental vs offline refit diverged: {}",
+            w_inc.max_abs_diff(&w_ref)
+        );
+        // And the update genuinely moved the factors toward the new data.
+        assert!(w_inc.max_abs_diff(&w0) > 0.0);
+    }
+
+    #[test]
+    fn fold_in_is_spec_gated_and_validates_inputs() {
+        let (w, q) = random_problem(20, 4, 5, 7);
+        let opts = ProjectorOpts { sweeps: 30, ..Default::default() };
+        let h_seed = Mat::random(6, 4, &mut Pcg32::seeded(8), 0.0, 1.0);
+
+        // KL and regularized specs must refuse the Frobenius-only path.
+        for spec in [kl_spec(0.0, 0.0), EngineSpec { alpha: 0.5, l1_ratio: 0.5, ..Default::default() }] {
+            let p = Projector::with_spec(w.clone(), pool(1), opts, spec).unwrap();
+            let mut fold = p.fold_seed(&h_seed).unwrap();
+            let err = p
+                .fold_in(Queries::Dense(&q), &mut fold, None, 10)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("spec-gated"), "unexpected gate message: {err}");
+        }
+
+        // Shape / degenerate-input validation on the default spec.
+        let p = Projector::new(w, pool(1), opts).unwrap();
+        let bad_seed = Mat::zeros(6, 3);
+        assert!(p.fold_seed(&bad_seed).is_err(), "K-mismatched seed must fail");
+        let mut fold = p.fold_seed(&h_seed).unwrap();
+        assert!(p.fold_in(Queries::Dense(&q), &mut fold, None, 0).is_err(), "0 sweeps");
+        let empty = Mat::zeros(0, 20);
+        assert!(p.fold_in(Queries::Dense(&empty), &mut fold, None, 5).is_err(), "empty batch");
     }
 }

@@ -41,6 +41,15 @@
 //! surviving models are never interrupted (entries are `Arc`-shared with
 //! their callers).
 //!
+//! Beyond reload-from-disk, models are updatable **in place**:
+//! [`ModelRegistry::update`] folds a batch of new data rows into a
+//! model's factors (warm-started NNLS for the mixtures, then HALS W
+//! refinement over accumulated sufficient statistics — the
+//! limited-internal-memory frame) and atomically publishes the result
+//! as factor **epoch N+1** behind the same `Arc` seam the hot-reload
+//! path uses: in-flight requests finish on epoch N, new dispatches see
+//! N+1, nothing is dropped.
+//!
 //! Admission is **nnz-aware**: every model is weighed by the non-zero
 //! count of its `W` factor, and a budget (`max_total_nnz`, 0 = unlimited)
 //! rejects loads that would blow the resident-factor footprint — the
@@ -50,15 +59,18 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::SystemTime;
 
 use anyhow::{anyhow, bail, Context};
 
 use crate::linalg::Mat;
+use crate::nmf::products;
 use crate::nmf::spec::{EngineSpec, Loss, Solver};
+use crate::nmf::Factors;
 use crate::parallel::ThreadPool;
 use crate::serve::model_io::{load_model, ModelMeta};
-use crate::serve::projector::{ProjectStats, Projector, ProjectorOpts, Queries, WarmCache};
+use crate::serve::projector::{
+    FoldState, ProjectStats, Projector, ProjectorOpts, Queries, WarmCache,
+};
 use crate::util::json::Json;
 use crate::{Elem, Result};
 
@@ -135,7 +147,20 @@ pub struct Manifest {
 impl Manifest {
     pub fn parse(src: &str, base_dir: &Path) -> Result<Manifest> {
         let j = Json::parse(src).map_err(|e| anyhow!("manifest: {e}"))?;
-        let format = j.get("format").as_str().unwrap_or("");
+        // Distinguish the three failure shapes loudly: a *missing* key
+        // (probably not a manifest at all), a non-string value (malformed
+        // manifest), and a wrong marker (some other file format). The
+        // old `unwrap_or("")` collapsed the first into a baffling
+        // "format '', expected …".
+        let format = match j.get("format") {
+            Json::Null => bail!(
+                "not a plnmf manifest: missing \"format\" key (expected \
+                 \"format\": \"{MANIFEST_FORMAT}\")"
+            ),
+            v => v.as_str().ok_or_else(|| {
+                anyhow!("manifest \"format\" must be a string, got {v}")
+            })?,
+        };
         if format != MANIFEST_FORMAT {
             bail!("not a plnmf manifest (format '{format}', expected '{MANIFEST_FORMAT}')");
         }
@@ -245,6 +270,9 @@ pub struct RegistryOpts {
     /// Admission budget in `W` non-zeros (0 = unlimited). A manifest's
     /// `max_total_nnz` overrides this when set.
     pub max_total_nnz: usize,
+    /// HALS W-refinement sweeps per online `update` batch (when the
+    /// request doesn't say); see [`ModelRegistry::update`].
+    pub update_sweeps: usize,
 }
 
 impl Default for RegistryOpts {
@@ -255,6 +283,7 @@ impl Default for RegistryOpts {
             projector: ProjectorOpts::default(),
             warm_cache: 256,
             max_total_nnz: 0,
+            update_sweeps: 20,
         }
     }
 }
@@ -328,6 +357,10 @@ impl ModelStats {
 struct ModelState {
     warm: WarmCache,
     stats: ModelStats,
+    /// Online-update sufficient statistics, materialized (V×K) on the
+    /// first `update` from the K×K seed retained on the entry, then
+    /// carried across epochs as each update publishes a successor.
+    fold: Option<FoldState>,
 }
 
 /// A loaded, servable model: projector + pool + queue + warm cache.
@@ -337,7 +370,21 @@ pub struct ModelEntry {
     meta: ModelMeta,
     /// Non-zero entries of `W` — the admission weight.
     nnz: usize,
-    loaded_mtime: Option<SystemTime>,
+    /// Content fingerprint of the model file at load time (length +
+    /// FNV-1a); `None` when the file could not be read back. Mtimes are
+    /// not good enough for the reload rebuild test: a rewrite within
+    /// mtime granularity — or a file whose metadata read fails — must
+    /// still count as changed.
+    loaded_fp: Option<u64>,
+    /// Factor epoch: bumped each time an online update publishes a
+    /// successor entry. Freshly loaded models start at the epoch saved
+    /// in the model file (0 for a plain train).
+    epoch: u64,
+    /// Mixture Gram `H₀ᵀH₀` of the model file's own training mixtures —
+    /// the K² -sized seed from which update statistics resume.
+    seed_s: Mat,
+    /// Training rows behind `seed_s`.
+    seed_rows: usize,
     projector: Projector,
     /// Serializes solves on this model: the projector's pool is
     /// fork/join (non-reentrant), so concurrent requests queue here and
@@ -348,6 +395,11 @@ pub struct ModelEntry {
 impl ModelEntry {
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The factor epoch these factors were published at.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn path(&self) -> &Path {
@@ -418,6 +470,9 @@ impl ModelEntry {
             ("tile", Json::num(self.projector.tile() as f64)),
             ("threads", Json::num(self.projector.threads() as f64)),
             ("nnz", Json::num(self.nnz as f64)),
+            // Which factor version answers queries right now — clients
+            // watch this to confirm an online update took effect.
+            ("epoch", Json::num(self.epoch as f64)),
             ("warm_cache_entries", Json::num(st.warm.len() as f64)),
             ("requests", Json::num(s.requests as f64)),
             ("warm_hits", Json::num(s.warm_hits as f64)),
@@ -549,26 +604,36 @@ impl ModelRegistry {
         let spec = ovr
             .apply(meta.spec)
             .with_context(|| format!("serving spec for model '{name}'"))?;
-        let nnz = factors.w.data().iter().filter(|&&x| x != 0.0).count();
+        let Factors { w, h } = factors;
+        let nnz = w.data().iter().filter(|&&x| x != 0.0).count();
 
         // Build the projector before taking any lock (the Gram build is
         // the expensive part); admission is then checked under the same
         // write lock that inserts, so two concurrent loads cannot both
         // read the old resident total and jointly blow the budget.
-        let loaded_mtime = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        let loaded_fp = file_fingerprint(path);
         let pool = Arc::new(ThreadPool::new(self.per_model_threads()));
-        let projector = Projector::with_spec(factors.w, pool, self.opts.projector, spec)
+        let projector = Projector::with_spec(w, pool, self.opts.projector, spec)
             .with_context(|| format!("building projector for '{name}'"))?;
+        // The update seed: K×K now, the V×K panel only on first update.
+        let seed_s = products::factor_gram(&projector.pool(), &h);
+        let epoch = meta.epoch;
+        let mut warm = WarmCache::new(self.opts.warm_cache);
+        warm.set_salt(epoch);
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             path: path.to_path_buf(),
             meta,
             nnz,
-            loaded_mtime,
+            loaded_fp,
+            epoch,
+            seed_s,
+            seed_rows: h.rows(),
             projector,
             state: Mutex::new(ModelState {
-                warm: WarmCache::new(self.opts.warm_cache),
+                warm,
                 stats: ModelStats::default(),
+                fold: None,
             }),
         });
         {
@@ -656,9 +721,14 @@ impl ModelRegistry {
             let needs_load = match self.models.read().unwrap().get(&m.name) {
                 None => true,
                 Some(e) => {
-                    let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
+                    // Content fingerprint, not mtime: an in-place rewrite
+                    // within mtime granularity must still rebuild, and an
+                    // unreadable file counts as changed so the load path
+                    // surfaces the real error loudly.
+                    let fp = file_fingerprint(&m.path);
                     e.path != m.path
-                        || (mtime.is_some() && mtime != e.loaded_mtime)
+                        || fp.is_none()
+                        || fp != e.loaded_fp
                         // Rebuild when the entry's spec override now
                         // resolves to a different serving spec.
                         || m.spec.apply(e.meta.spec).ok() != Some(e.projector.spec())
@@ -671,6 +741,118 @@ impl ModelRegistry {
         }
         crate::info!("registry: applied manifest version {}", manifest.version);
         Ok(true)
+    }
+
+    /// Fold a batch of new data rows into a served model's factors and
+    /// **atomically publish the result as epoch N+1** — the in-memory
+    /// half of hot reload. The solve runs on the model's own queue (so
+    /// it serializes with in-flight transforms on the *current* entry,
+    /// exactly like a big transform would), the successor projector is
+    /// built on the same thread pool, and the swap is a single map
+    /// insert: requests that already hold the epoch-N `Arc` finish on
+    /// epoch N, every later dispatch sees N+1. Nothing is dropped.
+    ///
+    /// `sweeps` (W refinement passes over the accumulated statistics)
+    /// defaults to [`RegistryOpts::update_sweeps`]. Updates are
+    /// in-memory only: the model *file* still holds the trained factors,
+    /// and a daemon restart starts over from it — durability comes from
+    /// retraining and republishing through the manifest path.
+    pub fn update(
+        &self,
+        name: &str,
+        q: Queries<'_>,
+        sweeps: Option<usize>,
+    ) -> Result<UpdateOutcome> {
+        let sweeps = sweeps.unwrap_or(self.opts.update_sweeps);
+        let entry = self.get(name)?;
+        let docs = q.rows();
+        let mut st = entry.state.lock().unwrap();
+        let state = &mut *st;
+        let mut fold = match state.fold.take() {
+            Some(f) => f,
+            None => entry
+                .projector
+                .fold_resume(entry.seed_s.clone(), entry.seed_rows)
+                .with_context(|| format!("seeding update statistics for '{name}'"))?,
+        };
+        let warm = if state.warm.capacity() > 0 { Some(&mut state.warm) } else { None };
+        let (w_new, ps) = match entry.projector.fold_in(q, &mut fold, warm, sweeps) {
+            Ok(x) => x,
+            Err(e) => {
+                // fold_in bails before touching the statistics — keep
+                // them for the next attempt.
+                state.fold = Some(fold);
+                return Err(e).with_context(|| format!("updating model '{name}'"));
+            }
+        };
+        state.stats.record(docs, &ps);
+        let rows_seen = fold.rows();
+        let epoch = entry.epoch + 1;
+        let nnz = w_new.data().iter().filter(|&&x| x != 0.0).count();
+        let projector = Projector::with_spec(
+            w_new,
+            entry.projector.pool(),
+            self.opts.projector,
+            entry.projector.spec(),
+        )
+        .with_context(|| format!("rebuilding projector for '{name}' at epoch {epoch}"))?;
+        // Fresh warm cache salted with the new epoch: stale epoch-N
+        // seeds are structurally unreachable (see WarmCache::set_salt).
+        let mut warm = WarmCache::new(self.opts.warm_cache);
+        warm.set_salt(epoch);
+        let successor = Arc::new(ModelEntry {
+            name: entry.name.clone(),
+            path: entry.path.clone(),
+            meta: {
+                let mut m = entry.meta.clone();
+                m.epoch = epoch;
+                m
+            },
+            nnz,
+            loaded_fp: entry.loaded_fp,
+            epoch,
+            seed_s: entry.seed_s.clone(),
+            seed_rows: entry.seed_rows,
+            projector,
+            state: Mutex::new(ModelState { warm, stats: state.stats, fold: Some(fold) }),
+        });
+        let published = (|| -> Result<()> {
+            let mut models = self.models.write().unwrap();
+            match models.get(name) {
+                Some(cur) if Arc::ptr_eq(cur, &entry) => {}
+                _ => bail!(
+                    "model '{name}' was replaced or unloaded mid-update; \
+                     discarding the stale result"
+                ),
+            }
+            let budget = self.admission_budget();
+            if budget > 0 {
+                let resident: usize = models
+                    .iter()
+                    .filter(|(n, _)| n.as_str() != name)
+                    .map(|(_, e)| e.nnz)
+                    .sum();
+                if resident + nnz > budget {
+                    bail!(
+                        "admission: updated '{name}' ({nnz} W non-zeros) would exceed \
+                         the registry budget ({resident} resident of {budget})"
+                    );
+                }
+            }
+            models.insert(name.to_string(), Arc::clone(&successor));
+            Ok(())
+        })();
+        if let Err(e) = published {
+            // The successor was never published (we are its only owner)
+            // — reclaim the statistics so the next update resumes them.
+            state.fold = successor.state.lock().unwrap().fold.take();
+            return Err(e);
+        }
+        crate::info!(
+            "registry: published '{name}' epoch {epoch} (+{docs} rows, {rows_seen} total, \
+             nnz={nnz})"
+        );
+        Ok(UpdateOutcome { epoch, rows_seen, stats: ps })
     }
 
     /// Per-model stats as a JSON object keyed by model name.
@@ -686,6 +868,31 @@ impl ModelRegistry {
         };
         Json::Obj(entries.into_iter().map(|(n, e)| (n, e.stats_json())).collect())
     }
+}
+
+/// Outcome of an online [`ModelRegistry::update`].
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateOutcome {
+    /// The factor epoch the update published (predecessor + 1).
+    pub epoch: u64,
+    /// Total data rows the model's statistics now summarize (training
+    /// seed + every folded batch).
+    pub rows_seen: usize,
+    /// Projection stats of the folded batch.
+    pub stats: ProjectStats,
+}
+
+/// Content fingerprint of a file: FNV-1a over the bytes, mixed with the
+/// length. `None` when the file cannot be read — callers treat that as
+/// "changed", so the subsequent load surfaces the real error loudly
+/// instead of silently serving stale factors.
+pub fn file_fingerprint(path: &Path) -> Option<u64> {
+    let bytes = std::fs::read(path).ok()?;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in &bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Some(h ^ (bytes.len() as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
 }
 
 /// Serialize a manifest (helper for tools/tests writing fleets).
@@ -839,6 +1046,107 @@ mod tests {
         ] {
             assert!(Manifest::parse(bad, base).is_err(), "should reject {bad}");
         }
+    }
+
+    #[test]
+    fn manifest_format_errors_name_the_actual_problem() {
+        let base = Path::new("/models");
+        // Missing key: the error must say so, not claim "format ''".
+        let err = format!(
+            "{:#}",
+            Manifest::parse(r#"{"version": 1, "models": []}"#, base).unwrap_err()
+        );
+        assert!(err.contains("missing \"format\" key"), "{err}");
+        assert!(!err.contains("format ''"), "must not report an empty format: {err}");
+        // Non-string value: a type error, not a marker mismatch.
+        let err = format!(
+            "{:#}",
+            Manifest::parse(r#"{"format": 3, "version": 1, "models": []}"#, base)
+                .unwrap_err()
+        );
+        assert!(err.contains("must be a string"), "{err}");
+        // Wrong value: the classic mismatch message, unchanged.
+        let err = format!(
+            "{:#}",
+            Manifest::parse(r#"{"format": "other", "version": 1, "models": []}"#, base)
+                .unwrap_err()
+        );
+        assert!(err.contains("format 'other'"), "{err}");
+        assert!(err.contains(MANIFEST_FORMAT), "{err}");
+    }
+
+    #[test]
+    fn reload_detects_same_mtime_rewrite() {
+        // Regression: a model file rewritten in place *with its mtime
+        // restored* (or within mtime granularity) must still rebuild on
+        // the next manifest version bump — the content fingerprint, not
+        // the timestamp, is what decides.
+        let dir = tmpdir("samemtime");
+        let a = write_model(&dir, "a.json", 20, 3, 5);
+        let man = dir.join("manifest.json");
+        std::fs::write(&man, manifest_json(1, 0, &[("a", "a.json")]).pretty()).unwrap();
+        let reg = ModelRegistry::from_manifest(&man, small_opts()).unwrap();
+        let before = reg.get("a").unwrap();
+
+        // Rewrite with different factors, then forge the original mtime.
+        let orig_mtime = std::fs::metadata(&a).unwrap().modified().unwrap();
+        write_model(&dir, "a.json", 20, 3, 99);
+        let f = std::fs::OpenOptions::new().write(true).open(&a).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_modified(orig_mtime)).unwrap();
+        drop(f);
+        assert_eq!(
+            std::fs::metadata(&a).unwrap().modified().unwrap(),
+            orig_mtime,
+            "test setup: mtime must be restored for the regression to bite"
+        );
+
+        std::fs::write(&man, manifest_json(2, 0, &[("a", "a.json")]).pretty()).unwrap();
+        assert!(reg.reload_manifest().unwrap());
+        let after = reg.get("a").unwrap();
+        assert!(
+            !Arc::ptr_eq(&before, &after),
+            "same-mtime rewrite must rebuild the entry"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn update_publishes_new_epoch_without_touching_in_flight_entries() {
+        let dir = tmpdir("update");
+        let p = write_model(&dir, "a.json", 20, 4, 11);
+        let reg = ModelRegistry::new(RegistryOpts {
+            projector: ProjectorOpts { sweeps: 50, ..Default::default() },
+            ..small_opts()
+        });
+        let before = reg.load("a", &p).unwrap();
+        assert_eq!(before.epoch(), 0);
+        let q = Mat::from_fn(5, 20, |i, j| ((i * 3 + j) % 4) as Elem);
+        let h_before = before.transform(Queries::Dense(&q), false).unwrap().0;
+
+        let out = reg.update("a", Queries::Dense(&q), None).unwrap();
+        assert_eq!(out.epoch, 1);
+        assert_eq!(out.rows_seen, 6 + 5, "training seed rows + folded batch");
+
+        let after = reg.get("a").unwrap();
+        assert!(!Arc::ptr_eq(&before, &after), "update must publish a successor");
+        assert_eq!(after.epoch(), 1);
+        assert_eq!(after.meta().epoch, 1);
+        assert!(after.stats_json().to_string().contains("\"epoch\""));
+        // The folded data moved the factors: same query, different answer.
+        let h_after = after.transform(Queries::Dense(&q), false).unwrap().0;
+        assert!(h_before.max_abs_diff(&h_after) > 0.0);
+        // The epoch-N entry still answers — in-flight requests holding
+        // its Arc are untouched by the swap.
+        let h_old = before.transform(Queries::Dense(&q), false).unwrap().0;
+        assert_eq!(h_old, h_before);
+        // Chained updates keep advancing.
+        let out2 = reg.update("a", Queries::Dense(&q), Some(5)).unwrap();
+        assert_eq!(out2.epoch, 2);
+        assert_eq!(out2.rows_seen, 6 + 5 + 5);
+        // Unknown models refuse loudly (the spec gate is covered by the
+        // projector's fold_in tests).
+        assert!(reg.update("nope", Queries::Dense(&q), None).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -45,9 +45,22 @@
 //!   peeks op + model out of the fixed header, lazily negotiates v2 on
 //!   the pooled worker connection, and relays bytes untouched — so the
 //!   least-loaded/retry/backpressure logic is framing-agnostic.
+//! * `update` — **fanned out to every replica** of its model's shard,
+//!   in index order: each replica holds its own copy of the factors,
+//!   so a mutation must reach all of them to keep factor epochs in
+//!   lock-step (a least-loaded pick would fork the replicas' state).
+//!   The op is non-idempotent — a replica whose response was lost may
+//!   already have folded the batch in — so it is **never retried**,
+//!   and it bypasses the busy ceiling (rare control-plane traffic;
+//!   shedding one under load would silently fork epochs). The fan-out
+//!   stops at the first failure and reports `"retryable": false`:
+//!   earlier replicas already applied the batch, so re-sync by
+//!   republishing the model (or re-send once the fleet is whole and
+//!   accept the extra fold on the replicas that already took it).
 //! * `stats` — aggregated: the per-model stats of every replica merged
-//!   (counters summed, averages recomputed) plus a `workers` health map
-//!   with per-replica liveness and queue depth.
+//!   (counters summed, averages recomputed, structural fields like the
+//!   factor `epoch` kept from the first replica) plus a `workers`
+//!   health map with per-replica liveness and queue depth.
 //! * `ping` — local, with per-replica liveness per shard
 //!   (`up` = any replica live, `up_replicas`/`replicas` = k of N).
 //! * `load` (bare) — manifest re-read, as in the single daemon.
@@ -94,11 +107,11 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant, SystemTime};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
-use crate::serve::registry::{Manifest, SpecOverride};
+use crate::serve::registry::{file_fingerprint, Manifest, SpecOverride};
 use crate::serve::server::{parse_request, Client};
 use crate::serve::wire::{
     self, err_json, handle_hello, ok_obj, read_wire, serve_wire, ConnState, WirePayload,
@@ -251,8 +264,10 @@ fn retry_after_hint_ms(ceiling: usize) -> u64 {
 /// ambiguous, closed-mid-response) forward is safe. `transform` and
 /// `recommend` are pure reads of model state — the warm-cache fill is
 /// an internal optimization, not client-visible state — so a duplicate
-/// execution is harmless. Any future mutating op must be left off this
-/// list: it falls through to the fail-fast path.
+/// execution is harmless. Mutating ops stay off this list: `update`
+/// folds the batch into the factors, so a duplicate execution double-
+/// counts it (update takes the [`Shard::route_all`] fan-out path, which
+/// never retries at all).
 fn op_is_idempotent(op: &str) -> bool {
     matches!(op, "transform" | "recommend")
 }
@@ -283,7 +298,11 @@ struct ReplicaState {
     /// Earliest instant the supervisor may attempt the next restart.
     next_restart_at: Option<Instant>,
     backoff: Duration,
-    loaded_mtime: Option<SystemTime>,
+    /// Content fingerprint ([`file_fingerprint`]) of the model file
+    /// this replica's worker loaded — NOT an mtime: an in-place rewrite
+    /// within the filesystem's timestamp granularity (or with a
+    /// restored mtime) must still read as changed on reload.
+    loaded_fp: Option<u64>,
 }
 
 /// One worker process (or external endpoint) serving one copy of a
@@ -305,14 +324,14 @@ struct Replica {
 
 impl Replica {
     /// `worker` is the supervised child process (None for external
-    /// endpoints); `loaded_mtime` the mtime of the model file it
-    /// loaded. The one constructor keeps supervised and external
-    /// replicas field-for-field identical.
+    /// endpoints); `loaded_fp` the content fingerprint of the model
+    /// file it loaded. The one constructor keeps supervised and
+    /// external replicas field-for-field identical.
     fn new(
         idx: usize,
         addr: SocketAddr,
         worker: Option<ManagedWorker>,
-        loaded_mtime: Option<SystemTime>,
+        loaded_fp: Option<u64>,
         opts: &RouterOpts,
     ) -> Replica {
         Replica {
@@ -325,7 +344,7 @@ impl Replica {
                 up: true,
                 next_restart_at: None,
                 backoff: opts.restart_backoff,
-                loaded_mtime,
+                loaded_fp,
             }),
             in_flight: AtomicUsize::new(0),
             restarts: AtomicU64::new(0),
@@ -595,6 +614,54 @@ impl Shard {
             }
         }
     }
+
+    /// Forward one raw `update` frame to **every** replica, in index
+    /// order (see [`Self::route_all_with`]).
+    fn route_all(&self, payload: &WirePayload) -> Result<WirePayload> {
+        self.route_all_with(|idx| self.replicas[idx].forward_wire(payload))
+    }
+
+    /// [`Self::route_all`] with the forward injected — the `update`
+    /// fan-out, testable without sockets. Each replica holds its own
+    /// copy of the factors, so a mutation must reach all of them to
+    /// keep factor epochs in lock-step; the fleet must be whole before
+    /// any forward happens (a down replica fails the request *before*
+    /// the first fold, so nothing forks). The in-flight counter is
+    /// held around each forward (the least-loaded pick for concurrent
+    /// reads sees the update as load) but the busy ceiling is NOT
+    /// enforced: shedding an update under read load would silently
+    /// fork epochs. Non-transactional: a mid-fan-out failure stops the
+    /// sequence and the error says how to re-sync. On success every
+    /// replica answered identically (same batch folded into the same
+    /// factors); the first replica's response is returned.
+    fn route_all_with<R>(&self, mut forward: impl FnMut(usize) -> Result<R>) -> Result<R> {
+        if let Some(idx) = self.replicas.iter().position(|r| !r.is_up()) {
+            bail!(
+                "replica {idx} of {} is down (restart pending) — the update fan-out \
+                 needs every replica live; retry once the fleet is whole",
+                self.replicas.len()
+            );
+        }
+        let mut first: Option<R> = None;
+        for (idx, replica) in self.replicas.iter().enumerate() {
+            replica.in_flight.fetch_add(1, Ordering::SeqCst);
+            let res = forward(idx);
+            replica.in_flight.fetch_sub(1, Ordering::SeqCst);
+            match res {
+                Ok(resp) => first = Some(first.unwrap_or(resp)),
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "update fan-out stopped at replica {idx} of {} — the {idx} \
+                         earlier replica(s) already folded the batch in; republish \
+                         the model (or re-send the update once the fleet is whole) \
+                         to re-sync factor epochs",
+                        self.replicas.len()
+                    )));
+                }
+            }
+        }
+        first.ok_or_else(|| anyhow!("shard '{}' has no replicas", self.name))
+    }
 }
 
 struct Shared {
@@ -842,14 +909,13 @@ fn start_shard(
         {
             Ok(worker) => {
                 let addr = worker.addr();
-                let loaded_mtime =
-                    std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
+                let loaded_fp = file_fingerprint(model_path);
                 crate::info!("route: shard '{name}' replica {idx} up on {addr}");
                 replicas.push(Arc::new(Replica::new(
                     idx,
                     addr,
                     Some(worker),
-                    loaded_mtime,
+                    loaded_fp,
                     opts,
                 )));
             }
@@ -1022,8 +1088,7 @@ fn supervise_replica(ctl: &Control, shard: &Shard, replica: &Replica) {
             st.up = true;
             st.next_restart_at = None;
             st.backoff = ctl.opts.restart_backoff; // became ready: reset
-            st.loaded_mtime =
-                std::fs::metadata(model_path).and_then(|m| m.modified()).ok();
+            st.loaded_fp = file_fingerprint(model_path);
             let n = replica.restarts.fetch_add(1, Ordering::SeqCst) + 1;
             crate::info!(
                 "route: worker '{}' replica {} restarted on {} (restart #{n})",
@@ -1108,14 +1173,18 @@ fn reload_manifest(ctl: &Control) -> Result<bool> {
         let needs_start = match &existing {
             None => true,
             Some(s) => {
-                let mtime = std::fs::metadata(&m.path).and_then(|x| x.modified()).ok();
+                // Content fingerprint, not mtime: an in-place rewrite
+                // within the filesystem's timestamp granularity must
+                // still restart the shard. An unreadable file (fp =
+                // None) reads as changed so the restart surfaces the
+                // real I/O error loudly instead of silently serving
+                // stale factors.
+                let fp = file_fingerprint(&m.path);
                 s.model_path.as_deref() != Some(m.path.as_path())
                     || s.spec != m.spec
                     || s.replicas.len() != m.replicas
-                    || (mtime.is_some()
-                        && s.replicas
-                            .iter()
-                            .any(|r| r.state.lock().unwrap().loaded_mtime != mtime))
+                    || fp.is_none()
+                    || s.replicas.iter().any(|r| r.state.lock().unwrap().loaded_fp != fp)
             }
         };
         if !needs_start {
@@ -1198,6 +1267,13 @@ fn dispatch_line(
             // like binary frames.
             (route_payload(payload, &name, op_is_idempotent(op), ctl), false)
         }
+        "update" => {
+            let Some(name) = req.get("model").as_str() else {
+                return (line(err_json("request needs \"model\"".to_string())), false);
+            };
+            let name = name.to_string();
+            (route_all_payload(payload, &name, ctl), false)
+        }
         "ping" => (line(op_ping(ctl)), false),
         "stats" => (line(op_stats(ctl)), false),
         "load" => (line(op_load(&req, ctl)), false),
@@ -1216,7 +1292,7 @@ fn dispatch_line(
         "" => (line(err_json("request needs an \"op\" string".to_string())), false),
         other => (
             line(err_json(format!(
-                "unknown op '{other}' (try transform|recommend|stats|load|ping|hello|shutdown)"
+                "unknown op '{other}' (try transform|recommend|update|stats|load|ping|hello|shutdown)"
             ))),
             false,
         ),
@@ -1224,18 +1300,23 @@ fn dispatch_line(
 }
 
 /// Route one PLNB binary frame: op + model come straight out of the
-/// fixed header (no payload parse), and the frame is relayed to a
-/// replica bytes-untouched, exactly like a JSON line. Both binary ops
-/// are idempotent dense reads, so the retry budget applies. Errors come
-/// back as JSON lines, as everywhere in the protocol.
+/// fixed header (no payload parse), and the frame is relayed
+/// bytes-untouched, exactly like a JSON line. The idempotent dense
+/// reads get the least-loaded pick + retry budget; a binary `update`
+/// batch gets the every-replica fan-out. Errors come back as JSON
+/// lines, as everywhere in the protocol.
 fn dispatch_binary(payload: &WirePayload, bytes: &[u8], ctl: &Control) -> WirePayload {
     match wire::peek_route(bytes) {
         Ok((op, model)) if op.is_request() => {
             let name = model.to_string();
             route_payload(payload, &name, true, ctl)
         }
+        Ok((wire::BinOp::Update, model)) => {
+            let name = model.to_string();
+            route_all_payload(payload, &name, ctl)
+        }
         Ok((op, _)) => line(err_json(format!(
-            "unexpected PLNB frame op {op:?} — only transform/recommend requests route"
+            "unexpected PLNB frame op {op:?} — only transform/recommend/update requests route"
         ))),
         Err(e) => line(err_json(format!("bad binary frame: {e:#}"))),
     }
@@ -1281,6 +1362,28 @@ fn route_payload(
             ("ok", Json::Bool(false)),
             ("error", Json::str(format!("shard '{name}': {e:#}"))),
             ("retryable", Json::Bool(true)),
+            ("model", Json::str(name)),
+        ])),
+    }
+}
+
+/// [`route_payload`] for the non-idempotent `update` op: fanned out to
+/// **every** replica of the shard (see [`Shard::route_all_with`]).
+/// Failures report `"retryable": false` — a blind client re-send is
+/// NOT safe, because replicas ahead of the failure already folded the
+/// batch in; the error message says how to re-sync.
+fn route_all_payload(payload: &WirePayload, name: &str, ctl: &Control) -> WirePayload {
+    let shard = ctl.shards.read().unwrap().get(name).cloned();
+    let Some(shard) = shard else {
+        let names = ctl.shards.read().unwrap().keys().cloned().collect::<Vec<_>>().join(", ");
+        return line(err_json(format!("no model '{name}' routed (have: {names})")));
+    };
+    match shard.route_all(payload) {
+        Ok(raw) => raw,
+        Err(e) => line(Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(format!("shard '{name}': {e:#}"))),
+            ("retryable", Json::Bool(false)),
             ("model", Json::str(name)),
         ])),
     }
@@ -1349,8 +1452,8 @@ const SUMMED_STATS: &[&str] = &[
 /// Merge one replica's model-stats object into the aggregate: counters
 /// in [`SUMMED_STATS`] add, nested objects (the cold/warm/mixed
 /// buckets) merge recursively, and structural fields (v/k/tile/threads/
-/// nnz — identical across replicas of one model) keep their first
-/// value.
+/// nnz/epoch — identical across replicas of one model, since `update`
+/// fans out to all of them) keep their first value.
 fn merge_model_stats(into: &mut Json, from: &Json) {
     let Json::Obj(b) = from else { return };
     let Json::Obj(a) = into else { return };
@@ -1648,6 +1751,66 @@ mod tests {
         assert_eq!(attempts.load(Ordering::SeqCst), 1, "exactly one attempt");
         assert!(op_is_idempotent("transform") && op_is_idempotent("recommend"));
         assert!(!op_is_idempotent("load") && !op_is_idempotent("shutdown"));
+        // `update` mutates factor state: a duplicate execution would
+        // fold the same batch in twice. It must never ride the
+        // retried/least-loaded path.
+        assert!(!op_is_idempotent("update"));
+    }
+
+    #[test]
+    fn route_all_forwards_to_every_replica_and_returns_the_first_response() {
+        let shard = test_shard(3, 5, 0);
+        let attempts = Mutex::new(Vec::new());
+        let out = shard.route_all_with(|idx| {
+            attempts.lock().unwrap().push(idx);
+            Ok(format!("ok from {idx}"))
+        });
+        assert_eq!(out.unwrap(), "ok from 0");
+        assert_eq!(attempts.into_inner().unwrap(), vec![0, 1, 2], "every replica, in order");
+        assert_eq!(shard.in_flight_total(), 0, "in-flight released after each forward");
+    }
+
+    #[test]
+    fn route_all_stops_at_first_failure_and_explains_resync() {
+        let shard = test_shard(3, 5, 0);
+        let attempts = Mutex::new(Vec::new());
+        let out: Result<String> = shard.route_all_with(|idx| {
+            attempts.lock().unwrap().push(idx);
+            if idx == 1 {
+                Err(anyhow!("replica died"))
+            } else {
+                Ok("ok".to_string())
+            }
+        });
+        let err = format!("{:#}", out.unwrap_err());
+        assert!(err.contains("stopped at replica 1"), "{err}");
+        assert!(err.contains("re-sync"), "failure must explain recovery: {err}");
+        assert_eq!(
+            attempts.into_inner().unwrap(),
+            vec![0, 1],
+            "replicas after the failure never see the batch"
+        );
+
+        // A down replica fails the fan-out BEFORE any forward — the
+        // live siblings' factors are never forked by a doomed update.
+        let shard = test_shard(2, 0, 0);
+        shard.replicas[1].state.lock().unwrap().up = false;
+        let out: Result<String> =
+            shard.route_all_with(|_| panic!("must not forward while a replica is down"));
+        let err = format!("{:#}", out.unwrap_err());
+        assert!(err.contains("down"), "{err}");
+    }
+
+    #[test]
+    fn route_all_bypasses_the_busy_ceiling() {
+        // Updates are control-plane traffic: shedding one while reads
+        // saturate the ceiling would silently fork factor epochs.
+        let shard = test_shard(2, 0, 4);
+        for r in &shard.replicas {
+            r.in_flight.store(4, Ordering::SeqCst);
+        }
+        let out = shard.route_all_with(|idx| Ok(idx));
+        assert_eq!(out.unwrap(), 0);
     }
 
     #[test]
@@ -1818,6 +1981,14 @@ mod tests {
             .unwrap();
         let resp = resp_of(&WirePayload::Binary(known));
         assert_eq!(resp.get("retryable").as_bool(), Some(true), "{resp}");
+        assert_eq!(resp.get("model").as_str(), Some("m"), "{resp}");
+        // A binary update frame takes the fan-out path: same unknown-
+        // model error, but a failed fan-out is NOT retryable (a blind
+        // re-send could double-fold the batch on replicas that already
+        // applied it).
+        let upd = wire::encode(wire::BinOp::Update, "m", &Json::Null, 1, 2, &[1.0, 2.0]).unwrap();
+        let resp = resp_of(&WirePayload::Binary(upd));
+        assert_eq!(resp.get("retryable").as_bool(), Some(false), "{resp}");
         assert_eq!(resp.get("model").as_str(), Some("m"), "{resp}");
         // A response-op frame is rejected without routing.
         let bogus = wire::encode(wire::BinOp::TransformResp, "", &Json::Null, 0, 0, &[]).unwrap();

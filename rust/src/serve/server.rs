@@ -18,7 +18,8 @@
 //! |----|---------|----------|
 //! | `transform` | `model`, `queries`, [`warm`=true] | `h` (m×K), `residuals`, `warm` counters |
 //! | `recommend` | `model`, `queries`, [`top`=10], [`exclude_seen`=false], [`warm`=true] | `recs`: per query `[item, score]` pairs |
-//! | `stats` | — | uptime, request count, per-model sweep/warm counters |
+//! | `update` | `model`, `queries`, [`sweeps`] | `epoch`, `rows_seen` — folds the batch into the factors and publishes epoch N+1 |
+//! | `stats` | — | uptime, request count, per-model epoch/sweep/warm counters |
 //! | `load` | `name` + `path`, or neither (manifest reload) | `loaded` / `reloaded` |
 //! | `unload` | `name` | — |
 //! | `ping` | — | `pong` |
@@ -35,7 +36,7 @@
 //!
 //! `{"op": "hello", "proto": 2}` upgrades the connection to the
 //! [`crate::serve::wire`] binary framing for dense `transform` /
-//! `recommend` batches and the `transform` response matrix — raw f32
+//! `recommend` / `update` batches and the `transform` response matrix — raw f32
 //! little-endian behind a 20-byte header instead of JSON text, because
 //! JSON encode/decode dominates round-trip time for large dense batches
 //! (the paper's data-movement argument, off-chip). Sparse queries and
@@ -247,6 +248,7 @@ fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
         "ping" => Ok(ok_obj(vec![("pong", Json::Bool(true))])),
         "transform" => op_transform(req, registry),
         "recommend" => op_recommend(req, registry),
+        "update" => op_update(req, registry),
         "stats" => Ok(op_stats(registry, shared)),
         "load" => op_load(req, registry),
         "unload" => op_unload(req, registry),
@@ -256,7 +258,7 @@ fn dispatch(req: &Json, registry: &ModelRegistry, shared: &Shared) -> Json {
         }
         "" => Err(anyhow!("request needs an \"op\" string")),
         other => Err(anyhow!(
-            "unknown op '{other}' (try transform|recommend|stats|load|unload|ping|hello|shutdown)"
+            "unknown op '{other}' (try transform|recommend|update|stats|load|unload|ping|hello|shutdown)"
         )),
     };
     result.unwrap_or_else(|e| err_json(format!("{e:#}")))
@@ -270,6 +272,7 @@ fn dispatch_binary(bytes: &[u8], registry: &ModelRegistry, train: &TrainStore) -
     let result = wire::decode(bytes).and_then(|frame| match frame.op {
         BinOp::Transform => op_transform_binary(frame, registry),
         BinOp::Recommend => op_recommend_binary(frame, registry),
+        BinOp::Update => op_update_binary(frame, registry),
         BinOp::ShardLoad => crate::dist::worker::op_shard_load(frame, train),
         BinOp::Sweep => crate::dist::worker::op_sweep(frame, train),
         BinOp::TransformResp | BinOp::GramResp => {
@@ -561,6 +564,56 @@ fn op_recommend_binary(frame: BinFrame, registry: &ModelRegistry) -> Result<Wire
     let (recs, ps) = entry.recommend(Queries::Dense(&q), top, exclude_seen, warm)?;
     Ok(WirePayload::Line(
         recommend_response(&name, &recs, &ps, t.elapsed_secs()).to_string(),
+    ))
+}
+
+/// The shared update response shape — identical whether the batch
+/// arrived as JSON or as a PLNB frame (the response — an epoch number
+/// and a few counters — is a small JSON object on both protocols).
+fn update_response(name: &str, out: &crate::serve::registry::UpdateOutcome, secs: f64) -> Json {
+    ok_obj(vec![
+        ("model", Json::str(name)),
+        ("epoch", Json::num(out.epoch as f64)),
+        ("rows_seen", Json::num(out.rows_seen as f64)),
+        ("warm", warm_json(&out.stats)),
+        ("secs", Json::num(secs)),
+    ])
+}
+
+/// An optional `sweeps` override: absent → the registry's configured
+/// `update_sweeps`; present → strict non-negative parse (0 is rejected
+/// downstream by the fold, loudly).
+fn opt_sweeps(meta: &Json) -> Result<Option<usize>> {
+    match meta.get("sweeps") {
+        Json::Null => Ok(None),
+        _ => Ok(Some(opt_usize(meta, "sweeps", 0)?)),
+    }
+}
+
+fn op_update(req: &Json, registry: &ModelRegistry) -> Result<Json> {
+    let name = req
+        .get("model")
+        .as_str()
+        .ok_or_else(|| anyhow!("update needs \"model\""))?;
+    let entry = registry.get(name)?;
+    let q = parse_queries(req, entry.projector().v())?;
+    let sweeps = opt_sweeps(req)?;
+    let t = Timer::start();
+    let out = registry.update(name, q.as_queries(), sweeps)?;
+    Ok(update_response(name, &out, t.elapsed_secs()))
+}
+
+/// The binary twin of [`op_update`]: raw f32 batch in, small JSON line
+/// out (mixed framing, like binary errors and `recommend` responses).
+fn op_update_binary(frame: BinFrame, registry: &ModelRegistry) -> Result<WirePayload> {
+    let entry = registry.get(&frame.model)?;
+    let name = frame.model.clone();
+    let sweeps = opt_sweeps(&frame.meta)?;
+    let q = binary_queries(frame, entry.projector().v())?;
+    let t = Timer::start();
+    let out = registry.update(&name, Queries::Dense(&q), sweeps)?;
+    Ok(WirePayload::Line(
+        update_response(&name, &out, t.elapsed_secs()).to_string(),
     ))
 }
 
@@ -891,6 +944,60 @@ impl Client {
                 ("exclude_seen", Json::Bool(exclude_seen)),
                 ("warm", Json::Bool(warm)),
             ]))
+        }
+    }
+
+    /// One dense `update` round trip on the negotiated framing (the
+    /// response — an epoch number and counters — is a JSON object on
+    /// both protocols). `sweeps: None` uses the daemon's configured
+    /// `update_sweeps`. Returns the parsed response carrying the new
+    /// factor `epoch`.
+    pub fn update_dense(
+        &mut self,
+        model: &str,
+        queries: &Mat,
+        sweeps: Option<usize>,
+    ) -> Result<Json> {
+        if self.proto >= 2 {
+            let mut fields = Vec::new();
+            if let Some(s) = sweeps {
+                fields.push(("sweeps", Json::num(s as f64)));
+            }
+            let meta = Json::obj(fields);
+            let frame = wire::encode(
+                BinOp::Update,
+                model,
+                &meta,
+                queries.rows(),
+                queries.cols(),
+                queries.data(),
+            )?;
+            match self.request_wire(&WirePayload::Binary(frame))? {
+                WirePayload::Line(s) => {
+                    let resp =
+                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+                    if resp.get("ok").as_bool() != Some(true) {
+                        bail!(
+                            "daemon error: {}",
+                            resp.get("error").as_str().unwrap_or("(no error message)")
+                        );
+                    }
+                    Ok(resp)
+                }
+                WirePayload::Binary(_) => {
+                    bail!("unexpected binary response frame to an update request")
+                }
+            }
+        } else {
+            let mut fields = vec![
+                ("op", Json::str("update")),
+                ("model", Json::str(model)),
+                ("queries", queries_to_json(Queries::Dense(queries))),
+            ];
+            if let Some(s) = sweeps {
+                fields.push(("sweeps", Json::num(s as f64)));
+            }
+            self.request_ok(&Json::obj(fields))
         }
     }
 }

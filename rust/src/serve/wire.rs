@@ -17,7 +17,7 @@
 //! 0       4     magic  "PLNB"
 //! 4       1     version (2)
 //! 5       1     op      (0x01 transform, 0x02 recommend,
-//!                        0x03 shard-load, 0x04 sweep,
+//!                        0x03 shard-load, 0x04 sweep, 0x05 update,
 //!                        0x81 transform response, 0x83 gram response)
 //! 6       2     name_len  u16 — model-name bytes (0 in responses)
 //! 8       4     meta_len  u32 — JSON meta segment bytes (may be 0)
@@ -48,10 +48,12 @@
 //! JSON lines (no JSON value starts with `P`, so the two framings
 //! cannot be confused).
 //!
-//! What rides binary: `transform`/`recommend` dense query batches, and
-//! the `transform` response matrix (the two payloads that actually
-//! scale with batch size). `recommend` responses are top-N pairs —
-//! small — and stay JSON even on a v2 connection.
+//! What rides binary: `transform`/`recommend` dense query batches, the
+//! `transform` response matrix (the two payloads that actually scale
+//! with batch size), and `update` dense data batches (`0x05` — online
+//! factor updates; the response is a small JSON line). `recommend`
+//! responses are top-N pairs — small — and stay JSON even on a v2
+//! connection.
 //!
 //! ## Training ops (distributed HALS)
 //!
@@ -107,6 +109,10 @@ pub enum BinOp {
     /// Training: broadcast the W panel and run one local HALS
     /// half-sweep (coordinator → worker).
     Sweep = 0x04,
+    /// Online factor update: fold a dense batch of new data rows into a
+    /// served model's factors and publish the next factor epoch
+    /// (client → daemon; the response is a small JSON line).
+    Update = 0x05,
     /// Transform response carrying the h matrix (daemon → client).
     TransformResp = 0x81,
     /// Training response carrying Gram + partial-product (+ H panel)
@@ -121,17 +127,21 @@ impl BinOp {
             0x02 => Some(BinOp::Recommend),
             0x03 => Some(BinOp::ShardLoad),
             0x04 => Some(BinOp::Sweep),
+            0x05 => Some(BinOp::Update),
             0x81 => Some(BinOp::TransformResp),
             0x83 => Some(BinOp::GramResp),
             _ => None,
         }
     }
 
-    /// Whether this op is a request the router may forward (both data
-    /// requests are idempotent — pure reads of model state). Training
-    /// ops mutate worker-resident shard state, so the router must
-    /// never relay them: the train-dist coordinator owns its workers
-    /// point-to-point.
+    /// Whether this op is a request the router may **load-balance** to
+    /// one replica (both data requests are idempotent — pure reads of
+    /// model state). Training ops mutate worker-resident shard state,
+    /// so the router must never relay them: the train-dist coordinator
+    /// owns its workers point-to-point. [`BinOp::Update`] is also
+    /// deliberately NOT a routable request — it mutates factors, so the
+    /// router handles it through a separate every-replica fan-out path
+    /// with a zero retry budget, never the least-loaded/retry machinery.
     pub fn is_request(self) -> bool {
         matches!(self, BinOp::Transform | BinOp::Recommend)
     }
@@ -700,6 +710,26 @@ mod tests {
         let frames = feed(&both, 1000, true);
         assert!(matches!(&frames[0], WireRead::Payload(WirePayload::Binary(b)) if *b == good));
         assert_eq!(line_of(&frames[1]), "{\"op\": \"ping\"}");
+    }
+
+    #[test]
+    fn update_op_roundtrips_and_is_not_load_balanced() {
+        // 0x05 must decode, carry its batch, and stay OUT of is_request:
+        // the router fans updates out to every replica itself instead of
+        // picking one (a retried-on-another-replica update would leave
+        // the fleet at mixed epochs).
+        assert_eq!(BinOp::Update as u8, 0x05);
+        assert_eq!(BinOp::from_byte(0x05), Some(BinOp::Update));
+        assert!(!BinOp::Update.is_request());
+        let meta = Json::obj(vec![("sweeps", Json::num(12.0))]);
+        let bytes = encode(BinOp::Update, "news", &meta, 2, 4, &[0.5; 8]).unwrap();
+        let f = decode(&bytes).unwrap();
+        assert_eq!(f.op, BinOp::Update);
+        assert_eq!(f.model, "news");
+        assert_eq!(f.meta.get("sweeps").as_u64(), Some(12));
+        assert_eq!((f.rows, f.cols), (2, 4));
+        let (op, model) = peek_route(&bytes).unwrap();
+        assert_eq!((op, model), (BinOp::Update, "news"));
     }
 
     #[test]

@@ -40,7 +40,14 @@ fn write_model(dir: &Path, file: &str, v: usize, d: usize, k: usize, seed: u64) 
 /// Registry options pinned for reproducibility: one thread per model, so
 /// the in-process reference (also one thread) matches bit-for-bit.
 fn pinned_opts(projector: ProjectorOpts, warm_cache: usize) -> RegistryOpts {
-    RegistryOpts { threads: 2, per_model_threads: 1, projector, warm_cache, max_total_nnz: 0 }
+    RegistryOpts {
+        threads: 2,
+        per_model_threads: 1,
+        projector,
+        warm_cache,
+        max_total_nnz: 0,
+        update_sweeps: 20,
+    }
 }
 
 type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
@@ -417,6 +424,93 @@ fn binary_protocol_matches_json_bit_for_bit() {
 
     drop(json_client);
     drop(bin_client);
+    shutdown(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn online_update_publishes_epochs_and_matches_in_process_fold() {
+    // The online-update tentpole over the wire: `update` folds a batch
+    // of new rows into the factors and publishes epoch N+1, over both
+    // v1 JSON and PLNB v2 binary frames, and every post-swap transform
+    // is bit-identical to an in-process registry driven through the
+    // exact same op sequence. The warm cache is salted by epoch, so the
+    // first repeat after each swap must re-solve (0 hits).
+    let dir = tmpdir("update");
+    let model = write_model(&dir, "m.json", 30, 9, 4, 41);
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let registry = ModelRegistry::new(pinned_opts(popts, 64));
+    registry.load("m", &model).unwrap();
+    let (addr, handle) = start_server(registry);
+
+    // The in-process reference: a second registry with the same pinned
+    // options, fed the same transforms/updates in the same order (the
+    // transform mirroring also keeps the two warm caches in lockstep).
+    let reference = ModelRegistry::new(pinned_opts(popts, 64));
+    reference.load("m", &model).unwrap();
+    let ref_transform = |q: &Mat| -> Mat {
+        reference.get("m").unwrap().transform(Queries::Dense(q), true).unwrap().0
+    };
+
+    let mut v1 = Client::connect(addr).unwrap();
+    let mut v2 = Client::connect(addr).unwrap();
+    assert_eq!(v2.negotiate().unwrap(), 2);
+
+    let mut rng = Pcg32::seeded(404);
+    let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+    let (h0, _, _) = v1.transform_dense("m", &q, true).unwrap();
+    assert_eq!(h0, ref_transform(&q), "epoch 0 parity");
+
+    // Fold new rows in over v1 JSON: epoch 0 -> 1. rows_seen counts the
+    // training seed (d=9) plus the folded batch.
+    let u1 = Mat::random(6, 30, &mut rng, 0.0, 1.0);
+    let resp = v1.update_dense("m", &u1, None).unwrap();
+    assert_eq!(resp.get("epoch").as_usize(), Some(1), "{resp}");
+    assert_eq!(resp.get("rows_seen").as_usize(), Some(9 + 6), "{resp}");
+    reference.update("m", Queries::Dense(&u1), None).unwrap();
+
+    // Same question, new factors: the answer moved, and moved exactly
+    // where the reference fold moved. The old epoch-0 cache entry for q
+    // must NOT seed this solve (salt changed): 0 hits.
+    let (h1, _, meta) = v1.transform_dense("m", &q, true).unwrap();
+    assert_ne!(h1, h0, "the fold must actually change the factors");
+    assert_eq!(meta.get("warm").get("hits").as_usize(), Some(0), "{meta}");
+    assert_eq!(h1, ref_transform(&q), "epoch 1 parity");
+
+    // Second update over PLNB v2 binary frames with an explicit sweep
+    // count: epoch 1 -> 2, still bit-identical to the reference fold.
+    let u2 = Mat::random(4, 30, &mut rng, 0.0, 1.0);
+    let resp = v2.update_dense("m", &u2, Some(12)).unwrap();
+    assert_eq!(resp.get("epoch").as_usize(), Some(2), "{resp}");
+    assert_eq!(resp.get("rows_seen").as_usize(), Some(9 + 6 + 4), "{resp}");
+    let out = reference.update("m", Queries::Dense(&u2), Some(12)).unwrap();
+    assert_eq!(out.epoch, 2);
+    let (h2, _, meta) = v2.transform_dense("m", &q, true).unwrap();
+    assert_eq!(meta.get("warm").get("hits").as_usize(), Some(0), "post-swap repeat: {meta}");
+    assert_eq!(h2, ref_transform(&q), "epoch 2 parity");
+    assert_ne!(h2, h1);
+
+    // Within one epoch the cache works as before: an exact repeat hits.
+    let (_, _, meta) = v2.transform_dense("m", &q, true).unwrap();
+    assert_eq!(meta.get("warm").get("hits").as_usize(), Some(5), "{meta}");
+    ref_transform(&q);
+
+    // Stats echo the live factor epoch.
+    let stats = v1.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("models").get("m").get("epoch").as_usize(), Some(2), "{stats}");
+
+    // Error paths: unknown model; present-but-zero sweeps must not
+    // silently no-op (and must not bump the epoch).
+    let err = format!("{:#}", v1.update_dense("ghost", &u1, None).unwrap_err());
+    assert!(err.contains("no model 'ghost'"), "{err}");
+    let err = format!("{:#}", v1.update_dense("m", &u1, Some(0)).unwrap_err());
+    assert!(err.contains("sweeps"), "{err}");
+    let stats = v1.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("models").get("m").get("epoch").as_usize(), Some(2), "{stats}");
+
+    drop(v1);
+    drop(v2);
     shutdown(addr);
     handle.join().unwrap().unwrap();
     std::fs::remove_dir_all(dir).ok();

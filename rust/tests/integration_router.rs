@@ -438,6 +438,145 @@ fn binary_routed_transforms_match_json_over_replicated_processes() {
 }
 
 #[test]
+fn replicated_update_swaps_epochs_under_load_with_zero_failed_requests() {
+    // The hot-swap tentpole over real worker processes: a `replicas: 2`
+    // model takes sustained transform traffic while `update` batches
+    // publish new factor epochs through the router. Every `update` fans
+    // out to BOTH replicas (so their factors never fork), no transform
+    // ever fails or hangs across a swap, and once an update has been
+    // acknowledged the routed answer is bit-identical to an in-process
+    // registry folded through the same batches.
+    let dir = tmpdir("swap");
+    let model = write_model(&dir, "m.json", 30, 9, 4, 15);
+    let manifest = dir.join("fleet.json");
+    std::fs::write(&manifest, manifest_json_replicated(1, 0, &[("m", "m.json", 2)]).pretty())
+        .unwrap();
+    let router =
+        Router::from_manifest(&manifest, pinned_worker_opts(&dir), RouterOpts::default())
+            .unwrap();
+    let (addr, handle) = start_router(router);
+    let mut client = Client::connect(addr).unwrap();
+
+    // The in-process reference: the workers' pinned configuration, fed
+    // the exact same update batches with the same pinned sweep count.
+    let popts = ProjectorOpts { sweeps: 20, micro_batch: 8, ..Default::default() };
+    let reference = ModelRegistry::new(RegistryOpts {
+        threads: 1,
+        per_model_threads: 1,
+        projector: popts,
+        warm_cache: 0,
+        max_total_nnz: 0,
+        update_sweeps: 20,
+    });
+    reference.load("m", &model).unwrap();
+    let ref_h = |q: &Mat| -> Mat {
+        reference.get("m").unwrap().transform(Queries::Dense(q), false).unwrap().0
+    };
+
+    let mut rng = Pcg32::seeded(48);
+    let q = Mat::random(5, 30, &mut rng, 0.0, 1.0);
+    let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+    assert_eq!(h_from_json(&resp, 4), ref_h(&q), "epoch 0 routed h");
+
+    // Sustained traffic on its own connection. A request may land on
+    // either side of a swap (either epoch's answer is legitimate), so
+    // the in-flight assertion is exactly the zero-downtime claim: every
+    // response is ok. Failures are collected, not panicked.
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let failures = Arc::new(Mutex::new(Vec::<String>::new()));
+    let traffic = {
+        let stop = Arc::clone(&stop);
+        let done = Arc::clone(&done);
+        let failures = Arc::clone(&failures);
+        let q = q.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let req = transform_req("m", &q);
+            while !stop.load(Ordering::SeqCst) {
+                match c.request(&req) {
+                    Ok(resp) if resp.get("ok").as_bool() == Some(true) => {}
+                    Ok(resp) => failures.lock().unwrap().push(format!("not ok: {resp}")),
+                    Err(e) => failures.lock().unwrap().push(format!("client error: {e:#}")),
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+    };
+    wait_until(Duration::from_secs(30), "pre-swap traffic", || {
+        done.load(Ordering::SeqCst) > 3
+    });
+
+    // Three epochs over v1 JSON while the traffic hammers. An update
+    // acknowledgment means every replica folded the batch, so the
+    // post-swap routed answer must equal the reference fold exactly —
+    // whichever replica the router picks.
+    let mut upd = Client::connect(addr).unwrap();
+    for epoch in 1..=3usize {
+        let u = Mat::random(6, 30, &mut rng, 0.0, 1.0);
+        let resp = upd.update_dense("m", &u, Some(15)).unwrap();
+        assert_eq!(resp.get("epoch").as_usize(), Some(epoch), "{resp}");
+        let out = reference.update("m", Queries::Dense(&u), Some(15)).unwrap();
+        assert_eq!(out.epoch, epoch as u64);
+        let resp = client.request_ok(&transform_req("m", &q)).unwrap();
+        assert_eq!(h_from_json(&resp, 4), ref_h(&q), "epoch {epoch} routed h");
+        let at = done.load(Ordering::SeqCst);
+        wait_until(Duration::from_secs(30), "traffic across the swap", || {
+            done.load(Ordering::SeqCst) > at + 2
+        });
+    }
+
+    // A fourth epoch over PLNB v2 binary frames (the binary fan-out
+    // path), answered with the standard JSON acknowledgment.
+    let mut bin = Client::connect(addr).unwrap();
+    assert_eq!(bin.negotiate().unwrap(), 2);
+    let u = Mat::random(4, 30, &mut rng, 0.0, 1.0);
+    let resp = bin.update_dense("m", &u, Some(15)).unwrap();
+    assert_eq!(resp.get("epoch").as_usize(), Some(4), "{resp}");
+    reference.update("m", Queries::Dense(&u), Some(15)).unwrap();
+    let (h_bin, _, _) = bin.transform_dense("m", &q, false).unwrap();
+    assert_eq!(h_bin, ref_h(&q), "epoch 4 routed binary h");
+
+    stop.store(true, Ordering::SeqCst);
+    traffic.join().unwrap();
+    let failures = failures.lock().unwrap();
+    assert!(
+        failures.is_empty(),
+        "epoch swaps leaked {} client-visible failure(s): {:?}",
+        failures.len(),
+        *failures
+    );
+
+    // Routed stats echo the swapped factor epoch (a structural field:
+    // identical across replicas because the fan-out hits all of them)
+    // with the full replica set still up.
+    let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("models").get("m").get("epoch").as_usize(), Some(4), "{stats}");
+    assert_eq!(stats.get("workers").get("m").get("up_replicas").as_usize(), Some(2), "{stats}");
+    assert_eq!(stats.get("workers").get("m").get("restarts").as_usize(), Some(0), "{stats}");
+
+    // A failed update is marked non-retryable on the wire: blindly
+    // re-sending could fold the same batch twice into some replicas.
+    let resp = client
+        .request(&Json::obj(vec![
+            ("op", Json::str("update")),
+            ("model", Json::str("ghost")),
+            ("queries", queries_to_json(Queries::Dense(&u))),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp}");
+    assert_eq!(resp.get("retryable").as_bool(), Some(false), "{resp}");
+    assert!(resp.get("error").as_str().unwrap().contains("no model 'ghost' routed"), "{resp}");
+
+    drop(client);
+    drop(upd);
+    drop(bin);
+    shutdown_router(addr);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn mixed_loss_fleet_routes_kl_and_frobenius_worker_processes() {
     // The EngineSpec headline at the routed layer: one fleet manifest, a
     // Frobenius shard and a KL-override shard, each spawned as a real
@@ -588,6 +727,7 @@ fn external_workers_route_without_supervision() {
             projector: popts,
             warm_cache: 0,
             max_total_nnz: 0,
+            update_sweeps: 20,
         });
         registry.load(name, path).unwrap();
         let server = Server::bind(Arc::new(registry), "127.0.0.1", 0).unwrap();

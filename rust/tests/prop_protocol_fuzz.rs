@@ -164,6 +164,7 @@ fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<anyhow::Resu
         projector: ProjectorOpts::default(),
         warm_cache: 0,
         max_total_nnz: 0,
+        update_sweeps: 20,
     });
     registry.load("m", &tmp_model()).unwrap();
     let server = Server::bind(Arc::new(registry), "127.0.0.1", 0).unwrap();
