@@ -33,7 +33,7 @@ use std::sync::Arc;
 
 use anyhow::bail;
 
-use crate::cli::Args;
+use crate::cli::{Args, TrainArgs};
 use crate::config::{profiles, EngineKind, RunConfig};
 use crate::coordinator::{metrics, Driver};
 use crate::data::stats::{table_header, DatasetStats};
@@ -159,11 +159,17 @@ COMMANDS:
              [--route_port P --worker_port_base B --restart_backoff_ms N
              --route_retries R --max_inflight C
              --threads T + the serve knobs, passed through to workers]
-  train-dist distributed FAST-HALS over `serve --train_worker` daemons:
-             the dataset is row-sharded (nnz-balanced), workers keep their
-             shard + H rows resident, the coordinator all-reduces k×k Grams
-             and V×k partials per epoch over the PLNB v2 binary wire:
+  train-dist distributed NMF over `serve --train_worker` daemons: the
+             dataset is block-partitioned on a pr×pc grid (nnz-balanced
+             both axes), workers keep their A block + H panel resident,
+             the coordinator exchanges factor panels and all-reduces k×k
+             Grams per epoch over the PLNB v2 binary wire:
              --dataset --k --iters --train_workers N --sync_every E
+             [--grid PRxPC — 2D worker grid; 1xN (default) is the
+             row-sharded plan, pr>1 panel-shards W too and shrinks
+             coordinator traffic to panel-sized]
+             [--engine fasthals|mu --loss frobenius|kl — the engine
+             spec, same flags as run; KL needs a 1xN grid]
              [--threads --seed --trace_path out.csv + the run knobs]
              [--attach host:port,... — use already-running
              `serve --train_worker` daemons instead of spawning]
@@ -180,7 +186,7 @@ Dataset profiles: 20news tdt2 reuters att pie (+-small variants, tiny)
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = args.to_run_config()?;
+    let TrainArgs { cfg, .. } = TrainArgs::from_args(args)?;
     let mut driver = Driver::from_config(&cfg)?;
     let report = driver.run()?;
     print!("{}", metrics::summary_table(std::slice::from_ref(&report)));
@@ -407,37 +413,29 @@ fn cmd_route(args: &Args) -> Result<()> {
     router.run()
 }
 
-/// Parse a `--attach host:port,host:port,...` list into socket
-/// addresses; every entry must parse (a typoed address silently
-/// dropping to a spawned local worker would mask a fleet misconfig).
-fn parse_attach(list: &str) -> Result<Vec<std::net::SocketAddr>> {
-    list.split(',')
-        .map(|s| {
-            let s = s.trim();
-            s.parse::<std::net::SocketAddr>()
-                .map_err(|e| anyhow::anyhow!("bad --attach address '{s}': {e}"))
-        })
-        .collect()
-}
-
 fn cmd_train_dist(args: &Args) -> Result<()> {
-    let cfg = args.to_run_config()?;
+    let TrainArgs { cfg, attach } = TrainArgs::from_args(args)?;
     let binary = std::env::current_exe()
         .map_err(|e| anyhow::anyhow!("resolving the plnmf binary for train workers: {e}"))?;
-    let attach = match args.opt("attach") {
-        Some(list) => parse_attach(list)?,
-        None => Vec::new(),
-    };
     let opts = crate::dist::DistOpts {
         binary: Some(binary),
         workers: cfg.train_workers,
         sync_every: cfg.sync_every,
         attach,
+        grid: cfg.grid,
         ..Default::default()
     };
-    let report = crate::dist::train_dist(&cfg, &opts)?;
+    let (report, stats) = crate::dist::train_dist_with_stats(&cfg, &opts)?;
     print!("{}", metrics::summary_table(std::slice::from_ref(&report)));
     println!("\nphase breakdown:\n{}", report.timers.table());
+    println!(
+        "\ntopology: {}x{} grid, {} worker(s), {} epochs, {} coordinator bytes/epoch",
+        stats.grid.0,
+        stats.grid.1,
+        stats.workers,
+        stats.epochs,
+        stats.bytes_per_epoch()
+    );
     if let Some(path) = &cfg.trace_path {
         println!("\ntrace CSV: {path}");
     }
@@ -445,7 +443,7 @@ fn cmd_train_dist(args: &Args) -> Result<()> {
 }
 
 fn cmd_transform(args: &Args) -> Result<()> {
-    let cfg = args.to_run_config()?;
+    let TrainArgs { cfg, .. } = TrainArgs::from_args(args)?;
     let (projector, meta, _pool) = serve_projector(args, &cfg)?;
     let ds = load_queries(args, &cfg, &meta, projector.v())?;
     let q = queries_of(&ds);
@@ -492,7 +490,7 @@ fn cmd_transform(args: &Args) -> Result<()> {
 }
 
 fn cmd_recommend(args: &Args) -> Result<()> {
-    let cfg = args.to_run_config()?;
+    let TrainArgs { cfg, .. } = TrainArgs::from_args(args)?;
     let (projector, meta, _pool) = serve_projector(args, &cfg)?;
     let ds = load_queries(args, &cfg, &meta, projector.v())?;
     let q = queries_of(&ds);
@@ -676,31 +674,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn attach_list_parses_or_rejects_loudly() {
-        let addrs = parse_attach("127.0.0.1:7001, 127.0.0.1:7002").unwrap();
-        assert_eq!(addrs.len(), 2);
-        assert_eq!(addrs[0].port(), 7001);
-        assert_eq!(addrs[1].port(), 7002);
-        assert_eq!(parse_attach("127.0.0.1:9000").unwrap().len(), 1);
-        for bad in ["localhost", "127.0.0.1", "127.0.0.1:7001,,", "host:port"] {
-            let err = format!("{:#}", parse_attach(bad).unwrap_err());
-            assert!(err.contains("--attach"), "{bad}: {err}");
-        }
-    }
-
-    #[test]
-    fn attach_flag_reaches_dist_opts() {
-        // The CLI wiring end of the satellite: `--attach` must land in
-        // DistOpts.attach exactly as parsed.
+    fn train_args_reach_dist_opts() {
+        // The CLI wiring end of the consolidation satellite: the shared
+        // TrainArgs parse must land `--attach` and `--grid` in DistOpts
+        // exactly as parsed.
         let args = crate::cli::Args::parse(
-            ["train-dist", "--attach", "127.0.0.1:7001,127.0.0.1:7002"]
+            ["train-dist", "--grid", "2x2", "--attach", "127.0.0.1:7001,127.0.0.1:7002"]
                 .iter()
                 .map(|s| s.to_string()),
         )
         .unwrap();
-        let attach = parse_attach(args.opt("attach").unwrap()).unwrap();
-        let opts = crate::dist::DistOpts { attach, ..Default::default() };
+        let TrainArgs { cfg, attach } = TrainArgs::from_args(&args).unwrap();
+        let opts = crate::dist::DistOpts { attach, grid: cfg.grid, ..Default::default() };
         assert_eq!(opts.attach.len(), 2);
         assert_eq!(opts.attach[1], "127.0.0.1:7002".parse().unwrap());
+        assert_eq!(opts.grid, Some((2, 2)));
     }
 }

@@ -1,11 +1,15 @@
 //! Distributed-training scaling: wall-clock of a fixed FAST-HALS run
-//! driven by `plnmf train-dist` over 1 / 2 / 4 training workers.
+//! driven by `plnmf train-dist` over 1 / 2 / 4 training workers, plus a
+//! 2×2 grid row at the same worker count.
 //!
-//! The coordinator ships nnz-balanced row shards of Aᵀ once, then each
-//! epoch broadcasts W and all-reduces the workers' k×k Grams and V×k
+//! The coordinator ships nnz-balanced blocks of A once, then each epoch
+//! exchanges factor panels and all-reduces the workers' k×k Grams and
 //! partial products over the PLNB v2 binary wire — so the `dist_w1` row
-//! is (single-process math + one wire hop) and the `dist_w2`/`dist_w4`
-//! deltas are what shard parallelism buys after communication costs.
+//! is (single-process math + one wire hop), the `dist_w2`/`dist_w4`
+//! deltas are what shard parallelism buys after communication costs,
+//! and the `dist_g2x2` row shows the 2D grid's per-epoch coordinator
+//! traffic sitting below the 1D plan at equal worker count (panels
+//! instead of full-W broadcast).
 //!
 //! Workers here are in-process `Server::bind` daemons addressed through
 //! attach mode — the exact byte protocol of spawned `plnmf serve
@@ -21,15 +25,18 @@ use std::time::Duration;
 use crate::bench::harness::{measure, row, BenchOpts};
 use crate::bench::Scale;
 use crate::config::RunConfig;
-use crate::dist::{train_dist, DistOpts};
+use crate::dist::{train_dist_with_stats, DistOpts};
 use crate::serve::{Client, ModelRegistry, RegistryOpts, Server};
 use crate::util::json::Json;
 use crate::Result;
 
 use super::report::write_csv;
 
-/// Worker counts of the scaling rows (`dist_w{N}` in the CSV).
+/// Worker counts of the 1D scaling rows (`dist_w{N}` in the CSV).
 pub const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// The 2D topology row: a 2×2 grid over four workers (`dist_g2x2`).
+pub const GRID: (usize, usize) = (2, 2);
 
 pub fn run(scale: Scale, out: &Path) -> Result<()> {
     run_with(scale, out, BenchOpts::default())
@@ -74,30 +81,49 @@ pub fn run_with(scale: Scale, out: &Path, bench_opts: BenchOpts) -> Result<()> {
 
     println!("distributed training on {dataset} (k={k}, {iters} epochs, sync_every=2):\n");
     let mut rows = Vec::new();
-    for &n in &WORKER_COUNTS {
+    // The 1D scaling ladder, then the 2×2 grid at the top worker count.
+    let topologies: Vec<(String, usize, Option<(usize, usize)>)> = WORKER_COUNTS
+        .iter()
+        .map(|&n| (format!("dist_w{n}"), n, None))
+        .chain(std::iter::once((
+            format!("dist_g{}x{}", GRID.0, GRID.1),
+            GRID.0 * GRID.1,
+            Some(GRID),
+        )))
+        .collect();
+    for (name, n, grid) in topologies {
         let workers: Vec<SocketAddr> =
             (0..n).map(|_| spawn_inproc_worker()).collect::<Result<_>>()?;
         let mut final_rel_error = f64::NAN;
+        let mut bytes_per_epoch = 0u64;
         let s = measure(bench_opts, || {
-            let opts =
-                DistOpts { attach: workers.clone(), sync_every: 2, ..DistOpts::default() };
-            let report = train_dist(&cfg, &opts).expect("train-dist bench run failed");
+            let opts = DistOpts {
+                attach: workers.clone(),
+                sync_every: 2,
+                grid,
+                ..DistOpts::default()
+            };
+            let (report, stats) =
+                train_dist_with_stats(&cfg, &opts).expect("train-dist bench run failed");
             final_rel_error = report.final_rel_error;
+            bytes_per_epoch = stats.bytes_per_epoch();
         });
         for &addr in &workers {
             shutdown_worker(addr);
         }
-        let name = format!("dist_w{n}");
-        println!("{}  [rel_error {final_rel_error:.4}]", row(&name, &s));
+        println!(
+            "{}  [rel_error {final_rel_error:.4}, {bytes_per_epoch} coord bytes/epoch]",
+            row(&name, &s)
+        );
         rows.push(format!(
-            "{dataset},{k},{iters},{name},{n},{:.6},{:.6},{:.6},{final_rel_error:.6}",
+            "{dataset},{k},{iters},{name},{n},{:.6},{:.6},{:.6},{final_rel_error:.6},{bytes_per_epoch}",
             s.median, s.min, s.max
         ));
     }
     let csv = out.join("train_dist.csv");
     write_csv(
         &csv,
-        "dataset,k,iters,mode,workers,secs_median,secs_min,secs_max,final_rel_error",
+        "dataset,k,iters,mode,workers,secs_median,secs_min,secs_max,final_rel_error,coord_bytes_per_epoch",
         &rows,
     )?;
     println!("\nCSV: {}", csv.display());
@@ -109,21 +135,40 @@ mod tests {
     use super::*;
 
     #[test]
-    fn writes_scaling_rows_for_every_worker_count() {
+    fn writes_scaling_rows_for_every_worker_count_and_the_grid() {
         let dir = std::env::temp_dir().join(format!("plnmf-distbench-{}", std::process::id()));
         run_with(Scale::Small, &dir, BenchOpts { warmup: 0, reps: 1 }).unwrap();
         let body = std::fs::read_to_string(dir.join("train_dist.csv")).unwrap();
         assert!(body.starts_with("dataset,k,iters,mode,workers"), "{body}");
         let lines: Vec<&str> = body.lines().collect();
-        assert_eq!(lines.len(), 1 + WORKER_COUNTS.len(), "{body}");
+        assert_eq!(lines.len(), 1 + WORKER_COUNTS.len() + 1, "{body}");
+        let field = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
         for (i, n) in WORKER_COUNTS.iter().enumerate() {
             let line = lines[1 + i];
             assert!(line.contains(&format!(",dist_w{n},{n},")), "row w={n} missing: {body}");
-            let secs: f64 = line.split(',').nth(5).unwrap().parse().unwrap();
+            let secs: f64 = field(line, 5).parse().unwrap();
             assert!(secs > 0.0, "unmeasured row: {line}");
-            let err: f64 = line.split(',').nth(8).unwrap().parse().unwrap();
+            let err: f64 = field(line, 8).parse().unwrap();
             assert!(err.is_finite() && err > 0.0 && err < 1.0, "bad rel_error: {line}");
+            let bytes: u64 = field(line, 9).parse().unwrap();
+            assert!(bytes > 0, "untracked traffic: {line}");
         }
+        let grid_line = lines[1 + WORKER_COUNTS.len()];
+        assert!(grid_line.contains(",dist_g2x2,4,"), "grid row missing: {body}");
+        let grid_err: f64 = field(grid_line, 8).parse().unwrap();
+        assert!(
+            grid_err.is_finite() && grid_err > 0.0 && grid_err < 1.0,
+            "bad rel_error: {grid_line}"
+        );
+        // The whole point of the 2D grid: per-epoch coordinator traffic
+        // below the 1D plan at the same worker count.
+        let w4_line = lines[1 + WORKER_COUNTS.iter().position(|&n| n == 4).unwrap()];
+        let w4_bytes: u64 = field(w4_line, 9).parse().unwrap();
+        let grid_bytes: u64 = field(grid_line, 9).parse().unwrap();
+        assert!(
+            grid_bytes < w4_bytes,
+            "grid traffic {grid_bytes} not below 1D {w4_bytes}: {body}"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -6,8 +6,9 @@
 //! override individual fields.
 
 use std::collections::BTreeMap;
+use std::net::SocketAddr;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::RunConfig;
 
@@ -98,6 +99,48 @@ const NON_CONFIG_KEYS: &[&str] = &[
     "out", "out-dir", "reps", "warmup", "ks", "tiles", "datasets", "engines", "scale",
     "target-error", "format", "top", "input", "attach",
 ];
+
+/// The flag surface shared by every training-flavored subcommand.
+///
+/// `run`, `train-dist`, and the spec overrides of `transform` /
+/// `recommend` all parse through this one helper, so
+/// `--k/--engine/--loss/--alpha/--l1_ratio/--init/--sweeps` (and
+/// `--grid`, which rides the same [`RunConfig`] surface) behave — and
+/// fail, with identical messages — the same way under every
+/// subcommand. Precedence is [`Args::to_run_config`]'s: defaults ←
+/// `--config file` ← individual `--key value` overrides.
+#[derive(Debug, Clone)]
+pub struct TrainArgs {
+    /// The validated run configuration (engine spec included).
+    pub cfg: RunConfig,
+    /// `--attach host:port,...`: pre-started `serve --train_worker`
+    /// daemons for `train-dist` (empty = spawn workers).
+    pub attach: Vec<SocketAddr>,
+}
+
+impl TrainArgs {
+    pub fn from_args(args: &Args) -> Result<TrainArgs> {
+        let cfg = args.to_run_config()?;
+        let attach = match args.opt("attach") {
+            Some(list) => parse_attach(list)?,
+            None => Vec::new(),
+        };
+        Ok(TrainArgs { cfg, attach })
+    }
+}
+
+/// Parse a `--attach host:port,host:port,...` list into socket
+/// addresses; every entry must parse (a typoed address silently
+/// dropping to a spawned local worker would mask a fleet misconfig).
+pub fn parse_attach(list: &str) -> Result<Vec<SocketAddr>> {
+    list.split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<SocketAddr>()
+                .map_err(|e| anyhow!("bad --attach address '{s}': {e}"))
+        })
+        .collect()
+}
 
 #[cfg(test)]
 mod tests {
@@ -226,6 +269,66 @@ mod tests {
         // An invalid combination fails at to_run_config (validate).
         let a = parse("run --engine plnmf --loss kl");
         assert!(a.to_run_config().is_err());
+    }
+
+    #[test]
+    fn spec_flags_fail_identically_across_subcommands() {
+        // The consolidation satellite's contract: one shared parser
+        // means one error text, whichever subcommand the flag rode in
+        // on.
+        for bad in ["--sweeps 0", "--engine warp", "--grid 0x2", "--loss poisson"] {
+            let mut msgs: Vec<String> = Vec::new();
+            for sub in ["run", "train-dist", "transform"] {
+                let a = parse(&format!("{sub} {bad}"));
+                msgs.push(format!("{:#}", TrainArgs::from_args(&a).unwrap_err()));
+            }
+            assert_eq!(msgs[0], msgs[1], "{bad}: run vs train-dist");
+            assert_eq!(msgs[0], msgs[2], "{bad}: run vs transform");
+        }
+    }
+
+    #[test]
+    fn train_args_carry_the_shared_surface_plus_attach_and_grid() {
+        let a = parse(
+            "train-dist --dataset tiny --k 4 --engine mu --alpha 0.1 --l1_ratio 0.5 \
+             --grid 2x2 --attach 127.0.0.1:7001,127.0.0.1:7002",
+        );
+        let t = TrainArgs::from_args(&a).unwrap();
+        assert_eq!(t.cfg.dataset, "tiny");
+        assert_eq!(t.cfg.k, 4);
+        assert_eq!(t.cfg.engine, crate::config::EngineKind::Mu);
+        assert!((t.cfg.alpha - 0.1).abs() < 1e-12);
+        assert_eq!(t.cfg.grid, Some((2, 2)));
+        assert_eq!(t.attach.len(), 2);
+        assert_eq!(t.attach[1].port(), 7002);
+        // No --attach: spawn mode.
+        let t = TrainArgs::from_args(&parse("run --k 4")).unwrap();
+        assert!(t.attach.is_empty());
+    }
+
+    #[test]
+    fn grid_precedence_follows_the_config_chain() {
+        // --grid obeys the same defaults ← file ← CLI chain as every
+        // other spec flag, because it IS one of them.
+        let path = write_tmp_config("grid", r#"{"dataset": "tiny", "grid": "1x4"}"#);
+        let a = parse(&format!("train-dist --config {}", path.display()));
+        assert_eq!(a.to_run_config().unwrap().grid, Some((1, 4)), "file beats default");
+        let a = parse(&format!("train-dist --config {} --grid 2x2", path.display()));
+        assert_eq!(a.to_run_config().unwrap().grid, Some((2, 2)), "CLI beats file");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn attach_list_parses_or_rejects_loudly() {
+        let addrs = parse_attach("127.0.0.1:7001, 127.0.0.1:7002").unwrap();
+        assert_eq!(addrs.len(), 2);
+        assert_eq!(addrs[0].port(), 7001);
+        assert_eq!(addrs[1].port(), 7002);
+        assert_eq!(parse_attach("127.0.0.1:9000").unwrap().len(), 1);
+        for bad in ["localhost", "127.0.0.1", "127.0.0.1:7001,,", "host:port"] {
+            let err = format!("{:#}", parse_attach(bad).unwrap_err());
+            assert!(err.contains("--attach"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -83,8 +83,25 @@ const KNOWN_KEYS: &[&str] = &[
     "sweeps", "batch", "serve_tol", "serve_port", "models_manifest", "manifest", "warm_cache",
     "update_sweeps",
     "route_port", "worker_port_base", "restart_backoff_ms", "max_backoff_ms", "route_retries",
-    "max_inflight", "train_workers", "sync_every", "loss", "alpha", "l1_ratio", "init",
+    "max_inflight", "train_workers", "sync_every", "grid", "loss", "alpha", "l1_ratio", "init",
 ];
+
+/// Parse a `PRxPC` worker-grid spec (`2x2`, `1x4`; a bare `N` means the
+/// 1D `1xN` plan).
+fn parse_grid(s: &str) -> Result<(usize, usize)> {
+    let bad = || anyhow!("bad grid '{s}': expected PRxPC like '2x2' (or a bare N for 1xN)");
+    let (pr, pc) = match s.split_once(['x', 'X']) {
+        Some((a, b)) => {
+            (a.trim().parse::<usize>().map_err(|_| bad())?,
+             b.trim().parse::<usize>().map_err(|_| bad())?)
+        }
+        None => (1, s.trim().parse::<usize>().map_err(|_| bad())?),
+    };
+    if pr == 0 || pc == 0 {
+        bail!("grid axes must be >= 1, got {pr}x{pc}");
+    }
+    Ok((pr, pc))
+}
 
 /// Full description of one NMF run.
 #[derive(Debug, Clone)]
@@ -168,6 +185,11 @@ pub struct RunConfig {
     /// worker death rolls the run back to the last checkpointed epoch,
     /// so smaller values cost bandwidth but lose less work per crash.
     pub sync_every: usize,
+    /// Distributed training: the worker grid as `(pr, pc)` — pr W-row
+    /// panels × pc H-row panels, `pr·pc` workers (CLI: `--grid 2x2`).
+    /// `None` runs the 1D row-sharded plan over `train_workers`
+    /// daemons; `(1, n)` is that plan bit-for-bit.
+    pub grid: Option<(usize, usize)>,
     /// Reconstruction loss. `None` infers from the engine (mu-kl ⇒ KL,
     /// everything else ⇒ Frobenius); `Some(Kl)` with `engine = mu`
     /// promotes to the KL engine (see [`Self::effective_engine`]).
@@ -212,6 +234,7 @@ impl Default for RunConfig {
             max_inflight: 32,
             train_workers: 2,
             sync_every: 4,
+            grid: None,
             loss: None,
             alpha: 0.0,
             l1_ratio: 0.0,
@@ -334,6 +357,19 @@ impl RunConfig {
                 0 => bail!("sync_every must be >= 1"),
                 n => self.sync_every = n,
             },
+            "grid" => {
+                self.grid = if v.is_null() {
+                    None
+                } else if let Some(n) = v.as_usize() {
+                    // `--grid 4`: the CLI type-infers a number; treat it
+                    // as the 1D 1xN plan like the string form does.
+                    Some(parse_grid(&n.to_string())?)
+                } else {
+                    Some(parse_grid(v.as_str().ok_or_else(|| {
+                        anyhow!("expected a PRxPC grid like '2x2', got {v}")
+                    })?)?)
+                }
+            }
             "loss" => {
                 self.loss = if v.is_null() { None } else { Some(Loss::from_str(need_str()?)?) }
             }
@@ -390,6 +426,9 @@ impl RunConfig {
             ("l1_ratio", Json::num(self.l1_ratio)),
             ("init", Json::str(self.init.name())),
         ];
+        if let Some((pr, pc)) = self.grid {
+            pairs.push(("grid", Json::str(format!("{pr}x{pc}"))));
+        }
         if let Some(l) = self.loss {
             pairs.push(("loss", Json::str(l.name())));
         }
@@ -739,6 +778,32 @@ mod tests {
         assert!(cfg.set_str("sync_every", "0").is_err());
         assert!(cfg.set_str("max_backoff_ms", "0").is_err());
         assert_eq!(cfg.train_workers, 4, "failed set must not alter the config");
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn grid_key_parses_roundtrips_and_rejects() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.grid, None, "no grid by default — the 1D plan");
+        cfg.set_str("grid", "2x2").unwrap();
+        assert_eq!(cfg.grid, Some((2, 2)));
+        cfg.set_str("grid", "1X4").unwrap();
+        assert_eq!(cfg.grid, Some((1, 4)));
+        // A bare N is the 1D 1xN plan (the CLI type-infers it numeric).
+        cfg.set_str("grid", "4").unwrap();
+        assert_eq!(cfg.grid, Some((1, 4)));
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.grid, Some((1, 4)));
+        // Null clears it (and keeps known_keys_match_set honest).
+        cfg.set("grid", &Json::Null).unwrap();
+        assert_eq!(cfg.grid, None);
+        let re = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(re.grid, None, "unset grid stays off the JSON");
+        for bad in ["0x2", "2x0", "2x", "x2", "axb", "2x2x2", "-1x2"] {
+            let err = format!("{:#}", cfg.set_str("grid", bad).unwrap_err());
+            assert!(err.contains("grid"), "{bad}: {err}");
+        }
+        assert_eq!(cfg.grid, None, "failed sets must not alter the config");
         cfg.validate().unwrap();
     }
 

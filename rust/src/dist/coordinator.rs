@@ -1,33 +1,66 @@
-//! The distributed-HALS coordinator behind `plnmf train-dist`.
+//! The distributed-training coordinator behind `plnmf train-dist`.
 //!
-//! Topology: one coordinator process owning W (V×k) and the trace;
-//! N training workers, each a `plnmf serve --train_worker` daemon
-//! holding a row shard of Aᵀ (documents) and the matching rows of H.
-//! Shards come from [`balanced_row_shards`] (nnz-balanced for sparse
-//! data) so every sweep's critical path is the *heaviest* shard, not
-//! the unluckiest.
+//! Topology: one coordinator process owning W (V×k) and the trace, and
+//! a pr×pc **grid** of training workers, each a `plnmf serve
+//! --train_worker` daemon. The default grid is 1×N — PR 6's row-sharded
+//! plan, where each worker holds a row shard of Aᵀ (documents) and the
+//! matching rows of H — and `--grid PRxPC` generalizes it: worker (i,j)
+//! holds the A block at W-row-panel i × H-row-panel j plus the column's
+//! H panel. Both axes are nnz-balanced by [`balanced_row_shards`] (the
+//! document axis over Aᵀ, the word axis over A) so every round's
+//! critical path is the *heaviest* block, not the unluckiest.
+//!
+//! ## 1D epochs (pr = 1)
 //!
 //! One epoch (= one FAST-HALS outer iteration):
 //!
-//! 1. broadcast W to every worker as a `0x04 sweep` frame;
+//! 1. broadcast W to every worker as a `0x04 sweep` frame (`0x06` for
+//!    the MU/KL engines);
 //! 2. each worker runs its H half-sweep and replies `Q_s ‖ P_s (‖ H_s)`
 //!    (`0x83 gram-response`);
 //! 3. the coordinator all-reduces `Q = Σ Q_s` (k×k) and `P = Σ P_s`
 //!    (V×k) in worker-index order — deterministic summation — then runs
-//!    the W update and scores the epoch with
+//!    the W update (HALS, MU, or the KL rule) and scores the epoch with
 //!    [`error::rel_error_from_parts`], never touching the dataset.
 //!
 //! This is the MPI-FAUN communication shape: per epoch each worker
 //! ships one V×k panel and one k×k Gram, independent of nnz.
 //!
+//! ## Grid epochs (pr > 1)
+//!
+//! With both factors panel-sharded no worker ever sees a full V×k
+//! panel; an epoch is two rounds:
+//!
+//! 1. **Round A** (`0x07`): worker (i,j) receives its W row panel `W_i`
+//!    (v_i×k) and replies `R_ij = A_ijᵀ·W_i` (d_j×k). The coordinator
+//!    reduces `R_j = Σ_i R_ij` per column (grid-row order) and computes
+//!    `S = WᵀW` itself.
+//! 2. **Round B** (`0x08`): every worker in column j receives `S ‖ R_j`
+//!    ((k+d_j)×k), runs the identical deterministic H update (so the
+//!    pr replicas of `H_j` stay bit-identical), and replies its block
+//!    product `P_ij = A_ij·H_j` (v_i×k); grid row 0 also answers
+//!    `Q_j = H_jᵀH_j` (and the H panel at checkpoints). The coordinator
+//!    reduces `Q = Σ_j Q_j`, assembles P from its row panels
+//!    `P_i = Σ_j P_ij`, and updates W.
+//!
+//! Per-epoch coordinator traffic drops from `2·p·V·k` (1D broadcast +
+//! gather) to `Σ v_i·k` out + `Σ (v_i + d_j)·k + pc·k²` back — panel
+//! sized, not worker-count × V sized. (The KL loss needs the full W at
+//! each worker and therefore stays on 1×N grids.)
+//!
+//! Shard shipping overlaps the first epoch: each slot's connection
+//! ships its shard and immediately runs epoch 1's first frame on a
+//! dedicated thread, so fast-loading workers are already sweeping while
+//! big shards are still in flight.
+//!
 //! Fault tolerance: every `sync_every` epochs (and on the last) the
 //! sweep returns the workers' H panels and the coordinator checkpoints
-//! `(epoch, W, H panels)`. If any sweep fails — worker death, torn
+//! `(epoch, W, H panels)`. If any round fails — worker death, torn
 //! connection, timeout — the coordinator respawns dead processes on
-//! fresh ports, re-ships their shards, rewinds every survivor's H panel
-//! to the checkpoint, truncates the trace, and resumes from
-//! `checkpoint + 1`. A run with a mid-epoch worker kill therefore
-//! completes, repeating at most `sync_every` epochs of work.
+//! fresh ports, re-ships their shards (and only theirs), rewinds every
+//! survivor's H panel to the checkpoint, truncates the trace, and
+//! resumes from `checkpoint + 1`. A run with a mid-epoch worker kill
+//! therefore completes, repeating at most `sync_every` epochs of work.
 
 use std::net::SocketAddr;
 use std::ops::Range;
@@ -41,8 +74,8 @@ use crate::coordinator::shard::balanced_row_shards;
 use crate::coordinator::RunReport;
 use crate::data::{load_dataset, DataMatrix, Dataset};
 use crate::linalg::Mat;
-use crate::nmf::halsops::{update_naive, UpdateKind};
-use crate::nmf::{error, Factors, IterRecord, Solver};
+use crate::nmf::halsops::{update_naive, Shrink, UpdateKind};
+use crate::nmf::{error, mu, mukl, products, Factors, IterRecord, Loss, Solver};
 use crate::parallel::pool::default_threads;
 use crate::parallel::{split_even, ThreadPool};
 use crate::serve::wire::{self, BinOp, WirePayload};
@@ -52,7 +85,7 @@ use crate::util::json::Json;
 use crate::util::{PhaseTimers, Timer};
 use crate::{Elem, Result};
 
-use super::protocol::{self, GramMeta, ShardBegin};
+use super::protocol::{self, GramMeta, GridBReq, ShardBegin};
 
 /// How the coordinator finds (or makes) its workers.
 #[derive(Debug, Clone)]
@@ -63,6 +96,7 @@ pub struct DistOpts {
     /// Interface spawned workers bind / are dialed on.
     pub host: String,
     /// Worker count when spawning (capped at the document count).
+    /// Ignored when `grid` is set — the grid dictates the count.
     pub workers: usize,
     /// Checkpoint cadence: pull H panels every this many epochs.
     pub sync_every: usize,
@@ -78,6 +112,10 @@ pub struct DistOpts {
     /// Fault injection: kill worker `.1` at the start of epoch `.0`
     /// (spawned workers only) — exercises the recovery path end-to-end.
     pub chaos_kill: Option<(usize, usize)>,
+    /// The worker grid as `(pr, pc)` — pr W-row panels × pc H-row
+    /// panels, `pr·pc` workers. `None` and `(1, n)` run the 1D
+    /// row-sharded plan bit-identically.
+    pub grid: Option<(usize, usize)>,
 }
 
 impl Default for DistOpts {
@@ -91,33 +129,168 @@ impl Default for DistOpts {
             ready_timeout: Duration::from_secs(10),
             attach: Vec::new(),
             chaos_kill: None,
+            grid: None,
         }
     }
 }
 
+/// Coordinator-side accounting for one `train-dist` run — what the
+/// bench prints beside the trace.
+#[derive(Debug, Clone, Copy)]
+pub struct DistStats {
+    /// Worker slots the run used.
+    pub workers: usize,
+    /// The effective grid `(pr, pc)` after clamping to the dataset.
+    pub grid: (usize, usize),
+    /// Training epochs executed (recovered epochs count again — they
+    /// were paid for again).
+    pub epochs: usize,
+    /// Bytes of per-epoch coordinator traffic (sweep/round frames in
+    /// both directions; shard shipping excluded), summed over the run.
+    pub coord_bytes: u64,
+}
+
+impl DistStats {
+    /// Average per-epoch coordinator traffic in bytes.
+    pub fn bytes_per_epoch(&self) -> u64 {
+        if self.epochs == 0 {
+            0
+        } else {
+            self.coord_bytes / self.epochs as u64
+        }
+    }
+}
+
+/// The 2D block partition behind a grid run: `pr` W-row (word) panels ×
+/// `pc` H-row (document) panels, both nnz-balanced. Worker (i,j) owns
+/// the A block `wrows[i] × hrows[j]`; since each axis is a contiguous
+/// partition of its dimension, every matrix entry lands in exactly one
+/// block (asserted by the plan property test).
+#[derive(Debug, Clone)]
+pub struct GridPlan {
+    pub pr: usize,
+    pub pc: usize,
+    /// Word-axis panels (rows of A and of W), length `pr`.
+    pub wrows: Vec<Range<usize>>,
+    /// Document-axis panels (rows of Aᵀ and of H), length `pc`.
+    pub hrows: Vec<Range<usize>>,
+}
+
+impl GridPlan {
+    /// Partition `ds` over a pr×pc grid. Each axis is clamped to its
+    /// dimension (a 4×4 grid over 3 documents becomes 4×3). With
+    /// `pr = 1` the document axis is byte-identical to the 1D plan the
+    /// row-sharded path computes.
+    pub fn new(ds: &Dataset, pr: usize, pc: usize) -> GridPlan {
+        let pr = pr.max(1).min(ds.v().max(1));
+        let pc = pc.max(1).min(ds.d().max(1));
+        let hrows = match &ds.at {
+            DataMatrix::Sparse(at) => balanced_row_shards(at, pc),
+            DataMatrix::Dense(_) => split_even(ds.d(), pc),
+        };
+        let wrows = match &ds.a {
+            DataMatrix::Sparse(a) => balanced_row_shards(a, pr),
+            DataMatrix::Dense(_) => split_even(ds.v(), pr),
+        };
+        GridPlan { pr, pc, wrows, hrows }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// The block owned by worker (i,j): word rows × document rows.
+    pub fn block(&self, i: usize, j: usize) -> (Range<usize>, Range<usize>) {
+        (self.wrows[i].clone(), self.hrows[j].clone())
+    }
+}
+
+/// Which distributed engine a spec maps onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DistEngine {
+    /// FAST-HALS — `0x04` sweeps, the PR 6 wire bit-for-bit.
+    Hals,
+    /// Frobenius multiplicative updates — `0x06` sweeps, same reply
+    /// shape as HALS.
+    Mu,
+    /// KL multiplicative updates — `0x06` sweeps with the KL reply
+    /// (colsum row + numerator partial). 1×N grids only.
+    MuKl,
+}
+
+impl DistEngine {
+    fn report_name(self) -> &'static str {
+        match self {
+            DistEngine::Hals => "fasthals-dist",
+            DistEngine::Mu => "mu-dist",
+            DistEngine::MuKl => "mukl-dist",
+        }
+    }
+}
+
+/// Map an engine spec onto the distributed families, or refuse with the
+/// `plnmf run` pointer — before any worker I/O.
+fn dist_engine(solver: Solver, loss: Loss) -> Result<DistEngine> {
+    match (solver, loss) {
+        (Solver::Hals, Loss::Frobenius) => Ok(DistEngine::Hals),
+        (Solver::Mu, Loss::Frobenius) => Ok(DistEngine::Mu),
+        (Solver::Mu, Loss::Kl) => Ok(DistEngine::MuKl),
+        (solver, loss) => bail!(
+            "train-dist runs the distributed FAST-HALS and MU engine families; solver '{}' \
+             (loss '{}') is not supported — use `plnmf run` for the bpp family",
+            solver.name(),
+            loss.name()
+        ),
+    }
+}
+
 /// One worker slot: a shard assignment plus whatever process/connection
-/// currently backs it. The slot (name, row range) is permanent; the
-/// process and socket behind it change across restarts.
+/// currently backs it. The slot (name, block) is permanent; the process
+/// and socket behind it change across restarts. 1D slots leave the
+/// word range covering all of V and sit at grid position (0, index).
 struct Slot {
     name: String,
+    /// Document rows (rows of Aᵀ / H) this slot owns.
     range: Range<usize>,
+    /// Word rows (rows of A / W) this slot owns — `0..V` on 1D runs.
+    vrange: Range<usize>,
+    /// Grid position (i, j); 1D slots are (0, index).
+    gi: usize,
+    gj: usize,
     addr: SocketAddr,
     child: Option<ManagedWorker>,
     client: Option<Client>,
 }
 
-/// One worker's sweep reply, decoded.
+/// One worker's sweep reply, decoded. `q` is the k×k local Gram on the
+/// Frobenius engines and the 1×k H column-sum row on KL.
 struct SweepReply {
     q: Mat,
     p: Mat,
     h: Option<Mat>,
+    /// Frame bytes this exchange moved (request + reply).
+    bytes: u64,
 }
 
-/// Last consistent state the run can rewind to.
+/// One worker's grid round-A reply: its block partial `R_ij` (d_j×k).
+struct GridAReply {
+    r: Mat,
+    bytes: u64,
+}
+
+/// One worker's grid round-B reply.
+struct GridBReply {
+    q: Option<Mat>,
+    p: Mat,
+    h: Option<Mat>,
+    bytes: u64,
+}
+
+/// Last consistent state the run can rewind to. `h` is indexed per
+/// slot on 1D runs and per grid *column* on grid runs.
 struct Checkpoint {
     epoch: usize,
     w: Mat,
-    /// Per-slot H panels, indexed like `slots`.
     h: Vec<Mat>,
 }
 
@@ -174,12 +347,16 @@ fn send_shard_load(
     }
 }
 
-/// Ship one slot's shard: `begin`, data chunks, then the H panel that
-/// finalizes it (or re-syncs a resident shard) at `epoch`.
+/// Ship one slot's block: `begin`, data chunks, then the H panel that
+/// finalizes it (or re-syncs a resident shard) at `epoch`. 1D slots
+/// pass `vrange = 0..V`, making this exactly the PR 6 row-shard wire;
+/// grid slots additionally localize column indices into their word
+/// panel.
 fn ship_shard(
     client: &mut Client,
     name: &str,
     range: &Range<usize>,
+    vrange: &Range<usize>,
     ds: &Dataset,
     h: &Mat,
     k: usize,
@@ -187,19 +364,39 @@ fn ship_shard(
     epoch: usize,
 ) -> Result<()> {
     let d_s = range.len();
-    let v = ds.v();
+    let v_s = vrange.len();
+    let whole_v = vrange.start == 0 && vrange.end == ds.v();
     match &ds.at {
         DataMatrix::Sparse(at) => {
-            let nnz = at.row_ptr()[range.end] - at.row_ptr()[range.start];
-            let begin =
-                ShardBegin { rows: d_s, cols: v, k, threads, sparse: true, row0: range.start, nnz };
+            let nnz = if whole_v {
+                at.row_ptr()[range.end] - at.row_ptr()[range.start]
+            } else {
+                let mut n = 0usize;
+                for row in range.clone() {
+                    let (cols, _) = at.row(row);
+                    n += cols.iter().filter(|&&c| vrange.contains(&(c as usize))).count();
+                }
+                n
+            };
+            let begin = ShardBegin {
+                rows: d_s,
+                cols: v_s,
+                k,
+                threads,
+                sparse: true,
+                row0: range.start,
+                nnz,
+            };
             send_shard_load(client, name, &begin.to_meta(), 0, 0, &[])?;
             let mut seq = 0usize;
             let mut buf: Vec<(usize, usize, Elem)> = Vec::new();
             for row in range.clone() {
                 let (cols, vals) = at.row(row);
                 for (&c, &x) in cols.iter().zip(vals) {
-                    buf.push((row - range.start, c as usize, x));
+                    let c = c as usize;
+                    if vrange.contains(&c) {
+                        buf.push((row - range.start, c - vrange.start, x));
+                    }
                 }
                 if buf.len() >= protocol::SPARSE_CHUNK_NNZ || (row + 1 == range.end && !buf.is_empty())
                 {
@@ -213,20 +410,29 @@ fn ship_shard(
         DataMatrix::Dense(at) => {
             let begin = ShardBegin {
                 rows: d_s,
-                cols: v,
+                cols: v_s,
                 k,
                 threads,
                 sparse: false,
                 row0: range.start,
-                nnz: d_s * v,
+                nnz: d_s * v_s,
             };
             send_shard_load(client, name, &begin.to_meta(), 0, 0, &[])?;
-            let step = protocol::dense_chunk_rows(v);
+            let v = ds.v();
+            let step = protocol::dense_chunk_rows(v_s);
             let (mut seq, mut r0) = (0usize, range.start);
             while r0 < range.end {
                 let r1 = (r0 + step).min(range.end);
-                let data = &at.data()[r0 * v..r1 * v];
-                send_shard_load(client, name, &protocol::chunk_meta(seq), r1 - r0, v, data)?;
+                if whole_v {
+                    let data = &at.data()[r0 * v..r1 * v];
+                    send_shard_load(client, name, &protocol::chunk_meta(seq), r1 - r0, v, data)?;
+                } else {
+                    let mut data = Vec::with_capacity((r1 - r0) * v_s);
+                    for r in r0..r1 {
+                        data.extend_from_slice(&at.data()[r * v + vrange.start..r * v + vrange.end]);
+                    }
+                    send_shard_load(client, name, &protocol::chunk_meta(seq), r1 - r0, v_s, &data)?;
+                }
                 seq += 1;
                 r0 = r1;
             }
@@ -235,33 +441,37 @@ fn ship_shard(
     send_shard_load(client, name, &protocol::hpanel_meta(epoch), h.rows(), h.cols(), h.data())
 }
 
-/// One slot's epoch: broadcast W (with the run's H penalties riding the
-/// sweep meta), collect and validate its gram-response.
-fn sweep_slot(
-    slot: &mut Slot,
+/// One 1D sweep round-trip on an already-connected client: broadcast W
+/// through the engine's sweep op, collect and validate the
+/// gram-response.
+#[allow(clippy::too_many_arguments)]
+fn sweep_client(
+    client: &mut Client,
+    name: &str,
+    d_s: usize,
     w: &Mat,
     epoch: usize,
     want_h: bool,
     k: usize,
     l1: f64,
     l2: f64,
+    engine: DistEngine,
 ) -> Result<SweepReply> {
-    let name = slot.name.as_str();
-    let client =
-        slot.client.as_mut().ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
-    let bytes = wire::encode(
-        BinOp::Sweep,
-        name,
-        &protocol::sweep_meta(epoch, want_h, l1, l2),
-        w.rows(),
-        k,
-        w.data(),
-    )?;
+    let (op, meta) = match engine {
+        DistEngine::Hals => (BinOp::Sweep, protocol::sweep_meta(epoch, want_h, l1, l2)),
+        DistEngine::Mu => (BinOp::SweepMu, protocol::sweep_mu_meta(epoch, want_h, false, l1, l2)),
+        DistEngine::MuKl => (BinOp::SweepMu, protocol::sweep_mu_meta(epoch, want_h, true, l1, l2)),
+    };
+    let bytes = wire::encode(op, name, &meta, w.rows(), k, w.data())?;
+    let sent = bytes.len() as u64;
     let resp = client
         .request_wire(&WirePayload::Binary(bytes))
         .with_context(|| format!("sweep epoch {epoch} on '{name}'"))?;
-    let frame = match resp {
-        WirePayload::Binary(b) => wire::decode(&b)?,
+    let (frame, recvd) = match resp {
+        WirePayload::Binary(b) => {
+            let n = b.len() as u64;
+            (wire::decode(&b)?, n)
+        }
         WirePayload::Line(line) => {
             let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad sweep reply: {e}"))?;
             bail!(
@@ -277,9 +487,13 @@ fn sweep_slot(
     if gm.epoch != epoch {
         bail!("worker '{name}' answered epoch {} to a sweep for epoch {epoch}", gm.epoch);
     }
-    let expect_h = if want_h { slot.range.len() } else { 0 };
+    let expect_q = match engine {
+        DistEngine::MuKl => 1,
+        _ => k,
+    };
+    let expect_h = if want_h { d_s } else { 0 };
     if frame.cols != k
-        || gm.rows_q != k
+        || gm.rows_q != expect_q
         || gm.rows_p != w.rows()
         || gm.rows_h != expect_h
         || frame.rows != gm.rows_q + gm.rows_p + gm.rows_h
@@ -293,16 +507,161 @@ fn sweep_slot(
             gm.rows_h
         );
     }
-    let (qk, pk) = (k * k, gm.rows_p * k);
-    let q = Mat::from_vec(k, k, frame.data[..qk].to_vec());
+    let (qk, pk) = (gm.rows_q * k, gm.rows_p * k);
+    let q = Mat::from_vec(gm.rows_q, k, frame.data[..qk].to_vec());
     let p = Mat::from_vec(gm.rows_p, k, frame.data[qk..qk + pk].to_vec());
     let h = if want_h { Some(Mat::from_vec(gm.rows_h, k, frame.data[qk + pk..].to_vec())) } else { None };
-    Ok(SweepReply { q, p, h })
+    Ok(SweepReply { q, p, h, bytes: sent + recvd })
+}
+
+/// One slot's 1D epoch (see [`sweep_client`]).
+fn sweep_slot(
+    slot: &mut Slot,
+    w: &Mat,
+    epoch: usize,
+    want_h: bool,
+    k: usize,
+    l1: f64,
+    l2: f64,
+    engine: DistEngine,
+) -> Result<SweepReply> {
+    let name = slot.name.clone();
+    let d_s = slot.range.len();
+    let client =
+        slot.client.as_mut().ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
+    sweep_client(client, &name, d_s, w, epoch, want_h, k, l1, l2, engine)
+}
+
+/// One grid round-A round-trip: ship the slot's W panel, collect its
+/// block partial `R_ij`.
+fn grid_a_client(
+    client: &mut Client,
+    name: &str,
+    wpanel: &Mat,
+    epoch: usize,
+    d_s: usize,
+    k: usize,
+) -> Result<GridAReply> {
+    let bytes = wire::encode(
+        BinOp::GridSweepA,
+        name,
+        &protocol::grid_a_meta(epoch),
+        wpanel.rows(),
+        k,
+        wpanel.data(),
+    )?;
+    let sent = bytes.len() as u64;
+    let resp = client
+        .request_wire(&WirePayload::Binary(bytes))
+        .with_context(|| format!("grid round A epoch {epoch} on '{name}'"))?;
+    let (frame, recvd) = match resp {
+        WirePayload::Binary(b) => {
+            let n = b.len() as u64;
+            (wire::decode(&b)?, n)
+        }
+        WirePayload::Line(line) => {
+            let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad round-A reply: {e}"))?;
+            bail!(
+                "worker '{name}' failed round A of epoch {epoch}: {}",
+                j.get("error").as_str().unwrap_or(line.trim())
+            );
+        }
+    };
+    if frame.op != BinOp::GramResp {
+        bail!("worker '{name}' answered round A with op {:?}", frame.op);
+    }
+    let gm = GramMeta::from_meta(&frame.meta)?;
+    if gm.epoch != epoch {
+        bail!("worker '{name}' answered epoch {} to round A of epoch {epoch}", gm.epoch);
+    }
+    if frame.cols != k || gm.rows_q != 0 || gm.rows_h != 0 || gm.rows_p != d_s || frame.rows != d_s
+    {
+        bail!(
+            "worker '{name}' round-A reply is misshapen: {}x{} with rows_p={} (block holds {d_s} docs)",
+            frame.rows,
+            frame.cols,
+            gm.rows_p
+        );
+    }
+    Ok(GridAReply { r: Mat::from_vec(d_s, k, frame.data), bytes: sent + recvd })
+}
+
+/// One grid round-B round-trip: ship `S ‖ R_j`, collect
+/// `[Q_j] ‖ P_ij (‖ H_j)`.
+#[allow(clippy::too_many_arguments)]
+fn grid_b_client(
+    client: &mut Client,
+    name: &str,
+    s: &Mat,
+    rj: &Mat,
+    req: &GridBReq,
+    v_s: usize,
+    d_s: usize,
+    k: usize,
+) -> Result<GridBReply> {
+    let mut data = Vec::with_capacity((k + d_s) * k);
+    data.extend_from_slice(s.data());
+    data.extend_from_slice(rj.data());
+    let bytes = wire::encode(BinOp::GridSweepB, name, &protocol::grid_b_meta(req), k + d_s, k, &data)?;
+    let sent = bytes.len() as u64;
+    let epoch = req.epoch;
+    let resp = client
+        .request_wire(&WirePayload::Binary(bytes))
+        .with_context(|| format!("grid round B epoch {epoch} on '{name}'"))?;
+    let (frame, recvd) = match resp {
+        WirePayload::Binary(b) => {
+            let n = b.len() as u64;
+            (wire::decode(&b)?, n)
+        }
+        WirePayload::Line(line) => {
+            let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad round-B reply: {e}"))?;
+            bail!(
+                "worker '{name}' failed round B of epoch {epoch}: {}",
+                j.get("error").as_str().unwrap_or(line.trim())
+            );
+        }
+    };
+    if frame.op != BinOp::GramResp {
+        bail!("worker '{name}' answered round B with op {:?}", frame.op);
+    }
+    let gm = GramMeta::from_meta(&frame.meta)?;
+    if gm.epoch != epoch {
+        bail!("worker '{name}' answered epoch {} to round B of epoch {epoch}", gm.epoch);
+    }
+    let expect_q = if req.want_q { k } else { 0 };
+    let expect_h = if req.want_h { d_s } else { 0 };
+    if frame.cols != k
+        || gm.rows_q != expect_q
+        || gm.rows_p != v_s
+        || gm.rows_h != expect_h
+        || frame.rows != gm.rows_q + gm.rows_p + gm.rows_h
+    {
+        bail!(
+            "worker '{name}' round-B reply is misshapen: {}x{} with rows_q={} rows_p={} rows_h={}",
+            frame.rows,
+            frame.cols,
+            gm.rows_q,
+            gm.rows_p,
+            gm.rows_h
+        );
+    }
+    let (qk, pk) = (gm.rows_q * k, gm.rows_p * k);
+    let q = if req.want_q { Some(Mat::from_vec(k, k, frame.data[..qk].to_vec())) } else { None };
+    let p = Mat::from_vec(v_s, k, frame.data[qk..qk + pk].to_vec());
+    let h = if req.want_h {
+        Some(Mat::from_vec(d_s, k, frame.data[qk + pk..].to_vec()))
+    } else {
+        None
+    };
+    Ok(GridBReply { q, p, h, bytes: sent + recvd })
 }
 
 /// Respawn dead workers, re-ship their shards, and rewind survivors'
 /// H panels to the checkpoint. Every connection is rebuilt: a socket
-/// that saw a failed epoch may hold a half-written frame.
+/// that saw a failed epoch may hold a half-written frame. The
+/// checkpoint's H panel for a slot is `ckpt.h[slot.gj]` — per-slot on
+/// 1D runs (where `gj` is the slot index), per-column on grids (the pr
+/// replicas of a column rewind to the same panel).
 fn recover(
     slots: &mut [Slot],
     opts: &DistOpts,
@@ -313,6 +672,7 @@ fn recover(
 ) -> Result<()> {
     for (i, slot) in slots.iter_mut().enumerate() {
         slot.client = None;
+        let h = &ckpt.h[slot.gj];
         let dead = match slot.child.as_mut() {
             Some(child) => child.poll_exit().is_some(),
             None => false,
@@ -326,19 +686,30 @@ fn recover(
             let mut child = spawn_train_worker(binary, &opts.host, port)?;
             wait_ready(&mut child, opts.ready_timeout)?;
             crate::info!(
-                "train-dist: slot {i} respawned on {} (shard rows {}..{})",
+                "train-dist: slot {i} respawned on {} (block docs {}..{} words {}..{})",
                 child.addr(),
                 slot.range.start,
-                slot.range.end
+                slot.range.end,
+                slot.vrange.start,
+                slot.vrange.end
             );
             slot.addr = child.addr();
             slot.child = Some(child);
             let mut client = connect(slot.addr)?;
-            ship_shard(&mut client, &slot.name, &slot.range, ds, &ckpt.h[i], k, threads, ckpt.epoch)?;
+            ship_shard(
+                &mut client,
+                &slot.name,
+                &slot.range,
+                &slot.vrange,
+                ds,
+                h,
+                k,
+                threads,
+                ckpt.epoch,
+            )?;
             slot.client = Some(client);
         } else {
             let mut client = connect(slot.addr)?;
-            let h = &ckpt.h[i];
             send_shard_load(
                 &mut client,
                 &slot.name,
@@ -353,21 +724,74 @@ fn recover(
     Ok(())
 }
 
-/// Run distributed FAST-HALS per `cfg` over `opts`-described workers.
-/// With one worker this reproduces `plnmf run --engine fasthals`
+/// Build the slot list: attach to the given addresses or spawn one
+/// worker process per slot.
+fn make_slots(
+    opts: &DistOpts,
+    blocks: Vec<(String, Range<usize>, Range<usize>, usize, usize)>,
+) -> Result<Vec<Slot>> {
+    let mut slots: Vec<Slot> = Vec::with_capacity(blocks.len());
+    if !opts.attach.is_empty() {
+        if opts.attach.len() != blocks.len() {
+            bail!(
+                "train-dist: {} attached worker(s) for {} slot(s) — the plan needs one address \
+                 per slot",
+                opts.attach.len(),
+                blocks.len()
+            );
+        }
+        for (addr, (name, range, vrange, gi, gj)) in opts.attach.iter().zip(blocks) {
+            slots.push(Slot { name, range, vrange, gi, gj, addr: *addr, child: None, client: None });
+        }
+    } else {
+        let binary = opts
+            .binary
+            .as_ref()
+            .ok_or_else(|| anyhow!("train-dist: no worker binary configured"))?;
+        for (i, (name, range, vrange, gi, gj)) in blocks.into_iter().enumerate() {
+            let port = probe_free_port(&opts.host)?;
+            let mut child = spawn_train_worker(binary, &opts.host, port)?;
+            wait_ready(&mut child, opts.ready_timeout)
+                .with_context(|| format!("train worker {i} startup"))?;
+            slots.push(Slot {
+                name,
+                range,
+                vrange,
+                gi,
+                gj,
+                addr: child.addr(),
+                child: Some(child),
+                client: None,
+            });
+        }
+    }
+    Ok(slots)
+}
+
+/// Drain the slot list: drop connections, shut spawned workers down.
+fn shutdown_slots(slots: &mut [Slot]) {
+    for slot in slots {
+        slot.client = None;
+        if let Some(child) = slot.child.take() {
+            child.shutdown(Duration::from_secs(2));
+        }
+    }
+}
+
+/// Run distributed training per `cfg` over `opts`-described workers.
+/// With one worker this reproduces the matching `plnmf run` engine
 /// exactly: the same kernels run in the same order on the same pool
 /// sizes, only split across two processes.
 pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
+    Ok(train_dist_with_stats(cfg, opts)?.0)
+}
+
+/// [`train_dist`], also returning the coordinator's [`DistStats`]
+/// (bench + tooling surface).
+pub fn train_dist_with_stats(cfg: &RunConfig, opts: &DistOpts) -> Result<(RunReport, DistStats)> {
     cfg.validate()?;
     let spec = cfg.engine_spec()?;
-    if spec.solver != Solver::Hals {
-        bail!(
-            "train-dist runs the distributed FAST-HALS engine; solver '{}' (loss '{}') is not \
-             supported — use `plnmf run` for the mu/bpp families",
-            spec.solver.name(),
-            spec.loss.name()
-        );
-    }
+    let engine = dist_engine(spec.solver, spec.loss)?;
     // H-side elastic-net penalties travel in every sweep meta; zero stays
     // off the wire so pre-spec workers see byte-identical frames.
     let (l1, l2) = (f64::from(spec.l1()), f64::from(spec.l2()));
@@ -376,53 +800,135 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
     let pool = ThreadPool::new(threads);
     let k = cfg.k;
     let factors = Factors::init(&ds, k, cfg.seed, spec.init);
+    let pr = opts.grid.map_or(1, |(pr, _)| pr).max(1).min(ds.v().max(1));
+    if pr > 1 {
+        if engine == DistEngine::MuKl {
+            bail!(
+                "train-dist --grid with pr > 1 cannot run the KL loss (the KL H half-step needs \
+                 the full W at every worker); use a 1xN grid or the frobenius loss"
+            );
+        }
+        run_grid(cfg, opts, engine, (l1, l2), &ds, &pool, factors, threads)
+    } else {
+        run_1d(cfg, opts, engine, (l1, l2), &ds, &pool, factors, threads)
+    }
+}
 
+/// The 1×N row-sharded epoch loop — the PR 6 plan, now engine-generic.
+#[allow(clippy::too_many_arguments)]
+fn run_1d(
+    cfg: &RunConfig,
+    opts: &DistOpts,
+    engine: DistEngine,
+    (l1, l2): (f64, f64),
+    ds: &Dataset,
+    pool: &ThreadPool,
+    factors: Factors,
+    threads: usize,
+) -> Result<(RunReport, DistStats)> {
+    let k = cfg.k;
     let attach_mode = !opts.attach.is_empty();
-    let want = if attach_mode { opts.attach.len() } else { opts.workers.max(1) };
+    let want = if attach_mode {
+        opts.attach.len()
+    } else {
+        opts.grid.map_or(opts.workers, |(_, pc)| pc).max(1)
+    };
     let nworkers = want.min(ds.d()).max(1);
+    if let Some((gr, gc)) = opts.grid {
+        if attach_mode && gr.max(1) * gc.max(1) != opts.attach.len() {
+            bail!(
+                "train-dist: grid {}x{} needs {} worker(s), {} attached",
+                gr,
+                gc,
+                gr.max(1) * gc.max(1),
+                opts.attach.len()
+            );
+        }
+    }
     let ranges = match &ds.at {
         DataMatrix::Sparse(at) => balanced_row_shards(at, nworkers),
         DataMatrix::Dense(_) => split_even(ds.d(), nworkers),
     };
     crate::info!(
-        "train-dist: {} worker(s) over '{}' ({} docs, k={}, sync_every={})",
+        "train-dist: {} worker(s) over '{}' ({} docs, k={}, engine={}, sync_every={})",
         nworkers,
         cfg.dataset,
         ds.d(),
         k,
+        engine.report_name(),
         opts.sync_every.max(1)
     );
 
-    let mut slots: Vec<Slot> = Vec::with_capacity(nworkers);
-    if attach_mode {
-        for (i, (addr, range)) in opts.attach.iter().zip(ranges).enumerate() {
-            slots.push(Slot { name: format!("train-{i}"), range, addr: *addr, child: None, client: None });
-        }
-    } else {
-        let binary = opts
-            .binary
-            .as_ref()
-            .ok_or_else(|| anyhow!("train-dist: no worker binary configured"))?;
-        for (i, range) in ranges.into_iter().enumerate() {
-            let port = probe_free_port(&opts.host)?;
-            let mut child = spawn_train_worker(binary, &opts.host, port)?;
-            wait_ready(&mut child, opts.ready_timeout)
-                .with_context(|| format!("train worker {i} startup"))?;
-            slots.push(Slot {
-                name: format!("train-{i}"),
-                range,
-                addr: child.addr(),
-                child: Some(child),
-                client: None,
-            });
-        }
-    }
+    let v_all = 0..ds.v();
+    let blocks: Vec<_> = ranges
+        .into_iter()
+        .enumerate()
+        .map(|(i, range)| (format!("train-{i}"), range, v_all.clone(), 0, i))
+        .collect();
+    let mut slots = make_slots(opts, blocks)?;
 
-    for slot in &mut slots {
-        let mut client = connect(slot.addr)?;
-        let h = h_panel(&factors.h, &slot.range);
-        ship_shard(&mut client, &slot.name, &slot.range, &ds, &h, k, threads, 0)?;
+    let record_every = cfg.record_every.max(1);
+    let sync_every = opts.sync_every.max(1);
+    let iters = cfg.max_iters;
+    // want_h: checkpoint panels at sync epochs; the KL engine also needs
+    // panels at record epochs (its trace is scored from an assembled H —
+    // there are no Frobenius parts to score from).
+    let want_h_at = |it: usize| {
+        let sync = it % sync_every == 0 || it == iters;
+        let record = it % record_every == 0 || it == iters;
+        sync || (engine == DistEngine::MuKl && record)
+    };
+
+    // Ship every shard — and overlap: each slot's thread ships on its
+    // own connection and immediately runs epoch 1's sweep, so a worker
+    // with a small shard is already sweeping while big shards are still
+    // in flight. (Skipped when chaos wants to kill inside epoch 1: the
+    // kill must precede the frames.)
+    let do_prefetch = iters >= 1 && opts.chaos_kill.map_or(true, |(e, _)| e != 1);
+    let shipped: Vec<Result<(Client, Option<Result<SweepReply>>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = slots
+            .iter()
+            .map(|slot| {
+                let name = slot.name.clone();
+                let range = slot.range.clone();
+                let addr = slot.addr;
+                let h = h_panel(&factors.h, &slot.range);
+                let wref = &factors.w;
+                scope.spawn(move || -> Result<(Client, Option<Result<SweepReply>>)> {
+                    let mut client = connect(addr)?;
+                    ship_shard(&mut client, &name, &range, &(0..ds.v()), ds, &h, k, threads, 0)?;
+                    if !do_prefetch {
+                        return Ok((client, None));
+                    }
+                    let first = sweep_client(
+                        &mut client,
+                        &name,
+                        range.len(),
+                        wref,
+                        1,
+                        want_h_at(1),
+                        k,
+                        l1,
+                        l2,
+                        engine,
+                    );
+                    Ok((client, Some(first)))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("ship thread panicked"))))
+            .collect()
+    });
+    let mut prefetched: Option<Vec<Result<SweepReply>>> =
+        if do_prefetch { Some(Vec::with_capacity(slots.len())) } else { None };
+    for (slot, r) in slots.iter_mut().zip(shipped) {
+        let (client, first) = r.with_context(|| format!("shipping shard to '{}'", slot.name))?;
         slot.client = Some(client);
+        if let (Some(list), Some(first)) = (prefetched.as_mut(), first) {
+            list.push(first);
+        }
     }
 
     let mut w = factors.w.clone();
@@ -432,17 +938,16 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
         h: slots.iter().map(|s| h_panel(&factors.h, &s.range)).collect(),
     };
     let mut timers = PhaseTimers::new();
-    let record_every = cfg.record_every.max(1);
-    let sync_every = opts.sync_every.max(1);
-    let iters = cfg.max_iters;
     let mut trace = vec![IterRecord {
         iter: 0,
         elapsed_secs: 0.0,
-        rel_error: error::rel_error(&pool, &ds, &factors.w, &factors.h),
+        rel_error: error::rel_error(pool, ds, &factors.w, &factors.h),
     }];
     let mut elapsed = 0.0f64;
     let mut restarts = 0usize;
     let mut chaos = opts.chaos_kill;
+    let mut coord_bytes = 0u64;
+    let mut epochs_run = 0usize;
 
     let mut it = 1usize;
     while it <= iters {
@@ -455,19 +960,28 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
                 }
             }
         }
-        let want_h = it % sync_every == 0 || it == iters;
+        let want_h = want_h_at(it);
+        let sync = it % sync_every == 0 || it == iters;
+        let record = it % record_every == 0 || it == iters;
         let t = Timer::start();
-        let replies: Vec<Result<SweepReply>> = std::thread::scope(|scope| {
-            let wref = &w;
-            let handles: Vec<_> = slots
-                .iter_mut()
-                .map(|slot| scope.spawn(move || sweep_slot(slot, wref, it, want_h, k, l1, l2)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("sweep thread panicked"))))
-                .collect()
-        });
+        let replies: Vec<Result<SweepReply>> = match prefetched.take() {
+            Some(r) if it == 1 => r,
+            _ => std::thread::scope(|scope| {
+                let wref = &w;
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .map(|slot| {
+                        scope.spawn(move || {
+                            sweep_slot(slot, wref, it, want_h, k, l1, l2, engine)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("sweep thread panicked"))))
+                    .collect()
+            }),
+        };
         if let Some(err) = replies.iter().find_map(|r| r.as_ref().err()) {
             restarts += 1;
             if attach_mode {
@@ -480,7 +994,7 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
                 "train-dist: epoch {it} failed ({err:#}); rewinding to epoch {}",
                 ckpt.epoch
             );
-            recover(&mut slots, opts, &ds, &ckpt, k, threads)?;
+            recover(&mut slots, opts, ds, &ckpt, k, threads)?;
             w = ckpt.w.clone();
             trace.retain(|r| r.iter <= ckpt.epoch);
             it = ckpt.epoch + 1;
@@ -488,18 +1002,67 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
         }
         let mut replies: Vec<SweepReply> =
             replies.into_iter().map(|r| r.expect("errors handled above")).collect();
+        coord_bytes += replies.iter().map(|r| r.bytes).sum::<u64>();
+        epochs_run += 1;
 
-        // All-reduce in slot order: Q = Σ Q_s, P = Σ P_s.
+        // All-reduce in slot order: Q = Σ Q_s, P = Σ P_s — then the
+        // engine's W half-step on the reduced parts.
         let mut q = replies[0].q.clone();
         let mut p = replies[0].p.clone();
         for r in &replies[1..] {
             add_into(&mut q, &r.q);
             add_into(&mut p, &r.p);
         }
-        update_naive(&pool, &mut w, &q, &p, UpdateKind::WithDiagAndNorm, &mut timers, "w_dmv");
+        match engine {
+            DistEngine::Hals => {
+                update_naive(pool, &mut w, &q, &p, UpdateKind::WithDiagAndNorm, &mut timers, "w_dmv");
+            }
+            DistEngine::Mu => {
+                timers.time("w_mu", || mu::mu_update(pool, &mut w, &q, &p));
+            }
+            DistEngine::MuKl => {
+                // The KL denominator is colsum(H); reduce the workers'
+                // colsum rows in f64, slot order (q here is 1×k rows).
+                let mut denom = vec![0.0f64; k];
+                for r in &replies {
+                    for (t, d) in denom.iter_mut().enumerate() {
+                        *d += f64::from(r.q.data()[t]);
+                    }
+                }
+                timers.time("w_mukl", || mukl::kl_apply(pool, &mut w, &p, &denom, Shrink::NONE));
+            }
+        }
         elapsed += t.elapsed_secs();
 
-        if want_h {
+        if record {
+            let rel = if engine == DistEngine::MuKl {
+                // No Frobenius parts to score from — assemble H and
+                // score directly (what the single-process trace records).
+                let mut hdata = vec![0.0 as Elem; ds.d() * k];
+                for (slot, r) in slots.iter().zip(&replies) {
+                    let h = r.h.as_ref().ok_or_else(|| {
+                        anyhow!("worker '{}' omitted its H panel at record epoch {it}", slot.name)
+                    })?;
+                    hdata[slot.range.start * k..slot.range.end * k].copy_from_slice(h.data());
+                }
+                let hfull = Mat::from_vec(ds.d(), k, hdata);
+                error::rel_error(pool, ds, &w, &hfull)
+            } else {
+                error::rel_error_from_parts(pool, ds.fro2, &p, &w, &q)
+            };
+            trace.push(IterRecord { iter: it, elapsed_secs: elapsed, rel_error: rel });
+            if cfg.tol > 0.0 && trace.len() > 5 {
+                let prev = trace[trace.len() - 6].rel_error;
+                let cur = trace[trace.len() - 1].rel_error;
+                if prev - cur < cfg.tol {
+                    if sync {
+                        ckpt.epoch = it;
+                    }
+                    break;
+                }
+            }
+        }
+        if sync {
             ckpt.epoch = it;
             ckpt.w = w.clone();
             for (i, r) in replies.iter_mut().enumerate() {
@@ -509,33 +1072,14 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
                     .ok_or_else(|| anyhow!("worker {i} omitted its H panel at sync epoch {it}"))?;
             }
         }
-        if it % record_every == 0 || it == iters {
-            trace.push(IterRecord {
-                iter: it,
-                elapsed_secs: elapsed,
-                rel_error: error::rel_error_from_parts(&pool, ds.fro2, &p, &w, &q),
-            });
-            if cfg.tol > 0.0 && trace.len() > 5 {
-                let prev = trace[trace.len() - 6].rel_error;
-                let cur = trace[trace.len() - 1].rel_error;
-                if prev - cur < cfg.tol {
-                    break;
-                }
-            }
-        }
         it += 1;
     }
 
-    for slot in &mut slots {
-        slot.client = None;
-        if let Some(child) = slot.child.take() {
-            child.shutdown(Duration::from_secs(2));
-        }
-    }
+    shutdown_slots(&mut slots);
 
     let final_rel_error = trace.last().map(|r| r.rel_error).unwrap_or(f64::NAN);
     let report = RunReport {
-        engine: "fasthals-dist",
+        engine: engine.report_name(),
         dataset: cfg.dataset.clone(),
         k,
         tile: cfg.tile,
@@ -548,7 +1092,309 @@ pub fn train_dist(cfg: &RunConfig, opts: &DistOpts) -> Result<RunReport> {
     if let Some(path) = &cfg.trace_path {
         crate::coordinator::metrics::write_trace_csv(std::path::Path::new(path), &report)?;
     }
-    Ok(report)
+    let stats = DistStats { workers: nworkers, grid: (1, nworkers), epochs: epochs_run, coord_bytes };
+    Ok((report, stats))
+}
+
+/// The pr×pc two-round epoch loop (see the module doc).
+#[allow(clippy::too_many_arguments)]
+fn run_grid(
+    cfg: &RunConfig,
+    opts: &DistOpts,
+    engine: DistEngine,
+    (l1, l2): (f64, f64),
+    ds: &Dataset,
+    pool: &ThreadPool,
+    factors: Factors,
+    threads: usize,
+) -> Result<(RunReport, DistStats)> {
+    let k = cfg.k;
+    let (gr, gc) = opts.grid.expect("run_grid is only entered with a grid");
+    let plan = GridPlan::new(ds, gr, gc);
+    let (pr, pc) = (plan.pr, plan.pc);
+    let attach_mode = !opts.attach.is_empty();
+    crate::info!(
+        "train-dist: {}x{} grid ({} workers) over '{}' ({}x{} entries, k={}, engine={})",
+        pr,
+        pc,
+        plan.workers(),
+        cfg.dataset,
+        ds.v(),
+        ds.d(),
+        k,
+        engine.report_name()
+    );
+
+    // Slots in row-major grid order: slot i*pc + j is worker (i, j).
+    let blocks: Vec<_> = (0..pr)
+        .flat_map(|i| (0..pc).map(move |j| (i, j)))
+        .map(|(i, j)| {
+            let (vrange, drange) = plan.block(i, j);
+            (format!("train-g{i}-{j}"), drange, vrange, i, j)
+        })
+        .collect();
+    let mut slots = make_slots(opts, blocks)?;
+
+    let record_every = cfg.record_every.max(1);
+    let sync_every = opts.sync_every.max(1);
+    let iters = cfg.max_iters;
+
+    // Ship every block, overlapping with epoch 1's round A exactly like
+    // the 1D path overlaps its first sweep.
+    let do_prefetch = iters >= 1 && opts.chaos_kill.map_or(true, |(e, _)| e != 1);
+    let shipped: Vec<Result<(Client, Option<Result<GridAReply>>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = slots
+            .iter()
+            .map(|slot| {
+                let name = slot.name.clone();
+                let drange = slot.range.clone();
+                let vrange = slot.vrange.clone();
+                let addr = slot.addr;
+                let h = h_panel(&factors.h, &slot.range);
+                let wp = h_panel(&factors.w, &slot.vrange);
+                scope.spawn(move || -> Result<(Client, Option<Result<GridAReply>>)> {
+                    let mut client = connect(addr)?;
+                    ship_shard(&mut client, &name, &drange, &vrange, ds, &h, k, threads, 0)?;
+                    if !do_prefetch {
+                        return Ok((client, None));
+                    }
+                    let first = grid_a_client(&mut client, &name, &wp, 1, drange.len(), k);
+                    Ok((client, Some(first)))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("ship thread panicked"))))
+            .collect()
+    });
+    let mut prefetched: Option<Vec<Result<GridAReply>>> =
+        if do_prefetch { Some(Vec::with_capacity(slots.len())) } else { None };
+    for (slot, r) in slots.iter_mut().zip(shipped) {
+        let (client, first) = r.with_context(|| format!("shipping block to '{}'", slot.name))?;
+        slot.client = Some(client);
+        if let (Some(list), Some(first)) = (prefetched.as_mut(), first) {
+            list.push(first);
+        }
+    }
+
+    let mut w = factors.w.clone();
+    let mut ckpt = Checkpoint {
+        epoch: 0,
+        w: w.clone(),
+        h: plan.hrows.iter().map(|r| h_panel(&factors.h, r)).collect(),
+    };
+    let mut timers = PhaseTimers::new();
+    let mut trace = vec![IterRecord {
+        iter: 0,
+        elapsed_secs: 0.0,
+        rel_error: error::rel_error(pool, ds, &factors.w, &factors.h),
+    }];
+    let mut elapsed = 0.0f64;
+    let mut restarts = 0usize;
+    let mut chaos = opts.chaos_kill;
+    let mut coord_bytes = 0u64;
+    let mut epochs_run = 0usize;
+
+    // One failure handler for both rounds: attach mode is fatal,
+    // spawn mode rewinds to the checkpoint.
+    macro_rules! fail_epoch {
+        ($it:ident, $err:expr) => {{
+            let err = $err;
+            restarts += 1;
+            if attach_mode {
+                bail!("train-dist: epoch {} failed on attached workers: {err:#}", $it);
+            }
+            if restarts > opts.max_restarts {
+                bail!("train-dist: giving up after {} recoveries: {err:#}", restarts - 1);
+            }
+            crate::warn_!(
+                "train-dist: epoch {} failed ({err:#}); rewinding to epoch {}",
+                $it,
+                ckpt.epoch
+            );
+            recover(&mut slots, opts, ds, &ckpt, k, threads)?;
+            w = ckpt.w.clone();
+            trace.retain(|r| r.iter <= ckpt.epoch);
+            $it = ckpt.epoch + 1;
+            continue;
+        }};
+    }
+
+    let mut it = 1usize;
+    while it <= iters {
+        if let Some((epoch, idx)) = chaos {
+            if epoch == it {
+                chaos = None;
+                if let Some(child) = slots.get_mut(idx).and_then(|s| s.child.as_mut()) {
+                    crate::info!("train-dist: chaos kill of worker {idx} at epoch {it}");
+                    child.kill();
+                }
+            }
+        }
+        let sync = it % sync_every == 0 || it == iters;
+        let record = it % record_every == 0 || it == iters;
+        let t = Timer::start();
+
+        // Round A: W panels out, block partials R_ij back.
+        let ra: Vec<Result<GridAReply>> = match prefetched.take() {
+            Some(r) if it == 1 => r,
+            _ => std::thread::scope(|scope| {
+                let wref = &w;
+                let handles: Vec<_> = slots
+                    .iter_mut()
+                    .map(|slot| {
+                        let wp = h_panel(wref, &slot.vrange);
+                        scope.spawn(move || {
+                            let name = slot.name.clone();
+                            let d_s = slot.range.len();
+                            let client = slot
+                                .client
+                                .as_mut()
+                                .ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
+                            grid_a_client(client, &name, &wp, it, d_s, k)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("round-A thread panicked"))))
+                    .collect()
+            }),
+        };
+        if let Some(err) = ra.iter().find_map(|r| r.as_ref().err()) {
+            fail_epoch!(it, err);
+        }
+        let ra: Vec<GridAReply> = ra.into_iter().map(|r| r.expect("errors handled above")).collect();
+        let bytes_a = ra.iter().map(|r| r.bytes).sum::<u64>();
+
+        // Column reduce in grid-row order: R_j = Σ_i R_ij; the k×k Gram
+        // S = WᵀW is the coordinator's own half of round B's input.
+        let mut rj: Vec<Mat> = Vec::with_capacity(pc);
+        for j in 0..pc {
+            let mut acc = ra[j].r.clone();
+            for i in 1..pr {
+                add_into(&mut acc, &ra[i * pc + j].r);
+            }
+            rj.push(acc);
+        }
+        let s = products::factor_gram(pool, &w);
+
+        // Round B: S ‖ R_j out, [Q_j] ‖ P_ij (‖ H_j) back. Grid row 0
+        // answers the per-column Gram and checkpoint panels; the other
+        // rows hold bit-identical H_j replicas and ship only P_ij.
+        let rb: Vec<Result<GridBReply>> = std::thread::scope(|scope| {
+            let (sref, rjref) = (&s, &rj);
+            let handles: Vec<_> = slots
+                .iter_mut()
+                .map(|slot| {
+                    let req = GridBReq {
+                        epoch: it,
+                        mu: engine == DistEngine::Mu,
+                        want_q: slot.gi == 0,
+                        want_h: sync && slot.gi == 0,
+                        l1,
+                        l2,
+                    };
+                    scope.spawn(move || {
+                        let name = slot.name.clone();
+                        let (v_s, d_s) = (slot.vrange.len(), slot.range.len());
+                        let gj = slot.gj;
+                        let client = slot
+                            .client
+                            .as_mut()
+                            .ok_or_else(|| anyhow!("slot '{name}' has no live connection"))?;
+                        grid_b_client(client, &name, sref, &rjref[gj], &req, v_s, d_s, k)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("round-B thread panicked"))))
+                .collect()
+        });
+        if let Some(err) = rb.iter().find_map(|r| r.as_ref().err()) {
+            fail_epoch!(it, err);
+        }
+        let mut rb: Vec<GridBReply> =
+            rb.into_iter().map(|r| r.expect("errors handled above")).collect();
+        coord_bytes += bytes_a + rb.iter().map(|r| r.bytes).sum::<u64>();
+        epochs_run += 1;
+
+        // Reduce: Q = Σ_j Q_j (grid-column order), P assembled from its
+        // row panels P_i = Σ_j P_ij (also column order per panel).
+        let mut q = rb[0].q.clone().expect("grid row 0 answers the Gram");
+        for j in 1..pc {
+            add_into(&mut q, rb[j].q.as_ref().expect("grid row 0 answers the Gram"));
+        }
+        let mut pdata = vec![0.0 as Elem; ds.v() * k];
+        for i in 0..pr {
+            let mut panel = rb[i * pc].p.clone();
+            for j in 1..pc {
+                add_into(&mut panel, &rb[i * pc + j].p);
+            }
+            let vrange = &plan.wrows[i];
+            pdata[vrange.start * k..vrange.end * k].copy_from_slice(panel.data());
+        }
+        let p = Mat::from_vec(ds.v(), k, pdata);
+        match engine {
+            DistEngine::Hals => {
+                update_naive(pool, &mut w, &q, &p, UpdateKind::WithDiagAndNorm, &mut timers, "w_dmv");
+            }
+            DistEngine::Mu => {
+                timers.time("w_mu", || mu::mu_update(pool, &mut w, &q, &p));
+            }
+            DistEngine::MuKl => unreachable!("KL is rejected before the grid path"),
+        }
+        elapsed += t.elapsed_secs();
+
+        if record {
+            trace.push(IterRecord {
+                iter: it,
+                elapsed_secs: elapsed,
+                rel_error: error::rel_error_from_parts(pool, ds.fro2, &p, &w, &q),
+            });
+            if cfg.tol > 0.0 && trace.len() > 5 {
+                let prev = trace[trace.len() - 6].rel_error;
+                let cur = trace[trace.len() - 1].rel_error;
+                if prev - cur < cfg.tol {
+                    break;
+                }
+            }
+        }
+        if sync {
+            ckpt.epoch = it;
+            ckpt.w = w.clone();
+            for j in 0..pc {
+                ckpt.h[j] = rb[j]
+                    .h
+                    .take()
+                    .ok_or_else(|| anyhow!("column {j} omitted its H panel at sync epoch {it}"))?;
+            }
+        }
+        it += 1;
+    }
+
+    shutdown_slots(&mut slots);
+
+    let final_rel_error = trace.last().map(|r| r.rel_error).unwrap_or(f64::NAN);
+    let report = RunReport {
+        engine: engine.report_name(),
+        dataset: cfg.dataset.clone(),
+        k,
+        tile: cfg.tile,
+        threads,
+        trace,
+        final_rel_error,
+        total_step_secs: elapsed,
+        timers,
+    };
+    if let Some(path) = &cfg.trace_path {
+        crate::coordinator::metrics::write_trace_csv(std::path::Path::new(path), &report)?;
+    }
+    let stats =
+        DistStats { workers: plan.workers(), grid: (pr, pc), epochs: epochs_run, coord_bytes };
+    Ok((report, stats))
 }
 
 #[cfg(test)]
@@ -560,6 +1406,7 @@ mod tests {
     use crate::coordinator::Driver;
     use crate::serve::registry::{ModelRegistry, RegistryOpts};
     use crate::serve::Server;
+    use crate::sparse::Csr;
 
     /// A zero-model in-process daemon — exactly what
     /// `plnmf serve --train_worker` runs, minus the process boundary.
@@ -592,6 +1439,20 @@ mod tests {
         }
     }
 
+    fn assert_traces_close(dist: &RunReport, single: &RunReport, label: &str) {
+        assert_eq!(dist.trace.len(), single.trace.len(), "{label}: trace lengths diverge");
+        for (d, s) in dist.trace.iter().zip(&single.trace) {
+            assert_eq!(d.iter, s.iter, "{label}: iteration sequence diverges");
+            assert!(
+                (d.rel_error - s.rel_error).abs() <= 2e-3,
+                "{label} iter {}: dist {} vs single {}",
+                d.iter,
+                d.rel_error,
+                s.rel_error
+            );
+        }
+    }
+
     #[test]
     fn one_attached_worker_matches_single_process_trace() {
         for dataset in ["tiny", "tiny-sparse"] {
@@ -603,21 +1464,7 @@ mod tests {
             shutdown_worker(addr);
 
             assert_eq!(dist.engine, "fasthals-dist");
-            assert_eq!(
-                dist.trace.len(),
-                single.trace.len(),
-                "{dataset}: trace lengths diverge"
-            );
-            for (d, s) in dist.trace.iter().zip(&single.trace) {
-                assert_eq!(d.iter, s.iter, "{dataset}: iteration sequence diverges");
-                assert!(
-                    (d.rel_error - s.rel_error).abs() <= 2e-3,
-                    "{dataset} iter {}: dist {} vs single {}",
-                    d.iter,
-                    d.rel_error,
-                    s.rel_error
-                );
-            }
+            assert_traces_close(&dist, &single, dataset);
         }
     }
 
@@ -632,17 +1479,7 @@ mod tests {
             shutdown_worker(a);
             shutdown_worker(b);
 
-            assert_eq!(dist.trace.len(), single.trace.len());
-            for (d, s) in dist.trace.iter().zip(&single.trace) {
-                assert_eq!(d.iter, s.iter);
-                assert!(
-                    (d.rel_error - s.rel_error).abs() <= 2e-3,
-                    "{dataset} iter {}: dist {} vs single {}",
-                    d.iter,
-                    d.rel_error,
-                    s.rel_error
-                );
-            }
+            assert_traces_close(&dist, &single, dataset);
             assert!(dist.final_rel_error.is_finite());
         }
     }
@@ -663,27 +1500,181 @@ mod tests {
         let single = Driver::from_config(&cfg).unwrap().run().unwrap();
         shutdown_worker(addr);
 
-        assert_eq!(dist.trace.len(), single.trace.len(), "trace lengths diverge");
-        for (d, s) in dist.trace.iter().zip(&single.trace) {
-            assert_eq!(d.iter, s.iter);
-            assert!(
-                (d.rel_error - s.rel_error).abs() <= 2e-3,
-                "iter {}: dist {} vs single {}",
-                d.iter,
-                d.rel_error,
-                s.rel_error
+        assert_traces_close(&dist, &single, "regularized");
+    }
+
+    #[test]
+    fn mu_engine_matches_single_process_trace() {
+        // The 0x06 sweep: one worker runs the exact MU kernels the
+        // in-process engine runs, split across the wire.
+        for dataset in ["tiny", "tiny-sparse"] {
+            let addr = spawn_inproc_worker();
+            let mut cfg = dist_cfg(dataset);
+            cfg.engine = EngineKind::Mu;
+            let opts = DistOpts { attach: vec![addr], sync_every: 3, ..DistOpts::default() };
+            let dist = train_dist(&cfg, &opts).unwrap();
+            let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+            shutdown_worker(addr);
+
+            assert_eq!(dist.engine, "mu-dist");
+            assert_traces_close(&dist, &single, dataset);
+        }
+    }
+
+    #[test]
+    fn kl_engine_matches_single_process_trace() {
+        // The KL variant of the 0x06 sweep: the worker ships colsum and
+        // numerator partials, the coordinator applies the W rule, and
+        // record epochs score an assembled H — the trace must still
+        // track the in-process MU-KL engine.
+        let addr = spawn_inproc_worker();
+        let mut cfg = dist_cfg("tiny-sparse");
+        cfg.engine = EngineKind::MuKl;
+        let opts = DistOpts { attach: vec![addr], sync_every: 3, ..DistOpts::default() };
+        let dist = train_dist(&cfg, &opts).unwrap();
+        let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+        shutdown_worker(addr);
+
+        assert_eq!(dist.engine, "mukl-dist");
+        assert_traces_close(&dist, &single, "kl");
+    }
+
+    #[test]
+    fn grid_2x2_matches_single_process_trace() {
+        // The tentpole: a 2x2 grid (4 workers, both factors
+        // panel-sharded) must track the single-process FAST-HALS trace
+        // exactly like the 1D plan does.
+        for dataset in ["tiny", "tiny-sparse"] {
+            let addrs: Vec<_> = (0..4).map(|_| spawn_inproc_worker()).collect();
+            let cfg = dist_cfg(dataset);
+            let opts = DistOpts {
+                attach: addrs.clone(),
+                sync_every: 3,
+                grid: Some((2, 2)),
+                ..DistOpts::default()
+            };
+            let (dist, stats) = train_dist_with_stats(&cfg, &opts).unwrap();
+            let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+            for addr in addrs {
+                shutdown_worker(addr);
+            }
+
+            assert_eq!(dist.engine, "fasthals-dist");
+            assert_eq!(stats.grid, (2, 2));
+            assert_eq!(stats.workers, 4);
+            assert!(stats.coord_bytes > 0);
+            assert_traces_close(&dist, &single, dataset);
+        }
+    }
+
+    #[test]
+    fn grid_2x2_runs_the_mu_engine_too() {
+        let addrs: Vec<_> = (0..4).map(|_| spawn_inproc_worker()).collect();
+        let mut cfg = dist_cfg("tiny-sparse");
+        cfg.engine = EngineKind::Mu;
+        let opts = DistOpts {
+            attach: addrs.clone(),
+            sync_every: 3,
+            grid: Some((2, 2)),
+            ..DistOpts::default()
+        };
+        let dist = train_dist(&cfg, &opts).unwrap();
+        let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+        for addr in addrs {
+            shutdown_worker(addr);
+        }
+        assert_eq!(dist.engine, "mu-dist");
+        assert_traces_close(&dist, &single, "grid-mu");
+    }
+
+    #[test]
+    fn grid_with_pr_1_is_bit_identical_to_the_1d_plan() {
+        // `--grid 1x2` must route through the row-sharded path verbatim
+        // — same frames, same kernels, bitwise-equal trace.
+        let cfg = dist_cfg("tiny-sparse");
+        let (a, b) = (spawn_inproc_worker(), spawn_inproc_worker());
+        let opts_1d = DistOpts { attach: vec![a, b], sync_every: 3, ..DistOpts::default() };
+        let flat = train_dist(&cfg, &opts_1d).unwrap();
+        shutdown_worker(a);
+        shutdown_worker(b);
+
+        let (c, d) = (spawn_inproc_worker(), spawn_inproc_worker());
+        let opts_grid = DistOpts {
+            attach: vec![c, d],
+            sync_every: 3,
+            grid: Some((1, 2)),
+            ..DistOpts::default()
+        };
+        let (grid, stats) = train_dist_with_stats(&cfg, &opts_grid).unwrap();
+        shutdown_worker(c);
+        shutdown_worker(d);
+
+        assert_eq!(stats.grid, (1, 2));
+        assert_eq!(flat.trace.len(), grid.trace.len());
+        for (f, g) in flat.trace.iter().zip(&grid.trace) {
+            assert_eq!(f.iter, g.iter);
+            assert_eq!(
+                f.rel_error.to_bits(),
+                g.rel_error.to_bits(),
+                "iter {}: 1D {} vs pr=1 grid {}",
+                f.iter,
+                f.rel_error,
+                g.rel_error
             );
         }
     }
 
     #[test]
-    fn non_hals_specs_are_rejected_before_any_worker_io() {
+    fn grid_per_epoch_bytes_sit_below_the_1d_plan_at_equal_workers() {
+        // The tentpole's communication claim, measured on real frames:
+        // a 2x2 grid moves strictly fewer coordinator bytes per epoch
+        // than 4 row shards.
+        let cfg = dist_cfg("tiny-sparse");
+        let addrs: Vec<_> = (0..4).map(|_| spawn_inproc_worker()).collect();
+        let opts = DistOpts { attach: addrs.clone(), sync_every: 3, ..DistOpts::default() };
+        let (_, flat) = train_dist_with_stats(&cfg, &opts).unwrap();
+        for addr in addrs {
+            shutdown_worker(addr);
+        }
+
+        let addrs: Vec<_> = (0..4).map(|_| spawn_inproc_worker()).collect();
+        let opts = DistOpts {
+            attach: addrs.clone(),
+            sync_every: 3,
+            grid: Some((2, 2)),
+            ..DistOpts::default()
+        };
+        let (_, grid) = train_dist_with_stats(&cfg, &opts).unwrap();
+        for addr in addrs {
+            shutdown_worker(addr);
+        }
+
+        assert_eq!(flat.workers, grid.workers);
+        assert!(
+            grid.bytes_per_epoch() < flat.bytes_per_epoch(),
+            "grid {} B/epoch vs 1D {} B/epoch",
+            grid.bytes_per_epoch(),
+            flat.bytes_per_epoch()
+        );
+    }
+
+    #[test]
+    fn unsupported_specs_are_rejected_before_any_worker_io() {
         // No binary, no attach list: the spec gate must fire before
         // train_dist ever tries to find a worker.
         let mut cfg = dist_cfg("tiny");
-        cfg.engine = EngineKind::MuKl;
+        cfg.engine = EngineKind::Bpp;
         let err = train_dist(&cfg, &DistOpts::default()).unwrap_err().to_string();
-        assert!(err.contains("FAST-HALS"), "unexpected error: {err}");
+        assert!(err.contains("not supported"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn kl_on_a_wide_grid_is_rejected_before_any_worker_io() {
+        let mut cfg = dist_cfg("tiny-sparse");
+        cfg.engine = EngineKind::MuKl;
+        let opts = DistOpts { grid: Some((2, 2)), ..DistOpts::default() };
+        let err = train_dist(&cfg, &opts).unwrap_err().to_string();
+        assert!(err.contains("KL"), "unexpected error: {err}");
     }
 
     #[test]
@@ -702,6 +1693,24 @@ mod tests {
     }
 
     #[test]
+    fn grid_slots_can_share_one_worker_process_too() {
+        // All four 2x2 blocks resident in one daemon — unique job names
+        // keep the TrainStore entries apart.
+        let addr = spawn_inproc_worker();
+        let cfg = dist_cfg("tiny-sparse");
+        let opts = DistOpts {
+            attach: vec![addr; 4],
+            sync_every: 3,
+            grid: Some((2, 2)),
+            ..DistOpts::default()
+        };
+        let dist = train_dist(&cfg, &opts).unwrap();
+        let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+        shutdown_worker(addr);
+        assert!((dist.final_rel_error - single.final_rel_error).abs() <= 2e-3);
+    }
+
+    #[test]
     fn attach_mode_failure_is_fatal_not_retried() {
         // Attached worker that immediately goes away: train_dist must
         // error out (no restart authority over attached daemons).
@@ -711,6 +1720,17 @@ mod tests {
         let cfg = dist_cfg("tiny");
         let opts = DistOpts { attach: vec![addr], ..DistOpts::default() };
         assert!(train_dist(&cfg, &opts).is_err());
+    }
+
+    #[test]
+    fn attach_count_must_match_the_grid() {
+        let cfg = dist_cfg("tiny");
+        let addr = spawn_inproc_worker();
+        let opts =
+            DistOpts { attach: vec![addr], grid: Some((2, 2)), ..DistOpts::default() };
+        let err = train_dist(&cfg, &opts).unwrap_err().to_string();
+        shutdown_worker(addr);
+        assert!(err.contains("4"), "unexpected error: {err}");
     }
 
     #[test]
@@ -727,5 +1747,114 @@ mod tests {
         let b = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
         add_into(&mut a, &b);
         assert_eq!(a.data(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    // ---- GridPlan properties -------------------------------------------
+
+    /// A deterministic synthetic sparse dataset (xorshift-seeded) so the
+    /// plan properties range over shapes the named profiles don't cover.
+    fn synth_dataset(v: usize, d: usize, nnz: usize, seed: u64) -> Dataset {
+        let mut state = seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut dense = Mat::from_vec(v, d, vec![0.0; v * d]);
+        for _ in 0..nnz {
+            let (i, j) = ((next() as usize) % v, (next() as usize) % d);
+            let x = ((next() % 97) + 1) as Elem / 97.0;
+            dense.data_mut()[i * d + j] = x;
+        }
+        let a = DataMatrix::Sparse(Csr::from_dense(&dense));
+        let at = a.transposed();
+        let fro2 = a.fro2();
+        let profile = crate::config::DatasetProfile {
+            name: "synth",
+            kind: crate::config::DatasetKind::SparseText,
+            v,
+            d,
+            nnz: a.nnz(),
+            zipf_s: 0.0,
+            planted_rank: 0,
+            paper_stats: None,
+        };
+        Dataset { profile, a, at, fro2 }
+    }
+
+    fn assert_partitions(ranges: &[Range<usize>], n: usize, label: &str) {
+        assert!(!ranges.is_empty(), "{label}: empty partition");
+        assert_eq!(ranges[0].start, 0, "{label}: must start at 0");
+        assert_eq!(ranges.last().unwrap().end, n, "{label}: must end at {n}");
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{label}: gap or overlap at {:?}", w);
+        }
+    }
+
+    #[test]
+    fn grid_plan_covers_every_entry_exactly_once_and_balances_nnz() {
+        // Contiguous partitions on both axes ⇒ every (row, col) lands in
+        // exactly one block; nnz balance within the shard planner's
+        // guarantee (≤ even share + heaviest single row).
+        for (v, d, nnz, seed) in
+            [(17, 31, 60, 1u64), (64, 24, 300, 2), (9, 9, 81, 3), (120, 7, 500, 4)]
+        {
+            let ds = synth_dataset(v, d, nnz, seed);
+            for (pr, pc) in [(1, 1), (1, 3), (2, 2), (3, 2), (4, 5), (200, 200)] {
+                let plan = GridPlan::new(&ds, pr, pc);
+                assert!(plan.pr <= v && plan.pc <= d, "clamped to the dataset");
+                assert_eq!(plan.wrows.len(), plan.pr);
+                assert_eq!(plan.hrows.len(), plan.pc);
+                assert_partitions(&plan.wrows, v, "wrows");
+                assert_partitions(&plan.hrows, d, "hrows");
+                let area: usize = (0..plan.pr)
+                    .flat_map(|i| (0..plan.pc).map(move |j| (i, j)))
+                    .map(|(i, j)| {
+                        let (vr, dr) = plan.block(i, j);
+                        vr.len() * dr.len()
+                    })
+                    .sum();
+                assert_eq!(area, v * d, "blocks must tile the matrix");
+
+                let (a, at) = match (&ds.a, &ds.at) {
+                    (DataMatrix::Sparse(a), DataMatrix::Sparse(at)) => (a, at),
+                    _ => unreachable!(),
+                };
+                for (csr, ranges, parts) in
+                    [(a, &plan.wrows, plan.pr), (at, &plan.hrows, plan.pc)]
+                {
+                    let total = csr.nnz();
+                    let heaviest = (0..csr.rows())
+                        .map(|r| csr.row_ptr()[r + 1] - csr.row_ptr()[r])
+                        .max()
+                        .unwrap_or(0);
+                    let cap = total / parts + heaviest;
+                    for r in ranges.iter() {
+                        let n = csr.row_ptr()[r.end] - csr.row_ptr()[r.start];
+                        assert!(n <= cap, "shard {r:?} holds {n} nnz, cap {cap}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_plan_degenerates_to_the_1d_plans_on_either_axis() {
+        let ds = synth_dataset(40, 25, 200, 9);
+        let (a, at) = match (&ds.a, &ds.at) {
+            (DataMatrix::Sparse(a), DataMatrix::Sparse(at)) => (a, at),
+            _ => unreachable!(),
+        };
+        for pc in [1, 2, 5] {
+            let plan = GridPlan::new(&ds, 1, pc);
+            assert_eq!(plan.wrows, vec![0..ds.v()]);
+            assert_eq!(plan.hrows, balanced_row_shards(at, pc), "pc={pc}: 1D doc plan");
+        }
+        for pr in [1, 3, 4] {
+            let plan = GridPlan::new(&ds, pr, 1);
+            assert_eq!(plan.hrows, vec![0..ds.d()]);
+            assert_eq!(plan.wrows, balanced_row_shards(a, pr), "pr={pr}: 1D word plan");
+        }
     }
 }

@@ -1,27 +1,35 @@
-//! Distributed HALS training over the worker fabric (`plnmf train-dist`).
+//! Distributed NMF training over the worker fabric (`plnmf train-dist`).
 //!
 //! Extends the serving fleet's process model to *training*: the dataset
-//! is row-sharded across `plnmf serve --train_worker` daemons (documents
-//! of Aᵀ, nnz-balanced via [`crate::coordinator::shard`]), each worker
-//! keeps its shard and its rows of H resident, and a coordinator drives
-//! FAST-HALS epochs by broadcasting W and all-reducing the workers'
-//! k×k Grams and V×k partial products — the MPI-FAUN communication
-//! pattern carried over the PLNB v2 binary wire protocol
-//! ([`crate::serve::wire`]), raw little-endian f32 end to end.
+//! is block-partitioned across `plnmf serve --train_worker` daemons on a
+//! pr×pc grid (nnz-balanced on both axes via
+//! [`crate::coordinator::shard`]), each worker keeps its A block and its
+//! H panel resident, and a coordinator drives epochs by exchanging
+//! factor panels and all-reducing k×k Grams and partial products — the
+//! MPI-FAUN communication pattern carried over the PLNB v2 binary wire
+//! protocol ([`crate::serve::wire`]), raw little-endian f32 end to end.
+//! The default 1×N grid is the row-sharded plan (documents of Aᵀ, full
+//! W broadcast); `pr > 1` panel-shards W too, shrinking per-epoch
+//! coordinator traffic from `O(workers · V·k)` to panel-sized. Both the
+//! FAST-HALS and MU engine families run distributed (Frobenius on any
+//! grid, KL on 1×N).
 //!
-//! * [`protocol`] — frame metas and payload layouts for the three
-//!   training ops (`0x03 shard-load`, `0x04 sweep`,
-//!   `0x83 gram-response`), including the chunked shard transfer.
+//! * [`protocol`] — frame metas and payload layouts for the training
+//!   ops (`0x03 shard-load`, `0x04 sweep`, `0x06 mu-sweep`,
+//!   `0x07`/`0x08 grid rounds`, `0x83 gram-response`), including the
+//!   chunked shard transfer.
 //! * [`worker`] — [`TrainStore`]: per-daemon resident shard state and
 //!   the op handlers `serve` dispatches binary training frames to.
-//! * [`coordinator`] — [`train_dist`]: worker spawn/attach, shard
-//!   shipping, the epoch loop with deterministic all-reduce, trace
-//!   recording compatible with `plnmf run`, and checkpoint-based
-//!   recovery from mid-epoch worker death.
+//! * [`coordinator`] — [`train_dist`]: worker spawn/attach, the
+//!   [`GridPlan`] block partition, shard shipping overlapped with the
+//!   first epoch, the epoch loop with deterministic all-reduce, trace
+//!   recording compatible with `plnmf run`, per-epoch traffic
+//!   accounting ([`DistStats`]), and checkpoint-based recovery from
+//!   mid-epoch worker death.
 
 pub mod coordinator;
 pub mod protocol;
 pub mod worker;
 
-pub use coordinator::{train_dist, DistOpts};
+pub use coordinator::{train_dist, train_dist_with_stats, DistOpts, DistStats, GridPlan};
 pub use worker::TrainStore;

@@ -30,11 +30,35 @@
 //! answers with a gram-response; errors (most importantly [`NO_SHARD`]
 //! from a restarted worker) come back as JSON lines.
 //!
+//! ## MU sweep (`0x06`, coordinator → worker)
+//!
+//! The multiplicative twin of `0x04`: meta `{epoch, want_h, kl}` (plus
+//! the optional penalties), payload the V×k `W` broadcast. Under
+//! Frobenius (`kl` absent/false) the reply stacks `Q_s = HₛᵀHₛ` and
+//! `P_s = AₛHₛ` exactly like the HALS sweep; under KL it stacks the 1×k
+//! column-sum of `H_s` (the W-update denominator contribution) and the
+//! V×k KL numerator partial over the shard's support.
+//!
+//! ## Grid rounds (`0x07` / `0x08`, coordinator → worker)
+//!
+//! One pr×pc-grid epoch is two rounds per worker `(i,j)` owning block
+//! `A_ij` (rows `v_i` of V × documents `d_j`): round A (`0x07`, meta
+//! `{epoch}`) ships the v_i×k row panel `W_i` and the worker answers a
+//! gram-response carrying `R_ij = A_ijᵀ·W_i` (d_j×k, as `rows_p`);
+//! round B (`0x08`, meta `{epoch, mu, want_q, want_h}` + penalties)
+//! ships `S = WᵀW` stacked over the column-reduced `R_j = Σᵢ R_ij`
+//! ((k+d_j)×k), the worker updates its replicated H panel (HALS or MU)
+//! and answers `Q_j = H_jᵀH_j` (only when `want_q`, the i = 0 grid row)
+//! stacked over `P_ij = A_ij·H_j` (v_i×k) and optionally `H_j`.
+//!
 //! ## Gram-response (`0x83`, worker → coordinator)
 //!
-//! Meta [`GramMeta`]; payload stacks `Q_s` (k×k), `P_s` (V×k), and —
-//! when the sweep asked `want_h` — the worker's updated H panel
-//! (d_s×k), row-wise in that order.
+//! Meta [`GramMeta`]; payload stacks `rows_q` rows of the Gram-like
+//! block, `rows_p` rows of the partial product, and — when the sweep
+//! asked `want_h` — the worker's updated H panel (d_s×k), row-wise in
+//! that order. Which matrices those blocks hold depends on the op the
+//! response answers (see above); the shapes are always validated
+//! against the meta on both sides.
 
 use anyhow::{anyhow, bail};
 
@@ -219,6 +243,93 @@ pub fn parse_sweep(meta: &Json) -> Result<SweepReq> {
 }
 
 // ---------------------------------------------------------------------------
+// MU sweep.
+// ---------------------------------------------------------------------------
+
+/// A parsed MU-sweep (`0x06`) request meta: the [`SweepReq`] fields plus
+/// the loss selector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MuSweepReq {
+    pub epoch: usize,
+    pub want_h: bool,
+    /// KL divergence instead of Frobenius (changes both the worker's H
+    /// half-step and the layout of its reply — see the module docs).
+    pub kl: bool,
+    pub l1: f64,
+    pub l2: f64,
+}
+
+pub fn sweep_mu_meta(epoch: usize, want_h: bool, kl: bool, l1: f64, l2: f64) -> Json {
+    let mut meta = sweep_meta(epoch, want_h, l1, l2);
+    if kl {
+        if let Json::Obj(pairs) = &mut meta {
+            pairs.insert("kl".to_string(), Json::Bool(true));
+        }
+    }
+    meta
+}
+
+pub fn parse_sweep_mu(meta: &Json) -> Result<MuSweepReq> {
+    let base = parse_sweep(meta)?;
+    let kl = match meta.get("kl") {
+        Json::Null => false,
+        v => v.as_bool().ok_or_else(|| anyhow!("mu-sweep meta \"kl\" must be a boolean, got {v}"))?,
+    };
+    Ok(MuSweepReq { epoch: base.epoch, want_h: base.want_h, kl, l1: base.l1, l2: base.l2 })
+}
+
+// ---------------------------------------------------------------------------
+// Grid rounds.
+// ---------------------------------------------------------------------------
+
+pub fn grid_a_meta(epoch: usize) -> Json {
+    Json::obj(vec![("epoch", Json::num(epoch as f64))])
+}
+
+pub fn parse_grid_a(meta: &Json) -> Result<usize> {
+    req_usize(meta, "epoch")
+}
+
+/// A parsed grid round-B (`0x08`) request meta.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridBReq {
+    pub epoch: usize,
+    /// Multiplicative H update instead of the HALS half-sweep.
+    pub mu: bool,
+    /// Whether the reply must lead with `Q_j = H_jᵀH_j` (asked of one
+    /// grid row only — the replicas would all answer the same bits).
+    pub want_q: bool,
+    /// Whether the reply must append the updated H panel.
+    pub want_h: bool,
+    pub l1: f64,
+    pub l2: f64,
+}
+
+pub fn grid_b_meta(req: &GridBReq) -> Json {
+    let mut meta = sweep_meta(req.epoch, req.want_h, req.l1, req.l2);
+    if let Json::Obj(pairs) = &mut meta {
+        if req.mu {
+            pairs.insert("mu".to_string(), Json::Bool(true));
+        }
+        pairs.insert("want_q".to_string(), Json::Bool(req.want_q));
+    }
+    meta
+}
+
+pub fn parse_grid_b(meta: &Json) -> Result<GridBReq> {
+    let base = parse_sweep(meta)?;
+    let mu = match meta.get("mu") {
+        Json::Null => false,
+        v => v.as_bool().ok_or_else(|| anyhow!("grid-b meta \"mu\" must be a boolean, got {v}"))?,
+    };
+    let want_q = meta
+        .get("want_q")
+        .as_bool()
+        .ok_or_else(|| anyhow!("grid-b meta needs a boolean \"want_q\""))?;
+    Ok(GridBReq { epoch: base.epoch, mu, want_q, want_h: base.want_h, l1: base.l1, l2: base.l2 })
+}
+
+// ---------------------------------------------------------------------------
 // Gram-response.
 // ---------------------------------------------------------------------------
 
@@ -361,6 +472,37 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(parse_sweep(&j).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn mu_sweep_meta_roundtrips_and_defaults_to_frobenius() {
+        // Absent "kl" is Frobenius; the Frobenius meta is byte-identical
+        // to the HALS sweep meta (one parser family on the worker).
+        let fro = sweep_mu_meta(4, true, false, 0.0, 0.0);
+        assert_eq!(fro.to_string(), sweep_meta(4, true, 0.0, 0.0).to_string());
+        let req = parse_sweep_mu(&fro).unwrap();
+        assert_eq!(req, MuSweepReq { epoch: 4, want_h: true, kl: false, l1: 0.0, l2: 0.0 });
+        let kl = parse_sweep_mu(&sweep_mu_meta(9, false, true, 0.1, 0.05)).unwrap();
+        assert!(kl.kl);
+        assert_eq!((kl.l1, kl.l2), (0.1, 0.05));
+        // Bogus kl is a protocol error, not silently Frobenius.
+        let bad = Json::parse(r#"{"epoch": 1, "want_h": false, "kl": "yes"}"#).unwrap();
+        assert!(parse_sweep_mu(&bad).is_err());
+    }
+
+    #[test]
+    fn grid_round_metas_roundtrip() {
+        assert_eq!(parse_grid_a(&grid_a_meta(6)).unwrap(), 6);
+        assert!(parse_grid_a(&Json::Null).is_err());
+
+        let req = GridBReq { epoch: 3, mu: true, want_q: true, want_h: false, l1: 0.2, l2: 0.0 };
+        assert_eq!(parse_grid_b(&grid_b_meta(&req)).unwrap(), req);
+        let hals = GridBReq { epoch: 1, mu: false, want_q: false, want_h: true, l1: 0.0, l2: 0.0 };
+        assert_eq!(parse_grid_b(&grid_b_meta(&hals)).unwrap(), hals);
+        // want_q is mandatory: a worker must never guess whether to pay
+        // for (and stack) the k×k Gram.
+        let bad = Json::parse(r#"{"epoch": 1, "want_h": false}"#).unwrap();
+        assert!(parse_grid_b(&bad).is_err());
     }
 
     #[test]

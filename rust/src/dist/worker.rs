@@ -21,6 +21,13 @@
 //! only wire traffic. The kernels are byte-for-byte the single-process
 //! ones ([`crate::nmf::products`], [`crate::nmf::halsops`]), so a
 //! 1-worker run reproduces `plnmf run --engine fasthals` exactly.
+//!
+//! Beside the HALS sweep live its multiplicative twin (`mu-sweep`,
+//! Frobenius or KL — same shard, [`crate::nmf::mu`]/[`crate::nmf::mukl`]
+//! kernels) and the two 2D-grid rounds (`grid-a`/`grid-b`), where the
+//! resident shard is one pr×pc *block* of A (both axes local) and the
+//! sweep splits into a partial-product round and an H-update round —
+//! see the [`super::protocol`] docs for the wire shapes.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -31,7 +38,7 @@ use crate::config::{DatasetKind, DatasetProfile};
 use crate::data::{DataMatrix, Dataset};
 use crate::linalg::Mat;
 use crate::nmf::halsops::{update_naive_reg, Shrink, UpdateKind};
-use crate::nmf::products;
+use crate::nmf::{mu, mukl, products};
 use crate::parallel::ThreadPool;
 use crate::serve::wire::{self, ok_obj, BinFrame, BinOp, WirePayload};
 use crate::sparse::Csr;
@@ -306,6 +313,154 @@ pub fn op_sweep(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
     Ok(WirePayload::Binary(bytes))
 }
 
+/// Handle one `0x06 mu-sweep` frame — the multiplicative twin of
+/// [`op_sweep`]. Frobenius replies `Q_s ‖ P_s (‖ H_s)` with the H panel
+/// stepped by the MU rule; KL replies `colsum(H_s) ‖ N_s (‖ H_s)` where
+/// `N_s` is this shard's V×k partial of the W-update numerator (the
+/// coordinator reduces both and applies the W rule).
+pub fn op_sweep_mu(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
+    let req = protocol::parse_sweep_mu(&frame.meta)?;
+    let mut jobs = store.jobs.lock().expect("train store lock");
+    let shard = jobs
+        .get_mut(&frame.model)
+        .and_then(|j| j.shard.as_mut())
+        .ok_or_else(|| anyhow!("{} for train job '{}'", protocol::NO_SHARD, frame.model))?;
+    if frame.rows != shard.ds.v() || frame.cols != shard.k {
+        bail!(
+            "mu-sweep W is {}x{}, shard expects {}x{}",
+            frame.rows,
+            frame.cols,
+            shard.ds.v(),
+            shard.k
+        );
+    }
+    let w = Mat::from_vec(frame.rows, frame.cols, frame.data);
+    let t = Timer::start();
+    let k = shard.k;
+    let pool = Arc::clone(&shard.pool);
+    let LoadedShard { ds, h, r, p, timers, .. } = shard;
+    let shrink = Shrink { l1: req.l1 as Elem, l2: req.l2 as Elem };
+
+    let (top, rows_q): (Vec<Elem>, usize) = if req.kl {
+        // KL: the H half-step is fully local (its denominator is
+        // colsum(W), its numerator only touches this shard's documents);
+        // the reply carries the shard's two W half-step partials.
+        timers.time("h_mukl", || mukl::kl_half_step(&pool, &ds.at, h, &w, r, shrink));
+        timers.time("w_numer", || mukl::kl_numer(&pool, &ds.a, &w, h, p));
+        let denom = mukl::kl_colsum(&pool, h);
+        (denom.iter().map(|&x| x as Elem).collect(), 1)
+    } else {
+        // Frobenius MU: identical wire shape to the HALS sweep, only
+        // the H kernel differs.
+        timers.time("spmm_r", || products::at_times(&pool, ds, &w, r));
+        let s = timers.time("gram_s", || products::factor_gram(&pool, &w));
+        timers.time("h_mu", || mu::mu_update_reg(&pool, h, &s, r, shrink));
+        timers.time("spmm_p", || products::a_times(&pool, ds, h, p));
+        let q = timers.time("gram_q", || products::factor_gram(&pool, h));
+        let rows = q.rows();
+        (q.data().to_vec(), rows)
+    };
+    let secs = t.elapsed_secs();
+
+    let rows_h = if req.want_h { h.rows() } else { 0 };
+    let mut data = Vec::with_capacity((rows_q + p.rows() + rows_h) * k);
+    data.extend_from_slice(&top);
+    data.extend_from_slice(p.data());
+    if req.want_h {
+        data.extend_from_slice(h.data());
+    }
+    let meta = GramMeta { epoch: req.epoch, rows_q, rows_p: p.rows(), rows_h, secs }.to_meta();
+    let bytes = wire::encode(BinOp::GramResp, "", &meta, rows_q + p.rows() + rows_h, k, &data)?;
+    Ok(WirePayload::Binary(bytes))
+}
+
+/// Handle one `0x07 grid round-A` frame: the worker's W row panel
+/// (v_i×k) comes in, its block's partial product `R_ij = A_ijᵀ·W_i`
+/// (d_j×k) goes back (`rows_q = 0`, never an H panel).
+pub fn op_grid_a(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
+    let epoch = protocol::parse_grid_a(&frame.meta)?;
+    let mut jobs = store.jobs.lock().expect("train store lock");
+    let shard = jobs
+        .get_mut(&frame.model)
+        .and_then(|j| j.shard.as_mut())
+        .ok_or_else(|| anyhow!("{} for train job '{}'", protocol::NO_SHARD, frame.model))?;
+    if frame.rows != shard.ds.v() || frame.cols != shard.k {
+        bail!(
+            "grid-a W panel is {}x{}, block expects {}x{}",
+            frame.rows,
+            frame.cols,
+            shard.ds.v(),
+            shard.k
+        );
+    }
+    let w = Mat::from_vec(frame.rows, frame.cols, frame.data);
+    let t = Timer::start();
+    let k = shard.k;
+    let pool = Arc::clone(&shard.pool);
+    let LoadedShard { ds, r, timers, .. } = shard;
+    timers.time("spmm_r", || products::at_times(&pool, ds, &w, r));
+    let secs = t.elapsed_secs();
+    let meta = GramMeta { epoch, rows_q: 0, rows_p: r.rows(), rows_h: 0, secs }.to_meta();
+    let bytes = wire::encode(BinOp::GramResp, "", &meta, r.rows(), k, r.data())?;
+    Ok(WirePayload::Binary(bytes))
+}
+
+/// Handle one `0x08 grid round-B` frame: `S = WᵀW` stacked over the
+/// column-reduced `R_j` comes in ((k+d_j)×k); the worker updates its
+/// H panel (HALS or MU by the meta) and replies
+/// `[Q_j] ‖ P_ij (‖ H_j)` — `Q_j` only when `want_q` (one grid row per
+/// column answers it; the replicas hold bit-identical panels).
+pub fn op_grid_b(frame: BinFrame, store: &TrainStore) -> Result<WirePayload> {
+    let req = protocol::parse_grid_b(&frame.meta)?;
+    let mut jobs = store.jobs.lock().expect("train store lock");
+    let shard = jobs
+        .get_mut(&frame.model)
+        .and_then(|j| j.shard.as_mut())
+        .ok_or_else(|| anyhow!("{} for train job '{}'", protocol::NO_SHARD, frame.model))?;
+    let k = shard.k;
+    if frame.cols != k || frame.rows != k + shard.ds.d() {
+        bail!(
+            "grid-b payload is {}x{}, block expects {}x{} (S stacked over R)",
+            frame.rows,
+            frame.cols,
+            k + shard.ds.d(),
+            k
+        );
+    }
+    let s = Mat::from_vec(k, k, frame.data[..k * k].to_vec());
+    let rred = Mat::from_vec(shard.ds.d(), k, frame.data[k * k..].to_vec());
+    let t = Timer::start();
+    let pool = Arc::clone(&shard.pool);
+    let LoadedShard { ds, h, p, timers, .. } = shard;
+    let shrink = Shrink { l1: req.l1 as Elem, l2: req.l2 as Elem };
+    if req.mu {
+        timers.time("h_mu", || mu::mu_update_reg(&pool, h, &s, &rred, shrink));
+    } else {
+        update_naive_reg(&pool, h, &s, &rred, UpdateKind::Plain, shrink, timers, "h_dmv");
+    }
+    timers.time("spmm_p", || products::a_times(&pool, ds, h, p));
+    let q = if req.want_q {
+        Some(timers.time("gram_q", || products::factor_gram(&pool, h)))
+    } else {
+        None
+    };
+    let secs = t.elapsed_secs();
+
+    let rows_q = q.as_ref().map_or(0, Mat::rows);
+    let rows_h = if req.want_h { h.rows() } else { 0 };
+    let mut data = Vec::with_capacity((rows_q + p.rows() + rows_h) * k);
+    if let Some(q) = &q {
+        data.extend_from_slice(q.data());
+    }
+    data.extend_from_slice(p.data());
+    if req.want_h {
+        data.extend_from_slice(h.data());
+    }
+    let meta = GramMeta { epoch: req.epoch, rows_q, rows_p: p.rows(), rows_h, secs }.to_meta();
+    let bytes = wire::encode(BinOp::GramResp, "", &meta, rows_q + p.rows() + rows_h, k, &data)?;
+    Ok(WirePayload::Binary(bytes))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -522,6 +677,151 @@ mod tests {
         let qk = K * K;
         let pk = ds.v() * K;
         assert_eq!(&frame.data[qk + pk..], h.data(), "sweep did not start from the re-synced panel");
+    }
+
+    /// The worker rebuilds its dataset as Aᵀ-from-triplets + transpose;
+    /// reference computations must run on the identically rebuilt pair
+    /// for bitwise comparison.
+    fn rebuilt(ds: &Dataset) -> Dataset {
+        let at = match &ds.at {
+            DataMatrix::Sparse(at) => at.clone(),
+            _ => unreachable!(),
+        };
+        let a = at.transposed();
+        Dataset {
+            profile: ds.profile.clone(),
+            fro2: a.fro2(),
+            a: DataMatrix::Sparse(a),
+            at: DataMatrix::Sparse(at),
+        }
+    }
+
+    fn binary_frame(payload: WirePayload) -> BinFrame {
+        match payload {
+            WirePayload::Binary(b) => wire::decode(&b).unwrap(),
+            WirePayload::Line(l) => panic!("op failed: {l}"),
+        }
+    }
+
+    #[test]
+    fn mu_sweep_reproduces_the_single_process_mu_half_iteration_exactly() {
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+
+        let meta = protocol::sweep_mu_meta(1, true, false, 0.0, 0.0);
+        let bytes = wire::encode(BinOp::SweepMu, JOB, &meta, f.w.rows(), f.w.cols(), f.w.data()).unwrap();
+        let frame = binary_frame(op_sweep_mu(wire::decode(&bytes).unwrap(), &store).unwrap());
+        assert_eq!(frame.op, BinOp::GramResp);
+        let gm = GramMeta::from_meta(&frame.meta).unwrap();
+        assert_eq!((gm.rows_q, gm.rows_p, gm.rows_h), (K, ds.v(), ds.d()));
+
+        let ref_ds = rebuilt(&ds);
+        let pool = ThreadPool::new(THREADS);
+        let mut h = f.h.clone();
+        let mut r = Mat::zeros(ref_ds.d(), K);
+        let mut p = Mat::zeros(ref_ds.v(), K);
+        products::at_times(&pool, &ref_ds, &f.w, &mut r);
+        let s = products::factor_gram(&pool, &f.w);
+        mu::mu_update_reg(&pool, &mut h, &s, &r, Shrink::NONE);
+        products::a_times(&pool, &ref_ds, &h, &mut p);
+        let q = products::factor_gram(&pool, &h);
+
+        let qk = K * K;
+        let pk = ds.v() * K;
+        assert_eq!(&frame.data[..qk], q.data(), "Q_s mismatch");
+        assert_eq!(&frame.data[qk..qk + pk], p.data(), "P_s mismatch");
+        assert_eq!(&frame.data[qk + pk..], h.data(), "MU H_s mismatch");
+    }
+
+    #[test]
+    fn kl_sweep_ships_the_w_update_partials_exactly() {
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+
+        let meta = protocol::sweep_mu_meta(1, true, true, 0.0, 0.0);
+        let bytes = wire::encode(BinOp::SweepMu, JOB, &meta, f.w.rows(), f.w.cols(), f.w.data()).unwrap();
+        let frame = binary_frame(op_sweep_mu(wire::decode(&bytes).unwrap(), &store).unwrap());
+        let gm = GramMeta::from_meta(&frame.meta).unwrap();
+        // KL replies a 1×k colsum row instead of the k×k Gram.
+        assert_eq!((gm.rows_q, gm.rows_p, gm.rows_h), (1, ds.v(), ds.d()));
+
+        let ref_ds = rebuilt(&ds);
+        let pool = ThreadPool::new(THREADS);
+        let mut h = f.h.clone();
+        let mut num = Mat::zeros(ref_ds.d().max(ref_ds.v()), K);
+        mukl::kl_half_step(&pool, &ref_ds.at, &mut h, &f.w, &mut num, Shrink::NONE);
+        let mut num_w = Mat::zeros(ref_ds.v(), K);
+        mukl::kl_numer(&pool, &ref_ds.a, &f.w, &h, &mut num_w);
+        let colsum: Vec<Elem> = mukl::kl_colsum(&pool, &h).iter().map(|&x| x as Elem).collect();
+
+        let pk = ds.v() * K;
+        assert_eq!(&frame.data[..K], &colsum[..], "colsum(H_s) mismatch");
+        assert_eq!(&frame.data[K..K + pk], num_w.data(), "KL numerator partial mismatch");
+        assert_eq!(&frame.data[K + pk..], h.data(), "KL H_s mismatch");
+    }
+
+    #[test]
+    fn grid_rounds_compose_to_the_plain_sweep_bitwise() {
+        // One 1×1 "grid" block is the whole dataset; round A + round B
+        // must land exactly where the fused sweep lands.
+        let ds = load_dataset("tiny-sparse", 7).unwrap();
+        let f = crate::nmf::Factors::random(ds.v(), ds.d(), K, 7);
+        let store = TrainStore::new();
+        ship_full(&store, &ds, &f.h);
+
+        let bytes =
+            wire::encode(BinOp::GridSweepA, JOB, &protocol::grid_a_meta(1), f.w.rows(), f.w.cols(), f.w.data())
+                .unwrap();
+        let ra = binary_frame(op_grid_a(wire::decode(&bytes).unwrap(), &store).unwrap());
+        let gm = GramMeta::from_meta(&ra.meta).unwrap();
+        assert_eq!((gm.rows_q, gm.rows_p, gm.rows_h), (0, ds.d(), 0));
+
+        let pool = ThreadPool::new(THREADS);
+        let s = products::factor_gram(&pool, &f.w);
+        let mut stacked = s.data().to_vec();
+        stacked.extend_from_slice(&ra.data);
+        let breq =
+            protocol::GridBReq { epoch: 1, mu: false, want_q: true, want_h: true, l1: 0.0, l2: 0.0 };
+        let bytes = wire::encode(
+            BinOp::GridSweepB,
+            JOB,
+            &protocol::grid_b_meta(&breq),
+            K + ds.d(),
+            K,
+            &stacked,
+        )
+        .unwrap();
+        let rb = binary_frame(op_grid_b(wire::decode(&bytes).unwrap(), &store).unwrap());
+        let gm = GramMeta::from_meta(&rb.meta).unwrap();
+        assert_eq!((gm.rows_q, gm.rows_p, gm.rows_h), (K, ds.v(), ds.d()));
+
+        // Reference: the fused HALS sweep on a fresh shard.
+        let store2 = TrainStore::new();
+        ship_full(&store2, &ds, &f.h);
+        let bytes =
+            wire::encode(BinOp::Sweep, JOB, &protocol::sweep_meta(1, true, 0.0, 0.0), f.w.rows(), f.w.cols(), f.w.data())
+                .unwrap();
+        let fused = binary_frame(op_sweep(wire::decode(&bytes).unwrap(), &store2).unwrap());
+        assert_eq!(rb.data, fused.data, "grid rounds diverged from the fused sweep");
+
+        // want_q = false drops the Gram block from the reply.
+        let breq = protocol::GridBReq { epoch: 2, mu: false, want_q: false, want_h: false, l1: 0.0, l2: 0.0 };
+        let bytes = wire::encode(
+            BinOp::GridSweepB,
+            JOB,
+            &protocol::grid_b_meta(&breq),
+            K + ds.d(),
+            K,
+            &stacked,
+        )
+        .unwrap();
+        let rb = binary_frame(op_grid_b(wire::decode(&bytes).unwrap(), &store).unwrap());
+        assert_eq!(GramMeta::from_meta(&rb.meta).unwrap().rows_q, 0);
+        assert_eq!(rb.rows, ds.v());
     }
 
     #[test]

@@ -63,14 +63,15 @@ impl MuEngine {
 /// `x[i][t] *= num[i][t] / (Σ_j x[i][j]·g[j][t] + δ)` for all rows in
 /// parallel (rows are independent in MU — the denominator uses the
 /// *pre-update* row, so each row buffers its denominator first).
-fn mu_update(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat) {
+/// `pub(crate)` so the distributed sweep reuses the exact kernel.
+pub(crate) fn mu_update(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat) {
     mu_update_reg(pool, x, g, num, Shrink::NONE);
 }
 
 /// [`mu_update`] with the elastic-net terms folded into the denominator
 /// (the sklearn MU regularization: `denom += l1 + l2·x`). `Shrink::NONE`
 /// is the identical (bit-for-bit) unregularized path.
-fn mu_update_reg(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat, shrink: Shrink) {
+pub(crate) fn mu_update_reg(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat, shrink: Shrink) {
     let k = x.cols();
     let reg = !shrink.is_none();
     let Shrink { l1, l2 } = shrink;

@@ -152,7 +152,12 @@ fn dot_wh(w: &Mat, h: &Mat, v: usize, d: usize) -> f32 {
 /// `num[i][k] = Σ_j ratio(i,j)·other[j][k]` over A's support (with A in
 /// the orientation that makes `i` the rows). `Shrink::NONE` is the
 /// identical (bit-for-bit) unregularized path.
-fn kl_half_step(
+///
+/// Composed of [`kl_colsum`] → [`kl_numer`] → [`kl_apply`] so the
+/// distributed sweep can run the pieces on different hosts (workers
+/// compute per-shard colsums and numerator partials, the coordinator
+/// reduces and applies) with the exact single-process arithmetic.
+pub(crate) fn kl_half_step(
     pool: &ThreadPool,
     a: &DataMatrix,
     x: &mut Mat,
@@ -160,10 +165,15 @@ fn kl_half_step(
     num: &mut Mat,
     shrink: Shrink,
 ) {
-    let k = x.cols();
-    let n_rows = x.rows();
-    // Column sums of the fixed factor (denominator).
-    let denom = reduce(
+    let denom = kl_colsum(pool, other);
+    kl_numer(pool, a, x, other, num);
+    kl_apply(pool, x, num, &denom, shrink);
+}
+
+/// Column sums of the fixed factor (the KL denominator), f64-accumulated.
+pub(crate) fn kl_colsum(pool: &ThreadPool, other: &Mat) -> Vec<f64> {
+    let k = other.cols();
+    reduce(
         pool,
         other.rows(),
         |rows| {
@@ -182,9 +192,14 @@ fn kl_half_step(
             a
         },
     )
-    .unwrap_or_else(|| vec![0.0; k]);
+    .unwrap_or_else(|| vec![0.0; k])
+}
 
-    // Numerators over A's support; rows of `num` match rows of `x`.
+/// KL numerators over A's support; rows of `num` match rows of `x` and
+/// are zeroed before accumulation (rows of `num` beyond `a`'s row count
+/// are left untouched — callers reuse oversized buffers).
+pub(crate) fn kl_numer(pool: &ThreadPool, a: &DataMatrix, x: &Mat, other: &Mat, num: &mut Mat) {
+    let k = x.cols();
     let xs = SharedRows::new(num);
     match a {
         DataMatrix::Sparse(csr) => {
@@ -193,7 +208,7 @@ fn kl_half_step(
                     let nrow = unsafe { xs.row_mut(i) };
                     nrow[..k].fill(0.0);
                     let (cols, vals) = csr.row(i);
-                    let xrow_i = unsafe { std::slice::from_raw_parts(x.data().as_ptr().add(i * k), k) };
+                    let xrow_i = x.row(i);
                     for (&j, &aval) in cols.iter().zip(vals) {
                         let j = j as usize;
                         let orow = other.row(j);
@@ -211,7 +226,7 @@ fn kl_half_step(
                 for i in rows {
                     let nrow = unsafe { xs.row_mut(i) };
                     nrow[..k].fill(0.0);
-                    let xrow_i = unsafe { std::slice::from_raw_parts(x.data().as_ptr().add(i * k), k) };
+                    let xrow_i = x.row(i);
                     for (j, &aval) in m.row(i).iter().enumerate() {
                         if aval == 0.0 {
                             continue;
@@ -227,16 +242,19 @@ fn kl_half_step(
             });
         }
     }
+}
 
-    // x ← x ⊙ num ⊘ denom
+/// Apply step: `x ← x ⊙ num ⊘ (denom + δ (+ l1 + l2·x))` row-parallel.
+pub(crate) fn kl_apply(pool: &ThreadPool, x: &mut Mat, num: &Mat, denom: &[f64], shrink: Shrink) {
+    let k = x.cols();
+    let n_rows = x.rows();
     let reg = !shrink.is_none();
     let Shrink { l1, l2 } = shrink;
     let xs = SharedRows::new(x);
-    let numref = &*num;
     pool.parallel_for(n_rows, None, |rows| {
         for i in rows {
             let xrow = unsafe { xs.row_mut(i) };
-            let nrow = numref.row(i);
+            let nrow = num.row(i);
             for j in 0..k {
                 let d = if reg {
                     denom[j] as f32 + DELTA + l1 + l2 * xrow[j]

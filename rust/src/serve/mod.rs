@@ -44,7 +44,10 @@
 //!   newline-delimited JSON over TCP (plus negotiated PLNB v2 binary
 //!   dense batches), keeping every model's factors and Gram resident
 //!   across requests (the whole point of the cached-Gram design), plus
-//!   the protocol [`Client`] with its v2 auto-upgrade.
+//!   the protocol [`Client`] with its v2 auto-upgrade, the typed
+//!   [`ClientError`] classification (busy / closed-mid-response /
+//!   protocol / retryable), and the [`DenseCall`] builder behind the
+//!   dense transform/recommend/update round trips.
 //! * [`router`] / [`worker`] — [`Router`]: the `plnmf route` front
 //!   daemon fanning the same protocol out to `plnmf serve` worker
 //!   **processes** — `replicas: N` per manifest model — with
@@ -79,8 +82,8 @@ pub use registry::{
 };
 pub use router::{Router, RouterOpts};
 pub use server::{
-    mat_from_json_rows, queries_to_json, Client, OwnedQueries, Server, CLOSED_MID_RESPONSE,
-    MAX_LINE_BYTES,
+    mat_from_json_rows, queries_to_json, Client, ClientError, ClientResult, DenseCall, DenseReply,
+    OwnedQueries, Server, CLOSED_MID_RESPONSE, MAX_LINE_BYTES,
 };
 pub use wire::{BinFrame, BinOp, MAX_FRAME_BYTES, PLNB_MAGIC, PLNB_VERSION};
 pub use worker::WorkerOpts;

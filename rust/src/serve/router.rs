@@ -386,7 +386,9 @@ impl Replica {
             .with_context(|| format!("dialing worker {addr}"))?;
         let _ = client.set_read_timeout(Some(timeout));
         let mut client = client;
-        client.request(&Json::obj(vec![("op", Json::str("stats"))]))
+        client
+            .request(&Json::obj(vec![("op", Json::str("stats"))]))
+            .map_err(anyhow::Error::from)
     }
 
     /// Forward one raw request frame (JSON line or PLNB binary) to this

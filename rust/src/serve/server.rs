@@ -275,6 +275,9 @@ fn dispatch_binary(bytes: &[u8], registry: &ModelRegistry, train: &TrainStore) -
         BinOp::Update => op_update_binary(frame, registry),
         BinOp::ShardLoad => crate::dist::worker::op_shard_load(frame, train),
         BinOp::Sweep => crate::dist::worker::op_sweep(frame, train),
+        BinOp::SweepMu => crate::dist::worker::op_sweep_mu(frame, train),
+        BinOp::GridSweepA => crate::dist::worker::op_grid_a(frame, train),
+        BinOp::GridSweepB => crate::dist::worker::op_grid_b(frame, train),
         BinOp::TransformResp | BinOp::GramResp => {
             Err(anyhow!("unexpected PLNB response frame in a request"))
         }
@@ -661,15 +664,87 @@ fn op_unload(req: &Json, registry: &ModelRegistry) -> Result<Json> {
 // Client.
 // ---------------------------------------------------------------------------
 
-/// Marker carried by every [`Client`] error where the peer vanished
-/// after the request was (or may have been) sent but before a complete
-/// response frame arrived. The vendored `anyhow` has no downcasting, so
-/// the distinct error class is a message marker; classify with
-/// [`Client::is_connection_closed`]. The distinction matters to callers
+/// Marker carried in the rendered message of every [`Client`] error
+/// where the peer vanished after the request was (or may have been)
+/// sent but before a complete response frame arrived — the Display
+/// prefix of [`ClientError::ClosedMidResponse`]. Kept public for
+/// callers classifying errors that crossed an `anyhow` context chain
+/// (see [`Client::is_connection_closed`]); first-class callers match
+/// the [`ClientError`] enum instead. The distinction matters to callers
 /// like the router's pooled client: a closed-mid-response request may
 /// have been processed by the peer and must NOT be blindly retried —
 /// it is surfaced as a retryable error instead.
 pub const CLOSED_MID_RESPONSE: &str = "connection closed mid-response";
+
+/// The typed failure classes of the [`Client`] request methods
+/// (`request_raw` / `request` / `request_ok` / [`DenseCall::send`]).
+/// Callers match variants instead of probing marker strings; the
+/// Display forms reproduce the historical message texts exactly, so
+/// errors converted into `anyhow` chains (every `?` at an `anyhow`
+/// call site still compiles, via the blanket `From`) render as before.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientError {
+    /// The router's backpressure signal: every live replica of the
+    /// model is at its in-flight ceiling. The right reaction is to
+    /// delay `retry_after_ms` (or shed the request), not to hammer
+    /// the shard.
+    Busy { retry_after_ms: u64 },
+    /// The peer vanished after the request was (or may have been)
+    /// written but before a complete response frame arrived. The
+    /// request may have been processed — never blindly retry it on a
+    /// non-idempotent op. The payload is the transport detail.
+    ClosedMidResponse(String),
+    /// The exchange itself is broken — a malformed or oversized
+    /// response frame, unexpected framing, a poisoned connection, or
+    /// a daemon-level refusal (`"ok": false` without retry semantics).
+    Protocol(String),
+    /// A failure that is safe to retry (on this or another replica):
+    /// the request provably never reached the peer (write failures),
+    /// or the peer explicitly answered `"retryable": true`.
+    Retryable(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Busy { retry_after_ms } => {
+                write!(f, "daemon busy: retry after {retry_after_ms} ms")
+            }
+            ClientError::ClosedMidResponse(detail) => {
+                write!(f, "{CLOSED_MID_RESPONSE} ({detail})")
+            }
+            ClientError::Protocol(msg) | ClientError::Retryable(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl ClientError {
+    /// Classify a parsed `"ok": false` response: busy/backpressure with
+    /// its hint, an explicitly retryable refusal, or a plain daemon
+    /// error (the two latter render as the historical
+    /// `daemon error: ...` text).
+    fn from_response(resp: &Json) -> ClientError {
+        if let Some(ms) = Client::busy_retry_after_ms(resp) {
+            return ClientError::Busy { retry_after_ms: ms };
+        }
+        let msg = format!(
+            "daemon error: {}",
+            resp.get("error").as_str().unwrap_or("(no error message)")
+        );
+        if resp.get("retryable").as_bool() == Some(true) {
+            ClientError::Retryable(msg)
+        } else {
+            ClientError::Protocol(msg)
+        }
+    }
+}
+
+/// Result of the typed [`Client`] request methods ([`crate::Result`]
+/// is the one-parameter `anyhow` alias, so the typed-error results
+/// spell their own shorthand).
+pub type ClientResult<T> = std::result::Result<T, ClientError>;
 
 /// A blocking protocol client: one request frame out, one response
 /// frame in. Used by the daemon bench, the router's per-shard pools,
@@ -734,7 +809,7 @@ impl Client {
                 // nothing about this socket's framing can be trusted
                 // now. Refuse reuse rather than risk desynced frames.
                 self.poisoned = true;
-                return Err(e);
+                return Err(e.into());
             }
         };
         self.proto = if resp.get("ok").as_bool() == Some(true)
@@ -750,9 +825,13 @@ impl Client {
     /// Whether `err` is the distinct "connection closed mid-response"
     /// failure (EOF or a read error after the request was written), as
     /// opposed to a connect failure, a write failure, or a response
-    /// that parsed but carried `"ok": false`.
-    pub fn is_connection_closed(err: &anyhow::Error) -> bool {
-        err.chain().any(|m| m.contains(CLOSED_MID_RESPONSE))
+    /// that parsed but carried `"ok": false`. Generic over the error's
+    /// Display so it accepts both a [`ClientError`] and an
+    /// `anyhow::Error` that wrapped one under contexts (`{:#}` renders
+    /// the full chain in either case). On a [`ClientError`] in hand,
+    /// matching [`ClientError::ClosedMidResponse`] is the direct form.
+    pub fn is_connection_closed<E: std::fmt::Display>(err: &E) -> bool {
+        format!("{err:#}").contains(CLOSED_MID_RESPONSE)
     }
 
     /// Whether a parsed response is the router's backpressure signal
@@ -775,60 +854,73 @@ impl Client {
     }
 
     /// Read one response frame (line or, on a v2 connection, binary).
-    fn read_response(&mut self) -> Result<WirePayload> {
+    fn read_response(&mut self) -> ClientResult<WirePayload> {
         match read_wire(&mut self.reader, MAX_FRAME_BYTES, self.proto >= 2) {
             Ok(WireRead::Payload(p)) => Ok(p),
-            Ok(WireRead::Eof) => bail!("{CLOSED_MID_RESPONSE} (EOF before a response frame)"),
-            Ok(WireRead::Partial(n)) => bail!(
-                "{CLOSED_MID_RESPONSE} (EOF after {n} bytes of an incomplete response frame)"
-            ),
-            Ok(WireRead::TooLong(n)) => {
-                bail!("response frame exceeds {MAX_FRAME_BYTES} bytes ({n} read or declared)")
+            Ok(WireRead::Eof) => {
+                Err(ClientError::ClosedMidResponse("EOF before a response frame".into()))
             }
-            Ok(WireRead::Bad { msg, .. }) => bail!("bad response frame: {msg}"),
-            Err(e) => Err(anyhow!("{CLOSED_MID_RESPONSE} ({e})")),
+            Ok(WireRead::Partial(n)) => Err(ClientError::ClosedMidResponse(format!(
+                "EOF after {n} bytes of an incomplete response frame"
+            ))),
+            Ok(WireRead::TooLong(n)) => Err(ClientError::Protocol(format!(
+                "response frame exceeds {MAX_FRAME_BYTES} bytes ({n} read or declared)"
+            ))),
+            Ok(WireRead::Bad { msg, .. }) => {
+                Err(ClientError::Protocol(format!("bad response frame: {msg}")))
+            }
+            Err(e) => Err(ClientError::ClosedMidResponse(format!("{e}"))),
         }
+    }
+
+    fn check_not_poisoned(&self) -> ClientResult<()> {
+        if self.poisoned {
+            return Err(ClientError::Protocol(
+                "connection poisoned by a failed negotiate; drop it and reconnect".into(),
+            ));
+        }
+        Ok(())
     }
 
     /// Send one already-serialized request line and return the raw
     /// response line, bytes untouched — the router's forwarding path
     /// (relaying the worker's exact bytes is what keeps routed
     /// responses bit-for-bit identical to a single daemon's).
-    pub fn request_raw(&mut self, line: &str) -> Result<String> {
-        if self.poisoned {
-            bail!("connection poisoned by a failed negotiate; drop it and reconnect");
-        }
-        wire::write_line(&mut self.writer, line).context("writing request")?;
+    pub fn request_raw(&mut self, line: &str) -> ClientResult<String> {
+        self.check_not_poisoned()?;
+        wire::write_line(&mut self.writer, line)
+            .map_err(|e| ClientError::Retryable(format!("writing request: {e}")))?;
         match self.read_response()? {
             WirePayload::Line(resp) => Ok(resp),
-            WirePayload::Binary(_) => bail!("unexpected binary response frame to a JSON request"),
+            WirePayload::Binary(_) => Err(ClientError::Protocol(
+                "unexpected binary response frame to a JSON request".into(),
+            )),
         }
     }
 
     /// Send one request frame of either framing and return the raw
     /// response frame — the router's relay path for v2 connections.
-    pub(crate) fn request_wire(&mut self, req: &WirePayload) -> Result<WirePayload> {
-        if self.poisoned {
-            bail!("connection poisoned by a failed negotiate; drop it and reconnect");
-        }
-        req.write_to(&mut self.writer).context("writing request")?;
+    pub(crate) fn request_wire(&mut self, req: &WirePayload) -> ClientResult<WirePayload> {
+        self.check_not_poisoned()?;
+        req.write_to(&mut self.writer)
+            .map_err(|e| ClientError::Retryable(format!("writing request: {e}")))?;
         self.read_response()
     }
 
     /// Send one request, read one response (whatever its `ok`).
-    pub fn request(&mut self, req: &Json) -> Result<Json> {
+    pub fn request(&mut self, req: &Json) -> ClientResult<Json> {
         let resp = self.request_raw(&req.to_string())?;
-        Json::parse(resp.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))
+        Json::parse(resp.trim())
+            .map_err(|e| ClientError::Protocol(format!("bad response JSON: {e}")))
     }
 
-    /// [`Self::request`], failing on `"ok": false` responses.
-    pub fn request_ok(&mut self, req: &Json) -> Result<Json> {
+    /// [`Self::request`], classifying `"ok": false` responses into the
+    /// typed [`ClientError`] variants (busy/backpressure with its
+    /// retry hint, explicitly retryable refusals, plain daemon errors).
+    pub fn request_ok(&mut self, req: &Json) -> ClientResult<Json> {
         let resp = self.request(req)?;
         if resp.get("ok").as_bool() != Some(true) {
-            bail!(
-                "daemon error: {}",
-                resp.get("error").as_str().unwrap_or("(no error message)")
-            );
+            return Err(ClientError::from_response(&resp));
         }
         Ok(resp)
     }
@@ -836,67 +928,34 @@ impl Client {
     /// One dense `transform` round trip on the negotiated framing:
     /// PLNB v2 binary frames after a successful [`Self::negotiate`],
     /// the v1 JSON encoding otherwise — same answer either way (parity
-    /// asserted in the integration tests). Returns `(h, residuals,
-    /// response meta)`.
+    /// asserted in the integration tests). Thin wrapper over
+    /// [`DenseCall`]. Returns `(h, residuals, response meta)`.
     pub fn transform_dense(
         &mut self,
         model: &str,
         queries: &Mat,
         warm: bool,
     ) -> Result<(Mat, Vec<f64>, Json)> {
-        if self.proto >= 2 {
-            let meta = Json::obj(vec![("warm", Json::Bool(warm))]);
-            let frame = wire::encode(
-                BinOp::Transform,
-                model,
-                &meta,
-                queries.rows(),
-                queries.cols(),
-                queries.data(),
-            )?;
-            match self.request_wire(&WirePayload::Binary(frame))? {
-                WirePayload::Binary(bytes) => {
-                    let f = wire::decode(&bytes)?;
-                    if f.op != BinOp::TransformResp {
-                        bail!("unexpected PLNB op in a transform response");
-                    }
-                    let residuals = f
-                        .meta
-                        .get("residuals")
-                        .as_arr()
-                        .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                        .unwrap_or_default();
-                    Ok((Mat::from_vec(f.rows, f.cols, f.data), residuals, f.meta))
-                }
-                WirePayload::Line(s) => {
-                    let resp =
-                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
-                    bail!(
-                        "daemon error: {}",
-                        resp.get("error").as_str().unwrap_or("(no error message)")
-                    )
-                }
-            }
-        } else {
-            let resp = self.request_ok(&Json::obj(vec![
-                ("op", Json::str("transform")),
-                ("model", Json::str(model)),
-                ("queries", queries_to_json(Queries::Dense(queries))),
-                ("warm", Json::Bool(warm)),
-            ]))?;
-            let h = mat_from_json_rows(resp.get("h"))?;
-            let residuals = resp
-                .get("residuals")
-                .as_arr()
-                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                .unwrap_or_default();
-            Ok((h, residuals, resp))
-        }
+        let reply = DenseCall::new(BinOp::Transform, model, queries)
+            .meta("warm", Json::Bool(warm))
+            .send(self)?;
+        let h = match reply.matrix {
+            Some(m) => m,
+            None => mat_from_json_rows(reply.resp.get("h"))?,
+        };
+        let residuals = reply
+            .resp
+            .get("residuals")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        Ok((h, residuals, reply.resp))
     }
 
     /// One dense `recommend` round trip on the negotiated framing (the
     /// response — small top-N pairs — is a JSON object on both
-    /// protocols). Returns the parsed response.
+    /// protocols). Thin wrapper over [`DenseCall`]. Returns the parsed
+    /// response.
     pub fn recommend_dense(
         &mut self,
         model: &str,
@@ -905,99 +964,138 @@ impl Client {
         exclude_seen: bool,
         warm: bool,
     ) -> Result<Json> {
-        if self.proto >= 2 {
-            let meta = Json::obj(vec![
-                ("top", Json::num(top as f64)),
-                ("exclude_seen", Json::Bool(exclude_seen)),
-                ("warm", Json::Bool(warm)),
-            ]);
-            let frame = wire::encode(
-                BinOp::Recommend,
-                model,
-                &meta,
-                queries.rows(),
-                queries.cols(),
-                queries.data(),
-            )?;
-            match self.request_wire(&WirePayload::Binary(frame))? {
-                WirePayload::Line(s) => {
-                    let resp =
-                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
-                    if resp.get("ok").as_bool() != Some(true) {
-                        bail!(
-                            "daemon error: {}",
-                            resp.get("error").as_str().unwrap_or("(no error message)")
-                        );
-                    }
-                    Ok(resp)
-                }
-                WirePayload::Binary(_) => {
-                    bail!("unexpected binary response frame to a recommend request")
-                }
-            }
-        } else {
-            self.request_ok(&Json::obj(vec![
-                ("op", Json::str("recommend")),
-                ("model", Json::str(model)),
-                ("queries", queries_to_json(Queries::Dense(queries))),
-                ("top", Json::num(top as f64)),
-                ("exclude_seen", Json::Bool(exclude_seen)),
-                ("warm", Json::Bool(warm)),
-            ]))
-        }
+        let reply = DenseCall::new(BinOp::Recommend, model, queries)
+            .meta("top", Json::num(top as f64))
+            .meta("exclude_seen", Json::Bool(exclude_seen))
+            .meta("warm", Json::Bool(warm))
+            .send(self)?;
+        Ok(reply.resp)
     }
 
     /// One dense `update` round trip on the negotiated framing (the
     /// response — an epoch number and counters — is a JSON object on
     /// both protocols). `sweeps: None` uses the daemon's configured
-    /// `update_sweeps`. Returns the parsed response carrying the new
-    /// factor `epoch`.
+    /// `update_sweeps`. Thin wrapper over [`DenseCall`]. Returns the
+    /// parsed response carrying the new factor `epoch`.
     pub fn update_dense(
         &mut self,
         model: &str,
         queries: &Mat,
         sweeps: Option<usize>,
     ) -> Result<Json> {
-        if self.proto >= 2 {
-            let mut fields = Vec::new();
-            if let Some(s) = sweeps {
-                fields.push(("sweeps", Json::num(s as f64)));
+        let mut call = DenseCall::new(BinOp::Update, model, queries);
+        if let Some(s) = sweeps {
+            call = call.meta("sweeps", Json::num(s as f64));
+        }
+        Ok(call.send(self)?.resp)
+    }
+}
+
+/// One typed dense request against a daemon: an op, a target model, a
+/// dense row-major query block, and op-specific meta fields. This is
+/// the single client surface behind [`Client::transform_dense`],
+/// [`Client::recommend_dense`], and [`Client::update_dense`] — it picks
+/// the negotiated framing (PLNB v2 binary after [`Client::negotiate`],
+/// the v1 JSON encoding otherwise) and classifies every failure into a
+/// [`ClientError`].
+///
+/// ```ignore
+/// let reply = DenseCall::new(BinOp::Transform, "model", &queries)
+///     .meta("warm", Json::Bool(true))
+///     .send(&mut client)?;
+/// ```
+pub struct DenseCall<'a> {
+    op: BinOp,
+    model: &'a str,
+    queries: &'a Mat,
+    meta: Vec<(&'static str, Json)>,
+}
+
+/// What a [`DenseCall`] came back with: the dense response matrix when
+/// the daemon answered with a binary frame (`transform` on v2), plus
+/// the response JSON (the frame meta on v2, the whole response on v1).
+pub struct DenseReply {
+    pub matrix: Option<Mat>,
+    pub resp: Json,
+}
+
+impl<'a> DenseCall<'a> {
+    /// A dense request. `op` must be one of the request ops
+    /// ([`BinOp::Transform`], [`BinOp::Recommend`], [`BinOp::Update`]);
+    /// anything else fails at [`Self::send`] with
+    /// [`ClientError::Protocol`].
+    pub fn new(op: BinOp, model: &'a str, queries: &'a Mat) -> Self {
+        DenseCall { op, model, queries, meta: Vec::new() }
+    }
+
+    /// Append one op-specific meta field (`warm`, `top`, `sweeps`, …).
+    /// Order is preserved into the encoded request, so wrappers emit
+    /// byte-identical frames to the pre-builder encoding.
+    pub fn meta(mut self, key: &'static str, value: Json) -> Self {
+        self.meta.push((key, value));
+        self
+    }
+
+    /// Run the round trip on `client`'s negotiated framing.
+    pub fn send(self, client: &mut Client) -> ClientResult<DenseReply> {
+        let DenseCall { op, model, queries, meta } = self;
+        let name = match op {
+            BinOp::Transform => "transform",
+            BinOp::Recommend => "recommend",
+            BinOp::Update => "update",
+            other => {
+                return Err(ClientError::Protocol(format!(
+                    "PLNB op {other:?} is not a dense request op"
+                )))
             }
-            let meta = Json::obj(fields);
+        };
+        if client.proto >= 2 {
             let frame = wire::encode(
-                BinOp::Update,
+                op,
                 model,
-                &meta,
+                &Json::obj(meta),
                 queries.rows(),
                 queries.cols(),
                 queries.data(),
-            )?;
-            match self.request_wire(&WirePayload::Binary(frame))? {
-                WirePayload::Line(s) => {
-                    let resp =
-                        Json::parse(s.trim()).map_err(|e| anyhow!("bad response JSON: {e}"))?;
-                    if resp.get("ok").as_bool() != Some(true) {
-                        bail!(
-                            "daemon error: {}",
-                            resp.get("error").as_str().unwrap_or("(no error message)")
-                        );
+            )
+            .map_err(|e| ClientError::Protocol(format!("{e:#}")))?;
+            match client.request_wire(&WirePayload::Binary(frame))? {
+                WirePayload::Binary(bytes) => {
+                    if op != BinOp::Transform {
+                        return Err(ClientError::Protocol(format!(
+                            "unexpected binary response frame to a {name} request"
+                        )));
                     }
-                    Ok(resp)
+                    let f = wire::decode(&bytes)
+                        .map_err(|e| ClientError::Protocol(format!("{e:#}")))?;
+                    if f.op != BinOp::TransformResp {
+                        return Err(ClientError::Protocol(format!(
+                            "unexpected PLNB op in a {name} response"
+                        )));
+                    }
+                    Ok(DenseReply {
+                        matrix: Some(Mat::from_vec(f.rows, f.cols, f.data)),
+                        resp: f.meta,
+                    })
                 }
-                WirePayload::Binary(_) => {
-                    bail!("unexpected binary response frame to an update request")
+                WirePayload::Line(s) => {
+                    let resp = Json::parse(s.trim())
+                        .map_err(|e| ClientError::Protocol(format!("bad response JSON: {e}")))?;
+                    if resp.get("ok").as_bool() != Some(true) {
+                        return Err(ClientError::from_response(&resp));
+                    }
+                    Ok(DenseReply { matrix: None, resp })
                 }
             }
         } else {
             let mut fields = vec![
-                ("op", Json::str("update")),
+                ("op", Json::str(name)),
                 ("model", Json::str(model)),
                 ("queries", queries_to_json(Queries::Dense(queries))),
             ];
-            if let Some(s) = sweeps {
-                fields.push(("sweeps", Json::num(s as f64)));
-            }
-            self.request_ok(&Json::obj(fields))
+            fields.extend(meta);
+            let resp = client.request_ok(&Json::obj(fields))?;
+            Ok(DenseReply { matrix: None, resp })
         }
     }
 }
@@ -1150,5 +1248,89 @@ mod tests {
         assert_eq!(Client::busy_retry_after_ms(&retryable), None);
         let ok = Json::parse(r#"{"ok": true}"#).unwrap();
         assert_eq!(Client::busy_retry_after_ms(&ok), None);
+    }
+
+    /// Accept one connection, read one request line, answer `reply` (or
+    /// hang up unanswered when `None`), then drop the socket.
+    fn one_shot(reply: Option<&'static str>) -> SocketAddr {
+        use std::io::{BufRead, Write};
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut line = String::new();
+            let _ = r.read_line(&mut line);
+            if let Some(text) = reply {
+                let mut w = s;
+                let _ = writeln!(w, "{text}");
+                let _ = w.flush();
+            }
+        });
+        addr
+    }
+
+    /// Every [`ClientError`] variant is reachable over a real socket and
+    /// carries the legacy message text through `Display` — callers that
+    /// matched on strings keep working, callers that match on the enum
+    /// get the classification.
+    #[test]
+    fn client_errors_classify_over_a_live_socket() {
+        let ping = Json::obj(vec![("op", Json::str("ping"))]);
+        let rt = Some(Duration::from_secs(5));
+
+        // Busy: ok:false + busy:true carries the server's retry hint.
+        let addr = one_shot(Some(
+            r#"{"ok": false, "busy": true, "retryable": true, "retry_after_ms": 75, "error": "all replicas busy"}"#,
+        ));
+        let mut c = Client::connect(addr).unwrap();
+        c.set_read_timeout(rt).unwrap();
+        match c.request_ok(&ping).unwrap_err() {
+            ClientError::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 75),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+
+        // ClosedMidResponse: request written, peer hangs up unanswered.
+        let addr = one_shot(None);
+        let mut c = Client::connect(addr).unwrap();
+        c.set_read_timeout(rt).unwrap();
+        let err = c.request_ok(&ping).unwrap_err();
+        assert!(matches!(err, ClientError::ClosedMidResponse(_)), "{err:?}");
+        assert!(Client::is_connection_closed(&err));
+        assert_eq!(
+            err.to_string(),
+            "connection closed mid-response (EOF before a response frame)"
+        );
+
+        // Protocol: a reply that is not JSON at all.
+        let addr = one_shot(Some("not json"));
+        let mut c = Client::connect(addr).unwrap();
+        c.set_read_timeout(rt).unwrap();
+        let err = c.request_ok(&ping).unwrap_err();
+        assert!(matches!(err, ClientError::Protocol(_)), "{err:?}");
+        assert!(err.to_string().contains("bad response JSON"), "{err}");
+        assert!(!Client::is_connection_closed(&err));
+
+        // Retryable: an ok:false the daemon flags as worth retrying.
+        let addr = one_shot(Some(r#"{"ok": false, "retryable": true, "error": "replica restarting"}"#));
+        let mut c = Client::connect(addr).unwrap();
+        c.set_read_timeout(rt).unwrap();
+        match c.request_ok(&ping).unwrap_err() {
+            ClientError::Retryable(msg) => {
+                assert_eq!(msg, "daemon error: replica restarting");
+            }
+            other => panic!("expected Retryable, got {other:?}"),
+        }
+
+        // Plain daemon errors stay Protocol with the legacy text.
+        let addr = one_shot(Some(r#"{"ok": false, "error": "unknown model 'ghost'"}"#));
+        let mut c = Client::connect(addr).unwrap();
+        c.set_read_timeout(rt).unwrap();
+        match c.request_ok(&ping).unwrap_err() {
+            ClientError::Protocol(msg) => {
+                assert_eq!(msg, "daemon error: unknown model 'ghost'");
+            }
+            other => panic!("expected Protocol, got {other:?}"),
+        }
     }
 }

@@ -18,6 +18,8 @@
 //! 4       1     version (2)
 //! 5       1     op      (0x01 transform, 0x02 recommend,
 //!                        0x03 shard-load, 0x04 sweep, 0x05 update,
+//!                        0x06 sweep-mu, 0x07 grid-sweep-a,
+//!                        0x08 grid-sweep-b,
 //!                        0x81 transform response, 0x83 gram response)
 //! 6       2     name_len  u16 — model-name bytes (0 in responses)
 //! 8       4     meta_len  u32 — JSON meta segment bytes (may be 0)
@@ -55,17 +57,23 @@
 //! responses are top-N pairs — small — and stay JSON even on a v2
 //! connection.
 //!
-//! ## Training ops (distributed HALS)
+//! ## Training ops (distributed HALS / MU)
 //!
 //! `plnmf train-dist` reuses the same framing for its coordinator ↔
 //! worker traffic: `0x03 shard-load` ships a CSR shard (as nnz×3
 //! triplet rows) or a resident H panel, `0x04 sweep` broadcasts the
-//! current W panel and asks for one local HALS half-sweep, and `0x83
-//! gram-response` carries the worker's k×k Gram plus its V×k partial
-//! product (and, at sync epochs, its H panel) stacked row-wise. These
-//! ops are coordinator-private: they are **not** routable requests
-//! ([`BinOp::is_request`] is false), so the serving router refuses to
-//! relay them and a training worker is always driven point-to-point.
+//! current W panel and asks for one local HALS half-sweep, `0x06
+//! sweep-mu` is the multiplicative-update twin of `0x04` (Frobenius or
+//! KL, selected by the meta), `0x07 grid-sweep-a` / `0x08 grid-sweep-b`
+//! are the two rounds of a pr×pc-grid epoch (round A ships a W row
+//! panel and collects the block's AᵀW partial; round B ships the k×k
+//! Gram plus the reduced partial and collects the updated panel's
+//! products), and `0x83 gram-response` carries the worker's k×k Gram
+//! plus its partial product (and, at sync epochs, its H panel) stacked
+//! row-wise. These ops are coordinator-private: they are **not**
+//! routable requests ([`BinOp::is_request`] is false), so the serving
+//! router refuses to relay them and a training worker is always driven
+//! point-to-point.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -113,6 +121,17 @@ pub enum BinOp {
     /// served model's factors and publish the next factor epoch
     /// (client → daemon; the response is a small JSON line).
     Update = 0x05,
+    /// Training: broadcast the W panel and run one local multiplicative
+    /// half-sweep — Frobenius or KL, selected by the frame meta
+    /// (coordinator → worker).
+    SweepMu = 0x06,
+    /// Training, 2D grid, round A: ship the worker's W row panel and
+    /// collect its block's AᵀW partial product (coordinator → worker).
+    GridSweepA = 0x07,
+    /// Training, 2D grid, round B: ship the k×k W Gram stacked over the
+    /// reduced AᵀW partial; the worker updates its H panel and returns
+    /// its products (coordinator → worker).
+    GridSweepB = 0x08,
     /// Transform response carrying the h matrix (daemon → client).
     TransformResp = 0x81,
     /// Training response carrying Gram + partial-product (+ H panel)
@@ -128,6 +147,9 @@ impl BinOp {
             0x03 => Some(BinOp::ShardLoad),
             0x04 => Some(BinOp::Sweep),
             0x05 => Some(BinOp::Update),
+            0x06 => Some(BinOp::SweepMu),
+            0x07 => Some(BinOp::GridSweepA),
+            0x08 => Some(BinOp::GridSweepB),
             0x81 => Some(BinOp::TransformResp),
             0x83 => Some(BinOp::GramResp),
             _ => None,
@@ -734,9 +756,14 @@ mod tests {
 
     #[test]
     fn training_ops_roundtrip_but_are_not_routable() {
-        for (op, byte) in
-            [(BinOp::ShardLoad, 0x03u8), (BinOp::Sweep, 0x04), (BinOp::GramResp, 0x83)]
-        {
+        for (op, byte) in [
+            (BinOp::ShardLoad, 0x03u8),
+            (BinOp::Sweep, 0x04),
+            (BinOp::SweepMu, 0x06),
+            (BinOp::GridSweepA, 0x07),
+            (BinOp::GridSweepB, 0x08),
+            (BinOp::GramResp, 0x83),
+        ] {
             assert_eq!(op as u8, byte);
             assert_eq!(BinOp::from_byte(byte), Some(op));
             // The serving router must refuse to forward training ops:

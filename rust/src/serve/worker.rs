@@ -101,6 +101,7 @@ impl ManagedWorker {
             c.set_read_timeout(Some(Duration::from_secs(2)))?;
             let mut c = c;
             c.request(&Json::obj(vec![("op", Json::str("shutdown"))]))
+                .map_err(anyhow::Error::from)
         });
         if graceful.is_err() {
             // Unreachable worker (already dead or hung): fall through

@@ -13,6 +13,8 @@
 //!   makes the coordinator respawn it, re-ship its shard, rewind to the
 //!   last consistent checkpoint, and still finish the full epoch
 //!   budget with a final error matching an undisturbed distributed run.
+//! * **2D grid** — the same two claims again on a 2×2 worker grid
+//!   (panel-sharded W *and* H), plus the MU engine over a real process.
 
 use std::path::PathBuf;
 
@@ -45,6 +47,24 @@ fn spawn_opts(workers: usize, sync_every: usize) -> DistOpts {
         workers,
         sync_every,
         ..DistOpts::default()
+    }
+}
+
+fn grid_opts(pr: usize, pc: usize, sync_every: usize) -> DistOpts {
+    DistOpts { grid: Some((pr, pc)), ..spawn_opts(pr * pc, sync_every) }
+}
+
+fn assert_traces_close(dist: &plnmf::coordinator::RunReport, single: &plnmf::coordinator::RunReport) {
+    assert_eq!(dist.trace.len(), single.trace.len(), "trace lengths diverge");
+    for (d, s) in dist.trace.iter().zip(&single.trace) {
+        assert_eq!(d.iter, s.iter);
+        assert!(
+            (d.rel_error - s.rel_error).abs() <= TOL,
+            "iter {}: dist {} vs single {}",
+            d.iter,
+            d.rel_error,
+            s.rel_error
+        );
     }
 }
 
@@ -102,6 +122,54 @@ fn killing_a_worker_mid_run_recovers_and_completes() {
         );
     }
     assert!(killed.final_rel_error.is_finite());
+}
+
+#[test]
+fn a_2x2_grid_of_spawned_workers_matches_the_single_process_trace() {
+    // Four real worker processes on a 2×2 grid: W is panel-sharded
+    // across grid rows and H across grid columns, epochs run as two
+    // wire rounds, and the trace must still match the single-process
+    // FAST-HALS driver within the same tolerance as the 1D plan.
+    let cfg = dist_cfg("tiny-sparse", 8);
+    let dist = train_dist(&cfg, &grid_opts(2, 2, 3)).unwrap();
+    let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(dist.engine, "fasthals-dist");
+    assert_traces_close(&dist, &single);
+}
+
+#[test]
+fn killing_a_grid_worker_mid_run_recovers_and_completes() {
+    // Chaos-kill block (1,0) of a 2×2 grid at the start of epoch 5
+    // (sync_every=3 → rewind to the epoch-3 checkpoint). Recovery must
+    // respawn the dead process, re-ship its A block, resync the H
+    // panels of the survivors, and finish all 10 epochs on a trace
+    // matching an undisturbed grid run.
+    let cfg = dist_cfg("tiny-sparse", 10);
+    let mut opts = grid_opts(2, 2, 3);
+    opts.chaos_kill = Some((5, 2));
+    let killed = train_dist(&cfg, &opts).unwrap();
+
+    let undisturbed = train_dist(&cfg, &grid_opts(2, 2, 3)).unwrap();
+
+    assert_eq!(
+        killed.trace.last().map(|r| r.iter),
+        Some(cfg.max_iters),
+        "recovered grid run must reach the final epoch"
+    );
+    assert_traces_close(&killed, &undisturbed);
+    assert!(killed.final_rel_error.is_finite());
+}
+
+#[test]
+fn the_mu_engine_runs_distributed_with_single_process_parity() {
+    // One spawned worker runs the exact single-process multiplicative
+    // update math plus a wire hop — the engine-family acceptance bar.
+    let mut cfg = dist_cfg("tiny-sparse", 8);
+    cfg.engine = EngineKind::Mu;
+    let dist = train_dist(&cfg, &spawn_opts(1, 3)).unwrap();
+    let single = Driver::from_config(&cfg).unwrap().run().unwrap();
+    assert_eq!(dist.engine, "mu-dist");
+    assert_traces_close(&dist, &single);
 }
 
 #[test]
