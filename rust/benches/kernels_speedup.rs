@@ -1,0 +1,14 @@
+//! `cargo bench --bench kernels_speedup` — every refactored hot path
+//! timed on the scalar and the runtime-selected SIMD backend in one
+//! process, with the per-step ratio. Scale via PLNMF_SCALE=small|paper;
+//! PLNMF_KERNELS=scalar pins the selected side to scalar (ratio ≈ 1).
+
+fn main() -> anyhow::Result<()> {
+    plnmf::util::logging::init_from_env();
+    let scale = if std::env::var("PLNMF_SCALE").map(|s| s == "paper").unwrap_or(false) {
+        plnmf::bench::Scale::Paper
+    } else {
+        plnmf::bench::Scale::Small
+    };
+    plnmf::bench::kernels::run(scale, std::path::Path::new("results"))
+}

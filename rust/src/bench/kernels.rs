@@ -1,0 +1,152 @@
+//! Kernel-dispatch speedup microbench: runs the same hot paths twice in
+//! one process — once on a pool pinned to the portable scalar kernels,
+//! once on the runtime-selected backend (`Kernels::select()`, which
+//! honors the `PLNMF_KERNELS` override) — and reports the per-step
+//! speedup ratio.
+//!
+//! Steps cover the refactored layers end to end: the tiled-HALS engine
+//! (fig6's hot path), naive FastHALS (fig7's baseline), the MU engine's
+//! dense denominators, and a warm serving projection round. On a host
+//! without AVX2 (or with `PLNMF_KERNELS=scalar`) both columns run the
+//! same code and the ratio prints ≈1.0 — the CSV still documents which
+//! backends were measured.
+//!
+//! Run via `plnmf bench kernels`; writes `kernels_speedup.csv`.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::data::{load_dataset, DataMatrix, Dataset};
+use crate::kernels::Kernels;
+use crate::linalg::Mat;
+use crate::nmf::fasthals::FastHalsEngine;
+use crate::nmf::mu::MuEngine;
+use crate::nmf::plnmf::PlNmfEngine;
+use crate::nmf::{cost_model, Factors, NmfEngine};
+use crate::parallel::{pool::default_threads, ThreadPool};
+use crate::serve::{OwnedQueries, Projector, ProjectorOpts};
+use crate::Result;
+
+use super::report::write_csv;
+use super::Scale;
+
+/// Docs in the serving-projection step (columns of A, rows of Aᵀ).
+const SERVE_DOCS: usize = 256;
+
+/// One backend's timings, step name → seconds per iteration/round.
+pub fn time_steps(
+    kern: &'static Kernels,
+    ds: &Arc<Dataset>,
+    k: usize,
+    iters: usize,
+    threads: usize,
+    cache_bytes: usize,
+) -> Result<Vec<(&'static str, f64)>> {
+    let pool = Arc::new(ThreadPool::with_kernels(threads, kern));
+    let mut out = Vec::new();
+
+    let t_star = cost_model::select_tile(k, cache_bytes);
+    let mut plnmf = PlNmfEngine::new(ds.clone(), pool.clone(), k, 42, t_star, cache_bytes);
+    out.push(("plnmf_step", time_engine(&mut plnmf, iters)?));
+
+    let mut fasthals = FastHalsEngine::new(ds.clone(), pool.clone(), k, 42);
+    out.push(("fasthals_step", time_engine(&mut fasthals, iters)?));
+
+    let mut mu = MuEngine::new(ds.clone(), pool.clone(), k, 42);
+    out.push(("mu_step", time_engine(&mut mu, iters)?));
+
+    // Warm serving round: one untimed projection touches every buffer,
+    // then the timed rounds measure the steady-state solve path.
+    let factors = Factors::random(ds.v(), ds.d(), k, 42);
+    let n_docs = ds.d().min(SERVE_DOCS);
+    let owned = match &ds.at {
+        DataMatrix::Sparse(c) => OwnedQueries::Sparse(c.slice_rows(0, n_docs)),
+        DataMatrix::Dense(m) => {
+            OwnedQueries::Dense(Mat::from_fn(n_docs, m.cols(), |i, j| m.at(i, j)))
+        }
+    };
+    let opts = ProjectorOpts { sweeps: 8, micro_batch: 32, ..Default::default() };
+    let projector = Projector::new(factors.w, pool, opts)?;
+    projector.project(owned.as_queries())?;
+    let timer = std::time::Instant::now();
+    for _ in 0..iters {
+        projector.project(owned.as_queries())?;
+    }
+    out.push(("serving_project_warm", timer.elapsed().as_secs_f64() / iters as f64));
+
+    Ok(out)
+}
+
+fn time_engine(engine: &mut dyn NmfEngine, iters: usize) -> Result<f64> {
+    engine.step()?; // untimed warmup: touches all buffers
+    let timer = std::time::Instant::now();
+    for _ in 0..iters {
+        engine.step()?;
+    }
+    Ok(timer.elapsed().as_secs_f64() / iters as f64)
+}
+
+pub fn run(scale: Scale, out_dir: &Path) -> Result<()> {
+    let (dataset, iters) = match scale {
+        Scale::Small => ("20news-small", 10),
+        Scale::Paper => ("20news", 6),
+    };
+    let k = scale.k_single();
+    let cache = 35 * 1024 * 1024;
+    let threads = default_threads();
+    let ds = Arc::new(load_dataset(dataset, 42)?);
+
+    let base = Kernels::scalar();
+    let fast = Kernels::select();
+    println!(
+        "kernel speedup on {dataset} (V={}, D={}, K={k}, {threads} threads): \
+         {} vs {}\n",
+        ds.v(),
+        ds.d(),
+        base.name(),
+        fast.name()
+    );
+
+    let base_times = time_steps(base, &ds, k, iters, threads, cache)?;
+    let fast_times = time_steps(fast, &ds, k, iters, threads, cache)?;
+
+    let mut rows = Vec::new();
+    println!("{:<22} {:>12} {:>12} {:>8}", "step", base.name(), fast.name(), "ratio");
+    for ((name, b), (name2, f)) in base_times.iter().zip(&fast_times) {
+        debug_assert_eq!(name, name2);
+        let ratio = b / f.max(1e-12);
+        println!("{name:<22} {b:>11.4}s {f:>11.4}s {ratio:>7.2}×");
+        rows.push(format!(
+            "{name},{},{},{b:.6},{f:.6},{ratio:.3}",
+            base.name(),
+            fast.name()
+        ));
+    }
+    let csv = out_dir.join("kernels_speedup.csv");
+    write_csv(
+        &csv,
+        "step,baseline_backend,selected_backend,baseline_secs,selected_secs,speedup",
+        &rows,
+    )?;
+    println!("\nCSV: {}", csv.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_backends_time_every_step() {
+        let ds = Arc::new(load_dataset("tiny", 42).unwrap());
+        for kern in [Kernels::scalar(), Kernels::detected()] {
+            let times = time_steps(kern, &ds, 4, 1, 2, 1 << 20).unwrap();
+            let names: Vec<&str> = times.iter().map(|(n, _)| *n).collect();
+            assert_eq!(
+                names,
+                ["plnmf_step", "fasthals_step", "mu_step", "serving_project_warm"]
+            );
+            assert!(times.iter().all(|(_, s)| *s > 0.0 && s.is_finite()));
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! | E8 | Table 4 dataset statistics    | `plnmf datasets` | — |
 //! | S1 | serving docs/sec @ batch size | [`serving`] | `cargo bench --bench serving_throughput` |
 //! | S2 | train-dist worker scaling     | [`train_dist`] | `cargo bench --bench train_dist_scaling` |
+//! | —  | SIMD kernel dispatch speedup  | [`kernels`] | `cargo bench --bench kernels_speedup` |
 //!
 //! Every run defaults to the scaled-down `-small` profiles so `cargo
 //! bench` completes in minutes; pass `--scale paper` (or env
@@ -27,6 +28,7 @@ pub mod fig9;
 pub mod table5;
 pub mod serving;
 pub mod train_dist;
+pub mod kernels;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -177,7 +179,7 @@ COMMANDS:
   model      print the §5 data-movement model report (E6): --k or positional
              K values, --dataset for V, --cache_bytes
   bench      regenerate paper artifacts: bench
-             <fig6|fig7|fig8|fig9|table5|serving|train-dist|all>
+             <fig6|fig7|fig8|fig9|table5|serving|train-dist|kernels|all>
              [--scale small|paper] [--out-dir results]
   help       this text
 
@@ -614,6 +616,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "table5" => table5::run(scale, &out)?,
         "serving" => serving::run(scale, &out)?,
         "train-dist" => train_dist::run(scale, &out)?,
+        "kernels" => kernels::run(scale, &out)?,
         "all" => {
             fig6::run_sel(scale, &out, &sel)?;
             fig7::run_sel(scale, &out, &sel)?;
@@ -622,6 +625,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             table5::run(scale, &out)?;
             serving::run(scale, &out)?;
             train_dist::run(scale, &out)?;
+            kernels::run(scale, &out)?;
         }
         other => bail!("unknown bench '{other}'"),
     }

@@ -1,0 +1,585 @@
+//! Unified SIMD microkernel layer with runtime dispatch.
+//!
+//! Every bandwidth-bound inner loop of the engines — the GEMM k-pair
+//! unroll, the spmm row accumulate, the Gram row folds, the HALS
+//! column-step saxpy + `max(ε)` shrink, the MU denominators, and the KL
+//! column sums — bottoms out in one of the primitives below. Each has a
+//! portable scalar implementation (verbatim the loops this module
+//! replaced, so the scalar backend is bit-for-bit identical to the
+//! pre-refactor code) and an x86_64 AVX2+FMA implementation behind
+//! `#[target_feature]`, selected at [`Kernels::select`] time via
+//! `is_x86_feature_detected!` into a table of plain fn pointers that
+//! [`crate::parallel::ThreadPool`] carries to every engine.
+//!
+//! ## Exactness contract
+//!
+//! Two classes of primitives, asserted by the parity tests below:
+//!
+//! * **Exact** — `axpy`, `clamp_sumsq`, `shrink_clamp_sumsq`,
+//!   `colsum_f64`: the vector body performs the *same* elementwise
+//!   operations in the same per-element order as the scalar loop
+//!   (separate multiply + add, never a fused FMA; sequential f64 sum
+//!   folds), so the AVX2 backend is bit-identical to scalar. This keeps
+//!   `spmm` and the tiled phase-2 column sweep backend-independent.
+//! * **Reassociated** — `dot`, `axpy2`, `sqnorm_f64`: FMA contraction
+//!   and SIMD-lane reduction reorder the accumulation, so results match
+//!   scalar only within relative fp tolerance (≤ 2e-3 at engine scale,
+//!   the same slack the tiled-vs-naive property tests allow).
+//!
+//! ## Override
+//!
+//! `PLNMF_KERNELS=scalar` forces the scalar backend (the golden-trace
+//! suite pins this so committed traces stay machine-independent);
+//! `PLNMF_KERNELS=avx2` requests AVX2+FMA and falls back to scalar when
+//! the CPU lacks it. Unset: auto-detect. The variable is consulted on
+//! every `select()` call, so benches can measure both backends in one
+//! process by re-constructing pools under different values.
+
+use crate::Elem;
+
+/// Which implementation family a [`Kernels`] table dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar loops (bit-identical to the pre-SIMD code).
+    Scalar,
+    /// AVX2 + FMA `#[target_feature]` kernels (x86_64 only).
+    Avx2Fma,
+}
+
+impl Backend {
+    /// Stable name, reported by the serving `stats` op.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// Dispatch table of the microkernel primitives. Plain fn pointers: one
+/// indirect call per slice-level operation, nothing per element.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    pub backend: Backend,
+    /// `y[j] += a · x[j]` (exact across backends).
+    pub axpy: fn(Elem, &[Elem], &mut [Elem]),
+    /// `y[j] += a0 · x0[j] + a1 · x1[j]` — the GEMM k-pair unroll
+    /// (reassociated: the AVX2 body uses FMA).
+    pub axpy2: fn(Elem, &[Elem], Elem, &[Elem], &mut [Elem]),
+    /// f32-accumulated dot product (reassociated on AVX2).
+    pub dot: fn(&[Elem], &[Elem]) -> Elem,
+    /// `s[j] += x[j] as f64` — the KL denominator column sum (exact).
+    pub colsum_f64: fn(&[Elem], &mut [f64]),
+    /// `x[j] = max(eps, x[j])`, returns `Σ x[j]²` in f64 with the
+    /// scalar's sequential fold order (exact across backends).
+    pub clamp_sumsq: fn(&mut [Elem], Elem) -> f64,
+    /// `x[j] = max(eps, (x[j] − l1) · inv)`, returns `Σ x[j]²` in f64 —
+    /// the elastic-net shrink + non-negativity projection (exact).
+    pub shrink_clamp_sumsq: fn(&mut [Elem], Elem, Elem, Elem) -> f64,
+    /// `Σ x[j]²` in f64 (reassociated on AVX2).
+    pub sqnorm_f64: fn(&[Elem]) -> f64,
+}
+
+impl Kernels {
+    /// Backend name (`"scalar"` / `"avx2+fma"`), for stats surfaces.
+    pub fn name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The scalar table (always available).
+    pub fn scalar() -> &'static Kernels {
+        &SCALAR
+    }
+
+    /// The fastest table this CPU supports, ignoring the env override.
+    pub fn detected() -> &'static Kernels {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return &AVX2;
+            }
+        }
+        &SCALAR
+    }
+
+    /// Runtime selection: the `PLNMF_KERNELS` env override, else CPU
+    /// feature detection. Consulted per call (detection is cached by
+    /// std), so a process can flip backends between pool constructions.
+    pub fn select() -> &'static Kernels {
+        match std::env::var("PLNMF_KERNELS").as_deref() {
+            Ok("scalar") => &SCALAR,
+            Ok("avx2") | Ok("avx2+fma") => Self::detected(),
+            _ => Self::detected(),
+        }
+    }
+}
+
+/// The portable backend — each body is the verbatim loop it replaced.
+pub static SCALAR: Kernels = Kernels {
+    backend: Backend::Scalar,
+    axpy: scalar::axpy,
+    axpy2: scalar::axpy2,
+    dot: scalar::dot,
+    colsum_f64: scalar::colsum_f64,
+    clamp_sumsq: scalar::clamp_sumsq,
+    shrink_clamp_sumsq: scalar::shrink_clamp_sumsq,
+    sqnorm_f64: scalar::sqnorm_f64,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    backend: Backend::Avx2Fma,
+    axpy: avx2::axpy,
+    axpy2: avx2::axpy2,
+    dot: avx2::dot,
+    colsum_f64: avx2::colsum_f64,
+    clamp_sumsq: avx2::clamp_sumsq,
+    shrink_clamp_sumsq: avx2::shrink_clamp_sumsq,
+    sqnorm_f64: avx2::sqnorm_f64,
+};
+
+mod scalar {
+    use super::Elem;
+
+    pub fn axpy(a: Elem, x: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    pub fn axpy2(a0: Elem, x0: &[Elem], a1: Elem, x1: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x0.len(), y.len());
+        debug_assert_eq!(x1.len(), y.len());
+        for ((yi, &u), &v) in y.iter_mut().zip(x0).zip(x1) {
+            *yi += a0 * u + a1 * v;
+        }
+    }
+
+    pub fn dot(x: &[Elem], y: &[Elem]) -> Elem {
+        debug_assert_eq!(x.len(), y.len());
+        let mut s = 0.0;
+        for (&a, &b) in x.iter().zip(y) {
+            s += a * b;
+        }
+        s
+    }
+
+    pub fn colsum_f64(x: &[Elem], s: &mut [f64]) {
+        debug_assert_eq!(x.len(), s.len());
+        for (si, &xi) in s.iter_mut().zip(x) {
+            *si += xi as f64;
+        }
+    }
+
+    pub fn clamp_sumsq(x: &mut [Elem], eps: Elem) -> f64 {
+        let mut sumsq = 0.0f64;
+        for d in x.iter_mut() {
+            if *d < eps {
+                *d = eps;
+            }
+            sumsq += *d as f64 * *d as f64;
+        }
+        sumsq
+    }
+
+    pub fn shrink_clamp_sumsq(x: &mut [Elem], l1: Elem, inv: Elem, eps: Elem) -> f64 {
+        let mut sumsq = 0.0f64;
+        for d in x.iter_mut() {
+            let v = (*d - l1) * inv;
+            *d = if v < eps { eps } else { v };
+            sumsq += *d as f64 * *d as f64;
+        }
+        sumsq
+    }
+
+    pub fn sqnorm_f64(x: &[Elem]) -> f64 {
+        let mut s = 0.0f64;
+        for &a in x {
+            s += a as f64 * a as f64;
+        }
+        s
+    }
+}
+
+/// AVX2+FMA backend. Every public fn here is a safe wrapper whose inner
+/// `#[target_feature]` body is only reachable through the [`AVX2`] table
+/// — which [`Kernels::detected`] installs strictly after
+/// `is_x86_feature_detected!("avx2") && ...("fma")` — so the required
+/// CPU features are guaranteed present at call time.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Elem;
+    use std::arch::x86_64::*;
+
+    const LANES: usize = 8;
+
+    pub fn axpy(a: Elem, x: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { axpy_body(a, x, y) }
+    }
+
+    /// Exact: separate mul + add matches the scalar `y += a·x` per
+    /// element; the remainder tail runs the identical scalar op.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_body(a: Elem, x: &[Elem], y: &mut [Elem]) {
+        let n = y.len();
+        let av = _mm256_set1_ps(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += LANES;
+        }
+        while i < n {
+            *yp.add(i) += a * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn axpy2(a0: Elem, x0: &[Elem], a1: Elem, x1: &[Elem], y: &mut [Elem]) {
+        debug_assert_eq!(x0.len(), y.len());
+        debug_assert_eq!(x1.len(), y.len());
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { axpy2_body(a0, x0, a1, x1, y) }
+    }
+
+    /// Reassociated: two chained FMAs per element (the contraction LLVM
+    /// never applied to the scalar source).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy2_body(a0: Elem, x0: &[Elem], a1: Elem, x1: &[Elem], y: &mut [Elem]) {
+        let n = y.len();
+        let a0v = _mm256_set1_ps(a0);
+        let a1v = _mm256_set1_ps(a1);
+        let p0 = x0.as_ptr();
+        let p1 = x1.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let t = _mm256_fmadd_ps(a1v, _mm256_loadu_ps(p1.add(i)), yv);
+            let r = _mm256_fmadd_ps(a0v, _mm256_loadu_ps(p0.add(i)), t);
+            _mm256_storeu_ps(yp.add(i), r);
+            i += LANES;
+        }
+        while i < n {
+            *yp.add(i) += a0 * *p0.add(i) + a1 * *p1.add(i);
+            i += 1;
+        }
+    }
+
+    pub fn dot(x: &[Elem], y: &[Elem]) -> Elem {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { dot_body(x, y) }
+    }
+
+    /// Reassociated: two independent FMA accumulators + lane reduction.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_body(x: &[Elem], y: &[Elem]) -> Elem {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 2 * LANES <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + LANES)),
+                _mm256_loadu_ps(yp.add(i + LANES)),
+                acc1,
+            );
+            i += 2 * LANES;
+        }
+        if i + LANES <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            i += LANES;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        // Horizontal sum: 8 → 4 → 2 → 1.
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let lo = _mm256_castps256_ps128(acc);
+        let q = _mm_add_ps(lo, hi);
+        let d = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let s1 = _mm_add_ss(d, _mm_shuffle_ps(d, d, 0b01));
+        let mut s = _mm_cvtss_f32(s1);
+        while i < n {
+            s += *xp.add(i) * *yp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    pub fn colsum_f64(x: &[Elem], s: &mut [f64]) {
+        debug_assert_eq!(x.len(), s.len());
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { colsum_f64_body(x, s) }
+    }
+
+    /// Exact: each `s[j] += x[j] as f64` is the same widen + add as the
+    /// scalar loop — per-slot accumulators never reassociate.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn colsum_f64_body(x: &[Elem], s: &mut [f64]) {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let sp = s.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xd = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(i)));
+            let sv = _mm256_loadu_pd(sp.add(i));
+            _mm256_storeu_pd(sp.add(i), _mm256_add_pd(sv, xd));
+            i += 4;
+        }
+        while i < n {
+            *sp.add(i) += *xp.add(i) as f64;
+            i += 1;
+        }
+    }
+
+    pub fn clamp_sumsq(x: &mut [Elem], eps: Elem) -> f64 {
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { clamp_sumsq_body(x, eps) }
+    }
+
+    /// Exact: the clamp vectorizes (`max(eps, d)` matches the scalar
+    /// `if d < eps` branch for every input, NaN included — max returns
+    /// the second operand on NaN); the f64 sum-of-squares then folds
+    /// sequentially over the stored values, preserving the scalar's
+    /// accumulation order bit-for-bit.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn clamp_sumsq_body(x: &mut [Elem], eps: Elem) -> f64 {
+        let n = x.len();
+        let ev = _mm256_set1_ps(eps);
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let dv = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(xp.add(i), _mm256_max_ps(ev, dv));
+            i += LANES;
+        }
+        while i < n {
+            if *xp.add(i) < eps {
+                *xp.add(i) = eps;
+            }
+            i += 1;
+        }
+        let mut sumsq = 0.0f64;
+        for &d in x.iter() {
+            sumsq += d as f64 * d as f64;
+        }
+        sumsq
+    }
+
+    pub fn shrink_clamp_sumsq(x: &mut [Elem], l1: Elem, inv: Elem, eps: Elem) -> f64 {
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { shrink_clamp_sumsq_body(x, l1, inv, eps) }
+    }
+
+    /// Exact: `(d − l1) · inv` as separate sub + mul (no FMA) matches
+    /// the scalar expression per element; clamp and sum fold as in
+    /// [`clamp_sumsq_body`].
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn shrink_clamp_sumsq_body(x: &mut [Elem], l1: Elem, inv: Elem, eps: Elem) -> f64 {
+        let n = x.len();
+        let l1v = _mm256_set1_ps(l1);
+        let iv = _mm256_set1_ps(inv);
+        let ev = _mm256_set1_ps(eps);
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i + LANES <= n {
+            let dv = _mm256_loadu_ps(xp.add(i));
+            let v = _mm256_mul_ps(_mm256_sub_ps(dv, l1v), iv);
+            _mm256_storeu_ps(xp.add(i), _mm256_max_ps(ev, v));
+            i += LANES;
+        }
+        while i < n {
+            let v = (*xp.add(i) - l1) * inv;
+            *xp.add(i) = if v < eps { eps } else { v };
+            i += 1;
+        }
+        let mut sumsq = 0.0f64;
+        for &d in x.iter() {
+            sumsq += d as f64 * d as f64;
+        }
+        sumsq
+    }
+
+    pub fn sqnorm_f64(x: &[Elem]) -> f64 {
+        // SAFETY: table installed only after AVX2+FMA detection.
+        unsafe { sqnorm_f64_body(x) }
+    }
+
+    /// Reassociated: 4-lane f64 FMA accumulation + reduction.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn sqnorm_f64_body(x: &[Elem]) -> f64 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let xd = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(i)));
+            acc = _mm256_fmadd_pd(xd, xd, acc);
+            i += 4;
+        }
+        let hi = _mm256_extractf128_pd(acc, 1);
+        let lo = _mm256_castpd256_pd128(acc);
+        let q = _mm_add_pd(lo, hi);
+        let mut s = _mm_cvtsd_f64(_mm_add_sd(q, _mm_unpackhi_pd(q, q)));
+        while i < n {
+            let v = *xp.add(i) as f64;
+            s += v * v;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::EPS;
+
+    /// Lengths chosen to hit the empty case, sub-lane sizes, exact lane
+    /// multiples, and every remainder-tail residue.
+    const LENS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 257];
+
+    fn vecs(n: usize, seed: u64) -> (Vec<Elem>, Vec<Elem>) {
+        let mut rng = Pcg32::seeded(seed);
+        let a = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let b = (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        (a, b)
+    }
+
+    fn simd() -> Option<&'static Kernels> {
+        let k = Kernels::detected();
+        (k.backend == Backend::Avx2Fma).then_some(k)
+    }
+
+    #[test]
+    fn backend_names_are_stable() {
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Avx2Fma.name(), "avx2+fma");
+        assert!(["scalar", "avx2+fma"].contains(&Kernels::select().name()));
+    }
+
+    #[test]
+    fn scalar_table_matches_legacy_vector_ops() {
+        // The scalar backend must be the exact pre-refactor arithmetic.
+        let (x, y0) = vecs(33, 1);
+        let mut y1 = y0.clone();
+        let mut y2 = y0.clone();
+        (SCALAR.axpy)(0.37, &x, &mut y1);
+        crate::linalg::vector::axpy(0.37, &x, &mut y2);
+        assert_eq!(y1, y2);
+        assert_eq!((SCALAR.dot)(&x, &y0), crate::linalg::vector::dot(&x, &y0));
+        assert_eq!((SCALAR.sqnorm_f64)(&x), crate::linalg::vector::nrm2_sq(&x));
+    }
+
+    #[test]
+    fn axpy_simd_is_bit_identical() {
+        let Some(k) = simd() else { return };
+        for &n in LENS {
+            for (i, &a) in [0.0, -0.0, 1.0, -2.5, 0.125].iter().enumerate() {
+                let (x, y0) = vecs(n, 100 + i as u64);
+                let mut ys = y0.clone();
+                let mut yv = y0.clone();
+                (SCALAR.axpy)(a, &x, &mut ys);
+                (k.axpy)(a, &x, &mut yv);
+                assert_eq!(ys, yv, "axpy n={n} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn colsum_simd_is_bit_identical() {
+        let Some(k) = simd() else { return };
+        for &n in LENS {
+            let (x, _) = vecs(n, 7);
+            let mut ss: Vec<f64> = (0..n).map(|i| i as f64 * 0.1).collect();
+            let mut sv = ss.clone();
+            (SCALAR.colsum_f64)(&x, &mut ss);
+            (k.colsum_f64)(&x, &mut sv);
+            assert_eq!(ss, sv, "colsum n={n}");
+        }
+    }
+
+    #[test]
+    fn clamp_and_shrink_simd_are_bit_identical() {
+        let Some(k) = simd() else { return };
+        for &n in LENS {
+            let (x, _) = vecs(n, 9);
+            let mut xs = x.clone();
+            let mut xv = x.clone();
+            let ss = (SCALAR.clamp_sumsq)(&mut xs, EPS);
+            let sv = (k.clamp_sumsq)(&mut xv, EPS);
+            assert_eq!(xs, xv, "clamp values n={n}");
+            assert_eq!(ss.to_bits(), sv.to_bits(), "clamp sumsq n={n}");
+
+            let mut xs = x.clone();
+            let mut xv = x.clone();
+            let ss = (SCALAR.shrink_clamp_sumsq)(&mut xs, 0.05, 0.8, EPS);
+            let sv = (k.shrink_clamp_sumsq)(&mut xv, 0.05, 0.8, EPS);
+            assert_eq!(xs, xv, "shrink values n={n}");
+            assert_eq!(ss.to_bits(), sv.to_bits(), "shrink sumsq n={n}");
+        }
+    }
+
+    #[test]
+    fn clamp_simd_preserves_scalar_nan_semantics() {
+        let Some(k) = simd() else { return };
+        let mut xs = vec![f32::NAN, -1.0, 0.5, f32::NAN, 2.0, -0.0, 0.0, 1e-20, 3.0];
+        let mut xv = xs.clone();
+        (SCALAR.clamp_sumsq)(&mut xs, EPS);
+        (k.clamp_sumsq)(&mut xv, EPS);
+        for (a, b) in xs.iter().zip(&xv) {
+            assert_eq!(a.to_bits(), b.to_bits(), "NaN/zero handling diverged");
+        }
+    }
+
+    #[test]
+    fn dot_axpy2_sqnorm_within_reassociation_tolerance() {
+        let Some(k) = simd() else { return };
+        for &n in LENS {
+            let (x, y) = vecs(n, 11);
+            let ds = (SCALAR.dot)(&x, &y) as f64;
+            let dv = (k.dot)(&x, &y) as f64;
+            assert!(
+                (ds - dv).abs() <= 2e-3 * ds.abs().max(1.0),
+                "dot n={n}: {ds} vs {dv}"
+            );
+
+            let ns = (SCALAR.sqnorm_f64)(&x);
+            let nv = (k.sqnorm_f64)(&x);
+            assert!(
+                (ns - nv).abs() <= 2e-3 * ns.max(1.0),
+                "sqnorm n={n}: {ns} vs {nv}"
+            );
+
+            let (x1, y0) = vecs(n, 13);
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            (SCALAR.axpy2)(0.7, &x, -1.3, &x1, &mut ys);
+            (k.axpy2)(0.7, &x, -1.3, &x1, &mut yv);
+            for (j, (a, b)) in ys.iter().zip(&yv).enumerate() {
+                let d = (*a as f64 - *b as f64).abs();
+                assert!(
+                    d <= 2e-3 * (a.abs() as f64).max(1.0),
+                    "axpy2 n={n} j={j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    // NOTE: the `PLNMF_KERNELS=scalar` override itself is asserted in
+    // `tests/golden_traces.rs` (its own process — lib unit tests run
+    // concurrently in one process, so mutating the env here could flip
+    // the backend under an unrelated test mid-comparison).
+}

@@ -33,6 +33,7 @@
 //! ```
 
 pub mod util;
+pub mod kernels;
 pub mod parallel;
 pub mod config;
 pub mod linalg;

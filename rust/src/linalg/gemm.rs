@@ -11,9 +11,12 @@
 //! * the k-dimension is blocked (`KB`) so the active panel of `B` stays in
 //!   L1/L2 while a block of `A` rows streams through;
 //! * the innermost loop runs over contiguous `j` (row-major `B` and `C`),
-//!   which LLVM auto-vectorizes to full-width FMA.
+//!   dispatched through the [`Kernels`] table (`axpy2` for the k-pair
+//!   unroll, `axpy` for the odd-k tail) — AVX2+FMA when the CPU has it,
+//!   the scalar loop otherwise.
 
 use super::dense::{View, ViewMut};
+use crate::kernels::Kernels;
 use crate::parallel::ThreadPool;
 use crate::Elem;
 
@@ -45,6 +48,7 @@ pub fn gemm(pool: &ThreadPool, alpha: Elem, a: View<'_>, b: View<'_>, op: GemmOp
         return;
     }
     let craw = c.raw();
+    let kern = pool.kernels();
     // Choose a grain: whole row-blocks of IB rows.
     let blocks = m.div_ceil(IB);
     pool.parallel_for(blocks, Some(1), |block_range| {
@@ -52,7 +56,7 @@ pub fn gemm(pool: &ThreadPool, alpha: Elem, a: View<'_>, b: View<'_>, op: GemmOp
             let i0 = blk * IB;
             let i1 = (i0 + IB).min(m);
             // SAFETY: block rows [i0, i1) are exclusive to this task.
-            unsafe { gemm_rows(alpha, a, b, op, &craw, i0, i1) };
+            unsafe { gemm_rows(kern, alpha, a, b, op, &craw, i0, i1) };
         }
     });
 }
@@ -67,12 +71,13 @@ pub fn gemm_serial(alpha: Elem, a: View<'_>, b: View<'_>, op: GemmOp, c: &mut Vi
         return;
     }
     let craw = c.raw();
-    unsafe { gemm_rows(alpha, a, b, op, &craw, 0, m) };
+    unsafe { gemm_rows(Kernels::select(), alpha, a, b, op, &craw, 0, m) };
 }
 
 /// Compute rows `[i0, i1)` of `c`. Caller guarantees exclusive access to
 /// those rows.
 unsafe fn gemm_rows(
+    kern: &Kernels,
     alpha: Elem,
     a: View<'_>,
     b: View<'_>,
@@ -96,24 +101,23 @@ unsafe fn gemm_rows(
             // Unroll pairs of k for fewer passes over the C row.
             let mut kk = kb;
             while kk + 1 < kend {
-                let a0 = alpha * arow[kk];
-                let a1 = alpha * arow[kk + 1];
-                if a0 != 0.0 || a1 != 0.0 {
-                    let b0 = b.row(kk);
-                    let b1 = b.row(kk + 1);
-                    for j in 0..crow.len() {
-                        crow[j] += a0 * b0[j] + a1 * b1[j];
-                    }
+                let x0 = arow[kk];
+                let x1 = arow[kk + 1];
+                // Zero-skip on the A elements themselves, NOT the
+                // alpha-scaled products: `alpha * x` can be ±0.0 for a
+                // nonzero `x` (alpha = ±0.0, or a denormal-range
+                // underflow), and skipping on the product silently
+                // changed which contributions were applied depending on
+                // alpha's scaling.
+                if x0 != 0.0 || x1 != 0.0 {
+                    (kern.axpy2)(alpha * x0, b.row(kk), alpha * x1, b.row(kk + 1), crow);
                 }
                 kk += 2;
             }
             if kk < kend {
-                let a0 = alpha * arow[kk];
-                if a0 != 0.0 {
-                    let b0 = b.row(kk);
-                    for j in 0..crow.len() {
-                        crow[j] += a0 * b0[j];
-                    }
+                let x0 = arow[kk];
+                if x0 != 0.0 {
+                    (kern.axpy)(alpha * x0, b.row(kk), crow);
                 }
             }
         }
@@ -225,6 +229,73 @@ mod tests {
         gemm_serial(1.0, a.view(), b.view(), GemmOp::Assign, &mut c2.view_mut());
         // Identical blocking => bitwise equal.
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn negative_zero_alpha_matches_naive() {
+        // Regression for the zero-skip branch: it must test the A
+        // elements, not `alpha * a` — with alpha = ±0.0 every scaled
+        // coefficient is a signed zero, and the old product-based skip
+        // dropped the (sign-carrying) zero contributions entirely
+        // instead of applying them like the reference does.
+        let pool = ThreadPool::new(3);
+        for alpha in [-0.0f32, 0.0f32] {
+            for op in [GemmOp::Assign, GemmOp::Add] {
+                let a = random_mat(33, 17, 21);
+                let b = random_mat(17, 9, 22);
+                let mut c1 = random_mat(33, 9, 23);
+                let mut c2 = c1.clone();
+                gemm(&pool, alpha, a.view(), b.view(), op, &mut c1.view_mut());
+                gemm_naive(alpha, a.view(), b.view(), op, &mut c2.view_mut());
+                // Zero-alpha contributions are all ±0, so values must
+                // agree exactly (0.0 == -0.0 under IEEE comparison).
+                for i in 0..33 {
+                    for j in 0..9 {
+                        assert_eq!(c1.at(i, j), c2.at(i, j), "alpha={alpha} {op:?} ({i},{j})");
+                    }
+                }
+            }
+        }
+        // Bit-level check: with A = −1, B = 1, C = −0.0, the ±0
+        // contribution `(−0.0 · −1) · 1 = +0.0` must be APPLIED, turning
+        // C's −0.0 into +0.0 exactly as the reference does — the old
+        // product-based skip dropped it and left −0.0 behind. Exercised
+        // at k = 1 (axpy tail) and k = 2 (axpy2 pair).
+        for k in [1usize, 2] {
+            let a = Mat::from_fn(4, k, |_, _| -1.0);
+            let b = Mat::from_fn(k, 3, |_, _| 1.0);
+            let mut c1 = Mat::from_fn(4, 3, |_, _| -0.0);
+            let mut c2 = c1.clone();
+            gemm(&pool, -0.0, a.view(), b.view(), GemmOp::Add, &mut c1.view_mut());
+            gemm_naive(-0.0, a.view(), b.view(), GemmOp::Add, &mut c2.view_mut());
+            for i in 0..4 {
+                for j in 0..3 {
+                    assert_eq!(
+                        c1.at(i, j).to_bits(),
+                        c2.at(i, j).to_bits(),
+                        "k={k} ({i},{j}): signed-zero contribution dropped"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_of_a_skip_without_changing_results() {
+        // The skip itself (x == 0.0 rows of A) must be value-neutral.
+        let pool = ThreadPool::new(2);
+        let mut a = random_mat(20, 12, 31);
+        for kk in [0usize, 3, 4, 11] {
+            for i in 0..20 {
+                *a.at_mut(i, kk) = 0.0;
+            }
+        }
+        let b = random_mat(12, 7, 32);
+        let mut c1 = random_mat(20, 7, 33);
+        let mut c2 = c1.clone();
+        gemm(&pool, 1.0, a.view(), b.view(), GemmOp::Add, &mut c1.view_mut());
+        gemm_naive(1.0, a.view(), b.view(), GemmOp::Add, &mut c2.view_mut());
+        check_close(&c1, &c2, 1e-3);
     }
 
     #[test]

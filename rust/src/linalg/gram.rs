@@ -8,6 +8,7 @@
 //! reduction tree.
 
 use super::dense::Mat;
+use crate::kernels::Kernels;
 use crate::parallel::{reduce, ThreadPool};
 use crate::Elem;
 
@@ -21,6 +22,7 @@ const F32_BLOCK: usize = 128;
 /// `G = Xᵀ·X` (k×k, symmetric). f32 FMA inner loop, f64 block folds.
 pub fn gram(pool: &ThreadPool, x: &Mat) -> Mat {
     let k = x.cols();
+    let kern = pool.kernels();
     let partial = reduce(
         pool,
         x.rows(),
@@ -33,11 +35,11 @@ pub fn gram(pool: &ThreadPool, x: &Mat) -> Mat {
                 if i + 1 < r.end {
                     // Row pair: one accumulator pass serves two rows
                     // (halves the dominant dst load/store traffic).
-                    gram_accumulate_rows2_f32(&mut block, x.row(i), x.row(i + 1), k);
+                    gram_accumulate_rows2_f32(kern, &mut block, x.row(i), x.row(i + 1), k);
                     i += 2;
                     in_block += 2;
                 } else {
-                    gram_accumulate_row_f32(&mut block, x.row(i), k);
+                    gram_accumulate_row_f32(kern, &mut block, x.row(i), k);
                     i += 1;
                     in_block += 1;
                 }
@@ -73,36 +75,27 @@ pub fn gram(pool: &ThreadPool, x: &Mat) -> Mat {
 
 /// Accumulate the upper triangle of `row ⊗ row` into `acc` (k×k, f32).
 #[inline]
-fn gram_accumulate_row_f32(acc: &mut [f32], row: &[Elem], k: usize) {
+fn gram_accumulate_row_f32(kern: &Kernels, acc: &mut [f32], row: &[Elem], k: usize) {
     for i in 0..k {
         let xi = row[i];
         if xi == 0.0 {
             continue;
         }
-        let dst = &mut acc[i * k + i..i * k + k];
-        let src = &row[i..k];
-        for (d, &s) in dst.iter_mut().zip(src) {
-            *d += xi * s;
-        }
+        (kern.axpy)(xi, &row[i..k], &mut acc[i * k + i..i * k + k]);
     }
 }
 
 /// Two-row variant: `acc += r0 ⊗ r0 + r1 ⊗ r1` in one pass over the
 /// upper triangle.
 #[inline]
-fn gram_accumulate_rows2_f32(acc: &mut [f32], r0: &[Elem], r1: &[Elem], k: usize) {
+fn gram_accumulate_rows2_f32(kern: &Kernels, acc: &mut [f32], r0: &[Elem], r1: &[Elem], k: usize) {
     for i in 0..k {
         let a0 = r0[i];
         let a1 = r1[i];
         if a0 == 0.0 && a1 == 0.0 {
             continue;
         }
-        let dst = &mut acc[i * k + i..i * k + k];
-        let s0 = &r0[i..k];
-        let s1 = &r1[i..k];
-        for ((d, &x0), &x1) in dst.iter_mut().zip(s0).zip(s1) {
-            *d += a0 * x0 + a1 * x1;
-        }
+        (kern.axpy2)(a0, &r0[i..k], a1, &r1[i..k], &mut acc[i * k + i..i * k + k]);
     }
 }
 

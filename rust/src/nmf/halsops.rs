@@ -31,7 +31,8 @@
 //! fold the norm and scale — the CPU analogue of warp-shuffle +
 //! `atomicAdd` + `update_W_norm<<<...>>>`.
 
-use crate::linalg::{gemm, vector, GemmOp, Mat};
+use crate::kernels::Kernels;
+use crate::linalg::{gemm, GemmOp, Mat};
 use crate::parallel::{split_even, Barrier, ThreadPool};
 use crate::util::PhaseTimers;
 use crate::{Elem, EPS};
@@ -112,6 +113,7 @@ pub fn update_naive_reg(
     assert_eq!((b.rows(), b.cols()), (n, k));
     let plain_shrink = !shrink.is_none();
     let Shrink { l1, l2 } = shrink;
+    let kern = pool.kernels();
     timers.time(label, || match kind {
         UpdateKind::Plain => {
             // Row-local: every row independent, one parallel sweep.
@@ -125,7 +127,7 @@ pub fn update_naive_reg(
                     let brow = b.row(i);
                     for t in 0..k {
                         // G symmetric: column t == row t (contiguous).
-                        let s = vector::dot(xrow, g.row(t));
+                        let s = (kern.dot)(xrow, g.row(t));
                         let v = if plain_shrink {
                             (xrow[t] + brow[t] - s - l1) * inv_denom
                         } else {
@@ -146,7 +148,7 @@ pub fn update_naive_reg(
                     let xrow = unsafe { xs.row_mut(i) };
                     let brow = b.row(i);
                     for t in 0..k {
-                        let s = vector::dot(xrow, g.row(t));
+                        let s = (kern.dot)(xrow, g.row(t));
                         let num = xrow[t] * g.at(t, t) + brow[t] - s - l1;
                         let denom = g.at(t, t) + l2;
                         let v = if denom > 0.0 { num / denom } else { 0.0 };
@@ -157,7 +159,7 @@ pub fn update_naive_reg(
         }
         UpdateKind::WithDiagAndNorm => {
             columns_with_norm(pool, x, 0, k, |_i, xrow, brow, t| {
-                let s = vector::dot(xrow, g.row(t));
+                let s = (kern.dot)(xrow, g.row(t));
                 let num = xrow[t] * g.at(t, t) + brow[t] - s;
                 let v = if plain_shrink {
                     let denom = g.at(t, t) + l2;
@@ -340,6 +342,7 @@ fn phase2_sweep(
     if n == 0 || tw == 0 {
         return;
     }
+    let kern = pool.kernels();
     let nw = pool.n_threads();
     let shards = split_even(n, nw);
     let xs = SharedRows::new(x);
@@ -368,7 +371,10 @@ fn phase2_sweep(
                 let sumsq = if rows.is_empty() {
                     0.0
                 } else {
-                    column_step(g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr, rows.clone())
+                    column_step(
+                        kern, g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr,
+                        rows.clone(),
+                    )
                 };
                 unsafe { partials[wid].set(sumsq) };
                 if barrier.wait() {
@@ -397,7 +403,10 @@ fn phase2_sweep(
                 load_tile_slabs(&xs, x_old, b, t0, tw, n, &old_ptr, &xb_ptr, blk.clone());
                 for t in t0..t1 {
                     let jt = t - t0;
-                    column_step(g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr, blk.clone());
+                    column_step(
+                        kern, g, t, t0, jt, tw, n, kind, shrink, &old_ptr, &xb_ptr,
+                        blk.clone(),
+                    );
                 }
                 flush_tile_slab(&xs, t0, tw, n, &xb_ptr, blk.clone());
                 v0 = v1;
@@ -437,8 +446,14 @@ fn load_tile_slabs(
 /// The coupled update of one column over rows `[r0, r1)`:
 /// `xb[jt] -= sum_j G[t0+j, t] * (j < jt ? xb[j] : old[j])`, then the
 /// shrink (if any), clamp to EPS, return the window's sum of squares.
+///
+/// Every pass dispatches through the kernel table's exact-class
+/// primitives (`d -= q·s` runs as `axpy(−q, ..)`, bit-identical since
+/// IEEE negation is exact and `d + (−q)·s ≡ d − q·s`), so this sweep
+/// produces the same bits on every backend.
 #[allow(clippy::too_many_arguments)]
 fn column_step(
+    kern: &Kernels,
     g: &Mat,
     t: usize,
     t0: usize,
@@ -462,24 +477,14 @@ fn column_step(
         }
         if j < jt {
             let src = unsafe { xb_ptr.slice(j * n + r0, len) };
-            for (d, &s) in dst.iter_mut().zip(src.iter()) {
-                *d -= q * s;
-            }
+            (kern.axpy)(-q, src, dst);
         } else {
             let src = unsafe { old_ptr.slice(j * n + r0, len) };
-            for (d, &s) in dst.iter_mut().zip(src.iter()) {
-                *d -= q * s;
-            }
+            (kern.axpy)(-q, src, dst);
         }
     }
-    let mut sumsq = 0.0f64;
     if shrink.is_none() {
-        for d in dst.iter_mut() {
-            if *d < EPS {
-                *d = EPS;
-            }
-            sumsq += *d as f64 * *d as f64;
-        }
+        (kern.clamp_sumsq)(dst, EPS)
     } else {
         // The slab's running value is the update's numerator (diag fold
         // happened at init for the WithDiagAndNorm flavor, and Plain's
@@ -487,13 +492,8 @@ fn column_step(
         let diag = if kind == UpdateKind::Plain { 1.0 } else { g.at(t, t) };
         let denom = diag + shrink.l2;
         let inv = if denom > 0.0 { 1.0 / denom } else { 0.0 };
-        for d in dst.iter_mut() {
-            let v = (*d - shrink.l1) * inv;
-            *d = if v < EPS { EPS } else { v };
-            sumsq += *d as f64 * *d as f64;
-        }
+        (kern.shrink_clamp_sumsq)(dst, shrink.l1, inv, EPS)
     }
-    sumsq
 }
 
 /// One row-major pass writing the finished tile back into `x`.
@@ -934,6 +934,56 @@ mod tests {
             let d = max_rel_diff(&xn, &xt);
             assert!(d < 1e-3, "n={n} k={k} tile={tile} {kind:?} {shrink:?}: diff {d}");
         });
+    }
+
+    #[test]
+    fn simd_and_scalar_backends_agree_all_kinds_and_shrinks() {
+        // Cross-backend parity over every UpdateKind × Shrink combination,
+        // with pools pinned to each kernel table via `with_kernels` — no
+        // env mutation (lib unit tests share one process, so flipping
+        // `PLNMF_KERNELS` here could race unrelated tests). Row counts
+        // are chosen to exercise full SIMD lanes and remainder tails.
+        let simd = Kernels::detected();
+        if simd.backend == crate::kernels::Backend::Scalar {
+            return; // host has no AVX2+FMA — nothing to compare against
+        }
+        let scalar_pool = ThreadPool::with_kernels(3, Kernels::scalar());
+        let simd_pool = ThreadPool::with_kernels(3, simd);
+        let shrinks = [
+            Shrink::NONE,
+            Shrink { l1: 0.05, l2: 0.0 },
+            Shrink { l1: 0.0, l2: 0.3 },
+            Shrink { l1: 0.02, l2: 0.4 },
+        ];
+        for (n, k, tile) in [(37usize, 7usize, 3usize), (64, 9, 9), (5, 2, 1)] {
+            for kind in [UpdateKind::Plain, UpdateKind::WithDiag, UpdateKind::WithDiagAndNorm] {
+                for shrink in shrinks {
+                    let (x0, g, b) = random_problem(n, k, 23 + n as u64);
+                    let mut t = PhaseTimers::new();
+
+                    // Naive kernel (its row dots are reassociated on AVX2
+                    // — same ≤2e-3 slack as the tiled-vs-naive property).
+                    let mut xs_ = x0.clone();
+                    let mut xv = x0.clone();
+                    update_naive_reg(&scalar_pool, &mut xs_, &g, &b, kind, shrink, &mut t, "dmv");
+                    update_naive_reg(&simd_pool, &mut xv, &g, &b, kind, shrink, &mut t, "dmv");
+                    let d = max_rel_diff(&xs_, &xv);
+                    assert!(d < 2e-3, "naive {kind:?} {shrink:?} n={n}: backend diff {d}");
+
+                    // Tiled kernel (WithDiag is naive/serving-only).
+                    if kind != UpdateKind::WithDiag {
+                        let mut xs_ = x0.clone();
+                        let mut xv = x0.clone();
+                        let mut s1 = Mat::zeros(n, k);
+                        let mut s2 = Mat::zeros(n, k);
+                        update_tiled_reg(&scalar_pool, &mut xs_, &mut s1, &g, &b, tile, kind, shrink, &mut t, ["phase1", "phase2", "phase3"]);
+                        update_tiled_reg(&simd_pool, &mut xv, &mut s2, &g, &b, tile, kind, shrink, &mut t, ["phase1", "phase2", "phase3"]);
+                        let d = max_rel_diff(&xs_, &xv);
+                        assert!(d < 2e-3, "tiled {kind:?} {shrink:?} n={n} tile={tile}: backend diff {d}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::linalg::{vector, Mat};
+use crate::linalg::Mat;
 use crate::parallel::ThreadPool;
 use crate::util::PhaseTimers;
 use crate::Result;
@@ -75,6 +75,7 @@ pub(crate) fn mu_update_reg(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat, 
     let k = x.cols();
     let reg = !shrink.is_none();
     let Shrink { l1, l2 } = shrink;
+    let kern = pool.kernels();
     let xs = SharedRows::new(x);
     pool.parallel_for(num.rows(), None, |rows| {
         let mut denom = vec![0.0f32; k];
@@ -82,7 +83,7 @@ pub(crate) fn mu_update_reg(pool: &ThreadPool, x: &mut Mat, g: &Mat, num: &Mat, 
             let xrow = unsafe { xs.row_mut(i) };
             // denom = xrow · G (G symmetric ⇒ rows are columns).
             for t in 0..k {
-                denom[t] = vector::dot(xrow, g.row(t)) + DELTA;
+                denom[t] = (kern.dot)(xrow, g.row(t)) + DELTA;
                 if reg {
                     denom[t] += l1 + l2 * xrow[t];
                 }

@@ -76,18 +76,15 @@ impl MuKlEngine {
         let f = &self.ctx.factors;
         let (w, h) = (&f.w, &f.h);
         let k = f.k();
+        let kern = self.ctx.pool.kernels();
         // Σ_vd (WH)_vd = Σ_k (Σ_v W_vk)(Σ_d H_dk)
         let mut wsum = vec![0.0f64; k];
         for i in 0..w.rows() {
-            for (j, &x) in w.row(i).iter().enumerate() {
-                wsum[j] += x as f64;
-            }
+            (kern.colsum_f64)(w.row(i), &mut wsum);
         }
         let mut hsum = vec![0.0f64; k];
         for i in 0..h.rows() {
-            for (j, &x) in h.row(i).iter().enumerate() {
-                hsum[j] += x as f64;
-            }
+            (kern.colsum_f64)(h.row(i), &mut hsum);
         }
         let total_wh: f64 = wsum.iter().zip(&hsum).map(|(a, b)| a * b).sum();
 
@@ -173,15 +170,14 @@ pub(crate) fn kl_half_step(
 /// Column sums of the fixed factor (the KL denominator), f64-accumulated.
 pub(crate) fn kl_colsum(pool: &ThreadPool, other: &Mat) -> Vec<f64> {
     let k = other.cols();
+    let kern = pool.kernels();
     reduce(
         pool,
         other.rows(),
         |rows| {
             let mut s = vec![0.0f64; k];
             for i in rows {
-                for (j, &v) in other.row(i).iter().enumerate() {
-                    s[j] += v as f64;
-                }
+                (kern.colsum_f64)(other.row(i), &mut s);
             }
             s
         },
@@ -200,6 +196,7 @@ pub(crate) fn kl_colsum(pool: &ThreadPool, other: &Mat) -> Vec<f64> {
 /// are left untouched — callers reuse oversized buffers).
 pub(crate) fn kl_numer(pool: &ThreadPool, a: &DataMatrix, x: &Mat, other: &Mat, num: &mut Mat) {
     let k = x.cols();
+    let kern = pool.kernels();
     let xs = SharedRows::new(num);
     match a {
         DataMatrix::Sparse(csr) => {
@@ -212,11 +209,9 @@ pub(crate) fn kl_numer(pool: &ThreadPool, a: &DataMatrix, x: &Mat, other: &Mat, 
                     for (&j, &aval) in cols.iter().zip(vals) {
                         let j = j as usize;
                         let orow = other.row(j);
-                        let wh = dot_rows(xrow_i, orow);
+                        let wh = (kern.dot)(xrow_i, orow);
                         let r = aval / (wh + DELTA);
-                        for (n, &o) in nrow[..k].iter_mut().zip(orow) {
-                            *n += r * o;
-                        }
+                        (kern.axpy)(r, orow, &mut nrow[..k]);
                     }
                 }
             });
@@ -232,11 +227,9 @@ pub(crate) fn kl_numer(pool: &ThreadPool, a: &DataMatrix, x: &Mat, other: &Mat, 
                             continue;
                         }
                         let orow = other.row(j);
-                        let wh = dot_rows(xrow_i, orow);
+                        let wh = (kern.dot)(xrow_i, orow);
                         let r = aval / (wh + DELTA);
-                        for (n, &o) in nrow[..k].iter_mut().zip(orow) {
-                            *n += r * o;
-                        }
+                        (kern.axpy)(r, orow, &mut nrow[..k]);
                     }
                 }
             });
@@ -265,15 +258,6 @@ pub(crate) fn kl_apply(pool: &ThreadPool, x: &mut Mat, num: &Mat, denom: &[f64],
             }
         }
     });
-}
-
-#[inline]
-fn dot_rows(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
 }
 
 impl NmfEngine for MuKlEngine {

@@ -18,6 +18,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use super::chunks::{auto_grain, split_even, Chunks};
+use crate::kernels::Kernels;
 
 /// Type-erased borrowed job. The raw pointer is only dereferenced between
 /// publication and completion of a `run`, during which the referent is
@@ -48,6 +49,10 @@ pub struct ThreadPool {
     handles: Vec<JoinHandle<()>>,
     n_threads: usize,
     in_run: AtomicBool,
+    /// The SIMD microkernel table every engine built on this pool
+    /// dispatches through — selected once at construction (env override
+    /// + CPU detection, see [`Kernels::select`]).
+    kernels: &'static Kernels,
 }
 
 impl ThreadPool {
@@ -55,6 +60,12 @@ impl ThreadPool {
     /// caller). `n_threads == 1` degenerates to serial execution with no
     /// spawned threads — used for the sequential baselines.
     pub fn new(n_threads: usize) -> Self {
+        Self::with_kernels(n_threads, Kernels::select())
+    }
+
+    /// [`Self::new`] with an explicit kernel table — parity tests and
+    /// the kernels bench pin a backend without touching the env.
+    pub fn with_kernels(n_threads: usize, kernels: &'static Kernels) -> Self {
         let n_threads = n_threads.max(1);
         let shared = Arc::new(Shared {
             slot: Mutex::new(JobSlot { epoch: 0, job: None, remaining: 0, shutdown: false }),
@@ -70,7 +81,7 @@ impl ThreadPool {
                     .expect("failed to spawn worker thread")
             })
             .collect();
-        ThreadPool { shared, handles, n_threads, in_run: AtomicBool::new(false) }
+        ThreadPool { shared, handles, n_threads, in_run: AtomicBool::new(false), kernels }
     }
 
     /// Pool sized to the machine (or `PLNMF_THREADS` when set).
@@ -80,6 +91,12 @@ impl ThreadPool {
 
     pub fn n_threads(&self) -> usize {
         self.n_threads
+    }
+
+    /// The microkernel dispatch table this pool's engines run on.
+    #[inline]
+    pub fn kernels(&self) -> &'static Kernels {
+        self.kernels
     }
 
     /// Execute `f(worker_id)` on every worker (ids `0..n_threads`), the

@@ -475,6 +475,12 @@ impl Projector {
         self.pool.n_threads()
     }
 
+    /// Name of the SIMD kernel backend this projector's pool dispatches
+    /// to (`"scalar"` / `"avx2+fma"`) — surfaced by the `stats` op.
+    pub fn kernels_name(&self) -> &'static str {
+        self.pool.kernels().name()
+    }
+
     /// The cached Gram (K×K) — exposed for diagnostics/tests.
     pub fn gram(&self) -> &Mat {
         &self.gram
@@ -1085,12 +1091,13 @@ impl Projector {
         let (h1, stats) = self.project_with(q, None, warm)?;
 
         // 2. Exact statistics of the new batch: S += H₁ᵀH₁, P += QᵀH₁.
+        //    The accumulates dispatch through the exact-class `axpy`
+        //    (scaling by 1.0 is exact), so the statistics are identical
+        //    on every kernel backend.
+        let kern = self.pool.kernels();
         let s1 = products::factor_gram(&self.pool, &h1);
         for t in 0..k {
-            let srow = fold.s.row_mut(t);
-            for (x, &y) in srow.iter_mut().zip(s1.row(t)) {
-                *x += y;
-            }
+            (kern.axpy)(1.0, s1.row(t), fold.s.row_mut(t));
         }
         match q {
             Queries::Sparse(a) => {
@@ -1098,10 +1105,7 @@ impl Projector {
                     let (cols, vals) = a.row(i);
                     let hrow = h1.row(i);
                     for (&c, &av) in cols.iter().zip(vals) {
-                        let prow = fold.p.row_mut(c as usize);
-                        for t in 0..k {
-                            prow[t] += av * hrow[t];
-                        }
+                        (kern.axpy)(av, hrow, fold.p.row_mut(c as usize));
                     }
                 }
             }
@@ -1110,10 +1114,7 @@ impl Projector {
                     let hrow = h1.row(i);
                     for (vi, &av) in qm.row(i).iter().enumerate() {
                         if av != 0.0 {
-                            let prow = fold.p.row_mut(vi);
-                            for t in 0..k {
-                                prow[t] += av * hrow[t];
-                            }
+                            (kern.axpy)(av, hrow, fold.p.row_mut(vi));
                         }
                     }
                 }
@@ -1141,10 +1142,7 @@ impl Projector {
                     let d = new - cur;
                     if d != 0.0 {
                         *w.at_mut(vi, t) = new;
-                        let wsrow = ws.row_mut(vi);
-                        for (x, &sv) in wsrow.iter_mut().zip(&srow) {
-                            *x += d * sv;
-                        }
+                        (kern.axpy)(d, &srow, ws.row_mut(vi));
                     }
                 }
             }

@@ -469,6 +469,9 @@ impl ModelEntry {
             ("spec", self.projector.spec().to_json()),
             ("tile", Json::num(self.projector.tile() as f64)),
             ("threads", Json::num(self.projector.threads() as f64)),
+            // Kernel backend of this model's pool; structural (identical
+            // across replicas), so the router merge keeps the first.
+            ("kernels", Json::str(self.projector.kernels_name())),
             ("nnz", Json::num(self.nnz as f64)),
             // Which factor version answers queries right now — clients
             // watch this to confirm an online update took effect.

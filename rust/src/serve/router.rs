@@ -1538,6 +1538,9 @@ fn op_stats(ctl: &Control) -> Json {
                     uptime_max = uptime_max.max(stats.get("uptime_secs").as_f64().unwrap_or(0.0));
                     info.push(("requests", stats.get("requests").clone()));
                     info.push(("uptime_secs", stats.get("uptime_secs").clone()));
+                    if !matches!(stats.get("kernels"), Json::Null) {
+                        info.push(("kernels", stats.get("kernels").clone()));
+                    }
                     if let Some(obj) = stats.get("models").as_obj() {
                         for (model, mstats) in obj {
                             if models.contains_key(model.as_str()) {
@@ -1592,6 +1595,9 @@ fn op_stats(ctl: &Control) -> Json {
             "manifest_version",
             Json::num(*ctl.manifest_version.lock().unwrap() as f64),
         ),
+        // The router's own selection; per-replica backends ride along in
+        // `workers.*.replica_stats` (heterogeneous fleets can differ).
+        ("kernels", Json::str(crate::kernels::Kernels::select().name())),
         ("workers", Json::Obj(workers)),
         ("models", Json::Obj(models)),
     ])
@@ -1864,17 +1870,22 @@ mod tests {
     #[test]
     fn merge_model_stats_sums_counters_and_recomputes_averages() {
         let mut a = Json::parse(
-            r#"{"v": 30, "k": 4, "requests": 2, "warm_hits": 1,
+            r#"{"v": 30, "k": 4, "kernels": "avx2+fma", "requests": 2, "warm_hits": 1,
                 "cold": {"requests": 2, "sweeps": 10, "micro_batches": 2, "avg_sweeps": 5}}"#,
         )
         .unwrap();
         let b = Json::parse(
-            r#"{"v": 30, "k": 4, "requests": 3, "warm_hits": 4,
+            r#"{"v": 30, "k": 4, "kernels": "scalar", "requests": 3, "warm_hits": 4,
                 "cold": {"requests": 3, "sweeps": 2, "micro_batches": 2, "avg_sweeps": 1}}"#,
         )
         .unwrap();
         merge_model_stats(&mut a, &b);
         assert_eq!(a.get("v").as_usize(), Some(30), "structural fields keep first value");
+        assert_eq!(
+            a.get("kernels").as_str(),
+            Some("avx2+fma"),
+            "kernel backend is structural: keep-first, never concatenated or dropped"
+        );
         assert_eq!(a.get("requests").as_usize(), Some(5));
         assert_eq!(a.get("warm_hits").as_usize(), Some(5));
         assert_eq!(a.get("cold").get("requests").as_usize(), Some(5));

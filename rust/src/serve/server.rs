@@ -627,6 +627,10 @@ fn op_stats(registry: &ModelRegistry, shared: &Shared) -> Json {
         ("manifest_version", Json::num(registry.manifest_version() as f64)),
         ("admission_budget", Json::num(registry.admission_budget() as f64)),
         ("total_nnz", Json::num(registry.total_nnz() as f64)),
+        // The kernel backend this process selects for new pools (env
+        // override + CPU detection); per-model pools report their own
+        // backend inside `models`.
+        ("kernels", Json::str(crate::kernels::Kernels::select().name())),
         ("models", registry.stats_json()),
     ])
 }

@@ -3,10 +3,12 @@
 //! This is the paper's `mkl_dcsrmm`/`cusparseDcsrmm` role: `P = A·Hᵀ`
 //! (V×D · D×K) and, via the pre-transposed `Aᵀ`, `R = Aᵀ·W`. The kernel
 //! is row-parallel (each output row owned by one task) with a contiguous
-//! inner loop over the K dimension, which auto-vectorizes; work is
+//! inner loop over the K dimension dispatched through the SIMD kernel
+//! table's `axpy` (bit-identical across backends); work is
 //! dynamically chunked because bag-of-words rows have wildly skewed nnz
 //! (Zipf), making static splits unbalanced.
 
+use crate::kernels::Kernels;
 use crate::linalg::dense::{Mat, ViewMut};
 use crate::linalg::GemmOp;
 use crate::parallel::ThreadPool;
@@ -20,6 +22,7 @@ pub fn spmm(pool: &ThreadPool, alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mu
     assert_eq!(c.rows, a.rows(), "spmm c rows");
     assert_eq!(c.cols, b.cols(), "spmm c cols");
     let craw = c.raw();
+    let kern = pool.kernels();
     // Grain: aim for ~1k nnz per chunk, expressed in rows.
     let avg_row = (a.nnz() / a.rows().max(1)).max(1);
     let grain = (1024 / avg_row).clamp(1, 512);
@@ -32,11 +35,7 @@ pub fn spmm(pool: &ThreadPool, alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mu
             }
             let (cols, vals) = a.row(i);
             for (&d, &v) in cols.iter().zip(vals) {
-                let av = alpha * v;
-                let brow = b.row(d as usize);
-                for j in 0..crow.len() {
-                    crow[j] += av * brow[j];
-                }
+                (kern.axpy)(alpha * v, b.row(d as usize), crow);
             }
         }
     });
@@ -46,6 +45,7 @@ pub fn spmm(pool: &ThreadPool, alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mu
 pub fn spmm_serial(alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mut ViewMut<'_>) {
     assert_eq!(a.cols(), b.rows());
     assert_eq!((c.rows, c.cols), (a.rows(), b.cols()));
+    let kern = Kernels::select();
     for i in 0..a.rows() {
         let crow = c.row_mut(i);
         if op == GemmOp::Assign {
@@ -53,11 +53,7 @@ pub fn spmm_serial(alpha: Elem, a: &Csr, b: &Mat, op: GemmOp, c: &mut ViewMut<'_
         }
         let (cols, vals) = a.row(i);
         for (&d, &v) in cols.iter().zip(vals) {
-            let av = alpha * v;
-            let brow = b.row(d as usize);
-            for j in 0..crow.len() {
-                crow[j] += av * brow[j];
-            }
+            (kern.axpy)(alpha * v, b.row(d as usize), crow);
         }
     }
 }
@@ -79,6 +75,7 @@ pub fn spmm_range(
     assert_eq!(c.rows, rows.len(), "spmm_range c rows");
     assert_eq!(c.cols, b.cols(), "spmm_range c cols");
     let craw = c.raw();
+    let kern = pool.kernels();
     let r0 = rows.start;
     let n = rows.len();
     let avg_row = (a.nnz() / a.rows().max(1)).max(1);
@@ -90,11 +87,7 @@ pub fn spmm_range(
             crow.fill(0.0);
             let (cols, vals) = a.row(r0 + i);
             for (&d, &v) in cols.iter().zip(vals) {
-                let av = alpha * v;
-                let brow = b.row(d as usize);
-                for j in 0..crow.len() {
-                    crow[j] += av * brow[j];
-                }
+                (kern.axpy)(alpha * v, b.row(d as usize), crow);
             }
         }
     });

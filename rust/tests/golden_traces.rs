@@ -109,6 +109,19 @@ fn write_golden(path: &Path, traces: &BTreeMap<String, Vec<f64>>) {
 
 #[test]
 fn convergence_trajectories_match_golden_snapshot() {
+    // Pin the SIMD dispatch to the portable scalar backend: the scalar
+    // kernels are bit-for-bit the pre-refactor arithmetic, so the
+    // committed snapshot stays machine-independent (an AVX2 host and a
+    // plain one produce identical traces). This also regression-tests
+    // the `PLNMF_KERNELS` override end-to-end — it must actually force
+    // scalar selection here. Safe to set: this integration test runs in
+    // its own process, and env mutation happens before any pool exists.
+    std::env::set_var("PLNMF_KERNELS", "scalar");
+    assert_eq!(
+        plnmf::kernels::Kernels::select().backend,
+        plnmf::kernels::Backend::Scalar,
+        "PLNMF_KERNELS=scalar must force the scalar backend"
+    );
     let got = trajectories();
     let path = Path::new(GOLDEN_PATH);
     let update = std::env::var("PLNMF_UPDATE_GOLDEN").is_ok();

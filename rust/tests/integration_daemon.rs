@@ -206,6 +206,13 @@ fn warm_start_cuts_sweeps_and_shows_in_stats() {
     );
     assert_eq!(m.get("warm_hits").as_usize(), Some(10));
 
+    // The selected SIMD kernel backend is reported at the daemon level
+    // and per model (the value depends on the host CPU / env override,
+    // so assert the closed name set and daemon/model agreement).
+    let backend = stats.get("kernels").as_str().expect("daemon stats carry 'kernels'");
+    assert!(["scalar", "avx2+fma"].contains(&backend), "{stats}");
+    assert_eq!(m.get("kernels").as_str(), Some(backend), "{stats}");
+
     drop(client);
     shutdown(addr);
     handle.join().unwrap().unwrap();

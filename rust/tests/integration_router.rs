@@ -163,13 +163,24 @@ fn routed_workers_match_in_process_bit_for_bit() {
     // Aggregated stats: merged per-model map + per-worker health.
     let stats = client.request_ok(&Json::obj(vec![("op", Json::str("stats"))])).unwrap();
     assert_eq!(stats.get("router").as_bool(), Some(true));
+    // The kernel backend surfaces at the router level, inside each
+    // replica's probe info, and per merged model (keep-first merge).
+    // Router and worker processes share this host's CPU and env, so
+    // all three surfaces must agree.
+    let backend = stats.get("kernels").as_str().expect("router stats carry 'kernels'");
+    assert!(["scalar", "avx2+fma"].contains(&backend), "{stats}");
     for name in ["a", "b"] {
         let w = stats.get("workers").get(name);
         assert_eq!(w.get("up").as_bool(), Some(true), "{name}: {stats}");
         assert_eq!(w.get("restarts").as_usize(), Some(0));
         assert!(w.get("addr").as_str().unwrap().contains(':'));
+        let reps = w.get("replica_stats").as_arr().unwrap();
+        for r in reps {
+            assert_eq!(r.get("kernels").as_str(), Some(backend), "{name}: {stats}");
+        }
         let m = stats.get("models").get(name);
         assert!(m.get("requests").as_usize().unwrap() >= 3, "{name}: {stats}");
+        assert_eq!(m.get("kernels").as_str(), Some(backend), "{name}: {stats}");
     }
 
     // Routed-mode guidance for fleet mutations.

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Markdown comparison table for two bench CSVs sharing a schema.
+
+Joins rows of CSV `--a` and CSV `--b` on the `--key` column(s) and
+prints a markdown table of the `--metric` column side by side with the
+speedup of b over a. Used by scripts/pgo.sh for its warmup-vs-optimized
+report; works on any bench CSV with a numeric metric column.
+
+    perf_compare.py --a warmup.csv --b optimized.csv \
+        --key step --metric selected_secs \
+        --label-a warmup --label-b pgo
+"""
+
+import argparse
+import csv
+import sys
+
+
+def load(path, key_cols):
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    out = {}
+    for r in rows:
+        out[tuple(r[k] for k in key_cols)] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--a", required=True, help="baseline CSV")
+    ap.add_argument("--b", required=True, help="comparison CSV")
+    ap.add_argument("--key", required=True, help="comma-separated join columns")
+    ap.add_argument("--metric", required=True, help="numeric column to compare")
+    ap.add_argument("--label-a", default="a")
+    ap.add_argument("--label-b", default="b")
+    args = ap.parse_args()
+
+    keys = args.key.split(",")
+    a, b = load(args.a, keys), load(args.b, keys)
+    shared = [k for k in a if k in b]
+    if not shared:
+        print(f"no shared rows between {args.a} and {args.b}", file=sys.stderr)
+        return 1
+
+    head = keys + [f"{args.label_a} {args.metric}", f"{args.label_b} {args.metric}", "speedup"]
+    print("| " + " | ".join(head) + " |")
+    print("|" + "|".join("---" for _ in head) + "|")
+    for k in shared:
+        va, vb = float(a[k][args.metric]), float(b[k][args.metric])
+        ratio = va / vb if vb > 0 else float("inf")
+        cells = list(k) + [f"{va:.6f}", f"{vb:.6f}", f"{ratio:.2f}×"]
+        print("| " + " | ".join(cells) + " |")
+    for k in a.keys() - b.keys():
+        print(f"only in {args.label_a}: {k}", file=sys.stderr)
+    for k in b.keys() - a.keys():
+        print(f"only in {args.label_b}: {k}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

